@@ -1,0 +1,128 @@
+//! Figs. 1 and 5: model quality vs sparsity for irregular / GS / block
+//! patterns on the three micro models.
+//!
+//! Shape to reproduce (not absolute scores — micro models on synthetic
+//! tasks): (a) irregular ≈ GS at every sparsity; (b) block degrades, and
+//! degrades *more* as the block size grows (Fig. 1's blue line) while GS
+//! is flat in B; (c) the GS-vs-block gap widens with sparsity.
+//!
+//! Budget knobs: GS_DENSE_STEPS / GS_RETRAIN_STEPS / GS_EVAL_BATCHES and
+//! GS_QUALITY_MODELS=gnmt,resnet,jasper (default all three).
+//! Dense training is shared per model via session snapshots.
+
+use gs_sparse::bench::Table;
+use gs_sparse::runtime::{Manifest, Runtime};
+use gs_sparse::sparse::Pattern;
+use gs_sparse::train::experiments::{milestones, Schedule};
+use gs_sparse::train::TrainSession;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP fig1_fig5_quality: artifacts not built (make artifacts)");
+        return Ok(());
+    }
+    let manifest = Manifest::load(dir)?;
+    let rt = Runtime::cpu()?;
+    let schedule = Schedule::default();
+    let models: Vec<String> = std::env::var("GS_QUALITY_MODELS")
+        .unwrap_or_else(|_| "gnmt,resnet,jasper".into())
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+
+    // ---- Fig. 1: GNMT quality vs block-size/sub-bank count at 90% ------
+    if models.iter().any(|m| m == "gnmt") {
+        let mm = &manifest.models["gnmt"];
+        let mut session = TrainSession::new(&rt, mm, 42)?;
+        session.train_steps(schedule.dense_steps)?;
+        let snap = session.snapshot();
+        let (_, dense_metric) = session.eval(schedule.eval_batches)?;
+
+        let mut table = Table::new(
+            "Fig1 micro-GNMT @90% sparsity: quality vs size (metric=token accuracy)",
+            &["size_B", "block_horizontal", "gs_horizontal", "irregular"],
+        );
+        // Irregular reference (size-independent).
+        session.restore(&snap);
+        for s in milestones(0.9) {
+            session.prune(Pattern::Irregular, s)?;
+            session.train_steps(schedule.retrain_steps)?;
+        }
+        let (_, irregular) = session.eval(schedule.eval_batches)?;
+
+        for b in [2usize, 4, 8, 16] {
+            let mut row = vec![b.to_string()];
+            for pattern in [Pattern::Block { b, k: b }, Pattern::Gs { b, k: b }] {
+                session.restore(&snap);
+                for s in milestones(0.9) {
+                    session.prune(pattern, s)?;
+                    session.train_steps(schedule.retrain_steps)?;
+                }
+                let (_, metric) = session.eval(schedule.eval_batches)?;
+                row.push(format!("{metric:.4}"));
+            }
+            row.push(format!("{irregular:.4}"));
+            table.row(&row);
+        }
+        table.print();
+        println!("(dense reference metric: {dense_metric:.4})");
+    }
+
+    // ---- Fig. 5: quality vs sparsity per model --------------------------
+    for model in &models {
+        let Some(mm) = manifest.models.get(model) else {
+            continue;
+        };
+        // Paper sparsity grids per model (Fig. 5 x-axes).
+        let sparsities: &[f64] = match model.as_str() {
+            "gnmt" => &[0.7, 0.8, 0.9],
+            "resnet" => &[0.6, 0.8, 0.9],
+            _ => &[0.778, 0.83, 0.885],
+        };
+        let lower_better = model == "jasper"; // WER-style orientation
+        let mut session = TrainSession::new(&rt, mm, 42)?;
+        session.train_steps(schedule.dense_steps)?;
+        let snap = session.snapshot();
+        let (_, dense_metric) = session.eval(schedule.eval_batches)?;
+
+        let mut table = Table::new(
+            &format!(
+                "Fig5 micro-{model}: quality vs sparsity (dense={:.4}{})",
+                convert(dense_metric, lower_better),
+                if lower_better { ", error-rate, lower better" } else { "" }
+            ),
+            &["sparsity", "irregular", "gs_horizontal", "gs_vertical", "block_horizontal", "block_vertical"],
+        );
+        for &sp in sparsities {
+            let mut row = vec![format!("{:.1}%", sp * 100.0)];
+            for pattern in [
+                Pattern::Irregular,
+                Pattern::Gs { b: 8, k: 8 },
+                Pattern::Gs { b: 8, k: 1 },
+                Pattern::Block { b: 8, k: 8 },
+                Pattern::Block { b: 8, k: 1 },
+            ] {
+                session.restore(&snap);
+                for s in milestones(sp) {
+                    session.prune(pattern, s)?;
+                    session.train_steps(schedule.retrain_steps)?;
+                }
+                let (_, metric) = session.eval(schedule.eval_batches)?;
+                row.push(format!("{:.4}", convert(metric, lower_better)));
+            }
+            table.row(&row);
+        }
+        table.print();
+    }
+    Ok(())
+}
+
+/// Accuracy → the paper's orientation (error rate for jasper/WER).
+fn convert(metric: f32, lower_better: bool) -> f32 {
+    if lower_better {
+        1.0 - metric
+    } else {
+        metric
+    }
+}

@@ -1,0 +1,127 @@
+//! Table I: per-pattern quality at the paper's sparsity grid, including
+//! the hybrid GS(8,2)/GS(8,4) and scatter rows and the B∈{8,16} variants.
+//!
+//! Shape to reproduce: within each (model, sparsity) row-group, GS ≈
+//! irregular ≥ block, with the block gap growing at higher sparsity and
+//! larger B. Budget knobs as in fig1_fig5_quality.
+
+use gs_sparse::bench::Table;
+use gs_sparse::runtime::{Manifest, Runtime};
+use gs_sparse::sparse::Pattern;
+use gs_sparse::train::experiments::{milestones, Schedule};
+use gs_sparse::train::TrainSession;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP table1_accuracy: artifacts not built (make artifacts)");
+        return Ok(());
+    }
+    let manifest = Manifest::load(dir)?;
+    let rt = Runtime::cpu()?;
+    let schedule = Schedule::default();
+    let models: Vec<String> = std::env::var("GS_QUALITY_MODELS")
+        .unwrap_or_else(|_| "gnmt,resnet,jasper".into())
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+
+    for model in &models {
+        let Some(mm) = manifest.models.get(model) else { continue };
+        let lower_better = model == "jasper";
+        // (sparsity, patterns) rows mirroring Table I per base model.
+        let rows: Vec<(f64, Vec<Pattern>)> = match model.as_str() {
+            "gnmt" => vec![
+                (0.8, vec![
+                    Pattern::Block { b: 8, k: 8 },
+                    Pattern::Block { b: 8, k: 1 },
+                    Pattern::Irregular,
+                    Pattern::Gs { b: 8, k: 8 },
+                    Pattern::Gs { b: 8, k: 1 },
+                    Pattern::Gs { b: 8, k: 2 },
+                    Pattern::Gs { b: 8, k: 4 },
+                    Pattern::GsScatter { b: 8, k: 1 },
+                    Pattern::Gs { b: 16, k: 16 },
+                    Pattern::Gs { b: 16, k: 1 },
+                ]),
+                (0.9, vec![
+                    Pattern::Block { b: 8, k: 8 },
+                    Pattern::Block { b: 8, k: 1 },
+                    Pattern::Irregular,
+                    Pattern::Gs { b: 8, k: 8 },
+                    Pattern::Gs { b: 8, k: 1 },
+                    Pattern::Gs { b: 8, k: 2 },
+                    Pattern::GsScatter { b: 8, k: 1 },
+                ]),
+            ],
+            "resnet" => vec![
+                (0.6, vec![
+                    Pattern::Block { b: 8, k: 8 },
+                    Pattern::Block { b: 8, k: 1 },
+                    Pattern::Irregular,
+                    Pattern::Gs { b: 8, k: 8 },
+                    Pattern::Gs { b: 8, k: 1 },
+                ]),
+                (0.8, vec![
+                    Pattern::Block { b: 8, k: 8 },
+                    Pattern::Irregular,
+                    Pattern::Gs { b: 8, k: 8 },
+                    Pattern::Gs { b: 8, k: 1 },
+                ]),
+            ],
+            _ => vec![
+                (0.778, vec![
+                    Pattern::Block { b: 8, k: 8 },
+                    Pattern::Irregular,
+                    Pattern::Gs { b: 8, k: 8 },
+                    Pattern::Gs { b: 8, k: 1 },
+                ]),
+                (0.83, vec![
+                    Pattern::Block { b: 8, k: 8 },
+                    Pattern::Irregular,
+                    Pattern::Gs { b: 8, k: 8 },
+                ]),
+            ],
+        };
+
+        let mut session = TrainSession::new(&rt, mm, 42)?;
+        session.train_steps(schedule.dense_steps)?;
+        let snap = session.snapshot();
+        let (_, dense_metric) = session.eval(schedule.eval_batches)?;
+
+        let mut table = Table::new(
+            &format!("Table1 micro-{model} (score = {})",
+                if lower_better { "error rate, lower better" } else { "accuracy, higher better" }),
+            &["sparsity", "pattern", "score", "delta_vs_dense"],
+        );
+        let dense_score = conv(dense_metric, lower_better);
+        table.row(&["0%".into(), "Dense".into(), format!("{dense_score:.4}"), "0.0000".into()]);
+        for (sp, patterns) in rows {
+            for pattern in patterns {
+                session.restore(&snap);
+                for s in milestones(sp) {
+                    session.prune(pattern, s)?;
+                    session.train_steps(schedule.retrain_steps)?;
+                }
+                let (_, metric) = session.eval(schedule.eval_batches)?;
+                let score = conv(metric, lower_better);
+                table.row(&[
+                    format!("{:.1}%", sp * 100.0),
+                    pattern.name(),
+                    format!("{score:.4}"),
+                    format!("{:+.4}", score - dense_score),
+                ]);
+            }
+        }
+        table.print();
+    }
+    Ok(())
+}
+
+fn conv(metric: f32, lower_better: bool) -> f32 {
+    if lower_better {
+        1.0 - metric
+    } else {
+        metric
+    }
+}

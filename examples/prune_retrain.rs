@@ -1,0 +1,87 @@
+//! End-to-end driver: train → prune → retrain → eval on a real (micro)
+//! workload, with the loss curve logged — the crate's E2E validation run
+//! (recorded in EXPERIMENTS.md §E2E).
+//!
+//! ```text
+//! make artifacts   # once
+//! cargo run --release --example prune_retrain -- \
+//!     [--model resnet] [--pattern GS] [--b 8] [--k 8] [--sparsity 0.8] \
+//!     [--dense-steps 400] [--retrain-steps 250]
+//! ```
+//!
+//! Rust owns the loop: it initializes parameters, generates synthetic
+//! batches, executes the AOT train-step artifact via PJRT, prunes with
+//! Algorithm 3 (and friends), and evaluates — Python never runs.
+
+use anyhow::anyhow;
+use gs_sparse::runtime::{Manifest, Runtime};
+use gs_sparse::sparse::Pattern;
+use gs_sparse::train::experiments::milestones;
+use gs_sparse::train::TrainSession;
+use gs_sparse::util::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let manifest = Manifest::load(args.get("artifacts", "artifacts"))?;
+    let model = args.get("model", "resnet");
+    let mm = manifest
+        .models
+        .get(model)
+        .ok_or_else(|| anyhow!("unknown model {model} (gnmt|resnet|jasper)"))?;
+    let b = args.usize("b", 8);
+    let k = args.usize("k", b);
+    let pattern = match args.get("pattern", "GS") {
+        "GS" => Pattern::Gs { b, k },
+        "scatter" => Pattern::GsScatter { b, k },
+        "Block" => Pattern::Block { b, k },
+        "Irregular" => Pattern::Irregular,
+        p => return Err(anyhow!("unknown pattern {p}")),
+    };
+    let sparsity = args.f64("sparsity", 0.8);
+    let dense_steps = args.usize("dense-steps", 400);
+    let retrain_steps = args.usize("retrain-steps", 250);
+
+    let rt = Runtime::cpu()?;
+    println!("platform: {}", rt.platform());
+    let mut session = TrainSession::new(&rt, mm, args.usize("seed", 42) as u64)?;
+
+    println!("== dense training: {dense_steps} steps ==");
+    let losses = session.train_steps(dense_steps)?;
+    log_curve(&losses, "dense");
+    let (loss, metric) = session.eval(8)?;
+    println!("dense eval: loss={loss:.4} metric={metric:.4}");
+
+    for (phase, s) in milestones(sparsity).into_iter().enumerate() {
+        println!(
+            "== phase {}: prune to {:.0}% under {} + retrain {retrain_steps} steps ==",
+            phase + 1,
+            s * 100.0,
+            pattern.name()
+        );
+        session.prune(pattern, s)?;
+        let (l, m) = session.eval(4)?;
+        println!("   after prune (no retrain): loss={l:.4} metric={m:.4}");
+        let losses = session.train_steps(retrain_steps)?;
+        log_curve(&losses, "retrain");
+    }
+
+    let (loss, metric) = session.eval(8)?;
+    println!(
+        "final: {} @ {:.1}% sparsity  loss={loss:.4} metric={metric:.4}",
+        pattern.name(),
+        session.sparsity() * 100.0
+    );
+    Ok(())
+}
+
+fn log_curve(losses: &[f32], tag: &str) {
+    let chunk_len = losses.len().div_ceil(8).max(1);
+    for (i, chunk) in losses.chunks(chunk_len).enumerate() {
+        let mean: f32 = chunk.iter().sum::<f32>() / chunk.len() as f32;
+        println!(
+            "   {tag} steps {:>4}..{:<4} mean loss {mean:.4}",
+            i * chunk_len,
+            i * chunk_len + chunk.len()
+        );
+    }
+}

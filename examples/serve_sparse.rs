@@ -1,0 +1,83 @@
+//! Serving demo: start the coordinator, fire batched requests from client
+//! threads, report latency/throughput — the "serving paper" E2E shape.
+//!
+//! ```text
+//! make artifacts   # once
+//! cargo run --release --example serve_sparse -- [--requests 200] [--clients 4]
+//! ```
+
+use gs_sparse::coordinator::{serve, server::ServeConfig, Client, SparseModel, UniformGs};
+use gs_sparse::runtime::{Manifest, Runtime};
+use gs_sparse::sparse::Dense;
+use gs_sparse::util::{Args, Prng};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let n_requests = args.usize("requests", 200);
+    let n_clients = args.usize("clients", 4);
+    let manifest = Arc::new(Manifest::load(args.get("artifacts", "artifacts"))?);
+    let cfg = manifest.mlp.clone();
+    let (inputs, hidden, outputs) = (cfg.cfg("inputs")?, cfg.cfg("hidden")?, cfg.cfg("outputs")?);
+    let (b, groups, max_batch) = (cfg.cfg("gs_b")?, cfg.cfg("gs_groups")?, cfg.cfg("batch")?);
+
+    let m2 = Arc::clone(&manifest);
+    let factory = move || {
+        let rt = Runtime::cpu()?;
+        let mut rng = Prng::new(42);
+        let proj = Dense::random(outputs, hidden, 0.3, &mut rng);
+        SparseModel::load(
+            &rt,
+            &m2,
+            rng.normal_vec(inputs * hidden, 0.1),
+            vec![0.0; hidden],
+            &UniformGs::compress_for(&proj, b, groups)?,
+            rng.normal_vec(outputs, 0.1),
+        )
+    };
+    let handle = serve(
+        factory,
+        ServeConfig {
+            bind: "127.0.0.1:0".into(),
+            workers: 1,
+            input_width: inputs,
+            max_batch,
+            window_ms: 2,
+        },
+    )?;
+    println!("serving on {} (GS({b},{b}) sparse output layer)", handle.addr);
+
+    let addr = handle.addr;
+    let t0 = Instant::now();
+    let threads: Vec<_> = (0..n_clients)
+        .map(|c| {
+            std::thread::spawn(move || -> anyhow::Result<usize> {
+                let mut client = Client::connect(addr)?;
+                let mut rng = Prng::new(100 + c as u64);
+                let per_client = n_requests / n_clients;
+                for _ in 0..per_client {
+                    let x = rng.normal_vec(inputs, 1.0);
+                    let out = client.infer(&x)?;
+                    anyhow::ensure!(out.len() == outputs, "bad output width");
+                }
+                Ok(per_client)
+            })
+        })
+        .collect();
+    let done: usize = threads
+        .into_iter()
+        .map(|t| t.join().expect("client panicked").expect("client failed"))
+        .sum();
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    let mut client = Client::connect(addr)?;
+    let stats = client.stats()?;
+    println!(
+        "{done} requests in {elapsed:.2}s  ({:.0} req/s, {n_clients} clients)",
+        done as f64 / elapsed
+    );
+    println!("server stats: {}", stats.to_string());
+    handle.stop();
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Simulate the paper's kernel experiments (Fig. 6) at arbitrary sizes.
+//!
+//! ```text
+//! cargo run --release --example simulate_kernels -- \
+//!     [--rows 1024] [--cols 1024] [--banks 16] [--sparsity 0.9]
+//! ```
+//!
+//! Runs dense, Block(B,B)/(B,1), GS(B,B)/(B,1), and CSR-on-engine spMV on
+//! the cycle simulator at the requested size/sparsity, printing cycles,
+//! bottleneck unit, and speedup over dense — the raw material of Fig. 6(a).
+
+use gs_sparse::bench::Table;
+use gs_sparse::kernels::{spmv_block_sim, spmv_csr_sim, spmv_dense_sim, spmv_gs_sim};
+use gs_sparse::pruning::prune;
+use gs_sparse::sim::MachineConfig;
+use gs_sparse::sparse::{BlockSparse, Csr, Dense, GsFormat, Pattern};
+use gs_sparse::util::{Args, Prng};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let rows = args.usize("rows", 1024);
+    let cols = args.usize("cols", 1024);
+    let b = args.usize("banks", 16);
+    let sparsity = args.f64("sparsity", 0.9);
+    let seed = args.usize("seed", 42) as u64;
+
+    let mut rng = Prng::new(seed);
+    let w = Dense::random(rows, cols, 1.0, &mut rng);
+    let x = rng.normal_vec(cols, 1.0);
+    let cfg = MachineConfig::with_subbanks(b);
+
+    let dense = spmv_dense_sim(&w, &x, cfg);
+    let mut table = Table::new(
+        &format!("spMV ({rows}x{cols}) @ {:.0}% sparsity, B={b}", sparsity * 100.0),
+        &["pattern", "cycles", "speedup", "bottleneck", "conflicts", "dram_kb"],
+    );
+    table.row(&[
+        "Dense".into(),
+        dense.report.cycles.to_string(),
+        "1.00".into(),
+        dense.report.bottleneck().into(),
+        "0".into(),
+        (dense.report.dram_bytes / 1024).to_string(),
+    ]);
+
+    let mut run = |name: &str, pattern: Pattern| -> anyhow::Result<()> {
+        let mask = prune(&w, pattern, sparsity)?;
+        let mut pw = w.clone();
+        pw.apply_mask(&mask);
+        let out = match pattern {
+            Pattern::Block { .. } => {
+                let bs = BlockSparse::from_dense(&pw, pattern)?;
+                spmv_block_sim(&bs, &x, cfg)
+            }
+            Pattern::Irregular => {
+                let csr = Csr::from_dense(&pw);
+                spmv_csr_sim(&csr, &x, cfg, false)
+            }
+            _ => {
+                let gs = GsFormat::from_dense(&pw, pattern)?;
+                spmv_gs_sim(&gs, &x, cfg)
+            }
+        };
+        table.row(&[
+            name.into(),
+            out.report.cycles.to_string(),
+            format!("{:.2}", dense.report.cycles as f64 / out.report.cycles as f64),
+            out.report.bottleneck().into(),
+            out.report.conflict_slots.to_string(),
+            (out.report.dram_bytes / 1024).to_string(),
+        ]);
+        Ok(())
+    };
+
+    run("Block-horizontal", Pattern::Block { b, k: b })?;
+    run("Block-vertical", Pattern::Block { b, k: 1 })?;
+    run("GS-horizontal", Pattern::Gs { b, k: b })?;
+    run("GS-vertical", Pattern::Gs { b, k: 1 })?;
+    run("CSR-on-engine", Pattern::Irregular)?;
+
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,172 @@
+"""AOT lowering: JAX/Pallas (Layers 1-2) → HLO text artifacts for Rust.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+≥ 0.5 emits protos with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage: ``python -m compile.aot --out ../artifacts`` (from python/). Emits
+one ``<model>_{train,eval}.hlo.txt`` pair per micro model, the Pallas-
+backed ``mlp_forward.hlo.txt`` serving graph, and ``manifest.json``
+describing every artifact's signature so the Rust runtime can build
+literals without importing Python.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _struct(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _flat_wrapper(step_fn, spec, is_train):
+    """Flatten step functions for AOT export.
+
+    train: fn(p0..pn, m0..mn, v0..vn, t, mask0..maskk, x, y)
+              -> (p0'..pn', m0'..mn', v0'..vn', t', loss)
+    eval:  fn(p0..pn, mask0..maskk, x, y) -> (loss, metric)
+    """
+    n = len(spec)
+    n_masks = sum(1 for (_, _, pr) in spec if pr)
+
+    def flat_train(*args):
+        params = list(args[:n])
+        mstate = list(args[n : 2 * n])
+        vstate = list(args[2 * n : 3 * n])
+        t = args[3 * n]
+        masks = list(args[3 * n + 1 : 3 * n + 1 + n_masks])
+        x, y = args[3 * n + 1 + n_masks :]
+        new_p, new_m, new_v, new_t, loss = step_fn(
+            params, mstate, vstate, t, masks, x, y
+        )
+        return tuple(new_p) + tuple(new_m) + tuple(new_v) + (new_t, loss)
+
+    def flat_eval(*args):
+        params = list(args[:n])
+        masks = list(args[n : n + n_masks])
+        x, y = args[n + n_masks :]
+        loss, metric = step_fn(params, masks, x, y)
+        return (loss, metric)
+
+    return flat_train if is_train else flat_eval
+
+
+def _model_structs(spec, batch_x, batch_y, is_train):
+    params = [_struct(shape) for (_, shape, _) in spec]
+    masks = [_struct(shape) for (_, shape, pr) in spec if pr]
+    if is_train:
+        # params, adam-m, adam-v, t, masks, batch
+        return params * 3 + [_struct(())] + masks + [batch_x, batch_y]
+    return params + masks + [batch_x, batch_y]
+
+
+def lower_model(name, spec, train_fn, eval_fn, batch_x, batch_y, out_dir):
+    train = jax.jit(_flat_wrapper(train_fn, spec, True)).lower(
+        *_model_structs(spec, batch_x, batch_y, True)
+    )
+    evalf = jax.jit(_flat_wrapper(eval_fn, spec, False)).lower(
+        *_model_structs(spec, batch_x, batch_y, False)
+    )
+    train_path = f"{name}_train.hlo.txt"
+    eval_path = f"{name}_eval.hlo.txt"
+    with open(os.path.join(out_dir, train_path), "w") as f:
+        f.write(to_hlo_text(train))
+    with open(os.path.join(out_dir, eval_path), "w") as f:
+        f.write(to_hlo_text(evalf))
+    return {
+        "params": [
+            {"name": n, "shape": list(s), "prunable": p} for (n, s, p) in spec
+        ],
+        "batch": {
+            "x": {"shape": list(batch_x.shape), "dtype": str(batch_x.dtype)},
+            "y": {"shape": list(batch_y.shape), "dtype": str(batch_y.dtype)},
+        },
+        "train": train_path,
+        "eval": eval_path,
+        "lr": M.LR, "optimizer": "adam",
+    }
+
+
+def lower_mlp_forward(out_dir):
+    cfg = M.MLP
+    nbands = cfg["outputs"]  # horizontal GS over the [outputs, hidden] proj
+    structs = [
+        _struct((cfg["batch"], cfg["inputs"])),                      # x
+        _struct((cfg["inputs"], cfg["hidden"])),                     # w1
+        _struct((cfg["hidden"],)),                                   # b1
+        _struct((nbands, cfg["gs_groups"], cfg["gs_b"])),            # gs_value
+        jax.ShapeDtypeStruct(
+            (nbands, cfg["gs_groups"], cfg["gs_b"]), jnp.int32
+        ),                                                           # gs_index
+        _struct((cfg["outputs"],)),                                  # b2
+    ]
+    lowered = jax.jit(M.mlp_forward).lower(*structs)
+    path = "mlp_forward.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(to_hlo_text(lowered))
+    return {"config": cfg, "forward": path}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"models": {}}
+    manifest["models"]["gnmt"] = lower_model(
+        "gnmt",
+        M.gnmt_spec(),
+        M.gnmt_train_step,
+        M.gnmt_eval_step,
+        jax.ShapeDtypeStruct((M.GNMT["batch"], M.GNMT["seq"]), jnp.int32),
+        jax.ShapeDtypeStruct((M.GNMT["batch"], M.GNMT["seq"]), jnp.int32),
+        args.out,
+    )
+    manifest["models"]["gnmt"]["config"] = M.GNMT
+    manifest["models"]["resnet"] = lower_model(
+        "resnet",
+        M.resnet_spec(),
+        M.resnet_train_step,
+        M.resnet_eval_step,
+        _struct((M.RESNET["batch"], M.RESNET["size"], M.RESNET["size"],
+                 M.RESNET["in_ch"])),
+        jax.ShapeDtypeStruct((M.RESNET["batch"],), jnp.int32),
+        args.out,
+    )
+    manifest["models"]["resnet"]["config"] = M.RESNET
+    manifest["models"]["jasper"] = lower_model(
+        "jasper",
+        M.jasper_spec(),
+        M.jasper_train_step,
+        M.jasper_eval_step,
+        _struct((M.JASPER["batch"], M.JASPER["seq"], M.JASPER["in_ch"])),
+        jax.ShapeDtypeStruct((M.JASPER["batch"],), jnp.int32),
+        args.out,
+    )
+    manifest["models"]["jasper"]["config"] = M.JASPER
+    manifest["mlp_forward"] = lower_mlp_forward(args.out)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

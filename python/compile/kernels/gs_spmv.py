@@ -1,0 +1,106 @@
+"""Layer-1 Pallas kernels: gather-scatter spMV and 1-D convolution.
+
+Hardware adaptation (DESIGN.md §4): the paper's TCM is the analogue of TPU
+VMEM — the dense activation vector is pinned whole in VMEM (BlockSpec with
+no blocking), weight/index groups stream in band-blocks from HBM, and the
+per-group bank-conflict-free gather becomes a sublane-aligned VMEM gather.
+Because the format guarantees `index % B` is a permutation within each
+group, the gather never serializes — the TPU equivalent of the paper's
+"no two offsets fall into the same sub-bank".
+
+Kernels run with `interpret=True`: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret-mode lowers to plain HLO that the Rust
+runtime executes AOT. Correctness is pinned to `ref.py` by pytest +
+hypothesis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gs_spmv_kernel(value_ref, index_ref, act_ref, o_ref, *, k):
+    """One grid step = one band: accumulate its groups, fold lanes.
+
+    value_ref: f32[1, g, B]; index_ref: i32[1, g, B]; act_ref: f32[cols]
+    (whole vector, VMEM-resident); o_ref: f32[1, B//k].
+    """
+    value = value_ref[0]          # [g, B]
+    index = index_ref[0]          # [g, B]
+    act = act_ref[...]            # [cols]
+    b = value.shape[1]
+    slots = b // k
+    gathered = act[index]         # conflict-free gather per group
+    lane_sums = (gathered * value).sum(axis=0)            # [B]
+    o_ref[0, :] = lane_sums.reshape(slots, k).sum(axis=1)  # fold k lanes/slot
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def gs_spmv(value, index, act, k):
+    """GS spMV via Pallas. Shapes as in `ref.gs_spmv_ref`; returns y[rows].
+
+    Grid: one program per band. The activation vector is unblocked
+    (VMEM-resident, the TCM analogue); value/index stream per band.
+    """
+    nbands, g, b = value.shape
+    slots = b // k
+    out = pl.pallas_call(
+        functools.partial(_gs_spmv_kernel, k=k),
+        grid=(nbands,),
+        in_specs=[
+            pl.BlockSpec((1, g, b), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, g, b), lambda i: (i, 0, 0)),
+            pl.BlockSpec(act.shape, lambda i: tuple(0 for _ in act.shape)),
+        ],
+        out_specs=pl.BlockSpec((1, slots), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nbands, slots), value.dtype),
+        interpret=True,
+    )(value, index, act)
+    return out.reshape(nbands * slots)
+
+
+def _gs_conv1d_kernel(value_ref, index_ref, act_ref, o_ref, *, k, in_ch):
+    """One grid step = one output position p: window gather + GS spMV.
+
+    act_ref: f32[T*I] flat, whole in VMEM; o_ref: f32[1, rows].
+    The engine offset of a flat filter index at position p is simply
+    `p*I + index` (1-D conv needs no (W−w)·C adjustment, Definition 4.2).
+    """
+    p = pl.program_id(0)
+    value = value_ref[...]        # [nbands, g, B]
+    index = index_ref[...]
+    act = act_ref[...]            # [T*I]
+    nbands, g, b = value.shape
+    slots = b // k
+    gathered = act[p * in_ch + index]               # [nbands, g, B]
+    lane_sums = (gathered * value).sum(axis=1)      # [nbands, B]
+    per_slot = lane_sums.reshape(nbands, slots, k).sum(axis=2)
+    o_ref[0, :] = per_slot.reshape(nbands * slots)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "kernel_l", "in_ch"))
+def gs_conv1d(act, value, index, k, kernel_l, in_ch):
+    """GS sparse 1-D convolution via Pallas; matches `ref.gs_conv1d_ref`.
+
+    act: f32[T, I]; returns f32[T - L + 1, O].
+    """
+    t = act.shape[0]
+    out_t = t - kernel_l + 1
+    nbands, g, b = value.shape
+    rows = nbands * (b // k)
+    flat = act.reshape(-1)
+    out = pl.pallas_call(
+        functools.partial(_gs_conv1d_kernel, k=k, in_ch=in_ch),
+        grid=(out_t,),
+        in_specs=[
+            pl.BlockSpec(value.shape, lambda p: (0, 0, 0)),
+            pl.BlockSpec(index.shape, lambda p: (0, 0, 0)),
+            pl.BlockSpec(flat.shape, lambda p: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, rows), lambda p: (p, 0)),
+        out_shape=jax.ShapeDtypeStruct((out_t, rows), value.dtype),
+        interpret=True,
+    )(value, index, flat)
+    return out

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness references: every Pallas kernel in this
+package must match its oracle to float tolerance under pytest + hypothesis
+sweeps (python/tests/test_kernel.py).
+
+The uniform GS layout used at the JAX layer: a `GS(B,k)` matrix with the
+same number of groups `g` in every band is stored as
+
+    value : f32[nbands, g, B]
+    index : i32[nbands, g, B]   column indices; per group, index % B is a
+                                permutation of 0..B (padding groups repeat
+                                residues 0..B with value 0.0)
+
+Bands of `B/k` rows follow Definition 4.1; entry j of a group belongs to
+band row-slot `j // k`. The Rust side pads ragged bands to uniform `g`
+with zero-valued groups, so this layout is lossless.
+"""
+
+import jax.numpy as jnp
+
+
+def gs_spmv_ref(value, index, act, k):
+    """Reference GS spMV: returns y[rows] with rows = nbands * (B // k).
+
+    value: f32[nbands, g, B], index: i32[nbands, g, B], act: f32[cols].
+    """
+    nbands, g, b = value.shape
+    slots = b // k
+    gathered = act[index]                      # [nbands, g, B]
+    prod = gathered * value                    # [nbands, g, B]
+    lane_sums = prod.sum(axis=1)               # [nbands, B]
+    per_slot = lane_sums.reshape(nbands, slots, k).sum(axis=2)  # [nbands, slots]
+    return per_slot.reshape(nbands * slots)
+
+
+def masked_matmul_ref(x, w, mask):
+    """Dense activations × masked weights: y = x @ (w * mask)."""
+    return x @ (w * mask)
+
+
+def gs_conv1d_ref(act, value, index, k, kernel_l, in_ch):
+    """Reference GS 1-D convolution (Definition 4.2, O×L×I flattening).
+
+    act: f32[T, I] channel-innermost; value/index as in gs_spmv_ref over the
+    flattened filter matrix O×(L·I); stride 1, no padding.
+    Returns f32[T - L + 1, O].
+    """
+    t = act.shape[0]
+    out_t = t - kernel_l + 1
+    flat = act.reshape(-1)  # [T*I], flat offset of (pos, ic) = pos*I + ic
+    outs = []
+    for p in range(out_t):
+        window = flat[p * in_ch : p * in_ch + kernel_l * in_ch]
+        outs.append(gs_spmv_ref(value, index, window, k))
+    return jnp.stack(outs, axis=0)

@@ -1,0 +1,323 @@
+"""Layer-2 JAX models: the micro substitutes for GNMT / ResNet-50 / Jasper.
+
+The paper's accuracy experiments (Figs. 1/5, Table I) compare *pattern
+families at equal sparsity on the same model*. We reproduce that comparison
+on three micro models that exercise the same layer types (see DESIGN.md §2
+for the substitution argument):
+
+* ``gnmt``   — LSTM seq2seq on a synthetic reversal task (2-D weight
+               matrices, the Definition 4.1 case); quality = token accuracy
+               (BLEU stand-in, higher is better).
+* ``resnet`` — residual 2-D CNN on a synthetic prototype-classification
+               task (OhwI filters, Definition 4.2); quality = top-1.
+* ``jasper`` — residual 1-D CNN (O×L×I filters); quality = error rate
+               (WER stand-in, lower is better).
+
+Every model exposes:
+
+* ``init_spec()``   — ordered parameter (name, shape, prunable) list; the
+                      Rust orchestrator initializes and owns the buffers.
+* ``train_step``    — (params, m, v, t, masks, x, y) →
+                      (new_params, m', v', t', loss); one Adam step (the
+                      paper trains GNMT with Adam, §X) with the mask
+                      re-applied after the update, i.e. the paper's
+                      prune-from-dense retraining step.
+* ``eval_step``     — (params, masks, x, y) → (loss, metric).
+
+Masks enter as f32 0/1 tensors for every prunable parameter, so the same
+artifact serves dense training (all-ones) and every pattern/sparsity.
+Python never runs at request time: ``aot.py`` lowers these to HLO text once.
+"""
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Shared pieces
+# ---------------------------------------------------------------------------
+
+LR = 0.01       # baked into the train-step artifacts (see manifest)
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def _cross_entropy(logits, labels, num_classes):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, num_classes, dtype=logits.dtype)
+    return -(onehot * logp).sum(axis=-1).mean()
+
+
+def _adam(params, grads, mstate, vstate, t, masks, prunable):
+    """Adam step (the paper trains GNMT with Adam, §X) with masks
+    re-applied to prunable tensors so pruned weights never resurrect.
+
+    t is the f32 step counter *after* increment; returns (params, m, v).
+    """
+    new_p, new_m, new_v = [], [], []
+    mi = 0
+    for (p, g, m, v), is_pruned in zip(
+        zip(params, grads, mstate, vstate), prunable
+    ):
+        m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+        v = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+        mhat = m / (1.0 - ADAM_B1**t)
+        vhat = v / (1.0 - ADAM_B2**t)
+        q = p - LR * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+        if is_pruned:
+            q = q * masks[mi]
+            mi += 1
+        new_p.append(q)
+        new_m.append(m)
+        new_v.append(v)
+    return new_p, new_m, new_v
+
+
+def _apply_masks(params, masks, prunable):
+    out = []
+    mi = 0
+    for p, is_pruned in zip(params, prunable):
+        if is_pruned:
+            out.append(p * masks[mi])
+            mi += 1
+        else:
+            out.append(p)
+    return out
+
+
+def _lstm_cell(w, b, h, c, x):
+    """One LSTM step; w: [E+H, 4H], x: [B, E], h/c: [B, H]."""
+    hidden = h.shape[-1]
+    z = jnp.concatenate([x, h], axis=-1) @ w + b
+    i, f, g, o = jnp.split(z, 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    del hidden
+    return h, c
+
+
+def _conv2d(x, w):
+    """NHWC × OhwI (stride 1, SAME padding)."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "OHWI", "NHWC"),
+    )
+
+
+def _conv1d(x, w):
+    """NWC × OWI (stride 1, SAME padding). The filter's length dimension
+    is the paper's L (Definition 4.2's O×L×I layout)."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1,), padding="SAME",
+        dimension_numbers=("NWC", "OWI", "NWC"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# micro-GNMT: LSTM seq2seq on sequence reversal
+# ---------------------------------------------------------------------------
+
+GNMT = dict(vocab=16, embed=16, hidden=32, seq=8, batch=32)
+
+
+def gnmt_spec():
+    v, e, h = GNMT["vocab"], GNMT["embed"], GNMT["hidden"]
+    return [
+        ("embed", (v, e), False),       # embeddings stay dense (paper §X)
+        ("enc_w", (e + h, 4 * h), True),
+        ("enc_b", (4 * h,), False),
+        ("dec_w", (e + h, 4 * h), True),
+        ("dec_b", (4 * h,), False),
+        ("attn_w", (2 * h, h), True),
+        ("out_w", (h, v), True),
+        ("out_b", (v,), False),
+    ]
+
+
+def _gnmt_logits(params, x):
+    embed, enc_w, enc_b, dec_w, dec_b, attn_w, out_w, out_b = params
+    h = GNMT["hidden"]
+    bsz = x.shape[0]
+    xe = embed[x]  # [B, T, E]
+
+    def enc_step(carry, xt):
+        hh, cc = carry
+        hh, cc = _lstm_cell(enc_w, enc_b, hh, cc, xt)
+        return (hh, cc), hh
+
+    init = (jnp.zeros((bsz, h)), jnp.zeros((bsz, h)))
+    (hh, cc), enc_hs = jax.lax.scan(enc_step, init, xe.swapaxes(0, 1))
+    enc_hs = enc_hs.swapaxes(0, 1)  # [B, T, H]
+
+    # Decoder with Luong dot attention, teacher-forced on the *input*
+    # sequence shifted right (the model must emit the reversed sequence).
+    dec_in = jnp.concatenate([jnp.zeros_like(xe[:, :1]), xe[:, :-1]], axis=1)
+
+    def dec_step(carry, xt):
+        hh, cc = carry
+        hh, cc = _lstm_cell(dec_w, dec_b, hh, cc, xt)
+        scores = jnp.einsum("bh,bth->bt", hh, enc_hs)
+        ctx = jnp.einsum("bt,bth->bh", jax.nn.softmax(scores, axis=-1), enc_hs)
+        attn = jnp.tanh(jnp.concatenate([hh, ctx], axis=-1) @ attn_w)
+        return (hh, cc), attn @ out_w + out_b
+
+    (_, _), logits = jax.lax.scan(dec_step, (hh, cc), dec_in.swapaxes(0, 1))
+    return logits.swapaxes(0, 1)  # [B, T, V]
+
+
+def gnmt_loss(params, masks, x, y):
+    prunable = [p[2] for p in gnmt_spec()]
+    params = _apply_masks(params, masks, prunable)
+    logits = _gnmt_logits(params, x)
+    return _cross_entropy(
+        logits.reshape(-1, GNMT["vocab"]), y.reshape(-1), GNMT["vocab"]
+    )
+
+
+def gnmt_train_step(params, mstate, vstate, t, masks, x, y):
+    """One Adam train step; t is the f32 step counter (pre-increment)."""
+    prunable = [p[2] for p in gnmt_spec()]
+    loss, grads = jax.value_and_grad(gnmt_loss)(params, masks, x, y)
+    t = t + 1.0
+    new_p, new_m, new_v = _adam(params, grads, mstate, vstate, t, masks, prunable)
+    return new_p, new_m, new_v, t, loss
+
+
+def gnmt_eval_step(params, masks, x, y):
+    prunable = [p[2] for p in gnmt_spec()]
+    mparams = _apply_masks(params, masks, prunable)
+    logits = _gnmt_logits(mparams, x)
+    loss = _cross_entropy(
+        logits.reshape(-1, GNMT["vocab"]), y.reshape(-1), GNMT["vocab"]
+    )
+    acc = (logits.argmax(-1) == y).mean()
+    return loss, acc
+
+
+# ---------------------------------------------------------------------------
+# micro-ResNet: residual 2-D CNN, 10-way classification
+# ---------------------------------------------------------------------------
+
+RESNET = dict(size=8, in_ch=8, ch=16, classes=10, batch=32)
+
+
+def resnet_spec():
+    c_in, c = RESNET["in_ch"], RESNET["ch"]
+    return [
+        ("conv1", (c, 3, 3, c_in), True),
+        ("conv2", (c, 3, 3, c), True),
+        ("conv3", (c, 3, 3, c), True),
+        ("head_w", (c, RESNET["classes"]), True),
+        ("head_b", (RESNET["classes"],), False),
+    ]
+
+
+def _resnet_logits(params, x):
+    conv1, conv2, conv3, head_w, head_b = params
+    h = jax.nn.relu(_conv2d(x, conv1))
+    r = jax.nn.relu(_conv2d(h, conv2))
+    h = jax.nn.relu(h + _conv2d(r, conv3))  # residual block
+    pooled = h.mean(axis=(1, 2))  # [B, C]
+    return pooled @ head_w + head_b
+
+
+def resnet_loss(params, masks, x, y):
+    prunable = [p[2] for p in resnet_spec()]
+    params = _apply_masks(params, masks, prunable)
+    return _cross_entropy(_resnet_logits(params, x), y, RESNET["classes"])
+
+
+def resnet_train_step(params, mstate, vstate, t, masks, x, y):
+    """One Adam train step; t is the f32 step counter (pre-increment)."""
+    prunable = [p[2] for p in resnet_spec()]
+    loss, grads = jax.value_and_grad(resnet_loss)(params, masks, x, y)
+    t = t + 1.0
+    new_p, new_m, new_v = _adam(params, grads, mstate, vstate, t, masks, prunable)
+    return new_p, new_m, new_v, t, loss
+
+
+def resnet_eval_step(params, masks, x, y):
+    prunable = [p[2] for p in resnet_spec()]
+    mparams = _apply_masks(params, masks, prunable)
+    logits = _resnet_logits(mparams, x)
+    loss = _cross_entropy(logits, y, RESNET["classes"])
+    acc = (logits.argmax(-1) == y).mean()
+    return loss, acc
+
+
+# ---------------------------------------------------------------------------
+# micro-Jasper: residual 1-D CNN, 8-way sequence classification
+# ---------------------------------------------------------------------------
+
+JASPER = dict(seq=16, in_ch=8, ch=16, classes=8, batch=32)
+
+
+def jasper_spec():
+    c_in, c = JASPER["in_ch"], JASPER["ch"]
+    return [
+        ("conv1", (c, 3, c_in), True),
+        ("conv2", (c, 3, c), True),
+        ("conv3", (c, 3, c), True),
+        ("head_w", (c, JASPER["classes"]), True),
+        ("head_b", (JASPER["classes"],), False),
+    ]
+
+
+def _jasper_logits(params, x):
+    conv1, conv2, conv3, head_w, head_b = params
+    h = jax.nn.relu(_conv1d(x, conv1))
+    r = jax.nn.relu(_conv1d(h, conv2))
+    h = jax.nn.relu(h + _conv1d(r, conv3))
+    pooled = h.mean(axis=1)
+    return pooled @ head_w + head_b
+
+
+def jasper_loss(params, masks, x, y):
+    prunable = [p[2] for p in jasper_spec()]
+    params = _apply_masks(params, masks, prunable)
+    return _cross_entropy(_jasper_logits(params, x), y, JASPER["classes"])
+
+
+def jasper_train_step(params, mstate, vstate, t, masks, x, y):
+    """One Adam train step; t is the f32 step counter (pre-increment)."""
+    prunable = [p[2] for p in jasper_spec()]
+    loss, grads = jax.value_and_grad(jasper_loss)(params, masks, x, y)
+    t = t + 1.0
+    new_p, new_m, new_v = _adam(params, grads, mstate, vstate, t, masks, prunable)
+    return new_p, new_m, new_v, t, loss
+
+
+def jasper_eval_step(params, masks, x, y):
+    prunable = [p[2] for p in jasper_spec()]
+    mparams = _apply_masks(params, masks, prunable)
+    logits = _jasper_logits(mparams, x)
+    loss = _cross_entropy(logits, y, JASPER["classes"])
+    acc = (logits.argmax(-1) == y).mean()
+    return loss, acc
+
+
+# ---------------------------------------------------------------------------
+# Serving MLP: the inference graph that calls the Layer-1 Pallas kernel
+# ---------------------------------------------------------------------------
+
+MLP = dict(inputs=64, hidden=64, outputs=32, gs_b=8, gs_k=8, gs_groups=2,
+           batch=8)
+
+
+def mlp_spec():
+    i, h, o = MLP["inputs"], MLP["hidden"], MLP["outputs"]
+    return [("w1", (i, h), False), ("b1", (h,), False), ("b2", (o,), False)]
+
+
+def mlp_forward(x, w1, b1, gs_value, gs_index, b2):
+    """Serving forward pass: dense layer, then the GS-compressed output
+    projection executed by the Pallas gather-scatter kernel (Layer 1).
+
+    x: f32[batch, inputs]; gs_value/gs_index: the uniform GS(B,B) layout of
+    the [outputs, hidden] projection (nbands = outputs, g = gs_groups).
+    """
+    from .kernels.gs_spmv import gs_spmv
+
+    h = jax.nn.relu(x @ w1 + b1)
+    logits = jax.vmap(lambda hv: gs_spmv(gs_value, gs_index, hv, MLP["gs_k"]))(h)
+    return logits + b2

@@ -1,0 +1,65 @@
+"""AOT artifact sanity: HLO text lowers, manifest matches model specs."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.aot import _flat_wrapper, _model_structs, to_hlo_text
+
+
+def test_hlo_text_roundtrips_for_tiny_fn():
+    lowered = jax.jit(lambda a, b: (a @ b + 1.0,)).lower(
+        jax.ShapeDtypeStruct((2, 2), jnp.float32),
+        jax.ShapeDtypeStruct((2, 2), jnp.float32),
+    )
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "dot(" in text or "dot " in text
+
+
+def test_flat_wrapper_signature_counts():
+    spec = M.resnet_spec()
+    structs = _model_structs(
+        spec,
+        jax.ShapeDtypeStruct((M.RESNET["batch"], 8, 8, 8), jnp.float32),
+        jax.ShapeDtypeStruct((M.RESNET["batch"],), jnp.int32),
+        True,
+    )
+    n_prunable = sum(1 for (_, _, p) in spec if p)
+    assert len(structs) == 3 * len(spec) + 1 + n_prunable + 2
+    flat = _flat_wrapper(M.resnet_train_step, spec, True)
+    lowered = jax.jit(flat).lower(*structs)
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__),
+                                    "../../artifacts/manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_manifest_consistent_with_specs():
+    path = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    for name, spec_fn in [
+        ("gnmt", M.gnmt_spec),
+        ("resnet", M.resnet_spec),
+        ("jasper", M.jasper_spec),
+    ]:
+        entry = manifest["models"][name]
+        spec = spec_fn()
+        assert len(entry["params"]) == len(spec)
+        for rec, (pname, shape, prunable) in zip(entry["params"], spec):
+            assert rec["name"] == pname
+            assert tuple(rec["shape"]) == tuple(shape)
+            assert rec["prunable"] == prunable
+        for art in ("train", "eval"):
+            assert os.path.exists(os.path.join(path, entry[art]))
+    assert os.path.exists(
+        os.path.join(path, manifest["mlp_forward"]["forward"])
+    )

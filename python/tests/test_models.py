@@ -1,0 +1,138 @@
+"""L2 model sanity: shapes, mask semantics, and a few training steps."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+
+
+def init_params(spec, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _, shape, _ in spec:
+        fan_in = shape[0] if len(shape) > 1 else shape[0]
+        scale = (2.0 / max(fan_in, 1)) ** 0.5 * 0.5
+        out.append(jnp.array(rng.normal(size=shape).astype(np.float32) * scale))
+    return out
+
+
+def ones_masks(spec):
+    return [jnp.ones(shape, jnp.float32) for _, shape, pr in spec if pr]
+
+
+def gnmt_batch(seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(1, M.GNMT["vocab"], size=(M.GNMT["batch"], M.GNMT["seq"]))
+    y = x[:, ::-1].copy()
+    return jnp.array(x, jnp.int32), jnp.array(y, jnp.int32)
+
+
+def adam_state(params):
+    return ([jnp.zeros_like(p) for p in params],
+            [jnp.zeros_like(p) for p in params],
+            jnp.zeros((), jnp.float32))
+
+
+def test_gnmt_shapes_and_loss_decreases():
+    spec = M.gnmt_spec()
+    params = init_params(spec)
+    masks = ones_masks(spec)
+    ms, vs, t = adam_state(params)
+    # Fixed-batch memorization: a reliable learning signal in few steps.
+    x, y = gnmt_batch()
+    step = jax.jit(M.gnmt_train_step)
+    params, ms, vs, t, loss0 = step(params, ms, vs, t, masks, x, y)
+    for _ in range(60):
+        params, ms, vs, t, loss = step(params, ms, vs, t, masks, x, y)
+    assert float(loss) < 0.9 * float(loss0), f"{loss} !< 0.9*{loss0}"
+
+
+def test_resnet_train_and_eval():
+    spec = M.resnet_spec()
+    params = init_params(spec)
+    masks = ones_masks(spec)
+    rng = np.random.default_rng(1)
+    protos = rng.normal(size=(M.RESNET["classes"], M.RESNET["size"],
+                              M.RESNET["size"], M.RESNET["in_ch"]))
+
+    def batch(seed):
+        r = np.random.default_rng(seed)
+        y = r.integers(0, M.RESNET["classes"], size=M.RESNET["batch"])
+        x = protos[y] + 0.3 * r.normal(size=(M.RESNET["batch"],) + protos.shape[1:])
+        return jnp.array(x, jnp.float32), jnp.array(y, jnp.int32)
+
+    step = jax.jit(M.resnet_train_step)
+    evalf = jax.jit(M.resnet_eval_step)
+    ms, vs, t = adam_state(params)
+    x, y = batch(0)
+    _, acc0 = evalf(params, masks, x, y)
+    for i in range(40):
+        params, ms, vs, t, _ = step(params, ms, vs, t, masks, *batch(i))
+    _, acc = evalf(params, masks, x, y)
+    assert float(acc) > float(acc0), f"accuracy did not improve: {acc0}->{acc}"
+
+
+def test_jasper_shapes():
+    spec = M.jasper_spec()
+    params = init_params(spec)
+    masks = ones_masks(spec)
+    rng = np.random.default_rng(2)
+    x = jnp.array(rng.normal(size=(M.JASPER["batch"], M.JASPER["seq"],
+                                   M.JASPER["in_ch"])), jnp.float32)
+    y = jnp.array(rng.integers(0, M.JASPER["classes"], size=M.JASPER["batch"]),
+                  jnp.int32)
+    ms, vs, t = adam_state(params)
+    new_params, ms, vs, t, loss = jax.jit(M.jasper_train_step)(
+        params, ms, vs, t, masks, x, y)
+    assert len(new_params) == len(params)
+    assert np.isfinite(float(loss))
+
+
+def test_masks_zero_params_stay_zero():
+    """The prune-retrain invariant: masked weights never resurrect."""
+    spec = M.resnet_spec()
+    params = init_params(spec)
+    masks = ones_masks(spec)
+    # Zero half of conv1's mask.
+    m0 = np.asarray(masks[0]).copy()
+    m0.reshape(-1)[::2] = 0.0
+    masks[0] = jnp.array(m0)
+    rng = np.random.default_rng(3)
+    x = jnp.array(rng.normal(size=(M.RESNET["batch"], 8, 8, 8)), jnp.float32)
+    y = jnp.array(rng.integers(0, 10, size=M.RESNET["batch"]), jnp.int32)
+    step = jax.jit(M.resnet_train_step)
+    ms, vs, t = adam_state(params)
+    for _ in range(3):
+        params, ms, vs, t, _ = step(params, ms, vs, t, masks, x, y)
+    conv1 = np.asarray(params[0])
+    assert np.all(conv1.reshape(-1)[::2] == 0.0)
+
+
+def test_mlp_forward_matches_dense_reconstruction():
+    cfg = M.MLP
+    rng = np.random.default_rng(4)
+    x = jnp.array(rng.normal(size=(cfg["batch"], cfg["inputs"])), jnp.float32)
+    w1 = jnp.array(rng.normal(size=(cfg["inputs"], cfg["hidden"])) * 0.1,
+                   jnp.float32)
+    b1 = jnp.zeros(cfg["hidden"], jnp.float32)
+    b2 = jnp.zeros(cfg["outputs"], jnp.float32)
+    # Build a valid uniform GS(B,B) layout for the [outputs, hidden] proj.
+    b, g = cfg["gs_b"], cfg["gs_groups"]
+    idx = np.zeros((cfg["outputs"], g, b), np.int32)
+    val = rng.normal(size=(cfg["outputs"], g, b)).astype(np.float32) * 0.1
+    for r in range(cfg["outputs"]):
+        for gi in range(g):
+            idx[r, gi] = rng.permutation(b) + b * rng.integers(
+                0, cfg["hidden"] // b, size=b
+            )
+    logits = M.mlp_forward(x, w1, b1, jnp.array(val), jnp.array(idx), b2)
+    # Dense reconstruction of the GS projection.
+    w2 = np.zeros((cfg["outputs"], cfg["hidden"]), np.float32)
+    for r in range(cfg["outputs"]):
+        for gi in range(g):
+            for j in range(b):
+                w2[r, idx[r, gi, j]] += val[r, gi, j]
+    h = np.maximum(np.asarray(x) @ np.asarray(w1), 0.0)
+    want = h @ w2.T
+    np.testing.assert_allclose(np.asarray(logits), want, rtol=1e-4, atol=1e-4)

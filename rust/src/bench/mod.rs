@@ -1,0 +1,188 @@
+//! Bench harness (criterion substitute) + table/figure reporting.
+//!
+//! `cargo bench` targets are `harness = false` binaries that use this
+//! module: [`Bencher`] does warmup + timed reps and prints a stats line per
+//! benchmark; [`Table`] renders the paper-matching rows (and a JSON record
+//! per row on stderr for machine consumption, consumed when filling in
+//! `EXPERIMENTS.md`).
+
+use crate::util::json::Json;
+use crate::util::stats::{time_reps, Summary};
+
+/// Runs benchmarks and prints criterion-style one-liners.
+pub struct Bencher {
+    pub warmup: usize,
+    pub reps: usize,
+    results: Vec<(String, Summary)>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Bencher {
+        // Keep default reps modest: several benches run whole training
+        // sweeps; individual benches override as needed.
+        let reps = std::env::var("GS_BENCH_REPS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(10);
+        Bencher {
+            warmup: 2,
+            reps,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` and record + print the result. Returns mean seconds.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> f64 {
+        let samples = time_reps(self.warmup, self.reps, f);
+        let s = Summary::of(&samples);
+        println!(
+            "bench {name:<48} mean {:>12}  p50 {:>12}  p95 {:>12}  (n={})",
+            fmt_time(s.mean),
+            fmt_time(s.p50),
+            fmt_time(s.p95),
+            s.n
+        );
+        let mean = s.mean;
+        self.results.push((name.to_string(), s));
+        mean
+    }
+
+    /// All recorded results.
+    pub fn results(&self) -> &[(String, Summary)] {
+        &self.results
+    }
+}
+
+/// Render seconds human-readably.
+pub fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// A paper table/figure being regenerated: fixed columns, printed rows,
+/// plus a JSON record per row on stderr.
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        let columns: Vec<String> = columns.iter().map(|s| s.to_string()).collect();
+        let widths = columns.iter().map(|c| c.len().max(10)).collect();
+        Table {
+            title: title.to_string(),
+            columns,
+            widths,
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        for (w, c) in self.widths.iter_mut().zip(cells) {
+            *w = (*w).max(c.len());
+        }
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Convenience: stringify mixed cells.
+    pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) {
+        let cells: Vec<String> = cells.iter().map(|c| format!("{c}")).collect();
+        self.row(&cells);
+    }
+
+    /// Print the table; also emit one JSON object per row to stderr with
+    /// the column names as keys (prefixed `GS_ROW` for greppability).
+    pub fn print(&self) {
+        println!("\n=== {} ===", self.title);
+        let header: Vec<String> = self
+            .columns
+            .iter()
+            .zip(&self.widths)
+            .map(|(c, w)| format!("{c:<w$}"))
+            .collect();
+        println!("{}", header.join("  "));
+        println!("{}", "-".repeat(header.join("  ").len()));
+        for row in &self.rows {
+            let line: Vec<String> = row
+                .iter()
+                .zip(&self.widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect();
+            println!("{}", line.join("  "));
+        }
+        for row in &self.rows {
+            let obj = Json::obj(
+                self.columns
+                    .iter()
+                    .zip(row)
+                    .map(|(k, v)| {
+                        let val = v
+                            .parse::<f64>()
+                            .map(Json::Num)
+                            .unwrap_or_else(|_| Json::Str(v.clone()));
+                        (k.as_str(), val)
+                    })
+                    .collect(),
+            );
+            eprintln!("GS_ROW {} {}", self.title, obj.to_string());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_records() {
+        let mut b = Bencher {
+            warmup: 1,
+            reps: 3,
+            results: Vec::new(),
+        };
+        let mean = b.bench("noop", || {});
+        assert!(mean >= 0.0);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" µs"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn table_rows() {
+        let mut t = Table::new("Test", &["a", "b"]);
+        t.row(&["1".into(), "x".into()]);
+        t.rowf(&[&2.5, &"y"]);
+        assert_eq!(t.rows.len(), 2);
+        t.print(); // should not panic
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_arity_checked() {
+        let mut t = Table::new("Test", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

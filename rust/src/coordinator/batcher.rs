@@ -1,0 +1,167 @@
+//! Dynamic batcher: requests queue until the batch fills or a latency
+//! window expires (the vLLM-router-style admission loop, scaled to this
+//! artifact's static batch).
+
+use super::metrics::Metrics;
+use std::collections::VecDeque;
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One in-flight inference request.
+pub struct InferRequest {
+    pub id: u64,
+    pub input: Vec<f32>,
+    pub enqueued: Instant,
+    /// Where the result row goes (error as Err-string).
+    pub tx: Sender<(u64, Result<Vec<f32>, String>)>,
+}
+
+struct QueueState {
+    queue: VecDeque<InferRequest>,
+    shutdown: bool,
+}
+
+/// MPMC request queue with batch-forming semantics.
+pub struct Batcher {
+    state: Mutex<QueueState>,
+    nonempty: Condvar,
+    pub max_batch: usize,
+    /// How long the first request in a batch may wait for company.
+    pub window: Duration,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, window: Duration, metrics: Arc<Metrics>) -> Batcher {
+        Batcher {
+            state: Mutex::new(QueueState { queue: VecDeque::new(), shutdown: false }),
+            nonempty: Condvar::new(),
+            max_batch,
+            window,
+            metrics,
+        }
+    }
+
+    /// Enqueue a request (from server/router threads).
+    pub fn submit(&self, req: InferRequest) {
+        self.metrics
+            .requests
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let mut st = self.state.lock().unwrap();
+        st.queue.push_back(req);
+        self.nonempty.notify_one();
+    }
+
+    /// Stop all workers after the queue drains.
+    pub fn shutdown(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.shutdown = true;
+        self.nonempty.notify_all();
+    }
+
+    /// Block for the next batch: waits for a first request, then gives
+    /// stragglers up to `window` to join, capped at `max_batch` rows.
+    /// Returns `None` on shutdown with an empty queue.
+    pub fn next_batch(&self) -> Option<Vec<InferRequest>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if !st.queue.is_empty() {
+                break;
+            }
+            if st.shutdown {
+                return None;
+            }
+            st = self.nonempty.wait(st).unwrap();
+        }
+        // A first request exists; give the window a chance to fill the
+        // batch (skip the wait if it is already full).
+        let deadline = Instant::now() + self.window;
+        while st.queue.len() < self.max_batch && !st.shutdown {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (next, timeout) = self
+                .nonempty
+                .wait_timeout(st, deadline - now)
+                .unwrap();
+            st = next;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        let take = st.queue.len().min(self.max_batch);
+        let batch: Vec<InferRequest> = st.queue.drain(..take).collect();
+        self.metrics.record_batch(batch.len());
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn req(id: u64, tx: &Sender<(u64, Result<Vec<f32>, String>)>) -> InferRequest {
+        InferRequest { id, input: vec![id as f32], enqueued: Instant::now(), tx: tx.clone() }
+    }
+
+    #[test]
+    fn forms_full_batches_without_waiting() {
+        let b = Batcher::new(4, Duration::from_millis(50), Arc::new(Metrics::new()));
+        let (tx, _rx) = channel();
+        for i in 0..4 {
+            b.submit(req(i, &tx));
+        }
+        let t = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 4);
+        assert!(t.elapsed() < Duration::from_millis(40), "full batch should not wait");
+    }
+
+    #[test]
+    fn window_expiry_releases_partial_batch() {
+        let b = Batcher::new(8, Duration::from_millis(20), Arc::new(Metrics::new()));
+        let (tx, _rx) = channel();
+        b.submit(req(1, &tx));
+        let t = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t.elapsed() >= Duration::from_millis(18));
+    }
+
+    #[test]
+    fn preserves_fifo_order() {
+        let b = Batcher::new(3, Duration::from_millis(5), Arc::new(Metrics::new()));
+        let (tx, _rx) = channel();
+        for i in 0..5 {
+            b.submit(req(i, &tx));
+        }
+        let first = b.next_batch().unwrap();
+        let second = b.next_batch().unwrap();
+        assert_eq!(first.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(second.iter().map(|r| r.id).collect::<Vec<_>>(), vec![3, 4]);
+    }
+
+    #[test]
+    fn shutdown_unblocks_workers() {
+        let b = Arc::new(Batcher::new(4, Duration::from_millis(5), Arc::new(Metrics::new())));
+        let b2 = Arc::clone(&b);
+        let h = std::thread::spawn(move || b2.next_batch());
+        std::thread::sleep(Duration::from_millis(10));
+        b.shutdown();
+        assert!(h.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn drains_queue_before_shutdown_none() {
+        let b = Batcher::new(4, Duration::from_millis(1), Arc::new(Metrics::new()));
+        let (tx, _rx) = channel();
+        b.submit(req(7, &tx));
+        b.shutdown();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(b.next_batch().is_none());
+    }
+}

@@ -1,0 +1,77 @@
+//! Serving metrics: counters + latency reservoir.
+
+use crate::util::stats::Summary;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Thread-safe serving metrics.
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_rows: AtomicU64,
+    pub errors: AtomicU64,
+    latencies: Mutex<Vec<f64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_latency(&self, secs: f64) {
+        self.responses.fetch_add(1, Ordering::Relaxed);
+        let mut l = self.latencies.lock().unwrap();
+        // Bounded reservoir: keep the most recent 100k samples.
+        if l.len() >= 100_000 {
+            l.drain(..50_000);
+        }
+        l.push(secs);
+    }
+
+    pub fn record_batch(&self, rows: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_rows.fetch_add(rows as u64, Ordering::Relaxed);
+    }
+
+    /// Latency summary (None until the first response).
+    pub fn latency_summary(&self) -> Option<Summary> {
+        let l = self.latencies.lock().unwrap();
+        if l.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&l))
+        }
+    }
+
+    /// Mean rows per executed batch.
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_rows.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_summary_and_batch_means() {
+        let m = Metrics::new();
+        assert!(m.latency_summary().is_none());
+        m.record_latency(0.001);
+        m.record_latency(0.003);
+        m.record_batch(4);
+        m.record_batch(8);
+        let s = m.latency_summary().unwrap();
+        assert_eq!(s.n, 2);
+        assert!((s.mean - 0.002).abs() < 1e-9);
+        assert!((m.mean_batch_size() - 6.0).abs() < 1e-9);
+        assert_eq!(m.responses.load(Ordering::Relaxed), 2);
+    }
+}

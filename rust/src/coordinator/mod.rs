@@ -1,0 +1,114 @@
+//! Serving coordinator (Layer 3): router, dynamic batcher, worker pool.
+//!
+//! The request path is pure Rust: TCP connections speak a JSON-lines
+//! protocol ([`server`]), requests flow into a [`batcher::Batcher`] that
+//! forms batches up to the artifact's static batch size within a small
+//! latency window, and worker threads execute the Pallas-backed
+//! `mlp_forward` artifact through [`crate::runtime`]. The GS-compressed
+//! output projection travels to the device as `value`/`index` tensors in
+//! the uniform layout (see [`uniform`]), produced from a [`GsFormat`]
+//! built by the pruner — the same format the cycle simulator executes.
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+pub mod uniform;
+
+pub use batcher::{Batcher, InferRequest};
+pub use metrics::Metrics;
+pub use server::{serve, Client, ServerHandle};
+pub use uniform::UniformGs;
+
+use crate::runtime::{Executable, Manifest, Runtime, Tensor};
+use anyhow::{ensure, Context, Result};
+use std::sync::Arc;
+
+/// The deployed sparse model: compiled forward artifact + resident weights.
+pub struct SparseModel {
+    exe: Executable,
+    pub inputs: usize,
+    pub hidden: usize,
+    pub outputs: usize,
+    pub max_batch: usize,
+    w1: Tensor,
+    b1: Tensor,
+    gs_value: Tensor,
+    gs_index: Tensor,
+    b2: Tensor,
+}
+
+impl SparseModel {
+    /// Load the `mlp_forward` artifact and install weights. `gs` must be
+    /// the `GS(B,B)` compression of the `[outputs, hidden]` projection
+    /// with exactly the manifest's static group count after padding.
+    pub fn load(
+        rt: &Runtime,
+        manifest: &Manifest,
+        w1: Vec<f32>,
+        b1: Vec<f32>,
+        gs: &UniformGs,
+        b2: Vec<f32>,
+    ) -> Result<SparseModel> {
+        let cfg = &manifest.mlp;
+        let (inputs, hidden, outputs, max_batch) = (
+            cfg.cfg("inputs")?,
+            cfg.cfg("hidden")?,
+            cfg.cfg("outputs")?,
+            cfg.cfg("batch")?,
+        );
+        ensure!(gs.nbands == outputs, "GS bands {} != outputs {outputs}", gs.nbands);
+        ensure!(gs.b == cfg.cfg("gs_b")?, "GS B mismatch");
+        ensure!(
+            gs.groups == cfg.cfg("gs_groups")?,
+            "GS group count {} != artifact static {}",
+            gs.groups,
+            cfg.cfg("gs_groups")?
+        );
+        let exe = rt
+            .load_hlo(&cfg.forward_path)
+            .context("load mlp_forward artifact")?;
+        Ok(SparseModel {
+            exe,
+            inputs,
+            hidden,
+            outputs,
+            max_batch,
+            w1: Tensor::f32(&[inputs, hidden], w1),
+            b1: Tensor::f32(&[hidden], b1),
+            gs_value: gs.value_tensor(),
+            gs_index: gs.index_tensor(),
+            b2: Tensor::f32(&[outputs], b2),
+        })
+    }
+
+    /// Run one padded batch; `rows` ≤ `max_batch` inputs of `inputs` f32.
+    pub fn infer_batch(&self, rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        ensure!(rows.len() <= self.max_batch, "batch too large");
+        let mut x = vec![0.0f32; self.max_batch * self.inputs];
+        for (i, row) in rows.iter().enumerate() {
+            ensure!(row.len() == self.inputs, "input width {} != {}", row.len(), self.inputs);
+            x[i * self.inputs..(i + 1) * self.inputs].copy_from_slice(row);
+        }
+        let out = self.exe.run(&[
+            Tensor::f32(&[self.max_batch, self.inputs], x),
+            self.w1.clone(),
+            self.b1.clone(),
+            self.gs_value.clone(),
+            self.gs_index.clone(),
+            self.b2.clone(),
+        ])?;
+        ensure!(out.len() == 1, "forward output arity");
+        let logits = out[0].as_f32()?;
+        Ok(rows
+            .iter()
+            .enumerate()
+            .map(|(i, _)| logits[i * self.outputs..(i + 1) * self.outputs].to_vec())
+            .collect())
+    }
+}
+
+/// Everything the serving loop needs, shareable across threads.
+pub struct Engine {
+    pub model: SparseModel,
+    pub metrics: Arc<Metrics>,
+}

@@ -1,0 +1,291 @@
+//! TCP JSON-lines front-end + worker pool.
+//!
+//! Protocol (one JSON object per line):
+//!   → `{"op":"infer","id":1,"input":[...f32 x inputs]}`
+//!   ← `{"id":1,"output":[...f32 x outputs]}` or `{"id":1,"error":"..."}`
+//!   → `{"op":"stats"}` ← `{"requests":N,"p50_ms":...,...}`
+//!   → `{"op":"ping"}`  ← `{"ok":true}`
+
+use super::batcher::{Batcher, InferRequest};
+use super::metrics::Metrics;
+use super::SparseModel;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Running server state; dropping does not stop it — call `stop()`.
+pub struct ServerHandle {
+    pub addr: std::net::SocketAddr,
+    batcher: Arc<Batcher>,
+    stop: Arc<AtomicBool>,
+    pub metrics: Arc<Metrics>,
+    workers: Vec<thread::JoinHandle<()>>,
+    acceptor: Option<thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Stop accepting, drain the queue, join workers.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Poke the acceptor loop out of `accept()`.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        self.batcher.shutdown();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Server geometry. `input_width`/`max_batch` must match the artifact
+/// (PJRT executables are not `Send`, so each worker thread builds its own
+/// [`SparseModel`] through the factory closure).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub bind: String,
+    pub workers: usize,
+    pub input_width: usize,
+    pub max_batch: usize,
+    pub window_ms: u64,
+}
+
+/// Start serving on `cfg.bind` with `cfg.workers` execution threads, each
+/// owning a model instance produced by `factory`.
+pub fn serve<F>(factory: F, cfg: ServeConfig) -> Result<ServerHandle>
+where
+    F: Fn() -> Result<SparseModel> + Send + Sync + 'static,
+{
+    let listener = TcpListener::bind(&cfg.bind).context("bind")?;
+    let addr = listener.local_addr()?;
+    let metrics = Arc::new(Metrics::new());
+    let batcher = Arc::new(Batcher::new(
+        cfg.max_batch,
+        Duration::from_millis(cfg.window_ms),
+        Arc::clone(&metrics),
+    ));
+    let stop = Arc::new(AtomicBool::new(false));
+    let factory = Arc::new(factory);
+
+    let workers: Vec<_> = (0..cfg.workers.max(1))
+        .map(|wi| {
+            let batcher = Arc::clone(&batcher);
+            let metrics = Arc::clone(&metrics);
+            let factory = Arc::clone(&factory);
+            thread::Builder::new()
+                .name(format!("gs-serve-worker-{wi}"))
+                .spawn(move || {
+                    let model = match factory() {
+                        Ok(m) => m,
+                        Err(e) => {
+                            eprintln!("worker {wi}: model load failed: {e:#}");
+                            metrics.errors.fetch_add(1, Ordering::Relaxed);
+                            return;
+                        }
+                    };
+                    while let Some(batch) = batcher.next_batch() {
+                        let inputs: Vec<Vec<f32>> =
+                            batch.iter().map(|r| r.input.clone()).collect();
+                        match model.infer_batch(&inputs) {
+                            Ok(outputs) => {
+                                for (req, out) in batch.into_iter().zip(outputs) {
+                                    metrics.record_latency(req.enqueued.elapsed().as_secs_f64());
+                                    let _ = req.tx.send((req.id, Ok(out)));
+                                }
+                            }
+                            Err(e) => {
+                                metrics.errors.fetch_add(1, Ordering::Relaxed);
+                                let msg = format!("{e:#}");
+                                for req in batch {
+                                    let _ = req.tx.send((req.id, Err(msg.clone())));
+                                }
+                            }
+                        }
+                    }
+                })
+                .expect("spawn worker")
+        })
+        .collect();
+
+    let acceptor = {
+        let batcher = Arc::clone(&batcher);
+        let metrics = Arc::clone(&metrics);
+        let stop2 = Arc::clone(&stop);
+        let inputs_width = cfg.input_width;
+        thread::Builder::new()
+            .name("gs-serve-acceptor".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(conn) = conn else { continue };
+                    let _ = conn.set_nodelay(true); // JSON-lines RPC: Nagle hurts
+                    let batcher = Arc::clone(&batcher);
+                    let metrics = Arc::clone(&metrics);
+                    thread::spawn(move || {
+                        let _ = handle_connection(conn, &batcher, &metrics, inputs_width);
+                    });
+                }
+            })
+            .expect("spawn acceptor")
+    };
+
+    Ok(ServerHandle {
+        addr,
+        batcher,
+        stop,
+        metrics,
+        workers,
+        acceptor: Some(acceptor),
+    })
+}
+
+fn handle_connection(
+    conn: TcpStream,
+    batcher: &Batcher,
+    metrics: &Metrics,
+    inputs_width: usize,
+) -> Result<()> {
+    let mut writer = conn.try_clone()?;
+    let reader = BufReader::new(conn);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match Json::parse(&line) {
+            Err(e) => Json::obj(vec![("error", Json::Str(format!("bad json: {e}")))]),
+            Ok(msg) => match msg.get("op").and_then(Json::as_str) {
+                Some("ping") => Json::obj(vec![("ok", Json::Bool(true))]),
+                Some("stats") => stats_json(metrics),
+                Some("infer") => {
+                    let id = msg.get("id").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+                    match msg.get("input").and_then(Json::to_f32_vec) {
+                        Some(input) if input.len() == inputs_width => {
+                            let (tx, rx) = channel();
+                            batcher.submit(InferRequest {
+                                id,
+                                input,
+                                enqueued: Instant::now(),
+                                tx,
+                            });
+                            match rx.recv() {
+                                Ok((id, Ok(out))) => Json::obj(vec![
+                                    ("id", Json::Num(id as f64)),
+                                    ("output", Json::nums_f32(&out)),
+                                ]),
+                                Ok((id, Err(e))) => Json::obj(vec![
+                                    ("id", Json::Num(id as f64)),
+                                    ("error", Json::Str(e)),
+                                ]),
+                                Err(_) => Json::obj(vec![(
+                                    "error",
+                                    Json::Str("worker dropped".into()),
+                                )]),
+                            }
+                        }
+                        _ => Json::obj(vec![
+                            ("id", Json::Num(id as f64)),
+                            (
+                                "error",
+                                Json::Str(format!("input must be {inputs_width} floats")),
+                            ),
+                        ]),
+                    }
+                }
+                _ => Json::obj(vec![("error", Json::Str("unknown op".into()))]),
+            },
+        };
+        writer.write_all(reply.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    Ok(())
+}
+
+fn stats_json(metrics: &Metrics) -> Json {
+    let mut fields = vec![
+        (
+            "requests",
+            Json::Num(metrics.requests.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "responses",
+            Json::Num(metrics.responses.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "batches",
+            Json::Num(metrics.batches.load(Ordering::Relaxed) as f64),
+        ),
+        ("mean_batch", Json::Num(metrics.mean_batch_size())),
+        (
+            "errors",
+            Json::Num(metrics.errors.load(Ordering::Relaxed) as f64),
+        ),
+    ];
+    if let Some(s) = metrics.latency_summary() {
+        fields.push(("p50_ms", Json::Num(s.p50 * 1e3)));
+        fields.push(("p95_ms", Json::Num(s.p95 * 1e3)));
+        fields.push(("mean_ms", Json::Num(s.mean * 1e3)));
+    }
+    Json::obj(fields)
+}
+
+/// Blocking JSON-lines client (tests, examples, bench harness).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    next_id: u64,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+            next_id: 1,
+        })
+    }
+
+    fn roundtrip(&mut self, msg: Json) -> Result<Json> {
+        self.writer.write_all(msg.to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(Json::parse(&line)?)
+    }
+
+    pub fn ping(&mut self) -> Result<bool> {
+        let r = self.roundtrip(Json::obj(vec![("op", "ping".into())]))?;
+        Ok(r.get("ok").and_then(Json::as_bool).unwrap_or(false))
+    }
+
+    pub fn infer(&mut self, input: &[f32]) -> Result<Vec<f32>> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let r = self.roundtrip(Json::obj(vec![
+            ("op", "infer".into()),
+            ("id", Json::Num(id as f64)),
+            ("input", Json::nums_f32(input)),
+        ]))?;
+        if let Some(err) = r.get("error").and_then(Json::as_str) {
+            anyhow::bail!("server error: {err}");
+        }
+        r.get("output")
+            .and_then(Json::to_f32_vec)
+            .ok_or_else(|| anyhow::anyhow!("malformed response"))
+    }
+
+    pub fn stats(&mut self) -> Result<Json> {
+        self.roundtrip(Json::obj(vec![("op", "stats".into())]))
+    }
+}

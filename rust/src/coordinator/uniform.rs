@@ -1,0 +1,184 @@
+//! Uniform (padded) GS layout — the JAX-side representation.
+//!
+//! The Pallas kernel takes `value`/`index` as dense `[nbands, g, B]`
+//! tensors with the same group count `g` in every band; a ragged
+//! [`GsFormat`] is padded with zero-valued groups whose indices are the
+//! identity residues `0..B` (inert: they gather arbitrary activations and
+//! multiply them by zero — proven inert in `python/tests/test_kernel.py`).
+
+use crate::pruning::prune;
+use crate::runtime::Tensor;
+use crate::sparse::dense::Dense;
+use crate::sparse::format::GsFormat;
+use crate::sparse::pattern::Pattern;
+use anyhow::{ensure, Result};
+
+/// Padded GS arrays ready to ship to the artifact.
+#[derive(Clone, Debug)]
+pub struct UniformGs {
+    pub nbands: usize,
+    pub groups: usize,
+    pub b: usize,
+    pub k: usize,
+    /// `[nbands * groups * b]` values, band-major.
+    pub value: Vec<f32>,
+    /// Matching column indices (i32 for the artifact).
+    pub index: Vec<i32>,
+}
+
+impl UniformGs {
+    /// Pad `gs` to exactly `groups` groups per band. Fails if any band has
+    /// more (the caller pruned at a sparsity that does not fit the
+    /// artifact's static shape).
+    pub fn from_format(gs: &GsFormat, groups: usize) -> Result<UniformGs> {
+        ensure!(gs.rowmap.is_none(), "scatter patterns need a rowmap-aware artifact");
+        let nbands = gs.nbands();
+        let b = gs.b;
+        let mut value = vec![0.0f32; nbands * groups * b];
+        let mut index = vec![0i32; nbands * groups * b];
+        // Inert padding: identity residues.
+        for slot in index.chunks_mut(b) {
+            for (j, v) in slot.iter_mut().enumerate() {
+                *v = j as i32;
+            }
+        }
+        for band in 0..nbands {
+            let lo = gs.indptr[band] as usize;
+            let hi = gs.indptr[band + 1] as usize;
+            ensure!(
+                hi - lo <= groups,
+                "band {band} has {} groups, artifact holds {groups}",
+                hi - lo
+            );
+            for (gi, g) in (lo..hi).enumerate() {
+                let dst = (band * groups + gi) * b;
+                value[dst..dst + b].copy_from_slice(&gs.value[g * b..(g + 1) * b]);
+                for j in 0..b {
+                    index[dst + j] = gs.index[g * b + j] as i32;
+                }
+            }
+        }
+        Ok(UniformGs { nbands, groups, b, k: gs.k, value, index })
+    }
+
+    /// Like [`from_format`], but when a band exceeds `groups` its
+    /// smallest-|value| groups are dropped (the serving-side capacity
+    /// clamp: the artifact's static shape wins over the pruner's
+    /// round-up). Returns the layout and the number of dropped groups.
+    pub fn from_format_truncating(gs: &GsFormat, groups: usize) -> Result<(UniformGs, usize)> {
+        ensure!(gs.rowmap.is_none(), "scatter patterns need a rowmap-aware artifact");
+        let b = gs.b;
+        let mut clamped = gs.clone();
+        let mut dropped = 0;
+        let mut value = Vec::new();
+        let mut index = Vec::new();
+        let mut indptr = vec![0u32];
+        for band in 0..gs.nbands() {
+            let lo = gs.indptr[band] as usize;
+            let hi = gs.indptr[band + 1] as usize;
+            let mut order: Vec<usize> = (lo..hi).collect();
+            // Keep the largest-L1 groups.
+            order.sort_by(|&ga, &gb| {
+                let la: f32 = gs.value[ga * b..(ga + 1) * b].iter().map(|v| v.abs()).sum();
+                let lb: f32 = gs.value[gb * b..(gb + 1) * b].iter().map(|v| v.abs()).sum();
+                lb.partial_cmp(&la).unwrap()
+            });
+            dropped += order.len().saturating_sub(groups);
+            order.truncate(groups);
+            order.sort_unstable(); // keep original order among survivors
+            for g in order {
+                value.extend_from_slice(&gs.value[g * b..(g + 1) * b]);
+                index.extend_from_slice(&gs.index[g * b..(g + 1) * b]);
+            }
+            indptr.push((value.len() / b) as u32);
+        }
+        clamped.value = value;
+        clamped.index = index;
+        clamped.indptr = indptr;
+        let uniform = UniformGs::from_format(&clamped, groups)?;
+        Ok((uniform, dropped))
+    }
+
+    /// One-call deployment path: prune `weights` under `GS(B,B)` to the
+    /// sparsity the artifact's static capacity implies, compress, and
+    /// clamp to `groups` groups per band.
+    pub fn compress_for(weights: &Dense, b: usize, groups: usize) -> Result<UniformGs> {
+        let pattern = Pattern::Gs { b, k: b };
+        let sparsity = (1.0 - (groups * b) as f64 / weights.cols as f64).max(0.0);
+        let mask = prune(weights, pattern, sparsity)?;
+        let mut pruned = weights.clone();
+        pruned.apply_mask(&mask);
+        let gs = GsFormat::from_dense(&pruned, pattern)?;
+        let (uniform, _dropped) = UniformGs::from_format_truncating(&gs, groups)?;
+        Ok(uniform)
+    }
+
+    pub fn value_tensor(&self) -> Tensor {
+        Tensor::f32(&[self.nbands, self.groups, self.b], self.value.clone())
+    }
+
+    pub fn index_tensor(&self) -> Tensor {
+        Tensor::i32(
+            &[self.nbands, self.groups, self.b],
+            self.index.clone(),
+        )
+    }
+
+    /// Dense reconstruction (rows = nbands·B/k), for oracle checks.
+    pub fn to_dense(&self, cols: usize) -> Vec<Vec<f32>> {
+        let slots = self.b / self.k;
+        let rows = self.nbands * slots;
+        let mut out = vec![vec![0.0f32; cols]; rows];
+        for band in 0..self.nbands {
+            for g in 0..self.groups {
+                for j in 0..self.b {
+                    let at = (band * self.groups + g) * self.b + j;
+                    let row = band * slots + j / self.k;
+                    out[row][self.index[at] as usize] += self.value[at];
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::prune;
+    use crate::sparse::dense::Dense;
+    use crate::sparse::pattern::Pattern;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn padding_is_inert_and_roundtrips() {
+        let mut rng = Prng::new(1);
+        let mut w = Dense::random(8, 32, 1.0, &mut rng);
+        let p = Pattern::Gs { b: 8, k: 8 };
+        let mask = prune(&w, p, 0.5).unwrap();
+        w.apply_mask(&mask);
+        let gs = GsFormat::from_dense(&w, p).unwrap();
+        let max_groups = (0..gs.nbands())
+            .map(|b| (gs.indptr[b + 1] - gs.indptr[b]) as usize)
+            .max()
+            .unwrap();
+        let u = UniformGs::from_format(&gs, max_groups + 2).unwrap();
+        let dense = u.to_dense(32);
+        for r in 0..8 {
+            for c in 0..32 {
+                assert_eq!(dense[r][c], w.at(r, c), "({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_insufficient_groups() {
+        let mut rng = Prng::new(2);
+        let mut w = Dense::random(8, 32, 1.0, &mut rng);
+        let p = Pattern::Gs { b: 8, k: 8 };
+        let mask = prune(&w, p, 0.25).unwrap();
+        w.apply_mask(&mask);
+        let gs = GsFormat::from_dense(&w, p).unwrap();
+        assert!(UniformGs::from_format(&gs, 1).is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! The paper's sparse kernels, in two guises.
+//!
+//! * [`native`] — plain f32 implementations (Algorithms 1–2 and the
+//!   sparse convolution) used as numerics oracles and by the training
+//!   orchestrator's CPU paths.
+//! * [`spmv_sim`] / [`conv_sim`] — the same kernels executed on the
+//!   [`crate::sim::Machine`]: they compute identical numerics while
+//!   emitting micro-ops, so one run yields both the result vector and the
+//!   cycle report. A cross-check test asserts sim == native == dense
+//!   numerics for every pattern.
+
+pub mod conv_sim;
+pub mod native;
+pub mod spmv_sim;
+
+pub use conv_sim::{conv_block_sim, conv_dense_sim, conv_gs_sim, ConvOutput};
+pub use spmv_sim::{spmv_block_sim, spmv_csr_sim, spmv_dense_sim, spmv_gs_sim, SpmvOutput};

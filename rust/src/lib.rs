@@ -1,0 +1,54 @@
+//! # gs-sparse — Load-balanced Gather-Scatter Patterns for Sparse DNNs
+//!
+//! A full-stack reproduction of *"Load-balanced Gather-scatter Patterns for
+//! Sparse Deep Neural Networks"* (Sun et al., 2021).
+//!
+//! The paper observes that fine-grained ("irregular") weight sparsity keeps
+//! model accuracy but is slow on real hardware because the indirect
+//! activation accesses it induces collide in banked scratchpad memories
+//! (TCMs), while coarse block sparsity is fast but loses accuracy. The fix
+//! is a family of *gather-scatter (GS) patterns*: fine-grained sparsity
+//! constrained so that every group of `B` non-zero weights touches `B`
+//! distinct TCM sub-banks (column indices mod `B` are a permutation), so a
+//! gather/scatter engine fetches all matching activations in one
+//! conflict-free access.
+//!
+//! This crate provides, in layers (see `DESIGN.md`):
+//!
+//! * [`sparse`] — the GS pattern family `GS(B,k)` (Definitions 4.1/4.2),
+//!   the compact value/index/indptr(/rowmap) format (Fig. 3), baseline
+//!   formats (CSR, block-sparse/BSR), and conversions.
+//! * [`pruning`] — load-balanced magnitude pruning (Algorithm 3 and its
+//!   vertical/hybrid/scatter generalizations) plus irregular and block
+//!   baselines.
+//! * [`sim`] — a cycle-level simulator of the paper's evaluation platform:
+//!   banked TCM + gather/scatter engine + L1/L2/DRAM hierarchy + a SIMD
+//!   issue model (substitute for the paper's Gem5 setup, §X).
+//! * [`kernels`] — the paper's sparse kernels (Algorithms 1–2 and the
+//!   kernel-shape-aware sparse convolution) in two guises: native f32
+//!   (numerics oracle) and instrumented programs on [`sim`] (cycle counts).
+//! * [`runtime`] — a PJRT CPU client that loads the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) and executes them; Python never runs
+//!   at request time.
+//! * [`train`] — the prune→retrain orchestrator reproducing the accuracy
+//!   experiments (Figs. 1/5, Table I) on micro models.
+//! * [`coordinator`] — a serving layer (router, dynamic batcher, worker
+//!   pool, metrics) exposing sparse-model inference over TCP.
+//! * [`util`] / [`testing`] / [`bench`] — in-tree substrates (PRNG, JSON,
+//!   CLI, thread pool, stats, property testing, bench harness). The build
+//!   environment is offline, so these are implemented from scratch rather
+//!   than pulled from crates.io.
+
+pub mod bench;
+pub mod coordinator;
+pub mod kernels;
+pub mod pruning;
+pub mod runtime;
+pub mod sim;
+pub mod sparse;
+pub mod testing;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result type (anyhow-backed).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,202 @@
+//! `gs-sparse` — leader binary: serve, train, simulate, inspect.
+//!
+//! ```text
+//! gs-sparse serve    [--bind 127.0.0.1:7070] [--artifacts DIR] [--workers 1]
+//! gs-sparse train    --model gnmt|resnet|jasper [--pattern GS|Block|Irregular]
+//!                    [--b 8] [--k 8] [--sparsity 0.8] [--seed 42]
+//! gs-sparse simulate [--rows 1024] [--cols 1024] [--banks 16] [--sparsity 0.9]
+//! gs-sparse info     [--artifacts DIR]
+//! ```
+
+use anyhow::{anyhow, Result};
+use gs_sparse::coordinator::{serve, server::ServeConfig, SparseModel, UniformGs};
+use gs_sparse::pruning::prune;
+use gs_sparse::runtime::{Manifest, Runtime};
+use gs_sparse::sparse::{Dense, GsFormat, Pattern};
+use gs_sparse::train::{experiments::Schedule, run_quality};
+use gs_sparse::util::{Args, Prng};
+use std::sync::Arc;
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    match args.command.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("train") => cmd_train(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            eprintln!("usage: gs-sparse <serve|train|simulate|info> [options]");
+            Ok(())
+        }
+    }
+}
+
+fn parse_pattern(args: &Args) -> Result<Option<Pattern>> {
+    let b = args.usize("b", 8);
+    let k = args.usize("k", b);
+    Ok(match args.get("pattern", "GS") {
+        "GS" | "gs" => Some(Pattern::Gs { b, k }),
+        "GSscatter" | "scatter" => Some(Pattern::GsScatter { b, k }),
+        "Block" | "block" => Some(Pattern::Block { b, k }),
+        "Irregular" | "irregular" => Some(Pattern::Irregular),
+        "Dense" | "dense" => None,
+        other => return Err(anyhow!("unknown pattern {other}")),
+    })
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = args.get("artifacts", "artifacts").to_string();
+    let manifest = Arc::new(Manifest::load(&dir)?);
+    let cfg = manifest.mlp.clone();
+    let (inputs, hidden, outputs) = (cfg.cfg("inputs")?, cfg.cfg("hidden")?, cfg.cfg("outputs")?);
+    let (b, groups, max_batch) = (cfg.cfg("gs_b")?, cfg.cfg("gs_groups")?, cfg.cfg("batch")?);
+    let seed = args.usize("seed", 42) as u64;
+    let workers = args.usize("workers", 1);
+    let bind = args.get("bind", "127.0.0.1:7070").to_string();
+
+    let m2 = Arc::clone(&manifest);
+    let factory = move || {
+        let rt = Runtime::cpu()?;
+        let mut rng = Prng::new(seed);
+        let proj = Dense::random(outputs, hidden, 0.3, &mut rng);
+        let uniform = UniformGs::compress_for(&proj, b, groups)?;
+        let mut wrng = Prng::new(seed ^ 1);
+        SparseModel::load(
+            &rt,
+            &m2,
+            wrng.normal_vec(inputs * hidden, 0.1),
+            vec![0.0; hidden],
+            &uniform,
+            wrng.normal_vec(outputs, 0.1),
+        )
+    };
+    let handle = serve(
+        factory,
+        ServeConfig {
+            bind,
+            workers,
+            input_width: inputs,
+            max_batch,
+            window_ms: args.usize("window-ms", 2) as u64,
+        },
+    )?;
+    println!(
+        "serving GS-sparse MLP on {} ({workers} workers, batch {max_batch}, GS({b},{b}) @ {:.0}% sparse output layer)",
+        handle.addr,
+        (1.0 - (groups * b) as f64 / hidden as f64) * 100.0
+    );
+    println!("protocol: JSON lines — {{\"op\":\"infer\",\"id\":1,\"input\":[...{inputs} floats]}}");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let dir = args.get("artifacts", "artifacts").to_string();
+    let manifest = Manifest::load(&dir)?;
+    let model = args.get("model", "resnet");
+    let mm = manifest
+        .models
+        .get(model)
+        .ok_or_else(|| anyhow!("unknown model {model}"))?;
+    let pattern = parse_pattern(args)?;
+    let sparsity = args.f64("sparsity", 0.8);
+    let rt = Runtime::cpu()?;
+    let r = run_quality(
+        &rt,
+        mm,
+        pattern,
+        sparsity,
+        Schedule::default(),
+        args.usize("seed", 42) as u64,
+    )?;
+    println!(
+        "{} {} target={:.0}% achieved={:.1}% metric={:.4} (dense {:.4}) loss={:.4}",
+        r.model,
+        r.pattern,
+        r.target_sparsity * 100.0,
+        r.achieved_sparsity * 100.0,
+        r.metric,
+        r.dense_metric,
+        r.loss
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    use gs_sparse::bench::Table;
+    use gs_sparse::kernels::{spmv_block_sim, spmv_csr_sim, spmv_dense_sim, spmv_gs_sim};
+    use gs_sparse::sim::MachineConfig;
+    use gs_sparse::sparse::{BlockSparse, Csr};
+
+    let rows = args.usize("rows", 1024);
+    let cols = args.usize("cols", 1024);
+    let b = args.usize("banks", 16);
+    let sparsity = args.f64("sparsity", 0.9);
+    let mut rng = Prng::new(args.usize("seed", 42) as u64);
+    let w = Dense::random(rows, cols, 1.0, &mut rng);
+    let x = rng.normal_vec(cols, 1.0);
+    let cfg = MachineConfig::with_subbanks(b);
+    let dense = spmv_dense_sim(&w, &x, cfg);
+    let mut table = Table::new(
+        &format!("simulate spMV {rows}x{cols} @ {:.0}%, B={b}", sparsity * 100.0),
+        &["pattern", "cycles", "speedup", "bottleneck"],
+    );
+    table.row(&[
+        "Dense".into(),
+        dense.report.cycles.to_string(),
+        "1.00".into(),
+        dense.report.bottleneck().into(),
+    ]);
+    let mut run = |name: &str, p: Pattern| -> Result<()> {
+        let mask = prune(&w, p, sparsity)?;
+        let mut pw = w.clone();
+        pw.apply_mask(&mask);
+        let out = match p {
+            Pattern::Block { .. } => spmv_block_sim(&BlockSparse::from_dense(&pw, p)?, &x, cfg),
+            Pattern::Irregular => spmv_csr_sim(&Csr::from_dense(&pw), &x, cfg, false),
+            _ => spmv_gs_sim(&GsFormat::from_dense(&pw, p)?, &x, cfg),
+        };
+        table.row(&[
+            name.into(),
+            out.report.cycles.to_string(),
+            format!("{:.2}", dense.report.cycles as f64 / out.report.cycles as f64),
+            out.report.bottleneck().into(),
+        ]);
+        Ok(())
+    };
+    run("Block-h", Pattern::Block { b, k: b })?;
+    run("Block-v", Pattern::Block { b, k: 1 })?;
+    run("GS-h", Pattern::Gs { b, k: b })?;
+    run("GS-v", Pattern::Gs { b, k: 1 })?;
+    run("CSR", Pattern::Irregular)?;
+    table.print();
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.get("artifacts", "artifacts").to_string();
+    let manifest = Manifest::load(&dir)?;
+    println!("artifacts: {}", manifest.dir.display());
+    for (name, m) in &manifest.models {
+        let total: usize = m.params.iter().map(|p| p.shape.iter().product::<usize>()).sum();
+        let prunable: usize = m
+            .params
+            .iter()
+            .filter(|p| p.prunable)
+            .map(|p| p.shape.iter().product::<usize>())
+            .sum();
+        println!(
+            "  {name}: {total} params ({} tensors, {prunable} prunable weights), lr={}",
+            m.params.len(),
+            m.lr
+        );
+    }
+    println!(
+        "  mlp_forward: Pallas GS({},{}) output layer, batch {}",
+        manifest.mlp.cfg("gs_b")?,
+        manifest.mlp.cfg("gs_b")?,
+        manifest.mlp.cfg("batch")?
+    );
+    Ok(())
+}

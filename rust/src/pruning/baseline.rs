@@ -1,0 +1,131 @@
+//! Baseline pruners: irregular magnitude and Block(B,k).
+
+use crate::sparse::dense::{Dense, Mask};
+use crate::util::stats::percentile_f32;
+
+/// Irregular magnitude pruning: keep the largest `1-sparsity` fraction of
+/// |w| across the whole matrix (the paper's accuracy upper bound).
+pub fn prune_irregular(w: &Dense, sparsity: f64) -> Mask {
+    let keep = ((w.data.len() as f64) * (1.0 - sparsity)).round() as usize;
+    let mut mask = Mask::all_false(w.rows, w.cols);
+    if keep == 0 {
+        return mask;
+    }
+    // O(n) selection instead of a full sort (EXPERIMENTS.md §Perf): find
+    // the keep-th largest (|w|, index-desc) and mark its left partition.
+    let mut order: Vec<usize> = (0..w.data.len()).collect();
+    if keep < order.len() {
+        order.select_nth_unstable_by(keep - 1, |&a, &b| {
+            w.data[b]
+                .abs()
+                .partial_cmp(&w.data[a].abs())
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+    }
+    for &i in order.iter().take(keep) {
+        mask.data[i] = true;
+    }
+    mask
+}
+
+/// The magnitude threshold "as if the pattern is irregular" (Algorithm 3
+/// line 2): the `sparsity`-percentile of |w|.
+pub fn irregular_threshold(w: &Dense, sparsity: f64) -> f32 {
+    let abs: Vec<f32> = w.data.iter().map(|v| v.abs()).collect();
+    percentile_f32(&abs, sparsity)
+}
+
+/// Block(B,k) pruning: score each aligned `B/k × k` block by its L1 norm
+/// and keep the top `1-sparsity` fraction of blocks.
+pub fn prune_block(w: &Dense, b: usize, k: usize, sparsity: f64) -> Mask {
+    let br = b / k;
+    assert!(
+        w.rows % br == 0 && w.cols % k == 0,
+        "shape {}x{} not divisible by block {br}x{k}",
+        w.rows,
+        w.cols
+    );
+    let bands = w.rows / br;
+    let bcols = w.cols / k;
+    let mut scores: Vec<(f32, usize)> = Vec::with_capacity(bands * bcols);
+    for band in 0..bands {
+        for bc in 0..bcols {
+            let mut s = 0.0f32;
+            for r in band * br..(band + 1) * br {
+                for c in bc * k..(bc + 1) * k {
+                    s += w.at(r, c).abs();
+                }
+            }
+            scores.push((s, band * bcols + bc));
+        }
+    }
+    let keep = ((scores.len() as f64) * (1.0 - sparsity)).round() as usize;
+    scores.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+    let mut mask = Mask::all_false(w.rows, w.cols);
+    for &(_, id) in scores.iter().take(keep) {
+        let band = id / bcols;
+        let bc = id % bcols;
+        for r in band * br..(band + 1) * br {
+            for c in bc * k..(bc + 1) * k {
+                mask.set(r, c, true);
+            }
+        }
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::pattern::Pattern;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn irregular_keeps_largest() {
+        let w = Dense::from_vec(1, 4, vec![0.1, -5.0, 0.2, 3.0]);
+        let m = prune_irregular(&w, 0.5);
+        assert!(!m.at(0, 0) && m.at(0, 1) && !m.at(0, 2) && m.at(0, 3));
+    }
+
+    #[test]
+    fn irregular_exact_count() {
+        let mut rng = Prng::new(1);
+        let w = Dense::random(10, 10, 1.0, &mut rng);
+        let m = prune_irregular(&w, 0.9);
+        assert_eq!(m.kept(), 10);
+    }
+
+    #[test]
+    fn threshold_is_percentile() {
+        let w = Dense::from_vec(1, 10, (1..=10).map(|i| i as f32).collect());
+        let t = irregular_threshold(&w, 0.5);
+        assert!((t - 5.5).abs() < 1e-5);
+    }
+
+    #[test]
+    fn block_mask_validates_and_prefers_heavy_blocks() {
+        let mut w = Dense::zeros(4, 8);
+        // Heavy block at rows 0..4 cols 0..1 for Block(4,1) (4x1 blocks).
+        for r in 0..4 {
+            w.set(r, 0, 10.0);
+            w.set(r, 3, 0.1);
+            w.set(r, 5, 0.2);
+        }
+        let m = prune_block(&w, 4, 1, 0.875); // keep 1 of 8 blocks
+        Pattern::Block { b: 4, k: 1 }.validate(&m).unwrap();
+        for r in 0..4 {
+            assert!(m.at(r, 0));
+        }
+        assert_eq!(m.kept(), 4);
+    }
+
+    #[test]
+    fn block_horizontal_shape() {
+        let mut rng = Prng::new(3);
+        let w = Dense::random(8, 32, 1.0, &mut rng);
+        let m = prune_block(&w, 8, 8, 0.75);
+        Pattern::Block { b: 8, k: 8 }.validate(&m).unwrap();
+        assert_eq!(m.kept(), 8 * 8); // 32 blocks, keep 8, each 8 wide
+    }
+}

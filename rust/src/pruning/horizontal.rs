@@ -1,0 +1,112 @@
+//! Algorithm 3: horizontal GS pattern selection.
+//!
+//! Per row: bucket entries by column residue mod B, sort each bucket by
+//! descending |w|, then repeatedly pop the top of every bucket to form one
+//! conflict-free group, until the row's keep budget (derived from the
+//! irregular threshold, rounded to whole groups) is met.
+
+use super::baseline::irregular_threshold;
+use crate::sparse::dense::{Dense, Mask};
+
+/// Prune to the GS horizontal pattern `GS(B,B)`.
+pub fn prune_horizontal(w: &Dense, b: usize, sparsity: f64) -> Mask {
+    let threshold = irregular_threshold(w, sparsity); // Alg. 3 line 2
+    let mut mask = Mask::all_false(w.rows, w.cols);
+    for row in 0..w.rows {
+        // Lines 5-8: bucket (value, col) by col mod B.
+        let mut buckets: Vec<Vec<(f32, usize)>> = vec![Vec::new(); b];
+        for col in 0..w.cols {
+            let v = w.at(row, col);
+            buckets[col % b].push((v, col));
+        }
+        // Lines 9-11: sort each bucket by descending magnitude.
+        for bucket in &mut buckets {
+            bucket.sort_by(|a, b| b.0.abs().partial_cmp(&a.0.abs()).unwrap());
+        }
+        // Line 12: per-row budget from the global threshold…
+        let num_items = w.row(row).iter().filter(|v| v.abs() > threshold).count();
+        // …rounded *up* to whole groups as in the Alg. 3 loop structure
+        // (`num_items -= B` per pass), capped by bucket capacity.
+        let groups = num_items.div_ceil(b).min(w.cols / b);
+        // Lines 13-18: pop the top entry of each bucket per group.
+        for g in 0..groups {
+            for bucket in buckets.iter() {
+                let (_, col) = bucket[g];
+                mask.set(row, col, true);
+            }
+        }
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::pattern::Pattern;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn produces_valid_gs_horizontal() {
+        let mut rng = Prng::new(1);
+        let w = Dense::random(16, 64, 1.0, &mut rng);
+        let m = prune_horizontal(&w, 8, 0.8);
+        Pattern::Gs { b: 8, k: 8 }.validate(&m).unwrap();
+    }
+
+    #[test]
+    fn keeps_top_entry_per_bucket() {
+        // One dominant weight per residue class must survive.
+        let mut w = Dense::zeros(1, 16);
+        for res in 0..4 {
+            w.set(0, 4 + res, 100.0); // columns 4..8 cover residues 0..4
+        }
+        for c in 0..16 {
+            if w.at(0, c) == 0.0 {
+                w.set(0, c, 0.01);
+            }
+        }
+        let m = prune_horizontal(&w, 4, 0.75);
+        for res in 0..4 {
+            assert!(m.at(0, 4 + res), "dominant residue-{res} entry pruned");
+        }
+    }
+
+    #[test]
+    fn sparsity_close_to_target() {
+        let mut rng = Prng::new(2);
+        let w = Dense::random(32, 128, 1.0, &mut rng);
+        for &s in &[0.5, 0.8, 0.9] {
+            let m = prune_horizontal(&w, 8, s);
+            assert!(
+                (m.sparsity() - s).abs() < 0.06,
+                "target {s}, got {}",
+                m.sparsity()
+            );
+        }
+    }
+
+    #[test]
+    fn rows_are_independent() {
+        // A row of tiny weights next to a row of huge weights: the huge row
+        // keeps more (its per-row count from the global threshold is higher).
+        let mut w = Dense::zeros(2, 16);
+        for c in 0..16 {
+            w.set(0, c, 0.001 * (c + 1) as f32);
+            w.set(1, c, 10.0 + c as f32);
+        }
+        let m = prune_horizontal(&w, 4, 0.5);
+        let kept0 = (0..16).filter(|&c| m.at(0, c)).count();
+        let kept1 = (0..16).filter(|&c| m.at(1, c)).count();
+        assert!(kept1 > kept0);
+        Pattern::Gs { b: 4, k: 4 }.validate(&m).unwrap();
+    }
+
+    #[test]
+    fn full_density_cap() {
+        let mut rng = Prng::new(3);
+        let w = Dense::random(4, 16, 1.0, &mut rng);
+        let m = prune_horizontal(&w, 4, 0.0);
+        // Every group slot used: whole matrix kept.
+        assert_eq!(m.kept(), 64);
+    }
+}

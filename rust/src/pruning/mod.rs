@@ -1,0 +1,140 @@
+//! Pruning methodology (paper §VI).
+//!
+//! Given dense weights and a target sparsity, produce a keep-mask that
+//! (a) satisfies the requested [`Pattern`] and (b) keeps the
+//! largest-magnitude weights the pattern allows:
+//!
+//! * [`baseline`] — irregular magnitude pruning (the accuracy upper bound)
+//!   and `Block(B,k)` pruning (the structured baseline).
+//! * [`horizontal`] — Algorithm 3: per-row residue buckets, round-robin
+//!   top-magnitude picks.
+//! * [`hybrid`] — vertical (`k=1`) and hybrid (`1<k<B`) selection: greedy
+//!   max-magnitude under per-row and per-residue quotas, with an
+//!   augmenting-path fix-up so the quota polytope is always met exactly.
+//! * [`scatter`] — rows sorted by above-threshold counts, banded as
+//!   neighbors, then hybrid selection per band.
+
+pub mod baseline;
+pub mod horizontal;
+pub mod hybrid;
+pub mod scatter;
+
+use crate::sparse::dense::{Dense, Mask};
+use crate::sparse::pattern::Pattern;
+use anyhow::{Context, Result};
+
+/// Prune `weights` to `sparsity` (fraction of zeros, in `[0,1)`) under
+/// `pattern`. The returned mask always validates against `pattern`; the
+/// achieved sparsity matches the target up to the pattern's rounding
+/// granularity (`B` per band for GS, one block for Block).
+pub fn prune(weights: &Dense, pattern: Pattern, sparsity: f64) -> Result<Mask> {
+    assert!((0.0..1.0).contains(&sparsity), "sparsity in [0,1)");
+    pattern.check_params()?;
+    let mask = match pattern {
+        Pattern::Irregular => baseline::prune_irregular(weights, sparsity),
+        Pattern::Block { b, k } => baseline::prune_block(weights, b, k, sparsity),
+        Pattern::Gs { b, k } if k == b => horizontal::prune_horizontal(weights, b, sparsity),
+        Pattern::Gs { b, k } => hybrid::prune_hybrid(weights, b, k, sparsity),
+        Pattern::GsScatter { b, k } => scatter::prune_scatter(weights, b, k, sparsity),
+    };
+    pattern
+        .validate(&mask)
+        .with_context(|| format!("pruner produced an invalid {} mask (bug)", pattern.name()))?;
+    Ok(mask)
+}
+
+/// Keep-count for a row/band of `len` weights at `sparsity`, rounded to a
+/// multiple of `b` (a gather group is all-or-nothing). Uses
+/// round-to-nearest so the achieved sparsity is unbiased across bands.
+pub fn keep_count(len: usize, b: usize, sparsity: f64) -> usize {
+    let want = (len as f64 * (1.0 - sparsity)).round() as usize;
+    let rounded = (want as f64 / b as f64).round() as usize * b;
+    rounded.min(len / b * b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn keep_count_rounds_to_group() {
+        assert_eq!(keep_count(1024, 8, 0.9), 104); // 102.4 → 104 (13 groups)
+        assert_eq!(keep_count(16, 4, 0.5), 8);
+        assert_eq!(keep_count(16, 4, 0.95), 0); // 0.8 → round 1 → group 0
+        assert_eq!(keep_count(10, 4, 0.0), 8); // capped at full groups
+    }
+
+    /// End-to-end: every pattern produces a valid mask at target sparsity.
+    #[test]
+    fn all_patterns_validate_and_hit_sparsity() {
+        let mut rng = Prng::new(42);
+        let w = Dense::random(32, 64, 1.0, &mut rng);
+        let patterns = [
+            Pattern::Irregular,
+            Pattern::Block { b: 8, k: 8 },
+            Pattern::Block { b: 8, k: 1 },
+            Pattern::Gs { b: 8, k: 8 },
+            Pattern::Gs { b: 8, k: 1 },
+            Pattern::Gs { b: 8, k: 2 },
+            Pattern::Gs { b: 8, k: 4 },
+            Pattern::GsScatter { b: 8, k: 1 },
+            Pattern::GsScatter { b: 8, k: 2 },
+        ];
+        for p in patterns {
+            let mask = prune(&w, p, 0.75).unwrap();
+            let got = mask.sparsity();
+            assert!(
+                (got - 0.75).abs() < 0.08,
+                "{}: sparsity {got} too far from 0.75",
+                p.name()
+            );
+        }
+    }
+
+    /// Higher sparsity never keeps more weights.
+    #[test]
+    fn sparsity_monotone() {
+        let mut rng = Prng::new(7);
+        let w = Dense::random(16, 64, 1.0, &mut rng);
+        for p in [
+            Pattern::Irregular,
+            Pattern::Gs { b: 8, k: 8 },
+            Pattern::Gs { b: 8, k: 1 },
+            Pattern::Block { b: 8, k: 8 },
+        ] {
+            let k50 = prune(&w, p, 0.5).unwrap().kept();
+            let k80 = prune(&w, p, 0.8).unwrap().kept();
+            let k95 = prune(&w, p, 0.95).unwrap().kept();
+            assert!(k50 >= k80 && k80 >= k95, "{} not monotone", p.name());
+        }
+    }
+
+    /// GS patterns keep at least as much magnitude *per kept entry* as
+    /// block at the same sparsity, and at most as much as irregular (the
+    /// paper's motivating ordering, §II). Per-entry averages are compared
+    /// because GS rounds keep-counts up to whole groups.
+    #[test]
+    fn kept_magnitude_ordering() {
+        let mut rng = Prng::new(9);
+        let w = Dense::random(32, 128, 1.0, &mut rng);
+        let avg_mag = |mask: &Mask| -> f64 {
+            let total: f64 = w
+                .data
+                .iter()
+                .zip(&mask.data)
+                .filter(|(_, &m)| m)
+                .map(|(&v, _)| v.abs() as f64)
+                .sum();
+            total / mask.kept() as f64
+        };
+        let irr = avg_mag(&prune(&w, Pattern::Irregular, 0.8).unwrap());
+        let gs = avg_mag(&prune(&w, Pattern::Gs { b: 8, k: 8 }, 0.8).unwrap());
+        let blk = avg_mag(&prune(&w, Pattern::Block { b: 8, k: 8 }, 0.8).unwrap());
+        assert!(gs <= irr * 1.001, "GS avg magnitude above irregular?");
+        assert!(
+            gs >= blk,
+            "GS kept lighter entries than block ({gs:.3} < {blk:.3})"
+        );
+    }
+}

@@ -1,0 +1,144 @@
+//! GS scatter pattern selection (paper §VI).
+//!
+//! "Instead of forming a group from the data in consecutive rows, we first
+//! sort all rows based on the number of entries above the threshold … then
+//! group entries from the neighboring sorted rows": rows with similar
+//! above-threshold counts are banded together, so the per-band budget
+//! wastes little (the rounding/imbalance cost of banding dissimilar rows
+//! is what the scatter pattern exists to avoid).
+//!
+//! Banding is done twice: a provisional pass by above-threshold count
+//! fixes each band's budget, then rows are re-sorted by their *final* kept
+//! count (ties by row index) and bands re-formed in that order. The second
+//! pass makes the banding canonical — reconstructible from the mask alone
+//! — so [`Pattern::validate`] and [`GsFormat::from_dense`] (which sort by
+//! kept-nnz) recover exactly the bands the pruner used.
+
+use super::baseline::irregular_threshold;
+use super::hybrid::{band_budget, select_band};
+use crate::sparse::dense::{Dense, Mask};
+
+/// Prune to `GS_scatter(B,k)`.
+pub fn prune_scatter(w: &Dense, b: usize, k: usize, sparsity: f64) -> Mask {
+    let band_rows = b / k;
+    assert!(
+        w.rows % band_rows == 0,
+        "rows {} not divisible by B/k = {band_rows}",
+        w.rows
+    );
+    let threshold = irregular_threshold(w, sparsity);
+    let nbands = w.rows / band_rows;
+
+    // Pass 1: provisional banding by above-threshold count → budgets.
+    let counts: Vec<usize> = (0..w.rows)
+        .map(|r| w.row(r).iter().filter(|v| v.abs() > threshold).count())
+        .collect();
+    let mut order: Vec<usize> = (0..w.rows).collect();
+    order.sort_by_key(|&r| (counts[r], r));
+    let mut kept = vec![0usize; w.rows]; // final kept count per row
+    for band in 0..nbands {
+        let rows = &order[band * band_rows..(band + 1) * band_rows];
+        let groups = band_budget(w, rows, threshold, b, k);
+        for &r in rows {
+            kept[r] = groups * k;
+        }
+    }
+
+    // Pass 2: canonical banding by (kept, index); budgets are uniform
+    // within a band by construction, so re-banding within equal-kept runs
+    // is harmless and makes the banding a pure function of the mask.
+    order.sort_by_key(|&r| (kept[r], r));
+    let mut mask = Mask::all_false(w.rows, w.cols);
+    for band in 0..nbands {
+        let rows = order[band * band_rows..(band + 1) * band_rows].to_vec();
+        let groups = kept[rows[0]] / k;
+        debug_assert!(rows.iter().all(|&r| kept[r] == groups * k));
+        select_band(w, &rows, b, k, groups, &mut mask);
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::format::GsFormat;
+    use crate::sparse::pattern::Pattern;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn scatter_validates() {
+        let mut rng = Prng::new(1);
+        let w = Dense::random(32, 64, 1.0, &mut rng);
+        for k in [1usize, 2] {
+            let m = prune_scatter(&w, 8, k, 0.8);
+            Pattern::GsScatter { b: 8, k }.validate(&m).unwrap();
+        }
+    }
+
+    #[test]
+    fn scatter_format_roundtrip() {
+        let mut rng = Prng::new(2);
+        let mut w = Dense::random(16, 64, 1.0, &mut rng);
+        let m = prune_scatter(&w, 8, 1, 0.75);
+        w.apply_mask(&m);
+        let gs = GsFormat::from_dense(&w, Pattern::GsScatter { b: 8, k: 1 }).unwrap();
+        gs.validate().unwrap();
+        assert_eq!(gs.to_dense(), w);
+    }
+
+    #[test]
+    fn handles_skewed_row_densities() {
+        // Half the rows carry 10× heavier weights: consecutive banding
+        // (plain vertical) would force the light rows to match the heavy
+        // rows' budget; scatter bands like with like. Interleave them so
+        // consecutive bands are maximally mismatched.
+        let mut rng = Prng::new(3);
+        let mut w = Dense::zeros(16, 64);
+        for r in 0..16 {
+            let scale = if r % 2 == 0 { 10.0 } else { 0.1 };
+            for c in 0..64 {
+                w.set(r, c, rng.gaussian_f32() * scale);
+            }
+        }
+        let m = prune_scatter(&w, 8, 1, 0.75);
+        Pattern::GsScatter { b: 8, k: 1 }.validate(&m).unwrap();
+        // Heavy rows must keep more than light rows.
+        let kept_heavy: usize = (0..16).step_by(2).map(|r| m.row_indices(r).len()).sum();
+        let kept_light: usize = (1..16).step_by(2).map(|r| m.row_indices(r).len()).sum();
+        assert!(
+            kept_heavy > kept_light,
+            "scatter failed to adapt budgets: heavy {kept_heavy} vs light {kept_light}"
+        );
+    }
+
+    #[test]
+    fn scatter_keeps_more_magnitude_than_vertical_on_skewed_rows() {
+        // The motivating property: on rows with very different densities,
+        // scatter's like-with-like banding preserves more magnitude than
+        // consecutive banding at the same target sparsity.
+        let mut rng = Prng::new(4);
+        let mut w = Dense::zeros(16, 64);
+        for r in 0..16 {
+            let scale = if r % 2 == 0 { 5.0 } else { 0.05 };
+            for c in 0..64 {
+                w.set(r, c, rng.gaussian_f32() * scale);
+            }
+        }
+        let mag = |m: &Mask| -> f64 {
+            w.data
+                .iter()
+                .zip(&m.data)
+                .filter(|(_, &keep)| keep)
+                .map(|(&v, _)| v.abs() as f64)
+                .sum()
+        };
+        let m_scatter = prune_scatter(&w, 8, 1, 0.8);
+        let m_vertical = super::super::hybrid::prune_hybrid(&w, 8, 1, 0.8);
+        assert!(
+            mag(&m_scatter) >= mag(&m_vertical) * 0.999,
+            "scatter {} < vertical {}",
+            mag(&m_scatter),
+            mag(&m_vertical)
+        );
+    }
+}

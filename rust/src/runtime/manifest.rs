@@ -1,0 +1,238 @@
+//! `artifacts/manifest.json` parsing (written by `python/compile/aot.py`).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One parameter's metadata.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub prunable: bool,
+}
+
+/// Batch input metadata.
+#[derive(Clone, Debug)]
+pub struct BatchSpec {
+    pub x_shape: Vec<usize>,
+    pub x_is_int: bool,
+    pub y_shape: Vec<usize>,
+    pub y_is_int: bool,
+}
+
+/// One micro model's artifact set.
+#[derive(Clone, Debug)]
+pub struct ModelManifest {
+    pub name: String,
+    pub params: Vec<ParamSpec>,
+    pub batch: BatchSpec,
+    pub train_path: PathBuf,
+    pub eval_path: PathBuf,
+    pub lr: f64,
+    /// Free-form config (vocab sizes etc.) from the model module.
+    pub config: BTreeMap<String, f64>,
+}
+
+impl ModelManifest {
+    pub fn n_prunable(&self) -> usize {
+        self.params.iter().filter(|p| p.prunable).count()
+    }
+
+    pub fn cfg(&self, key: &str) -> Result<usize> {
+        self.config
+            .get(key)
+            .map(|&v| v as usize)
+            .ok_or_else(|| anyhow!("missing config key {key} in {}", self.name))
+    }
+}
+
+/// The serving MLP artifact.
+#[derive(Clone, Debug)]
+pub struct MlpManifest {
+    pub forward_path: PathBuf,
+    pub config: BTreeMap<String, f64>,
+}
+
+impl MlpManifest {
+    pub fn cfg(&self, key: &str) -> Result<usize> {
+        self.config
+            .get(key)
+            .map(|&v| v as usize)
+            .ok_or_else(|| anyhow!("missing mlp config key {key}"))
+    }
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelManifest>,
+    pub mlp: MlpManifest,
+}
+
+fn shape_of(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("shape not an array"))?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect()
+}
+
+fn config_of(j: &Json) -> BTreeMap<String, f64> {
+    match j {
+        Json::Obj(m) => m
+            .iter()
+            .filter_map(|(k, v)| v.as_f64().map(|f| (k.clone(), f)))
+            .collect(),
+        _ => BTreeMap::new(),
+    }
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("read {dir:?}/manifest.json — run `make artifacts`"))?;
+        let root = Json::parse(&text).context("parse manifest.json")?;
+
+        let mut models = BTreeMap::new();
+        let models_json = root
+            .get("models")
+            .and_then(|m| match m {
+                Json::Obj(o) => Some(o),
+                _ => None,
+            })
+            .ok_or_else(|| anyhow!("manifest missing models object"))?;
+        for (name, mj) in models_json {
+            let params = mj
+                .get("params")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("{name}: missing params"))?
+                .iter()
+                .map(|p| {
+                    Ok(ParamSpec {
+                        name: p
+                            .get("name")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("param name"))?
+                            .to_string(),
+                        shape: shape_of(p.get("shape").ok_or_else(|| anyhow!("param shape"))?)?,
+                        prunable: p
+                            .get("prunable")
+                            .and_then(Json::as_bool)
+                            .unwrap_or(false),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let batch = mj.get("batch").ok_or_else(|| anyhow!("{name}: batch"))?;
+            let xd = batch.get("x").ok_or_else(|| anyhow!("batch.x"))?;
+            let yd = batch.get("y").ok_or_else(|| anyhow!("batch.y"))?;
+            let is_int = |d: &Json| {
+                d.get("dtype")
+                    .and_then(Json::as_str)
+                    .map(|s| s.contains("int"))
+                    .unwrap_or(false)
+            };
+            models.insert(
+                name.clone(),
+                ModelManifest {
+                    name: name.clone(),
+                    params,
+                    batch: BatchSpec {
+                        x_shape: shape_of(xd.get("shape").unwrap_or(&Json::Null))?,
+                        x_is_int: is_int(xd),
+                        y_shape: shape_of(yd.get("shape").unwrap_or(&Json::Null))?,
+                        y_is_int: is_int(yd),
+                    },
+                    train_path: dir.join(
+                        mj.get("train")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("{name}: train path"))?,
+                    ),
+                    eval_path: dir.join(
+                        mj.get("eval")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("{name}: eval path"))?,
+                    ),
+                    lr: mj.get("lr").and_then(Json::as_f64).unwrap_or(0.01),
+                    config: config_of(mj.get("config").unwrap_or(&Json::Null)),
+                },
+            );
+        }
+
+        let mlp_json = root
+            .get("mlp_forward")
+            .ok_or_else(|| anyhow!("manifest missing mlp_forward"))?;
+        let mlp = MlpManifest {
+            forward_path: dir.join(
+                mlp_json
+                    .get("forward")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("mlp forward path"))?,
+            ),
+            config: config_of(mlp_json.get("config").unwrap_or(&Json::Null)),
+        };
+
+        Ok(Manifest { dir, models, mlp })
+    }
+
+    /// Default artifacts directory (repo-root relative with env override).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("GS_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The real manifest, when artifacts are built (skips otherwise so
+    /// `cargo test` stays green pre-`make artifacts`).
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        for name in ["gnmt", "resnet", "jasper"] {
+            let mm = m.models.get(name).unwrap_or_else(|| panic!("{name} missing"));
+            assert!(!mm.params.is_empty());
+            assert!(mm.n_prunable() > 0);
+            assert!(mm.train_path.exists());
+            assert!(mm.eval_path.exists());
+        }
+        assert!(m.mlp.forward_path.exists());
+        assert!(m.mlp.cfg("gs_b").unwrap() > 0);
+    }
+
+    #[test]
+    fn parses_synthetic_manifest() {
+        let tmp = std::env::temp_dir().join(format!("gs-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::write(
+            tmp.join("manifest.json"),
+            r#"{"models":{"m":{"params":[{"name":"w","shape":[2,3],"prunable":true}],
+                "batch":{"x":{"shape":[4,2],"dtype":"float32"},"y":{"shape":[4],"dtype":"int32"}},
+                "train":"t.hlo.txt","eval":"e.hlo.txt","lr":0.5,
+                "config":{"vocab":7}}},
+                "mlp_forward":{"forward":"f.hlo.txt","config":{"gs_b":8}}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&tmp).unwrap();
+        let mm = &m.models["m"];
+        assert_eq!(mm.params[0].shape, vec![2, 3]);
+        assert!(mm.params[0].prunable);
+        assert!(!mm.batch.x_is_int);
+        assert!(mm.batch.y_is_int);
+        assert_eq!(mm.cfg("vocab").unwrap(), 7);
+        assert_eq!(mm.lr, 0.5);
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+}

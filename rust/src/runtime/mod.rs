@@ -1,0 +1,177 @@
+//! PJRT runtime: load AOT artifacts and execute them (no Python).
+//!
+//! * [`Runtime`] wraps a `PjRtClient` (CPU); [`Executable`] wraps one
+//!   compiled HLO module loaded from `artifacts/*.hlo.txt` (text is the
+//!   interchange format — see `python/compile/aot.py`).
+//! * [`manifest`] parses `artifacts/manifest.json` so the rest of the
+//!   crate knows every artifact's signature without importing Python.
+//! * [`Tensor`] is the crate's host-side array: shape + f32/i32 data,
+//!   converting to/from `xla::Literal`.
+
+pub mod manifest;
+
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+pub use manifest::{Manifest, ModelManifest};
+
+/// Host-side tensor (f32 or i32), row-major.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor::I32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor::f32(shape, vec![0.0; shape.iter().product()])
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut Vec<f32>> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    /// Convert to an XLA literal.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+            Tensor::I32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+        };
+        Ok(lit)
+    }
+
+    /// Convert back from an XLA literal.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Tensor::F32 { shape: dims, data: lit.to_vec::<f32>()? }),
+            xla::ElementType::S32 => Ok(Tensor::I32 { shape: dims, data: lit.to_vec::<i32>()? }),
+            ty => Err(anyhow!("unsupported artifact element type {ty:?}")),
+        }
+    }
+}
+
+/// A PJRT client that loads and compiles HLO-text artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// CPU client (the only backend in this environment).
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn load_hlo<P: AsRef<Path>>(&self, path: P) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {path:?}"))?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+}
+
+/// One compiled artifact; `run` executes it on host tensors.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with host tensors; artifacts are lowered with
+    /// `return_tuple=True`, so the single output decomposes into the
+    /// function's flat result list.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let out = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("execute {}", self.name))?;
+        let result = out[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        let parts = result.to_tuple().context("decompose result tuple")?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_literal_roundtrip_f32() {
+        let t = Tensor::f32(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn tensor_literal_roundtrip_i32() {
+        let t = Tensor::i32(&[4], vec![1, -2, 3, -4]);
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn tensor_scalar_shape() {
+        let t = Tensor::scalar_f32(7.5);
+        assert!(t.shape().is_empty());
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(back.as_f32().unwrap(), &[7.5]);
+    }
+
+    #[test]
+    fn shape_mismatch_panics() {
+        let r = std::panic::catch_unwind(|| Tensor::f32(&[2, 2], vec![1.0]));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,360 @@
+//! The unit-stream timing model (Gem5 O3CPU substitute).
+//!
+//! An eight-issue out-of-order core overlaps independent work across its
+//! functional units; for throughput-bound kernels the elapsed time is set
+//! by the busiest unit. We therefore clock five streams independently and
+//! report `cycles = max(streams)`:
+//!
+//! * **LSU** — one load/store per cycle for cacheable traffic (weights,
+//!   indices, indptr, results).
+//! * **Engine** — the TCM gather/scatter engine: one access per cycle,
+//!   serialized by bank-conflict occupancy (tracked in [`Tcm`]).
+//! * **VPU** — SIMD multiply-accumulate, reductions, format converts.
+//! * **Scalar** — loop/branch bookkeeping and per-row prologues (the
+//!   dependency work an OoO core cannot overlap away).
+//! * **Memory** — `max(DRAM bandwidth floor, unhidden miss stalls / MLP)`
+//!   from the cache hierarchy.
+//!
+//! Kernels (in `crate::kernels`) call these micro-op methods while
+//! computing real numerics, so the simulator simultaneously yields correct
+//! results and cycle estimates — a sim-vs-native numerics test keeps it
+//! honest.
+
+use super::cache::MemoryHierarchy;
+use super::tcm::{Tcm, TcmConfig};
+
+/// Streamed-array identifiers; each gets a disjoint address region so the
+/// cache sees realistic interleaving without kernels managing pointers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stream {
+    Weights = 0,
+    Indices = 1,
+    Indptr = 2,
+    Output = 3,
+}
+
+/// Core model parameters (defaults follow paper §X where specified).
+#[derive(Clone, Copy, Debug)]
+pub struct MachineConfig {
+    /// Nominal issue width (documentation; streams are per-unit).
+    pub issue_width: u64,
+    /// TCM geometry.
+    pub tcm: TcmConfig,
+    /// VPU cost of one SIMD MAC (fp16→fp32 convert folded in).
+    pub mac_cost: u64,
+    /// VPU cost of a cross-lane reduction (≈ log2(B)).
+    pub reduce_cost: u64,
+    /// Scalar cost per inner-loop iteration (index increment + branch).
+    pub loop_cost: u64,
+    /// Scalar cost per row/band prologue (indptr fetch use, pointer setup,
+    /// loop-carried dependency the OoO core cannot hide).
+    pub row_overhead: u64,
+    /// Memory-level parallelism: outstanding misses the OoO core overlaps.
+    pub mlp: u64,
+    /// DRAM bandwidth in bytes per *core* cycle. Default 51.2: a DSP-class
+    /// core at ~400 MHz in front of dual-channel DDR3-1600 (25.6 GB/s).
+    /// At this ratio the paper's kernels are issue-bound, not DRAM-bound —
+    /// which is what makes GS ≈ block despite GS's per-element index
+    /// traffic (Fig. 6's observed equality).
+    pub dram_bytes_per_cycle: f64,
+}
+
+impl Default for MachineConfig {
+    fn default() -> Self {
+        let tcm = TcmConfig::default();
+        MachineConfig {
+            issue_width: 8,
+            tcm,
+            mac_cost: 1,
+            reduce_cost: (tcm.subbanks as f64).log2().ceil() as u64,
+            loop_cost: 1,
+            row_overhead: 4,
+            mlp: 8,
+            dram_bytes_per_cycle: 51.2,
+        }
+    }
+}
+
+impl MachineConfig {
+    pub fn with_subbanks(subbanks: usize) -> MachineConfig {
+        let mut c = MachineConfig::default();
+        c.tcm.subbanks = subbanks;
+        c.reduce_cost = (subbanks as f64).log2().ceil() as u64;
+        c
+    }
+}
+
+/// Simulation outcome for one kernel run.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    pub cycles: u64,
+    pub lsu_slots: u64,
+    pub engine_slots: u64,
+    pub conflict_slots: u64,
+    pub vpu_slots: u64,
+    pub scalar_slots: u64,
+    pub mem_cycles: u64,
+    pub dram_bytes: u64,
+    pub l1_hit_rate: f64,
+    pub gathers: u64,
+    pub instructions: u64,
+}
+
+impl SimReport {
+    /// The unit that set the critical path.
+    pub fn bottleneck(&self) -> &'static str {
+        let streams = [
+            (self.lsu_slots, "lsu"),
+            (self.engine_slots, "engine"),
+            (self.vpu_slots, "vpu"),
+            (self.scalar_slots, "scalar"),
+            (self.mem_cycles, "memory"),
+        ];
+        streams.iter().max_by_key(|(v, _)| *v).unwrap().1
+    }
+}
+
+/// The simulated machine: unit-stream clocks + TCM + cache hierarchy.
+pub struct Machine {
+    pub config: MachineConfig,
+    pub tcm: Tcm,
+    pub mem: MemoryHierarchy,
+    lsu_slots: u64,
+    vpu_slots: u64,
+    scalar_slots: u64,
+    instructions: u64,
+    cursors: [u64; 4],
+}
+
+/// Disjoint 256MB address regions per stream.
+const REGION_SHIFT: u64 = 28;
+
+impl Machine {
+    pub fn new(config: MachineConfig) -> Machine {
+        let mut mem = MemoryHierarchy::default_paper();
+        mem.dram_bytes_per_cycle = config.dram_bytes_per_cycle;
+        Machine {
+            config,
+            tcm: Tcm::new(config.tcm),
+            mem,
+            lsu_slots: 0,
+            vpu_slots: 0,
+            scalar_slots: 0,
+            instructions: 0,
+            cursors: [0; 4],
+        }
+    }
+
+    /// SIMD lane count (= TCM sub-banks, as in the paper's 16-bit SVE
+    /// gather setup).
+    pub fn lanes(&self) -> usize {
+        self.config.tcm.subbanks
+    }
+
+    // ---- micro-ops -------------------------------------------------------
+
+    /// Streaming load of `bytes` from `stream` (weights/indices/indptr):
+    /// one LSU slot, advances that stream's cursor through the cache.
+    pub fn stream_load(&mut self, stream: Stream, bytes: usize) {
+        let base = (stream as u64 + 1) << REGION_SHIFT;
+        let addr = base + self.cursors[stream as usize];
+        self.cursors[stream as usize] += bytes as u64;
+        self.mem.read(addr, bytes);
+        self.lsu_slots += 1;
+        self.instructions += 1;
+    }
+
+    /// Gather `offsets.len()` activations from the TCM.
+    pub fn gather(&mut self, base: usize, offsets: &[u32], out: &mut [f32]) {
+        self.tcm.gather(base, offsets, out);
+        self.instructions += 1;
+    }
+
+    /// Scatter values into the TCM.
+    pub fn scatter(&mut self, base: usize, offsets: &[u32], values: &[f32]) {
+        self.tcm.scatter(base, offsets, values);
+        self.instructions += 1;
+    }
+
+    /// Sequential vector load from the TCM (dense/block activations).
+    pub fn tcm_load_seq(&mut self, base: usize, out: &mut [f32]) {
+        self.tcm.load_seq(base, out);
+        self.instructions += 1;
+    }
+
+    /// SIMD multiply-accumulate: `acc[i] += a[i] * b[i]`.
+    pub fn simd_mac(&mut self, a: &[f32], b: &[f32], acc: &mut [f32]) {
+        for ((&x, &y), dst) in a.iter().zip(b).zip(acc.iter_mut()) {
+            *dst += x * y;
+        }
+        self.vpu_slots += self.config.mac_cost;
+        self.instructions += 1;
+    }
+
+    /// Cross-lane reduction of a SIMD register to one scalar.
+    pub fn simd_reduce(&mut self, acc: &[f32]) -> f32 {
+        self.vpu_slots += self.config.reduce_cost;
+        self.instructions += 1;
+        acc.iter().sum()
+    }
+
+    /// Inner-loop bookkeeping for one iteration.
+    pub fn loop_tick(&mut self) {
+        self.scalar_slots += self.config.loop_cost;
+        self.instructions += 1;
+    }
+
+    /// Per-row/band prologue (indptr dereference, pointer setup).
+    pub fn row_prologue(&mut self) {
+        self.scalar_slots += self.config.row_overhead;
+        self.instructions += 1;
+    }
+
+    /// Store a result vector/scalar of `bytes`.
+    pub fn store_result(&mut self, bytes: usize) {
+        let base = (Stream::Output as u64 + 1) << REGION_SHIFT;
+        let addr = base + self.cursors[Stream::Output as usize];
+        self.cursors[Stream::Output as usize] += bytes as u64;
+        self.mem.read(addr, bytes); // write-allocate modeled as a read
+        self.lsu_slots += 1;
+        self.instructions += 1;
+    }
+
+    /// Explicit scalar work (e.g. CSR pointer chasing).
+    pub fn scalar_work(&mut self, slots: u64) {
+        self.scalar_slots += slots;
+        self.instructions += 1;
+    }
+
+    // ---- reporting -------------------------------------------------------
+
+    /// Memory stream cycles: bandwidth floor vs MLP-overlapped stalls.
+    fn mem_cycles(&self) -> u64 {
+        let stalls = self.mem.stall_cycles / self.config.mlp.max(1);
+        self.mem.bandwidth_cycles().max(stalls)
+    }
+
+    pub fn report(&self) -> SimReport {
+        let mem_cycles = self.mem_cycles();
+        let cycles = self
+            .lsu_slots
+            .max(self.tcm.engine_slots)
+            .max(self.vpu_slots)
+            .max(self.scalar_slots)
+            .max(mem_cycles)
+            // Pipeline fill: one TCM access latency tail.
+            + self.tcm.access_latency(1);
+        let l1_total = self.mem.l1.hits + self.mem.l1.misses;
+        SimReport {
+            cycles,
+            lsu_slots: self.lsu_slots,
+            engine_slots: self.tcm.engine_slots,
+            conflict_slots: self.tcm.conflict_slots,
+            vpu_slots: self.vpu_slots,
+            scalar_slots: self.scalar_slots,
+            mem_cycles,
+            dram_bytes: self.mem.dram_bytes,
+            l1_hit_rate: if l1_total == 0 {
+                1.0
+            } else {
+                self.mem.l1.hits as f64 / l1_total as f64
+            },
+            gathers: self.tcm.accesses,
+            instructions: self.instructions,
+        }
+    }
+
+    /// Reset all counters (keep TCM contents, e.g. resident activations).
+    pub fn reset(&mut self) {
+        self.tcm.reset_counters();
+        self.mem.reset_counters();
+        self.lsu_slots = 0;
+        self.vpu_slots = 0;
+        self.scalar_slots = 0;
+        self.instructions = 0;
+        self.cursors = [0; 4];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn streams_accumulate_independently() {
+        let mut m = Machine::new(MachineConfig::with_subbanks(4));
+        m.tcm.fill(0, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        let mut out = [0.0f32; 4];
+        m.gather(0, &[0, 1, 2, 3], &mut out);
+        assert_eq!(out, [1.0, 2.0, 3.0, 4.0]);
+        m.stream_load(Stream::Weights, 8);
+        let mut acc = [0.0f32; 4];
+        m.simd_mac(&out, &[1.0; 4], &mut acc);
+        m.loop_tick();
+        let r = m.report();
+        assert_eq!(r.lsu_slots, 1);
+        assert_eq!(r.engine_slots, 1);
+        assert_eq!(r.vpu_slots, 1);
+        assert_eq!(r.scalar_slots, 1);
+        assert_eq!(r.gathers, 1);
+        assert!(r.cycles >= 1);
+    }
+
+    #[test]
+    fn cycles_are_max_of_streams_plus_tail() {
+        let mut m = Machine::new(MachineConfig::with_subbanks(4));
+        for _ in 0..100 {
+            m.loop_tick();
+        }
+        let r = m.report();
+        // scalar=100 dominates; tail = TCM base latency (3).
+        assert_eq!(r.cycles, 100 + 3);
+        assert_eq!(r.bottleneck(), "scalar");
+    }
+
+    #[test]
+    fn conflicts_inflate_engine_stream() {
+        let mut m = Machine::new(MachineConfig::with_subbanks(4));
+        m.tcm.fill(0, &[0.0; 16]);
+        let mut out = [0.0f32; 4];
+        for _ in 0..10 {
+            m.gather(0, &[0, 4, 8, 12], &mut out); // occupancy 4
+        }
+        let r = m.report();
+        assert_eq!(r.engine_slots, 40);
+        assert_eq!(r.conflict_slots, 30);
+    }
+
+    #[test]
+    fn stream_loads_advance_addresses() {
+        let mut m = Machine::new(MachineConfig::default());
+        // 1000 sequential 32-byte weight loads: prefetchers keep the L1
+        // hit rate reasonable.
+        for _ in 0..1000 {
+            m.stream_load(Stream::Weights, 32);
+        }
+        let r = m.report();
+        assert_eq!(r.lsu_slots, 1000);
+        assert!(r.l1_hit_rate > 0.4, "hit rate {}", r.l1_hit_rate);
+        assert!(r.dram_bytes >= 32_000);
+    }
+
+    #[test]
+    fn reset_clears_counters_but_keeps_tcm_data() {
+        let mut m = Machine::new(MachineConfig::with_subbanks(4));
+        m.tcm.fill(0, &[7.0; 8]);
+        let mut out = [0.0f32; 4];
+        m.gather(0, &[0, 1, 2, 3], &mut out);
+        m.reset();
+        assert_eq!(m.report().gathers, 0);
+        assert_eq!(m.tcm.read(0), 7.0);
+    }
+
+    #[test]
+    fn scatter_writes_tcm() {
+        let mut m = Machine::new(MachineConfig::with_subbanks(4));
+        m.scatter(0, &[1, 2, 3, 0], &[10.0, 20.0, 30.0, 40.0]);
+        assert_eq!(m.tcm.read(1), 10.0);
+        assert_eq!(m.tcm.read(0), 40.0);
+    }
+}

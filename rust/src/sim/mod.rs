@@ -1,0 +1,37 @@
+//! Cycle-level simulator of the paper's evaluation platform (§X).
+//!
+//! The paper measures kernels on Gem5 (O3CPU, ARM SVE, custom 16-bit
+//! gather/scatter, 64KB TCM, 64KB L1 / 1MB L2 with prefetchers, DDR3). We
+//! reproduce the *mechanisms that drive its relative results* with an
+//! in-tree simulator:
+//!
+//! * [`tcm`] — banked scratchpad: a gather/scatter over `B` sub-banks
+//!   costs one engine slot when the offsets' residues are distinct and
+//!   serializes by the maximum bank occupancy otherwise (paper §III: "an
+//!   extra cycle for every non-resolving bank conflict").
+//! * [`cache`] — set-associative L1/L2 with next-N-line (L1) and block
+//!   (L2) prefetchers plus a DRAM bandwidth floor, for the streamed
+//!   weights.
+//! * [`machine`] — the timing model: an eight-issue out-of-order core is
+//!   approximated as a set of independently-clocked *unit streams*
+//!   (load/store unit, gather engine, vector unit, scalar unit, memory).
+//!   Kernels emit micro-ops as they compute real numerics; the elapsed
+//!   cycle count is the maximum stream occupancy — the bottleneck-resource
+//!   abstraction of an OoO core that successfully overlaps independent
+//!   work. Dependency stalls the OoO core cannot hide (per-row reductions,
+//!   loop prologues) are charged to the scalar stream explicitly.
+//!
+//! This "max of unit streams" model is deliberately simpler than Gem5 but
+//! preserves what Fig. 6 measures: who is bottlenecked where. Dense spMV
+//! is LSU/memory bound; sparse kernels trade memory traffic for per-group
+//! index handling and per-row overheads; GS and block differ only in
+//! gather-vs-vector-load and index width; CSR-on-engine serializes on
+//! bank conflicts. See DESIGN.md §2 for the substitution argument.
+
+pub mod cache;
+pub mod machine;
+pub mod tcm;
+
+pub use cache::{Cache, CacheConfig, MemoryHierarchy};
+pub use machine::{Machine, MachineConfig, SimReport};
+pub use tcm::{Tcm, TcmConfig};

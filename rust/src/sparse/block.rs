@@ -1,0 +1,193 @@
+//! Block-sparse (BSR-like) baseline for `Block(B,k)` patterns.
+//!
+//! A block is `B/k` rows × `k` columns, aligned; the paper's *block
+//! horizontal* is `Block(B,B)` (a 1×B run along the reduction dimension,
+//! matching the SIMD width) and *block vertical* is `Block(B,1)`.
+
+use super::dense::Dense;
+use super::pattern::Pattern;
+use anyhow::{bail, Context, Result};
+
+/// Block compressed sparse row storage.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlockSparse {
+    pub b: usize,
+    pub k: usize,
+    pub rows: usize,
+    pub cols: usize,
+    /// `nblocks * b` values, block-major, row-major within a block.
+    pub value: Vec<f32>,
+    /// `nblocks` block-column indices (in units of `k` columns).
+    pub index: Vec<u32>,
+    /// `nbandrows + 1` cumulative block counts per block-row.
+    pub indptr: Vec<u32>,
+}
+
+impl BlockSparse {
+    pub fn block_rows(&self) -> usize {
+        self.b / self.k
+    }
+
+    pub fn nblocks(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.value.len()
+    }
+
+    /// Build from a dense matrix whose mask satisfies `Block(b,k)`.
+    pub fn from_dense(d: &Dense, pattern: Pattern) -> Result<BlockSparse> {
+        let (b, k) = match pattern {
+            Pattern::Block { b, k } => (b, k),
+            p => bail!("BlockSparse requires a Block pattern, got {}", p.name()),
+        };
+        pattern
+            .validate(&d.nonzero_mask())
+            .with_context(|| format!("mask does not satisfy {}", pattern.name()))?;
+        let br = b / k;
+        let mut value = Vec::new();
+        let mut index = Vec::new();
+        let mut indptr = vec![0u32];
+        for r0 in (0..d.rows).step_by(br) {
+            for c0 in (0..d.cols).step_by(k) {
+                let nonzero = (r0..r0 + br).any(|r| (c0..c0 + k).any(|c| d.at(r, c) != 0.0));
+                if nonzero {
+                    for r in r0..r0 + br {
+                        for c in c0..c0 + k {
+                            value.push(d.at(r, c));
+                        }
+                    }
+                    index.push((c0 / k) as u32);
+                }
+            }
+            indptr.push(index.len() as u32);
+        }
+        Ok(BlockSparse {
+            b,
+            k,
+            rows: d.rows,
+            cols: d.cols,
+            value,
+            index,
+            indptr,
+        })
+    }
+
+    pub fn to_dense(&self) -> Dense {
+        let mut out = Dense::zeros(self.rows, self.cols);
+        let br = self.block_rows();
+        for band in 0..self.indptr.len() - 1 {
+            for blk in self.indptr[band] as usize..self.indptr[band + 1] as usize {
+                let c0 = self.index[blk] as usize * self.k;
+                for i in 0..br {
+                    for j in 0..self.k {
+                        let v = self.value[blk * self.b + i * self.k + j];
+                        out.set(band * br + i, c0 + j, v);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// spMV oracle (numerics; the cycle-level version lives in `kernels`).
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        let br = self.block_rows();
+        let mut y = vec![0.0; self.rows];
+        for band in 0..self.indptr.len() - 1 {
+            for blk in self.indptr[band] as usize..self.indptr[band + 1] as usize {
+                let c0 = self.index[blk] as usize * self.k;
+                for i in 0..br {
+                    let mut acc = 0.0;
+                    for j in 0..self.k {
+                        acc += self.value[blk * self.b + i * self.k + j] * x[c0 + j];
+                    }
+                    y[band * br + i] += acc;
+                }
+            }
+        }
+        y
+    }
+
+    /// Compressed size in bytes with fp16 values + u16 block indices + u32
+    /// indptr (mirrors [`GsFormat::compact_bytes`] assumptions).
+    pub fn compact_bytes(&self) -> usize {
+        self.value.len() * 2 + self.index.len() * 2 + self.indptr.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    /// Random Block(b,k) matrix with `keep` fraction of blocks non-zero.
+    pub fn random_block(
+        rows: usize,
+        cols: usize,
+        b: usize,
+        k: usize,
+        keep: f64,
+        seed: u64,
+    ) -> Dense {
+        let mut rng = Prng::new(seed);
+        let br = b / k;
+        let mut d = Dense::zeros(rows, cols);
+        for r0 in (0..rows).step_by(br) {
+            for c0 in (0..cols).step_by(k) {
+                if rng.chance(keep) {
+                    for r in r0..r0 + br {
+                        for c in c0..c0 + k {
+                            d.set(r, c, rng.gaussian_f32());
+                        }
+                    }
+                }
+            }
+        }
+        d
+    }
+
+    #[test]
+    fn roundtrip_horizontal_blocks() {
+        let d = random_block(8, 32, 4, 4, 0.3, 1);
+        let bs = BlockSparse::from_dense(&d, Pattern::Block { b: 4, k: 4 }).unwrap();
+        assert_eq!(bs.to_dense(), d);
+    }
+
+    #[test]
+    fn roundtrip_vertical_blocks() {
+        let d = random_block(8, 32, 4, 1, 0.3, 2);
+        let bs = BlockSparse::from_dense(&d, Pattern::Block { b: 4, k: 1 }).unwrap();
+        assert_eq!(bs.to_dense(), d);
+        assert_eq!(bs.block_rows(), 4);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let d = random_block(16, 64, 8, 4, 0.25, 3);
+        let bs = BlockSparse::from_dense(&d, Pattern::Block { b: 8, k: 4 }).unwrap();
+        let mut rng = Prng::new(4);
+        let x = rng.normal_vec(64, 1.0);
+        let want = d.matvec(&x);
+        let got = bs.matvec(&x);
+        for i in 0..16 {
+            assert!((got[i] - want[i]).abs() < 1e-4, "row {i}");
+        }
+    }
+
+    #[test]
+    fn rejects_non_block_mask() {
+        let mut d = Dense::zeros(4, 8);
+        d.set(0, 0, 1.0); // lone element is not an aligned 1x4 block
+        assert!(BlockSparse::from_dense(&d, Pattern::Block { b: 4, k: 4 }).is_err());
+    }
+
+    #[test]
+    fn nnz_counts_block_payload() {
+        let d = random_block(4, 16, 4, 4, 0.5, 5);
+        let bs = BlockSparse::from_dense(&d, Pattern::Block { b: 4, k: 4 }).unwrap();
+        assert_eq!(bs.nnz(), bs.nblocks() * 4);
+    }
+}

@@ -1,0 +1,279 @@
+//! Definition 4.2: GS patterns for convolution filters.
+//!
+//! A 2-D conv weight tensor `W ∈ R^{O×h×w×I}` (OhwI layout, matching NHWC
+//! activations) is projected to `R^{O×(hwI)}` with the input-channel
+//! dimension scanned innermost; the flattened matrix then carries any GS
+//! pattern. Because `I` is innermost and the activation feature map is
+//! stored channel-innermost in the TCM, a flat filter index `f` maps to the
+//! *engine offset* `f + kh·(W_act − w)·I` relative to the output pixel's
+//! base address (the paper's "(W−w)C" row adjustment, §V) — the format is
+//! kernel-shape aware. When `B | I` the offset adjustment is a multiple of
+//! `B`, so bank residues are preserved and a conflict-free flattened group
+//! stays conflict-free at the engine. 1-D conv (`O×L×I`) flattens the same
+//! way and needs no adjustment.
+
+use super::dense::Dense;
+use super::format::GsFormat;
+use super::pattern::Pattern;
+use anyhow::{bail, Result};
+
+/// Shape of a conv filter bank in OhwI layout (1-D conv: `h = 1`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvShape {
+    pub out_ch: usize,
+    pub h: usize,
+    pub w: usize,
+    pub in_ch: usize,
+}
+
+impl ConvShape {
+    pub fn conv2d(out_ch: usize, h: usize, w: usize, in_ch: usize) -> ConvShape {
+        ConvShape { out_ch, h, w, in_ch }
+    }
+
+    /// 1-D conv of kernel length `l` (Definition 4.2's O×L×I case).
+    pub fn conv1d(out_ch: usize, l: usize, in_ch: usize) -> ConvShape {
+        ConvShape {
+            out_ch,
+            h: 1,
+            w: l,
+            in_ch,
+        }
+    }
+
+    /// Flattened reduction length `h·w·I`.
+    pub fn flat_cols(&self) -> usize {
+        self.h * self.w * self.in_ch
+    }
+
+    pub fn weight_len(&self) -> usize {
+        self.out_ch * self.flat_cols()
+    }
+
+    /// Decompose a flat column index into (kh, kw, ic).
+    #[inline]
+    pub fn unflatten_col(&self, f: usize) -> (usize, usize, usize) {
+        let ic = f % self.in_ch;
+        let rest = f / self.in_ch;
+        (rest / self.w, rest % self.w, ic)
+    }
+
+    /// Flat column index of (kh, kw, ic).
+    #[inline]
+    pub fn flatten_col(&self, kh: usize, kw: usize, ic: usize) -> usize {
+        (kh * self.w + kw) * self.in_ch + ic
+    }
+}
+
+/// The Definition 4.2 projection `f : R^{O×h×w×I} → R^{O×(hwI)}`.
+/// `weights` is OhwI-ordered (I innermost).
+pub fn flatten_filters(weights: &[f32], shape: ConvShape) -> Dense {
+    assert_eq!(weights.len(), shape.weight_len(), "weight length mismatch");
+    // OhwI with I innermost *is* row-major O×(hwI); the projection is a
+    // reinterpretation, which is exactly why the pattern transfers.
+    Dense::from_vec(shape.out_ch, shape.flat_cols(), weights.to_vec())
+}
+
+/// Inverse of [`flatten_filters`].
+pub fn unflatten_filters(d: &Dense, shape: ConvShape) -> Vec<f32> {
+    assert_eq!(d.rows, shape.out_ch);
+    assert_eq!(d.cols, shape.flat_cols());
+    d.data.clone()
+}
+
+/// A GS-compressed convolution filter bank with engine offsets baked for a
+/// given activation width.
+#[derive(Clone, Debug)]
+pub struct GsConv {
+    pub shape: ConvShape,
+    /// The flattened-matrix GS format (indices are *flat filter columns*).
+    pub gs: GsFormat,
+}
+
+impl GsConv {
+    /// Compress OhwI weights under `pattern` (a GS pattern on the
+    /// flattened matrix). Requires `B | I` so that bank residues survive
+    /// the kernel-shape offset adjustment.
+    pub fn from_weights(weights: &[f32], shape: ConvShape, pattern: Pattern) -> Result<GsConv> {
+        let b = match pattern {
+            Pattern::Gs { b, .. } | Pattern::GsScatter { b, .. } => b,
+            p => bail!("GsConv requires a GS pattern, got {}", p.name()),
+        };
+        if shape.in_ch % b != 0 {
+            bail!(
+                "GS conv requires B | I for residue preservation (B={b}, I={})",
+                shape.in_ch
+            );
+        }
+        let flat = flatten_filters(weights, shape);
+        let gs = GsFormat::from_dense(&flat, pattern)?;
+        Ok(GsConv { shape, gs })
+    }
+
+    /// Engine offsets for every stored index, for an activation feature map
+    /// of width `act_w` (NHWC, channel-innermost, stride 1): offset of
+    /// entry relative to the output pixel's base address
+    /// `((y·act_w)+x)·I`. This is the §V index adjustment
+    /// `f + kh·(act_w − w)·I`.
+    pub fn engine_offsets(&self, act_w: usize) -> Vec<u32> {
+        assert!(act_w >= self.shape.w, "activation narrower than kernel");
+        let adj = (act_w - self.shape.w) * self.shape.in_ch;
+        self.gs
+            .index
+            .iter()
+            .map(|&f| {
+                let (kh, _, _) = self.shape.unflatten_col(f as usize);
+                f + (kh * adj) as u32
+            })
+            .collect()
+    }
+
+    /// Check that engine offsets keep residues conflict-free per group
+    /// (true by construction when `B | I`; exposed for tests/benches).
+    pub fn offsets_conflict_free(&self, act_w: usize) -> bool {
+        let offs = self.engine_offsets(act_w);
+        let b = self.gs.b;
+        offs.chunks(b).all(|group| {
+            let mut hit = vec![false; b];
+            group.iter().all(|&o| {
+                let r = o as usize % b;
+                !std::mem::replace(&mut hit[r], true)
+            })
+        })
+    }
+}
+
+/// Direct (oracle) 2-D convolution, NHWC activations, OhwI weights,
+/// stride 1, no padding. Returns NHWC output `(act_h-h+1)×(act_w-w+1)×O`
+/// for a single image.
+pub fn conv2d_reference(
+    act: &[f32],
+    act_h: usize,
+    act_w: usize,
+    weights: &[f32],
+    shape: ConvShape,
+) -> Vec<f32> {
+    assert_eq!(act.len(), act_h * act_w * shape.in_ch);
+    assert_eq!(weights.len(), shape.weight_len());
+    let oh = act_h - shape.h + 1;
+    let ow = act_w - shape.w + 1;
+    let mut out = vec![0.0f32; oh * ow * shape.out_ch];
+    for y in 0..oh {
+        for x in 0..ow {
+            for o in 0..shape.out_ch {
+                let mut acc = 0.0;
+                for kh in 0..shape.h {
+                    for kw in 0..shape.w {
+                        for ic in 0..shape.in_ch {
+                            let a = act[((y + kh) * act_w + (x + kw)) * shape.in_ch + ic];
+                            let wv =
+                                weights[o * shape.flat_cols() + shape.flatten_col(kh, kw, ic)];
+                            acc += a * wv;
+                        }
+                    }
+                }
+                out[(y * ow + x) * shape.out_ch + o] = acc;
+            }
+        }
+    }
+    out
+}
+
+/// Direct (oracle) 1-D convolution, (len × I) activations, O×L×I weights,
+/// stride 1, no padding. Output `(len-L+1) × O`.
+pub fn conv1d_reference(
+    act: &[f32],
+    act_len: usize,
+    weights: &[f32],
+    shape: ConvShape,
+) -> Vec<f32> {
+    assert_eq!(shape.h, 1, "use ConvShape::conv1d");
+    conv2d_reference(act, 1, act_len, weights, shape)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn flatten_is_reinterpretation() {
+        let shape = ConvShape::conv2d(2, 2, 2, 4);
+        let w: Vec<f32> = (0..shape.weight_len()).map(|i| i as f32).collect();
+        let d = flatten_filters(&w, shape);
+        assert_eq!(d.rows, 2);
+        assert_eq!(d.cols, 16);
+        assert_eq!(unflatten_filters(&d, shape), w);
+        // flat col of (kh=1, kw=0, ic=3) = (1*2+0)*4+3 = 11.
+        assert_eq!(shape.flatten_col(1, 0, 3), 11);
+        assert_eq!(shape.unflatten_col(11), (1, 0, 3));
+    }
+
+    #[test]
+    fn engine_offsets_match_paper_example() {
+        // Paper §V: 2×2 filter, 4 channels, first group indices
+        // {0, 3, 6, WC+1} where the flat indices were {0,3,6,9}: flat 9 =
+        // (kh=1,kw=0,ic=1) so offset = 9 + 1*(W-2)*4 = (W*4)+1 for act
+        // width W. Construct that exact group.
+        let shape = ConvShape::conv2d(1, 2, 2, 4);
+        let mut w = vec![0.0f32; shape.weight_len()];
+        for &f in &[0usize, 3, 6, 9] {
+            w[f] = 1.0;
+        }
+        let gc = GsConv::from_weights(&w, shape, Pattern::Gs { b: 4, k: 4 }).unwrap();
+        let act_w = 8;
+        let offs = gc.engine_offsets(act_w);
+        let mut offs_sorted = offs.clone();
+        offs_sorted.sort_unstable();
+        assert_eq!(offs_sorted, vec![0, 3, 6, (act_w as u32) * 4 + 1]);
+        assert!(gc.offsets_conflict_free(act_w));
+    }
+
+    #[test]
+    fn b_must_divide_in_ch() {
+        let shape = ConvShape::conv2d(1, 2, 2, 3);
+        let w = vec![1.0f32; shape.weight_len()];
+        assert!(GsConv::from_weights(&w, shape, Pattern::Gs { b: 4, k: 4 }).is_err());
+    }
+
+    #[test]
+    fn conv2d_reference_known_value() {
+        // 1 output channel, 1x1 kernel, identity-ish check.
+        let shape = ConvShape::conv2d(1, 1, 1, 2);
+        let weights = vec![2.0, 3.0]; // o=0: w[ic=0]=2, w[ic=1]=3
+        let act = vec![
+            1.0, 1.0, /* pixel (0,0) */
+            2.0, 0.5, /* pixel (0,1) */
+        ];
+        let out = conv2d_reference(&act, 1, 2, &weights, shape);
+        assert_eq!(out, vec![5.0, 5.5]);
+    }
+
+    #[test]
+    fn conv1d_matches_manual() {
+        // O=1, L=2, I=1: simple correlation.
+        let shape = ConvShape::conv1d(1, 2, 1);
+        let weights = vec![1.0, -1.0];
+        let act = vec![3.0, 5.0, 2.0];
+        // out[t] = act[t]*1 + act[t+1]*(-1)
+        assert_eq!(conv1d_reference(&act, 3, &weights, shape), vec![-2.0, 3.0]);
+    }
+
+    #[test]
+    fn gsconv_roundtrip_preserves_values() {
+        let mut rng = Prng::new(7);
+        let shape = ConvShape::conv2d(4, 3, 3, 8);
+        // Build weights whose flat mask is GS(8,8)-valid: per row take one
+        // entry per residue class per group; simplest: first 8 flat columns
+        // (residues 0..7).
+        let mut w = vec![0.0f32; shape.weight_len()];
+        for o in 0..4 {
+            for j in 0..8 {
+                w[o * shape.flat_cols() + j] = rng.gaussian_f32();
+            }
+        }
+        let gc = GsConv::from_weights(&w, shape, Pattern::Gs { b: 8, k: 8 }).unwrap();
+        let flat = gc.gs.to_dense();
+        assert_eq!(unflatten_filters(&flat, shape), w);
+    }
+}

@@ -1,0 +1,193 @@
+//! Row-major dense matrices and boolean masks.
+
+use crate::util::prng::Prng;
+
+/// A row-major dense f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dense {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Dense {
+    pub fn zeros(rows: usize, cols: usize) -> Dense {
+        Dense {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Dense {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Dense { rows, cols, data }
+    }
+
+    /// iid N(0, scale²) entries — the stand-in weight initializer.
+    pub fn random(rows: usize, cols: usize, scale: f32, rng: &mut Prng) -> Dense {
+        Dense {
+            rows,
+            cols,
+            data: rng.normal_vec(rows * cols, scale),
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Count of non-zero entries.
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|&&v| v != 0.0).count()
+    }
+
+    /// Fraction of zero entries.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnz() as f64 / self.data.len() as f64
+    }
+
+    /// Element-wise multiply by a mask (prune in place).
+    pub fn apply_mask(&mut self, mask: &Mask) {
+        assert_eq!((self.rows, self.cols), (mask.rows, mask.cols));
+        for (v, &keep) in self.data.iter_mut().zip(&mask.data) {
+            if !keep {
+                *v = 0.0;
+            }
+        }
+    }
+
+    /// Dense mat-vec: y = W x  (x has `cols` entries, y has `rows`).
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        (0..self.rows)
+            .map(|r| {
+                self.row(r)
+                    .iter()
+                    .zip(x)
+                    .map(|(&w, &a)| w * a)
+                    .sum::<f32>()
+            })
+            .collect()
+    }
+
+    /// The mask of current non-zeros.
+    pub fn nonzero_mask(&self) -> Mask {
+        Mask {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| v != 0.0).collect(),
+        }
+    }
+}
+
+/// A boolean keep/prune mask with the same layout as [`Dense`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mask {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<bool>,
+}
+
+impl Mask {
+    pub fn all_true(rows: usize, cols: usize) -> Mask {
+        Mask {
+            rows,
+            cols,
+            data: vec![true; rows * cols],
+        }
+    }
+
+    pub fn all_false(rows: usize, cols: usize) -> Mask {
+        Mask {
+            rows,
+            cols,
+            data: vec![false; rows * cols],
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> bool {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: bool) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Number of kept (true) entries.
+    pub fn kept(&self) -> usize {
+        self.data.iter().filter(|&&b| b).count()
+    }
+
+    /// Fraction pruned.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.kept() as f64 / self.data.len() as f64
+    }
+
+    /// Column indices kept in row `r`.
+    pub fn row_indices(&self, r: usize) -> Vec<usize> {
+        (0..self.cols).filter(|&c| self.at(r, c)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_roundtrip() {
+        let mut m = Dense::zeros(3, 4);
+        m.set(2, 3, 7.5);
+        assert_eq!(m.at(2, 3), 7.5);
+        assert_eq!(m.nnz(), 1);
+    }
+
+    #[test]
+    fn matvec_matches_manual() {
+        let w = Dense::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let y = w.matvec(&[1.0, 1.0, 1.0]);
+        assert_eq!(y, vec![6.0, 15.0]);
+    }
+
+    #[test]
+    fn mask_application() {
+        let mut w = Dense::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let mut mask = Mask::all_true(2, 2);
+        mask.set(0, 1, false);
+        mask.set(1, 0, false);
+        w.apply_mask(&mask);
+        assert_eq!(w.data, vec![1.0, 0.0, 0.0, 4.0]);
+        assert!((w.sparsity() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nonzero_mask_roundtrip() {
+        let w = Dense::from_vec(2, 2, vec![0.0, 2.0, 0.0, 4.0]);
+        let m = w.nonzero_mask();
+        assert_eq!(m.kept(), 2);
+        assert!(m.at(0, 1) && m.at(1, 1));
+        assert!(!m.at(0, 0) && !m.at(1, 0));
+    }
+
+    #[test]
+    fn random_matrix_moments() {
+        let mut rng = Prng::new(1);
+        let w = Dense::random(64, 64, 0.5, &mut rng);
+        let mean = w.data.iter().sum::<f32>() / 4096.0;
+        assert!(mean.abs() < 0.05);
+    }
+}

@@ -1,0 +1,26 @@
+//! Sparse patterns and formats (paper §IV–§V).
+//!
+//! * [`dense`] — row-major dense matrices and masks (the substrate every
+//!   format converts to/from and every kernel is checked against).
+//! * [`pattern`] — the pattern family: irregular, `Block(B,k)`, `GS(B,k)`,
+//!   `GS_scatter(B,k)` with the Definition 4.1 validators.
+//! * [`format`] — the compact gather-scatter format of Fig. 3(b)(d):
+//!   `value` / `index` / `indptr` (+ `rowmap` for scatter), plus the joined
+//!   value+index layout the paper suggests for cache locality.
+//! * [`csr`] — CSR/COO baselines (used for the §IV bank-conflict claim).
+//! * [`block`] — block-sparse (BSR-like) baseline for `Block(B,k)`.
+//! * [`conv`] — Definition 4.2: OhwI/OLI filter flattening and the
+//!   kernel-shape-aware engine offsets ((W−w)·C row adjustment, §V).
+
+pub mod block;
+pub mod conv;
+pub mod csr;
+pub mod dense;
+pub mod format;
+pub mod pattern;
+
+pub use block::BlockSparse;
+pub use csr::{Coo, Csr};
+pub use dense::{Dense, Mask};
+pub use format::GsFormat;
+pub use pattern::{Pattern, PatternError};

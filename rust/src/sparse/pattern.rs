@@ -1,0 +1,378 @@
+//! The sparse pattern family and its validators (paper Definition 4.1).
+//!
+//! `GS(B,k)` — in every *band* of `B/k` consecutive rows: (i) every row has
+//! the same number of non-zeros (`N·k/B` where `N` is the band total), and
+//! (ii) every column-residue class mod `B` holds exactly `N/B` of the
+//! band's non-zeros. Horizontal is `GS(B,B)` (band = one row), vertical is
+//! `GS(B,1)` (band = `B` rows), scatter is `GS(B,k)` after some row
+//! permutation. `Block(B,k)` is the structured baseline: aligned `B/k × k`
+//! (rows × cols) blocks that are entirely zero or entirely non-zero.
+
+use super::dense::Mask;
+use std::fmt;
+
+/// A sparsity pattern family with its parameters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pattern {
+    /// Unconstrained fine-grained sparsity (accuracy upper bound).
+    Irregular,
+    /// Block(B,k): aligned blocks of `k` columns × `B/k` rows, all-or-none.
+    Block { b: usize, k: usize },
+    /// GS(B,k): load-balanced gather-scatter pattern (Definition 4.1).
+    Gs { b: usize, k: usize },
+    /// GS_scatter(B,k): GS(B,k) up to a row permutation.
+    GsScatter { b: usize, k: usize },
+}
+
+/// Why a mask fails a pattern check.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PatternError {
+    BadParams(String),
+    RowImbalance {
+        band: usize,
+        row: usize,
+        got: usize,
+        want: usize,
+    },
+    ResidueImbalance {
+        band: usize,
+        residue: usize,
+        got: usize,
+        want: usize,
+    },
+    BandNotDivisible {
+        band: usize,
+        nnz: usize,
+        b: usize,
+    },
+    MisalignedBlock {
+        row: usize,
+        col: usize,
+    },
+    NoValidPermutation,
+}
+
+impl fmt::Display for PatternError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PatternError::BadParams(m) => write!(f, "bad pattern parameters: {m}"),
+            PatternError::RowImbalance { band, row, got, want } => write!(
+                f,
+                "band {band}: row {row} has {got} non-zeros, band requires {want} per row"
+            ),
+            PatternError::ResidueImbalance { band, residue, got, want } => write!(
+                f,
+                "band {band}: residue class {residue} has {got} non-zeros, want {want}"
+            ),
+            PatternError::BandNotDivisible { band, nnz, b } => {
+                write!(f, "band {band}: nnz {nnz} not divisible by B={b}")
+            }
+            PatternError::MisalignedBlock { row, col } => {
+                write!(f, "partial block at ({row},{col})")
+            }
+            PatternError::NoValidPermutation => {
+                write!(f, "no row permutation satisfies GS(B,k)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PatternError {}
+
+impl Pattern {
+    /// Short display name matching the paper's notation.
+    pub fn name(&self) -> String {
+        match self {
+            Pattern::Irregular => "Irregular".to_string(),
+            Pattern::Block { b, k } => format!("Block({b},{k})"),
+            Pattern::Gs { b, k } => format!("GS({b},{k})"),
+            Pattern::GsScatter { b, k } => format!("GSscatter({b},{k})"),
+        }
+    }
+
+    /// Parameter sanity: k divides B, B > 0.
+    pub fn check_params(&self) -> Result<(), PatternError> {
+        match *self {
+            Pattern::Irregular => Ok(()),
+            Pattern::Block { b, k } | Pattern::Gs { b, k } | Pattern::GsScatter { b, k } => {
+                if b == 0 || k == 0 {
+                    Err(PatternError::BadParams(format!("B={b}, k={k} must be > 0")))
+                } else if b % k != 0 {
+                    Err(PatternError::BadParams(format!("k={k} must divide B={b}")))
+                } else {
+                    Ok(())
+                }
+            }
+        }
+    }
+
+    /// Rows per band (`B/k` for GS/Block; 1 for irregular).
+    pub fn band_rows(&self) -> usize {
+        match *self {
+            Pattern::Irregular => 1,
+            Pattern::Block { b, k } | Pattern::Gs { b, k } | Pattern::GsScatter { b, k } => b / k,
+        }
+    }
+
+    /// Validate `mask` against this pattern (Definition 4.1 for GS,
+    /// aligned-blocks for Block, always-ok for Irregular).
+    pub fn validate(&self, mask: &Mask) -> Result<(), PatternError> {
+        self.check_params()?;
+        match *self {
+            Pattern::Irregular => Ok(()),
+            Pattern::Gs { b, k } => validate_gs(mask, b, k),
+            Pattern::GsScatter { b, k } => validate_gs_scatter(mask, b, k),
+            Pattern::Block { b, k } => validate_block(mask, b, k),
+        }
+    }
+}
+
+/// Definition 4.1 check on every band of `B/k` consecutive rows.
+fn validate_gs(mask: &Mask, b: usize, k: usize) -> Result<(), PatternError> {
+    let band_rows = b / k;
+    if mask.rows % band_rows != 0 {
+        return Err(PatternError::BadParams(format!(
+            "rows {} not divisible by B/k = {band_rows}",
+            mask.rows
+        )));
+    }
+    for band in 0..mask.rows / band_rows {
+        validate_gs_band(
+            mask,
+            band,
+            (band * band_rows..(band + 1) * band_rows).collect::<Vec<_>>(),
+            b,
+            k,
+        )?;
+    }
+    Ok(())
+}
+
+/// Check one band given its (possibly permuted) member rows.
+fn validate_gs_band(
+    mask: &Mask,
+    band: usize,
+    rows: Vec<usize>,
+    b: usize,
+    k: usize,
+) -> Result<(), PatternError> {
+    let band_rows = b / k;
+    debug_assert_eq!(rows.len(), band_rows);
+    let mut residue_counts = vec![0usize; b];
+    let mut row_counts = Vec::with_capacity(band_rows);
+    for &r in &rows {
+        let mut count = 0;
+        for c in 0..mask.cols {
+            if mask.at(r, c) {
+                count += 1;
+                residue_counts[c % b] += 1;
+            }
+        }
+        row_counts.push(count);
+    }
+    let n: usize = row_counts.iter().sum();
+    if n == 0 {
+        return Ok(()); // an empty band is trivially balanced
+    }
+    if n % b != 0 {
+        return Err(PatternError::BandNotDivisible { band, nnz: n, b });
+    }
+    let per_row = n * k / b; // = N·k/B
+    for (i, &rc) in row_counts.iter().enumerate() {
+        if rc != per_row {
+            return Err(PatternError::RowImbalance {
+                band,
+                row: rows[i],
+                got: rc,
+                want: per_row,
+            });
+        }
+    }
+    let per_residue = n / b;
+    for (residue, &c) in residue_counts.iter().enumerate() {
+        if c != per_residue {
+            return Err(PatternError::ResidueImbalance {
+                band,
+                residue,
+                got: c,
+                want: per_residue,
+            });
+        }
+    }
+    Ok(())
+}
+
+/// GS_scatter: greedily pair rows with equal nnz into bands (the pruning
+/// algorithm sorts rows by nnz, so rows that can band together have equal
+/// counts); then each candidate band must pass the residue balance. This is
+/// a sound (constructive) check: if it succeeds a permutation exists; it
+/// matches the permutations our own pruner generates.
+fn validate_gs_scatter(mask: &Mask, b: usize, k: usize) -> Result<(), PatternError> {
+    let band_rows = b / k;
+    if mask.rows % band_rows != 0 {
+        return Err(PatternError::BadParams(format!(
+            "rows {} not divisible by B/k = {band_rows}",
+            mask.rows
+        )));
+    }
+    // Sort rows by nnz (stable by index), band consecutive sorted rows.
+    let mut order: Vec<usize> = (0..mask.rows).collect();
+    let nnz: Vec<usize> = (0..mask.rows)
+        .map(|r| (0..mask.cols).filter(|&c| mask.at(r, c)).count())
+        .collect();
+    order.sort_by_key(|&r| (nnz[r], r));
+    for band in 0..mask.rows / band_rows {
+        let rows = order[band * band_rows..(band + 1) * band_rows].to_vec();
+        validate_gs_band(mask, band, rows, b, k).map_err(|_| PatternError::NoValidPermutation)?;
+    }
+    Ok(())
+}
+
+/// Block(B,k): non-zeros come in aligned, fully-populated `B/k × k` blocks.
+fn validate_block(mask: &Mask, b: usize, k: usize) -> Result<(), PatternError> {
+    let br = b / k; // block rows
+    if mask.rows % br != 0 || mask.cols % k != 0 {
+        return Err(PatternError::BadParams(format!(
+            "shape {}x{} not divisible by block {br}x{k}",
+            mask.rows, mask.cols
+        )));
+    }
+    for r0 in (0..mask.rows).step_by(br) {
+        for c0 in (0..mask.cols).step_by(k) {
+            let mut any = false;
+            let mut all = true;
+            for r in r0..r0 + br {
+                for c in c0..c0 + k {
+                    if mask.at(r, c) {
+                        any = true;
+                    } else {
+                        all = false;
+                    }
+                }
+            }
+            if any && !all {
+                return Err(PatternError::MisalignedBlock { row: r0, col: c0 });
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mask_from(rows: usize, cols: usize, ones: &[(usize, usize)]) -> Mask {
+        let mut m = Mask::all_false(rows, cols);
+        for &(r, c) in ones {
+            m.set(r, c, true);
+        }
+        m
+    }
+
+    #[test]
+    fn params_checked() {
+        assert!(Pattern::Gs { b: 4, k: 3 }.check_params().is_err());
+        assert!(Pattern::Gs { b: 4, k: 2 }.check_params().is_ok());
+        assert!(Pattern::Gs { b: 0, k: 1 }.check_params().is_err());
+    }
+
+    #[test]
+    fn gs_horizontal_accepts_paper_fig3a_row() {
+        // Paper Fig. 3(a) row i: col indices {4,7,13,14} ≡ {0,3,1,2} mod 4.
+        let m = mask_from(1, 16, &[(0, 4), (0, 7), (0, 13), (0, 14)]);
+        Pattern::Gs { b: 4, k: 4 }.validate(&m).unwrap();
+    }
+
+    #[test]
+    fn gs_horizontal_rejects_conflict() {
+        // Two indices share residue 0 mod 4.
+        let m = mask_from(1, 16, &[(0, 0), (0, 4), (0, 1), (0, 2)]);
+        let err = Pattern::Gs { b: 4, k: 4 }.validate(&m).unwrap_err();
+        assert!(matches!(err, PatternError::ResidueImbalance { .. }));
+    }
+
+    #[test]
+    fn gs_vertical_accepts_one_per_row() {
+        // B=4, k=1: band of 4 rows, one nnz each, residues 0..3.
+        let m = mask_from(4, 8, &[(0, 0), (1, 5), (2, 2), (3, 7)]);
+        Pattern::Gs { b: 4, k: 1 }.validate(&m).unwrap();
+    }
+
+    #[test]
+    fn gs_vertical_rejects_row_imbalance() {
+        // Row 0 has 2, row 1 has 0 → imbalance even though residues are fine.
+        let m = mask_from(4, 8, &[(0, 0), (0, 5), (2, 2), (3, 7)]);
+        let err = Pattern::Gs { b: 4, k: 1 }.validate(&m).unwrap_err();
+        assert!(matches!(err, PatternError::RowImbalance { .. }));
+    }
+
+    #[test]
+    fn gs_hybrid_band_of_two_rows() {
+        // B=4, k=2: band = 2 rows, 2 per row, residues {0,1,2,3}.
+        let m = mask_from(2, 8, &[(0, 0), (0, 5), (1, 2), (1, 7)]);
+        Pattern::Gs { b: 4, k: 2 }.validate(&m).unwrap();
+    }
+
+    #[test]
+    fn gs_band_nnz_must_divide_b() {
+        let m = mask_from(1, 8, &[(0, 0), (0, 1), (0, 2)]);
+        let err = Pattern::Gs { b: 4, k: 4 }.validate(&m).unwrap_err();
+        assert!(matches!(err, PatternError::BandNotDivisible { .. }));
+    }
+
+    #[test]
+    fn empty_mask_is_valid_gs() {
+        let m = Mask::all_false(4, 8);
+        Pattern::Gs { b: 4, k: 1 }.validate(&m).unwrap();
+    }
+
+    #[test]
+    fn scatter_accepts_permuted_vertical() {
+        // Rows 0 and 2 have 2 nnz; rows 1 and 3 have 2 nnz — but grouped by
+        // sorted order they balance. Build an explicitly permuted GS(4,1):
+        // bands {0,2,5,7} won't happen; instead simply shuffle rows of a
+        // valid vertical mask.
+        let m = mask_from(
+            4,
+            8,
+            &[(2, 0), (0, 5), (3, 2), (1, 7)], // permutation of the vertical test
+        );
+        Pattern::GsScatter { b: 4, k: 1 }.validate(&m).unwrap();
+    }
+
+    #[test]
+    fn block_horizontal_accepts_aligned_run() {
+        // Block(4,4): 1x4 aligned blocks.
+        let m = mask_from(1, 8, &[(0, 4), (0, 5), (0, 6), (0, 7)]);
+        Pattern::Block { b: 4, k: 4 }.validate(&m).unwrap();
+    }
+
+    #[test]
+    fn block_rejects_partial_block() {
+        let m = mask_from(1, 8, &[(0, 4), (0, 5), (0, 6)]);
+        let err = Pattern::Block { b: 4, k: 4 }.validate(&m).unwrap_err();
+        assert!(matches!(err, PatternError::MisalignedBlock { .. }));
+    }
+
+    #[test]
+    fn block_vertical_accepts_column_run() {
+        // Block(4,1): 4x1 aligned blocks.
+        let m = mask_from(4, 2, &[(0, 1), (1, 1), (2, 1), (3, 1)]);
+        Pattern::Block { b: 4, k: 1 }.validate(&m).unwrap();
+    }
+
+    #[test]
+    fn names_match_paper_notation() {
+        assert_eq!(Pattern::Gs { b: 8, k: 8 }.name(), "GS(8,8)");
+        assert_eq!(Pattern::Block { b: 16, k: 1 }.name(), "Block(16,1)");
+        assert_eq!(Pattern::GsScatter { b: 8, k: 2 }.name(), "GSscatter(8,2)");
+    }
+
+    #[test]
+    fn band_rows_by_kind() {
+        assert_eq!(Pattern::Gs { b: 8, k: 8 }.band_rows(), 1);
+        assert_eq!(Pattern::Gs { b: 8, k: 1 }.band_rows(), 8);
+        assert_eq!(Pattern::Gs { b: 8, k: 2 }.band_rows(), 4);
+    }
+}

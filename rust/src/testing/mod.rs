@@ -1,0 +1,242 @@
+//! In-tree property-testing mini-framework (proptest substitute).
+//!
+//! The offline registry has no `proptest`, so invariant tests use this
+//! small framework: seeded generators over a [`Prng`], a `forall` driver
+//! that runs N cases, and greedy input shrinking on failure for the common
+//! generator shapes (integers, vectors). Failures report the seed and the
+//! shrunken counterexample so a case can be replayed deterministically.
+
+use crate::util::prng::Prng;
+
+/// Number of cases per property (overridable with GS_PROPTEST_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("GS_PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// A generator produces a value from randomness and can propose smaller
+/// variants of a failing value for shrinking.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Prng) -> Self::Value;
+    /// Candidate simplifications of `v`, in decreasing preference. Default:
+    /// no shrinking.
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Uniform usize in [lo, hi] inclusive.
+pub struct UsizeIn {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Gen for UsizeIn {
+    type Value = usize;
+    fn generate(&self, rng: &mut Prng) -> usize {
+        rng.range(self.lo, self.hi + 1)
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (*v - self.lo) / 2);
+            out.push(*v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Pick one of a fixed set of values.
+pub struct OneOf<T: Clone + std::fmt::Debug>(pub Vec<T>);
+
+impl<T: Clone + std::fmt::Debug> Gen for OneOf<T> {
+    type Value = T;
+    fn generate(&self, rng: &mut Prng) -> T {
+        self.0[rng.below(self.0.len())].clone()
+    }
+    fn shrink(&self, v: &T) -> Vec<T>
+    where
+        T: Clone,
+    {
+        // Shrink toward the first element of the choice list.
+        let first = self.0.first().cloned();
+        match first {
+            Some(f) if format!("{f:?}") != format!("{v:?}") => vec![f],
+            _ => vec![],
+        }
+    }
+}
+
+/// Vector of f32 weights with a configurable length range; values are
+/// standard-normal. Shrinks by halving length and zeroing entries.
+pub struct WeightVec {
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+impl Gen for WeightVec {
+    type Value = Vec<f32>;
+    fn generate(&self, rng: &mut Prng) -> Vec<f32> {
+        let n = rng.range(self.min_len, self.max_len + 1);
+        rng.normal_vec(n, 1.0)
+    }
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            let half = self.min_len.max(v.len() / 2);
+            out.push(v[..half].to_vec());
+            out.push(v[..v.len() - 1].to_vec());
+        }
+        if v.iter().any(|&x| x != 0.0) {
+            out.push(vec![0.0; v.len()]);
+        }
+        out
+    }
+}
+
+/// Outcome of a single property case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `prop` over `cases` generated inputs; on failure, shrink greedily
+/// and panic with the seed + minimal counterexample.
+pub fn forall<G: Gen>(name: &str, gen: &G, cases: usize, prop: impl Fn(&G::Value) -> CaseResult) {
+    let seed = std::env::var("GS_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    let mut rng = Prng::new(seed);
+    for case in 0..cases {
+        let value = gen.generate(&mut rng);
+        if let Err(msg) = prop(&value) {
+            // Greedy shrink: repeatedly take the first shrink candidate that
+            // still fails, until none do.
+            let mut cur = value;
+            let mut cur_msg = msg;
+            'outer: loop {
+                for cand in gen.shrink(&cur) {
+                    if let Err(m) = prop(&cand) {
+                        cur = cand;
+                        cur_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed (seed={seed}, case={case}):\n  \
+                 counterexample: {cur:?}\n  error: {cur_msg}"
+            );
+        }
+    }
+}
+
+/// Two-generator convenience.
+pub fn forall2<G1: Gen, G2: Gen>(
+    name: &str,
+    g1: &G1,
+    g2: &G2,
+    cases: usize,
+    prop: impl Fn(&G1::Value, &G2::Value) -> CaseResult,
+) {
+    struct Pair<'a, A, B>(&'a A, &'a B);
+    impl<'a, A: Gen, B: Gen> Gen for Pair<'a, A, B> {
+        type Value = (A::Value, B::Value);
+        fn generate(&self, rng: &mut Prng) -> Self::Value {
+            (self.0.generate(rng), self.1.generate(rng))
+        }
+        fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+            let mut out: Vec<Self::Value> = self
+                .0
+                .shrink(&v.0)
+                .into_iter()
+                .map(|a| (a, v.1.clone()))
+                .collect();
+            out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+            out
+        }
+    }
+    forall(name, &Pair(g1, g2), cases, |(a, b)| prop(a, b));
+}
+
+/// Assert two f32 slices match within absolute + relative tolerance.
+pub fn assert_allclose(actual: &[f32], expected: &[f32], atol: f32, rtol: f32) -> CaseResult {
+    if actual.len() != expected.len() {
+        return Err(format!(
+            "length mismatch: {} vs {}",
+            actual.len(),
+            expected.len()
+        ));
+    }
+    for (i, (&a, &e)) in actual.iter().zip(expected).enumerate() {
+        let tol = atol + rtol * e.abs();
+        if (a - e).abs() > tol {
+            return Err(format!("index {i}: {a} vs {e} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivially() {
+        forall("true", &UsizeIn { lo: 0, hi: 100 }, 32, |_| Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "counterexample: 11")]
+    fn forall_shrinks_to_boundary() {
+        // Property "x <= 10" over [0,100] should shrink to 11.
+        forall("le10", &UsizeIn { lo: 0, hi: 100 }, 200, |&x| {
+            if x <= 10 {
+                Ok(())
+            } else {
+                Err(format!("{x} > 10"))
+            }
+        });
+    }
+
+    #[test]
+    fn weight_vec_respects_bounds() {
+        let g = WeightVec {
+            min_len: 3,
+            max_len: 9,
+        };
+        let mut rng = Prng::new(1);
+        for _ in 0..50 {
+            let v = g.generate(&mut rng);
+            assert!((3..=9).contains(&v.len()));
+        }
+    }
+
+    #[test]
+    fn allclose_detects_mismatch() {
+        assert!(assert_allclose(&[1.0, 2.0], &[1.0, 2.0], 1e-6, 1e-6).is_ok());
+        assert!(assert_allclose(&[1.0, 2.1], &[1.0, 2.0], 1e-6, 1e-6).is_err());
+        assert!(assert_allclose(&[1.0], &[1.0, 2.0], 1e-6, 1e-6).is_err());
+    }
+
+    #[test]
+    fn forall2_runs() {
+        forall2(
+            "sum-commutes",
+            &UsizeIn { lo: 0, hi: 50 },
+            &UsizeIn { lo: 0, hi: 50 },
+            32,
+            |&a, &b| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,175 @@
+//! Synthetic task generators (the WMT/ImageNet/LibriSpeech substitutes).
+//!
+//! Each generator is a pure function of (manifest config, seed), so every
+//! experiment row in EXPERIMENTS.md is reproducible. Train and eval draw
+//! from the same distribution with disjoint seeds.
+
+use crate::runtime::{ModelManifest, Tensor};
+use crate::util::prng::Prng;
+use anyhow::Result;
+
+/// A generated batch.
+pub struct Batch {
+    pub x: Tensor,
+    pub y: Tensor,
+}
+
+/// Task generator for one model family.
+pub enum TaskGen {
+    /// Sequence reversal over tokens `1..vocab` (micro-GNMT).
+    Reversal { vocab: usize, seq: usize, batch: usize },
+    /// Prototype classification: `x = proto[y] + σ·noise` (micro-ResNet /
+    /// micro-Jasper). Prototypes are fixed by `proto_seed`.
+    Prototype {
+        classes: usize,
+        feature_shape: Vec<usize>,
+        batch: usize,
+        protos: Vec<f32>,
+        noise: f32,
+    },
+}
+
+impl TaskGen {
+    /// Build the generator matching a model manifest.
+    pub fn for_model(m: &ModelManifest, proto_seed: u64) -> Result<TaskGen> {
+        Ok(match m.name.as_str() {
+            "gnmt" => TaskGen::Reversal {
+                vocab: m.cfg("vocab")?,
+                seq: m.cfg("seq")?,
+                batch: m.cfg("batch")?,
+            },
+            "resnet" => {
+                let classes = m.cfg("classes")?;
+                let size = m.cfg("size")?;
+                let in_ch = m.cfg("in_ch")?;
+                let feature_shape = vec![size, size, in_ch];
+                let n: usize = feature_shape.iter().product();
+                let mut rng = Prng::new(proto_seed);
+                TaskGen::Prototype {
+                    classes,
+                    feature_shape,
+                    batch: m.cfg("batch")?,
+                    protos: rng.normal_vec(classes * n, 1.0),
+                    noise: 0.4,
+                }
+            }
+            "jasper" => {
+                let classes = m.cfg("classes")?;
+                let seq = m.cfg("seq")?;
+                let in_ch = m.cfg("in_ch")?;
+                let feature_shape = vec![seq, in_ch];
+                let n: usize = feature_shape.iter().product();
+                let mut rng = Prng::new(proto_seed ^ 0x9E37);
+                TaskGen::Prototype {
+                    classes,
+                    feature_shape,
+                    batch: m.cfg("batch")?,
+                    protos: rng.normal_vec(classes * n, 1.0),
+                    noise: 0.5,
+                }
+            }
+            other => anyhow::bail!("no task generator for model {other}"),
+        })
+    }
+
+    /// Generate one batch from `rng`.
+    pub fn batch(&self, rng: &mut Prng) -> Batch {
+        match self {
+            TaskGen::Reversal { vocab, seq, batch } => {
+                let mut x = Vec::with_capacity(batch * seq);
+                let mut y = Vec::with_capacity(batch * seq);
+                for _ in 0..*batch {
+                    let tokens: Vec<i32> =
+                        (0..*seq).map(|_| rng.range(1, *vocab) as i32).collect();
+                    x.extend(&tokens);
+                    y.extend(tokens.iter().rev());
+                }
+                Batch {
+                    x: Tensor::i32(&[*batch, *seq], x),
+                    y: Tensor::i32(&[*batch, *seq], y),
+                }
+            }
+            TaskGen::Prototype {
+                classes,
+                feature_shape,
+                batch,
+                protos,
+                noise,
+            } => {
+                let n: usize = feature_shape.iter().product();
+                let mut x = Vec::with_capacity(batch * n);
+                let mut y = Vec::with_capacity(*batch);
+                for _ in 0..*batch {
+                    let class = rng.below(*classes);
+                    y.push(class as i32);
+                    let proto = &protos[class * n..(class + 1) * n];
+                    x.extend(proto.iter().map(|&p| p + noise * rng.gaussian_f32()));
+                }
+                let mut shape = vec![*batch];
+                shape.extend(feature_shape);
+                Batch {
+                    x: Tensor::f32(&shape, x),
+                    y: Tensor::i32(&[*batch], y),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reversal_batches_reverse() {
+        let gen = TaskGen::Reversal { vocab: 8, seq: 5, batch: 3 };
+        let mut rng = Prng::new(1);
+        let b = gen.batch(&mut rng);
+        assert_eq!(b.x.shape(), &[3, 5]);
+        let (x, y) = match (&b.x, &b.y) {
+            (Tensor::I32 { data: x, .. }, Tensor::I32 { data: y, .. }) => (x, y),
+            _ => panic!("wrong dtypes"),
+        };
+        for row in 0..3 {
+            let xr = &x[row * 5..(row + 1) * 5];
+            let yr = &y[row * 5..(row + 1) * 5];
+            let rev: Vec<i32> = xr.iter().rev().copied().collect();
+            assert_eq!(yr, rev.as_slice());
+            assert!(xr.iter().all(|&t| (1..8).contains(&t)));
+        }
+    }
+
+    #[test]
+    fn prototype_batches_cluster_around_protos() {
+        let mut rng = Prng::new(2);
+        let protos = rng.normal_vec(4 * 6, 1.0);
+        let gen = TaskGen::Prototype {
+            classes: 4,
+            feature_shape: vec![6],
+            batch: 16,
+            protos: protos.clone(),
+            noise: 0.01,
+        };
+        let b = gen.batch(&mut rng);
+        let (x, y) = match (&b.x, &b.y) {
+            (Tensor::F32 { data: x, .. }, Tensor::I32 { data: y, .. }) => (x, y),
+            _ => panic!("wrong dtypes"),
+        };
+        for i in 0..16 {
+            let cls = y[i] as usize;
+            let xi = &x[i * 6..(i + 1) * 6];
+            let pi = &protos[cls * 6..(cls + 1) * 6];
+            let dist: f32 = xi.iter().zip(pi).map(|(a, b)| (a - b).abs()).sum();
+            assert!(dist < 0.5, "sample {i} far from its prototype: {dist}");
+        }
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let gen = TaskGen::Reversal { vocab: 8, seq: 4, batch: 2 };
+        let b1 = gen.batch(&mut Prng::new(5));
+        let b2 = gen.batch(&mut Prng::new(5));
+        assert_eq!(b1.x, b2.x);
+        assert_eq!(b1.y, b2.y);
+    }
+}

@@ -1,0 +1,14 @@
+//! Prune→retrain orchestrator (paper §VI/§X, driving Figs. 1/5, Table I).
+//!
+//! Rust owns the whole experiment loop: it initializes parameters,
+//! generates synthetic batches, executes the AOT train/eval artifacts via
+//! PJRT, computes pattern masks with [`crate::pruning`], and applies the
+//! paper's prune-from-dense / iterative-pruning schedules. Python never
+//! runs here.
+
+pub mod data;
+pub mod experiments;
+pub mod session;
+
+pub use experiments::{run_quality, QualityResult};
+pub use session::TrainSession;

@@ -1,0 +1,335 @@
+//! One model's training state driven through the AOT artifacts.
+
+use super::data::TaskGen;
+use crate::pruning::prune as prune_mask;
+use crate::runtime::{Executable, ModelManifest, Runtime, Tensor};
+use crate::sparse::dense::{Dense, Mask};
+use crate::sparse::pattern::Pattern;
+use crate::util::prng::Prng;
+use anyhow::{Context, Result};
+
+/// Training session: parameters + Adam state + masks + task generator,
+/// with the train/eval artifacts compiled once.
+pub struct TrainSession {
+    pub manifest: ModelManifest,
+    train_exe: Executable,
+    eval_exe: Executable,
+    pub params: Vec<Tensor>,
+    mstate: Vec<Tensor>,
+    vstate: Vec<Tensor>,
+    t: Tensor,
+    /// Masks for prunable params, in spec order.
+    pub masks: Vec<Tensor>,
+    gen: TaskGen,
+    rng: Prng,
+}
+
+impl TrainSession {
+    /// Initialize with Glorot-normal weights (zero biases), all-ones masks.
+    pub fn new(rt: &Runtime, manifest: &ModelManifest, seed: u64) -> Result<TrainSession> {
+        let train_exe = rt.load_hlo(&manifest.train_path)?;
+        let eval_exe = rt.load_hlo(&manifest.eval_path)?;
+        let mut rng = Prng::new(seed);
+        let params: Vec<Tensor> = manifest
+            .params
+            .iter()
+            .map(|p| {
+                let n: usize = p.shape.iter().product();
+                if p.shape.len() >= 2 {
+                    let fan_in: usize = p.shape[..p.shape.len() - 1].iter().product();
+                    let fan_out = p.shape[p.shape.len() - 1];
+                    let scale = (2.0 / (fan_in + fan_out) as f32).sqrt();
+                    Tensor::f32(&p.shape, rng.normal_vec(n, scale))
+                } else {
+                    Tensor::zeros(&p.shape)
+                }
+            })
+            .collect();
+        let zeros_like: Vec<Tensor> = manifest
+            .params
+            .iter()
+            .map(|p| Tensor::zeros(&p.shape))
+            .collect();
+        let masks = manifest
+            .params
+            .iter()
+            .filter(|p| p.prunable)
+            .map(|p| Tensor::f32(&p.shape, vec![1.0; p.shape.iter().product()]))
+            .collect();
+        let gen = TaskGen::for_model(manifest, seed ^ 0xDA7A)?;
+        Ok(TrainSession {
+            manifest: manifest.clone(),
+            train_exe,
+            eval_exe,
+            params,
+            mstate: zeros_like.clone(),
+            vstate: zeros_like,
+            t: Tensor::scalar_f32(0.0),
+            masks,
+            gen,
+            rng,
+        })
+    }
+
+    fn train_inputs(&self, batch_x: Tensor, batch_y: Tensor) -> Vec<Tensor> {
+        let mut inputs = Vec::new();
+        inputs.extend(self.params.iter().cloned());
+        inputs.extend(self.mstate.iter().cloned());
+        inputs.extend(self.vstate.iter().cloned());
+        inputs.push(self.t.clone());
+        inputs.extend(self.masks.iter().cloned());
+        inputs.push(batch_x);
+        inputs.push(batch_y);
+        inputs
+    }
+
+    /// Run `steps` train steps on fresh synthetic batches; returns losses.
+    pub fn train_steps(&mut self, steps: usize) -> Result<Vec<f32>> {
+        let n = self.params.len();
+        let mut losses = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            let batch = self.gen.batch(&mut self.rng);
+            let inputs = self.train_inputs(batch.x, batch.y);
+            let mut out = self
+                .train_exe
+                .run(&inputs)
+                .context("train step execution")?;
+            anyhow::ensure!(out.len() == 3 * n + 2, "train output arity");
+            let loss = out.pop().unwrap().as_f32()?[0];
+            self.t = out.pop().unwrap();
+            self.vstate = out.split_off(2 * n);
+            self.mstate = out.split_off(n);
+            self.params = out;
+            losses.push(loss);
+        }
+        Ok(losses)
+    }
+
+    /// Evaluate on `batches` fresh batches; returns (mean loss, mean metric).
+    pub fn eval(&mut self, batches: usize) -> Result<(f32, f32)> {
+        let mut tot_loss = 0.0;
+        let mut tot_metric = 0.0;
+        for _ in 0..batches {
+            let batch = self.gen.batch(&mut self.rng);
+            let mut inputs = Vec::new();
+            inputs.extend(self.params.iter().cloned());
+            inputs.extend(self.masks.iter().cloned());
+            inputs.push(batch.x);
+            inputs.push(batch.y);
+            let out = self.eval_exe.run(&inputs).context("eval execution")?;
+            anyhow::ensure!(out.len() == 2, "eval output arity");
+            tot_loss += out[0].as_f32()?[0];
+            tot_metric += out[1].as_f32()?[0];
+        }
+        Ok((tot_loss / batches as f32, tot_metric / batches as f32))
+    }
+
+    /// Prune every prunable parameter to `sparsity` under `pattern`
+    /// (adapted per tensor, see [`fit_pattern`]), zeroing the pruned
+    /// weights and their Adam state.
+    pub fn prune(&mut self, pattern: Pattern, sparsity: f64) -> Result<()> {
+        let mut mask_idx = 0;
+        for (pi, spec) in self.manifest.params.clone().iter().enumerate() {
+            if !spec.prunable {
+                continue;
+            }
+            let view = MatrixView::of(spec.name.as_str(), &spec.shape);
+            let dense = view.extract(self.params[pi].as_f32()?);
+            let fitted = fit_pattern(pattern, dense.rows, dense.cols);
+            let mask = prune_mask(&dense, fitted, sparsity)
+                .with_context(|| format!("pruning {}", spec.name))?;
+            let flat_mask = view.restore_mask(&mask);
+            // Write the mask tensor and zero pruned weights + Adam state.
+            let mt = self.masks[mask_idx].as_f32_mut()?;
+            for (m, &keep) in mt.iter_mut().zip(&flat_mask) {
+                *m = if keep { 1.0 } else { 0.0 };
+            }
+            for tensor in [&mut self.params[pi], &mut self.mstate[pi], &mut self.vstate[pi]] {
+                let data = tensor.as_f32_mut()?;
+                for (v, &keep) in data.iter_mut().zip(&flat_mask) {
+                    if !keep {
+                        *v = 0.0;
+                    }
+                }
+            }
+            mask_idx += 1;
+        }
+        Ok(())
+    }
+
+    /// Capture the full mutable state (params, Adam state, masks, RNG), so
+    /// sweeps can train dense once and fork per pattern/sparsity.
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            params: self.params.clone(),
+            mstate: self.mstate.clone(),
+            vstate: self.vstate.clone(),
+            t: self.t.clone(),
+            masks: self.masks.clone(),
+            rng: self.rng.clone(),
+        }
+    }
+
+    /// Restore a [`Snapshot`] taken from this session.
+    pub fn restore(&mut self, s: &Snapshot) {
+        self.params = s.params.clone();
+        self.mstate = s.mstate.clone();
+        self.vstate = s.vstate.clone();
+        self.t = s.t.clone();
+        self.masks = s.masks.clone();
+        self.rng = s.rng.clone();
+    }
+
+    /// Achieved weight sparsity over prunable parameters.
+    pub fn sparsity(&self) -> f64 {
+        let mut zeros = 0usize;
+        let mut total = 0usize;
+        for m in &self.masks {
+            let d = m.as_f32().unwrap();
+            zeros += d.iter().filter(|&&v| v == 0.0).count();
+            total += d.len();
+        }
+        if total == 0 {
+            0.0
+        } else {
+            zeros as f64 / total as f64
+        }
+    }
+}
+
+/// A point-in-time copy of a session's mutable state.
+#[derive(Clone)]
+pub struct Snapshot {
+    params: Vec<Tensor>,
+    mstate: Vec<Tensor>,
+    vstate: Vec<Tensor>,
+    t: Tensor,
+    masks: Vec<Tensor>,
+    rng: Prng,
+}
+
+/// How a parameter tensor maps to the Definition 4.1/4.2 matrix the
+/// pattern constrains. `x @ W` layers are pruned on `Wᵀ` (the reduction
+/// dimension — the activation index — must be the *column* so residues map
+/// to TCM banks; Fig. 3 shows "transposed weight matrices"). OhwI/OLI conv
+/// filters are already `O × (flat)` in row-major.
+pub enum MatrixView {
+    /// rows/cols of the tensor as stored (conv: O × hwI).
+    Direct { rows: usize, cols: usize },
+    /// Transposed 2-D matmul weight ([in, out] stored, pruned as [out, in]).
+    Transposed { stored_rows: usize, stored_cols: usize },
+}
+
+impl MatrixView {
+    pub fn of(name: &str, shape: &[usize]) -> MatrixView {
+        if shape.len() > 2 || name.starts_with("conv") {
+            MatrixView::Direct {
+                rows: shape[0],
+                cols: shape[1..].iter().product(),
+            }
+        } else {
+            MatrixView::Transposed {
+                stored_rows: shape[0],
+                stored_cols: shape[1],
+            }
+        }
+    }
+
+    /// Extract the pattern-facing Dense matrix from flat tensor data.
+    pub fn extract(&self, data: &[f32]) -> Dense {
+        match *self {
+            MatrixView::Direct { rows, cols } => Dense::from_vec(rows, cols, data.to_vec()),
+            MatrixView::Transposed { stored_rows, stored_cols } => {
+                let mut out = Dense::zeros(stored_cols, stored_rows);
+                for r in 0..stored_rows {
+                    for c in 0..stored_cols {
+                        out.set(c, r, data[r * stored_cols + c]);
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Map a pattern-space mask back to the stored tensor's flat layout.
+    pub fn restore_mask(&self, mask: &Mask) -> Vec<bool> {
+        match *self {
+            MatrixView::Direct { .. } => mask.data.clone(),
+            MatrixView::Transposed { stored_rows, stored_cols } => {
+                let mut out = vec![false; stored_rows * stored_cols];
+                for r in 0..stored_rows {
+                    for c in 0..stored_cols {
+                        out[r * stored_cols + c] = mask.at(c, r);
+                    }
+                }
+                out
+            }
+        }
+    }
+}
+
+/// Adapt a pattern to a tensor whose shape cannot host it: vertical/hybrid
+/// GS (and vertical blocks) need `rows % (B/k) == 0`; when that fails we
+/// fall back to the horizontal variant with the same `B` (documented in
+/// DESIGN.md — affects only the tiny classifier heads of the micro
+/// models). Block patterns additionally need `cols % k == 0`.
+pub fn fit_pattern(pattern: Pattern, rows: usize, cols: usize) -> Pattern {
+    match pattern {
+        Pattern::Gs { b, k } if rows % (b / k) != 0 => Pattern::Gs { b, k: b },
+        Pattern::GsScatter { b, k } if rows % (b / k) != 0 => Pattern::Gs { b, k: b },
+        Pattern::Block { b, k } if rows % (b / k) != 0 || cols % k != 0 => {
+            Pattern::Block { b, k: b }
+        }
+        p => p,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_view_transposed_roundtrip() {
+        // Stored [2,3] (in=2, out=3) → pattern space [3,2].
+        let data = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let view = MatrixView::of("out_w", &[2, 3]);
+        let d = view.extract(&data);
+        assert_eq!((d.rows, d.cols), (3, 2));
+        assert_eq!(d.at(0, 0), 1.0); // stored (0,0)
+        assert_eq!(d.at(2, 1), 6.0); // stored (1,2)
+        let mut mask = Mask::all_false(3, 2);
+        mask.set(2, 1, true);
+        let flat = view.restore_mask(&mask);
+        assert_eq!(flat, vec![false, false, false, false, false, true]);
+    }
+
+    #[test]
+    fn matrix_view_conv_is_direct() {
+        let view = MatrixView::of("conv1", &[4, 3, 3, 8]);
+        match view {
+            MatrixView::Direct { rows, cols } => {
+                assert_eq!((rows, cols), (4, 72));
+            }
+            _ => panic!("conv must be direct"),
+        }
+    }
+
+    #[test]
+    fn fit_pattern_fallbacks() {
+        // [10,16] head cannot host GS(8,1) bands of 8 rows.
+        assert_eq!(
+            fit_pattern(Pattern::Gs { b: 8, k: 1 }, 10, 16),
+            Pattern::Gs { b: 8, k: 8 }
+        );
+        // Fits fine at 16 rows.
+        assert_eq!(
+            fit_pattern(Pattern::Gs { b: 8, k: 1 }, 16, 16),
+            Pattern::Gs { b: 8, k: 1 }
+        );
+        assert_eq!(
+            fit_pattern(Pattern::Block { b: 8, k: 1 }, 10, 16),
+            Pattern::Block { b: 8, k: 8 }
+        );
+        assert_eq!(fit_pattern(Pattern::Irregular, 10, 16), Pattern::Irregular);
+    }
+}

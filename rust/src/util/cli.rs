@@ -1,0 +1,136 @@
+//! Tiny declarative CLI argument parser (clap substitute).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments
+//! and subcommands. The binary (`rust/src/main.rs`) and examples use it.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// First positional argument, conventionally the subcommand.
+    pub command: Option<String>,
+    /// Remaining positional arguments.
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (testable); skips argv[0].
+    pub fn parse_from<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().skip(1).peekable();
+        while let Some(arg) = it.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                if let Some(eq) = rest.find('=') {
+                    out.options
+                        .insert(rest[..eq].to_string(), rest[eq + 1..].to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let val = it.next().unwrap();
+                    out.options.insert(rest.to_string(), val);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse the process's real argv.
+    pub fn parse() -> Args {
+        Args::parse_from(std::env::args())
+    }
+
+    /// String option with default.
+    pub fn get<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.options.get(key).map(|s| s.as_str()).unwrap_or(default)
+    }
+
+    /// Required string option.
+    pub fn require(&self, key: &str) -> anyhow::Result<&str> {
+        self.options
+            .get(key)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow::anyhow!("missing required option --{key}"))
+    }
+
+    /// usize option with default.
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.options
+            .get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// f64 option with default.
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.options
+            .get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Whether `--flag` was given.
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse_from(
+            std::iter::once("prog".to_string()).chain(s.split_whitespace().map(String::from)),
+        )
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = args("serve model.hlo extra");
+        assert_eq!(a.command.as_deref(), Some("serve"));
+        assert_eq!(a.positional, vec!["model.hlo", "extra"]);
+    }
+
+    #[test]
+    fn options_space_and_equals() {
+        let a = args("run --banks 16 --sparsity=0.9");
+        assert_eq!(a.usize("banks", 0), 16);
+        assert_eq!(a.f64("sparsity", 0.0), 0.9);
+    }
+
+    #[test]
+    fn flags() {
+        let a = args("run --verbose --banks 8");
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+        assert_eq!(a.usize("banks", 0), 8);
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_nothing() {
+        let a = args("run --json");
+        assert!(a.has("json"));
+    }
+
+    #[test]
+    fn defaults_and_require() {
+        let a = args("run");
+        assert_eq!(a.get("mode", "fast"), "fast");
+        assert!(a.require("mode").is_err());
+        let b = args("run --mode slow");
+        assert_eq!(b.require("mode").unwrap(), "slow");
+    }
+}

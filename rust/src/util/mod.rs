@@ -1,0 +1,19 @@
+//! From-scratch utility substrates.
+//!
+//! The build environment is fully offline and the cargo registry cache only
+//! contains the `xla` crate's dependency closure, so the conveniences a
+//! production crate would normally pull from crates.io (rand, serde_json,
+//! clap, a thread pool, criterion) are implemented here in-tree. Each
+//! submodule is self-contained and unit-tested.
+
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod stats;
+pub mod threadpool;
+
+pub use cli::Args;
+pub use json::Json;
+pub use prng::Prng;
+pub use stats::Summary;
+pub use threadpool::ThreadPool;

@@ -1,0 +1,138 @@
+//! Sample statistics + wall-clock timing for the bench harness.
+
+use std::time::Instant;
+
+/// Summary statistics over a sample of f64 measurements.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    /// Compute a summary. Panics on an empty sample.
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "Summary::of(empty)");
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile_sorted(&sorted, 0.50),
+            p95: percentile_sorted(&sorted, 0.95),
+            p99: percentile_sorted(&sorted, 0.99),
+        }
+    }
+}
+
+/// Linear-interpolated percentile of a pre-sorted sample, q in [0,1].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// The q-th percentile (q in [0,1]) of the magnitude threshold used by the
+/// pruning algorithms: returns the value such that `q` fraction of the
+/// entries are strictly below it (matching `numpy.percentile`-style linear
+/// interpolation over sorted magnitudes).
+///
+/// Perf (EXPERIMENTS.md §Perf): uses `select_nth_unstable` to find the two
+/// adjacent order statistics in O(n) instead of sorting — the pruning path
+/// was ~18% of wall-clock in the experiment sweeps before this.
+pub fn percentile_f32(values: &[f32], q: f64) -> f32 {
+    assert!(!values.is_empty());
+    let n = values.len();
+    let pos = q.clamp(0.0, 1.0) * (n - 1) as f64;
+    let lo = pos.floor() as usize;
+    let frac = pos - lo as f64;
+    let mut buf: Vec<f32> = values.to_vec();
+    let (_, &mut lo_val, right) =
+        buf.select_nth_unstable_by(lo, |a, b| a.partial_cmp(b).unwrap());
+    if frac == 0.0 || right.is_empty() {
+        return lo_val;
+    }
+    let hi_val = right
+        .iter()
+        .copied()
+        .fold(f32::INFINITY, f32::min);
+    (lo_val as f64 * (1.0 - frac) + hi_val as f64 * frac) as f32
+}
+
+/// Time a closure `reps` times after `warmup` runs; returns per-rep seconds.
+pub fn time_reps<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    (0..reps)
+        .map(|_| {
+            let t = Instant::now();
+            f();
+            t.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let sorted = [0.0, 10.0];
+        assert!((percentile_sorted(&sorted, 0.5) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile_sorted(&sorted, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&sorted, 1.0), 10.0);
+    }
+
+    #[test]
+    fn percentile_f32_matches_sorted_fraction() {
+        let v: Vec<f32> = (0..101).map(|i| i as f32).collect();
+        let p90 = percentile_f32(&v, 0.9);
+        assert!((p90 - 90.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn std_of_constant_is_zero() {
+        let s = Summary::of(&[2.0; 10]);
+        assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
+    fn time_reps_counts() {
+        let mut calls = 0;
+        let t = time_reps(2, 5, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(t.len(), 5);
+        assert!(t.iter().all(|&x| x >= 0.0));
+    }
+}

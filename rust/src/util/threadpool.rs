@@ -1,0 +1,169 @@
+//! Fixed-size thread pool over std primitives (no external deps).
+//!
+//! Used by the coordinator's worker pool and the bench harness's parallel
+//! sweeps. Jobs are boxed closures; `join` blocks until the queue drains.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    /// Number of jobs submitted but not yet finished.
+    outstanding: Mutex<usize>,
+    idle: Condvar,
+}
+
+/// A fixed-size pool of worker threads.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    shared: Arc<Shared>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers (n >= 1).
+    pub fn new(n: usize) -> ThreadPool {
+        assert!(n > 0, "ThreadPool::new(0)");
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let shared = Arc::new(Shared {
+            outstanding: Mutex::new(0),
+            idle: Condvar::new(),
+        });
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let shared = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name(format!("gs-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                let mut out = shared.outstanding.lock().unwrap();
+                                *out -= 1;
+                                if *out == 0 {
+                                    shared.idle.notify_all();
+                                }
+                            }
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool {
+            tx: Some(tx),
+            workers,
+            shared,
+        }
+    }
+
+    /// Submit a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        {
+            let mut out = self.shared.outstanding.lock().unwrap();
+            *out += 1;
+        }
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker channel closed");
+    }
+
+    /// Block until every submitted job has completed.
+    pub fn join(&self) {
+        let mut out = self.shared.outstanding.lock().unwrap();
+        while *out > 0 {
+            out = self.shared.idle.wait(out).unwrap();
+        }
+    }
+
+    /// Map `f` over `items` in parallel, preserving order.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let n = items.len();
+        let results: Arc<Mutex<Vec<Option<R>>>> =
+            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let results = Arc::clone(&results);
+            self.execute(move || {
+                let r = f(item);
+                results.lock().unwrap()[i] = Some(r);
+            });
+        }
+        self.join();
+        Arc::try_unwrap(results)
+            .ok()
+            .expect("results still shared")
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.expect("job did not run"))
+            .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close channel; workers exit their loops
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let count = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&count);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(count.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.map((0..50).collect::<Vec<usize>>(), |x| x * 2);
+        assert_eq!(out, (0..50).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn join_on_empty_pool_returns() {
+        let pool = ThreadPool::new(2);
+        pool.join(); // must not hang
+    }
+
+    #[test]
+    fn reusable_after_join() {
+        let pool = ThreadPool::new(2);
+        let a = pool.map(vec![1, 2, 3], |x| x + 1);
+        let b = pool.map(vec![10, 20], |x| x + 1);
+        assert_eq!(a, vec![2, 3, 4]);
+        assert_eq!(b, vec![11, 21]);
+    }
+}

@@ -1,0 +1,220 @@
+//! Property tests over the crate's core invariants, using the in-tree
+//! mini-framework (`gs_sparse::testing` — the offline-registry substitute
+//! for proptest). Each property runs `GS_PROPTEST_CASES` (default 64)
+//! seeded cases and shrinks on failure.
+
+use gs_sparse::coordinator::{Batcher, InferRequest, Metrics, UniformGs};
+use gs_sparse::kernels::native::gs_matvec;
+use gs_sparse::pruning::prune;
+use gs_sparse::sim::{Machine, MachineConfig};
+use gs_sparse::sparse::{Dense, GsFormat, Pattern};
+use gs_sparse::testing::{assert_allclose, default_cases, forall, forall2, Gen, OneOf, UsizeIn};
+use gs_sparse::util::Prng;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Pattern choices hosted by a 32×64 matrix.
+fn pattern_gen() -> OneOf<Pattern> {
+    OneOf(vec![
+        Pattern::Gs { b: 8, k: 8 },
+        Pattern::Gs { b: 8, k: 4 },
+        Pattern::Gs { b: 8, k: 2 },
+        Pattern::Gs { b: 8, k: 1 },
+        Pattern::GsScatter { b: 8, k: 1 },
+        Pattern::GsScatter { b: 8, k: 2 },
+        Pattern::Block { b: 8, k: 8 },
+        Pattern::Block { b: 8, k: 1 },
+        Pattern::Irregular,
+    ])
+}
+
+/// Every pruner output validates against its own pattern, at any
+/// sparsity, on any seed.
+#[test]
+fn prop_pruned_masks_always_validate() {
+    forall2(
+        "pruned-masks-validate",
+        &pattern_gen(),
+        &UsizeIn { lo: 0, hi: 95 },
+        default_cases(),
+        |&pattern, &sp| {
+            let mut rng = Prng::new(sp as u64 * 31 + 7);
+            let w = Dense::random(32, 64, 1.0, &mut rng);
+            let mask = prune(&w, pattern, sp as f64 / 100.0)
+                .map_err(|e| format!("prune failed: {e:#}"))?;
+            pattern
+                .validate(&mask)
+                .map_err(|e| format!("invalid mask: {e}"))
+        },
+    );
+}
+
+/// GS format round-trip is the identity on kept entries, and its spMV
+/// matches the dense oracle.
+#[test]
+fn prop_format_roundtrip_and_spmv_equivalence() {
+    let gs_patterns = OneOf(vec![
+        Pattern::Gs { b: 8, k: 8 },
+        Pattern::Gs { b: 8, k: 4 },
+        Pattern::Gs { b: 8, k: 2 },
+        Pattern::Gs { b: 8, k: 1 },
+        Pattern::GsScatter { b: 8, k: 2 },
+    ]);
+    forall2(
+        "gs-roundtrip-spmv",
+        &gs_patterns,
+        &UsizeIn { lo: 30, hi: 90 },
+        default_cases(),
+        |&pattern, &sp| {
+            let mut rng = Prng::new(sp as u64);
+            let mut w = Dense::random(16, 64, 1.0, &mut rng);
+            let mask = prune(&w, pattern, sp as f64 / 100.0)
+                .map_err(|e| format!("{e:#}"))?;
+            w.apply_mask(&mask);
+            let gs = GsFormat::from_dense(&w, pattern).map_err(|e| format!("{e:#}"))?;
+            gs.validate().map_err(|e| format!("{e:#}"))?;
+            if gs.to_dense() != w {
+                return Err("roundtrip mismatch".into());
+            }
+            let x = rng.normal_vec(64, 1.0);
+            assert_allclose(&gs_matvec(&gs, &x), &w.matvec(&x), 1e-4, 1e-4)
+        },
+    );
+}
+
+/// Simulator gather invariant: one engine slot iff residues unique;
+/// otherwise exactly max-occupancy slots.
+#[test]
+fn prop_gather_slots_equal_max_occupancy() {
+    struct Offsets;
+    impl Gen for Offsets {
+        type Value = Vec<u32>;
+        fn generate(&self, rng: &mut Prng) -> Vec<u32> {
+            (0..8).map(|_| rng.below(512) as u32).collect()
+        }
+        fn shrink(&self, v: &Vec<u32>) -> Vec<Vec<u32>> {
+            if v.iter().all(|&o| o == 0) {
+                vec![]
+            } else {
+                vec![vec![0; v.len()]]
+            }
+        }
+    }
+    forall("gather-occupancy", &Offsets, default_cases(), |offsets| {
+        let mut m = Machine::new(MachineConfig::with_subbanks(8));
+        let mut out = vec![0.0f32; 8];
+        m.gather(0, offsets, &mut out);
+        let mut occ = [0u64; 8];
+        for &o in offsets {
+            occ[o as usize % 8] += 1;
+        }
+        let want = *occ.iter().max().unwrap();
+        let got = m.report().engine_slots;
+        if got == want {
+            Ok(())
+        } else {
+            Err(format!("slots {got} != max occupancy {want}"))
+        }
+    });
+}
+
+/// Uniform (padded) layout reconstructs exactly the compact format's
+/// matrix for any sparsity the capacity admits.
+#[test]
+fn prop_uniform_padding_lossless() {
+    forall(
+        "uniform-padding-lossless",
+        &UsizeIn { lo: 40, hi: 90 },
+        default_cases(),
+        |&sp| {
+            let mut rng = Prng::new(sp as u64 ^ 0xABCD);
+            let mut w = Dense::random(16, 64, 1.0, &mut rng);
+            let p = Pattern::Gs { b: 8, k: 8 };
+            let mask = prune(&w, p, sp as f64 / 100.0).map_err(|e| format!("{e:#}"))?;
+            w.apply_mask(&mask);
+            let gs = GsFormat::from_dense(&w, p).map_err(|e| format!("{e:#}"))?;
+            let maxg = (0..gs.nbands())
+                .map(|b| (gs.indptr[b + 1] - gs.indptr[b]) as usize)
+                .max()
+                .unwrap_or(0);
+            let u = UniformGs::from_format(&gs, maxg + 1).map_err(|e| format!("{e:#}"))?;
+            let dense = u.to_dense(64);
+            for r in 0..16 {
+                for c in 0..64 {
+                    if dense[r][c] != w.at(r, c) {
+                        return Err(format!("({r},{c}): {} vs {}", dense[r][c], w.at(r, c)));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Batcher never drops, duplicates, or reorders within a submitter, for
+/// any (max_batch, request count) combination.
+#[test]
+fn prop_batcher_no_drop_no_dup_fifo() {
+    forall2(
+        "batcher-conservation",
+        &UsizeIn { lo: 1, hi: 16 },
+        &UsizeIn { lo: 1, hi: 64 },
+        default_cases().min(40),
+        |&max_batch, &n| {
+            let metrics = Arc::new(Metrics::new());
+            let batcher = Batcher::new(max_batch, Duration::from_millis(1), metrics);
+            let (tx, _rx) = channel();
+            for id in 0..n as u64 {
+                batcher.submit(InferRequest {
+                    id,
+                    input: vec![],
+                    enqueued: Instant::now(),
+                    tx: tx.clone(),
+                });
+            }
+            batcher.shutdown();
+            let mut seen = Vec::new();
+            while let Some(batch) = batcher.next_batch() {
+                if batch.len() > max_batch {
+                    return Err(format!("batch of {} exceeds max {max_batch}", batch.len()));
+                }
+                seen.extend(batch.iter().map(|r| r.id));
+            }
+            let want: Vec<u64> = (0..n as u64).collect();
+            if seen != want {
+                return Err(format!("ids {seen:?} != fifo {want:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Sparsity monotonicity: more sparsity never keeps more weights, for
+/// every pattern family.
+#[test]
+fn prop_sparsity_monotone() {
+    forall(
+        "sparsity-monotone",
+        &pattern_gen(),
+        default_cases().min(20),
+        |&pattern| {
+            let mut rng = Prng::new(99);
+            let w = Dense::random(32, 64, 1.0, &mut rng);
+            let mut last_kept = usize::MAX;
+            for sp in [0.2, 0.5, 0.8, 0.95] {
+                let kept = prune(&w, pattern, sp)
+                    .map_err(|e| format!("{e:#}"))?
+                    .kept();
+                if kept > last_kept {
+                    return Err(format!(
+                        "{}: kept rose {last_kept} -> {kept} at sparsity {sp}",
+                        pattern.name()
+                    ));
+                }
+                last_kept = kept;
+            }
+            Ok(())
+        },
+    );
+}
