@@ -1,98 +1,99 @@
 //! End-to-end serving benchmark: latency/throughput of the coordinator
-//! (router + dynamic batcher + PJRT worker executing the Pallas-backed
-//! sparse forward) under closed-loop client load.
+//! (router + dynamic batcher + workers on the native GS execution
+//! engine) under closed-loop client load.
 //!
 //! Reports p50/p95 latency, throughput, and mean batch size for 1/4/8
-//! concurrent clients — the L3 perf deliverable.
+//! concurrent clients, for the serial and multi-threaded native kernels —
+//! the L3 perf deliverable. Runs out of the box (no artifacts); knobs:
+//! GS_E2E_REQUESTS (default 100 per client).
 
 use gs_sparse::bench::Table;
-use gs_sparse::coordinator::{serve, server::ServeConfig, Client, SparseModel, UniformGs};
-use gs_sparse::runtime::{Manifest, Runtime};
-use gs_sparse::sparse::Dense;
+use gs_sparse::coordinator::{serve, server::ServeConfig, Client, SparseModel};
+use gs_sparse::pruning::prune;
+use gs_sparse::sparse::{Dense, GsFormat, Pattern};
 use gs_sparse::util::Prng;
-use std::sync::Arc;
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
-    let dir = Manifest::default_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("SKIP e2e_serving: artifacts not built (make artifacts)");
-        return Ok(());
-    }
-    let manifest = Arc::new(Manifest::load(dir)?);
-    let cfg = manifest.mlp.clone();
-    let (inputs, hidden, outputs) = (cfg.cfg("inputs")?, cfg.cfg("hidden")?, cfg.cfg("outputs")?);
-    let (b, groups, max_batch) = (cfg.cfg("gs_b")?, cfg.cfg("gs_groups")?, cfg.cfg("batch")?);
+    let (inputs, hidden, outputs) = (64usize, 256usize, 128usize);
+    let (b, max_batch) = (16usize, 16usize);
+    let sparsity = 0.9;
     let requests_per_client: usize = std::env::var("GS_E2E_REQUESTS")
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(100);
 
     let mut table = Table::new(
-        "E2E serving (GS-sparse MLP via PJRT, dynamic batching)",
-        &["clients", "req_per_s", "p50_ms", "p95_ms", "mean_batch"],
+        "E2E serving (GS-sparse MLP, native engine, dynamic batching)",
+        &["kernel_threads", "clients", "req_per_s", "p50_ms", "p95_ms", "mean_batch"],
     );
 
-    for clients in [1usize, 4, 8] {
-        let m2 = Arc::clone(&manifest);
-        let factory = move || {
-            let rt = Runtime::cpu()?;
-            let mut rng = Prng::new(42);
-            let proj = Dense::random(outputs, hidden, 0.3, &mut rng);
-            SparseModel::load(
-                &rt,
-                &m2,
-                rng.normal_vec(inputs * hidden, 0.1),
-                vec![0.0; hidden],
-                &UniformGs::compress_for(&proj, b, groups)?,
-                rng.normal_vec(outputs, 0.1),
-            )
-        };
-        let handle = serve(
-            factory,
-            ServeConfig {
-                bind: "127.0.0.1:0".into(),
-                workers: 1,
-                input_width: inputs,
-                max_batch,
-                window_ms: 2,
-            },
-        )?;
-        // Warm up (first request compiles nothing but touches all paths).
-        {
-            let mut c = Client::connect(handle.addr)?;
-            let mut rng = Prng::new(1);
-            let _ = c.infer(&rng.normal_vec(inputs, 1.0))?;
-        }
-        let t0 = Instant::now();
-        let threads: Vec<_> = (0..clients)
-            .map(|ci| {
-                let addr = handle.addr;
-                std::thread::spawn(move || -> anyhow::Result<()> {
-                    let mut c = Client::connect(addr)?;
-                    let mut rng = Prng::new(ci as u64 + 10);
-                    for _ in 0..requests_per_client {
-                        let _ = c.infer(&rng.normal_vec(inputs, 1.0))?;
-                    }
-                    Ok(())
+    for kernel_threads in [0usize, 4] {
+        for clients in [1usize, 4, 8] {
+            let factory = move || {
+                let mut rng = Prng::new(42);
+                let mut proj = Dense::random(outputs, hidden, 0.3, &mut rng);
+                let pattern = Pattern::Gs { b, k: b };
+                let mask = prune(&proj, pattern, sparsity)?;
+                proj.apply_mask(&mask);
+                let gs = GsFormat::from_dense(&proj, pattern)?;
+                SparseModel::native(
+                    rng.normal_vec(inputs * hidden, 0.1),
+                    vec![0.0; hidden],
+                    &gs,
+                    rng.normal_vec(outputs, 0.1),
+                    inputs,
+                    max_batch,
+                    kernel_threads,
+                )
+            };
+            let handle = serve(
+                factory,
+                ServeConfig {
+                    bind: "127.0.0.1:0".into(),
+                    workers: 1,
+                    input_width: inputs,
+                    max_batch,
+                    window_ms: 2,
+                },
+            )?;
+            // Warm up (first request touches all paths).
+            {
+                let mut c = Client::connect(handle.addr)?;
+                let mut rng = Prng::new(1);
+                let _ = c.infer(&rng.normal_vec(inputs, 1.0))?;
+            }
+            let t0 = Instant::now();
+            let threads: Vec<_> = (0..clients)
+                .map(|ci| {
+                    let addr = handle.addr;
+                    std::thread::spawn(move || -> anyhow::Result<()> {
+                        let mut c = Client::connect(addr)?;
+                        let mut rng = Prng::new(ci as u64 + 10);
+                        for _ in 0..requests_per_client {
+                            let _ = c.infer(&rng.normal_vec(inputs, 1.0))?;
+                        }
+                        Ok(())
+                    })
                 })
-            })
-            .collect();
-        for t in threads {
-            t.join().expect("client panicked")?;
+                .collect();
+            for t in threads {
+                t.join().expect("client panicked")?;
+            }
+            let elapsed = t0.elapsed().as_secs_f64();
+            let total = clients * requests_per_client;
+            let summary = handle.metrics.latency_summary().unwrap();
+            let mean_batch = handle.metrics.mean_batch_size();
+            table.row(&[
+                kernel_threads.to_string(),
+                clients.to_string(),
+                format!("{:.0}", total as f64 / elapsed),
+                format!("{:.2}", summary.p50 * 1e3),
+                format!("{:.2}", summary.p95 * 1e3),
+                format!("{mean_batch:.2}"),
+            ]);
+            handle.stop();
         }
-        let elapsed = t0.elapsed().as_secs_f64();
-        let total = clients * requests_per_client;
-        let summary = handle.metrics.latency_summary().unwrap();
-        let mean_batch = handle.metrics.mean_batch_size();
-        table.row(&[
-            clients.to_string(),
-            format!("{:.0}", total as f64 / elapsed),
-            format!("{:.2}", summary.p50 * 1e3),
-            format!("{:.2}", summary.p95 * 1e3),
-            format!("{mean_batch:.2}"),
-        ]);
-        handle.stop();
     }
     table.print();
     Ok(())

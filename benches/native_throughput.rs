@@ -1,0 +1,140 @@
+//! Native GS execution-engine throughput: scalar oracle vs prepacked
+//! plan vs batched vs batched+parallel, across pattern × sparsity ×
+//! batch size. The perf deliverable behind the serving fast path.
+//!
+//! Measures spMV-equivalent throughput (activation rows through the GS
+//! projection per second). `scalar` is `gs_matvec` called per row —
+//! the 20-line oracle. `planned` is the joined-layout single-vector
+//! kernel. `matmul` amortizes each index load across the batch.
+//! `matmul_par` adds the balanced-chunk ThreadPool path.
+//!
+//! Emits the usual table + GS_ROW records, and writes the machine-
+//! readable baseline to `BENCH_native.json` (repo root) so future PRs
+//! have a trajectory to beat. Knobs: GS_BENCH_REPS (default 5).
+
+use gs_sparse::bench::Table;
+use gs_sparse::kernels::exec::{
+    gs_matmul, gs_matmul_parallel, gs_matvec_planned, to_feature_major, GsExecPlan,
+};
+use gs_sparse::kernels::native::gs_matvec;
+use gs_sparse::pruning::prune;
+use gs_sparse::sparse::{Dense, GsFormat, Pattern};
+use gs_sparse::util::json::Json;
+use gs_sparse::util::stats::{time_reps, Summary};
+use gs_sparse::util::{Prng, ThreadPool};
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let (rows, cols, b) = (1024usize, 1024usize, 16usize);
+    let reps: usize = std::env::var("GS_BENCH_REPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(5);
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4);
+    let pool = ThreadPool::new(threads);
+
+    let patterns = [
+        Pattern::Gs { b, k: b },
+        Pattern::Gs { b, k: 4 },
+        Pattern::Gs { b, k: 1 },
+        Pattern::GsScatter { b, k: 1 },
+    ];
+    let sparsities = [0.9f64, 0.7];
+    let batches = [1usize, 16, 64];
+
+    let mut table = Table::new(
+        &format!("Native GS throughput ({rows}x{cols}, B={b}, {threads} threads)"),
+        &["pattern", "sparsity", "batch", "kernel", "rows_per_s", "speedup_vs_scalar"],
+    );
+    let mut json_rows: Vec<Json> = Vec::new();
+    let mut rng = Prng::new(42);
+
+    for &pattern in &patterns {
+        for &sparsity in &sparsities {
+            let mut w = Dense::random(rows, cols, 1.0, &mut rng);
+            let mask = prune(&w, pattern, sparsity)?;
+            w.apply_mask(&mask);
+            let gs = GsFormat::from_dense(&w, pattern)?;
+            let plan = Arc::new(GsExecPlan::with_chunks(&gs, threads)?);
+
+            for &batch in &batches {
+                let acts: Vec<Vec<f32>> =
+                    (0..batch).map(|_| rng.normal_vec(cols, 1.0)).collect();
+                let acts_t = Arc::new(to_feature_major(&acts, cols));
+
+                // rows/s for a kernel: `batch` activation rows per run.
+                let mut measure = |f: &mut dyn FnMut()| -> f64 {
+                    let samples = time_reps(1, reps, || f());
+                    let mean = Summary::of(&samples).mean;
+                    batch as f64 / mean
+                };
+
+                let mut sink = 0.0f32;
+                let scalar = measure(&mut || {
+                    for x in &acts {
+                        sink += gs_matvec(&gs, x)[0];
+                    }
+                });
+                let planned = measure(&mut || {
+                    for x in &acts {
+                        sink += gs_matvec_planned(&plan, x)[0];
+                    }
+                });
+                let matmul = measure(&mut || {
+                    sink += gs_matmul(&plan, &acts_t, batch)[0];
+                });
+                let matmul_par = measure(&mut || {
+                    sink += gs_matmul_parallel(&plan, &acts_t, batch, &pool)[0];
+                });
+                std::hint::black_box(sink);
+
+                for (kernel, rps) in [
+                    ("scalar", scalar),
+                    ("planned", planned),
+                    ("matmul", matmul),
+                    ("matmul_par", matmul_par),
+                ] {
+                    table.row(&[
+                        pattern.name(),
+                        format!("{sparsity}"),
+                        batch.to_string(),
+                        kernel.to_string(),
+                        format!("{rps:.0}"),
+                        format!("{:.2}", rps / scalar),
+                    ]);
+                    json_rows.push(Json::obj(vec![
+                        ("pattern", Json::Str(pattern.name())),
+                        ("sparsity", Json::Num(sparsity)),
+                        ("batch", Json::Num(batch as f64)),
+                        ("kernel", Json::Str(kernel.to_string())),
+                        ("rows_per_s", Json::Num(rps)),
+                        ("speedup_vs_scalar", Json::Num(rps / scalar)),
+                    ]));
+                }
+            }
+        }
+    }
+
+    table.print();
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("native_throughput".to_string())),
+        (
+            "config",
+            Json::obj(vec![
+                ("rows", Json::Num(rows as f64)),
+                ("cols", Json::Num(cols as f64)),
+                ("b", Json::Num(b as f64)),
+                ("threads", Json::Num(threads as f64)),
+                ("reps", Json::Num(reps as f64)),
+            ]),
+        ),
+        ("results", Json::Arr(json_rows)),
+    ]);
+    std::fs::write("BENCH_native.json", doc.to_string())?;
+    println!("\nwrote BENCH_native.json");
+
+    Ok(())
+}

@@ -1,39 +1,47 @@
-//! Serving demo: start the coordinator, fire batched requests from client
-//! threads, report latency/throughput — the "serving paper" E2E shape.
+//! Serving demo: start the coordinator on the native GS execution engine,
+//! fire batched requests from client threads, report latency/throughput —
+//! the "serving paper" E2E shape. No artifacts or XLA runtime needed.
 //!
 //! ```text
-//! make artifacts   # once
-//! cargo run --release --example serve_sparse -- [--requests 200] [--clients 4]
+//! cargo run --release --example serve_sparse -- \
+//!     [--requests 200] [--clients 4] [--threads 0] \
+//!     [--inputs 64] [--hidden 256] [--outputs 64] [--batch 16] \
+//!     [--b 16] [--sparsity 0.9]
 //! ```
 
-use gs_sparse::coordinator::{serve, server::ServeConfig, Client, SparseModel, UniformGs};
-use gs_sparse::runtime::{Manifest, Runtime};
-use gs_sparse::sparse::Dense;
+use gs_sparse::coordinator::{serve, server::ServeConfig, Client, SparseModel};
+use gs_sparse::pruning::prune;
+use gs_sparse::sparse::{Dense, GsFormat, Pattern};
 use gs_sparse::util::{Args, Prng};
-use std::sync::Arc;
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse();
     let n_requests = args.usize("requests", 200);
     let n_clients = args.usize("clients", 4);
-    let manifest = Arc::new(Manifest::load(args.get("artifacts", "artifacts"))?);
-    let cfg = manifest.mlp.clone();
-    let (inputs, hidden, outputs) = (cfg.cfg("inputs")?, cfg.cfg("hidden")?, cfg.cfg("outputs")?);
-    let (b, groups, max_batch) = (cfg.cfg("gs_b")?, cfg.cfg("gs_groups")?, cfg.cfg("batch")?);
+    let inputs = args.usize("inputs", 64);
+    let hidden = args.usize("hidden", 256);
+    let outputs = args.usize("outputs", 64);
+    let max_batch = args.usize("batch", 16);
+    let b = args.usize("b", 16);
+    let sparsity = args.f64("sparsity", 0.9);
+    let threads = args.usize("threads", 0);
 
-    let m2 = Arc::clone(&manifest);
     let factory = move || {
-        let rt = Runtime::cpu()?;
         let mut rng = Prng::new(42);
-        let proj = Dense::random(outputs, hidden, 0.3, &mut rng);
-        SparseModel::load(
-            &rt,
-            &m2,
+        let mut proj = Dense::random(outputs, hidden, 0.3, &mut rng);
+        let pattern = Pattern::Gs { b, k: b };
+        let mask = prune(&proj, pattern, sparsity)?;
+        proj.apply_mask(&mask);
+        let gs = GsFormat::from_dense(&proj, pattern)?;
+        SparseModel::native(
             rng.normal_vec(inputs * hidden, 0.1),
             vec![0.0; hidden],
-            &UniformGs::compress_for(&proj, b, groups)?,
+            &gs,
             rng.normal_vec(outputs, 0.1),
+            inputs,
+            max_batch,
+            threads,
         )
     };
     let handle = serve(
@@ -46,11 +54,15 @@ fn main() -> anyhow::Result<()> {
             window_ms: 2,
         },
     )?;
-    println!("serving on {} (GS({b},{b}) sparse output layer)", handle.addr);
+    println!(
+        "serving on {} (native GS({b},{b}) engine, {:.0}% sparse output layer)",
+        handle.addr,
+        sparsity * 100.0
+    );
 
     let addr = handle.addr;
     let t0 = Instant::now();
-    let threads: Vec<_> = (0..n_clients)
+    let threads_joined: Vec<_> = (0..n_clients)
         .map(|c| {
             std::thread::spawn(move || -> anyhow::Result<usize> {
                 let mut client = Client::connect(addr)?;
@@ -65,7 +77,7 @@ fn main() -> anyhow::Result<()> {
             })
         })
         .collect();
-    let done: usize = threads
+    let done: usize = threads_joined
         .into_iter()
         .map(|t| t.join().expect("client panicked").expect("client failed"))
         .sum();

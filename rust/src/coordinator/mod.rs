@@ -2,12 +2,24 @@
 //!
 //! The request path is pure Rust: TCP connections speak a JSON-lines
 //! protocol ([`server`]), requests flow into a [`batcher::Batcher`] that
-//! forms batches up to the artifact's static batch size within a small
-//! latency window, and worker threads execute the Pallas-backed
-//! `mlp_forward` artifact through [`crate::runtime`]. The GS-compressed
-//! output projection travels to the device as `value`/`index` tensors in
-//! the uniform layout (see [`uniform`]), produced from a [`GsFormat`]
-//! built by the pruner — the same format the cycle simulator executes.
+//! forms batches up to the model's batch capacity within a small latency
+//! window, and worker threads execute the forward pass through a
+//! selectable [`SparseModel`] backend:
+//!
+//! * **native** (default, always available) — the prepacked
+//!   [`GsExecPlan`] engine from [`crate::kernels::exec`]: dense input
+//!   layer, then the GS-compressed output projection as a batched,
+//!   optionally multi-threaded gather-scatter spMM. No artifacts, no
+//!   Python, no external runtime.
+//! * **pjrt** (`pjrt` cargo feature) — the Pallas-backed `mlp_forward`
+//!   AOT artifact executed through [`crate::runtime`], taking the GS
+//!   weights as uniform `value`/`index` tensors (see [`uniform`]).
+//!
+//! Both backends compute the same forward graph
+//! (`relu(x@W1+b1) → GS spMM → +b2`); each is checked against a dense
+//! oracle of its own weights by integration tests. (A direct
+//! native-vs-pjrt comparison on shared weights needs the real `xla`
+//! crate — see ROADMAP.)
 
 pub mod batcher;
 pub mod metrics;
@@ -19,17 +31,46 @@ pub use metrics::Metrics;
 pub use server::{serve, Client, ServerHandle};
 pub use uniform::UniformGs;
 
-use crate::runtime::{Executable, Manifest, Runtime, Tensor};
-use anyhow::{ensure, Context, Result};
+use crate::kernels::exec::{gs_matmul, gs_matmul_parallel, GsExecPlan};
+use crate::sparse::format::GsFormat;
+use crate::util::threadpool::ThreadPool;
+use anyhow::{ensure, Result};
 use std::sync::Arc;
 
-/// The deployed sparse model: compiled forward artifact + resident weights.
+#[cfg(feature = "pjrt")]
+use crate::runtime::{Executable, Manifest, Runtime, Tensor};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+
+/// The deployed sparse model: resident weights + an execution backend.
 pub struct SparseModel {
-    exe: Executable,
     pub inputs: usize,
     pub hidden: usize,
     pub outputs: usize,
     pub max_batch: usize,
+    backend: Backend,
+}
+
+enum Backend {
+    Native(NativeBackend),
+    #[cfg(feature = "pjrt")]
+    Pjrt(PjrtBackend),
+}
+
+/// Native execution state: prepacked GS plan + dense layer weights.
+struct NativeBackend {
+    /// `[inputs, hidden]` row-major (the `x @ w1` layout).
+    w1: Vec<f32>,
+    b1: Vec<f32>,
+    plan: Arc<GsExecPlan>,
+    b2: Vec<f32>,
+    /// Worker pool for the parallel band kernels (None = serial).
+    pool: Option<Arc<ThreadPool>>,
+}
+
+#[cfg(feature = "pjrt")]
+struct PjrtBackend {
+    exe: Executable,
     w1: Tensor,
     b1: Tensor,
     gs_value: Tensor,
@@ -38,9 +79,50 @@ pub struct SparseModel {
 }
 
 impl SparseModel {
-    /// Load the `mlp_forward` artifact and install weights. `gs` must be
-    /// the `GS(B,B)` compression of the `[outputs, hidden]` projection
-    /// with exactly the manifest's static group count after padding.
+    /// Build the native-engine model. `gs` is the GS compression of the
+    /// `[outputs, hidden]` projection (any `GS(B,k)` / scatter pattern);
+    /// the plan is packed once here and shared across requests.
+    /// `threads > 1` enables the multi-threaded band kernels.
+    pub fn native(
+        w1: Vec<f32>,
+        b1: Vec<f32>,
+        gs: &GsFormat,
+        b2: Vec<f32>,
+        inputs: usize,
+        max_batch: usize,
+        threads: usize,
+    ) -> Result<SparseModel> {
+        let hidden = gs.cols;
+        let outputs = gs.rows;
+        ensure!(max_batch > 0, "max_batch must be positive");
+        ensure!(
+            w1.len() == inputs * hidden,
+            "w1 length {} != inputs*hidden {}",
+            w1.len(),
+            inputs * hidden
+        );
+        ensure!(b1.len() == hidden, "b1 length {} != hidden {hidden}", b1.len());
+        ensure!(b2.len() == outputs, "b2 length {} != outputs {outputs}", b2.len());
+        let plan = Arc::new(GsExecPlan::with_chunks(gs, threads.max(1))?);
+        let pool = if threads > 1 {
+            Some(Arc::new(ThreadPool::new(threads)))
+        } else {
+            None
+        };
+        Ok(SparseModel {
+            inputs,
+            hidden,
+            outputs,
+            max_batch,
+            backend: Backend::Native(NativeBackend { w1, b1, plan, b2, pool }),
+        })
+    }
+
+    /// Load the `mlp_forward` PJRT artifact and install weights. `gs`
+    /// must be the `GS(B,B)` compression of the `[outputs, hidden]`
+    /// projection with exactly the manifest's static group count after
+    /// padding.
+    #[cfg(feature = "pjrt")]
     pub fn load(
         rt: &Runtime,
         manifest: &Manifest,
@@ -68,34 +150,103 @@ impl SparseModel {
             .load_hlo(&cfg.forward_path)
             .context("load mlp_forward artifact")?;
         Ok(SparseModel {
-            exe,
             inputs,
             hidden,
             outputs,
             max_batch,
-            w1: Tensor::f32(&[inputs, hidden], w1),
-            b1: Tensor::f32(&[hidden], b1),
-            gs_value: gs.value_tensor(),
-            gs_index: gs.index_tensor(),
-            b2: Tensor::f32(&[outputs], b2),
+            backend: Backend::Pjrt(PjrtBackend {
+                exe,
+                w1: Tensor::f32(&[inputs, hidden], w1),
+                b1: Tensor::f32(&[hidden], b1),
+                gs_value: gs.value_tensor(),
+                gs_index: gs.index_tensor(),
+                b2: Tensor::f32(&[outputs], b2),
+            }),
         })
     }
 
-    /// Run one padded batch; `rows` ≤ `max_batch` inputs of `inputs` f32.
+    /// Which backend executes requests ("native" or "pjrt").
+    pub fn backend_name(&self) -> &'static str {
+        match &self.backend {
+            Backend::Native(_) => "native",
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => "pjrt",
+        }
+    }
+
+    /// Run one batch; `rows.len()` ≤ `max_batch` inputs of `inputs` f32.
     pub fn infer_batch(&self, rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         ensure!(rows.len() <= self.max_batch, "batch too large");
+        for row in rows {
+            ensure!(
+                row.len() == self.inputs,
+                "input width {} != {}",
+                row.len(),
+                self.inputs
+            );
+        }
+        if rows.is_empty() {
+            return Ok(Vec::new());
+        }
+        match &self.backend {
+            Backend::Native(nb) => Ok(self.infer_native(nb, rows)),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(pb) => self.infer_pjrt(pb, rows),
+        }
+    }
+
+    /// Native forward: `h = relu(x @ w1 + b1)`, then the GS projection
+    /// through the packed plan (batched, parallel when a pool exists),
+    /// then `+ b2` — the same graph as the Pallas artifact.
+    fn infer_native(&self, nb: &NativeBackend, rows: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let batch = rows.len();
+        let hidden = self.hidden;
+        // Hidden activations, feature-major [hidden][batch] for the spMM.
+        let mut h = vec![0.0f32; hidden * batch];
+        let mut acc = vec![0.0f32; hidden];
+        for (r, x) in rows.iter().enumerate() {
+            acc.copy_from_slice(&nb.b1);
+            for (i, &xv) in x.iter().enumerate() {
+                if xv != 0.0 {
+                    let wrow = &nb.w1[i * hidden..(i + 1) * hidden];
+                    for j in 0..hidden {
+                        acc[j] += xv * wrow[j];
+                    }
+                }
+            }
+            for j in 0..hidden {
+                h[j * batch + r] = acc[j].max(0.0);
+            }
+        }
+        let out_t = match &nb.pool {
+            Some(pool) if nb.plan.chunks().len() > 1 => {
+                gs_matmul_parallel(&nb.plan, &Arc::new(h), batch, pool)
+            }
+            _ => gs_matmul(&nb.plan, &h, batch),
+        };
+        (0..batch)
+            .map(|r| {
+                (0..self.outputs)
+                    .map(|o| out_t[o * batch + r] + nb.b2[o])
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// PJRT forward: pad to the artifact's static batch and execute.
+    #[cfg(feature = "pjrt")]
+    fn infer_pjrt(&self, pb: &PjrtBackend, rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         let mut x = vec![0.0f32; self.max_batch * self.inputs];
         for (i, row) in rows.iter().enumerate() {
-            ensure!(row.len() == self.inputs, "input width {} != {}", row.len(), self.inputs);
             x[i * self.inputs..(i + 1) * self.inputs].copy_from_slice(row);
         }
-        let out = self.exe.run(&[
+        let out = pb.exe.run(&[
             Tensor::f32(&[self.max_batch, self.inputs], x),
-            self.w1.clone(),
-            self.b1.clone(),
-            self.gs_value.clone(),
-            self.gs_index.clone(),
-            self.b2.clone(),
+            pb.w1.clone(),
+            pb.b1.clone(),
+            pb.gs_value.clone(),
+            pb.gs_index.clone(),
+            pb.b2.clone(),
         ])?;
         ensure!(out.len() == 1, "forward output arity");
         let logits = out[0].as_f32()?;
@@ -111,4 +262,104 @@ impl SparseModel {
 pub struct Engine {
     pub model: SparseModel,
     pub metrics: Arc<Metrics>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::prune;
+    use crate::sparse::dense::Dense;
+    use crate::sparse::pattern::Pattern;
+    use crate::util::prng::Prng;
+
+    fn native_fixture(threads: usize) -> (SparseModel, Dense, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let (inputs, hidden, outputs) = (12, 32, 16);
+        let mut rng = Prng::new(42);
+        let mut proj = Dense::random(outputs, hidden, 0.4, &mut rng);
+        let pattern = Pattern::Gs { b: 8, k: 8 };
+        let mask = prune(&proj, pattern, 0.75).unwrap();
+        proj.apply_mask(&mask);
+        let gs = GsFormat::from_dense(&proj, pattern).unwrap();
+        let w1 = rng.normal_vec(inputs * hidden, 0.2);
+        let b1 = rng.normal_vec(hidden, 0.1);
+        let b2 = rng.normal_vec(outputs, 0.1);
+        let model = SparseModel::native(
+            w1.clone(),
+            b1.clone(),
+            &gs,
+            b2.clone(),
+            inputs,
+            8,
+            threads,
+        )
+        .unwrap();
+        (model, proj, w1, b1, b2)
+    }
+
+    /// Reference forward pass straight off the dense matrices.
+    fn oracle(
+        proj: &Dense,
+        w1: &[f32],
+        b1: &[f32],
+        b2: &[f32],
+        inputs: usize,
+        x: &[f32],
+    ) -> Vec<f32> {
+        let hidden = proj.cols;
+        let mut h = vec![0.0f32; hidden];
+        for j in 0..hidden {
+            let mut acc = b1[j];
+            for i in 0..inputs {
+                acc += x[i] * w1[i * hidden + j];
+            }
+            h[j] = acc.max(0.0);
+        }
+        (0..proj.rows)
+            .map(|r| {
+                b2[r]
+                    + proj
+                        .row(r)
+                        .iter()
+                        .zip(&h)
+                        .map(|(&w, &a)| w * a)
+                        .sum::<f32>()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn native_backend_matches_dense_oracle() {
+        let (model, proj, w1, b1, b2) = native_fixture(0);
+        assert_eq!(model.backend_name(), "native");
+        let mut rng = Prng::new(9);
+        let rows: Vec<Vec<f32>> = (0..5).map(|_| rng.normal_vec(12, 1.0)).collect();
+        let got = model.infer_batch(&rows).unwrap();
+        for (r, x) in rows.iter().enumerate() {
+            let want = oracle(&proj, &w1, &b1, &b2, 12, x);
+            for (o, (g, w)) in got[r].iter().zip(&want).enumerate() {
+                assert!((g - w).abs() < 1e-3, "row {r} output {o}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn native_parallel_matches_serial() {
+        let (serial, ..) = native_fixture(0);
+        let (parallel, ..) = native_fixture(3);
+        let mut rng = Prng::new(17);
+        let rows: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(12, 1.0)).collect();
+        assert_eq!(
+            serial.infer_batch(&rows).unwrap(),
+            parallel.infer_batch(&rows).unwrap()
+        );
+    }
+
+    #[test]
+    fn native_rejects_bad_shapes() {
+        let (model, ..) = native_fixture(0);
+        assert!(model.infer_batch(&[vec![0.0; 5]]).is_err()); // wrong width
+        let too_many: Vec<Vec<f32>> = (0..9).map(|_| vec![0.0; 12]).collect();
+        assert!(model.infer_batch(&too_many).is_err()); // over max_batch
+        assert!(model.infer_batch(&[]).unwrap().is_empty());
+    }
 }

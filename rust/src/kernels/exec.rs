@@ -1,0 +1,473 @@
+//! Native CPU execution engine for GS-compressed matrices.
+//!
+//! [`crate::kernels::native::gs_matvec`] is the 20-line numerics oracle:
+//! it re-reads `indptr`, divides `j / k` per entry, and walks `value` and
+//! `index` as two separate arrays. This module is the fast path built on a
+//! [`GsExecPlan`] prepacked once per weight matrix:
+//!
+//! * **Joined group layout** (paper §V): each group's `B` column indices
+//!   sit immediately before its `B` values in one buffer, so a group is
+//!   one streaming read — previously only modeled in the simulator
+//!   (`spmv_gs_sim_joined`), now used for real execution.
+//! * **Precomputed output slots**: the `entry_row` division and the
+//!   scatter `rowmap` indirection are resolved at pack time into flat
+//!   per-lane row tables; the inner loop is pure loads, FMAs, stores.
+//! * **Balanced chunks**: bands are partitioned into contiguous spans with
+//!   near-equal *group* counts (not band counts — sparsity can be ragged
+//!   across bands), the unit of parallelism for
+//!   [`gs_matmul_parallel`]. Each band's output rows are owned by exactly
+//!   one chunk (non-scatter rows are contiguous; scatter rows are a
+//!   permutation slice), so chunks accumulate privately and the merge is
+//!   a copy, never a reduction — results are bit-identical to the serial
+//!   kernel at any thread count.
+//!
+//! On top of the plan:
+//!
+//! * [`gs_matvec_planned`] — single activation vector, lanes unrolled ×4.
+//! * [`gs_matmul`] — batched spMM over feature-major activations; each
+//!   index load is amortized across the whole batch and the per-lane
+//!   inner loop register-blocks over [`BATCH_BLOCK`] activation columns.
+//! * [`gs_matmul_parallel`] — maps plan chunks over a
+//!   [`ThreadPool`]; lock-free by construction (disjoint outputs).
+//!
+//! All three preserve the oracle's accumulation order per output row, so
+//! outputs match `gs_matvec` bit for bit (per batch column).
+
+use crate::sparse::format::GsFormat;
+use crate::util::threadpool::ThreadPool;
+use anyhow::{ensure, Context, Result};
+use std::sync::Arc;
+
+/// Batch columns per register block in the batched kernels. 8 f32 lanes =
+/// one AVX2 vector / two NEON vectors; small enough that the block of
+/// accumulating rows stays in registers.
+pub const BATCH_BLOCK: usize = 8;
+
+/// A contiguous span of bands executed as one parallel work unit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Chunk {
+    pub band_lo: usize,
+    pub band_hi: usize,
+    /// Total groups in the span (the balance criterion).
+    pub groups: usize,
+}
+
+/// Prepacked execution plan for one GS-compressed matrix.
+///
+/// Built once per deployed weight matrix (at model load / weight-swap
+/// time), then shared read-only across requests and worker threads.
+#[derive(Clone, Debug)]
+pub struct GsExecPlan {
+    pub b: usize,
+    pub k: usize,
+    pub rows: usize,
+    pub cols: usize,
+    /// Whether the source format carried a scatter `rowmap`.
+    pub scatter: bool,
+    /// Joined group layout: `2*b` words per group — `b` column indices
+    /// followed by the `b` weight values as `f32::to_bits` words.
+    joined: Vec<u32>,
+    /// `nbands + 1` cumulative group counts (copy of the format's indptr).
+    band_ptr: Vec<u32>,
+    /// Global output row per (band, lane): `out_row[band*b + j]`; the
+    /// `entry_row` division and rowmap lookup, done once at pack time.
+    out_row: Vec<u32>,
+    /// Global output row per (band, slot): `slot_rows[band*(b/k) + s]`.
+    /// Drives the chunk merge (each band slot is one output row).
+    slot_rows: Vec<u32>,
+    /// Row slot of lane `j` within any band (`j / k`) — band-independent.
+    lane_slot: Vec<u32>,
+    /// Group-count-balanced contiguous band spans.
+    chunks: Vec<Chunk>,
+}
+
+impl GsExecPlan {
+    /// Pack `gs` with one chunk per available CPU (capped by band count).
+    pub fn from_format(gs: &GsFormat) -> Result<GsExecPlan> {
+        let nchunks = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        GsExecPlan::with_chunks(gs, nchunks)
+    }
+
+    /// Pack `gs` into at most `nchunks` balanced chunks.
+    pub fn with_chunks(gs: &GsFormat, nchunks: usize) -> Result<GsExecPlan> {
+        gs.validate().context("GsExecPlan source format invalid")?;
+        ensure!(
+            gs.b > 0 && gs.k > 0 && gs.b % gs.k == 0,
+            "bad GS geometry B={} k={}",
+            gs.b,
+            gs.k
+        );
+        let band_rows = gs.b / gs.k;
+        let nbands = gs.nbands();
+        ensure!(
+            nbands * band_rows <= gs.rows,
+            "bands cover more rows than the matrix has"
+        );
+
+        let mut out_row = Vec::with_capacity(nbands * gs.b);
+        let mut slot_rows = Vec::with_capacity(nbands * band_rows);
+        for band in 0..nbands {
+            for j in 0..gs.b {
+                out_row.push(gs.entry_row(band, j) as u32);
+            }
+            for slot in 0..band_rows {
+                slot_rows.push(gs.entry_row(band, slot * gs.k) as u32);
+            }
+        }
+        let lane_slot: Vec<u32> = (0..gs.b).map(|j| (j / gs.k) as u32).collect();
+
+        let plan = GsExecPlan {
+            b: gs.b,
+            k: gs.k,
+            rows: gs.rows,
+            cols: gs.cols,
+            scatter: gs.rowmap.is_some(),
+            joined: gs.to_joined(),
+            band_ptr: gs.indptr.clone(),
+            out_row,
+            slot_rows,
+            lane_slot,
+            chunks: balance_chunks(&gs.indptr, nchunks),
+        };
+        Ok(plan)
+    }
+
+    pub fn nbands(&self) -> usize {
+        self.band_ptr.len() - 1
+    }
+
+    pub fn ngroups(&self) -> usize {
+        *self.band_ptr.last().unwrap() as usize
+    }
+
+    pub fn band_rows(&self) -> usize {
+        self.b / self.k
+    }
+
+    /// The balanced band spans used by the parallel path.
+    pub fn chunks(&self) -> &[Chunk] {
+        &self.chunks
+    }
+
+    /// Bytes resident in the packed plan (joined + tables).
+    pub fn packed_bytes(&self) -> usize {
+        4 * (self.joined.len()
+            + self.band_ptr.len()
+            + self.out_row.len()
+            + self.slot_rows.len()
+            + self.lane_slot.len())
+    }
+}
+
+/// Partition bands into ≤ `nchunks` contiguous spans with near-equal
+/// group counts. Every band lands in exactly one span; empty trailing
+/// bands are folded into the last span.
+fn balance_chunks(band_ptr: &[u32], nchunks: usize) -> Vec<Chunk> {
+    let nbands = band_ptr.len() - 1;
+    let total = *band_ptr.last().unwrap() as usize;
+    let nchunks = nchunks.max(1);
+    let mut chunks = Vec::new();
+    if nbands == 0 {
+        return chunks;
+    }
+    let mut band = 0usize;
+    for c in 0..nchunks {
+        if band >= nbands {
+            break;
+        }
+        let consumed = band_ptr[band] as usize;
+        let remaining_chunks = nchunks - c;
+        let target = (total - consumed + remaining_chunks - 1) / remaining_chunks;
+        let target = target.max(1);
+        let lo = band;
+        let mut acc = 0usize;
+        while band < nbands && acc < target {
+            acc += (band_ptr[band + 1] - band_ptr[band]) as usize;
+            band += 1;
+        }
+        chunks.push(Chunk {
+            band_lo: lo,
+            band_hi: band,
+            groups: acc,
+        });
+    }
+    // Fold any leftover (necessarily empty) bands into the last span.
+    if band < nbands {
+        if let Some(last) = chunks.last_mut() {
+            last.band_hi = nbands;
+        } else {
+            chunks.push(Chunk {
+                band_lo: 0,
+                band_hi: nbands,
+                groups: total,
+            });
+        }
+    }
+    chunks
+}
+
+/// Planned single-vector spMV: `y = W x` on the packed plan. Matches
+/// [`crate::kernels::native::gs_matvec`] bit for bit.
+pub fn gs_matvec_planned(plan: &GsExecPlan, act: &[f32]) -> Vec<f32> {
+    assert_eq!(act.len(), plan.cols, "activation length mismatch");
+    let b = plan.b;
+    let mut y = vec![0.0f32; plan.rows];
+    for band in 0..plan.nbands() {
+        let rows = &plan.out_row[band * b..(band + 1) * b];
+        let lo = plan.band_ptr[band] as usize;
+        let hi = plan.band_ptr[band + 1] as usize;
+        for g in lo..hi {
+            let off = g * 2 * b;
+            let idx = &plan.joined[off..off + b];
+            let val = &plan.joined[off + b..off + 2 * b];
+            let mut j = 0;
+            // Lanes unrolled ×4; adds stay in lane order, so rows shared
+            // between lanes (k > 1) accumulate exactly like the oracle.
+            while j + 4 <= b {
+                y[rows[j] as usize] += f32::from_bits(val[j]) * act[idx[j] as usize];
+                y[rows[j + 1] as usize] += f32::from_bits(val[j + 1]) * act[idx[j + 1] as usize];
+                y[rows[j + 2] as usize] += f32::from_bits(val[j + 2]) * act[idx[j + 2] as usize];
+                y[rows[j + 3] as usize] += f32::from_bits(val[j + 3]) * act[idx[j + 3] as usize];
+                j += 4;
+            }
+            while j < b {
+                y[rows[j] as usize] += f32::from_bits(val[j]) * act[idx[j] as usize];
+                j += 1;
+            }
+        }
+    }
+    y
+}
+
+/// Execute the bands of `chunk`, accumulating into `out` where local row
+/// 0 corresponds to band `chunk.band_lo`'s first slot. `acts` and `out`
+/// are feature-major: `[feature][batch]`, batch contiguous.
+fn exec_chunk_into(plan: &GsExecPlan, acts: &[f32], batch: usize, chunk: Chunk, out: &mut [f32]) {
+    let b = plan.b;
+    let band_rows = plan.band_rows();
+    debug_assert!(out.len() >= (chunk.band_hi - chunk.band_lo) * band_rows * batch);
+    for band in chunk.band_lo..chunk.band_hi {
+        let slot_base = (band - chunk.band_lo) * band_rows;
+        let lo = plan.band_ptr[band] as usize;
+        let hi = plan.band_ptr[band + 1] as usize;
+        for g in lo..hi {
+            let off = g * 2 * b;
+            let idx = &plan.joined[off..off + b];
+            let val = &plan.joined[off + b..off + 2 * b];
+            for j in 0..b {
+                let col = idx[j] as usize;
+                let w = f32::from_bits(val[j]);
+                let row = slot_base + plan.lane_slot[j] as usize;
+                let a0 = col * batch;
+                let o0 = row * batch;
+                // Register block over the batch: one (index, value) load
+                // feeds BATCH_BLOCK FMAs on contiguous activations.
+                let mut r = 0;
+                while r + BATCH_BLOCK <= batch {
+                    let a = &acts[a0 + r..a0 + r + BATCH_BLOCK];
+                    let o = &mut out[o0 + r..o0 + r + BATCH_BLOCK];
+                    for t in 0..BATCH_BLOCK {
+                        o[t] += w * a[t];
+                    }
+                    r += BATCH_BLOCK;
+                }
+                while r < batch {
+                    out[o0 + r] += w * acts[a0 + r];
+                    r += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Batched spMM: `Y = W X` with `X` feature-major (`acts[col*batch + r]`
+/// is request `r`'s activation for feature `col`). Returns `Y`
+/// feature-major: `out[row*batch + r]`. Column `r` equals
+/// `gs_matvec(gs, x_r)` bit for bit.
+pub fn gs_matmul(plan: &GsExecPlan, acts: &[f32], batch: usize) -> Vec<f32> {
+    assert!(batch > 0, "gs_matmul with empty batch");
+    assert_eq!(acts.len(), plan.cols * batch, "activation shape mismatch");
+    let mut out = vec![0.0f32; plan.rows * batch];
+    let band_rows = plan.band_rows();
+    let all = Chunk {
+        band_lo: 0,
+        band_hi: plan.nbands(),
+        groups: plan.ngroups(),
+    };
+    if plan.scatter {
+        // Accumulate band-local, then place rows through the rowmap.
+        let mut local = vec![0.0f32; plan.nbands() * band_rows * batch];
+        exec_chunk_into(plan, acts, batch, all, &mut local);
+        merge_chunk(plan, batch, all, &local, &mut out);
+    } else {
+        // Identity slot→row mapping: accumulate straight into `out`.
+        exec_chunk_into(plan, acts, batch, all, &mut out);
+    }
+    out
+}
+
+/// Copy one chunk's private accumulation into the global output through
+/// the plan's slot→row table. Each global row is owned by exactly one
+/// (band, slot), so this is a copy, not a reduction.
+fn merge_chunk(plan: &GsExecPlan, batch: usize, chunk: Chunk, local: &[f32], out: &mut [f32]) {
+    let band_rows = plan.band_rows();
+    for band in chunk.band_lo..chunk.band_hi {
+        for slot in 0..band_rows {
+            let row = plan.slot_rows[band * band_rows + slot] as usize;
+            let src = ((band - chunk.band_lo) * band_rows + slot) * batch;
+            let dst = row * batch;
+            out[dst..dst + batch].copy_from_slice(&local[src..src + batch]);
+        }
+    }
+}
+
+/// Parallel batched spMM: plan chunks mapped over `pool`. Non-scatter
+/// chunks write disjoint contiguous row spans; scatter chunks own
+/// disjoint rowmap slices — either way each chunk accumulates privately
+/// and the merge is a race-free copy. Output is bit-identical to
+/// [`gs_matmul`] at any worker count.
+///
+/// `plan` and `acts` travel to the workers as `Arc` clones (the pool's
+/// jobs are `'static`), so the caller keeps both afterwards.
+pub fn gs_matmul_parallel(
+    plan: &Arc<GsExecPlan>,
+    acts: &Arc<Vec<f32>>,
+    batch: usize,
+    pool: &ThreadPool,
+) -> Vec<f32> {
+    assert!(batch > 0, "gs_matmul_parallel with empty batch");
+    assert_eq!(acts.len(), plan.cols * batch, "activation shape mismatch");
+    let chunks: Vec<Chunk> = plan.chunks.clone();
+    if chunks.len() <= 1 {
+        return gs_matmul(plan, acts, batch);
+    }
+    let band_rows = plan.band_rows();
+    let plan2 = Arc::clone(plan);
+    let acts2 = Arc::clone(acts);
+    let locals = pool.map(chunks.clone(), move |chunk| {
+        let rows = (chunk.band_hi - chunk.band_lo) * band_rows;
+        let mut local = vec![0.0f32; rows * batch];
+        exec_chunk_into(&plan2, &acts2, batch, chunk, &mut local);
+        local
+    });
+    let mut out = vec![0.0f32; plan.rows * batch];
+    for (chunk, local) in chunks.iter().zip(&locals) {
+        merge_chunk(plan, batch, *chunk, local, &mut out);
+    }
+    out
+}
+
+/// Transpose request-major rows (`rows[r][c]`) into the feature-major
+/// layout the batched kernels consume (`out[c*batch + r]`).
+pub fn to_feature_major(rows: &[Vec<f32>], width: usize) -> Vec<f32> {
+    let batch = rows.len();
+    let mut out = vec![0.0f32; width * batch];
+    for (r, row) in rows.iter().enumerate() {
+        assert_eq!(row.len(), width, "row width mismatch");
+        for (c, &v) in row.iter().enumerate() {
+            out[c * batch + r] = v;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::native::gs_matvec;
+    use crate::pruning::prune;
+    use crate::sparse::dense::Dense;
+    use crate::sparse::pattern::Pattern;
+    use crate::util::prng::Prng;
+
+    fn packed(pattern: Pattern, rows: usize, cols: usize, sparsity: f64, seed: u64) -> (Dense, GsFormat) {
+        let mut rng = Prng::new(seed);
+        let mut w = Dense::random(rows, cols, 1.0, &mut rng);
+        let mask = prune(&w, pattern, sparsity).unwrap();
+        w.apply_mask(&mask);
+        let gs = GsFormat::from_dense(&w, pattern).unwrap();
+        (w, gs)
+    }
+
+    #[test]
+    fn planned_matvec_is_bit_exact_vs_oracle() {
+        let patterns = [
+            Pattern::Gs { b: 8, k: 8 },
+            Pattern::Gs { b: 8, k: 2 },
+            Pattern::Gs { b: 8, k: 1 },
+            Pattern::GsScatter { b: 8, k: 1 },
+        ];
+        for (i, p) in patterns.into_iter().enumerate() {
+            let (_, gs) = packed(p, 32, 64, 0.75, 40 + i as u64);
+            let plan = GsExecPlan::from_format(&gs).unwrap();
+            let mut rng = Prng::new(99);
+            let x = rng.normal_vec(64, 1.0);
+            assert_eq!(gs_matvec_planned(&plan, &x), gs_matvec(&gs, &x), "{}", p.name());
+        }
+    }
+
+    #[test]
+    fn matmul_columns_match_matvec() {
+        let (_, gs) = packed(Pattern::Gs { b: 8, k: 4 }, 16, 64, 0.6, 7);
+        let plan = GsExecPlan::from_format(&gs).unwrap();
+        let mut rng = Prng::new(3);
+        for batch in [1usize, 3, 8, 11] {
+            let rows: Vec<Vec<f32>> = (0..batch).map(|_| rng.normal_vec(64, 1.0)).collect();
+            let acts = to_feature_major(&rows, 64);
+            let out = gs_matmul(&plan, &acts, batch);
+            for (r, x) in rows.iter().enumerate() {
+                let want = gs_matvec(&gs, x);
+                for row in 0..gs.rows {
+                    assert_eq!(out[row * batch + r], want[row], "batch {batch} col {r} row {row}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunks_cover_all_bands_and_balance_groups() {
+        let (_, gs) = packed(Pattern::Gs { b: 8, k: 8 }, 64, 128, 0.8, 5);
+        for nchunks in [1usize, 2, 3, 7, 64, 1000] {
+            let plan = GsExecPlan::with_chunks(&gs, nchunks).unwrap();
+            let chunks = plan.chunks();
+            assert!(!chunks.is_empty());
+            assert!(chunks.len() <= nchunks.max(1));
+            assert_eq!(chunks[0].band_lo, 0);
+            assert_eq!(chunks.last().unwrap().band_hi, plan.nbands());
+            for w in chunks.windows(2) {
+                assert_eq!(w[0].band_hi, w[1].band_lo, "chunks not contiguous");
+            }
+            let total: usize = chunks.iter().map(|c| c.groups).sum();
+            assert_eq!(total, plan.ngroups());
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial_bit_for_bit() {
+        let pool = ThreadPool::new(4);
+        for p in [Pattern::Gs { b: 8, k: 8 }, Pattern::GsScatter { b: 8, k: 2 }] {
+            let (_, gs) = packed(p, 64, 128, 0.7, 21);
+            let plan = Arc::new(GsExecPlan::with_chunks(&gs, 4).unwrap());
+            let mut rng = Prng::new(8);
+            let rows: Vec<Vec<f32>> = (0..6).map(|_| rng.normal_vec(128, 1.0)).collect();
+            let acts = Arc::new(to_feature_major(&rows, 128));
+            let serial = gs_matmul(&plan, &acts, 6);
+            let parallel = gs_matmul_parallel(&plan, &acts, 6, &pool);
+            assert_eq!(serial, parallel, "{}", p.name());
+        }
+    }
+
+    #[test]
+    fn empty_format_executes() {
+        let d = Dense::zeros(8, 16);
+        let gs = GsFormat::from_dense(&d, Pattern::Gs { b: 8, k: 8 }).unwrap();
+        assert_eq!(gs.ngroups(), 0);
+        let plan = GsExecPlan::from_format(&gs).unwrap();
+        let x = vec![1.0f32; 16];
+        assert_eq!(gs_matvec_planned(&plan, &x), vec![0.0; 8]);
+        let out = gs_matmul(&plan, &to_feature_major(&[x], 16), 1);
+        assert_eq!(out, vec![0.0; 8]);
+    }
+}

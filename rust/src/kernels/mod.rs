@@ -1,8 +1,13 @@
-//! The paper's sparse kernels, in two guises.
+//! The paper's sparse kernels, in three guises.
 //!
 //! * [`native`] — plain f32 implementations (Algorithms 1–2 and the
 //!   sparse convolution) used as numerics oracles and by the training
 //!   orchestrator's CPU paths.
+//! * [`exec`] — the production CPU fast path: a prepacked
+//!   [`exec::GsExecPlan`] (joined §V layout, precomputed output slots,
+//!   balanced chunks) with planned, batched, and multi-threaded kernels
+//!   that match the oracle bit for bit. Backs the coordinator's native
+//!   serving backend.
 //! * [`spmv_sim`] / [`conv_sim`] — the same kernels executed on the
 //!   [`crate::sim::Machine`]: they compute identical numerics while
 //!   emitting micro-ops, so one run yields both the result vector and the
@@ -10,8 +15,10 @@
 //!   numerics for every pattern.
 
 pub mod conv_sim;
+pub mod exec;
 pub mod native;
 pub mod spmv_sim;
 
 pub use conv_sim::{conv_block_sim, conv_dense_sim, conv_gs_sim, ConvOutput};
+pub use exec::{gs_matmul, gs_matmul_parallel, gs_matvec_planned, GsExecPlan};
 pub use spmv_sim::{spmv_block_sim, spmv_csr_sim, spmv_dense_sim, spmv_gs_sim, SpmvOutput};

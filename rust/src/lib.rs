@@ -25,11 +25,14 @@
 //!   banked TCM + gather/scatter engine + L1/L2/DRAM hierarchy + a SIMD
 //!   issue model (substitute for the paper's Gem5 setup, §X).
 //! * [`kernels`] — the paper's sparse kernels (Algorithms 1–2 and the
-//!   kernel-shape-aware sparse convolution) in two guises: native f32
-//!   (numerics oracle) and instrumented programs on [`sim`] (cycle counts).
-//! * [`runtime`] — a PJRT CPU client that loads the AOT-compiled JAX/Pallas
-//!   artifacts (`artifacts/*.hlo.txt`) and executes them; Python never runs
-//!   at request time.
+//!   kernel-shape-aware sparse convolution) in three guises: native f32
+//!   (numerics oracle), the prepacked [`kernels::exec`] engine (the
+//!   production CPU fast path: joined layout, batched, multi-threaded),
+//!   and instrumented programs on [`sim`] (cycle counts).
+//! * [`runtime`] — manifest parsing and host tensors; with the `pjrt`
+//!   cargo feature, a PJRT CPU client that loads the AOT-compiled
+//!   JAX/Pallas artifacts (`artifacts/*.hlo.txt`) and executes them;
+//!   Python never runs at request time.
 //! * [`train`] — the prune→retrain orchestrator reproducing the accuracy
 //!   experiments (Figs. 1/5, Table I) on micro models.
 //! * [`coordinator`] — a serving layer (router, dynamic batcher, worker

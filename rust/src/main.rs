@@ -1,21 +1,26 @@
 //! `gs-sparse` — leader binary: serve, train, simulate, inspect.
 //!
 //! ```text
-//! gs-sparse serve    [--bind 127.0.0.1:7070] [--artifacts DIR] [--workers 1]
+//! gs-sparse serve    [--backend native|pjrt] [--bind 127.0.0.1:7070] [--workers 1]
+//!                    native: [--inputs 64] [--hidden 256] [--outputs 64] [--batch 16]
+//!                            [--b 16] [--k 16] [--sparsity 0.9] [--threads 0]
+//!                    pjrt:   [--artifacts DIR]   (requires --features pjrt)
 //! gs-sparse train    --model gnmt|resnet|jasper [--pattern GS|Block|Irregular]
-//!                    [--b 8] [--k 8] [--sparsity 0.8] [--seed 42]
+//!                    [--b 8] [--k 8] [--sparsity 0.8] [--seed 42]   (pjrt only)
 //! gs-sparse simulate [--rows 1024] [--cols 1024] [--banks 16] [--sparsity 0.9]
 //! gs-sparse info     [--artifacts DIR]
 //! ```
+//!
+//! The default `serve` backend is the native execution engine
+//! (`kernels::exec`): it needs no artifacts and no XLA runtime. Build
+//! with `--features pjrt` (and the real `xla` crate) to serve through the
+//! Pallas AOT artifact instead.
 
 use anyhow::{anyhow, Result};
-use gs_sparse::coordinator::{serve, server::ServeConfig, SparseModel, UniformGs};
+use gs_sparse::coordinator::{serve, server::ServeConfig, SparseModel};
 use gs_sparse::pruning::prune;
-use gs_sparse::runtime::{Manifest, Runtime};
 use gs_sparse::sparse::{Dense, GsFormat, Pattern};
-use gs_sparse::train::{experiments::Schedule, run_quality};
 use gs_sparse::util::{Args, Prng};
-use std::sync::Arc;
 
 fn main() -> Result<()> {
     let args = Args::parse();
@@ -45,16 +50,107 @@ fn parse_pattern(args: &Args) -> Result<Option<Pattern>> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    let backend = args.get("backend", "native").to_string();
+    let workers = args.usize("workers", 1);
+    let bind = args.get("bind", "127.0.0.1:7070").to_string();
+    let window_ms = args.usize("window-ms", 2) as u64;
+
+    let (factory, inputs, outputs, max_batch, banner): (
+        Box<dyn Fn() -> Result<SparseModel> + Send + Sync>,
+        usize,
+        usize,
+        usize,
+        String,
+    ) = match backend.as_str() {
+        "native" => {
+            let inputs = args.usize("inputs", 64);
+            let hidden = args.usize("hidden", 256);
+            let outputs = args.usize("outputs", 64);
+            let max_batch = args.usize("batch", 16);
+            let b = args.usize("b", 16);
+            let k = args.usize("k", b);
+            let sparsity = args.f64("sparsity", 0.9);
+            let threads = args.usize("threads", 0);
+            let seed = args.usize("seed", 42) as u64;
+            let banner = format!(
+                "native GS({b},{k}) engine @ {:.0}% sparse output layer{}",
+                sparsity * 100.0,
+                if threads > 1 {
+                    format!(", {threads} kernel threads")
+                } else {
+                    String::new()
+                }
+            );
+            let factory = move || {
+                let mut rng = Prng::new(seed);
+                let mut proj = Dense::random(outputs, hidden, 0.3, &mut rng);
+                let pattern = Pattern::Gs { b, k };
+                let mask = prune(&proj, pattern, sparsity)?;
+                proj.apply_mask(&mask);
+                let gs = GsFormat::from_dense(&proj, pattern)?;
+                let mut wrng = Prng::new(seed ^ 1);
+                SparseModel::native(
+                    wrng.normal_vec(inputs * hidden, 0.1),
+                    vec![0.0; hidden],
+                    &gs,
+                    wrng.normal_vec(outputs, 0.1),
+                    inputs,
+                    max_batch,
+                    threads,
+                )
+            };
+            (Box::new(factory), inputs, outputs, max_batch, banner)
+        }
+        "pjrt" => pjrt_factory(args)?,
+        other => return Err(anyhow!("unknown backend {other} (native|pjrt)")),
+    };
+
+    let handle = serve(
+        move || factory(),
+        ServeConfig {
+            bind,
+            workers,
+            input_width: inputs,
+            max_batch,
+            window_ms,
+        },
+    )?;
+    println!(
+        "serving GS-sparse MLP on {} ({workers} workers, batch {max_batch}, {banner})",
+        handle.addr
+    );
+    println!("protocol: JSON lines — {{\"op\":\"infer\",\"id\":1,\"input\":[...{inputs} floats]}}");
+    let _ = outputs;
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+#[cfg(feature = "pjrt")]
+#[allow(clippy::type_complexity)]
+fn pjrt_factory(
+    args: &Args,
+) -> Result<(
+    Box<dyn Fn() -> Result<SparseModel> + Send + Sync>,
+    usize,
+    usize,
+    usize,
+    String,
+)> {
+    use gs_sparse::coordinator::UniformGs;
+    use gs_sparse::runtime::{Manifest, Runtime};
+    use std::sync::Arc;
+
     let dir = args.get("artifacts", "artifacts").to_string();
     let manifest = Arc::new(Manifest::load(&dir)?);
     let cfg = manifest.mlp.clone();
     let (inputs, hidden, outputs) = (cfg.cfg("inputs")?, cfg.cfg("hidden")?, cfg.cfg("outputs")?);
     let (b, groups, max_batch) = (cfg.cfg("gs_b")?, cfg.cfg("gs_groups")?, cfg.cfg("batch")?);
     let seed = args.usize("seed", 42) as u64;
-    let workers = args.usize("workers", 1);
-    let bind = args.get("bind", "127.0.0.1:7070").to_string();
-
-    let m2 = Arc::clone(&manifest);
+    let banner = format!(
+        "pjrt GS({b},{b}) artifact @ {:.0}% sparse output layer",
+        (1.0 - (groups * b) as f64 / hidden as f64) * 100.0
+    );
     let factory = move || {
         let rt = Runtime::cpu()?;
         let mut rng = Prng::new(seed);
@@ -63,35 +159,38 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let mut wrng = Prng::new(seed ^ 1);
         SparseModel::load(
             &rt,
-            &m2,
+            &manifest,
             wrng.normal_vec(inputs * hidden, 0.1),
             vec![0.0; hidden],
             &uniform,
             wrng.normal_vec(outputs, 0.1),
         )
     };
-    let handle = serve(
-        factory,
-        ServeConfig {
-            bind,
-            workers,
-            input_width: inputs,
-            max_batch,
-            window_ms: args.usize("window-ms", 2) as u64,
-        },
-    )?;
-    println!(
-        "serving GS-sparse MLP on {} ({workers} workers, batch {max_batch}, GS({b},{b}) @ {:.0}% sparse output layer)",
-        handle.addr,
-        (1.0 - (groups * b) as f64 / hidden as f64) * 100.0
-    );
-    println!("protocol: JSON lines — {{\"op\":\"infer\",\"id\":1,\"input\":[...{inputs} floats]}}");
-    loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
-    }
+    Ok((Box::new(factory), inputs, outputs, max_batch, banner))
 }
 
+#[cfg(not(feature = "pjrt"))]
+#[allow(clippy::type_complexity)]
+fn pjrt_factory(
+    _args: &Args,
+) -> Result<(
+    Box<dyn Fn() -> Result<SparseModel> + Send + Sync>,
+    usize,
+    usize,
+    usize,
+    String,
+)> {
+    Err(anyhow!(
+        "the pjrt backend requires building with --features pjrt (and the real xla crate); \
+         the native backend needs neither: gs-sparse serve --backend native"
+    ))
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_train(args: &Args) -> Result<()> {
+    use gs_sparse::runtime::{Manifest, Runtime};
+    use gs_sparse::train::{experiments::Schedule, run_quality};
+
     let dir = args.get("artifacts", "artifacts").to_string();
     let manifest = Manifest::load(&dir)?;
     let model = args.get("model", "resnet");
@@ -121,6 +220,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         r.loss
     );
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(args: &Args) -> Result<()> {
+    let _ = parse_pattern(args)?; // validate flags even when unavailable
+    Err(anyhow!(
+        "train drives the AOT artifacts through PJRT; rebuild with --features pjrt"
+    ))
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
@@ -175,6 +282,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
+    use gs_sparse::runtime::Manifest;
+
     let dir = args.get("artifacts", "artifacts").to_string();
     let manifest = Manifest::load(&dir)?;
     println!("artifacts: {}", manifest.dir.display());

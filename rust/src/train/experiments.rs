@@ -1,9 +1,13 @@
 //! Quality-experiment driver: dense train → (iterative) prune → retrain →
 //! eval, the schedule behind Figs. 1/5 and Table I.
 
+#[cfg(feature = "pjrt")]
 use super::session::TrainSession;
+#[cfg(feature = "pjrt")]
 use crate::runtime::{ModelManifest, Runtime};
+#[cfg(feature = "pjrt")]
 use crate::sparse::pattern::Pattern;
+#[cfg(feature = "pjrt")]
 use anyhow::Result;
 
 /// Steps for each phase; env-tunable so benches can trade time for fidelity.
@@ -56,6 +60,7 @@ pub fn milestones(target: f64) -> Vec<f64> {
 /// targets), retrain after each prune, and evaluate.
 ///
 /// `pattern = None` evaluates the dense baseline (no pruning phases).
+#[cfg(feature = "pjrt")]
 pub fn run_quality(
     rt: &Runtime,
     manifest: &ModelManifest,

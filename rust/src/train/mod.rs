@@ -10,5 +10,8 @@ pub mod data;
 pub mod experiments;
 pub mod session;
 
-pub use experiments::{run_quality, QualityResult};
+pub use experiments::QualityResult;
+#[cfg(feature = "pjrt")]
+pub use experiments::run_quality;
+#[cfg(feature = "pjrt")]
 pub use session::TrainSession;

@@ -1,15 +1,21 @@
 //! One model's training state driven through the AOT artifacts.
 
+#[cfg(feature = "pjrt")]
 use super::data::TaskGen;
+#[cfg(feature = "pjrt")]
 use crate::pruning::prune as prune_mask;
+#[cfg(feature = "pjrt")]
 use crate::runtime::{Executable, ModelManifest, Runtime, Tensor};
 use crate::sparse::dense::{Dense, Mask};
 use crate::sparse::pattern::Pattern;
+#[cfg(feature = "pjrt")]
 use crate::util::prng::Prng;
+#[cfg(feature = "pjrt")]
 use anyhow::{Context, Result};
 
 /// Training session: parameters + Adam state + masks + task generator,
 /// with the train/eval artifacts compiled once.
+#[cfg(feature = "pjrt")]
 pub struct TrainSession {
     pub manifest: ModelManifest,
     train_exe: Executable,
@@ -24,6 +30,7 @@ pub struct TrainSession {
     rng: Prng,
 }
 
+#[cfg(feature = "pjrt")]
 impl TrainSession {
     /// Initialize with Glorot-normal weights (zero biases), all-ones masks.
     pub fn new(rt: &Runtime, manifest: &ModelManifest, seed: u64) -> Result<TrainSession> {
@@ -198,6 +205,7 @@ impl TrainSession {
 }
 
 /// A point-in-time copy of a session's mutable state.
+#[cfg(feature = "pjrt")]
 #[derive(Clone)]
 pub struct Snapshot {
     params: Vec<Tensor>,

@@ -1,7 +1,14 @@
 //! Fixed-size thread pool over std primitives (no external deps).
 //!
-//! Used by the coordinator's worker pool and the bench harness's parallel
-//! sweeps. Jobs are boxed closures; `join` blocks until the queue drains.
+//! Used by the coordinator's worker pool, the native execution engine's
+//! parallel band kernels, and the bench harness's parallel sweeps. Jobs
+//! are boxed closures; `join` blocks until the queue drains.
+//!
+//! Panic safety: a panicking job must still decrement the outstanding
+//! counter (otherwise `join` deadlocks forever), so the decrement lives in
+//! a drop guard that runs during unwinding. The panic itself is not
+//! swallowed: the first payload is recorded and re-raised from the next
+//! `join()` on the submitting thread.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
@@ -13,11 +20,41 @@ struct Shared {
     /// Number of jobs submitted but not yet finished.
     outstanding: Mutex<usize>,
     idle: Condvar,
+    /// First panic payload observed in a worker, surfaced by `join`.
+    panicked: Mutex<Option<String>>,
+}
+
+/// Decrements `outstanding` when dropped — including during a panic
+/// unwind — so `join` can never be left waiting on a job that died.
+struct DoneGuard {
+    shared: Arc<Shared>,
+}
+
+impl Drop for DoneGuard {
+    fn drop(&mut self) {
+        let mut out = self.shared.outstanding.lock().unwrap();
+        *out -= 1;
+        if *out == 0 {
+            self.shared.idle.notify_all();
+        }
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 /// A fixed-size pool of worker threads.
 pub struct ThreadPool {
-    tx: Option<mpsc::Sender<Job>>,
+    /// Mutex-wrapped so the pool is `Sync` on every toolchain (std's
+    /// `mpsc::Sender` only became `Sync` in recent releases).
+    tx: Option<Mutex<mpsc::Sender<Job>>>,
     workers: Vec<thread::JoinHandle<()>>,
     shared: Arc<Shared>,
 }
@@ -31,6 +68,7 @@ impl ThreadPool {
         let shared = Arc::new(Shared {
             outstanding: Mutex::new(0),
             idle: Condvar::new(),
+            panicked: Mutex::new(None),
         });
         let workers = (0..n)
             .map(|i| {
@@ -45,11 +83,17 @@ impl ThreadPool {
                         };
                         match job {
                             Ok(job) => {
-                                job();
-                                let mut out = shared.outstanding.lock().unwrap();
-                                *out -= 1;
-                                if *out == 0 {
-                                    shared.idle.notify_all();
+                                let _done = DoneGuard {
+                                    shared: Arc::clone(&shared),
+                                };
+                                let result = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(job),
+                                );
+                                if let Err(payload) = result {
+                                    let mut slot = shared.panicked.lock().unwrap();
+                                    if slot.is_none() {
+                                        *slot = Some(panic_message(payload.as_ref()));
+                                    }
                                 }
                             }
                             Err(_) => break, // channel closed: shut down
@@ -59,10 +103,15 @@ impl ThreadPool {
             })
             .collect();
         ThreadPool {
-            tx: Some(tx),
+            tx: Some(Mutex::new(tx)),
             workers,
             shared,
         }
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
     }
 
     /// Submit a job.
@@ -74,15 +123,22 @@ impl ThreadPool {
         self.tx
             .as_ref()
             .expect("pool shut down")
+            .lock()
+            .unwrap()
             .send(Box::new(f))
             .expect("worker channel closed");
     }
 
-    /// Block until every submitted job has completed.
+    /// Block until every submitted job has completed. If any job panicked
+    /// since the last `join`, the first panic is re-raised here.
     pub fn join(&self) {
         let mut out = self.shared.outstanding.lock().unwrap();
         while *out > 0 {
             out = self.shared.idle.wait(out).unwrap();
+        }
+        drop(out);
+        if let Some(msg) = self.shared.panicked.lock().unwrap().take() {
+            panic!("ThreadPool job panicked: {msg}");
         }
     }
 
@@ -165,5 +221,37 @@ mod tests {
         let b = pool.map(vec![10, 20], |x| x + 1);
         assert_eq!(a, vec![2, 3, 4]);
         assert_eq!(b, vec![11, 21]);
+    }
+
+    #[test]
+    fn panicking_job_does_not_deadlock_join() {
+        let pool = ThreadPool::new(2);
+        let count = Arc::new(AtomicUsize::new(0));
+        pool.execute(|| panic!("boom in worker"));
+        for _ in 0..10 {
+            let c = Arc::clone(&count);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        // join must return (not hang) and surface the panic.
+        let joined = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| pool.join()));
+        let err = joined.expect_err("join should re-raise the worker panic");
+        let msg = if let Some(s) = err.downcast_ref::<String>() {
+            s.clone()
+        } else {
+            String::new()
+        };
+        assert!(msg.contains("boom in worker"), "unexpected panic: {msg}");
+        // All non-panicking jobs still ran and the pool stays usable.
+        assert_eq!(count.load(Ordering::SeqCst), 10);
+        let out = pool.map(vec![1, 2], |x| x + 1);
+        assert_eq!(out, vec![2, 3]);
+    }
+
+    #[test]
+    fn pool_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<ThreadPool>();
     }
 }

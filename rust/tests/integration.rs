@@ -1,23 +1,15 @@
-//! Cross-module integration tests. Tests that need AOT artifacts skip
-//! with a message when `artifacts/` has not been built (`make artifacts`).
+//! Cross-module integration tests.
+//!
+//! The serving stack runs on the native execution engine by default, so
+//! the TCP/batcher/worker tests need no artifacts. Tests that drive the
+//! PJRT artifacts only compile with `--features pjrt` and skip with a
+//! message when `artifacts/` has not been built (`make artifacts`).
 
 use gs_sparse::coordinator::{serve, server::ServeConfig, Client, SparseModel, UniformGs};
 use gs_sparse::kernels::native::gs_matvec;
 use gs_sparse::pruning::prune;
-use gs_sparse::runtime::{Manifest, Runtime};
 use gs_sparse::sparse::{Dense, GsFormat, Pattern};
-use gs_sparse::train::{experiments::Schedule, run_quality, TrainSession};
 use gs_sparse::util::Prng;
-use std::sync::Arc;
-
-fn manifest_or_skip() -> Option<Manifest> {
-    let dir = Manifest::default_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
-        return None;
-    }
-    Some(Manifest::load(dir).expect("manifest loads"))
-}
 
 /// Full format pipeline: prune → compact format → native spMV == dense.
 #[test]
@@ -42,153 +34,112 @@ fn prune_format_kernel_pipeline() {
     }
 }
 
-/// The PJRT bridge: load the Pallas-backed forward artifact and check its
-/// numerics against the Rust-native GS spMV oracle.
-#[test]
-fn mlp_forward_artifact_matches_native_oracle() {
-    let Some(manifest) = manifest_or_skip() else { return };
-    let rt = Runtime::cpu().unwrap();
-    let cfg = &manifest.mlp;
-    let (inputs, hidden, outputs) = (
-        cfg.cfg("inputs").unwrap(),
-        cfg.cfg("hidden").unwrap(),
-        cfg.cfg("outputs").unwrap(),
-    );
-    let b = cfg.cfg("gs_b").unwrap();
-    let groups = cfg.cfg("gs_groups").unwrap();
+/// Build a native-backend model plus everything needed to recompute its
+/// forward pass by hand.
+fn native_model(
+    threads: usize,
+    seed: u64,
+) -> (SparseModel, Dense, Vec<f32>, Vec<f32>, Vec<f32>, usize) {
+    let (inputs, hidden, outputs, max_batch) = (24, 64, 32, 8);
+    let mut rng = Prng::new(seed);
+    let mut proj = Dense::random(outputs, hidden, 0.3, &mut rng);
+    let pattern = Pattern::Gs { b: 16, k: 16 };
+    let mask = prune(&proj, pattern, 0.85).unwrap();
+    proj.apply_mask(&mask);
+    let gs = GsFormat::from_dense(&proj, pattern).unwrap();
+    let w1 = rng.normal_vec(inputs * hidden, 0.1);
+    let b1 = rng.normal_vec(hidden, 0.05);
+    let b2 = rng.normal_vec(outputs, 0.1);
+    let model = SparseModel::native(
+        w1.clone(),
+        b1.clone(),
+        &gs,
+        b2.clone(),
+        inputs,
+        max_batch,
+        threads,
+    )
+    .unwrap();
+    (model, proj, w1, b1, b2, inputs)
+}
 
-    // Build a GS(B,B) projection clamped to the artifact's static group
-    // capacity.
-    let mut rng = Prng::new(7);
-    let proj = Dense::random(outputs, hidden, 0.3, &mut rng);
-    let uniform = UniformGs::compress_for(&proj, b, groups).unwrap();
-
-    let w1: Vec<f32> = rng.normal_vec(inputs * hidden, 0.1);
-    let b1 = vec![0.0f32; hidden];
-    let b2: Vec<f32> = rng.normal_vec(outputs, 0.1);
-    let model = SparseModel::load(&rt, &manifest, w1.clone(), b1, &uniform, b2.clone()).unwrap();
-
-    let x: Vec<f32> = rng.normal_vec(inputs, 1.0);
-    let out = model.infer_batch(&[x.clone()]).unwrap();
-    assert_eq!(out.len(), 1);
-    assert_eq!(out[0].len(), outputs);
-
-    // Native oracle: h = relu(x @ w1); logits = W2 h + b2 with W2 the
-    // dense reconstruction of the shipped uniform layout.
+/// The oracle path: dense `relu(x@w1+b1)`, then the *pruned dense*
+/// projection row-dots, then `+ b2`.
+fn oracle_forward(
+    proj: &Dense,
+    w1: &[f32],
+    b1: &[f32],
+    b2: &[f32],
+    inputs: usize,
+    x: &[f32],
+) -> Vec<f32> {
+    let hidden = proj.cols;
     let mut h = vec![0.0f32; hidden];
     for j in 0..hidden {
-        let mut acc = 0.0;
+        let mut acc = b1[j];
         for i in 0..inputs {
             acc += x[i] * w1[i * hidden + j];
         }
         h[j] = acc.max(0.0);
     }
-    let w2 = uniform.to_dense(hidden);
-    let y: Vec<f32> = (0..outputs)
-        .map(|r| w2[r].iter().zip(&h).map(|(w, a)| w * a).sum())
-        .collect();
-    for (o, (got, (a, base))) in out[0].iter().zip(y.iter().zip(&b2)).enumerate() {
-        let want = a + base;
-        assert!((got - want).abs() < 1e-3, "output {o}: {got} vs {want}");
-    }
+    (0..proj.rows)
+        .map(|r| b2[r] + proj.row(r).iter().zip(&h).map(|(&w, &a)| w * a).sum::<f32>())
+        .collect()
 }
 
-/// Train-step artifact executes and the loss decreases on a micro model.
+/// Acceptance: `SparseModel::infer_batch` on the native backend produces
+/// the oracle path's outputs, serial and parallel, across batch sizes.
 #[test]
-fn train_session_loss_decreases() {
-    let Some(manifest) = manifest_or_skip() else { return };
-    let rt = Runtime::cpu().unwrap();
-    let mm = manifest.models.get("resnet").unwrap();
-    let mut session = TrainSession::new(&rt, mm, 42).unwrap();
-    let losses = session.train_steps(60).unwrap();
-    let head: f32 = losses[..10].iter().sum::<f32>() / 10.0;
-    let tail: f32 = losses[losses.len() - 10..].iter().sum::<f32>() / 10.0;
-    assert!(
-        tail < head,
-        "loss did not decrease: head {head} tail {tail}"
-    );
-}
-
-/// Prune→retrain keeps masks valid and weights zero where pruned.
-#[test]
-fn prune_retrain_invariants() {
-    let Some(manifest) = manifest_or_skip() else { return };
-    let rt = Runtime::cpu().unwrap();
-    let mm = manifest.models.get("jasper").unwrap();
-    let mut session = TrainSession::new(&rt, mm, 3).unwrap();
-    session.train_steps(20).unwrap();
-    session.prune(Pattern::Gs { b: 8, k: 8 }, 0.75).unwrap();
-    let s = session.sparsity();
-    assert!((s - 0.75).abs() < 0.1, "achieved sparsity {s}");
-    session.train_steps(20).unwrap();
-    // Pruned weights must stay exactly zero through retraining.
-    let mut mask_idx = 0;
-    for (pi, spec) in session.manifest.params.clone().iter().enumerate() {
-        if !spec.prunable {
-            continue;
-        }
-        let mask = session.masks[mask_idx].as_f32().unwrap().to_vec();
-        let data = session.params[pi].as_f32().unwrap();
-        for (v, m) in data.iter().zip(&mask) {
-            if *m == 0.0 {
-                assert_eq!(*v, 0.0, "pruned weight resurrected in {}", spec.name);
+fn native_infer_batch_matches_oracle_path() {
+    for threads in [0usize, 4] {
+        let (model, proj, w1, b1, b2, inputs) = native_model(threads, 77);
+        assert_eq!(model.backend_name(), "native");
+        let mut rng = Prng::new(5);
+        for batch in [1usize, 3, 8] {
+            let rows: Vec<Vec<f32>> = (0..batch).map(|_| rng.normal_vec(inputs, 1.0)).collect();
+            let got = model.infer_batch(&rows).unwrap();
+            assert_eq!(got.len(), batch);
+            for (r, x) in rows.iter().enumerate() {
+                let want = oracle_forward(&proj, &w1, &b1, &b2, inputs, x);
+                for (o, (g, w)) in got[r].iter().zip(&want).enumerate() {
+                    assert!(
+                        (g - w).abs() < 1e-3,
+                        "threads={threads} batch={batch} row {r} out {o}: {g} vs {w}"
+                    );
+                }
             }
         }
-        mask_idx += 1;
     }
 }
 
-/// Quality driver end-to-end on the fastest model with a tiny schedule.
+/// Serial and parallel native backends agree bit for bit.
 #[test]
-fn quality_driver_runs() {
-    let Some(manifest) = manifest_or_skip() else { return };
-    let rt = Runtime::cpu().unwrap();
-    let mm = manifest.models.get("resnet").unwrap();
-    let schedule = Schedule { dense_steps: 30, retrain_steps: 15, eval_batches: 2 };
-    let r = run_quality(&rt, mm, Some(Pattern::Gs { b: 8, k: 8 }), 0.6, schedule, 1).unwrap();
-    assert_eq!(r.pattern, "GS(8,8)");
-    assert!((r.achieved_sparsity - 0.6).abs() < 0.1);
-    assert!(r.metric >= 0.0 && r.metric <= 1.0);
+fn native_backends_serial_parallel_identical() {
+    let (serial, ..) = native_model(0, 123);
+    let (parallel, ..) = native_model(4, 123);
+    let mut rng = Prng::new(6);
+    let rows: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(24, 1.0)).collect();
+    assert_eq!(
+        serial.infer_batch(&rows).unwrap(),
+        parallel.infer_batch(&rows).unwrap()
+    );
 }
 
-/// Full serving stack: TCP server, batcher, PJRT worker, JSON protocol.
+/// Full serving stack on the native engine: TCP server, batcher, worker,
+/// JSON protocol — no artifacts required.
 #[test]
 fn serving_roundtrip_and_batching() {
-    let Some(manifest) = manifest_or_skip() else { return };
-    let cfg = &manifest.mlp;
-    let (inputs, hidden, outputs) = (
-        cfg.cfg("inputs").unwrap(),
-        cfg.cfg("hidden").unwrap(),
-        cfg.cfg("outputs").unwrap(),
-    );
-    let b = cfg.cfg("gs_b").unwrap();
-    let groups = cfg.cfg("gs_groups").unwrap();
-    let max_batch = cfg.cfg("batch").unwrap();
-
-    let manifest = Arc::new(manifest);
-    let m2 = Arc::clone(&manifest);
-    let factory = move || {
-        let rt = Runtime::cpu()?;
-        let mut rng = Prng::new(11);
-        let proj = Dense::random(outputs, hidden, 0.3, &mut rng);
-        let uniform = UniformGs::compress_for(&proj, b, groups)?;
-        let mut rng2 = Prng::new(12);
-        SparseModel::load(
-            &rt,
-            &m2,
-            rng2.normal_vec(inputs * hidden, 0.1),
-            vec![0.0; hidden],
-            &uniform,
-            rng2.normal_vec(outputs, 0.1),
-        )
+    let factory = || {
+        let (model, ..) = native_model(0, 11);
+        Ok(model)
     };
     let handle = serve(
         factory,
         ServeConfig {
             bind: "127.0.0.1:0".into(),
             workers: 1,
-            input_width: inputs,
-            max_batch,
+            input_width: 24,
+            max_batch: 8,
             window_ms: 2,
         },
     )
@@ -198,13 +149,13 @@ fn serving_roundtrip_and_batching() {
     assert!(client.ping().unwrap());
     let mut rng = Prng::new(13);
     for _ in 0..12 {
-        let x = rng.normal_vec(inputs, 1.0);
+        let x = rng.normal_vec(24, 1.0);
         let out = client.infer(&x).unwrap();
-        assert_eq!(out.len(), outputs);
+        assert_eq!(out.len(), 32);
         assert!(out.iter().all(|v| v.is_finite()));
     }
     // Deterministic model: same input → same output.
-    let x = rng.normal_vec(inputs, 1.0);
+    let x = rng.normal_vec(24, 1.0);
     let a = client.infer(&x).unwrap();
     let c = client.infer(&x).unwrap();
     assert_eq!(a, c);
@@ -217,33 +168,16 @@ fn serving_roundtrip_and_batching() {
 /// Wrong-width input is rejected with an error, not a crash.
 #[test]
 fn serving_rejects_bad_input() {
-    let Some(manifest) = manifest_or_skip() else { return };
-    let cfg = manifest.mlp.clone();
-    let inputs = cfg.cfg("inputs").unwrap();
-    let groups = cfg.cfg("gs_groups").unwrap();
-    let b = cfg.cfg("gs_b").unwrap();
-    let (hidden, outputs) = (cfg.cfg("hidden").unwrap(), cfg.cfg("outputs").unwrap());
-    let manifest = Arc::new(manifest);
-    let m2 = Arc::clone(&manifest);
-    let factory = move || {
-        let rt = Runtime::cpu()?;
-        let mut rng = Prng::new(21);
-        let proj = Dense::random(outputs, hidden, 0.3, &mut rng);
-        SparseModel::load(
-            &rt,
-            &m2,
-            vec![0.01; 64 * hidden],
-            vec![0.0; hidden],
-            &UniformGs::compress_for(&proj, b, groups)?,
-            vec![0.0; outputs],
-        )
+    let factory = || {
+        let (model, ..) = native_model(0, 21);
+        Ok(model)
     };
     let handle = serve(
         factory,
         ServeConfig {
             bind: "127.0.0.1:0".into(),
             workers: 1,
-            input_width: inputs,
+            input_width: 24,
             max_batch: 8,
             window_ms: 1,
         },
@@ -279,4 +213,129 @@ fn uniform_padding_dense_reconstruction() {
     // Tensors have the declared shapes.
     assert_eq!(u.value_tensor().shape(), &[16, maxg + 1, 8]);
     assert_eq!(u.index_tensor().shape(), &[16, maxg + 1, 8]);
+}
+
+/// PJRT-artifact tests: only built with `--features pjrt`, and skip at
+/// runtime unless `artifacts/` exists (and the real `xla` crate backs the
+/// runtime — the offline stub fails at `Runtime::cpu()`).
+#[cfg(feature = "pjrt")]
+mod pjrt_artifacts {
+    use super::*;
+    use gs_sparse::runtime::{Manifest, Runtime};
+    use gs_sparse::train::{experiments::Schedule, run_quality, TrainSession};
+
+    fn manifest_or_skip() -> Option<Manifest> {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        Some(Manifest::load(dir).expect("manifest loads"))
+    }
+
+    /// The PJRT bridge: load the Pallas-backed forward artifact and check
+    /// its numerics against the Rust-native GS spMV oracle.
+    #[test]
+    fn mlp_forward_artifact_matches_native_oracle() {
+        let Some(manifest) = manifest_or_skip() else { return };
+        let rt = Runtime::cpu().unwrap();
+        let cfg = &manifest.mlp;
+        let (inputs, hidden, outputs) = (
+            cfg.cfg("inputs").unwrap(),
+            cfg.cfg("hidden").unwrap(),
+            cfg.cfg("outputs").unwrap(),
+        );
+        let b = cfg.cfg("gs_b").unwrap();
+        let groups = cfg.cfg("gs_groups").unwrap();
+
+        let mut rng = Prng::new(7);
+        let proj = Dense::random(outputs, hidden, 0.3, &mut rng);
+        let uniform = UniformGs::compress_for(&proj, b, groups).unwrap();
+
+        let w1: Vec<f32> = rng.normal_vec(inputs * hidden, 0.1);
+        let b1 = vec![0.0f32; hidden];
+        let b2: Vec<f32> = rng.normal_vec(outputs, 0.1);
+        let model =
+            SparseModel::load(&rt, &manifest, w1.clone(), b1, &uniform, b2.clone()).unwrap();
+        assert_eq!(model.backend_name(), "pjrt");
+
+        let x: Vec<f32> = rng.normal_vec(inputs, 1.0);
+        let out = model.infer_batch(&[x.clone()]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), outputs);
+
+        // Native oracle: h = relu(x @ w1); logits = W2 h + b2 with W2 the
+        // dense reconstruction of the shipped uniform layout.
+        let mut h = vec![0.0f32; hidden];
+        for j in 0..hidden {
+            let mut acc = 0.0;
+            for i in 0..inputs {
+                acc += x[i] * w1[i * hidden + j];
+            }
+            h[j] = acc.max(0.0);
+        }
+        let w2 = uniform.to_dense(hidden);
+        let y: Vec<f32> = (0..outputs)
+            .map(|r| w2[r].iter().zip(&h).map(|(w, a)| w * a).sum())
+            .collect();
+        for (o, (got, (a, base))) in out[0].iter().zip(y.iter().zip(&b2)).enumerate() {
+            let want = a + base;
+            assert!((got - want).abs() < 1e-3, "output {o}: {got} vs {want}");
+        }
+    }
+
+    /// Train-step artifact executes and the loss decreases on a micro model.
+    #[test]
+    fn train_session_loss_decreases() {
+        let Some(manifest) = manifest_or_skip() else { return };
+        let rt = Runtime::cpu().unwrap();
+        let mm = manifest.models.get("resnet").unwrap();
+        let mut session = TrainSession::new(&rt, mm, 42).unwrap();
+        let losses = session.train_steps(60).unwrap();
+        let head: f32 = losses[..10].iter().sum::<f32>() / 10.0;
+        let tail: f32 = losses[losses.len() - 10..].iter().sum::<f32>() / 10.0;
+        assert!(tail < head, "loss did not decrease: head {head} tail {tail}");
+    }
+
+    /// Prune→retrain keeps masks valid and weights zero where pruned.
+    #[test]
+    fn prune_retrain_invariants() {
+        let Some(manifest) = manifest_or_skip() else { return };
+        let rt = Runtime::cpu().unwrap();
+        let mm = manifest.models.get("jasper").unwrap();
+        let mut session = TrainSession::new(&rt, mm, 3).unwrap();
+        session.train_steps(20).unwrap();
+        session.prune(Pattern::Gs { b: 8, k: 8 }, 0.75).unwrap();
+        let s = session.sparsity();
+        assert!((s - 0.75).abs() < 0.1, "achieved sparsity {s}");
+        session.train_steps(20).unwrap();
+        // Pruned weights must stay exactly zero through retraining.
+        let mut mask_idx = 0;
+        for (pi, spec) in session.manifest.params.clone().iter().enumerate() {
+            if !spec.prunable {
+                continue;
+            }
+            let mask = session.masks[mask_idx].as_f32().unwrap().to_vec();
+            let data = session.params[pi].as_f32().unwrap();
+            for (v, m) in data.iter().zip(&mask) {
+                if *m == 0.0 {
+                    assert_eq!(*v, 0.0, "pruned weight resurrected in {}", spec.name);
+                }
+            }
+            mask_idx += 1;
+        }
+    }
+
+    /// Quality driver end-to-end on the fastest model with a tiny schedule.
+    #[test]
+    fn quality_driver_runs() {
+        let Some(manifest) = manifest_or_skip() else { return };
+        let rt = Runtime::cpu().unwrap();
+        let mm = manifest.models.get("resnet").unwrap();
+        let schedule = Schedule { dense_steps: 30, retrain_steps: 15, eval_batches: 2 };
+        let r = run_quality(&rt, mm, Some(Pattern::Gs { b: 8, k: 8 }), 0.6, schedule, 1).unwrap();
+        assert_eq!(r.pattern, "GS(8,8)");
+        assert!((r.achieved_sparsity - 0.6).abs() < 0.1);
+        assert!(r.metric >= 0.0 && r.metric <= 1.0);
+    }
 }

@@ -1,0 +1,184 @@
+//! Property tests for the native execution engine: the prepacked plan
+//! kernels ([`gs_matvec_planned`], [`gs_matmul`], the parallel path) must
+//! match the scalar oracle `gs_matvec` bit for bit, for every pattern
+//! family the format supports and across edge shapes (empty bands,
+//! single group, batch of 1, non-block-multiple batches).
+
+use gs_sparse::kernels::exec::{
+    gs_matmul, gs_matmul_parallel, gs_matvec_planned, to_feature_major, GsExecPlan,
+};
+use gs_sparse::kernels::native::gs_matvec;
+use gs_sparse::pruning::prune;
+use gs_sparse::sparse::{Dense, GsFormat, Pattern};
+use gs_sparse::testing::{default_cases, forall2, OneOf, UsizeIn};
+use gs_sparse::util::{Prng, ThreadPool};
+use std::sync::Arc;
+
+/// Patterns hosted by a 32×64 matrix, including all acceptance shapes:
+/// GS(B,B), GS(B,1), GS(B,2), and scatter.
+fn pattern_gen() -> OneOf<Pattern> {
+    OneOf(vec![
+        Pattern::Gs { b: 8, k: 8 },
+        Pattern::Gs { b: 8, k: 4 },
+        Pattern::Gs { b: 8, k: 2 },
+        Pattern::Gs { b: 8, k: 1 },
+        Pattern::GsScatter { b: 8, k: 1 },
+        Pattern::GsScatter { b: 8, k: 2 },
+        Pattern::Gs { b: 16, k: 16 },
+    ])
+}
+
+fn packed(pattern: Pattern, sparsity: f64, seed: u64) -> Result<GsFormat, String> {
+    let mut rng = Prng::new(seed);
+    let mut w = Dense::random(32, 64, 1.0, &mut rng);
+    let mask = prune(&w, pattern, sparsity).map_err(|e| format!("prune: {e:#}"))?;
+    w.apply_mask(&mask);
+    GsFormat::from_dense(&w, pattern).map_err(|e| format!("pack: {e:#}"))
+}
+
+fn exact(a: &[f32], b: &[f32], what: &str) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{what}: length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if x.to_bits() != y.to_bits() && x != y {
+            return Err(format!("{what}: index {i}: {x} vs {y}"));
+        }
+    }
+    Ok(())
+}
+
+/// Planned single-vector kernel ≡ oracle, bit for bit, for every
+/// pattern × sparsity.
+#[test]
+fn prop_planned_matvec_matches_oracle() {
+    forall2(
+        "planned-matvec-oracle",
+        &pattern_gen(),
+        &UsizeIn { lo: 30, hi: 92 },
+        default_cases(),
+        |&pattern, &sp| {
+            let gs = packed(pattern, sp as f64 / 100.0, sp as u64 * 7 + 1)?;
+            let plan = GsExecPlan::from_format(&gs).map_err(|e| format!("plan: {e:#}"))?;
+            let mut rng = Prng::new(sp as u64 ^ 0x5EED);
+            let x = rng.normal_vec(64, 1.0);
+            exact(&gs_matvec_planned(&plan, &x), &gs_matvec(&gs, &x), &pattern.name())
+        },
+    );
+}
+
+/// Batched kernel columns ≡ oracle per activation row, for batches that
+/// exercise the register-block remainder (1, 3, 8, 13).
+#[test]
+fn prop_matmul_columns_match_oracle() {
+    forall2(
+        "matmul-columns-oracle",
+        &pattern_gen(),
+        &OneOf(vec![1usize, 3, 8, 13]),
+        default_cases().min(40),
+        |&pattern, &batch| {
+            let gs = packed(pattern, 0.75, batch as u64 * 31 + 5)?;
+            let plan = GsExecPlan::from_format(&gs).map_err(|e| format!("plan: {e:#}"))?;
+            let mut rng = Prng::new(batch as u64 + 100);
+            let rows: Vec<Vec<f32>> = (0..batch).map(|_| rng.normal_vec(64, 1.0)).collect();
+            let out = gs_matmul(&plan, &to_feature_major(&rows, 64), batch);
+            for (r, x) in rows.iter().enumerate() {
+                let want = gs_matvec(&gs, x);
+                let col: Vec<f32> = (0..gs.rows).map(|row| out[row * batch + r]).collect();
+                exact(&col, &want, &format!("{} col {r}", pattern.name()))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Parallel path ≡ serial batched kernel for every chunk count — the
+/// merge is a copy of disjoint rows, so results are bit-identical at any
+/// parallelism.
+#[test]
+fn prop_parallel_matches_serial_any_chunking() {
+    let pool = ThreadPool::new(4);
+    forall2(
+        "parallel-vs-serial",
+        &pattern_gen(),
+        &UsizeIn { lo: 1, hi: 40 },
+        default_cases().min(40),
+        |&pattern, &nchunks| {
+            let gs = packed(pattern, 0.8, nchunks as u64 * 13 + 3)?;
+            let plan =
+                Arc::new(GsExecPlan::with_chunks(&gs, nchunks).map_err(|e| format!("{e:#}"))?);
+            let batch = 5usize;
+            let mut rng = Prng::new(nchunks as u64);
+            let rows: Vec<Vec<f32>> = (0..batch).map(|_| rng.normal_vec(64, 1.0)).collect();
+            let acts = Arc::new(to_feature_major(&rows, 64));
+            let serial = gs_matmul(&plan, &acts, batch);
+            let parallel = gs_matmul_parallel(&plan, &acts, batch, &pool);
+            exact(&parallel, &serial, &format!("{} chunks={nchunks}", pattern.name()))
+        },
+    );
+}
+
+/// Edge shapes: all-zero matrix (every band empty), a single group, and
+/// a matrix where only some bands are populated.
+#[test]
+fn edge_shapes_execute_exactly() {
+    // All-empty bands.
+    let zero = Dense::zeros(16, 32);
+    let gs = GsFormat::from_dense(&zero, Pattern::Gs { b: 8, k: 1 }).unwrap();
+    let plan = GsExecPlan::from_format(&gs).unwrap();
+    let x = vec![1.0f32; 32];
+    assert_eq!(gs_matvec_planned(&plan, &x), vec![0.0; 16]);
+    assert_eq!(gs_matmul(&plan, &to_feature_major(&[x], 32), 1), vec![0.0; 16]);
+
+    // A single group (one row, B nnz).
+    let mut one = Dense::zeros(1, 16);
+    for j in 0..8 {
+        one.set(0, j, (j + 1) as f32);
+    }
+    let gs = GsFormat::from_dense(&one, Pattern::Gs { b: 8, k: 8 }).unwrap();
+    assert_eq!(gs.ngroups(), 1);
+    let plan = GsExecPlan::from_format(&gs).unwrap();
+    let mut rng = Prng::new(2);
+    let x = rng.normal_vec(16, 1.0);
+    assert_eq!(gs_matvec_planned(&plan, &x), gs_matvec(&gs, &x));
+
+    // Ragged band occupancy: rows 0..8 dense-ish, rows 8..16 empty.
+    let mut rng = Prng::new(3);
+    let mut ragged = Dense::zeros(16, 32);
+    for r in 0..8 {
+        for j in 0..8 {
+            // residues 0..8 distinct per row → valid GS(8,8) group.
+            ragged.set(r, j + (r % 3) * 8, rng.gaussian_f32());
+        }
+    }
+    let gs = GsFormat::from_dense(&ragged, Pattern::Gs { b: 8, k: 8 }).unwrap();
+    let plan = GsExecPlan::from_format(&gs).unwrap();
+    let x = rng.normal_vec(32, 1.0);
+    assert_eq!(gs_matvec_planned(&plan, &x), gs_matvec(&gs, &x));
+    let batch_rows: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(32, 1.0)).collect();
+    let out = gs_matmul(&plan, &to_feature_major(&batch_rows, 32), 4);
+    for (r, xr) in batch_rows.iter().enumerate() {
+        let want = gs_matvec(&gs, xr);
+        for row in 0..16 {
+            assert_eq!(out[row * 4 + r], want[row], "ragged row {row} col {r}");
+        }
+    }
+}
+
+/// The packed plan reports sane metadata.
+#[test]
+fn plan_metadata_consistent() {
+    let gs = packed(Pattern::Gs { b: 8, k: 2 }, 0.7, 9).unwrap();
+    let plan = GsExecPlan::with_chunks(&gs, 3).unwrap();
+    assert_eq!(plan.b, 8);
+    assert_eq!(plan.k, 2);
+    assert_eq!(plan.rows, 32);
+    assert_eq!(plan.cols, 64);
+    assert_eq!(plan.band_rows(), 4);
+    assert_eq!(plan.nbands(), 8);
+    assert_eq!(plan.ngroups(), gs.ngroups());
+    assert!(!plan.scatter);
+    assert!(plan.packed_bytes() > 0);
+    let total: usize = plan.chunks().iter().map(|c| c.groups).sum();
+    assert_eq!(total, gs.ngroups());
+}

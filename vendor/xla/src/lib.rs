@@ -1,0 +1,170 @@
+//! Offline stub of the `xla` crate (PJRT bindings).
+//!
+//! The container image does not ship the real `xla` crate or its native
+//! XLA/PJRT runtime, so this stub provides just enough API surface for
+//! `gs_sparse::runtime` to type-check when the `pjrt` cargo feature is
+//! enabled. Every entry point that would touch the real runtime returns
+//! an [`Error`] explaining that PJRT is unavailable; the serving stack's
+//! native backend (`gs_sparse::kernels::exec`) is the supported path in
+//! this environment. Swap this path dependency for the real crate to get
+//! a working PJRT backend — no source changes needed in `gs_sparse`.
+
+use std::fmt;
+
+/// Stub error: every runtime operation fails with this.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+type XlaResult<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: XLA/PJRT runtime unavailable (built against the offline stub crate; \
+         use the native backend, or link the real `xla` crate)"
+    ))
+}
+
+/// Element types the crate's artifacts use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    Pred,
+    F16,
+    F64,
+    S64,
+}
+
+/// Marker for element types a [`Literal`] can hold.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+
+/// Host-side literal (stub: holds nothing).
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> XlaResult<Literal> {
+        Err(unavailable("Literal::reshape"))
+    }
+
+    pub fn array_shape(&self) -> XlaResult<ArrayShape> {
+        Err(unavailable("Literal::array_shape"))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> XlaResult<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+
+    pub fn to_tuple(&self) -> XlaResult<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Array shape metadata (stub).
+pub struct ArrayShape {
+    _private: (),
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &[]
+    }
+
+    pub fn ty(&self) -> ElementType {
+        ElementType::F32
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> XlaResult<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// XLA computation handle (stub).
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client (stub: construction fails).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> XlaResult<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> XlaResult<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Device buffer (stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> XlaResult<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable (stub: execution fails).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> XlaResult<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_operations_error_gracefully() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.reshape(&[2]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+        let msg = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(msg.contains("unavailable"));
+    }
+}
