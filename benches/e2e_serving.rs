@@ -8,9 +8,10 @@
 //! GS_E2E_REQUESTS (default 100 per client).
 
 use gs_sparse::bench::Table;
-use gs_sparse::coordinator::{serve, server::ServeConfig, Client, SparseModel};
-use gs_sparse::pruning::prune;
-use gs_sparse::sparse::{Dense, GsFormat, Pattern};
+use gs_sparse::coordinator::{serve, server::ServeConfig, Client};
+use gs_sparse::kernels::exec::PlanPrecision;
+use gs_sparse::sparse::Pattern;
+use gs_sparse::testing::{build_random_model, ModelSpec};
 use gs_sparse::util::Prng;
 use std::time::Instant;
 
@@ -25,74 +26,80 @@ fn main() -> anyhow::Result<()> {
 
     let mut table = Table::new(
         "E2E serving (GS-sparse MLP, native engine, dynamic batching)",
-        &["kernel_threads", "clients", "req_per_s", "p50_ms", "p95_ms", "mean_batch"],
+        &[
+            "precision",
+            "kernel_threads",
+            "clients",
+            "req_per_s",
+            "p50_ms",
+            "p95_ms",
+            "mean_batch",
+        ],
     );
 
-    for kernel_threads in [0usize, 4] {
-        for clients in [1usize, 4, 8] {
-            let factory = move || {
-                let mut rng = Prng::new(42);
-                let mut proj = Dense::random(outputs, hidden, 0.3, &mut rng);
-                let pattern = Pattern::Gs { b, k: b };
-                let mask = prune(&proj, pattern, sparsity)?;
-                proj.apply_mask(&mask);
-                let gs = GsFormat::from_dense(&proj, pattern)?;
-                SparseModel::native(
-                    rng.normal_vec(inputs * hidden, 0.1),
-                    vec![0.0; hidden],
-                    &gs,
-                    rng.normal_vec(outputs, 0.1),
+    for precision in [PlanPrecision::F32, PlanPrecision::F16] {
+        for kernel_threads in [0usize, 4] {
+            for clients in [1usize, 4, 8] {
+                let spec = ModelSpec {
                     inputs,
+                    hidden,
+                    outputs,
                     max_batch,
-                    kernel_threads,
-                )
-            };
-            let handle = serve(
-                factory,
-                ServeConfig {
-                    bind: "127.0.0.1:0".into(),
-                    workers: 1,
-                    input_width: inputs,
-                    max_batch,
-                    window_ms: 2,
-                },
-            )?;
-            // Warm up (first request touches all paths).
-            {
-                let mut c = Client::connect(handle.addr)?;
-                let mut rng = Prng::new(1);
-                let _ = c.infer(&rng.normal_vec(inputs, 1.0))?;
-            }
-            let t0 = Instant::now();
-            let threads: Vec<_> = (0..clients)
-                .map(|ci| {
-                    let addr = handle.addr;
-                    std::thread::spawn(move || -> anyhow::Result<()> {
-                        let mut c = Client::connect(addr)?;
-                        let mut rng = Prng::new(ci as u64 + 10);
-                        for _ in 0..requests_per_client {
-                            let _ = c.infer(&rng.normal_vec(inputs, 1.0))?;
-                        }
-                        Ok(())
+                    pattern: Pattern::Gs { b, k: b },
+                    sparsity,
+                    threads: kernel_threads,
+                    precision,
+                    seed: 42,
+                };
+                let factory = move || build_random_model(&spec).map(|bm| bm.model);
+                let handle = serve(
+                    factory,
+                    ServeConfig {
+                        bind: "127.0.0.1:0".into(),
+                        workers: 1,
+                        input_width: inputs,
+                        max_batch,
+                        window_ms: 2,
+                    },
+                )?;
+                // Warm up (first request touches all paths).
+                {
+                    let mut c = Client::connect(handle.addr)?;
+                    let mut rng = Prng::new(1);
+                    let _ = c.infer(&rng.normal_vec(inputs, 1.0))?;
+                }
+                let t0 = Instant::now();
+                let threads: Vec<_> = (0..clients)
+                    .map(|ci| {
+                        let addr = handle.addr;
+                        std::thread::spawn(move || -> anyhow::Result<()> {
+                            let mut c = Client::connect(addr)?;
+                            let mut rng = Prng::new(ci as u64 + 10);
+                            for _ in 0..requests_per_client {
+                                let _ = c.infer(&rng.normal_vec(inputs, 1.0))?;
+                            }
+                            Ok(())
+                        })
                     })
-                })
-                .collect();
-            for t in threads {
-                t.join().expect("client panicked")?;
+                    .collect();
+                for t in threads {
+                    t.join().expect("client panicked")?;
+                }
+                let elapsed = t0.elapsed().as_secs_f64();
+                let total = clients * requests_per_client;
+                let summary = handle.metrics.latency_summary().unwrap();
+                let mean_batch = handle.metrics.mean_batch_size();
+                table.row(&[
+                    precision.name().to_string(),
+                    kernel_threads.to_string(),
+                    clients.to_string(),
+                    format!("{:.0}", total as f64 / elapsed),
+                    format!("{:.2}", summary.p50 * 1e3),
+                    format!("{:.2}", summary.p95 * 1e3),
+                    format!("{mean_batch:.2}"),
+                ]);
+                handle.stop();
             }
-            let elapsed = t0.elapsed().as_secs_f64();
-            let total = clients * requests_per_client;
-            let summary = handle.metrics.latency_summary().unwrap();
-            let mean_batch = handle.metrics.mean_batch_size();
-            table.row(&[
-                kernel_threads.to_string(),
-                clients.to_string(),
-                format!("{:.0}", total as f64 / elapsed),
-                format!("{:.2}", summary.p50 * 1e3),
-                format!("{:.2}", summary.p95 * 1e3),
-                format!("{mean_batch:.2}"),
-            ]);
-            handle.stop();
         }
     }
     table.print();

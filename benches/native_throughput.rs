@@ -1,123 +1,198 @@
 //! Native GS execution-engine throughput: scalar oracle vs prepacked
 //! plan vs batched vs batched+parallel, across pattern × sparsity ×
-//! batch size. The perf deliverable behind the serving fast path.
+//! precision × batch size. The perf deliverable behind the serving fast
+//! path.
 //!
 //! Measures spMV-equivalent throughput (activation rows through the GS
-//! projection per second). `scalar` is `gs_matvec` called per row —
-//! the 20-line oracle. `planned` is the joined-layout single-vector
-//! kernel. `matmul` amortizes each index load across the batch.
-//! `matmul_par` adds the balanced-chunk ThreadPool path.
+//! projection per second). `scalar` is `gs_matvec` called per row — the
+//! 20-line oracle (run on the f16-quantized format for f16 rows, so the
+//! speedup baseline does the same arithmetic). `planned` is the
+//! joined-layout single-vector kernel. `matmul` amortizes each index
+//! load across the batch; under `--features simd` its inner block is the
+//! explicit `std::simd` path and an extra `matmul_sc` row records the
+//! scalar-fallback time for comparison. `matmul_par` is the balanced-
+//! chunk ThreadPool path (direct-write for non-scatter patterns);
+//! `matmul_par_merge` keeps the private-accumulate+merge strategy for
+//! every pattern — the satellite comparison for the direct-write path.
 //!
-//! Emits the usual table + GS_ROW records, and writes the machine-
-//! readable baseline to `BENCH_native.json` (repo root) so future PRs
-//! have a trajectory to beat. Knobs: GS_BENCH_REPS (default 5).
+//! Emits the usual table plus a packed-plan byte table (f32 vs f16), and
+//! writes the machine-readable baseline to `BENCH_native.json` (repo
+//! root) so future PRs have a trajectory to beat. Knobs: GS_BENCH_REPS
+//! (default 5), GS_BENCH_QUICK=1 (256×256 sweep with fewer cells — the
+//! CI smoke configuration).
 
 use gs_sparse::bench::Table;
 use gs_sparse::kernels::exec::{
-    gs_matmul, gs_matmul_parallel, gs_matvec_planned, to_feature_major, GsExecPlan,
+    gs_matmul, gs_matmul_parallel, gs_matmul_parallel_merge, gs_matmul_scalar, gs_matvec_planned,
+    simd_enabled, to_feature_major, GsExecPlan, PlanPrecision,
 };
 use gs_sparse::kernels::native::gs_matvec;
-use gs_sparse::pruning::prune;
-use gs_sparse::sparse::{Dense, GsFormat, Pattern};
+use gs_sparse::sparse::Pattern;
+use gs_sparse::testing::build_random_gs;
 use gs_sparse::util::json::Json;
 use gs_sparse::util::stats::{time_reps, Summary};
 use gs_sparse::util::{Prng, ThreadPool};
 use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
-    let (rows, cols, b) = (1024usize, 1024usize, 16usize);
+    let quick = std::env::var("GS_BENCH_QUICK").map_or(false, |v| v == "1");
+    let (rows, cols, b) = if quick {
+        (256usize, 256usize, 16usize)
+    } else {
+        (1024, 1024, 16)
+    };
     let reps: usize = std::env::var("GS_BENCH_REPS")
         .ok()
         .and_then(|s| s.parse().ok())
-        .unwrap_or(5);
+        .unwrap_or(if quick { 2 } else { 5 });
     let threads = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(4);
     let pool = ThreadPool::new(threads);
 
-    let patterns = [
-        Pattern::Gs { b, k: b },
-        Pattern::Gs { b, k: 4 },
-        Pattern::Gs { b, k: 1 },
-        Pattern::GsScatter { b, k: 1 },
-    ];
-    let sparsities = [0.9f64, 0.7];
-    let batches = [1usize, 16, 64];
+    let patterns: Vec<Pattern> = if quick {
+        vec![Pattern::Gs { b, k: b }, Pattern::GsScatter { b, k: 1 }]
+    } else {
+        vec![
+            Pattern::Gs { b, k: b },
+            Pattern::Gs { b, k: 4 },
+            Pattern::Gs { b, k: 1 },
+            Pattern::GsScatter { b, k: 1 },
+        ]
+    };
+    let sparsities: Vec<f64> = if quick { vec![0.9] } else { vec![0.9, 0.7] };
+    let batches: Vec<usize> = if quick { vec![1, 16] } else { vec![1, 16, 64] };
+    let precisions = [PlanPrecision::F32, PlanPrecision::F16];
 
     let mut table = Table::new(
-        &format!("Native GS throughput ({rows}x{cols}, B={b}, {threads} threads)"),
-        &["pattern", "sparsity", "batch", "kernel", "rows_per_s", "speedup_vs_scalar"],
+        &format!(
+            "Native GS throughput ({rows}x{cols}, B={b}, {threads} threads, simd={})",
+            simd_enabled()
+        ),
+        &[
+            "pattern",
+            "sparsity",
+            "precision",
+            "batch",
+            "kernel",
+            "rows_per_s",
+            "speedup_vs_scalar",
+        ],
+    );
+    let mut bytes_table = Table::new(
+        "Packed plan bytes (joined + tables)",
+        &["pattern", "sparsity", "f32_bytes", "f16_bytes", "ratio"],
     );
     let mut json_rows: Vec<Json> = Vec::new();
+    let mut json_plans: Vec<Json> = Vec::new();
     let mut rng = Prng::new(42);
 
     for &pattern in &patterns {
         for &sparsity in &sparsities {
-            let mut w = Dense::random(rows, cols, 1.0, &mut rng);
-            let mask = prune(&w, pattern, sparsity)?;
-            w.apply_mask(&mask);
-            let gs = GsFormat::from_dense(&w, pattern)?;
-            let plan = Arc::new(GsExecPlan::with_chunks(&gs, threads)?);
+            let seed = rng.next_u64();
+            let (_, gs) = build_random_gs(rows, cols, pattern, sparsity, seed)?;
+            let gs16 = gs.quantize_f16();
+            let plan32 = Arc::new(GsExecPlan::with_precision(&gs, threads, PlanPrecision::F32)?);
+            let plan16 = Arc::new(GsExecPlan::with_precision(&gs, threads, PlanPrecision::F16)?);
 
-            for &batch in &batches {
-                let acts: Vec<Vec<f32>> =
-                    (0..batch).map(|_| rng.normal_vec(cols, 1.0)).collect();
-                let acts_t = Arc::new(to_feature_major(&acts, cols));
+            let (pb32, pb16) = (plan32.packed_bytes(), plan16.packed_bytes());
+            bytes_table.row(&[
+                pattern.name(),
+                format!("{sparsity}"),
+                pb32.to_string(),
+                pb16.to_string(),
+                format!("{:.2}", pb16 as f64 / pb32 as f64),
+            ]);
+            json_plans.push(Json::obj(vec![
+                ("pattern", Json::Str(pattern.name())),
+                ("sparsity", Json::Num(sparsity)),
+                ("f32_bytes", Json::Num(pb32 as f64)),
+                ("f16_bytes", Json::Num(pb16 as f64)),
+            ]));
 
-                // rows/s for a kernel: `batch` activation rows per run.
-                let mut measure = |f: &mut dyn FnMut()| -> f64 {
-                    let samples = time_reps(1, reps, || f());
-                    let mean = Summary::of(&samples).mean;
-                    batch as f64 / mean
+            for &precision in &precisions {
+                // The scalar baseline does the same arithmetic as the
+                // measured plan: the oracle on the quantized format for
+                // f16 plans.
+                let (plan, oracle_gs) = match precision {
+                    PlanPrecision::F32 => (&plan32, &gs),
+                    PlanPrecision::F16 => (&plan16, &gs16),
                 };
+                for &batch in &batches {
+                    let acts: Vec<Vec<f32>> =
+                        (0..batch).map(|_| rng.normal_vec(cols, 1.0)).collect();
+                    let acts_t = Arc::new(to_feature_major(&acts, cols));
 
-                let mut sink = 0.0f32;
-                let scalar = measure(&mut || {
-                    for x in &acts {
-                        sink += gs_matvec(&gs, x)[0];
-                    }
-                });
-                let planned = measure(&mut || {
-                    for x in &acts {
-                        sink += gs_matvec_planned(&plan, x)[0];
-                    }
-                });
-                let matmul = measure(&mut || {
-                    sink += gs_matmul(&plan, &acts_t, batch)[0];
-                });
-                let matmul_par = measure(&mut || {
-                    sink += gs_matmul_parallel(&plan, &acts_t, batch, &pool)[0];
-                });
-                std::hint::black_box(sink);
+                    // rows/s for a kernel: `batch` activation rows per run.
+                    let mut measure = |f: &mut dyn FnMut()| -> f64 {
+                        let samples = time_reps(1, reps, || f());
+                        let mean = Summary::of(&samples).mean;
+                        batch as f64 / mean
+                    };
 
-                for (kernel, rps) in [
-                    ("scalar", scalar),
-                    ("planned", planned),
-                    ("matmul", matmul),
-                    ("matmul_par", matmul_par),
-                ] {
-                    table.row(&[
-                        pattern.name(),
-                        format!("{sparsity}"),
-                        batch.to_string(),
-                        kernel.to_string(),
-                        format!("{rps:.0}"),
-                        format!("{:.2}", rps / scalar),
-                    ]);
-                    json_rows.push(Json::obj(vec![
-                        ("pattern", Json::Str(pattern.name())),
-                        ("sparsity", Json::Num(sparsity)),
-                        ("batch", Json::Num(batch as f64)),
-                        ("kernel", Json::Str(kernel.to_string())),
-                        ("rows_per_s", Json::Num(rps)),
-                        ("speedup_vs_scalar", Json::Num(rps / scalar)),
-                    ]));
+                    let mut sink = 0.0f32;
+                    let scalar = measure(&mut || {
+                        for x in &acts {
+                            sink += gs_matvec(oracle_gs, x)[0];
+                        }
+                    });
+                    let planned = measure(&mut || {
+                        for x in &acts {
+                            sink += gs_matvec_planned(plan, x)[0];
+                        }
+                    });
+                    let matmul = measure(&mut || {
+                        sink += gs_matmul(plan, &acts_t, batch)[0];
+                    });
+                    let matmul_par = measure(&mut || {
+                        sink += gs_matmul_parallel(plan, &acts_t, batch, &pool)[0];
+                    });
+                    let matmul_par_merge = measure(&mut || {
+                        sink += gs_matmul_parallel_merge(plan, &acts_t, batch, &pool)[0];
+                    });
+                    let mut kernels = vec![
+                        ("scalar", scalar),
+                        ("planned", planned),
+                        ("matmul", matmul),
+                        ("matmul_par", matmul_par),
+                        ("matmul_par_merge", matmul_par_merge),
+                    ];
+                    if simd_enabled() {
+                        // Scalar-fallback inner block, for the SIMD delta.
+                        let matmul_sc = measure(&mut || {
+                            sink += gs_matmul_scalar(plan, &acts_t, batch)[0];
+                        });
+                        kernels.push(("matmul_sc", matmul_sc));
+                    }
+                    std::hint::black_box(sink);
+
+                    for (kernel, rps) in kernels {
+                        table.row(&[
+                            pattern.name(),
+                            format!("{sparsity}"),
+                            precision.name().to_string(),
+                            batch.to_string(),
+                            kernel.to_string(),
+                            format!("{rps:.0}"),
+                            format!("{:.2}", rps / scalar),
+                        ]);
+                        json_rows.push(Json::obj(vec![
+                            ("pattern", Json::Str(pattern.name())),
+                            ("sparsity", Json::Num(sparsity)),
+                            ("precision", Json::Str(precision.name().to_string())),
+                            ("batch", Json::Num(batch as f64)),
+                            ("kernel", Json::Str(kernel.to_string())),
+                            ("rows_per_s", Json::Num(rps)),
+                            ("speedup_vs_scalar", Json::Num(rps / scalar)),
+                        ]));
+                    }
                 }
             }
         }
     }
 
     table.print();
+    bytes_table.print();
 
     let doc = Json::obj(vec![
         ("bench", Json::Str("native_throughput".to_string())),
@@ -129,8 +204,11 @@ fn main() -> anyhow::Result<()> {
                 ("b", Json::Num(b as f64)),
                 ("threads", Json::Num(threads as f64)),
                 ("reps", Json::Num(reps as f64)),
+                ("simd", Json::Bool(simd_enabled())),
+                ("quick", Json::Bool(quick)),
             ]),
         ),
+        ("plans", Json::Arr(json_plans)),
         ("results", Json::Arr(json_rows)),
     ]);
     std::fs::write("BENCH_native.json", doc.to_string())?;

@@ -4,14 +4,15 @@
 //!
 //! ```text
 //! cargo run --release --example serve_sparse -- \
-//!     [--requests 200] [--clients 4] [--threads 0] \
+//!     [--requests 200] [--clients 4] [--threads 0] [--precision f32|f16] \
 //!     [--inputs 64] [--hidden 256] [--outputs 64] [--batch 16] \
 //!     [--b 16] [--sparsity 0.9]
 //! ```
 
-use gs_sparse::coordinator::{serve, server::ServeConfig, Client, SparseModel};
-use gs_sparse::pruning::prune;
-use gs_sparse::sparse::{Dense, GsFormat, Pattern};
+use gs_sparse::coordinator::{serve, server::ServeConfig, Client};
+use gs_sparse::kernels::exec::PlanPrecision;
+use gs_sparse::sparse::Pattern;
+use gs_sparse::testing::{build_random_model, ModelSpec};
 use gs_sparse::util::{Args, Prng};
 use std::time::Instant;
 
@@ -19,31 +20,22 @@ fn main() -> anyhow::Result<()> {
     let args = Args::parse();
     let n_requests = args.usize("requests", 200);
     let n_clients = args.usize("clients", 4);
-    let inputs = args.usize("inputs", 64);
-    let hidden = args.usize("hidden", 256);
-    let outputs = args.usize("outputs", 64);
-    let max_batch = args.usize("batch", 16);
     let b = args.usize("b", 16);
-    let sparsity = args.f64("sparsity", 0.9);
-    let threads = args.usize("threads", 0);
-
-    let factory = move || {
-        let mut rng = Prng::new(42);
-        let mut proj = Dense::random(outputs, hidden, 0.3, &mut rng);
-        let pattern = Pattern::Gs { b, k: b };
-        let mask = prune(&proj, pattern, sparsity)?;
-        proj.apply_mask(&mask);
-        let gs = GsFormat::from_dense(&proj, pattern)?;
-        SparseModel::native(
-            rng.normal_vec(inputs * hidden, 0.1),
-            vec![0.0; hidden],
-            &gs,
-            rng.normal_vec(outputs, 0.1),
-            inputs,
-            max_batch,
-            threads,
-        )
+    let spec = ModelSpec {
+        inputs: args.usize("inputs", 64),
+        hidden: args.usize("hidden", 256),
+        outputs: args.usize("outputs", 64),
+        max_batch: args.usize("batch", 16),
+        pattern: Pattern::Gs { b, k: b },
+        sparsity: args.f64("sparsity", 0.9),
+        threads: args.usize("threads", 0),
+        precision: PlanPrecision::parse(args.get("precision", "f32"))?,
+        seed: 42,
     };
+    let (inputs, outputs, max_batch) = (spec.inputs, spec.outputs, spec.max_batch);
+    let (sparsity, precision) = (spec.sparsity, spec.precision);
+
+    let factory = move || build_random_model(&spec).map(|bm| bm.model);
     let handle = serve(
         factory,
         ServeConfig {
@@ -55,9 +47,10 @@ fn main() -> anyhow::Result<()> {
         },
     )?;
     println!(
-        "serving on {} (native GS({b},{b}) engine, {:.0}% sparse output layer)",
+        "serving on {} (native GS({b},{b}) engine, {:.0}% sparse output layer, {} plan)",
         handle.addr,
-        sparsity * 100.0
+        sparsity * 100.0,
+        precision.name()
     );
 
     let addr = handle.addr;

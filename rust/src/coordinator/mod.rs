@@ -7,9 +7,13 @@
 //! selectable [`SparseModel`] backend:
 //!
 //! * **native** (default, always available) — the prepacked
-//!   [`GsExecPlan`] engine from [`crate::kernels::exec`]: dense input
-//!   layer, then the GS-compressed output projection as a batched,
-//!   optionally multi-threaded gather-scatter spMM. No artifacts, no
+//!   [`GsExecPlan`] engine from [`crate::kernels::exec`]: a cache-blocked
+//!   batched dense input layer ([`crate::kernels::dense`]), then the
+//!   GS-compressed output projection as a batched gather-scatter spMM,
+//!   then the output bias — every stage runs on the kernel
+//!   [`ThreadPool`] when one is configured, so the whole `infer_batch`
+//!   is parallel, not just the spMM. Plan values are stored at f32 or
+//!   the paper's f16 resolution ([`PlanPrecision`]). No artifacts, no
 //!   Python, no external runtime.
 //! * **pjrt** (`pjrt` cargo feature) — the Pallas-backed `mlp_forward`
 //!   AOT artifact executed through [`crate::runtime`], taking the GS
@@ -31,9 +35,10 @@ pub use metrics::Metrics;
 pub use server::{serve, Client, ServerHandle};
 pub use uniform::UniformGs;
 
-use crate::kernels::exec::{gs_matmul, gs_matmul_parallel, GsExecPlan};
+use crate::kernels::dense::{dense_matmul, dense_matmul_parallel};
+use crate::kernels::exec::{gs_matmul, gs_matmul_parallel, GsExecPlan, PlanPrecision};
 use crate::sparse::format::GsFormat;
-use crate::util::threadpool::ThreadPool;
+use crate::util::threadpool::{partition_spans, ThreadPool};
 use anyhow::{ensure, Result};
 use std::sync::Arc;
 
@@ -58,13 +63,15 @@ enum Backend {
 }
 
 /// Native execution state: prepacked GS plan + dense layer weights.
+/// Weights are `Arc`-shared so the pool's `'static` jobs can borrow them
+/// without copying per request.
 struct NativeBackend {
     /// `[inputs, hidden]` row-major (the `x @ w1` layout).
-    w1: Vec<f32>,
-    b1: Vec<f32>,
+    w1: Arc<Vec<f32>>,
+    b1: Arc<Vec<f32>>,
     plan: Arc<GsExecPlan>,
-    b2: Vec<f32>,
-    /// Worker pool for the parallel band kernels (None = serial).
+    b2: Arc<Vec<f32>>,
+    /// Worker pool for the parallel stages (None = serial).
     pool: Option<Arc<ThreadPool>>,
 }
 
@@ -81,8 +88,10 @@ struct PjrtBackend {
 impl SparseModel {
     /// Build the native-engine model. `gs` is the GS compression of the
     /// `[outputs, hidden]` projection (any `GS(B,k)` / scatter pattern);
-    /// the plan is packed once here and shared across requests.
-    /// `threads > 1` enables the multi-threaded band kernels.
+    /// the plan is packed once here — at `precision` — and shared across
+    /// requests. `threads > 1` enables the multi-threaded kernels for
+    /// every stage of the forward pass.
+    #[allow(clippy::too_many_arguments)]
     pub fn native(
         w1: Vec<f32>,
         b1: Vec<f32>,
@@ -91,6 +100,7 @@ impl SparseModel {
         inputs: usize,
         max_batch: usize,
         threads: usize,
+        precision: PlanPrecision,
     ) -> Result<SparseModel> {
         let hidden = gs.cols;
         let outputs = gs.rows;
@@ -103,7 +113,7 @@ impl SparseModel {
         );
         ensure!(b1.len() == hidden, "b1 length {} != hidden {hidden}", b1.len());
         ensure!(b2.len() == outputs, "b2 length {} != outputs {outputs}", b2.len());
-        let plan = Arc::new(GsExecPlan::with_chunks(gs, threads.max(1))?);
+        let plan = Arc::new(GsExecPlan::with_precision(gs, threads.max(1), precision)?);
         let pool = if threads > 1 {
             Some(Arc::new(ThreadPool::new(threads)))
         } else {
@@ -114,8 +124,24 @@ impl SparseModel {
             hidden,
             outputs,
             max_batch,
-            backend: Backend::Native(NativeBackend { w1, b1, plan, b2, pool }),
+            backend: Backend::Native(NativeBackend {
+                w1: Arc::new(w1),
+                b1: Arc::new(b1),
+                plan,
+                b2: Arc::new(b2),
+                pool,
+            }),
         })
+    }
+
+    /// The packed-plan value precision of the native backend (None for
+    /// pjrt).
+    pub fn precision(&self) -> Option<PlanPrecision> {
+        match &self.backend {
+            Backend::Native(nb) => Some(nb.plan.precision),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => None,
+        }
     }
 
     /// Load the `mlp_forward` PJRT artifact and install weights. `gs`
@@ -195,42 +221,65 @@ impl SparseModel {
         }
     }
 
-    /// Native forward: `h = relu(x @ w1 + b1)`, then the GS projection
-    /// through the packed plan (batched, parallel when a pool exists),
-    /// then `+ b2` — the same graph as the Pallas artifact.
+    /// Native forward: `h = relu(x @ w1 + b1)` through the cache-blocked
+    /// batched dense kernel, then the GS projection through the packed
+    /// plan, then `+ b2` — the same graph as the Pallas artifact. With a
+    /// pool, every stage runs parallel: the dense layer over feature
+    /// spans, the spMM over balanced band chunks, the bias/transpose over
+    /// batch columns — and each stage is bit-identical to its serial
+    /// form, so serial and parallel models agree exactly.
     fn infer_native(&self, nb: &NativeBackend, rows: &[Vec<f32>]) -> Vec<Vec<f32>> {
         let batch = rows.len();
-        let hidden = self.hidden;
-        // Hidden activations, feature-major [hidden][batch] for the spMM.
-        let mut h = vec![0.0f32; hidden * batch];
-        let mut acc = vec![0.0f32; hidden];
-        for (r, x) in rows.iter().enumerate() {
-            acc.copy_from_slice(&nb.b1);
-            for (i, &xv) in x.iter().enumerate() {
-                if xv != 0.0 {
-                    let wrow = &nb.w1[i * hidden..(i + 1) * hidden];
-                    for j in 0..hidden {
-                        acc[j] += xv * wrow[j];
-                    }
-                }
+        // Hidden activations, feature-major [hidden][batch] for the spMM,
+        // relu fused into the dense kernel's write-back.
+        let h = match &nb.pool {
+            // batch 1 is a GEMV: pool dispatch + the batch copy would
+            // cost more than the serial kernel, so only fan out real
+            // batches (mirrors the bias stage's guard below).
+            Some(pool) if batch > 1 => {
+                // One batch-sized copy to satisfy the pool's 'static job
+                // bound — small next to the batch×inputs×hidden GEMM it
+                // unlocks.
+                let xs = Arc::new(rows.to_vec());
+                dense_matmul_parallel(&nb.w1, &nb.b1, &xs, self.inputs, self.hidden, true, pool)
             }
-            for j in 0..hidden {
-                h[j * batch + r] = acc[j].max(0.0);
-            }
-        }
+            _ => dense_matmul(&nb.w1, &nb.b1, rows, self.inputs, self.hidden, true),
+        };
         let out_t = match &nb.pool {
             Some(pool) if nb.plan.chunks().len() > 1 => {
                 gs_matmul_parallel(&nb.plan, &Arc::new(h), batch, pool)
             }
             _ => gs_matmul(&nb.plan, &h, batch),
         };
-        (0..batch)
-            .map(|r| {
-                (0..self.outputs)
-                    .map(|o| out_t[o * batch + r] + nb.b2[o])
-                    .collect()
-            })
-            .collect()
+        // Bias + transpose to request-major. Parallel over contiguous
+        // batch spans — at most one job per worker, so dispatch overhead
+        // never exceeds a handful of submissions (a job per *row* would
+        // cost more synchronization than the O(outputs) adds it does).
+        match &nb.pool {
+            Some(pool) if batch > 1 => {
+                let out_t = Arc::new(out_t);
+                let b2 = Arc::clone(&nb.b2);
+                let outputs = self.outputs;
+                let spans = partition_spans(batch, pool.workers());
+                let chunks = pool.map(spans, move |(lo, hi)| {
+                    (lo..hi)
+                        .map(|r| {
+                            (0..outputs)
+                                .map(|o| out_t[o * batch + r] + b2[o])
+                                .collect::<Vec<f32>>()
+                        })
+                        .collect::<Vec<Vec<f32>>>()
+                });
+                chunks.into_iter().flatten().collect()
+            }
+            _ => (0..batch)
+                .map(|r| {
+                    (0..self.outputs)
+                        .map(|o| out_t[o * batch + r] + nb.b2[o])
+                        .collect()
+                })
+                .collect(),
+        }
     }
 
     /// PJRT forward: pad to the artifact's static batch and execute.
@@ -267,33 +316,29 @@ pub struct Engine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::pruning::prune;
     use crate::sparse::dense::Dense;
     use crate::sparse::pattern::Pattern;
+    use crate::testing::model::{build_random_model, BuiltModel, ModelSpec};
     use crate::util::prng::Prng;
 
-    fn native_fixture(threads: usize) -> (SparseModel, Dense, Vec<f32>, Vec<f32>, Vec<f32>) {
-        let (inputs, hidden, outputs) = (12, 32, 16);
-        let mut rng = Prng::new(42);
-        let mut proj = Dense::random(outputs, hidden, 0.4, &mut rng);
-        let pattern = Pattern::Gs { b: 8, k: 8 };
-        let mask = prune(&proj, pattern, 0.75).unwrap();
-        proj.apply_mask(&mask);
-        let gs = GsFormat::from_dense(&proj, pattern).unwrap();
-        let w1 = rng.normal_vec(inputs * hidden, 0.2);
-        let b1 = rng.normal_vec(hidden, 0.1);
-        let b2 = rng.normal_vec(outputs, 0.1);
-        let model = SparseModel::native(
-            w1.clone(),
-            b1.clone(),
-            &gs,
-            b2.clone(),
-            inputs,
-            8,
+    fn fixture_spec(threads: usize, precision: PlanPrecision) -> ModelSpec {
+        ModelSpec {
+            inputs: 12,
+            // > 2×FEAT_BLOCK so the parallel dense path really splits
+            // into multiple feature spans (not the serial fallback).
+            hidden: 160,
+            outputs: 16,
+            max_batch: 8,
+            pattern: Pattern::Gs { b: 8, k: 8 },
+            sparsity: 0.75,
             threads,
-        )
-        .unwrap();
-        (model, proj, w1, b1, b2)
+            precision,
+            ..ModelSpec::default()
+        }
+    }
+
+    fn native_fixture(threads: usize) -> BuiltModel {
+        build_random_model(&fixture_spec(threads, PlanPrecision::F32)).unwrap()
     }
 
     /// Reference forward pass straight off the dense matrices.
@@ -329,13 +374,14 @@ mod tests {
 
     #[test]
     fn native_backend_matches_dense_oracle() {
-        let (model, proj, w1, b1, b2) = native_fixture(0);
-        assert_eq!(model.backend_name(), "native");
+        let bm = native_fixture(0);
+        assert_eq!(bm.model.backend_name(), "native");
+        assert_eq!(bm.model.precision(), Some(PlanPrecision::F32));
         let mut rng = Prng::new(9);
         let rows: Vec<Vec<f32>> = (0..5).map(|_| rng.normal_vec(12, 1.0)).collect();
-        let got = model.infer_batch(&rows).unwrap();
+        let got = bm.model.infer_batch(&rows).unwrap();
         for (r, x) in rows.iter().enumerate() {
-            let want = oracle(&proj, &w1, &b1, &b2, 12, x);
+            let want = oracle(&bm.proj, &bm.w1, &bm.b1, &bm.b2, 12, x);
             for (o, (g, w)) in got[r].iter().zip(&want).enumerate() {
                 assert!((g - w).abs() < 1e-3, "row {r} output {o}: {g} vs {w}");
             }
@@ -344,22 +390,47 @@ mod tests {
 
     #[test]
     fn native_parallel_matches_serial() {
-        let (serial, ..) = native_fixture(0);
-        let (parallel, ..) = native_fixture(3);
-        let mut rng = Prng::new(17);
-        let rows: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(12, 1.0)).collect();
-        assert_eq!(
-            serial.infer_batch(&rows).unwrap(),
-            parallel.infer_batch(&rows).unwrap()
-        );
+        // Every stage (dense, spMM, bias) is bit-identical serial vs
+        // parallel, at both plan precisions.
+        for precision in [PlanPrecision::F32, PlanPrecision::F16] {
+            let serial = build_random_model(&fixture_spec(0, precision)).unwrap();
+            let parallel = build_random_model(&fixture_spec(3, precision)).unwrap();
+            let mut rng = Prng::new(17);
+            let rows: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(12, 1.0)).collect();
+            assert_eq!(
+                serial.model.infer_batch(&rows).unwrap(),
+                parallel.model.infer_batch(&rows).unwrap(),
+                "{}",
+                precision.name()
+            );
+        }
+    }
+
+    #[test]
+    fn f16_model_tracks_f32_model() {
+        let f32m = native_fixture(0);
+        let f16m = build_random_model(&fixture_spec(0, PlanPrecision::F16)).unwrap();
+        assert_eq!(f16m.model.precision(), Some(PlanPrecision::F16));
+        let mut rng = Prng::new(23);
+        let rows: Vec<Vec<f32>> = (0..6).map(|_| rng.normal_vec(12, 1.0)).collect();
+        let a = f32m.model.infer_batch(&rows).unwrap();
+        let b = f16m.model.infer_batch(&rows).unwrap();
+        for (r, (ra, rb)) in a.iter().zip(&b).enumerate() {
+            for (o, (x, y)) in ra.iter().zip(rb).enumerate() {
+                // Only the projection weights are quantized; logits are
+                // O(1), so a small absolute budget covers the 2^-11
+                // per-weight rounding.
+                assert!((x - y).abs() < 1e-2, "row {r} out {o}: {x} vs {y}");
+            }
+        }
     }
 
     #[test]
     fn native_rejects_bad_shapes() {
-        let (model, ..) = native_fixture(0);
-        assert!(model.infer_batch(&[vec![0.0; 5]]).is_err()); // wrong width
+        let bm = native_fixture(0);
+        assert!(bm.model.infer_batch(&[vec![0.0; 5]]).is_err()); // wrong width
         let too_many: Vec<Vec<f32>> = (0..9).map(|_| vec![0.0; 12]).collect();
-        assert!(model.infer_batch(&too_many).is_err()); // over max_batch
-        assert!(model.infer_batch(&[]).unwrap().is_empty());
+        assert!(bm.model.infer_batch(&too_many).is_err()); // over max_batch
+        assert!(bm.model.infer_batch(&[]).unwrap().is_empty());
     }
 }

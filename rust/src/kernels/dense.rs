@@ -1,0 +1,244 @@
+//! Cache-blocked batched dense layer: `H = act(X · W + bias)` with the
+//! output in the feature-major layout the GS spMM consumes.
+//!
+//! The serving forward pass previously computed the dense input layer
+//! row-by-row (one axpy sweep of `W` per request), so at serving batch
+//! sizes `W` was re-streamed `batch` times and the dense layer — not the
+//! GS spMM — became the bandwidth bottleneck. This kernel blocks over
+//! [`BATCH_BLOCK`] requests × [`FEAT_BLOCK`] output features: each weight
+//! load is amortized across the whole batch block (8× less `W` traffic),
+//! the accumulator tile stays L1-resident, and the inner block is the
+//! same [`axpy_block`] used by the GS kernels — explicit `std::simd`
+//! under the `simd` feature, register-blocked scalar otherwise.
+//!
+//! Accumulation over the input dimension is always in ascending order for
+//! every (feature, request) cell, independent of blocking and span
+//! partitioning — so [`dense_matmul`] and [`dense_matmul_parallel`] are
+//! bit-identical to each other and to the naive loop at any thread count.
+
+use crate::kernels::exec::{axpy_block, OutPtr, BATCH_BLOCK};
+use crate::util::threadpool::{partition_spans, ThreadPool};
+use std::sync::Arc;
+
+/// Output features per cache block. 64 features × 8 batch columns of f32
+/// is a 2 KiB accumulator tile — comfortably L1-resident.
+pub const FEAT_BLOCK: usize = 64;
+
+/// Serial blocked dense layer. `w` is `[inputs, hidden]` row-major (the
+/// `x @ W` layout), `xs` holds `batch` request rows of `inputs` f32.
+/// Returns `out[j*batch + r] = act(bias[j] + Σ_i xs[r][i]·w[i,j])`,
+/// feature-major, with `act = relu` when `relu` is set.
+pub fn dense_matmul(
+    w: &[f32],
+    bias: &[f32],
+    xs: &[Vec<f32>],
+    inputs: usize,
+    hidden: usize,
+    relu: bool,
+) -> Vec<f32> {
+    assert_eq!(w.len(), inputs * hidden, "weight shape mismatch");
+    assert_eq!(bias.len(), hidden, "bias length mismatch");
+    let mut out = vec![0.0f32; hidden * xs.len()];
+    dense_matmul_span(w, bias, xs, inputs, hidden, relu, 0, hidden, &mut out);
+    out
+}
+
+/// Compute output features `j_lo..j_hi` into `out` (length
+/// `(j_hi-j_lo)*batch`, feature-major with local feature 0 = `j_lo`).
+/// The span building block of the parallel path; spans of the feature
+/// axis are independent, so any partition reproduces [`dense_matmul`]
+/// exactly.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_matmul_span(
+    w: &[f32],
+    bias: &[f32],
+    xs: &[Vec<f32>],
+    inputs: usize,
+    hidden: usize,
+    relu: bool,
+    j_lo: usize,
+    j_hi: usize,
+    out: &mut [f32],
+) {
+    let batch = xs.len();
+    debug_assert!(j_hi <= hidden && out.len() >= (j_hi - j_lo) * batch);
+    for row in xs {
+        assert_eq!(row.len(), inputs, "input row width mismatch");
+    }
+    // Accumulator tile + broadcast buffer live on the stack.
+    let mut acc = [0.0f32; FEAT_BLOCK * BATCH_BLOCK];
+    let mut xv = [0.0f32; BATCH_BLOCK];
+    let mut j0 = j_lo;
+    while j0 < j_hi {
+        let j1 = (j0 + FEAT_BLOCK).min(j_hi);
+        let jn = j1 - j0;
+        let mut r0 = 0usize;
+        while r0 < batch {
+            let r1 = (r0 + BATCH_BLOCK).min(batch);
+            let rn = r1 - r0;
+            for jj in 0..jn {
+                for t in 0..rn {
+                    acc[jj * BATCH_BLOCK + t] = bias[j0 + jj];
+                }
+            }
+            for i in 0..inputs {
+                for (t, row) in xs[r0..r1].iter().enumerate() {
+                    xv[t] = row[i];
+                }
+                // One row-segment of W feeds a full batch block: loaded
+                // once per 8 requests instead of once per request.
+                let wrow = &w[i * hidden + j0..i * hidden + j1];
+                if rn == BATCH_BLOCK {
+                    for jj in 0..jn {
+                        let tile = &mut acc[jj * BATCH_BLOCK..jj * BATCH_BLOCK + BATCH_BLOCK];
+                        axpy_block(wrow[jj], &xv, tile);
+                    }
+                } else {
+                    for jj in 0..jn {
+                        let wv = wrow[jj];
+                        for t in 0..rn {
+                            acc[jj * BATCH_BLOCK + t] += wv * xv[t];
+                        }
+                    }
+                }
+            }
+            for jj in 0..jn {
+                let o0 = (j0 + jj - j_lo) * batch + r0;
+                for t in 0..rn {
+                    let v = acc[jj * BATCH_BLOCK + t];
+                    out[o0 + t] = if relu { v.max(0.0) } else { v };
+                }
+            }
+            r0 = r1;
+        }
+        j0 = j1;
+    }
+}
+
+/// Parallel blocked dense layer: the feature axis is split into
+/// near-equal spans (one per pool worker, at least [`FEAT_BLOCK`]-sized
+/// on average), each computed independently on the [`ThreadPool`].
+/// Spans are contiguous disjoint ranges of the feature-major output, so
+/// each job direct-writes its slice of one preallocated buffer — no
+/// private accumulators, no concatenation pass. Bit-identical to
+/// [`dense_matmul`].
+///
+/// Weights and inputs travel to the workers as `Arc` clones (pool jobs
+/// are `'static`).
+pub fn dense_matmul_parallel(
+    w: &Arc<Vec<f32>>,
+    bias: &Arc<Vec<f32>>,
+    xs: &Arc<Vec<Vec<f32>>>,
+    inputs: usize,
+    hidden: usize,
+    relu: bool,
+    pool: &ThreadPool,
+) -> Vec<f32> {
+    let batch = xs.len();
+    let nspans = pool
+        .workers()
+        .min((hidden + FEAT_BLOCK - 1) / FEAT_BLOCK)
+        .max(1);
+    let spans = partition_spans(hidden, nspans);
+    if spans.len() <= 1 {
+        return dense_matmul(w, bias, xs, inputs, hidden, relu);
+    }
+    let mut out = vec![0.0f32; hidden * batch];
+    let base = OutPtr(out.as_mut_ptr());
+    let (w2, bias2, xs2) = (Arc::clone(w), Arc::clone(bias), Arc::clone(xs));
+    pool.map(spans, move |(lo, hi)| {
+        // SAFETY: `partition_spans` yields disjoint contiguous feature
+        // ranges, so the slices `[lo*batch, hi*batch)` never overlap;
+        // `out` outlives every job because `pool.map` joins before
+        // returning (panics included — `join` drains the queue first).
+        let span = unsafe {
+            std::slice::from_raw_parts_mut(base.0.add(lo * batch), (hi - lo) * batch)
+        };
+        dense_matmul_span(&w2, &bias2, &xs2, inputs, hidden, relu, lo, hi, span);
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    /// Naive reference with the same accumulation order (i ascending).
+    fn naive(
+        w: &[f32],
+        bias: &[f32],
+        xs: &[Vec<f32>],
+        inputs: usize,
+        hidden: usize,
+        relu: bool,
+    ) -> Vec<f32> {
+        let batch = xs.len();
+        let mut out = vec![0.0f32; hidden * batch];
+        for j in 0..hidden {
+            for (r, x) in xs.iter().enumerate() {
+                let mut acc = bias[j];
+                for i in 0..inputs {
+                    acc += w[i * hidden + j] * x[i];
+                }
+                out[j * batch + r] = if relu { acc.max(0.0) } else { acc };
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn blocked_matches_naive_bit_for_bit() {
+        let mut rng = Prng::new(4);
+        // Shapes straddling both block sizes and their remainders.
+        for &(inputs, hidden, batch) in &[
+            (1usize, 1usize, 1usize),
+            (7, 63, 3),
+            (16, 64, 8),
+            (24, 65, 9),
+            (32, 200, 13),
+            (5, 128, 0),
+        ] {
+            for relu in [false, true] {
+                let w = rng.normal_vec(inputs * hidden, 1.0);
+                let bias = rng.normal_vec(hidden, 0.5);
+                let xs: Vec<Vec<f32>> =
+                    (0..batch).map(|_| rng.normal_vec(inputs, 1.0)).collect();
+                assert_eq!(
+                    dense_matmul(&w, &bias, &xs, inputs, hidden, relu),
+                    naive(&w, &bias, &xs, inputs, hidden, relu),
+                    "inputs={inputs} hidden={hidden} batch={batch} relu={relu}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial_bit_for_bit() {
+        let pool = ThreadPool::new(4);
+        let mut rng = Prng::new(9);
+        for &(inputs, hidden, batch) in &[(16usize, 256usize, 8usize), (10, 130, 5), (8, 64, 1)] {
+            let w = Arc::new(rng.normal_vec(inputs * hidden, 1.0));
+            let bias = Arc::new(rng.normal_vec(hidden, 0.5));
+            let xs = Arc::new(
+                (0..batch)
+                    .map(|_| rng.normal_vec(inputs, 1.0))
+                    .collect::<Vec<_>>(),
+            );
+            assert_eq!(
+                dense_matmul_parallel(&w, &bias, &xs, inputs, hidden, true, &pool),
+                dense_matmul(&w, &bias, &xs, inputs, hidden, true),
+                "inputs={inputs} hidden={hidden} batch={batch}"
+            );
+        }
+    }
+
+    #[test]
+    fn relu_clamps_negatives() {
+        let w = vec![-1.0f32];
+        let bias = vec![0.0f32];
+        let xs = vec![vec![2.0f32]];
+        assert_eq!(dense_matmul(&w, &bias, &xs, 1, 1, false), vec![-2.0]);
+        assert_eq!(dense_matmul(&w, &bias, &xs, 1, 1, true), vec![0.0]);
+    }
+}

@@ -9,31 +9,48 @@
 //!   sit immediately before its `B` values in one buffer, so a group is
 //!   one streaming read — previously only modeled in the simulator
 //!   (`spmv_gs_sim_joined`), now used for real execution.
+//! * **Selectable value precision** ([`PlanPrecision`]): `F32` keeps the
+//!   packed values bit-exact; `F16` stores them at the paper's storage
+//!   resolution (§X) as half-floats with `u16` indices — half the packed
+//!   bytes and half the memory traffic of the f32 plan, with a widening
+//!   convert ([`crate::util::f16`]) in the inner loop.
 //! * **Precomputed output slots**: the `entry_row` division and the
-//!   scatter `rowmap` indirection are resolved at pack time into flat
-//!   per-lane row tables; the inner loop is pure loads, FMAs, stores.
+//!   scatter `rowmap` indirection are resolved at pack time into a
+//!   per-(band, slot) row table plus a `b`-entry lane→slot table; the
+//!   inner loop is pure loads, FMAs, stores.
 //! * **Balanced chunks**: bands are partitioned into contiguous spans with
 //!   near-equal *group* counts (not band counts — sparsity can be ragged
 //!   across bands), the unit of parallelism for
 //!   [`gs_matmul_parallel`]. Each band's output rows are owned by exactly
 //!   one chunk (non-scatter rows are contiguous; scatter rows are a
-//!   permutation slice), so chunks accumulate privately and the merge is
-//!   a copy, never a reduction — results are bit-identical to the serial
-//!   kernel at any thread count.
+//!   permutation slice), so chunks never race — non-scatter chunks write
+//!   their disjoint contiguous output spans directly, scatter chunks
+//!   accumulate privately and merge with a copy, never a reduction.
+//!   Results are bit-identical to the serial kernel at any thread count.
 //!
 //! On top of the plan:
 //!
 //! * [`gs_matvec_planned`] — single activation vector, lanes unrolled ×4.
 //! * [`gs_matmul`] — batched spMM over feature-major activations; each
 //!   index load is amortized across the whole batch and the per-lane
-//!   inner loop register-blocks over [`BATCH_BLOCK`] activation columns.
+//!   inner loop feeds one [`BATCH_BLOCK`]-wide multiply-accumulate per
+//!   gathered weight. With the `simd` cargo feature (nightly,
+//!   `portable_simd`) that block is an explicit `std::simd` vector op;
+//!   the scalar register-blocked loop is the always-available fallback
+//!   and the two are bit-identical ([`gs_matmul_scalar`] forces the
+//!   scalar path for differential tests).
 //! * [`gs_matmul_parallel`] — maps plan chunks over a
 //!   [`ThreadPool`]; lock-free by construction (disjoint outputs).
+//!   [`gs_matmul_parallel_merge`] keeps the private-accumulate+merge
+//!   strategy for every pattern, as the benchmark baseline for the
+//!   direct-write path.
 //!
-//! All three preserve the oracle's accumulation order per output row, so
-//! outputs match `gs_matvec` bit for bit (per batch column).
+//! All kernels preserve the oracle's accumulation order per output row,
+//! so f32 plans match `gs_matvec` bit for bit (per batch column), and f16
+//! plans match the oracle run on the f16-quantized format bit for bit.
 
 use crate::sparse::format::GsFormat;
+use crate::util::f16::f16_bits_to_f32;
 use crate::util::threadpool::ThreadPool;
 use anyhow::{ensure, Context, Result};
 use std::sync::Arc;
@@ -42,6 +59,78 @@ use std::sync::Arc;
 /// one AVX2 vector / two NEON vectors; small enough that the block of
 /// accumulating rows stays in registers.
 pub const BATCH_BLOCK: usize = 8;
+
+/// Storage resolution of a packed plan's weight values.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanPrecision {
+    /// Values as f32 bits; kernels are bit-exact vs the `gs_matvec` oracle.
+    F32,
+    /// Values as IEEE binary16 with `u16` column indices — the paper's
+    /// storage resolution (§X). Halves packed bytes; kernels are bit-exact
+    /// vs the oracle on the f16-quantized format.
+    F16,
+}
+
+impl PlanPrecision {
+    /// CLI/bench label.
+    pub fn name(self) -> &'static str {
+        match self {
+            PlanPrecision::F32 => "f32",
+            PlanPrecision::F16 => "f16",
+        }
+    }
+
+    /// Parse a CLI value (`f32` | `f16`).
+    pub fn parse(s: &str) -> Result<PlanPrecision> {
+        match s {
+            "f32" | "F32" => Ok(PlanPrecision::F32),
+            "f16" | "F16" => Ok(PlanPrecision::F16),
+            other => anyhow::bail!("unknown precision {other} (f32|f16)"),
+        }
+    }
+}
+
+/// Whether the explicit `std::simd` inner loop is compiled in.
+pub fn simd_enabled() -> bool {
+    cfg!(feature = "simd")
+}
+
+/// A packed word of the joined buffer: interpreted as a column index in
+/// the first half of a group, as a weight value in the second half.
+trait JoinedWord: Copy + Send + Sync + 'static {
+    fn lane_index(self) -> usize;
+    fn lane_value(self) -> f32;
+}
+
+impl JoinedWord for u32 {
+    #[inline(always)]
+    fn lane_index(self) -> usize {
+        self as usize
+    }
+    #[inline(always)]
+    fn lane_value(self) -> f32 {
+        f32::from_bits(self)
+    }
+}
+
+impl JoinedWord for u16 {
+    #[inline(always)]
+    fn lane_index(self) -> usize {
+        self as usize
+    }
+    #[inline(always)]
+    fn lane_value(self) -> f32 {
+        f16_bits_to_f32(self)
+    }
+}
+
+/// Precision-tagged joined buffer. Layout per group: `b` index words
+/// followed by `b` value words (`2*b` words total either way).
+#[derive(Clone, Debug)]
+enum Joined {
+    F32(Vec<u32>),
+    F16(Vec<u16>),
+}
 
 /// A contiguous span of bands executed as one parallel work unit.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -64,16 +153,19 @@ pub struct GsExecPlan {
     pub cols: usize,
     /// Whether the source format carried a scatter `rowmap`.
     pub scatter: bool,
+    /// Value storage resolution of the joined buffer.
+    pub precision: PlanPrecision,
     /// Joined group layout: `2*b` words per group — `b` column indices
-    /// followed by the `b` weight values as `f32::to_bits` words.
-    joined: Vec<u32>,
+    /// followed by the `b` weight values (f32 bits or f16 bits).
+    joined: Joined,
     /// `nbands + 1` cumulative group counts (copy of the format's indptr).
     band_ptr: Vec<u32>,
-    /// Global output row per (band, lane): `out_row[band*b + j]`; the
-    /// `entry_row` division and rowmap lookup, done once at pack time.
-    out_row: Vec<u32>,
-    /// Global output row per (band, slot): `slot_rows[band*(b/k) + s]`.
-    /// Drives the chunk merge (each band slot is one output row).
+    /// Global output row per (band, slot): `slot_rows[band*(b/k) + s]` —
+    /// the `entry_row` division and scatter rowmap lookup resolved at
+    /// pack time. Lane `j` of a band writes row
+    /// `slot_rows[band*(b/k) + lane_slot[j]]`; a flat per-(band, lane)
+    /// table would be `k`× larger for no extra information, and at high
+    /// sparsity it would rival the joined buffer itself.
     slot_rows: Vec<u32>,
     /// Row slot of lane `j` within any band (`j / k`) — band-independent.
     lane_slot: Vec<u32>,
@@ -82,7 +174,8 @@ pub struct GsExecPlan {
 }
 
 impl GsExecPlan {
-    /// Pack `gs` with one chunk per available CPU (capped by band count).
+    /// Pack `gs` at f32 with one chunk per available CPU (capped by band
+    /// count).
     pub fn from_format(gs: &GsFormat) -> Result<GsExecPlan> {
         let nchunks = std::thread::available_parallelism()
             .map(|n| n.get())
@@ -90,8 +183,18 @@ impl GsExecPlan {
         GsExecPlan::with_chunks(gs, nchunks)
     }
 
-    /// Pack `gs` into at most `nchunks` balanced chunks.
+    /// Pack `gs` at f32 into at most `nchunks` balanced chunks.
     pub fn with_chunks(gs: &GsFormat, nchunks: usize) -> Result<GsExecPlan> {
+        GsExecPlan::with_precision(gs, nchunks, PlanPrecision::F32)
+    }
+
+    /// Pack `gs` into at most `nchunks` balanced chunks at the given
+    /// value precision.
+    pub fn with_precision(
+        gs: &GsFormat,
+        nchunks: usize,
+        precision: PlanPrecision,
+    ) -> Result<GsExecPlan> {
         gs.validate().context("GsExecPlan source format invalid")?;
         ensure!(
             gs.b > 0 && gs.k > 0 && gs.b % gs.k == 0,
@@ -105,28 +208,36 @@ impl GsExecPlan {
             nbands * band_rows <= gs.rows,
             "bands cover more rows than the matrix has"
         );
+        if precision == PlanPrecision::F16 {
+            ensure!(
+                gs.cols <= u16::MAX as usize + 1,
+                "f16 plans index columns with u16: cols {} > {}",
+                gs.cols,
+                u16::MAX as usize + 1
+            );
+        }
 
-        let mut out_row = Vec::with_capacity(nbands * gs.b);
         let mut slot_rows = Vec::with_capacity(nbands * band_rows);
         for band in 0..nbands {
-            for j in 0..gs.b {
-                out_row.push(gs.entry_row(band, j) as u32);
-            }
             for slot in 0..band_rows {
                 slot_rows.push(gs.entry_row(band, slot * gs.k) as u32);
             }
         }
         let lane_slot: Vec<u32> = (0..gs.b).map(|j| (j / gs.k) as u32).collect();
 
+        let joined = match precision {
+            PlanPrecision::F32 => Joined::F32(gs.to_joined()),
+            PlanPrecision::F16 => Joined::F16(gs.to_joined_f16()),
+        };
         let plan = GsExecPlan {
             b: gs.b,
             k: gs.k,
             rows: gs.rows,
             cols: gs.cols,
             scatter: gs.rowmap.is_some(),
-            joined: gs.to_joined(),
+            precision,
+            joined,
             band_ptr: gs.indptr.clone(),
-            out_row,
             slot_rows,
             lane_slot,
             chunks: balance_chunks(&gs.indptr, nchunks),
@@ -151,13 +262,15 @@ impl GsExecPlan {
         &self.chunks
     }
 
-    /// Bytes resident in the packed plan (joined + tables).
+    /// Bytes resident in the packed plan (joined + tables). An f16 plan's
+    /// joined buffer is half the f32 plan's (2-byte words vs 4-byte).
     pub fn packed_bytes(&self) -> usize {
-        4 * (self.joined.len()
-            + self.band_ptr.len()
-            + self.out_row.len()
-            + self.slot_rows.len()
-            + self.lane_slot.len())
+        let joined = match &self.joined {
+            Joined::F32(v) => 4 * v.len(),
+            Joined::F16(v) => 2 * v.len(),
+        };
+        joined
+            + 4 * (self.band_ptr.len() + self.slot_rows.len() + self.lane_slot.len())
     }
 }
 
@@ -208,43 +321,97 @@ fn balance_chunks(band_ptr: &[u32], nchunks: usize) -> Vec<Chunk> {
     chunks
 }
 
-/// Planned single-vector spMV: `y = W x` on the packed plan. Matches
-/// [`crate::kernels::native::gs_matvec`] bit for bit.
+/// One [`BATCH_BLOCK`]-wide multiply-accumulate: `o[t] += w * a[t]`.
+/// Scalar form — always compiled, and the differential baseline for the
+/// `simd` path (`o + w*a` per lane, mul then add, no FMA contraction, so
+/// the two are bit-identical).
+#[inline(always)]
+pub(crate) fn axpy_block_scalar(w: f32, a: &[f32], o: &mut [f32]) {
+    for t in 0..BATCH_BLOCK {
+        o[t] += w * a[t];
+    }
+}
+
+/// The explicit `std::simd` form of [`axpy_block_scalar`]: the gathered
+/// weight is splatted and one vector multiply+add covers the whole
+/// register block of activation columns.
+#[cfg(feature = "simd")]
+#[inline(always)]
+pub(crate) fn axpy_block(w: f32, a: &[f32], o: &mut [f32]) {
+    use std::simd::Simd;
+    let av = Simd::<f32, BATCH_BLOCK>::from_slice(&a[..BATCH_BLOCK]);
+    let ov = Simd::<f32, BATCH_BLOCK>::from_slice(&o[..BATCH_BLOCK]);
+    (ov + Simd::splat(w) * av).copy_to_slice(&mut o[..BATCH_BLOCK]);
+}
+
+#[cfg(not(feature = "simd"))]
+#[inline(always)]
+pub(crate) fn axpy_block(w: f32, a: &[f32], o: &mut [f32]) {
+    axpy_block_scalar(w, a, o);
+}
+
+/// Planned single-vector spMV: `y = W x` on the packed plan. An f32 plan
+/// matches [`crate::kernels::native::gs_matvec`] bit for bit; an f16 plan
+/// matches the oracle on the f16-quantized format bit for bit.
 pub fn gs_matvec_planned(plan: &GsExecPlan, act: &[f32]) -> Vec<f32> {
     assert_eq!(act.len(), plan.cols, "activation length mismatch");
-    let b = plan.b;
     let mut y = vec![0.0f32; plan.rows];
+    match &plan.joined {
+        Joined::F32(words) => matvec_words(plan, words, act, &mut y),
+        Joined::F16(words) => matvec_words(plan, words, act, &mut y),
+    }
+    y
+}
+
+fn matvec_words<W: JoinedWord>(plan: &GsExecPlan, joined: &[W], act: &[f32], y: &mut [f32]) {
+    let b = plan.b;
+    let band_rows = plan.band_rows();
+    let ls = &plan.lane_slot;
     for band in 0..plan.nbands() {
-        let rows = &plan.out_row[band * b..(band + 1) * b];
+        // Rows of this band's slots (identity span for non-scatter,
+        // rowmap slice for scatter) — both indirections resolved at pack.
+        let srow = &plan.slot_rows[band * band_rows..(band + 1) * band_rows];
         let lo = plan.band_ptr[band] as usize;
         let hi = plan.band_ptr[band + 1] as usize;
         for g in lo..hi {
             let off = g * 2 * b;
-            let idx = &plan.joined[off..off + b];
-            let val = &plan.joined[off + b..off + 2 * b];
+            let idx = &joined[off..off + b];
+            let val = &joined[off + b..off + 2 * b];
             let mut j = 0;
             // Lanes unrolled ×4; adds stay in lane order, so rows shared
             // between lanes (k > 1) accumulate exactly like the oracle.
             while j + 4 <= b {
-                y[rows[j] as usize] += f32::from_bits(val[j]) * act[idx[j] as usize];
-                y[rows[j + 1] as usize] += f32::from_bits(val[j + 1]) * act[idx[j + 1] as usize];
-                y[rows[j + 2] as usize] += f32::from_bits(val[j + 2]) * act[idx[j + 2] as usize];
-                y[rows[j + 3] as usize] += f32::from_bits(val[j + 3]) * act[idx[j + 3] as usize];
+                y[srow[ls[j] as usize] as usize] += val[j].lane_value() * act[idx[j].lane_index()];
+                y[srow[ls[j + 1] as usize] as usize] +=
+                    val[j + 1].lane_value() * act[idx[j + 1].lane_index()];
+                y[srow[ls[j + 2] as usize] as usize] +=
+                    val[j + 2].lane_value() * act[idx[j + 2].lane_index()];
+                y[srow[ls[j + 3] as usize] as usize] +=
+                    val[j + 3].lane_value() * act[idx[j + 3].lane_index()];
                 j += 4;
             }
             while j < b {
-                y[rows[j] as usize] += f32::from_bits(val[j]) * act[idx[j] as usize];
+                y[srow[ls[j] as usize] as usize] += val[j].lane_value() * act[idx[j].lane_index()];
                 j += 1;
             }
         }
     }
-    y
 }
 
 /// Execute the bands of `chunk`, accumulating into `out` where local row
 /// 0 corresponds to band `chunk.band_lo`'s first slot. `acts` and `out`
 /// are feature-major: `[feature][batch]`, batch contiguous.
-fn exec_chunk_into(plan: &GsExecPlan, acts: &[f32], batch: usize, chunk: Chunk, out: &mut [f32]) {
+///
+/// `FORCE_SCALAR` pins the inner block to [`axpy_block_scalar`] even when
+/// the `simd` feature is on (the differential baseline).
+fn exec_chunk_words<W: JoinedWord, const FORCE_SCALAR: bool>(
+    plan: &GsExecPlan,
+    joined: &[W],
+    acts: &[f32],
+    batch: usize,
+    chunk: Chunk,
+    out: &mut [f32],
+) {
     let b = plan.b;
     let band_rows = plan.band_rows();
     debug_assert!(out.len() >= (chunk.band_hi - chunk.band_lo) * band_rows * batch);
@@ -254,22 +421,28 @@ fn exec_chunk_into(plan: &GsExecPlan, acts: &[f32], batch: usize, chunk: Chunk, 
         let hi = plan.band_ptr[band + 1] as usize;
         for g in lo..hi {
             let off = g * 2 * b;
-            let idx = &plan.joined[off..off + b];
-            let val = &plan.joined[off + b..off + 2 * b];
+            let idx = &joined[off..off + b];
+            let val = &joined[off + b..off + 2 * b];
             for j in 0..b {
-                let col = idx[j] as usize;
-                let w = f32::from_bits(val[j]);
+                let col = idx[j].lane_index();
+                // Widening convert (f16 plans) happens here, once per
+                // gathered weight — not once per batch column.
+                let w = val[j].lane_value();
                 let row = slot_base + plan.lane_slot[j] as usize;
                 let a0 = col * batch;
                 let o0 = row * batch;
-                // Register block over the batch: one (index, value) load
-                // feeds BATCH_BLOCK FMAs on contiguous activations.
+                // One gathered (index, value) pair feeds a full
+                // BATCH_BLOCK-wide multiply-accumulate on contiguous
+                // activations: explicit SIMD with the `simd` feature,
+                // the register-blocked scalar loop otherwise.
                 let mut r = 0;
                 while r + BATCH_BLOCK <= batch {
                     let a = &acts[a0 + r..a0 + r + BATCH_BLOCK];
                     let o = &mut out[o0 + r..o0 + r + BATCH_BLOCK];
-                    for t in 0..BATCH_BLOCK {
-                        o[t] += w * a[t];
+                    if FORCE_SCALAR {
+                        axpy_block_scalar(w, a, o);
+                    } else {
+                        axpy_block(w, a, o);
                     }
                     r += BATCH_BLOCK;
                 }
@@ -282,11 +455,27 @@ fn exec_chunk_into(plan: &GsExecPlan, acts: &[f32], batch: usize, chunk: Chunk, 
     }
 }
 
-/// Batched spMM: `Y = W X` with `X` feature-major (`acts[col*batch + r]`
-/// is request `r`'s activation for feature `col`). Returns `Y`
-/// feature-major: `out[row*batch + r]`. Column `r` equals
-/// `gs_matvec(gs, x_r)` bit for bit.
-pub fn gs_matmul(plan: &GsExecPlan, acts: &[f32], batch: usize) -> Vec<f32> {
+fn exec_chunk_into(plan: &GsExecPlan, acts: &[f32], batch: usize, chunk: Chunk, out: &mut [f32]) {
+    match &plan.joined {
+        Joined::F32(w) => exec_chunk_words::<u32, false>(plan, w, acts, batch, chunk, out),
+        Joined::F16(w) => exec_chunk_words::<u16, false>(plan, w, acts, batch, chunk, out),
+    }
+}
+
+fn exec_chunk_into_scalar(
+    plan: &GsExecPlan,
+    acts: &[f32],
+    batch: usize,
+    chunk: Chunk,
+    out: &mut [f32],
+) {
+    match &plan.joined {
+        Joined::F32(w) => exec_chunk_words::<u32, true>(plan, w, acts, batch, chunk, out),
+        Joined::F16(w) => exec_chunk_words::<u16, true>(plan, w, acts, batch, chunk, out),
+    }
+}
+
+fn gs_matmul_impl(plan: &GsExecPlan, acts: &[f32], batch: usize, force_scalar: bool) -> Vec<f32> {
     assert!(batch > 0, "gs_matmul with empty batch");
     assert_eq!(acts.len(), plan.cols * batch, "activation shape mismatch");
     let mut out = vec![0.0f32; plan.rows * batch];
@@ -299,13 +488,37 @@ pub fn gs_matmul(plan: &GsExecPlan, acts: &[f32], batch: usize) -> Vec<f32> {
     if plan.scatter {
         // Accumulate band-local, then place rows through the rowmap.
         let mut local = vec![0.0f32; plan.nbands() * band_rows * batch];
-        exec_chunk_into(plan, acts, batch, all, &mut local);
+        if force_scalar {
+            exec_chunk_into_scalar(plan, acts, batch, all, &mut local);
+        } else {
+            exec_chunk_into(plan, acts, batch, all, &mut local);
+        }
         merge_chunk(plan, batch, all, &local, &mut out);
     } else {
         // Identity slot→row mapping: accumulate straight into `out`.
-        exec_chunk_into(plan, acts, batch, all, &mut out);
+        if force_scalar {
+            exec_chunk_into_scalar(plan, acts, batch, all, &mut out);
+        } else {
+            exec_chunk_into(plan, acts, batch, all, &mut out);
+        }
     }
     out
+}
+
+/// Batched spMM: `Y = W X` with `X` feature-major (`acts[col*batch + r]`
+/// is request `r`'s activation for feature `col`). Returns `Y`
+/// feature-major: `out[row*batch + r]`. For an f32 plan, column `r`
+/// equals `gs_matvec(gs, x_r)` bit for bit.
+pub fn gs_matmul(plan: &GsExecPlan, acts: &[f32], batch: usize) -> Vec<f32> {
+    gs_matmul_impl(plan, acts, batch, false)
+}
+
+/// [`gs_matmul`] with the inner block pinned to the scalar loop even when
+/// the `simd` feature is compiled in. Exists so tests can assert the SIMD
+/// path is bit-identical to the scalar fallback; without the feature the
+/// two functions run the same code.
+pub fn gs_matmul_scalar(plan: &GsExecPlan, acts: &[f32], batch: usize) -> Vec<f32> {
+    gs_matmul_impl(plan, acts, batch, true)
 }
 
 /// Copy one chunk's private accumulation into the global output through
@@ -323,11 +536,26 @@ fn merge_chunk(plan: &GsExecPlan, batch: usize, chunk: Chunk, local: &[f32], out
     }
 }
 
-/// Parallel batched spMM: plan chunks mapped over `pool`. Non-scatter
-/// chunks write disjoint contiguous row spans; scatter chunks own
-/// disjoint rowmap slices — either way each chunk accumulates privately
-/// and the merge is a race-free copy. Output is bit-identical to
-/// [`gs_matmul`] at any worker count.
+/// `Send + Sync` wrapper for the base pointer of an output buffer shared
+/// by direct-write pool jobs (this module's chunk spans, the dense
+/// kernel's feature spans). Safety rests entirely on the use sites: jobs
+/// write disjoint spans and the owner joins before the buffer moves.
+#[derive(Clone, Copy)]
+pub(crate) struct OutPtr(pub(crate) *mut f32);
+unsafe impl Send for OutPtr {}
+unsafe impl Sync for OutPtr {}
+
+/// Parallel batched spMM: plan chunks mapped over `pool`, bit-identical
+/// to [`gs_matmul`] at any worker count.
+///
+/// Non-scatter plans take the **direct-write** path: chunk `c` owns output
+/// rows `band_lo*band_rows .. band_hi*band_rows` — a contiguous span,
+/// provably disjoint from every other chunk's because chunks partition the
+/// band range — so each job writes its slice of the shared output buffer
+/// with no private accumulator and no merge pass. Scatter plans keep the
+/// private-accumulate+merge strategy ([`gs_matmul_parallel_merge`]): their
+/// chunk rows are disjoint too (the rowmap is a permutation) but
+/// interleaved, so the copy-merge through `slot_rows` places them.
 ///
 /// `plan` and `acts` travel to the workers as `Arc` clones (the pool's
 /// jobs are `'static`), so the caller keeps both afterwards.
@@ -338,6 +566,44 @@ pub fn gs_matmul_parallel(
     pool: &ThreadPool,
 ) -> Vec<f32> {
     assert!(batch > 0, "gs_matmul_parallel with empty batch");
+    assert_eq!(acts.len(), plan.cols * batch, "activation shape mismatch");
+    if plan.chunks.len() <= 1 {
+        return gs_matmul(plan, acts, batch);
+    }
+    if plan.scatter {
+        return gs_matmul_parallel_merge(plan, acts, batch, pool);
+    }
+    let band_rows = plan.band_rows();
+    let mut out = vec![0.0f32; plan.rows * batch];
+    let base = OutPtr(out.as_mut_ptr());
+    let plan2 = Arc::clone(plan);
+    let acts2 = Arc::clone(acts);
+    pool.map(plan.chunks.clone(), move |chunk| {
+        let lo = chunk.band_lo * band_rows * batch;
+        let len = (chunk.band_hi - chunk.band_lo) * band_rows * batch;
+        // SAFETY: chunks partition `0..nbands` contiguously and the
+        // slot→row mapping is the identity (non-scatter), so the spans
+        // `[lo, lo+len)` of different jobs never overlap; `out` outlives
+        // every job because `pool.map` joins before returning (including
+        // when a job panics — `join` drains the queue first).
+        let span = unsafe { std::slice::from_raw_parts_mut(base.0.add(lo), len) };
+        exec_chunk_into(&plan2, &acts2, batch, chunk, span);
+    });
+    out
+}
+
+/// Parallel batched spMM with the private-accumulate+merge strategy for
+/// every pattern — the baseline the direct-write path is benchmarked
+/// against (the merge copy is `O(rows·batch)` and shows up at low
+/// sparsity). Output is bit-identical to [`gs_matmul`] and to
+/// [`gs_matmul_parallel`].
+pub fn gs_matmul_parallel_merge(
+    plan: &Arc<GsExecPlan>,
+    acts: &Arc<Vec<f32>>,
+    batch: usize,
+    pool: &ThreadPool,
+) -> Vec<f32> {
+    assert!(batch > 0, "gs_matmul_parallel_merge with empty batch");
     assert_eq!(acts.len(), plan.cols * batch, "activation shape mismatch");
     let chunks: Vec<Chunk> = plan.chunks.clone();
     if chunks.len() <= 1 {
@@ -377,19 +643,9 @@ pub fn to_feature_major(rows: &[Vec<f32>], width: usize) -> Vec<f32> {
 mod tests {
     use super::*;
     use crate::kernels::native::gs_matvec;
-    use crate::pruning::prune;
-    use crate::sparse::dense::Dense;
     use crate::sparse::pattern::Pattern;
+    use crate::testing::model::build_random_gs;
     use crate::util::prng::Prng;
-
-    fn packed(pattern: Pattern, rows: usize, cols: usize, sparsity: f64, seed: u64) -> (Dense, GsFormat) {
-        let mut rng = Prng::new(seed);
-        let mut w = Dense::random(rows, cols, 1.0, &mut rng);
-        let mask = prune(&w, pattern, sparsity).unwrap();
-        w.apply_mask(&mask);
-        let gs = GsFormat::from_dense(&w, pattern).unwrap();
-        (w, gs)
-    }
 
     #[test]
     fn planned_matvec_is_bit_exact_vs_oracle() {
@@ -400,7 +656,7 @@ mod tests {
             Pattern::GsScatter { b: 8, k: 1 },
         ];
         for (i, p) in patterns.into_iter().enumerate() {
-            let (_, gs) = packed(p, 32, 64, 0.75, 40 + i as u64);
+            let (_, gs) = build_random_gs(32, 64, p, 0.75, 40 + i as u64).unwrap();
             let plan = GsExecPlan::from_format(&gs).unwrap();
             let mut rng = Prng::new(99);
             let x = rng.normal_vec(64, 1.0);
@@ -410,7 +666,7 @@ mod tests {
 
     #[test]
     fn matmul_columns_match_matvec() {
-        let (_, gs) = packed(Pattern::Gs { b: 8, k: 4 }, 16, 64, 0.6, 7);
+        let (_, gs) = build_random_gs(16, 64, Pattern::Gs { b: 8, k: 4 }, 0.6, 7).unwrap();
         let plan = GsExecPlan::from_format(&gs).unwrap();
         let mut rng = Prng::new(3);
         for batch in [1usize, 3, 8, 11] {
@@ -427,8 +683,69 @@ mod tests {
     }
 
     #[test]
+    fn f16_plan_matches_oracle_on_quantized_format() {
+        // The f16 kernels load half-floats and widen before accumulating
+        // in f32, in oracle order — so they are *bit-exact* against the
+        // oracle run on the f16-quantized format.
+        for p in [
+            Pattern::Gs { b: 8, k: 8 },
+            Pattern::Gs { b: 8, k: 2 },
+            Pattern::GsScatter { b: 8, k: 1 },
+        ] {
+            let (_, gs) = build_random_gs(32, 64, p, 0.7, 60).unwrap();
+            let gs16 = gs.quantize_f16();
+            let plan = GsExecPlan::with_precision(&gs, 1, PlanPrecision::F16).unwrap();
+            assert_eq!(plan.precision, PlanPrecision::F16);
+            let mut rng = Prng::new(61);
+            let x = rng.normal_vec(64, 1.0);
+            assert_eq!(gs_matvec_planned(&plan, &x), gs_matvec(&gs16, &x), "{}", p.name());
+            let rows: Vec<Vec<f32>> = (0..5).map(|_| rng.normal_vec(64, 1.0)).collect();
+            let out = gs_matmul(&plan, &to_feature_major(&rows, 64), 5);
+            for (r, xr) in rows.iter().enumerate() {
+                let want = gs_matvec(&gs16, xr);
+                for row in 0..gs.rows {
+                    assert_eq!(out[row * 5 + r], want[row], "{} col {r} row {row}", p.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f16_plan_halves_joined_bytes() {
+        let (_, gs) = build_random_gs(64, 128, Pattern::Gs { b: 16, k: 16 }, 0.7, 77).unwrap();
+        let p32 = GsExecPlan::with_chunks(&gs, 4).unwrap();
+        let p16 = GsExecPlan::with_precision(&gs, 4, PlanPrecision::F16).unwrap();
+        let (b32, b16) = (p32.packed_bytes(), p16.packed_bytes());
+        assert!(
+            (b16 as f64) <= 0.60 * b32 as f64,
+            "f16 plan {b16}B not <= 60% of f32 plan {b32}B"
+        );
+    }
+
+    #[test]
+    fn scalar_forced_matmul_matches_default_path() {
+        // Trivially equal without the `simd` feature; the real assertion
+        // when the explicit SIMD block is compiled in.
+        for precision in [PlanPrecision::F32, PlanPrecision::F16] {
+            let (_, gs) = build_random_gs(32, 64, Pattern::Gs { b: 8, k: 4 }, 0.7, 13).unwrap();
+            let plan = GsExecPlan::with_precision(&gs, 1, precision).unwrap();
+            let mut rng = Prng::new(14);
+            for batch in [1usize, 8, 11] {
+                let rows: Vec<Vec<f32>> = (0..batch).map(|_| rng.normal_vec(64, 1.0)).collect();
+                let acts = to_feature_major(&rows, 64);
+                assert_eq!(
+                    gs_matmul(&plan, &acts, batch),
+                    gs_matmul_scalar(&plan, &acts, batch),
+                    "{} batch {batch}",
+                    precision.name()
+                );
+            }
+        }
+    }
+
+    #[test]
     fn chunks_cover_all_bands_and_balance_groups() {
-        let (_, gs) = packed(Pattern::Gs { b: 8, k: 8 }, 64, 128, 0.8, 5);
+        let (_, gs) = build_random_gs(64, 128, Pattern::Gs { b: 8, k: 8 }, 0.8, 5).unwrap();
         for nchunks in [1usize, 2, 3, 7, 64, 1000] {
             let plan = GsExecPlan::with_chunks(&gs, nchunks).unwrap();
             let chunks = plan.chunks();
@@ -448,26 +765,42 @@ mod tests {
     fn parallel_matches_serial_bit_for_bit() {
         let pool = ThreadPool::new(4);
         for p in [Pattern::Gs { b: 8, k: 8 }, Pattern::GsScatter { b: 8, k: 2 }] {
-            let (_, gs) = packed(p, 64, 128, 0.7, 21);
-            let plan = Arc::new(GsExecPlan::with_chunks(&gs, 4).unwrap());
-            let mut rng = Prng::new(8);
-            let rows: Vec<Vec<f32>> = (0..6).map(|_| rng.normal_vec(128, 1.0)).collect();
-            let acts = Arc::new(to_feature_major(&rows, 128));
-            let serial = gs_matmul(&plan, &acts, 6);
-            let parallel = gs_matmul_parallel(&plan, &acts, 6, &pool);
-            assert_eq!(serial, parallel, "{}", p.name());
+            for precision in [PlanPrecision::F32, PlanPrecision::F16] {
+                let (_, gs) = build_random_gs(64, 128, p, 0.7, 21).unwrap();
+                let plan = Arc::new(GsExecPlan::with_precision(&gs, 4, precision).unwrap());
+                let mut rng = Prng::new(8);
+                let rows: Vec<Vec<f32>> = (0..6).map(|_| rng.normal_vec(128, 1.0)).collect();
+                let acts = Arc::new(to_feature_major(&rows, 128));
+                let serial = gs_matmul(&plan, &acts, 6);
+                let direct = gs_matmul_parallel(&plan, &acts, 6, &pool);
+                let merged = gs_matmul_parallel_merge(&plan, &acts, 6, &pool);
+                assert_eq!(serial, direct, "{} {} direct", p.name(), precision.name());
+                assert_eq!(serial, merged, "{} {} merge", p.name(), precision.name());
+            }
         }
     }
 
     #[test]
     fn empty_format_executes() {
+        use crate::sparse::dense::Dense;
         let d = Dense::zeros(8, 16);
         let gs = GsFormat::from_dense(&d, Pattern::Gs { b: 8, k: 8 }).unwrap();
         assert_eq!(gs.ngroups(), 0);
-        let plan = GsExecPlan::from_format(&gs).unwrap();
-        let x = vec![1.0f32; 16];
-        assert_eq!(gs_matvec_planned(&plan, &x), vec![0.0; 8]);
-        let out = gs_matmul(&plan, &to_feature_major(&[x], 16), 1);
-        assert_eq!(out, vec![0.0; 8]);
+        for precision in [PlanPrecision::F32, PlanPrecision::F16] {
+            let plan = GsExecPlan::with_precision(&gs, 1, precision).unwrap();
+            let x = vec![1.0f32; 16];
+            assert_eq!(gs_matvec_planned(&plan, &x), vec![0.0; 8]);
+            let out = gs_matmul(&plan, &to_feature_major(&[x], 16), 1);
+            assert_eq!(out, vec![0.0; 8]);
+        }
+    }
+
+    #[test]
+    fn f16_plan_rejects_wide_matrices() {
+        // u16 indices cap the column count at 65536.
+        let d = crate::sparse::dense::Dense::zeros(8, (u16::MAX as usize + 1) * 2);
+        let gs = GsFormat::from_dense(&d, Pattern::Gs { b: 8, k: 8 }).unwrap();
+        assert!(GsExecPlan::with_precision(&gs, 1, PlanPrecision::F16).is_err());
+        assert!(GsExecPlan::with_precision(&gs, 1, PlanPrecision::F32).is_ok());
     }
 }

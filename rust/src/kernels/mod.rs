@@ -4,10 +4,15 @@
 //!   sparse convolution) used as numerics oracles and by the training
 //!   orchestrator's CPU paths.
 //! * [`exec`] — the production CPU fast path: a prepacked
-//!   [`exec::GsExecPlan`] (joined §V layout, precomputed output slots,
-//!   balanced chunks) with planned, batched, and multi-threaded kernels
-//!   that match the oracle bit for bit. Backs the coordinator's native
-//!   serving backend.
+//!   [`exec::GsExecPlan`] (joined §V layout at f32 or the paper's f16
+//!   storage resolution, precomputed output slots, balanced chunks) with
+//!   planned, batched, and multi-threaded kernels that match the oracle
+//!   bit for bit. The batched inner loops use explicit `std::simd` under
+//!   the `simd` cargo feature. Backs the coordinator's native serving
+//!   backend.
+//! * [`dense`] — the cache-blocked, feature-major batched dense layer
+//!   (`relu(x@W1+b1)`) feeding the GS spMM; serial and pool-parallel,
+//!   bit-identical at any thread count.
 //! * [`spmv_sim`] / [`conv_sim`] — the same kernels executed on the
 //!   [`crate::sim::Machine`]: they compute identical numerics while
 //!   emitting micro-ops, so one run yields both the result vector and the
@@ -15,10 +20,15 @@
 //!   numerics for every pattern.
 
 pub mod conv_sim;
+pub mod dense;
 pub mod exec;
 pub mod native;
 pub mod spmv_sim;
 
 pub use conv_sim::{conv_block_sim, conv_dense_sim, conv_gs_sim, ConvOutput};
-pub use exec::{gs_matmul, gs_matmul_parallel, gs_matvec_planned, GsExecPlan};
+pub use dense::{dense_matmul, dense_matmul_parallel};
+pub use exec::{
+    gs_matmul, gs_matmul_parallel, gs_matmul_parallel_merge, gs_matmul_scalar, gs_matvec_planned,
+    GsExecPlan, PlanPrecision,
+};
 pub use spmv_sim::{spmv_block_sim, spmv_csr_sim, spmv_dense_sim, spmv_gs_sim, SpmvOutput};

@@ -1,3 +1,4 @@
+#![cfg_attr(feature = "simd", feature(portable_simd))]
 //! # gs-sparse — Load-balanced Gather-Scatter Patterns for Sparse DNNs
 //!
 //! A full-stack reproduction of *"Load-balanced Gather-scatter Patterns for

@@ -4,6 +4,7 @@
 //! gs-sparse serve    [--backend native|pjrt] [--bind 127.0.0.1:7070] [--workers 1]
 //!                    native: [--inputs 64] [--hidden 256] [--outputs 64] [--batch 16]
 //!                            [--b 16] [--k 16] [--sparsity 0.9] [--threads 0]
+//!                            [--precision f32|f16]
 //!                    pjrt:   [--artifacts DIR]   (requires --features pjrt)
 //! gs-sparse train    --model gnmt|resnet|jasper [--pattern GS|Block|Irregular]
 //!                    [--b 8] [--k 8] [--sparsity 0.8] [--seed 42]   (pjrt only)
@@ -18,8 +19,10 @@
 
 use anyhow::{anyhow, Result};
 use gs_sparse::coordinator::{serve, server::ServeConfig, SparseModel};
+use gs_sparse::kernels::exec::PlanPrecision;
 use gs_sparse::pruning::prune;
 use gs_sparse::sparse::{Dense, GsFormat, Pattern};
+use gs_sparse::testing::{build_random_model, ModelSpec};
 use gs_sparse::util::{Args, Prng};
 
 fn main() -> Result<()> {
@@ -63,42 +66,34 @@ fn cmd_serve(args: &Args) -> Result<()> {
         String,
     ) = match backend.as_str() {
         "native" => {
-            let inputs = args.usize("inputs", 64);
-            let hidden = args.usize("hidden", 256);
-            let outputs = args.usize("outputs", 64);
-            let max_batch = args.usize("batch", 16);
             let b = args.usize("b", 16);
-            let k = args.usize("k", b);
-            let sparsity = args.f64("sparsity", 0.9);
-            let threads = args.usize("threads", 0);
-            let seed = args.usize("seed", 42) as u64;
+            let spec = ModelSpec {
+                inputs: args.usize("inputs", 64),
+                hidden: args.usize("hidden", 256),
+                outputs: args.usize("outputs", 64),
+                max_batch: args.usize("batch", 16),
+                pattern: Pattern::Gs {
+                    b,
+                    k: args.usize("k", b),
+                },
+                sparsity: args.f64("sparsity", 0.9),
+                threads: args.usize("threads", 0),
+                precision: PlanPrecision::parse(args.get("precision", "f32"))?,
+                seed: args.usize("seed", 42) as u64,
+            };
             let banner = format!(
-                "native GS({b},{k}) engine @ {:.0}% sparse output layer{}",
-                sparsity * 100.0,
-                if threads > 1 {
-                    format!(", {threads} kernel threads")
+                "native {} engine @ {:.0}% sparse output layer, {} plan{}",
+                spec.pattern.name(),
+                spec.sparsity * 100.0,
+                spec.precision.name(),
+                if spec.threads > 1 {
+                    format!(", {} kernel threads", spec.threads)
                 } else {
                     String::new()
                 }
             );
-            let factory = move || {
-                let mut rng = Prng::new(seed);
-                let mut proj = Dense::random(outputs, hidden, 0.3, &mut rng);
-                let pattern = Pattern::Gs { b, k };
-                let mask = prune(&proj, pattern, sparsity)?;
-                proj.apply_mask(&mask);
-                let gs = GsFormat::from_dense(&proj, pattern)?;
-                let mut wrng = Prng::new(seed ^ 1);
-                SparseModel::native(
-                    wrng.normal_vec(inputs * hidden, 0.1),
-                    vec![0.0; hidden],
-                    &gs,
-                    wrng.normal_vec(outputs, 0.1),
-                    inputs,
-                    max_batch,
-                    threads,
-                )
-            };
+            let (inputs, outputs, max_batch) = (spec.inputs, spec.outputs, spec.max_batch);
+            let factory = move || build_random_model(&spec).map(|bm| bm.model);
             (Box::new(factory), inputs, outputs, max_batch, banner)
         }
         "pjrt" => pjrt_factory(args)?,

@@ -224,6 +224,43 @@ impl GsFormat {
         out
     }
 
+    /// The joined layout at the paper's storage resolution (§X): `u16`
+    /// column indices and IEEE binary16 values, halving the buffer's
+    /// bytes. Requires `cols <= 65536` (checked by the plan builder;
+    /// asserted here).
+    pub fn to_joined_f16(&self) -> Vec<u16> {
+        assert!(
+            self.cols <= u16::MAX as usize + 1,
+            "f16 joined layout indexes columns with u16"
+        );
+        let mut out = Vec::with_capacity(self.value.len() * 2);
+        for g in 0..self.ngroups() {
+            out.extend(
+                self.index[g * self.b..(g + 1) * self.b]
+                    .iter()
+                    .map(|&i| i as u16),
+            );
+            out.extend(
+                self.value[g * self.b..(g + 1) * self.b]
+                    .iter()
+                    .map(|&v| crate::util::f16::f32_to_f16_bits(v)),
+            );
+        }
+        out
+    }
+
+    /// The format with every value rounded through f16 storage — the
+    /// weights an f16 execution plan actually multiplies with. Oracle
+    /// kernels on the quantized format are bit-identical to the f16 plan
+    /// kernels.
+    pub fn quantize_f16(&self) -> GsFormat {
+        let mut q = self.clone();
+        for v in &mut q.value {
+            *v = crate::util::f16::f16_round(*v);
+        }
+        q
+    }
+
     /// Compressed size in bytes assuming fp16 values + u16 indices (the
     /// paper's storage resolution, §X) plus u32 indptr (+ u32 rowmap).
     pub fn compact_bytes(&self) -> usize {

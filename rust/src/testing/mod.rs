@@ -1,10 +1,18 @@
-//! In-tree property-testing mini-framework (proptest substitute).
+//! In-tree property-testing mini-framework (proptest substitute) and
+//! shared fixtures.
 //!
 //! The offline registry has no `proptest`, so invariant tests use this
 //! small framework: seeded generators over a [`Prng`], a `forall` driver
 //! that runs N cases, and greedy input shrinking on failure for the common
 //! generator shapes (integers, vectors). Failures report the seed and the
 //! shrunken counterexample so a case can be replayed deterministically.
+//!
+//! [`model`] holds the shared random-model construction pipeline used by
+//! the CLI serve factory, examples, benches, and test fixtures.
+
+pub mod model;
+
+pub use model::{build_random_gs, build_random_model, BuiltModel, ModelSpec};
 
 use crate::util::prng::Prng;
 

@@ -1,0 +1,151 @@
+//! Shared random-model construction for tests, examples, and benches.
+//!
+//! The Prng → prune → [`GsFormat`] → [`SparseModel::native`] pipeline was
+//! repeated by the CLI serve factory, the `serve_sparse` example, the
+//! `e2e_serving` bench, and both test suites' fixtures; it lives here
+//! once. [`build_random_model`] is deterministic in the spec's `seed`
+//! (thread count and precision do not consume randomness, so models that
+//! differ only in those fields share identical weights — the property the
+//! serial-vs-parallel bit-equality tests rely on), and returns every
+//! intermediate a caller might need to recompute the forward pass by
+//! hand.
+
+use crate::coordinator::SparseModel;
+use crate::kernels::exec::PlanPrecision;
+use crate::pruning::prune;
+use crate::sparse::{Dense, GsFormat, Pattern};
+use crate::util::prng::Prng;
+use anyhow::Result;
+
+/// Everything that determines a random serving model.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub inputs: usize,
+    pub hidden: usize,
+    pub outputs: usize,
+    pub max_batch: usize,
+    /// GS compression pattern of the `[outputs, hidden]` projection.
+    pub pattern: Pattern,
+    pub sparsity: f64,
+    /// Kernel threads for the native engine (0/1 = serial).
+    pub threads: usize,
+    /// Packed-plan value storage resolution.
+    pub precision: PlanPrecision,
+    pub seed: u64,
+}
+
+impl Default for ModelSpec {
+    fn default() -> ModelSpec {
+        ModelSpec {
+            inputs: 64,
+            hidden: 256,
+            outputs: 64,
+            max_batch: 16,
+            pattern: Pattern::Gs { b: 16, k: 16 },
+            sparsity: 0.9,
+            threads: 0,
+            precision: PlanPrecision::F32,
+            seed: 42,
+        }
+    }
+}
+
+/// A built model plus the raw weights behind it (for oracle recomputation
+/// in tests).
+pub struct BuiltModel {
+    pub model: SparseModel,
+    /// The pruned dense projection the GS format was packed from.
+    pub proj: Dense,
+    pub gs: GsFormat,
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    pub b2: Vec<f32>,
+}
+
+/// Random pruned matrix + its GS compression — the fixture behind every
+/// kernel test and bench sweep.
+pub fn build_random_gs(
+    rows: usize,
+    cols: usize,
+    pattern: Pattern,
+    sparsity: f64,
+    seed: u64,
+) -> Result<(Dense, GsFormat)> {
+    let mut rng = Prng::new(seed);
+    let mut w = Dense::random(rows, cols, 1.0, &mut rng);
+    let mask = prune(&w, pattern, sparsity)?;
+    w.apply_mask(&mask);
+    let gs = GsFormat::from_dense(&w, pattern)?;
+    Ok((w, gs))
+}
+
+/// Build a native-backend [`SparseModel`] with random weights drawn from
+/// `spec.seed`.
+pub fn build_random_model(spec: &ModelSpec) -> Result<BuiltModel> {
+    let mut rng = Prng::new(spec.seed);
+    let mut proj = Dense::random(spec.outputs, spec.hidden, 0.3, &mut rng);
+    let mask = prune(&proj, spec.pattern, spec.sparsity)?;
+    proj.apply_mask(&mask);
+    let gs = GsFormat::from_dense(&proj, spec.pattern)?;
+    let w1 = rng.normal_vec(spec.inputs * spec.hidden, 0.1);
+    let b1 = rng.normal_vec(spec.hidden, 0.05);
+    let b2 = rng.normal_vec(spec.outputs, 0.1);
+    let model = SparseModel::native(
+        w1.clone(),
+        b1.clone(),
+        &gs,
+        b2.clone(),
+        spec.inputs,
+        spec.max_batch,
+        spec.threads,
+        spec.precision,
+    )?;
+    Ok(BuiltModel {
+        model,
+        proj,
+        gs,
+        w1,
+        b1,
+        b2,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_builds_and_is_deterministic() {
+        let spec = ModelSpec::default();
+        let a = build_random_model(&spec).unwrap();
+        let b = build_random_model(&spec).unwrap();
+        assert_eq!(a.w1, b.w1);
+        assert_eq!(a.b2, b.b2);
+        assert_eq!(a.gs, b.gs);
+        assert_eq!(a.model.inputs, 64);
+        assert_eq!(a.model.outputs, 64);
+        assert_eq!(a.model.backend_name(), "native");
+    }
+
+    #[test]
+    fn threads_and_precision_do_not_change_weights() {
+        let base = build_random_model(&ModelSpec::default()).unwrap();
+        let par = build_random_model(&ModelSpec {
+            threads: 4,
+            precision: PlanPrecision::F16,
+            ..ModelSpec::default()
+        })
+        .unwrap();
+        assert_eq!(base.w1, par.w1);
+        assert_eq!(base.b1, par.b1);
+        assert_eq!(base.proj, par.proj);
+    }
+
+    #[test]
+    fn random_gs_roundtrips() {
+        let (w, gs) =
+            build_random_gs(32, 64, Pattern::Gs { b: 8, k: 8 }, 0.75, 3).unwrap();
+        gs.validate().unwrap();
+        assert_eq!(gs.to_dense(), w);
+    }
+}

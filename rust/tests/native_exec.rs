@@ -1,16 +1,21 @@
 //! Property tests for the native execution engine: the prepacked plan
-//! kernels ([`gs_matvec_planned`], [`gs_matmul`], the parallel path) must
-//! match the scalar oracle `gs_matvec` bit for bit, for every pattern
-//! family the format supports and across edge shapes (empty bands,
-//! single group, batch of 1, non-block-multiple batches).
+//! kernels ([`gs_matvec_planned`], [`gs_matmul`], the parallel paths)
+//! must match the scalar oracle `gs_matvec` bit for bit for f32 plans —
+//! for every pattern family the format supports and across edge shapes
+//! (empty bands, single group, batch of 1, non-block-multiple batches).
+//! f16 plans must be bit-identical to the oracle on the f16-quantized
+//! format, and within the half-precision error budget of the f32 oracle.
+//! The `simd` feature's explicit vector inner loop must be bit-identical
+//! to the scalar fallback, and the direct-write parallel path to the
+//! private-accumulate+merge one.
 
 use gs_sparse::kernels::exec::{
-    gs_matmul, gs_matmul_parallel, gs_matvec_planned, to_feature_major, GsExecPlan,
+    gs_matmul, gs_matmul_parallel, gs_matmul_parallel_merge, gs_matmul_scalar, gs_matvec_planned,
+    to_feature_major, GsExecPlan, PlanPrecision,
 };
 use gs_sparse::kernels::native::gs_matvec;
-use gs_sparse::pruning::prune;
 use gs_sparse::sparse::{Dense, GsFormat, Pattern};
-use gs_sparse::testing::{default_cases, forall2, OneOf, UsizeIn};
+use gs_sparse::testing::{build_random_gs, default_cases, forall2, OneOf, UsizeIn};
 use gs_sparse::util::{Prng, ThreadPool};
 use std::sync::Arc;
 
@@ -29,11 +34,9 @@ fn pattern_gen() -> OneOf<Pattern> {
 }
 
 fn packed(pattern: Pattern, sparsity: f64, seed: u64) -> Result<GsFormat, String> {
-    let mut rng = Prng::new(seed);
-    let mut w = Dense::random(32, 64, 1.0, &mut rng);
-    let mask = prune(&w, pattern, sparsity).map_err(|e| format!("prune: {e:#}"))?;
-    w.apply_mask(&mask);
-    GsFormat::from_dense(&w, pattern).map_err(|e| format!("pack: {e:#}"))
+    build_random_gs(32, 64, pattern, sparsity, seed)
+        .map(|(_, gs)| gs)
+        .map_err(|e| format!("pack: {e:#}"))
 }
 
 fn exact(a: &[f32], b: &[f32], what: &str) -> Result<(), String> {
@@ -92,9 +95,111 @@ fn prop_matmul_columns_match_oracle() {
     );
 }
 
-/// Parallel path ≡ serial batched kernel for every chunk count — the
-/// merge is a copy of disjoint rows, so results are bit-identical at any
-/// parallelism.
+/// f16 plan ≡ oracle on the f16-quantized format, bit for bit: the
+/// kernels widen each stored half-float once and accumulate in f32 in
+/// oracle order, so quantization is the *only* difference vs f32.
+#[test]
+fn prop_f16_plan_matches_quantized_oracle() {
+    forall2(
+        "f16-plan-quantized-oracle",
+        &pattern_gen(),
+        &OneOf(vec![1usize, 3, 8, 13]),
+        default_cases().min(40),
+        |&pattern, &batch| {
+            let gs = packed(pattern, 0.7, batch as u64 * 17 + 9)?;
+            let gs16 = gs.quantize_f16();
+            let plan = GsExecPlan::with_precision(&gs, 1, PlanPrecision::F16)
+                .map_err(|e| format!("plan: {e:#}"))?;
+            let mut rng = Prng::new(batch as u64 + 400);
+            let x = rng.normal_vec(64, 1.0);
+            exact(
+                &gs_matvec_planned(&plan, &x),
+                &gs_matvec(&gs16, &x),
+                &format!("{} matvec", pattern.name()),
+            )?;
+            let rows: Vec<Vec<f32>> = (0..batch).map(|_| rng.normal_vec(64, 1.0)).collect();
+            let out = gs_matmul(&plan, &to_feature_major(&rows, 64), batch);
+            for (r, xr) in rows.iter().enumerate() {
+                let want = gs_matvec(&gs16, xr);
+                let col: Vec<f32> = (0..gs.rows).map(|row| out[row * batch + r]).collect();
+                exact(&col, &want, &format!("{} col {r}", pattern.name()))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// f16 plan tracks the full-precision oracle within the half-precision
+/// budget: per output row, |y16 - y32| ≤ 2⁻¹⁰ · Σ|w||a| (+ a small
+/// absolute slack for subnormal rounding and f32 accumulation noise).
+/// The bound itself is computed with the oracle on |w|, |a|.
+#[test]
+fn prop_f16_plan_within_relative_tolerance_of_f32_oracle() {
+    forall2(
+        "f16-plan-tolerance",
+        &pattern_gen(),
+        &UsizeIn { lo: 30, hi: 92 },
+        default_cases().min(40),
+        |&pattern, &sp| {
+            let gs = packed(pattern, sp as f64 / 100.0, sp as u64 * 11 + 2)?;
+            let mut gs_abs = gs.clone();
+            for v in &mut gs_abs.value {
+                *v = v.abs();
+            }
+            let plan = GsExecPlan::with_precision(&gs, 1, PlanPrecision::F16)
+                .map_err(|e| format!("plan: {e:#}"))?;
+            let mut rng = Prng::new(sp as u64 ^ 0xF16);
+            let x = rng.normal_vec(64, 1.0);
+            let x_abs: Vec<f32> = x.iter().map(|v| v.abs()).collect();
+            let got = gs_matvec_planned(&plan, &x);
+            let want = gs_matvec(&gs, &x);
+            let bound = gs_matvec(&gs_abs, &x_abs);
+            for (i, ((g, w), m)) in got.iter().zip(&want).zip(&bound).enumerate() {
+                let tol = 2f32.powi(-10) * m + 1e-4;
+                if (g - w).abs() > tol {
+                    return Err(format!(
+                        "{} row {i}: f16 {g} vs f32 {w} (|Σ|w||a|| = {m}, tol {tol})",
+                        pattern.name()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The `simd` feature's explicit vector inner loop ≡ the scalar fallback,
+/// bit for bit, at both precisions (trivially true without the feature;
+/// the real differential when it is compiled in).
+#[test]
+fn prop_simd_path_matches_scalar_fallback() {
+    forall2(
+        "simd-vs-scalar",
+        &pattern_gen(),
+        &OneOf(vec![1usize, 5, 8, 16, 19]),
+        default_cases().min(40),
+        |&pattern, &batch| {
+            let gs = packed(pattern, 0.75, batch as u64 * 23 + 7)?;
+            for precision in [PlanPrecision::F32, PlanPrecision::F16] {
+                let plan = GsExecPlan::with_precision(&gs, 1, precision)
+                    .map_err(|e| format!("plan: {e:#}"))?;
+                let mut rng = Prng::new(batch as u64 + 700);
+                let rows: Vec<Vec<f32>> = (0..batch).map(|_| rng.normal_vec(64, 1.0)).collect();
+                let acts = to_feature_major(&rows, 64);
+                exact(
+                    &gs_matmul(&plan, &acts, batch),
+                    &gs_matmul_scalar(&plan, &acts, batch),
+                    &format!("{} {}", pattern.name(), precision.name()),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Both parallel strategies ≡ the serial batched kernel for every chunk
+/// count: the direct-write path (non-scatter spans are provably disjoint)
+/// and the private-accumulate+merge baseline.
 #[test]
 fn prop_parallel_matches_serial_any_chunking() {
     let pool = ThreadPool::new(4);
@@ -105,15 +210,23 @@ fn prop_parallel_matches_serial_any_chunking() {
         default_cases().min(40),
         |&pattern, &nchunks| {
             let gs = packed(pattern, 0.8, nchunks as u64 * 13 + 3)?;
-            let plan =
-                Arc::new(GsExecPlan::with_chunks(&gs, nchunks).map_err(|e| format!("{e:#}"))?);
-            let batch = 5usize;
-            let mut rng = Prng::new(nchunks as u64);
-            let rows: Vec<Vec<f32>> = (0..batch).map(|_| rng.normal_vec(64, 1.0)).collect();
-            let acts = Arc::new(to_feature_major(&rows, 64));
-            let serial = gs_matmul(&plan, &acts, batch);
-            let parallel = gs_matmul_parallel(&plan, &acts, batch, &pool);
-            exact(&parallel, &serial, &format!("{} chunks={nchunks}", pattern.name()))
+            for precision in [PlanPrecision::F32, PlanPrecision::F16] {
+                let plan = Arc::new(
+                    GsExecPlan::with_precision(&gs, nchunks, precision)
+                        .map_err(|e| format!("{e:#}"))?,
+                );
+                let batch = 5usize;
+                let mut rng = Prng::new(nchunks as u64);
+                let rows: Vec<Vec<f32>> = (0..batch).map(|_| rng.normal_vec(64, 1.0)).collect();
+                let acts = Arc::new(to_feature_major(&rows, 64));
+                let serial = gs_matmul(&plan, &acts, batch);
+                let direct = gs_matmul_parallel(&plan, &acts, batch, &pool);
+                let merged = gs_matmul_parallel_merge(&plan, &acts, batch, &pool);
+                let what = format!("{} {} chunks={nchunks}", pattern.name(), precision.name());
+                exact(&direct, &serial, &format!("{what} direct"))?;
+                exact(&merged, &serial, &format!("{what} merge"))?;
+            }
+            Ok(())
         },
     );
 }
@@ -165,7 +278,9 @@ fn edge_shapes_execute_exactly() {
     }
 }
 
-/// The packed plan reports sane metadata.
+/// The packed plan reports sane metadata, and the f16 plan's packed
+/// bytes are at most 60% of the f32 plan's (the joined buffer halves;
+/// the row tables are shared overhead).
 #[test]
 fn plan_metadata_consistent() {
     let gs = packed(Pattern::Gs { b: 8, k: 2 }, 0.7, 9).unwrap();
@@ -178,7 +293,17 @@ fn plan_metadata_consistent() {
     assert_eq!(plan.nbands(), 8);
     assert_eq!(plan.ngroups(), gs.ngroups());
     assert!(!plan.scatter);
+    assert_eq!(plan.precision, PlanPrecision::F32);
     assert!(plan.packed_bytes() > 0);
     let total: usize = plan.chunks().iter().map(|c| c.groups).sum();
     assert_eq!(total, gs.ngroups());
+
+    let plan16 = GsExecPlan::with_precision(&gs, 3, PlanPrecision::F16).unwrap();
+    assert_eq!(plan16.precision, PlanPrecision::F16);
+    assert!(
+        plan16.packed_bytes() as f64 <= 0.60 * plan.packed_bytes() as f64,
+        "f16 {}B vs f32 {}B",
+        plan16.packed_bytes(),
+        plan.packed_bytes()
+    );
 }
