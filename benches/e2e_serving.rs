@@ -8,7 +8,7 @@
 //! GS_E2E_REQUESTS (default 100 per client).
 
 use gs_sparse::bench::Table;
-use gs_sparse::coordinator::{serve, server::ServeConfig, Client};
+use gs_sparse::coordinator::{serve_slot, server::ServeConfig, Client, Engine};
 use gs_sparse::kernels::exec::PlanPrecision;
 use gs_sparse::sparse::Pattern;
 use gs_sparse::testing::{build_random_model, ModelSpec};
@@ -38,7 +38,8 @@ fn main() -> anyhow::Result<()> {
     );
 
     for precision in [PlanPrecision::F32, PlanPrecision::F16] {
-        for kernel_threads in [0usize, 4] {
+        // threads: 1 = serial baseline (0 would auto-detect).
+        for kernel_threads in [1usize, 4] {
             for clients in [1usize, 4, 8] {
                 let spec = ModelSpec {
                     inputs,
@@ -51,9 +52,13 @@ fn main() -> anyhow::Result<()> {
                     precision,
                     seed: 42,
                 };
-                let factory = move || build_random_model(&spec).map(|bm| bm.model);
-                let handle = serve(
-                    factory,
+                let engine = Engine::new(
+                    build_random_model(&spec)?.model,
+                    "inline-random",
+                    kernel_threads,
+                );
+                let handle = serve_slot(
+                    &engine,
                     ServeConfig {
                         bind: "127.0.0.1:0".into(),
                         workers: 1,

@@ -1,0 +1,122 @@
+//! Artifact deployment E2E: export a pruned model as a `.gsm` artifact,
+//! serve it over TCP, verify served logits are **bit-identical** to the
+//! originating in-memory model, hot-swap a second artifact under the
+//! running server, and confirm the deploy through `stats` — the CI
+//! acceptance drive for the model store (exits non-zero on any mismatch).
+//!
+//! ```text
+//! cargo run --release --example artifact_deploy -- \
+//!     [--v1 model.gsm] [--threads 2] [--precision f32|f16] [--seed 42]
+//! ```
+//!
+//! With `--v1`, the first artifact is loaded from disk (e.g. one written
+//! by `gs-sparse export`) instead of exported in-process; it must have
+//! been exported with the same spec flags, and its logits are still
+//! diffed against the independently rebuilt in-memory model — which
+//! cross-checks the CLI export path against the library.
+
+use gs_sparse::coordinator::{serve_slot, server::ServeConfig, Client, Engine};
+use gs_sparse::model_store::ModelArtifact;
+use gs_sparse::testing::{build_random_artifact, spec_from_args, ModelSpec};
+use gs_sparse::util::{Args, Json, Prng};
+
+/// The shared CLI→spec mapping with this example's defaults: 2 kernel
+/// threads, everything else matching `export`'s defaults (both route
+/// through `ModelSpec::default()`), which the `--v1` bit-identity
+/// cross-check relies on. The caller's per-version seed is applied
+/// *after* the overlay so `--seed N` still yields distinct v1/v2 models.
+fn spec(args: &Args, seed: u64) -> anyhow::Result<ModelSpec> {
+    let base = spec_from_args(
+        args,
+        ModelSpec {
+            threads: 2,
+            ..ModelSpec::default()
+        },
+    )?;
+    Ok(ModelSpec { seed, ..base })
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let seed = args.usize("seed", 42) as u64;
+    let threads = args.usize("threads", 2);
+    let tmp = std::env::temp_dir();
+    let v1_path = tmp.join(format!("gsm-deploy-v1-{}.gsm", std::process::id()));
+    let v2_path = tmp.join(format!("gsm-deploy-v2-{}.gsm", std::process::id()));
+
+    // v1: the live model. In-memory reference + .gsm artifact (either
+    // exported here or pre-exported by the CLI and passed via --v1).
+    let (artifact1, bm1) = build_random_artifact(&spec(&args, seed)?)?;
+    let v1_file = match args.options.get("v1") {
+        Some(path) => path.clone(),
+        None => {
+            artifact1.save(&v1_path)?;
+            v1_path.display().to_string()
+        }
+    };
+    // v2: the pruning to deploy mid-flight (different seed, same shape).
+    let (artifact2, bm2) = build_random_artifact(&spec(&args, seed + 1)?)?;
+    artifact2.save(&v2_path)?;
+
+    let loaded = ModelArtifact::load(&v1_file)?;
+    println!("serving artifact {v1_file}: {}", loaded.describe());
+    let inputs = loaded.inputs;
+    let max_batch = loaded.max_batch;
+    let engine = Engine::new(loaded.instantiate(threads)?, &v1_file, threads);
+    let handle = serve_slot(
+        &engine,
+        ServeConfig {
+            bind: "127.0.0.1:0".into(),
+            workers: 2,
+            input_width: inputs,
+            max_batch,
+            window_ms: 1,
+        },
+    )?;
+
+    let mut rng = Prng::new(777);
+    let probes: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(inputs, 1.0)).collect();
+    let want1 = bm1.model.infer_batch(&probes)?;
+    let want2 = bm2.model.infer_batch(&probes)?;
+
+    let mut client = Client::connect(handle.addr)?;
+    anyhow::ensure!(client.ping()?, "ping failed");
+
+    // Served v1 logits must equal the in-memory model bit for bit.
+    for (i, probe) in probes.iter().enumerate() {
+        let got = client.infer(probe)?;
+        anyhow::ensure!(
+            got == want1[i],
+            "served v1 logits differ from in-memory model at probe {i}"
+        );
+    }
+    println!("v1 OK: {} served responses bit-identical to the in-memory model", probes.len());
+
+    // Hot-swap to v2 over the live connection.
+    let version = client.swap(&v2_path.display().to_string())?;
+    anyhow::ensure!(version == 2, "expected deploy version 2, got {version}");
+    for (i, probe) in probes.iter().enumerate() {
+        let got = client.infer(probe)?;
+        anyhow::ensure!(
+            got == want2[i],
+            "served v2 logits differ from in-memory model at probe {i}"
+        );
+    }
+    println!("v2 OK: swap landed, responses bit-identical to the new in-memory model");
+
+    // stats must report the deploy.
+    let stats = client.stats()?;
+    let version = stats.get("model_version").and_then(Json::as_f64).unwrap_or(0.0);
+    let swaps = stats.get("swaps").and_then(Json::as_f64).unwrap_or(0.0);
+    let errors = stats.get("errors").and_then(Json::as_f64).unwrap_or(-1.0);
+    anyhow::ensure!(version == 2.0, "stats model_version {version} != 2");
+    anyhow::ensure!(swaps == 1.0, "stats swaps {swaps} != 1");
+    anyhow::ensure!(errors == 0.0, "stats errors {errors} != 0");
+    println!("stats OK: {}", stats.to_string());
+
+    handle.stop();
+    let _ = std::fs::remove_file(&v1_path);
+    let _ = std::fs::remove_file(&v2_path);
+    println!("artifact deploy E2E passed");
+    Ok(())
+}

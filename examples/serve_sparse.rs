@@ -9,10 +9,8 @@
 //!     [--b 16] [--sparsity 0.9]
 //! ```
 
-use gs_sparse::coordinator::{serve, server::ServeConfig, Client};
-use gs_sparse::kernels::exec::PlanPrecision;
-use gs_sparse::sparse::Pattern;
-use gs_sparse::testing::{build_random_model, ModelSpec};
+use gs_sparse::coordinator::{serve_slot, server::ServeConfig, Client, Engine};
+use gs_sparse::testing::{build_random_model, spec_from_args, ModelSpec};
 use gs_sparse::util::{Args, Prng};
 use std::time::Instant;
 
@@ -20,24 +18,25 @@ fn main() -> anyhow::Result<()> {
     let args = Args::parse();
     let n_requests = args.usize("requests", 200);
     let n_clients = args.usize("clients", 4);
-    let b = args.usize("b", 16);
-    let spec = ModelSpec {
-        inputs: args.usize("inputs", 64),
-        hidden: args.usize("hidden", 256),
-        outputs: args.usize("outputs", 64),
-        max_batch: args.usize("batch", 16),
-        pattern: Pattern::Gs { b, k: b },
-        sparsity: args.f64("sparsity", 0.9),
-        threads: args.usize("threads", 0),
-        precision: PlanPrecision::parse(args.get("precision", "f32"))?,
-        seed: 42,
+    // Shared CLI→spec mapping; --threads defaults to 0 (auto-detect).
+    let spec = spec_from_args(
+        &args,
+        ModelSpec {
+            threads: 0,
+            ..ModelSpec::default()
+        },
+    )?;
+    let b = match spec.pattern {
+        gs_sparse::sparse::Pattern::Gs { b, .. }
+        | gs_sparse::sparse::Pattern::GsScatter { b, .. } => b,
+        _ => 16,
     };
     let (inputs, outputs, max_batch) = (spec.inputs, spec.outputs, spec.max_batch);
-    let (sparsity, precision) = (spec.sparsity, spec.precision);
+    let (sparsity, precision, threads) = (spec.sparsity, spec.precision, spec.threads);
 
-    let factory = move || build_random_model(&spec).map(|bm| bm.model);
-    let handle = serve(
-        factory,
+    let engine = Engine::new(build_random_model(&spec)?.model, "inline-random", threads);
+    let handle = serve_slot(
+        &engine,
         ServeConfig {
             bind: "127.0.0.1:0".into(),
             workers: 1,

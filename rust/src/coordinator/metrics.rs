@@ -12,6 +12,13 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub batched_rows: AtomicU64,
     pub errors: AtomicU64,
+    /// Successful model hot-swaps (deploys) since startup. Together with
+    /// `model_version`/`precision` in the `stats` response, this lets an
+    /// operator confirm a deploy actually landed.
+    pub swaps: AtomicU64,
+    /// Rejected/failed swap attempts — kept separate from `errors` so
+    /// deploy mistakes never masquerade as inference failures.
+    pub swap_failures: AtomicU64,
     latencies: Mutex<Vec<f64>>,
 }
 
@@ -73,5 +80,13 @@ mod tests {
         assert!((s.mean - 0.002).abs() < 1e-9);
         assert!((m.mean_batch_size() - 6.0).abs() < 1e-9);
         assert_eq!(m.responses.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn swap_counter_starts_at_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.swaps.load(Ordering::Relaxed), 0);
+        m.swaps.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(m.swaps.load(Ordering::Relaxed), 1);
     }
 }

@@ -9,15 +9,22 @@
 //! * **native** (default, always available) — the prepacked
 //!   [`GsExecPlan`] engine from [`crate::kernels::exec`]: a cache-blocked
 //!   batched dense input layer ([`crate::kernels::dense`]), then the
-//!   GS-compressed output projection as a batched gather-scatter spMM,
-//!   then the output bias — every stage runs on the kernel
-//!   [`ThreadPool`] when one is configured, so the whole `infer_batch`
-//!   is parallel, not just the spMM. Plan values are stored at f32 or
-//!   the paper's f16 resolution ([`PlanPrecision`]). No artifacts, no
-//!   Python, no external runtime.
+//!   GS-compressed output projection as a batched gather-scatter spMM
+//!   with the output bias fused into the accumulation (no separate pass
+//!   over the logits) — every stage runs on the kernel [`ThreadPool`]
+//!   when one is configured, so the whole `infer_batch` is parallel, not
+//!   just the spMM. Plan values are stored at f32 or the paper's f16
+//!   resolution ([`PlanPrecision`]). No artifacts, no Python, no
+//!   external runtime.
 //! * **pjrt** (`pjrt` cargo feature) — the Pallas-backed `mlp_forward`
 //!   AOT artifact executed through [`crate::runtime`], taking the GS
 //!   weights as uniform `value`/`index` tensors (see [`uniform`]).
+//!
+//! Native serving goes through [`serve_slot`] and an [`Engine`]: workers
+//! share a versioned [`crate::model_store::ModelSlot`] and snapshot it
+//! once per batch, so a `{"op":"swap","path":"model.gsm"}` request
+//! hot-deploys a new pruning with zero downtime (see
+//! [`crate::model_store`]).
 //!
 //! Both backends compute the same forward graph
 //! (`relu(x@W1+b1) → GS spMM → +b2`); each is checked against a dense
@@ -32,13 +39,13 @@ pub mod uniform;
 
 pub use batcher::{Batcher, InferRequest};
 pub use metrics::Metrics;
-pub use server::{serve, Client, ServerHandle};
+pub use server::{serve, serve_slot, Client, ServerHandle};
 pub use uniform::UniformGs;
 
 use crate::kernels::dense::{dense_matmul, dense_matmul_parallel};
-use crate::kernels::exec::{gs_matmul, gs_matmul_parallel, GsExecPlan, PlanPrecision};
+use crate::kernels::exec::{gs_matmul_bias, gs_matmul_parallel_bias, GsExecPlan, PlanPrecision};
 use crate::sparse::format::GsFormat;
-use crate::util::threadpool::{partition_spans, ThreadPool};
+use crate::util::threadpool::{partition_spans, resolve_threads, ThreadPool};
 use anyhow::{ensure, Result};
 use std::sync::Arc;
 
@@ -89,8 +96,10 @@ impl SparseModel {
     /// Build the native-engine model. `gs` is the GS compression of the
     /// `[outputs, hidden]` projection (any `GS(B,k)` / scatter pattern);
     /// the plan is packed once here — at `precision` — and shared across
-    /// requests. `threads > 1` enables the multi-threaded kernels for
-    /// every stage of the forward pass.
+    /// requests. `threads` selects the kernel parallelism: `0`
+    /// auto-detects the machine's available parallelism, `1` runs
+    /// serial, `N > 1` uses `N` kernel threads for every stage of the
+    /// forward pass. Results are bit-identical at any thread count.
     #[allow(clippy::too_many_arguments)]
     pub fn native(
         w1: Vec<f32>,
@@ -102,6 +111,7 @@ impl SparseModel {
         threads: usize,
         precision: PlanPrecision,
     ) -> Result<SparseModel> {
+        let threads = resolve_threads(threads);
         let hidden = gs.cols;
         let outputs = gs.rows;
         ensure!(max_batch > 0, "max_batch must be positive");
@@ -223,9 +233,11 @@ impl SparseModel {
 
     /// Native forward: `h = relu(x @ w1 + b1)` through the cache-blocked
     /// batched dense kernel, then the GS projection through the packed
-    /// plan, then `+ b2` — the same graph as the Pallas artifact. With a
-    /// pool, every stage runs parallel: the dense layer over feature
-    /// spans, the spMM over balanced band chunks, the bias/transpose over
+    /// plan with the output bias *fused* into the spMM (rows are seeded
+    /// with `b2` before the gather-FMA sweep — no separate pass over the
+    /// logits) — the same graph as the Pallas artifact. With a pool,
+    /// every stage runs parallel: the dense layer over feature spans,
+    /// the bias-fused spMM over balanced band chunks, the transpose over
     /// batch columns — and each stage is bit-identical to its serial
     /// form, so serial and parallel models agree exactly.
     fn infer_native(&self, nb: &NativeBackend, rows: &[Vec<f32>]) -> Vec<Vec<f32>> {
@@ -235,7 +247,7 @@ impl SparseModel {
         let h = match &nb.pool {
             // batch 1 is a GEMV: pool dispatch + the batch copy would
             // cost more than the serial kernel, so only fan out real
-            // batches (mirrors the bias stage's guard below).
+            // batches (mirrors the transpose stage's guard below).
             Some(pool) if batch > 1 => {
                 // One batch-sized copy to satisfy the pool's 'static job
                 // bound — small next to the batch×inputs×hidden GEMM it
@@ -247,25 +259,25 @@ impl SparseModel {
         };
         let out_t = match &nb.pool {
             Some(pool) if nb.plan.chunks().len() > 1 => {
-                gs_matmul_parallel(&nb.plan, &Arc::new(h), batch, pool)
+                gs_matmul_parallel_bias(&nb.plan, &Arc::new(h), batch, Some(&nb.b2), pool)
             }
-            _ => gs_matmul(&nb.plan, &h, batch),
+            _ => gs_matmul_bias(&nb.plan, &h, batch, Some(&nb.b2)),
         };
-        // Bias + transpose to request-major. Parallel over contiguous
-        // batch spans — at most one job per worker, so dispatch overhead
-        // never exceeds a handful of submissions (a job per *row* would
-        // cost more synchronization than the O(outputs) adds it does).
+        // Transpose to request-major (bias already folded into the spMM).
+        // Parallel over contiguous batch spans — at most one job per
+        // worker, so dispatch overhead never exceeds a handful of
+        // submissions (a job per *row* would cost more synchronization
+        // than the O(outputs) copies it does).
         match &nb.pool {
             Some(pool) if batch > 1 => {
                 let out_t = Arc::new(out_t);
-                let b2 = Arc::clone(&nb.b2);
                 let outputs = self.outputs;
                 let spans = partition_spans(batch, pool.workers());
                 let chunks = pool.map(spans, move |(lo, hi)| {
                     (lo..hi)
                         .map(|r| {
                             (0..outputs)
-                                .map(|o| out_t[o * batch + r] + b2[o])
+                                .map(|o| out_t[o * batch + r])
                                 .collect::<Vec<f32>>()
                         })
                         .collect::<Vec<Vec<f32>>>()
@@ -275,7 +287,7 @@ impl SparseModel {
             _ => (0..batch)
                 .map(|r| {
                     (0..self.outputs)
-                        .map(|o| out_t[o * batch + r] + nb.b2[o])
+                        .map(|o| out_t[o * batch + r])
                         .collect()
                 })
                 .collect(),
@@ -307,10 +319,28 @@ impl SparseModel {
     }
 }
 
-/// Everything the serving loop needs, shareable across threads.
+/// Everything the serving loop shares across threads: the versioned
+/// model slot ([`crate::model_store::ModelSlot`]) workers snapshot once
+/// per batch — the handle a live `{"op":"swap"}` deploys through — and
+/// the metrics sink. `Engine::new` with `threads = 0` auto-detects the
+/// machine's parallelism for the kernel pool (see
+/// [`crate::util::threadpool::resolve_threads`]).
 pub struct Engine {
-    pub model: SparseModel,
+    pub slot: Arc<crate::model_store::ModelSlot>,
     pub metrics: Arc<Metrics>,
+}
+
+impl Engine {
+    /// Wrap `model` (deployment version 1, from `source`) in a fresh
+    /// swappable slot + metrics. `threads` is recorded in the slot as
+    /// the kernel-thread setting future artifact swaps instantiate with
+    /// (0 = auto-detect).
+    pub fn new(model: SparseModel, source: &str, threads: usize) -> Engine {
+        Engine {
+            slot: Arc::new(crate::model_store::ModelSlot::new(model, source, threads)),
+            metrics: Arc::new(Metrics::new()),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -337,6 +367,7 @@ mod tests {
         }
     }
 
+    /// `threads: 1` = serial (0 would auto-detect the machine).
     fn native_fixture(threads: usize) -> BuiltModel {
         build_random_model(&fixture_spec(threads, PlanPrecision::F32)).unwrap()
     }
@@ -374,7 +405,7 @@ mod tests {
 
     #[test]
     fn native_backend_matches_dense_oracle() {
-        let bm = native_fixture(0);
+        let bm = native_fixture(1);
         assert_eq!(bm.model.backend_name(), "native");
         assert_eq!(bm.model.precision(), Some(PlanPrecision::F32));
         let mut rng = Prng::new(9);
@@ -393,7 +424,7 @@ mod tests {
         // Every stage (dense, spMM, bias) is bit-identical serial vs
         // parallel, at both plan precisions.
         for precision in [PlanPrecision::F32, PlanPrecision::F16] {
-            let serial = build_random_model(&fixture_spec(0, precision)).unwrap();
+            let serial = build_random_model(&fixture_spec(1, precision)).unwrap();
             let parallel = build_random_model(&fixture_spec(3, precision)).unwrap();
             let mut rng = Prng::new(17);
             let rows: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(12, 1.0)).collect();
@@ -408,8 +439,8 @@ mod tests {
 
     #[test]
     fn f16_model_tracks_f32_model() {
-        let f32m = native_fixture(0);
-        let f16m = build_random_model(&fixture_spec(0, PlanPrecision::F16)).unwrap();
+        let f32m = native_fixture(1);
+        let f16m = build_random_model(&fixture_spec(1, PlanPrecision::F16)).unwrap();
         assert_eq!(f16m.model.precision(), Some(PlanPrecision::F16));
         let mut rng = Prng::new(23);
         let rows: Vec<Vec<f32>> = (0..6).map(|_| rng.normal_vec(12, 1.0)).collect();
@@ -427,7 +458,7 @@ mod tests {
 
     #[test]
     fn native_rejects_bad_shapes() {
-        let bm = native_fixture(0);
+        let bm = native_fixture(1);
         assert!(bm.model.infer_batch(&[vec![0.0; 5]]).is_err()); // wrong width
         let too_many: Vec<Vec<f32>> = (0..9).map(|_| vec![0.0; 12]).collect();
         assert!(bm.model.infer_batch(&too_many).is_err()); // over max_batch

@@ -3,13 +3,35 @@
 //! Protocol (one JSON object per line):
 //!   → `{"op":"infer","id":1,"input":[...f32 x inputs]}`
 //!   ← `{"id":1,"output":[...f32 x outputs]}` or `{"id":1,"error":"..."}`
-//!   → `{"op":"stats"}` ← `{"requests":N,"p50_ms":...,...}`
-//!   → `{"op":"ping"}`  ← `{"ok":true}`
+//!   → `{"op":"stats"}` ← `{"requests":N,"model_version":V,"p50_ms":...}`
+//!   → `{"op":"ping"}`  ← `{"ok":true,"version":V}`
+//!   → `{"op":"swap","path":"model.gsm"}`
+//!   ← `{"ok":true,"version":V,"precision":"f32"}` or `{"error":"..."}`
+//!
+//! Two serving modes share the batcher/worker machinery:
+//!
+//! * [`serve_slot`] — workers execute through a versioned
+//!   [`ModelSlot`] snapshot taken once per batch, so `swap` deploys a
+//!   new model under live traffic with zero downtime: in-flight batches
+//!   finish on the version they started with (a batch never mixes
+//!   versions), queued requests ride the next snapshot, connections
+//!   never drop. This is the native-engine path.
+//! * [`serve`] — each worker builds its own model through a factory
+//!   closure (PJRT executables are not `Send`, so the pjrt backend
+//!   cannot share one instance). No hot swap: `swap` returns an error.
+//!
+//! **Trust model:** the protocol is unauthenticated, and `swap` lets any
+//! connected client deploy a server-readable `.gsm` path — an operator
+//! capability, not a public one. The default bind is loopback; exposing
+//! the port beyond a trusted network requires fronting it with an
+//! authenticating proxy (or using factory mode, which has no write op).
 
 use super::batcher::{Batcher, InferRequest};
 use super::metrics::Metrics;
-use super::SparseModel;
+use super::{Engine, SparseModel};
+use crate::model_store::ModelSlot;
 use crate::util::json::Json;
+use crate::util::threadpool::resolve_threads;
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -25,6 +47,8 @@ pub struct ServerHandle {
     batcher: Arc<Batcher>,
     stop: Arc<AtomicBool>,
     pub metrics: Arc<Metrics>,
+    /// The versioned model slot (None in factory mode — no hot swap).
+    pub slot: Option<Arc<ModelSlot>>,
     workers: Vec<thread::JoinHandle<()>>,
     acceptor: Option<thread::JoinHandle<()>>,
 }
@@ -45,9 +69,8 @@ impl ServerHandle {
     }
 }
 
-/// Server geometry. `input_width`/`max_batch` must match the artifact
-/// (PJRT executables are not `Send`, so each worker thread builds its own
-/// [`SparseModel`] through the factory closure).
+/// Server geometry. `input_width`/`max_batch` must match the model
+/// (`workers: 0` auto-detects the machine's parallelism).
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     pub bind: String,
@@ -57,56 +80,102 @@ pub struct ServeConfig {
     pub window_ms: u64,
 }
 
-/// Start serving on `cfg.bind` with `cfg.workers` execution threads, each
-/// owning a model instance produced by `factory`.
+/// How serving workers obtain the model to execute a batch on.
+enum Provider {
+    /// Shared versioned slot, snapshotted once per batch (hot-swappable).
+    Slot(Arc<ModelSlot>),
+    /// Per-worker factory (PJRT executables are not `Send`).
+    Factory(Arc<dyn Fn() -> Result<SparseModel> + Send + Sync>),
+}
+
+/// Start serving `engine`'s model slot on `cfg.bind`. All workers share
+/// the slot; `{"op":"swap","path":...}` hot-deploys a new artifact.
+pub fn serve_slot(engine: &Engine, cfg: ServeConfig) -> Result<ServerHandle> {
+    serve_impl(
+        Provider::Slot(Arc::clone(&engine.slot)),
+        Arc::clone(&engine.metrics),
+        cfg,
+    )
+}
+
+/// Start serving with `cfg.workers` execution threads, each owning a
+/// model instance produced by `factory`. No hot swap in this mode.
 pub fn serve<F>(factory: F, cfg: ServeConfig) -> Result<ServerHandle>
 where
     F: Fn() -> Result<SparseModel> + Send + Sync + 'static,
 {
+    serve_impl(
+        Provider::Factory(Arc::new(factory)),
+        Arc::new(Metrics::new()),
+        cfg,
+    )
+}
+
+/// Execute one formed batch on `model` and deliver each row's result.
+fn run_batch(model: &SparseModel, batch: Vec<InferRequest>, metrics: &Metrics) {
+    let inputs: Vec<Vec<f32>> = batch.iter().map(|r| r.input.clone()).collect();
+    match model.infer_batch(&inputs) {
+        Ok(outputs) => {
+            for (req, out) in batch.into_iter().zip(outputs) {
+                metrics.record_latency(req.enqueued.elapsed().as_secs_f64());
+                let _ = req.tx.send((req.id, Ok(out)));
+            }
+        }
+        Err(e) => {
+            metrics.errors.fetch_add(1, Ordering::Relaxed);
+            let msg = format!("{e:#}");
+            for req in batch {
+                let _ = req.tx.send((req.id, Err(msg.clone())));
+            }
+        }
+    }
+}
+
+fn serve_impl(provider: Provider, metrics: Arc<Metrics>, cfg: ServeConfig) -> Result<ServerHandle> {
     let listener = TcpListener::bind(&cfg.bind).context("bind")?;
     let addr = listener.local_addr()?;
-    let metrics = Arc::new(Metrics::new());
     let batcher = Arc::new(Batcher::new(
         cfg.max_batch,
         Duration::from_millis(cfg.window_ms),
         Arc::clone(&metrics),
     ));
     let stop = Arc::new(AtomicBool::new(false));
-    let factory = Arc::new(factory);
+    let slot = match &provider {
+        Provider::Slot(slot) => Some(Arc::clone(slot)),
+        Provider::Factory(_) => None,
+    };
 
-    let workers: Vec<_> = (0..cfg.workers.max(1))
+    let workers: Vec<_> = (0..resolve_threads(cfg.workers))
         .map(|wi| {
             let batcher = Arc::clone(&batcher);
             let metrics = Arc::clone(&metrics);
-            let factory = Arc::clone(&factory);
+            let worker_provider = match &provider {
+                Provider::Slot(slot) => Provider::Slot(Arc::clone(slot)),
+                Provider::Factory(f) => Provider::Factory(Arc::clone(f)),
+            };
             thread::Builder::new()
                 .name(format!("gs-serve-worker-{wi}"))
-                .spawn(move || {
-                    let model = match factory() {
-                        Ok(m) => m,
-                        Err(e) => {
-                            eprintln!("worker {wi}: model load failed: {e:#}");
-                            metrics.errors.fetch_add(1, Ordering::Relaxed);
-                            return;
+                .spawn(move || match worker_provider {
+                    Provider::Slot(slot) => {
+                        while let Some(batch) = batcher.next_batch() {
+                            // One snapshot per batch: the whole batch runs
+                            // on a single model generation even if a swap
+                            // lands mid-execution.
+                            let vm = slot.current();
+                            run_batch(&vm.model, batch, &metrics);
                         }
-                    };
-                    while let Some(batch) = batcher.next_batch() {
-                        let inputs: Vec<Vec<f32>> =
-                            batch.iter().map(|r| r.input.clone()).collect();
-                        match model.infer_batch(&inputs) {
-                            Ok(outputs) => {
-                                for (req, out) in batch.into_iter().zip(outputs) {
-                                    metrics.record_latency(req.enqueued.elapsed().as_secs_f64());
-                                    let _ = req.tx.send((req.id, Ok(out)));
-                                }
-                            }
+                    }
+                    Provider::Factory(factory) => {
+                        let model = match factory() {
+                            Ok(m) => m,
                             Err(e) => {
+                                eprintln!("worker {wi}: model load failed: {e:#}");
                                 metrics.errors.fetch_add(1, Ordering::Relaxed);
-                                let msg = format!("{e:#}");
-                                for req in batch {
-                                    let _ = req.tx.send((req.id, Err(msg.clone())));
-                                }
+                                return;
                             }
+                        };
+                        while let Some(batch) = batcher.next_batch() {
+                            run_batch(&model, batch, &metrics);
                         }
                     }
                 })
@@ -118,6 +187,7 @@ where
         let batcher = Arc::clone(&batcher);
         let metrics = Arc::clone(&metrics);
         let stop2 = Arc::clone(&stop);
+        let slot2 = slot.clone();
         let inputs_width = cfg.input_width;
         thread::Builder::new()
             .name("gs-serve-acceptor".into())
@@ -130,8 +200,9 @@ where
                     let _ = conn.set_nodelay(true); // JSON-lines RPC: Nagle hurts
                     let batcher = Arc::clone(&batcher);
                     let metrics = Arc::clone(&metrics);
+                    let slot = slot2.clone();
                     thread::spawn(move || {
-                        let _ = handle_connection(conn, &batcher, &metrics, inputs_width);
+                        let _ = handle_connection(conn, &batcher, &metrics, slot, inputs_width);
                     });
                 }
             })
@@ -143,6 +214,7 @@ where
         batcher,
         stop,
         metrics,
+        slot,
         workers,
         acceptor: Some(acceptor),
     })
@@ -152,6 +224,7 @@ fn handle_connection(
     conn: TcpStream,
     batcher: &Batcher,
     metrics: &Metrics,
+    slot: Option<Arc<ModelSlot>>,
     inputs_width: usize,
 ) -> Result<()> {
     let mut writer = conn.try_clone()?;
@@ -164,8 +237,15 @@ fn handle_connection(
         let reply = match Json::parse(&line) {
             Err(e) => Json::obj(vec![("error", Json::Str(format!("bad json: {e}")))]),
             Ok(msg) => match msg.get("op").and_then(Json::as_str) {
-                Some("ping") => Json::obj(vec![("ok", Json::Bool(true))]),
-                Some("stats") => stats_json(metrics),
+                Some("ping") => {
+                    let mut fields = vec![("ok", Json::Bool(true))];
+                    if let Some(slot) = &slot {
+                        fields.push(("version", Json::Num(slot.version() as f64)));
+                    }
+                    Json::obj(fields)
+                }
+                Some("stats") => stats_json(metrics, slot.as_deref()),
+                Some("swap") => handle_swap(&msg, slot.as_deref(), metrics),
                 Some("infer") => {
                     let id = msg.get("id").and_then(Json::as_f64).unwrap_or(0.0) as u64;
                     match msg.get("input").and_then(Json::to_f32_vec) {
@@ -210,7 +290,46 @@ fn handle_connection(
     Ok(())
 }
 
-fn stats_json(metrics: &Metrics) -> Json {
+/// `{"op":"swap","path":...}`: load + validate the artifact, instantiate
+/// it, and swap it into the slot. Traffic keeps flowing on the old
+/// version until the new one is installed; nothing is interrupted on
+/// failure (the error comes back on this connection, the slot keeps its
+/// current generation, and the failure is counted in `errors`).
+fn handle_swap(msg: &Json, slot: Option<&ModelSlot>, metrics: &Metrics) -> Json {
+    let Some(slot) = slot else {
+        return Json::obj(vec![(
+            "error",
+            Json::Str("hot swap unavailable: server runs factory-backed workers".into()),
+        )]);
+    };
+    let Some(path) = msg.get("path").and_then(Json::as_str) else {
+        return Json::obj(vec![(
+            "error",
+            Json::Str("swap requires a \"path\" to a .gsm artifact".into()),
+        )]);
+    };
+    match slot.swap_path(path) {
+        Ok(vm) => {
+            metrics.swaps.fetch_add(1, Ordering::Relaxed);
+            // Report the generation *this* request installed, not
+            // whatever a concurrent later swap made current.
+            let mut fields = vec![
+                ("ok", Json::Bool(true)),
+                ("version", Json::Num(vm.version as f64)),
+            ];
+            if let Some(p) = vm.precision() {
+                fields.push(("precision", Json::Str(p.name().into())));
+            }
+            Json::obj(fields)
+        }
+        Err(e) => {
+            metrics.swap_failures.fetch_add(1, Ordering::Relaxed);
+            Json::obj(vec![("error", Json::Str(format!("{e:#}")))])
+        }
+    }
+}
+
+fn stats_json(metrics: &Metrics, slot: Option<&ModelSlot>) -> Json {
     let mut fields = vec![
         (
             "requests",
@@ -229,7 +348,22 @@ fn stats_json(metrics: &Metrics) -> Json {
             "errors",
             Json::Num(metrics.errors.load(Ordering::Relaxed) as f64),
         ),
+        (
+            "swaps",
+            Json::Num(metrics.swaps.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "swap_failures",
+            Json::Num(metrics.swap_failures.load(Ordering::Relaxed) as f64),
+        ),
     ];
+    if let Some(slot) = slot {
+        let vm = slot.current();
+        fields.push(("model_version", Json::Num(vm.version as f64)));
+        if let Some(p) = vm.precision() {
+            fields.push(("precision", Json::Str(p.name().into())));
+        }
+    }
     if let Some(s) = metrics.latency_summary() {
         fields.push(("p50_ms", Json::Num(s.p50 * 1e3)));
         fields.push(("p95_ms", Json::Num(s.p95 * 1e3)));
@@ -287,5 +421,21 @@ impl Client {
 
     pub fn stats(&mut self) -> Result<Json> {
         self.roundtrip(Json::obj(vec![("op", "stats".into())]))
+    }
+
+    /// Hot-swap the served model to the artifact at `path`; returns the
+    /// new deployment version.
+    pub fn swap(&mut self, path: &str) -> Result<u64> {
+        let r = self.roundtrip(Json::obj(vec![
+            ("op", "swap".into()),
+            ("path", Json::Str(path.into())),
+        ]))?;
+        if let Some(err) = r.get("error").and_then(Json::as_str) {
+            anyhow::bail!("swap failed: {err}");
+        }
+        r.get("version")
+            .and_then(Json::as_f64)
+            .map(|v| v as u64)
+            .ok_or_else(|| anyhow::anyhow!("malformed swap response"))
     }
 }

@@ -44,6 +44,11 @@
 //!   [`gs_matmul_parallel_merge`] keeps the private-accumulate+merge
 //!   strategy for every pattern, as the benchmark baseline for the
 //!   direct-write path.
+//! * `*_bias` variants ([`gs_matmul_bias`], [`gs_matmul_parallel_bias`],
+//!   [`gs_matmul_parallel_merge_bias`]) fuse the output bias into the
+//!   accumulation: output rows are *seeded* with their bias before the
+//!   gather-FMA sweep, eliminating the separate post-pass over the
+//!   logits. All three forms remain bit-identical to one another.
 //!
 //! All kernels preserve the oracle's accumulation order per output row,
 //! so f32 plans match `gs_matvec` bit for bit (per batch column), and f16
@@ -475,10 +480,57 @@ fn exec_chunk_into_scalar(
     }
 }
 
-fn gs_matmul_impl(plan: &GsExecPlan, acts: &[f32], batch: usize, force_scalar: bool) -> Vec<f32> {
+/// The output buffer every spMM path accumulates into: zeros, or — with a
+/// fused bias — each row pre-seeded with its bias value, so `bias + Σ w·a`
+/// accumulates in one pass with no post-sweep over the logits. Rows not
+/// covered by any band (all-zero rows at the matrix tail) come out as
+/// exactly `bias[row]`.
+fn seeded_out(rows: usize, batch: usize, bias: Option<&[f32]>) -> Vec<f32> {
+    match bias {
+        None => vec![0.0f32; rows * batch],
+        Some(bias) => {
+            assert_eq!(bias.len(), rows, "bias length mismatch");
+            let mut out = Vec::with_capacity(rows * batch);
+            for &b in bias {
+                out.extend(std::iter::repeat(b).take(batch));
+            }
+            out
+        }
+    }
+}
+
+/// Seed one chunk's private accumulation buffer with the bias of each
+/// slot's global output row (the merge copy then carries `bias + Σ w·a`
+/// to the output — identical accumulation order to the direct-write and
+/// serial paths, hence bit-identical results).
+fn seed_local(
+    plan: &GsExecPlan,
+    batch: usize,
+    chunk: Chunk,
+    bias: Option<&[f32]>,
+    local: &mut [f32],
+) {
+    let Some(bias) = bias else { return };
+    let band_rows = plan.band_rows();
+    for band in chunk.band_lo..chunk.band_hi {
+        for slot in 0..band_rows {
+            let row = plan.slot_rows[band * band_rows + slot] as usize;
+            let dst = ((band - chunk.band_lo) * band_rows + slot) * batch;
+            local[dst..dst + batch].fill(bias[row]);
+        }
+    }
+}
+
+fn gs_matmul_impl(
+    plan: &GsExecPlan,
+    acts: &[f32],
+    batch: usize,
+    force_scalar: bool,
+    bias: Option<&[f32]>,
+) -> Vec<f32> {
     assert!(batch > 0, "gs_matmul with empty batch");
     assert_eq!(acts.len(), plan.cols * batch, "activation shape mismatch");
-    let mut out = vec![0.0f32; plan.rows * batch];
+    let mut out = seeded_out(plan.rows, batch, bias);
     let band_rows = plan.band_rows();
     let all = Chunk {
         band_lo: 0,
@@ -486,8 +538,10 @@ fn gs_matmul_impl(plan: &GsExecPlan, acts: &[f32], batch: usize, force_scalar: b
         groups: plan.ngroups(),
     };
     if plan.scatter {
-        // Accumulate band-local, then place rows through the rowmap.
+        // Accumulate band-local (bias-seeded through the rowmap), then
+        // place rows through the rowmap; uncovered rows keep their seed.
         let mut local = vec![0.0f32; plan.nbands() * band_rows * batch];
+        seed_local(plan, batch, all, bias, &mut local);
         if force_scalar {
             exec_chunk_into_scalar(plan, acts, batch, all, &mut local);
         } else {
@@ -510,7 +564,21 @@ fn gs_matmul_impl(plan: &GsExecPlan, acts: &[f32], batch: usize, force_scalar: b
 /// feature-major: `out[row*batch + r]`. For an f32 plan, column `r`
 /// equals `gs_matvec(gs, x_r)` bit for bit.
 pub fn gs_matmul(plan: &GsExecPlan, acts: &[f32], batch: usize) -> Vec<f32> {
-    gs_matmul_impl(plan, acts, batch, false)
+    gs_matmul_impl(plan, acts, batch, false, None)
+}
+
+/// [`gs_matmul`] with the output bias fused into the accumulation: row
+/// `row` of the result is `bias[row] + Σ w·a` computed in a single pass
+/// (the row is *seeded* with its bias, then accumulated in oracle order —
+/// no separate sweep over the logits). Serial, parallel direct-write, and
+/// parallel merge forms are all bit-identical.
+pub fn gs_matmul_bias(
+    plan: &GsExecPlan,
+    acts: &[f32],
+    batch: usize,
+    bias: Option<&[f32]>,
+) -> Vec<f32> {
+    gs_matmul_impl(plan, acts, batch, false, bias)
 }
 
 /// [`gs_matmul`] with the inner block pinned to the scalar loop even when
@@ -518,7 +586,7 @@ pub fn gs_matmul(plan: &GsExecPlan, acts: &[f32], batch: usize) -> Vec<f32> {
 /// path is bit-identical to the scalar fallback; without the feature the
 /// two functions run the same code.
 pub fn gs_matmul_scalar(plan: &GsExecPlan, acts: &[f32], batch: usize) -> Vec<f32> {
-    gs_matmul_impl(plan, acts, batch, true)
+    gs_matmul_impl(plan, acts, batch, true, None)
 }
 
 /// Copy one chunk's private accumulation into the global output through
@@ -565,16 +633,31 @@ pub fn gs_matmul_parallel(
     batch: usize,
     pool: &ThreadPool,
 ) -> Vec<f32> {
+    gs_matmul_parallel_bias(plan, acts, batch, None, pool)
+}
+
+/// [`gs_matmul_parallel`] with the output bias fused ([`gs_matmul_bias`]):
+/// the shared output buffer is bias-seeded before the chunk jobs
+/// accumulate into their disjoint spans (merge-path chunks seed their
+/// private buffers instead), so no pass over the logits follows the spMM.
+/// Bit-identical to the serial fused kernel at any worker count.
+pub fn gs_matmul_parallel_bias(
+    plan: &Arc<GsExecPlan>,
+    acts: &Arc<Vec<f32>>,
+    batch: usize,
+    bias: Option<&Arc<Vec<f32>>>,
+    pool: &ThreadPool,
+) -> Vec<f32> {
     assert!(batch > 0, "gs_matmul_parallel with empty batch");
     assert_eq!(acts.len(), plan.cols * batch, "activation shape mismatch");
     if plan.chunks.len() <= 1 {
-        return gs_matmul(plan, acts, batch);
+        return gs_matmul_bias(plan, acts, batch, bias.map(|b| b.as_slice()));
     }
     if plan.scatter {
-        return gs_matmul_parallel_merge(plan, acts, batch, pool);
+        return gs_matmul_parallel_merge_bias(plan, acts, batch, bias, pool);
     }
     let band_rows = plan.band_rows();
-    let mut out = vec![0.0f32; plan.rows * batch];
+    let mut out = seeded_out(plan.rows, batch, bias.map(|b| b.as_slice()));
     let base = OutPtr(out.as_mut_ptr());
     let plan2 = Arc::clone(plan);
     let acts2 = Arc::clone(acts);
@@ -603,22 +686,39 @@ pub fn gs_matmul_parallel_merge(
     batch: usize,
     pool: &ThreadPool,
 ) -> Vec<f32> {
+    gs_matmul_parallel_merge_bias(plan, acts, batch, None, pool)
+}
+
+/// [`gs_matmul_parallel_merge`] with the output bias fused: each chunk
+/// seeds its private accumulator with the bias of the rows it owns
+/// (through `slot_rows`), so the merge copy carries `bias + Σ w·a` and
+/// rows no chunk owns keep their seed in the shared buffer. Bit-identical
+/// to the serial and direct-write fused kernels.
+pub fn gs_matmul_parallel_merge_bias(
+    plan: &Arc<GsExecPlan>,
+    acts: &Arc<Vec<f32>>,
+    batch: usize,
+    bias: Option<&Arc<Vec<f32>>>,
+    pool: &ThreadPool,
+) -> Vec<f32> {
     assert!(batch > 0, "gs_matmul_parallel_merge with empty batch");
     assert_eq!(acts.len(), plan.cols * batch, "activation shape mismatch");
     let chunks: Vec<Chunk> = plan.chunks.clone();
     if chunks.len() <= 1 {
-        return gs_matmul(plan, acts, batch);
+        return gs_matmul_bias(plan, acts, batch, bias.map(|b| b.as_slice()));
     }
     let band_rows = plan.band_rows();
     let plan2 = Arc::clone(plan);
     let acts2 = Arc::clone(acts);
+    let bias2 = bias.map(Arc::clone);
     let locals = pool.map(chunks.clone(), move |chunk| {
         let rows = (chunk.band_hi - chunk.band_lo) * band_rows;
         let mut local = vec![0.0f32; rows * batch];
+        seed_local(&plan2, batch, chunk, bias2.as_ref().map(|b| b.as_slice()), &mut local);
         exec_chunk_into(&plan2, &acts2, batch, chunk, &mut local);
         local
     });
-    let mut out = vec![0.0f32; plan.rows * batch];
+    let mut out = seeded_out(plan.rows, batch, bias.map(|b| b.as_slice()));
     for (chunk, local) in chunks.iter().zip(&locals) {
         merge_chunk(plan, batch, *chunk, local, &mut out);
     }
@@ -778,6 +878,61 @@ mod tests {
                 assert_eq!(serial, merged, "{} {} merge", p.name(), precision.name());
             }
         }
+    }
+
+    #[test]
+    fn fused_bias_paths_bit_identical() {
+        let pool = ThreadPool::new(4);
+        for p in [Pattern::Gs { b: 8, k: 8 }, Pattern::GsScatter { b: 8, k: 2 }] {
+            for precision in [PlanPrecision::F32, PlanPrecision::F16] {
+                let (_, gs) = build_random_gs(64, 128, p, 0.7, 33).unwrap();
+                let plan = Arc::new(GsExecPlan::with_precision(&gs, 4, precision).unwrap());
+                let mut rng = Prng::new(34);
+                let bias = Arc::new(rng.normal_vec(64, 0.5));
+                let rows: Vec<Vec<f32>> = (0..6).map(|_| rng.normal_vec(128, 1.0)).collect();
+                let acts = Arc::new(to_feature_major(&rows, 128));
+                let serial = gs_matmul_bias(&plan, &acts, 6, Some(&bias));
+                let direct = gs_matmul_parallel_bias(&plan, &acts, 6, Some(&bias), &pool);
+                let merged = gs_matmul_parallel_merge_bias(&plan, &acts, 6, Some(&bias), &pool);
+                assert_eq!(serial, direct, "{} {} direct", p.name(), precision.name());
+                assert_eq!(serial, merged, "{} {} merge", p.name(), precision.name());
+                // Mathematically bias + Σw·a; only the rounding order
+                // differs from the unfused post-add.
+                let unfused = gs_matmul(&plan, &acts, 6);
+                for row in 0..64 {
+                    for r in 0..6 {
+                        let want = unfused[row * 6 + r] + bias[row];
+                        let got = serial[row * 6 + r];
+                        assert!(
+                            (got - want).abs() <= 1e-4 * (1.0 + want.abs()),
+                            "{} {} row {row} col {r}: {got} vs {want}",
+                            p.name(),
+                            precision.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_bias_seeds_untouched_rows() {
+        use crate::sparse::dense::Dense;
+        // All-zero matrix: no groups at all, so every output row must be
+        // exactly its bias seed, in every path.
+        let d = Dense::zeros(8, 16);
+        let gs = GsFormat::from_dense(&d, Pattern::Gs { b: 8, k: 8 }).unwrap();
+        let plan = Arc::new(GsExecPlan::with_chunks(&gs, 2).unwrap());
+        let bias = Arc::new((0..8).map(|i| i as f32 - 3.5).collect::<Vec<f32>>());
+        let acts = Arc::new(to_feature_major(&[vec![1.0f32; 16], vec![2.0f32; 16]], 16));
+        let want: Vec<f32> = bias.iter().flat_map(|&b| [b, b]).collect();
+        assert_eq!(gs_matmul_bias(&plan, &acts, 2, Some(&bias)), want);
+        let pool = ThreadPool::new(2);
+        assert_eq!(gs_matmul_parallel_bias(&plan, &acts, 2, Some(&bias), &pool), want);
+        assert_eq!(
+            gs_matmul_parallel_merge_bias(&plan, &acts, 2, Some(&bias), &pool),
+            want
+        );
     }
 
     #[test]

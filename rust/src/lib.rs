@@ -38,6 +38,9 @@
 //!   experiments (Figs. 1/5, Table I) on micro models.
 //! * [`coordinator`] — a serving layer (router, dynamic batcher, worker
 //!   pool, metrics) exposing sparse-model inference over TCP.
+//! * [`model_store`] — the `.gsm` versioned model artifact format
+//!   (checksummed writer + validating reader) and the `Arc`-swappable
+//!   [`model_store::ModelSlot`] behind zero-downtime weight hot-swap.
 //! * [`util`] / [`testing`] / [`bench`] — in-tree substrates (PRNG, JSON,
 //!   CLI, thread pool, stats, property testing, bench harness). The build
 //!   environment is offline, so these are implemented from scratch rather
@@ -46,6 +49,7 @@
 pub mod bench;
 pub mod coordinator;
 pub mod kernels;
+pub mod model_store;
 pub mod pruning;
 pub mod runtime;
 pub mod sim;

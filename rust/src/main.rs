@@ -1,11 +1,16 @@
-//! `gs-sparse` — leader binary: serve, train, simulate, inspect.
+//! `gs-sparse` — leader binary: serve, export, train, simulate, inspect.
 //!
 //! ```text
 //! gs-sparse serve    [--backend native|pjrt] [--bind 127.0.0.1:7070] [--workers 1]
-//!                    native: [--inputs 64] [--hidden 256] [--outputs 64] [--batch 16]
-//!                            [--b 16] [--k 16] [--sparsity 0.9] [--threads 0]
-//!                            [--precision f32|f16]
+//!                    native: [--model model.gsm]  (serve a .gsm artifact)
+//!                            or a random model from:
+//!                            [--inputs 64] [--hidden 256] [--outputs 64] [--batch 16]
+//!                            [--b 16] [--k 16] [--sparsity 0.9] [--seed 42]
+//!                            plus [--threads 0 (auto)] [--precision f32|f16]
 //!                    pjrt:   [--artifacts DIR]   (requires --features pjrt)
+//! gs-sparse export   --out model.gsm [--pattern GS|scatter] [--inputs 64]
+//!                    [--hidden 256] [--outputs 64] [--batch 16] [--b 16] [--k 16]
+//!                    [--sparsity 0.9] [--precision f32|f16] [--seed 42]
 //! gs-sparse train    --model gnmt|resnet|jasper [--pattern GS|Block|Irregular]
 //!                    [--b 8] [--k 8] [--sparsity 0.8] [--seed 42]   (pjrt only)
 //! gs-sparse simulate [--rows 1024] [--cols 1024] [--banks 16] [--sparsity 0.9]
@@ -13,27 +18,32 @@
 //! ```
 //!
 //! The default `serve` backend is the native execution engine
-//! (`kernels::exec`): it needs no artifacts and no XLA runtime. Build
-//! with `--features pjrt` (and the real `xla` crate) to serve through the
+//! (`kernels::exec`): it needs no XLA runtime. It serves through a
+//! versioned model slot, so `{"op":"swap","path":"new.gsm"}` over the
+//! TCP protocol hot-deploys a new `.gsm` artifact with zero downtime.
+//! `export` writes such artifacts (deterministic random pruned models —
+//! the same pipeline `serve` uses in-process). Build with
+//! `--features pjrt` (and the real `xla` crate) to serve through the
 //! Pallas AOT artifact instead.
 
 use anyhow::{anyhow, Result};
-use gs_sparse::coordinator::{serve, server::ServeConfig, SparseModel};
-use gs_sparse::kernels::exec::PlanPrecision;
+use gs_sparse::coordinator::{serve, serve_slot, server::ServeConfig, Engine, SparseModel};
+use gs_sparse::model_store::ModelArtifact;
 use gs_sparse::pruning::prune;
 use gs_sparse::sparse::{Dense, GsFormat, Pattern};
-use gs_sparse::testing::{build_random_model, ModelSpec};
+use gs_sparse::testing::{build_random_artifact, build_random_model, spec_from_args, ModelSpec};
 use gs_sparse::util::{Args, Prng};
 
 fn main() -> Result<()> {
     let args = Args::parse();
     match args.command.as_deref() {
         Some("serve") => cmd_serve(&args),
+        Some("export") => cmd_export(&args),
         Some("train") => cmd_train(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("info") => cmd_info(&args),
         _ => {
-            eprintln!("usage: gs-sparse <serve|train|simulate|info> [options]");
+            eprintln!("usage: gs-sparse <serve|export|train|simulate|info> [options]");
             Ok(())
         }
     }
@@ -52,54 +62,79 @@ fn parse_pattern(args: &Args) -> Result<Option<Pattern>> {
     })
 }
 
+/// The random-model spec shared by `serve --backend native` (without
+/// `--model`) and `export`: `ModelSpec::default()` with `--threads 0`
+/// (auto-detect) as the serving default, overridden by the shared CLI
+/// flags.
+fn native_spec(args: &Args) -> Result<ModelSpec> {
+    spec_from_args(
+        args,
+        ModelSpec {
+            threads: 0,
+            ..ModelSpec::default()
+        },
+    )
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let backend = args.get("backend", "native").to_string();
     let workers = args.usize("workers", 1);
+    // The banner reports what actually runs (0 = auto-detect).
+    let shown_workers = gs_sparse::util::threadpool::resolve_threads(workers);
     let bind = args.get("bind", "127.0.0.1:7070").to_string();
     let window_ms = args.usize("window-ms", 2) as u64;
 
-    let (factory, inputs, outputs, max_batch, banner): (
-        Box<dyn Fn() -> Result<SparseModel> + Send + Sync>,
-        usize,
-        usize,
-        usize,
-        String,
-    ) = match backend.as_str() {
-        "native" => {
-            let b = args.usize("b", 16);
-            let spec = ModelSpec {
-                inputs: args.usize("inputs", 64),
-                hidden: args.usize("hidden", 256),
-                outputs: args.usize("outputs", 64),
-                max_batch: args.usize("batch", 16),
-                pattern: Pattern::Gs {
-                    b,
-                    k: args.usize("k", b),
-                },
-                sparsity: args.f64("sparsity", 0.9),
-                threads: args.usize("threads", 0),
-                precision: PlanPrecision::parse(args.get("precision", "f32"))?,
-                seed: args.usize("seed", 42) as u64,
-            };
-            let banner = format!(
-                "native {} engine @ {:.0}% sparse output layer, {} plan{}",
-                spec.pattern.name(),
-                spec.sparsity * 100.0,
-                spec.precision.name(),
-                if spec.threads > 1 {
-                    format!(", {} kernel threads", spec.threads)
-                } else {
-                    String::new()
-                }
-            );
-            let (inputs, outputs, max_batch) = (spec.inputs, spec.outputs, spec.max_batch);
-            let factory = move || build_random_model(&spec).map(|bm| bm.model);
-            (Box::new(factory), inputs, outputs, max_batch, banner)
+    if backend == "native" {
+        // Slot-backed serving: one shared model, hot-swappable via
+        // {"op":"swap","path":"model.gsm"} with zero downtime.
+        let threads = args.usize("threads", 0);
+        let (model, source, banner) = match args.options.get("model") {
+            Some(path) => {
+                let artifact = ModelArtifact::load(path)?;
+                let banner = format!("artifact {path}: {}", artifact.describe());
+                (artifact.instantiate(threads)?, path.clone(), banner)
+            }
+            None => {
+                let spec = native_spec(args)?;
+                let banner = format!(
+                    "native {} engine @ {:.0}% sparse output layer, {} plan",
+                    spec.pattern.name(),
+                    spec.sparsity * 100.0,
+                    spec.precision.name(),
+                );
+                let model = build_random_model(&spec)?.model;
+                (model, "inline-random".to_string(), banner)
+            }
+        };
+        let (inputs, max_batch) = (model.inputs, model.max_batch);
+        let engine = Engine::new(model, &source, threads);
+        let handle = serve_slot(
+            &engine,
+            ServeConfig {
+                bind,
+                workers,
+                input_width: inputs,
+                max_batch,
+                window_ms,
+            },
+        )?;
+        println!(
+            "serving GS-sparse MLP on {} ({shown_workers} workers, batch {max_batch}, {banner}, version 1)",
+            handle.addr
+        );
+        println!(
+            "protocol: JSON lines — {{\"op\":\"infer\",\"id\":1,\"input\":[...{inputs} floats]}}, \
+             {{\"op\":\"swap\",\"path\":\"model.gsm\"}}, {{\"op\":\"stats\"}}"
+        );
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
         }
-        "pjrt" => pjrt_factory(args)?,
-        other => return Err(anyhow!("unknown backend {other} (native|pjrt)")),
-    };
+    }
 
+    if backend != "pjrt" {
+        return Err(anyhow!("unknown backend {backend} (native|pjrt)"));
+    }
+    let (factory, inputs, outputs, max_batch, banner) = pjrt_factory(args)?;
     let handle = serve(
         move || factory(),
         ServeConfig {
@@ -111,7 +146,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
     )?;
     println!(
-        "serving GS-sparse MLP on {} ({workers} workers, batch {max_batch}, {banner})",
+        "serving GS-sparse MLP on {} ({shown_workers} workers, batch {max_batch}, {banner})",
         handle.addr
     );
     println!("protocol: JSON lines — {{\"op\":\"infer\",\"id\":1,\"input\":[...{inputs} floats]}}");
@@ -119,6 +154,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+/// Build the deterministic random pruned model for the given spec and
+/// write it as a `.gsm` artifact — the deployable counterpart of
+/// `serve`'s in-process model (same seed ⇒ bit-identical logits).
+fn cmd_export(args: &Args) -> Result<()> {
+    let out = args.require("out")?;
+    // Export only needs the weights; keep the throwaway in-process model
+    // serial instead of auto-detecting a kernel pool.
+    let spec = ModelSpec {
+        threads: 1,
+        ..native_spec(args)?
+    };
+    let (artifact, _) = build_random_artifact(&spec)?;
+    artifact.save(out)?;
+    let bytes = std::fs::metadata(out)?.len();
+    println!("exported {out} ({bytes} bytes): {}", artifact.describe());
+    Ok(())
 }
 
 #[cfg(feature = "pjrt")]

@@ -1,0 +1,544 @@
+//! The `.gsm` model artifact: a self-describing binary serialization of
+//! one deployed sparse model (paper §V compact format + §X storage
+//! resolution, packaged for shipping).
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! [ 0.. 4)  magic  b"GSM1"
+//! [ 4.. 8)  u32    format version (= 1)
+//! [ 8..16)  u64    total file length in bytes (truncation check)
+//! [16..20)  u32    plan precision (0 = f32, 1 = f16)
+//! [20..24)  u32    inputs
+//! [24..28)  u32    max_batch
+//! [28..32)  u32    GS B
+//! [32..36)  u32    GS k
+//! [36..40)  u32    GS rows   (= outputs)
+//! [40..44)  u32    GS cols   (= hidden)
+//! [44..48)  u32    section count
+//! [48.. )   sections: { u32 tag; u64 byte length; payload }
+//! [-4.. )   u32    CRC-32 (IEEE) of every preceding byte
+//! ```
+//!
+//! Sections carry the per-layer tensors: dense input layer (`W1`, `B1`),
+//! the GS-compressed projection (`value`/`index`/`indptr` and, for
+//! scatter patterns, `rowmap`), the output bias (`B2`), and a free-form
+//! JSON metadata blob. Unknown tags are skipped (forward compatibility
+//! within a format version); missing mandatory tags, duplicate tags,
+//! length mismatches, bad magic, unsupported versions, truncation, and
+//! checksum failures are all **errors, not panics**.
+//!
+//! Weight values are stored as raw f32 bit patterns regardless of the
+//! declared plan precision: `GsExecPlan` quantizes at pack time, so a
+//! reloaded artifact rebuilds the exact same plan — `export → load →
+//! infer_batch` is bit-identical to the originating in-memory model at
+//! both precisions (and at any thread count, since every kernel is
+//! bit-identical serial vs parallel).
+
+use crate::coordinator::SparseModel;
+use crate::kernels::exec::PlanPrecision;
+use crate::sparse::format::GsFormat;
+use crate::util::crc32::crc32;
+use crate::util::json::Json;
+use anyhow::{bail, ensure, Context, Result};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"GSM1";
+const FORMAT_VERSION: u32 = 1;
+const HEADER_LEN: usize = 48;
+
+const TAG_W1: u32 = 1;
+const TAG_B1: u32 = 2;
+const TAG_GS_VALUE: u32 = 3;
+const TAG_GS_INDEX: u32 = 4;
+const TAG_GS_INDPTR: u32 = 5;
+const TAG_GS_ROWMAP: u32 = 6;
+const TAG_B2: u32 = 7;
+const TAG_META: u32 = 8;
+
+/// One deployable sparse model, decoupled from any execution plan: the
+/// raw tensors plus the precision the plan should be packed at.
+#[derive(Clone, Debug)]
+pub struct ModelArtifact {
+    pub inputs: usize,
+    pub max_batch: usize,
+    /// Packed-plan value resolution to instantiate with.
+    pub precision: PlanPrecision,
+    /// `[inputs, hidden]` row-major dense input layer.
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    /// GS compression of the `[outputs, hidden]` projection.
+    pub gs: GsFormat,
+    pub b2: Vec<f32>,
+    /// Free-form metadata (name, seed, provenance — not interpreted).
+    pub meta: Json,
+}
+
+impl ModelArtifact {
+    pub fn hidden(&self) -> usize {
+        self.gs.cols
+    }
+
+    pub fn outputs(&self) -> usize {
+        self.gs.rows
+    }
+
+    /// Assemble an artifact from raw parts, validating shapes.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_parts(
+        w1: Vec<f32>,
+        b1: Vec<f32>,
+        gs: GsFormat,
+        b2: Vec<f32>,
+        inputs: usize,
+        max_batch: usize,
+        precision: PlanPrecision,
+        meta: Json,
+    ) -> Result<ModelArtifact> {
+        gs.validate().context("artifact GS format invalid")?;
+        let (hidden, outputs) = (gs.cols, gs.rows);
+        ensure!(max_batch > 0, "max_batch must be positive");
+        ensure!(
+            w1.len() == inputs * hidden,
+            "w1 length {} != inputs*hidden {}",
+            w1.len(),
+            inputs * hidden
+        );
+        ensure!(b1.len() == hidden, "b1 length {} != hidden {hidden}", b1.len());
+        ensure!(b2.len() == outputs, "b2 length {} != outputs {outputs}", b2.len());
+        if precision == PlanPrecision::F16 {
+            ensure!(
+                hidden <= u16::MAX as usize + 1,
+                "f16 artifacts index columns with u16: hidden {hidden} > {}",
+                u16::MAX as usize + 1
+            );
+        }
+        Ok(ModelArtifact {
+            inputs,
+            max_batch,
+            precision,
+            w1,
+            b1,
+            gs,
+            b2,
+            meta,
+        })
+    }
+
+    /// Build the native serving model this artifact describes. `threads`
+    /// follows [`SparseModel::native`] semantics (0 = auto-detect).
+    pub fn instantiate(&self, threads: usize) -> Result<SparseModel> {
+        SparseModel::native(
+            self.w1.clone(),
+            self.b1.clone(),
+            &self.gs,
+            self.b2.clone(),
+            self.inputs,
+            self.max_batch,
+            threads,
+            self.precision,
+        )
+    }
+
+    /// One-line human summary (CLI banners, logs).
+    pub fn describe(&self) -> String {
+        format!(
+            "{}→{}→{} GS({},{}){} {} plan, {} nnz, batch {}",
+            self.inputs,
+            self.hidden(),
+            self.outputs(),
+            self.gs.b,
+            self.gs.k,
+            if self.gs.rowmap.is_some() { " scatter" } else { "" },
+            self.precision.name(),
+            self.gs.nnz(),
+            self.max_batch
+        )
+    }
+
+    // -- encoding -----------------------------------------------------------
+
+    /// Serialize to the `.gsm` byte format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut sections: Vec<(u32, Vec<u8>)> = vec![
+            (TAG_W1, f32_bytes(&self.w1)),
+            (TAG_B1, f32_bytes(&self.b1)),
+            (TAG_GS_VALUE, f32_bytes(&self.gs.value)),
+            (TAG_GS_INDEX, u32_bytes(&self.gs.index)),
+            (TAG_GS_INDPTR, u32_bytes(&self.gs.indptr)),
+        ];
+        if let Some(map) = &self.gs.rowmap {
+            sections.push((TAG_GS_ROWMAP, u32_bytes(map)));
+        }
+        sections.push((TAG_B2, f32_bytes(&self.b2)));
+        if self.meta != Json::Null {
+            sections.push((TAG_META, self.meta.to_string().into_bytes()));
+        }
+
+        let body_len: usize = sections.iter().map(|(_, p)| 12 + p.len()).sum();
+        let total = HEADER_LEN + body_len + 4;
+        let mut out = Vec::with_capacity(total);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        out.extend_from_slice(&(total as u64).to_le_bytes());
+        let precision_code: u32 = match self.precision {
+            PlanPrecision::F32 => 0,
+            PlanPrecision::F16 => 1,
+        };
+        for v in [
+            precision_code,
+            self.inputs as u32,
+            self.max_batch as u32,
+            self.gs.b as u32,
+            self.gs.k as u32,
+            self.gs.rows as u32,
+            self.gs.cols as u32,
+            sections.len() as u32,
+        ] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for (tag, payload) in &sections {
+            out.extend_from_slice(&tag.to_le_bytes());
+            out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+            out.extend_from_slice(payload);
+        }
+        let crc = crc32(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        debug_assert_eq!(out.len(), total);
+        out
+    }
+
+    /// Decode and validate a `.gsm` byte buffer.
+    pub fn from_bytes(bytes: &[u8]) -> Result<ModelArtifact> {
+        ensure!(
+            bytes.len() >= HEADER_LEN + 4,
+            "truncated artifact: {} bytes is smaller than the {}-byte header",
+            bytes.len(),
+            HEADER_LEN + 4
+        );
+        ensure!(
+            &bytes[0..4] == MAGIC,
+            "not a .gsm model artifact (bad magic {:02x?})",
+            &bytes[0..4]
+        );
+        let version = read_u32(bytes, 4);
+        ensure!(
+            version == FORMAT_VERSION,
+            "unsupported .gsm format version {version} (this build reads version {FORMAT_VERSION})"
+        );
+        let declared = read_u64(bytes, 8) as usize;
+        ensure!(
+            declared == bytes.len(),
+            "truncated or padded artifact: header declares {declared} bytes, file has {}",
+            bytes.len()
+        );
+        let stored_crc = read_u32(bytes, bytes.len() - 4);
+        let actual_crc = crc32(&bytes[..bytes.len() - 4]);
+        ensure!(
+            stored_crc == actual_crc,
+            "artifact checksum mismatch (stored {stored_crc:08x}, computed {actual_crc:08x}) — corrupt file"
+        );
+
+        let precision = match read_u32(bytes, 16) {
+            0 => PlanPrecision::F32,
+            1 => PlanPrecision::F16,
+            other => bail!("unknown plan precision code {other} (0 = f32, 1 = f16)"),
+        };
+        let inputs = read_u32(bytes, 20) as usize;
+        let max_batch = read_u32(bytes, 24) as usize;
+        let b = read_u32(bytes, 28) as usize;
+        let k = read_u32(bytes, 32) as usize;
+        let rows = read_u32(bytes, 36) as usize;
+        let cols = read_u32(bytes, 40) as usize;
+        let section_count = read_u32(bytes, 44) as usize;
+        ensure!(b > 0 && k > 0 && b % k == 0, "bad GS geometry B={b} k={k}");
+
+        // Walk the tagged sections (payload bounds are inside the
+        // CRC-covered region, but lengths are still checked — a reader
+        // must never index past the buffer, and header-declared counts
+        // must never drive allocations beyond what the file can hold).
+        let body = &bytes[HEADER_LEN..bytes.len() - 4];
+        ensure!(
+            section_count <= body.len() / 12,
+            "section count {section_count} cannot fit in a {}-byte body",
+            body.len()
+        );
+        // 8 tags are defined; 64 leaves generous room for future minor
+        // additions while keeping the per-section duplicate scan (and any
+        // crafted-file parse work) trivially bounded.
+        ensure!(
+            section_count <= 64,
+            "implausible section count {section_count} (max 64)"
+        );
+        let mut pos = 0usize;
+        let mut found: Vec<(u32, &[u8])> = Vec::with_capacity(section_count);
+        for s in 0..section_count {
+            ensure!(
+                pos + 12 <= body.len(),
+                "section {s} header runs past the end of the artifact"
+            );
+            let tag = read_u32(body, pos);
+            let len = read_u64(body, pos + 4) as usize;
+            pos += 12;
+            ensure!(
+                len <= body.len() - pos,
+                "section {s} (tag {tag}) payload of {len} bytes runs past the end of the artifact"
+            );
+            ensure!(
+                !found.iter().any(|&(t, _)| t == tag),
+                "duplicate section tag {tag}"
+            );
+            found.push((tag, &body[pos..pos + len]));
+            pos += len;
+        }
+        ensure!(
+            pos == body.len(),
+            "{} trailing bytes after the last section",
+            body.len() - pos
+        );
+
+        let w1 = f32_vec(section(&found, TAG_W1, "W1")?, inputs * cols, "W1")?;
+        let b1 = f32_vec(section(&found, TAG_B1, "B1")?, cols, "B1")?;
+        let value_raw = section(&found, TAG_GS_VALUE, "GS value")?;
+        ensure!(
+            value_raw.len() % (4 * b) == 0,
+            "GS value section ({} bytes) is not a whole number of {b}-wide groups",
+            value_raw.len()
+        );
+        let ngroups = value_raw.len() / (4 * b);
+        let value = f32_vec(value_raw, ngroups * b, "GS value")?;
+        let index = u32_vec(
+            section(&found, TAG_GS_INDEX, "GS index")?,
+            ngroups * b,
+            "GS index",
+        )?;
+        let indptr_raw = section(&found, TAG_GS_INDPTR, "GS indptr")?;
+        ensure!(
+            indptr_raw.len() >= 4 && indptr_raw.len() % 4 == 0,
+            "GS indptr section has invalid length {}",
+            indptr_raw.len()
+        );
+        let indptr = u32_vec(indptr_raw, indptr_raw.len() / 4, "GS indptr")?;
+        let nbands = indptr.len() - 1;
+        let rowmap = match found.iter().find(|&&(t, _)| t == TAG_GS_ROWMAP) {
+            Some(&(_, p)) => Some(u32_vec(p, nbands * (b / k), "GS rowmap")?),
+            None => None,
+        };
+        let b2 = f32_vec(section(&found, TAG_B2, "B2")?, rows, "B2")?;
+        let meta = match found.iter().find(|&&(t, _)| t == TAG_META) {
+            Some(&(_, p)) => {
+                let s = std::str::from_utf8(p).context("metadata section is not UTF-8")?;
+                Json::parse(s).context("metadata section is not valid JSON")?
+            }
+            None => Json::Null,
+        };
+
+        let gs = GsFormat {
+            b,
+            k,
+            rows,
+            cols,
+            value,
+            index,
+            indptr,
+            rowmap,
+        };
+        ModelArtifact::from_parts(w1, b1, gs, b2, inputs, max_batch, precision, meta)
+            .context("decoded artifact failed validation")
+    }
+
+    // -- file I/O -----------------------------------------------------------
+
+    /// Write the artifact to `path` (atomically: temp file + rename, so a
+    /// concurrent `swap` never observes a half-written artifact).
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let path = path.as_ref();
+        let bytes = self.to_bytes();
+        let tmp = path.with_extension("gsm.tmp");
+        std::fs::write(&tmp, &bytes)
+            .with_context(|| format!("write artifact temp file {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("rename artifact into place at {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Read and validate an artifact from `path`.
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<ModelArtifact> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("read model artifact {}", path.display()))?;
+        ModelArtifact::from_bytes(&bytes)
+            .with_context(|| format!("load model artifact {}", path.display()))
+    }
+}
+
+/// Find a mandatory section by tag.
+fn section<'a>(found: &[(u32, &'a [u8])], tag: u32, name: &str) -> Result<&'a [u8]> {
+    found
+        .iter()
+        .find(|&&(t, _)| t == tag)
+        .map(|&(_, p)| p)
+        .with_context(|| format!("artifact is missing the {name} section"))
+}
+
+// -- little-endian helpers (offsets pre-checked by callers) -----------------
+
+fn read_u32(bytes: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap())
+}
+
+fn read_u64(bytes: &[u8], at: usize) -> u64 {
+    u64::from_le_bytes(bytes[at..at + 8].try_into().unwrap())
+}
+
+fn f32_bytes(v: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 4);
+    for x in v {
+        out.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+    out
+}
+
+fn u32_bytes(v: &[u32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 4);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+// The `expect` counts below are products of header-declared u32 fields,
+// so they are compared against `payload.len() / 4` (never multiplied by
+// 4, which could wrap for hostile headers); the mismatch error fires
+// before any `expect`-sized allocation.
+
+fn f32_vec(payload: &[u8], expect: usize, name: &str) -> Result<Vec<f32>> {
+    ensure!(
+        payload.len() % 4 == 0 && payload.len() / 4 == expect,
+        "{name} section has {} bytes, expected {expect} f32 values",
+        payload.len(),
+    );
+    Ok(payload
+        .chunks_exact(4)
+        .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+        .collect())
+}
+
+fn u32_vec(payload: &[u8], expect: usize, name: &str) -> Result<Vec<u32>> {
+    ensure!(
+        payload.len() % 4 == 0 && payload.len() / 4 == expect,
+        "{name} section has {} bytes, expected {expect} u32 values",
+        payload.len(),
+    );
+    Ok(payload
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::pattern::Pattern;
+    use crate::testing::model::build_random_gs;
+
+    fn sample(precision: PlanPrecision, pattern: Pattern, seed: u64) -> ModelArtifact {
+        let (_, gs) = build_random_gs(16, 32, pattern, 0.75, seed).unwrap();
+        let (inputs, hidden, outputs) = (8usize, gs.cols, gs.rows);
+        let mut rng = crate::util::prng::Prng::new(seed ^ 0xA5);
+        ModelArtifact::from_parts(
+            rng.normal_vec(inputs * hidden, 0.1),
+            rng.normal_vec(hidden, 0.05),
+            gs,
+            rng.normal_vec(outputs, 0.1),
+            inputs,
+            4,
+            precision,
+            Json::obj(vec![("seed", Json::Num(seed as f64))]),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn bytes_roundtrip_exactly() {
+        for (precision, pattern) in [
+            (PlanPrecision::F32, Pattern::Gs { b: 8, k: 8 }),
+            (PlanPrecision::F16, Pattern::Gs { b: 8, k: 2 }),
+            (PlanPrecision::F32, Pattern::GsScatter { b: 8, k: 1 }),
+        ] {
+            let a = sample(precision, pattern, 5);
+            let bytes = a.to_bytes();
+            let b = ModelArtifact::from_bytes(&bytes).unwrap();
+            assert_eq!(a.w1, b.w1);
+            assert_eq!(a.b1, b.b1);
+            assert_eq!(a.gs, b.gs);
+            assert_eq!(a.b2, b.b2);
+            assert_eq!(a.inputs, b.inputs);
+            assert_eq!(a.max_batch, b.max_batch);
+            assert_eq!(a.precision, b.precision);
+            assert_eq!(a.meta, b.meta);
+            // Re-encoding the decode is byte-identical (canonical format).
+            assert_eq!(b.to_bytes(), bytes);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut bytes = sample(PlanPrecision::F32, Pattern::Gs { b: 8, k: 8 }, 1).to_bytes();
+        bytes[0] = b'X';
+        let err = ModelArtifact::from_bytes(&bytes).unwrap_err();
+        assert!(format!("{err:#}").contains("magic"), "{err:#}");
+    }
+
+    #[test]
+    fn rejects_unsupported_version() {
+        let mut bytes = sample(PlanPrecision::F32, Pattern::Gs { b: 8, k: 8 }, 2).to_bytes();
+        bytes[4] = 9; // version 9
+        let n = bytes.len();
+        let crc = crc32(&bytes[..n - 4]).to_le_bytes();
+        bytes[n - 4..].copy_from_slice(&crc); // keep the checksum honest
+        let err = ModelArtifact::from_bytes(&bytes).unwrap_err();
+        assert!(format!("{err:#}").contains("version"), "{err:#}");
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let bytes = sample(PlanPrecision::F32, Pattern::Gs { b: 8, k: 8 }, 3).to_bytes();
+        let err = ModelArtifact::from_bytes(&bytes[..bytes.len() / 2]).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+        let err = ModelArtifact::from_bytes(&bytes[..10]).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+    }
+
+    #[test]
+    fn rejects_corruption_via_checksum() {
+        let mut bytes = sample(PlanPrecision::F16, Pattern::Gs { b: 8, k: 8 }, 4).to_bytes();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        let err = ModelArtifact::from_bytes(&bytes).unwrap_err();
+        assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(ModelArtifact::from_bytes(&[]).is_err());
+        assert!(ModelArtifact::from_bytes(&[0u8; 64]).is_err());
+    }
+
+    #[test]
+    fn save_load_file_roundtrip() {
+        let a = sample(PlanPrecision::F32, Pattern::Gs { b: 8, k: 2 }, 6);
+        let path = std::env::temp_dir().join(format!("gsm-artifact-test-{}.gsm", std::process::id()));
+        a.save(&path).unwrap();
+        let b = ModelArtifact::load(&path).unwrap();
+        assert_eq!(a.gs, b.gs);
+        assert_eq!(a.w1, b.w1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn missing_file_is_a_clear_error() {
+        let err = ModelArtifact::load("/nonexistent/nowhere.gsm").unwrap_err();
+        assert!(format!("{err:#}").contains("nowhere.gsm"), "{err:#}");
+    }
+}

@@ -1,0 +1,24 @@
+//! Versioned model artifact store: serialize pruned models as
+//! self-describing binary artifacts and hot-swap them under live traffic.
+//!
+//! The paper's compact GS format (§V) and f16 storage resolution (§X)
+//! exist so pruned models can be *shipped*; this module is the shipping
+//! lane (cf. SparseDNN's deployable-artifact runtime):
+//!
+//! * [`artifact`] — the `.gsm` on-disk format: header + tagged per-layer
+//!   sections (dense input layer, GS `value`/`index`/`indptr`/`rowmap`,
+//!   biases, JSON metadata) with a length field and CRC-32 trailer. A
+//!   validating reader rebuilds [`ModelArtifact`] and instantiates
+//!   [`crate::coordinator::SparseModel`] — bit-identical logits to the
+//!   model the artifact was exported from, at f32 and f16 plan
+//!   precision, at any thread count.
+//! * [`store`] — [`ModelSlot`], the versioned `Arc`-swappable slot the
+//!   TCP server executes through (`{"op":"swap","path":...}` deploys a
+//!   new pruning with zero downtime), and [`ModelStore`], the named
+//!   registry of slots.
+
+pub mod artifact;
+pub mod store;
+
+pub use artifact::ModelArtifact;
+pub use store::{ModelSlot, ModelStore, VersionedModel};

@@ -1,0 +1,229 @@
+//! Versioned, `Arc`-swappable model slots and the named slot registry.
+//!
+//! A [`ModelSlot`] is the coordinator-level unit of zero-downtime
+//! deployment: serving workers take an `Arc` snapshot of the current
+//! [`VersionedModel`] once per batch, so a [`ModelSlot::swap`] installed
+//! under live traffic changes which model *future* batches execute while
+//! every in-flight batch keeps (and finishes on) the version it started
+//! with — no dropped connections, no torn batches, never two versions
+//! inside one batch. The displaced model is freed when its last in-flight
+//! batch drops its `Arc`.
+//!
+//! [`ModelStore`] is a named registry of slots — one slot per deployed
+//! model today (`"default"` for the TCP server), the substrate for
+//! multi-model and sharded serving later.
+
+use super::artifact::ModelArtifact;
+use crate::coordinator::SparseModel;
+use crate::kernels::exec::PlanPrecision;
+use anyhow::{ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// One deployed model generation.
+pub struct VersionedModel {
+    /// Monotonic deployment version, starting at 1.
+    pub version: u64,
+    pub model: SparseModel,
+    /// Where this generation came from (artifact path, "inline", …).
+    pub source: String,
+}
+
+impl VersionedModel {
+    /// Packed-plan precision of this generation (None for pjrt models).
+    pub fn precision(&self) -> Option<PlanPrecision> {
+        self.model.precision()
+    }
+}
+
+/// An atomically swappable slot holding the live model generation.
+pub struct ModelSlot {
+    current: RwLock<Arc<VersionedModel>>,
+    next_version: AtomicU64,
+    /// Kernel threads for models instantiated by [`ModelSlot::swap_path`]
+    /// (0 = auto-detect, per [`SparseModel::native`]).
+    threads: usize,
+    /// Frozen serving contract: every swapped-in model must accept the
+    /// same input width and at least the original batch capacity, so the
+    /// TCP front-end's admission checks stay valid across deployments.
+    input_width: usize,
+    min_batch: usize,
+}
+
+impl ModelSlot {
+    /// Create a slot serving `model` as version 1. `threads` is the
+    /// kernel-thread setting future [`ModelSlot::swap_path`] loads
+    /// instantiate with.
+    pub fn new(model: SparseModel, source: &str, threads: usize) -> ModelSlot {
+        let input_width = model.inputs;
+        let min_batch = model.max_batch;
+        ModelSlot {
+            current: RwLock::new(Arc::new(VersionedModel {
+                version: 1,
+                model,
+                source: source.to_string(),
+            })),
+            next_version: AtomicU64::new(2),
+            threads,
+            input_width,
+            min_batch,
+        }
+    }
+
+    /// Snapshot the live generation. Cheap (one `Arc` clone under a read
+    /// lock); callers execute whole batches against the snapshot.
+    pub fn current(&self) -> Arc<VersionedModel> {
+        Arc::clone(&self.current.read().unwrap())
+    }
+
+    /// The live deployment version.
+    pub fn version(&self) -> u64 {
+        self.current.read().unwrap().version
+    }
+
+    /// The input width every generation of this slot accepts.
+    pub fn input_width(&self) -> usize {
+        self.input_width
+    }
+
+    /// Install `model` as the next generation and return exactly the
+    /// generation that was installed (its version/precision — not
+    /// whatever a concurrent later swap may have made current).
+    /// Rejects models that would break the slot's serving contract.
+    pub fn swap(&self, model: SparseModel, source: &str) -> Result<Arc<VersionedModel>> {
+        ensure!(
+            model.inputs == self.input_width,
+            "swap rejected: new model takes {} inputs, slot serves {}",
+            model.inputs,
+            self.input_width
+        );
+        ensure!(
+            model.max_batch >= self.min_batch,
+            "swap rejected: new model max_batch {} < slot batch capacity {}",
+            model.max_batch,
+            self.min_batch
+        );
+        // Version assignment and installation happen under one write
+        // lock, so concurrent swaps install in strictly increasing
+        // version order (a later version is never overwritten by an
+        // earlier one).
+        let mut cur = self.current.write().unwrap();
+        let version = self.next_version.fetch_add(1, Ordering::SeqCst);
+        let vm = Arc::new(VersionedModel {
+            version,
+            model,
+            source: source.to_string(),
+        });
+        *cur = Arc::clone(&vm);
+        Ok(vm)
+    }
+
+    /// Load a `.gsm` artifact, instantiate it with the slot's thread
+    /// setting, and swap it in, returning the installed generation. The
+    /// load and plan pack happen *before* the write lock is taken, so
+    /// traffic never stalls on disk I/O.
+    pub fn swap_path(&self, path: &str) -> Result<Arc<VersionedModel>> {
+        let artifact = ModelArtifact::load(path)?;
+        let model = artifact
+            .instantiate(self.threads)
+            .with_context(|| format!("instantiate artifact {path}"))?;
+        self.swap(model, path)
+    }
+}
+
+/// Named registry of model slots.
+#[derive(Default)]
+pub struct ModelStore {
+    slots: RwLock<BTreeMap<String, Arc<ModelSlot>>>,
+}
+
+impl ModelStore {
+    pub fn new() -> ModelStore {
+        ModelStore::default()
+    }
+
+    /// Register (or replace) a named slot.
+    pub fn register(&self, name: &str, slot: Arc<ModelSlot>) {
+        self.slots.write().unwrap().insert(name.to_string(), slot);
+    }
+
+    /// Look up a slot by name.
+    pub fn get(&self, name: &str) -> Option<Arc<ModelSlot>> {
+        self.slots.read().unwrap().get(name).cloned()
+    }
+
+    /// Registered slot names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.slots.read().unwrap().keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::pattern::Pattern;
+    use crate::testing::model::{build_random_model, ModelSpec};
+
+    fn spec(seed: u64) -> ModelSpec {
+        ModelSpec {
+            inputs: 8,
+            hidden: 32,
+            outputs: 16,
+            max_batch: 4,
+            pattern: Pattern::Gs { b: 8, k: 8 },
+            sparsity: 0.75,
+            threads: 1,
+            seed,
+            ..ModelSpec::default()
+        }
+    }
+
+    #[test]
+    fn slot_versions_advance_and_snapshots_pin() {
+        let m1 = build_random_model(&spec(1)).unwrap().model;
+        let slot = ModelSlot::new(m1, "inline", 1);
+        assert_eq!(slot.version(), 1);
+        let pinned = slot.current();
+
+        let m2 = build_random_model(&spec(2)).unwrap().model;
+        let vm = slot.swap(m2, "inline-2").unwrap();
+        assert_eq!(vm.version, 2);
+        assert_eq!(slot.version(), 2);
+        // The old snapshot still serves version 1.
+        assert_eq!(pinned.version, 1);
+        assert_eq!(slot.current().source, "inline-2");
+    }
+
+    #[test]
+    fn slot_rejects_contract_breaking_models() {
+        let m1 = build_random_model(&spec(1)).unwrap().model;
+        let slot = ModelSlot::new(m1, "inline", 1);
+        // Different input width.
+        let narrow = build_random_model(&ModelSpec { inputs: 6, ..spec(3) }).unwrap().model;
+        assert!(slot.swap(narrow, "bad").is_err());
+        // Smaller batch capacity.
+        let small = build_random_model(&ModelSpec { max_batch: 2, ..spec(4) }).unwrap().model;
+        assert!(slot.swap(small, "bad").is_err());
+        assert_eq!(slot.version(), 1, "failed swaps must not bump the version");
+    }
+
+    #[test]
+    fn swap_path_surfaces_load_errors() {
+        let m1 = build_random_model(&spec(1)).unwrap().model;
+        let slot = ModelSlot::new(m1, "inline", 1);
+        let err = slot.swap_path("/nonexistent/model.gsm").unwrap_err();
+        assert!(format!("{err:#}").contains("model.gsm"), "{err:#}");
+        assert_eq!(slot.version(), 1);
+    }
+
+    #[test]
+    fn store_registers_and_lists() {
+        let store = ModelStore::new();
+        assert!(store.get("default").is_none());
+        let m = build_random_model(&spec(1)).unwrap().model;
+        store.register("default", Arc::new(ModelSlot::new(m, "inline", 1)));
+        assert!(store.get("default").is_some());
+        assert_eq!(store.names(), vec!["default".to_string()]);
+    }
+}

@@ -162,8 +162,9 @@ impl GsFormat {
         out
     }
 
-    /// Structural self-check: indptr monotonic & consistent, residues
-    /// within every group are a permutation of `0..b`, indices in range.
+    /// Structural self-check: indptr monotonic & consistent, bands fit
+    /// inside the matrix, residues within every group are a permutation
+    /// of `0..b`, indices in range.
     pub fn validate(&self) -> Result<()> {
         if self.value.len() != self.index.len() {
             bail!("value/index length mismatch");
@@ -173,6 +174,18 @@ impl GsFormat {
         }
         if *self.indptr.last().unwrap() as usize != self.ngroups() {
             bail!("indptr total != ngroups");
+        }
+        // Non-scatter: band slots map to rows by identity, so the banded
+        // range must fit (scatter rows are covered by the rowmap
+        // permutation check below). Guards `entry_row`/`to_dense` and the
+        // exec-plan row tables against hostile deserialized formats.
+        if self.rowmap.is_none() && self.nbands() * self.band_rows() > self.rows {
+            bail!(
+                "{} bands of {} rows exceed the matrix's {} rows",
+                self.nbands(),
+                self.band_rows(),
+                self.rows
+            );
         }
         for w in self.indptr.windows(2) {
             if w[1] < w[0] {

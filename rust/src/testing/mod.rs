@@ -12,7 +12,10 @@
 
 pub mod model;
 
-pub use model::{build_random_gs, build_random_model, BuiltModel, ModelSpec};
+pub use model::{
+    build_random_artifact, build_random_gs, build_random_model, spec_from_args, BuiltModel,
+    ModelSpec,
+};
 
 use crate::util::prng::Prng;
 

@@ -12,10 +12,13 @@
 
 use crate::coordinator::SparseModel;
 use crate::kernels::exec::PlanPrecision;
+use crate::model_store::ModelArtifact;
 use crate::pruning::prune;
 use crate::sparse::{Dense, GsFormat, Pattern};
+use crate::util::cli::Args;
+use crate::util::json::Json;
 use crate::util::prng::Prng;
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 /// Everything that determines a random serving model.
 #[derive(Clone, Debug)]
@@ -27,7 +30,9 @@ pub struct ModelSpec {
     /// GS compression pattern of the `[outputs, hidden]` projection.
     pub pattern: Pattern,
     pub sparsity: f64,
-    /// Kernel threads for the native engine (0/1 = serial).
+    /// Kernel threads for the native engine (1 = serial, 0 =
+    /// auto-detect the machine's parallelism, N = N threads). Results
+    /// are bit-identical at any setting.
     pub threads: usize,
     /// Packed-plan value storage resolution.
     pub precision: PlanPrecision,
@@ -43,11 +48,50 @@ impl Default for ModelSpec {
             max_batch: 16,
             pattern: Pattern::Gs { b: 16, k: 16 },
             sparsity: 0.9,
-            threads: 0,
+            threads: 1,
             precision: PlanPrecision::F32,
             seed: 42,
         }
     }
+}
+
+/// Overlay the shared CLI flags (`--inputs/--hidden/--outputs/--batch/`
+/// `--b/--k/--pattern GS|scatter/--sparsity/--threads/--precision/--seed`)
+/// on top of `base`, which supplies every default. The single
+/// args→[`ModelSpec`] mapping behind the `serve`/`export` CLI verbs and
+/// the serving examples — so their defaults cannot silently drift apart
+/// (the artifact-E2E CI step relies on `export` and `artifact_deploy`
+/// agreeing bit-for-bit).
+pub fn spec_from_args(args: &Args, base: ModelSpec) -> Result<ModelSpec> {
+    let (base_b, base_k) = match base.pattern {
+        Pattern::Gs { b, k } | Pattern::GsScatter { b, k } => (b, k),
+        _ => (16, 16),
+    };
+    let b = args.usize("b", base_b);
+    // An explicit --b without --k means k = b (the horizontal pattern);
+    // otherwise the base pattern's k is the default.
+    let k = args.usize("k", if args.options.contains_key("b") { b } else { base_k });
+    let base_pattern = if matches!(base.pattern, Pattern::GsScatter { .. }) {
+        "scatter"
+    } else {
+        "GS"
+    };
+    let pattern = match args.get("pattern", base_pattern) {
+        "GS" | "gs" => Pattern::Gs { b, k },
+        "GSscatter" | "scatter" => Pattern::GsScatter { b, k },
+        other => return Err(anyhow!("unknown model pattern {other} (GS|scatter)")),
+    };
+    Ok(ModelSpec {
+        inputs: args.usize("inputs", base.inputs),
+        hidden: args.usize("hidden", base.hidden),
+        outputs: args.usize("outputs", base.outputs),
+        max_batch: args.usize("batch", base.max_batch),
+        pattern,
+        sparsity: args.f64("sparsity", base.sparsity),
+        threads: args.usize("threads", base.threads),
+        precision: PlanPrecision::parse(args.get("precision", base.precision.name()))?,
+        seed: args.usize("seed", base.seed as usize) as u64,
+    })
 }
 
 /// A built model plus the raw weights behind it (for oracle recomputation
@@ -110,6 +154,30 @@ pub fn build_random_model(spec: &ModelSpec) -> Result<BuiltModel> {
     })
 }
 
+/// Build the deterministic random model *and* wrap the same weights as a
+/// `.gsm` [`ModelArtifact`] (metadata records the generating spec). The
+/// artifact's `instantiate` reproduces `BuiltModel::model` bit for bit.
+pub fn build_random_artifact(spec: &ModelSpec) -> Result<(ModelArtifact, BuiltModel)> {
+    let bm = build_random_model(spec)?;
+    let meta = Json::obj(vec![
+        ("generator", Json::Str("testing::build_random_artifact".into())),
+        ("seed", Json::Num(spec.seed as f64)),
+        ("pattern", Json::Str(spec.pattern.name())),
+        ("sparsity", Json::Num(spec.sparsity)),
+    ]);
+    let artifact = ModelArtifact::from_parts(
+        bm.w1.clone(),
+        bm.b1.clone(),
+        bm.gs.clone(),
+        bm.b2.clone(),
+        spec.inputs,
+        spec.max_batch,
+        spec.precision,
+        meta,
+    )?;
+    Ok((artifact, bm))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -139,6 +207,38 @@ mod tests {
         assert_eq!(base.w1, par.w1);
         assert_eq!(base.b1, par.b1);
         assert_eq!(base.proj, par.proj);
+    }
+
+    #[test]
+    fn spec_from_args_overlays_base_defaults() {
+        let argv = |s: &str| {
+            Args::parse_from(
+                std::iter::once("prog".to_string()).chain(s.split_whitespace().map(String::from)),
+            )
+        };
+        let spec = spec_from_args(
+            &argv("serve --hidden 128 --pattern scatter --b 8 --precision f16"),
+            ModelSpec::default(),
+        )
+        .unwrap();
+        assert_eq!(spec.hidden, 128);
+        assert_eq!(spec.pattern, Pattern::GsScatter { b: 8, k: 8 });
+        assert_eq!(spec.precision, PlanPrecision::F16);
+        assert_eq!(spec.inputs, 64, "untouched defaults come from the base spec");
+        assert_eq!(spec.threads, 1);
+
+        // Base values survive when the flag is absent…
+        let base = ModelSpec {
+            threads: 0,
+            seed: 7,
+            ..ModelSpec::default()
+        };
+        let spec = spec_from_args(&argv("serve"), base).unwrap();
+        assert_eq!(spec.threads, 0);
+        assert_eq!(spec.seed, 7);
+
+        // …and unsupported patterns are rejected.
+        assert!(spec_from_args(&argv("serve --pattern Block"), ModelSpec::default()).is_err());
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! submodule is self-contained and unit-tested.
 
 pub mod cli;
+pub mod crc32;
 pub mod f16;
 pub mod json;
 pub mod prng;
@@ -14,6 +15,7 @@ pub mod stats;
 pub mod threadpool;
 
 pub use cli::Args;
+pub use crc32::{crc32, Crc32};
 pub use f16::{f16_bits_to_f32, f16_round, f32_to_f16_bits};
 pub use json::Json;
 pub use prng::Prng;

@@ -173,6 +173,22 @@ impl ThreadPool {
     }
 }
 
+/// Resolve a requested thread/worker count: `0` means "auto-detect" and
+/// maps to [`std::thread::available_parallelism`] (1 if unknown); any
+/// other value is taken literally. Used by `SparseModel::native` kernel
+/// threads and the serving coordinator's worker count, so `--threads 0` /
+/// `workers: 0` size themselves to the machine instead of silently
+/// running serial.
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    } else {
+        requested
+    }
+}
+
 /// Partition `0..total` into at most `njobs` contiguous, near-equal,
 /// non-empty spans — the work-split helper behind the pool-parallel
 /// stages (dense feature spans, bias batch spans).
@@ -264,6 +280,13 @@ mod tests {
     fn pool_is_send_and_sync() {
         fn assert_send_sync<T: Send + Sync>() {}
         assert_send_sync::<ThreadPool>();
+    }
+
+    #[test]
+    fn resolve_threads_auto_detects_zero() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(1), 1);
+        assert_eq!(resolve_threads(7), 7);
     }
 
     #[test]

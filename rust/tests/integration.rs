@@ -5,7 +5,7 @@
 //! PJRT artifacts only compile with `--features pjrt` and skip with a
 //! message when `artifacts/` has not been built (`make artifacts`).
 
-use gs_sparse::coordinator::{serve, server::ServeConfig, Client, UniformGs};
+use gs_sparse::coordinator::{serve, serve_slot, server::ServeConfig, Client, Engine, UniformGs};
 use gs_sparse::kernels::exec::PlanPrecision;
 use gs_sparse::kernels::native::gs_matvec;
 use gs_sparse::pruning::prune;
@@ -89,7 +89,7 @@ fn oracle_forward(
 /// the oracle path's outputs, serial and parallel, across batch sizes.
 #[test]
 fn native_infer_batch_matches_oracle_path() {
-    for threads in [0usize, 4] {
+    for threads in [1usize, 4] {
         let bm = native_model(threads, 77);
         assert_eq!(bm.model.backend_name(), "native");
         let mut rng = Prng::new(5);
@@ -116,7 +116,7 @@ fn native_infer_batch_matches_oracle_path() {
 #[test]
 fn native_backends_serial_parallel_identical() {
     for precision in [PlanPrecision::F32, PlanPrecision::F16] {
-        let serial = native_model_at(0, 123, precision);
+        let serial = native_model_at(1, 123, precision);
         let parallel = native_model_at(4, 123, precision);
         let mut rng = Prng::new(6);
         let rows: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(24, 1.0)).collect();
@@ -133,8 +133,8 @@ fn native_backends_serial_parallel_identical() {
 /// f32-plan model on the same weights.
 #[test]
 fn native_f16_model_tracks_f32() {
-    let f32m = native_model(0, 9);
-    let f16m = native_model_at(0, 9, PlanPrecision::F16);
+    let f32m = native_model(1, 9);
+    let f16m = native_model_at(1, 9, PlanPrecision::F16);
     let mut rng = Prng::new(10);
     let rows: Vec<Vec<f32>> = (0..6).map(|_| rng.normal_vec(24, 1.0)).collect();
     let a = f32m.model.infer_batch(&rows).unwrap();
@@ -147,12 +147,13 @@ fn native_f16_model_tracks_f32() {
 }
 
 /// Full serving stack on the native engine: TCP server, batcher, worker,
-/// JSON protocol — no artifacts required.
+/// JSON protocol — through the versioned model slot (the primary native
+/// path) — no artifacts required.
 #[test]
 fn serving_roundtrip_and_batching() {
-    let factory = || Ok(native_model(0, 11).model);
-    let handle = serve(
-        factory,
+    let engine = Engine::new(native_model(1, 11).model, "inline", 1);
+    let handle = serve_slot(
+        &engine,
         ServeConfig {
             bind: "127.0.0.1:0".into(),
             workers: 1,
@@ -162,6 +163,7 @@ fn serving_roundtrip_and_batching() {
         },
     )
     .unwrap();
+    assert_eq!(handle.slot.as_ref().unwrap().version(), 1);
 
     let mut client = Client::connect(handle.addr).unwrap();
     assert!(client.ping().unwrap());
@@ -186,7 +188,7 @@ fn serving_roundtrip_and_batching() {
 /// Wrong-width input is rejected with an error, not a crash.
 #[test]
 fn serving_rejects_bad_input() {
-    let factory = || Ok(native_model(0, 21).model);
+    let factory = || Ok(native_model(1, 21).model);
     let handle = serve(
         factory,
         ServeConfig {
