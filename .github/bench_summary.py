@@ -1,0 +1,81 @@
+#!/usr/bin/env python3
+"""Summarize BENCH_native.json in the CI job log.
+
+Prints the two deltas the ROADMAP asks after:
+  * f16 vs f32 packed-plan throughput (per kernel, geometric mean over
+    matching pattern/sparsity/batch cells) and plan bytes;
+  * direct-write vs accumulate+merge parallel spMM (matmul_par vs
+    matmul_par_merge) per pattern.
+"""
+import json
+import math
+import sys
+from collections import defaultdict
+
+
+def geomean(xs):
+    xs = [x for x in xs if x > 0]
+    if not xs:
+        return float("nan")
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+
+def main(path):
+    with open(path) as f:
+        doc = json.load(f)
+    cfg = doc.get("config", {})
+    print(
+        f"bench config: {cfg.get('rows')}x{cfg.get('cols')} B={cfg.get('b')} "
+        f"threads={cfg.get('threads')} reps={cfg.get('reps')} "
+        f"quick={cfg.get('quick')} simd={cfg.get('simd')}"
+    )
+
+    # cell -> kernel -> rows_per_s, keyed by (pattern, sparsity, batch).
+    cells = defaultdict(dict)
+    for r in doc.get("results", []):
+        key = (r["pattern"], r["sparsity"], r["batch"])
+        cells[key].setdefault(r["kernel"], {})[r["precision"]] = r["rows_per_s"]
+
+    print("\n== f16 vs f32 throughput (rows/s ratio, geomean over cells) ==")
+    by_kernel = defaultdict(list)
+    for key, kernels in cells.items():
+        for kernel, prec in kernels.items():
+            if "f32" in prec and "f16" in prec and prec["f32"] > 0:
+                by_kernel[kernel].append(prec["f16"] / prec["f32"])
+    for kernel in sorted(by_kernel):
+        g = geomean(by_kernel[kernel])
+        print(f"  {kernel:18s} f16/f32 = {g:.3f}x  ({len(by_kernel[kernel])} cells)")
+
+    print("\n== packed plan bytes (f16 vs f32) ==")
+    for p in doc.get("plans", []):
+        ratio = p["f16_bytes"] / p["f32_bytes"] if p["f32_bytes"] else float("nan")
+        print(
+            f"  {p['pattern']:14s} sparsity {p['sparsity']:<4} "
+            f"f32 {int(p['f32_bytes']):>9}  f16 {int(p['f16_bytes']):>9}  ratio {ratio:.2f}"
+        )
+
+    print("\n== direct-write vs merge parallel spMM (matmul_par / matmul_par_merge) ==")
+    by_pattern = defaultdict(list)
+    for (pattern, sparsity, batch), kernels in cells.items():
+        for prec in ("f32", "f16"):
+            par = kernels.get("matmul_par", {}).get(prec)
+            merge = kernels.get("matmul_par_merge", {}).get(prec)
+            if par and merge and merge > 0:
+                by_pattern[pattern].append(par / merge)
+    for pattern in sorted(by_pattern):
+        g = geomean(by_pattern[pattern])
+        print(
+            f"  {pattern:14s} direct/merge = {g:.3f}x  "
+            f"({len(by_pattern[pattern])} cells)"
+        )
+
+    print("\n== best speedup vs scalar, per pattern ==")
+    best = defaultdict(float)
+    for r in doc.get("results", []):
+        best[r["pattern"]] = max(best[r["pattern"]], r.get("speedup_vs_scalar", 0.0))
+    for pattern in sorted(best):
+        print(f"  {pattern:14s} {best[pattern]:.2f}x")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "BENCH_native.json")

@@ -1,0 +1,235 @@
+//! Multi-model routed serving E2E: two models with **different
+//! geometries** served concurrently from one TCP server, routed by the
+//! protocol's `"model"` field; runtime `load` of a third model under a
+//! capacity bound (LRU-evicting the coldest), evict → reload restoring
+//! bit-identical serving, hot-swap of a non-default slot, `unload`, and
+//! per-model `stats`/`models` introspection — the CI acceptance drive
+//! for the routed engine (exits non-zero on any mismatch).
+//!
+//! ```text
+//! cargo run --release --example multi_model_serve -- \
+//!     [--alpha a.gsm] [--beta b.gsm] [--threads 2] [--seed 42]
+//! ```
+//!
+//! With `--alpha`/`--beta`, those artifacts are served from disk (e.g.
+//! written by `gs-sparse export`; alpha must match the default export
+//! spec at `--seed`, beta the spec printed below at `--seed`+1) — served
+//! logits are still diffed against independently rebuilt in-memory
+//! models, cross-checking the CLI export path against the library.
+
+use gs_sparse::coordinator::{serve_store, server::ServeConfig, Client, Engine};
+use gs_sparse::model_store::{ModelSlot, ModelStore};
+use gs_sparse::testing::{build_random_artifact, BuiltModel, ModelSpec};
+use gs_sparse::util::{Args, Json, Prng};
+use std::sync::Arc;
+
+/// Beta intentionally differs from alpha in *every* geometry field, so
+/// routing mistakes cannot produce a well-formed response.
+fn beta_spec(seed: u64) -> ModelSpec {
+    ModelSpec {
+        inputs: 20,
+        hidden: 96,
+        outputs: 24,
+        max_batch: 8,
+        pattern: gs_sparse::sparse::Pattern::Gs { b: 8, k: 8 },
+        sparsity: 0.8,
+        seed,
+        ..ModelSpec::default()
+    }
+}
+
+/// Build the reference model + artifact; write the artifact unless a
+/// pre-exported path was supplied.
+fn model_files(
+    args: &Args,
+    flag: &str,
+    spec: &ModelSpec,
+    tmp: &std::path::Path,
+) -> anyhow::Result<(String, BuiltModel)> {
+    let (artifact, bm) = build_random_artifact(spec)?;
+    let path = match args.options.get(flag) {
+        Some(p) => p.clone(),
+        None => {
+            let p = tmp.join(format!("gsm-mm-{flag}-{}.gsm", std::process::id()));
+            artifact.save(&p)?;
+            p.display().to_string()
+        }
+    };
+    Ok((path, bm))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let seed = args.usize("seed", 42) as u64;
+    let threads = args.usize("threads", 2);
+    let tmp = std::env::temp_dir();
+
+    let alpha_spec = ModelSpec { seed, ..ModelSpec::default() };
+    let (alpha_path, bm_alpha) = model_files(&args, "alpha", &alpha_spec, &tmp)?;
+    let (beta_path, bm_beta) = model_files(&args, "beta", &beta_spec(seed + 1), &tmp)?;
+    // gamma (runtime-loaded) and beta-v2 (non-default hot swap target)
+    // are always exported in-process.
+    let (gamma_art, _bm_gamma) =
+        build_random_artifact(&ModelSpec { seed: seed + 2, ..ModelSpec::default() })?;
+    let gamma_path = tmp.join(format!("gsm-mm-gamma-{}.gsm", std::process::id()));
+    gamma_art.save(&gamma_path)?;
+    let (beta2_art, bm_beta2) = build_random_artifact(&beta_spec(seed + 3))?;
+    let beta2_path = tmp.join(format!("gsm-mm-beta2-{}.gsm", std::process::id()));
+    beta2_art.save(&beta2_path)?;
+
+    // Capacity 2 with "alpha" pinned: loading gamma must evict beta.
+    let store = Arc::new(ModelStore::with_capacity(2, "alpha"));
+    let a1 = gs_sparse::model_store::ModelArtifact::load(&alpha_path)?;
+    let b1 = gs_sparse::model_store::ModelArtifact::load(&beta_path)?;
+    println!("alpha: {}", a1.describe());
+    println!("beta:  {}", b1.describe());
+    store.register("alpha", Arc::new(ModelSlot::new(a1.instantiate(threads)?, &alpha_path, threads)))?;
+    store.register("beta", Arc::new(ModelSlot::new(b1.instantiate(threads)?, &beta_path, threads)))?;
+    let engine = Engine::from_store(store, "alpha", threads)?;
+    let handle = serve_store(
+        &engine,
+        ServeConfig {
+            bind: "127.0.0.1:0".into(),
+            workers: 2,
+            input_width: bm_alpha.model.inputs,
+            max_batch: bm_alpha.model.max_batch.max(bm_beta.model.max_batch),
+            window_ms: 1,
+        },
+    )?;
+    let addr = handle.addr;
+
+    // Per-model probes + reference logits from the in-memory models.
+    let mut rng = Prng::new(777);
+    let probes_a: Vec<Vec<f32>> =
+        (0..6).map(|_| rng.normal_vec(bm_alpha.model.inputs, 1.0)).collect();
+    let probes_b: Vec<Vec<f32>> =
+        (0..6).map(|_| rng.normal_vec(bm_beta.model.inputs, 1.0)).collect();
+    let want_a = bm_alpha.model.infer_batch(&probes_a)?;
+    let want_b = bm_beta.model.infer_batch(&probes_b)?;
+    let want_b2 = bm_beta2.model.infer_batch(&probes_b)?;
+
+    let mut client = Client::connect(addr)?;
+    anyhow::ensure!(client.ping()?, "ping failed");
+
+    // 1. Routing isolation under concurrency: clients hammer both
+    // models at once; every response must be bit-identical to its own
+    // model — different widths/geometries mean a crossed route cannot
+    // even match shape.
+    let hammer = |name: &'static str, probes: Vec<Vec<f32>>, want: Vec<Vec<f32>>| {
+        std::thread::spawn(move || -> anyhow::Result<()> {
+            let mut c = Client::connect(addr)?;
+            for round in 0..20 {
+                let i = round % probes.len();
+                let got = c.infer_model(name, &probes[i])?;
+                anyhow::ensure!(
+                    got == want[i],
+                    "{name} probe {i}: routed response differs from in-memory model"
+                );
+            }
+            Ok(())
+        })
+    };
+    let ha = hammer("alpha", probes_a.clone(), want_a.clone());
+    let hb = hammer("beta", probes_b.clone(), want_b.clone());
+    ha.join().expect("alpha client panicked")?;
+    hb.join().expect("beta client panicked")?;
+    // Unqualified infer routes to the default (alpha).
+    anyhow::ensure!(client.infer(&probes_a[0])? == want_a[0], "default route != alpha");
+    println!("routing OK: 40 concurrent routed responses bit-identical, default route = alpha");
+
+    // 2. Registry introspection.
+    let models = client.models()?;
+    anyhow::ensure!(
+        models.get("default").and_then(Json::as_str) == Some("alpha"),
+        "models default != alpha"
+    );
+    let entries = models.get("models").unwrap();
+    let beta_entry = entries.get("beta").expect("beta listed");
+    anyhow::ensure!(
+        beta_entry.get("inputs").and_then(Json::as_usize) == Some(bm_beta.model.inputs),
+        "beta geometry wrong in models listing"
+    );
+    println!("models OK: {}", models.to_string());
+
+    // 3. Unknown model → clean JSON error.
+    let err = client.infer_model("nope", &probes_a[0]).unwrap_err();
+    anyhow::ensure!(format!("{err}").contains("unknown model"), "bad unknown-model error: {err}");
+
+    // 4. Keep beta cold, alpha warm, then load gamma into the full
+    // store: LRU must evict beta (alpha is pinned anyway).
+    client.infer(&probes_a[0])?;
+    let (version, evicted) = client.load("gamma", &gamma_path.display().to_string())?;
+    anyhow::ensure!(version == 1, "fresh gamma slot must be version 1");
+    anyhow::ensure!(evicted == vec!["beta".to_string()], "expected beta evicted, got {evicted:?}");
+    let err = client.infer_model("beta", &probes_b[0]).unwrap_err();
+    anyhow::ensure!(format!("{err}").contains("unknown model"), "evicted beta still routable");
+    println!("eviction OK: load gamma under --max-models 2 evicted cold beta");
+
+    // 5. Evict → reload roundtrip: warm alpha so gamma is coldest,
+    // reload beta, and serving must be bit-identical to before.
+    client.infer(&probes_a[0])?;
+    let (_, evicted) = client.load("beta", &beta_path)?;
+    anyhow::ensure!(evicted == vec!["gamma".to_string()], "expected gamma evicted, got {evicted:?}");
+    for (i, probe) in probes_b.iter().enumerate() {
+        anyhow::ensure!(
+            client.infer_model("beta", probe)? == want_b[i],
+            "reloaded beta probe {i} not bit-identical"
+        );
+    }
+    println!("reload OK: evict → reload beta restored bit-identical serving");
+
+    // 6. Hot-swap the non-default slot while alpha keeps serving.
+    let v = client.swap_model("beta", &beta2_path.display().to_string())?;
+    anyhow::ensure!(v == 2, "beta swap should land version 2, got {v}");
+    for (i, probe) in probes_b.iter().enumerate() {
+        anyhow::ensure!(
+            client.infer_model("beta", probe)? == want_b2[i],
+            "swapped beta probe {i} != beta-v2 in-memory model"
+        );
+    }
+    anyhow::ensure!(client.infer(&probes_a[0])? == want_a[0], "alpha disturbed by beta swap");
+    println!("swap OK: non-default slot hot-swapped to v2, alpha undisturbed");
+
+    // 7. Per-model stats keep the historical global keys.
+    let stats = client.stats()?;
+    anyhow::ensure!(stats.get("requests").is_some(), "global requests key missing");
+    anyhow::ensure!(
+        stats.get("model_version").and_then(Json::as_f64) == Some(1.0),
+        "default (alpha) model_version should still be 1"
+    );
+    let per = stats.get("models").expect("per-model stats");
+    let beta_stats = per.get("beta").expect("beta stats entry");
+    anyhow::ensure!(
+        beta_stats.get("version").and_then(Json::as_f64) == Some(2.0),
+        "beta per-model version != 2"
+    );
+    anyhow::ensure!(
+        beta_stats.get("swaps").and_then(Json::as_f64) == Some(1.0),
+        "beta per-model swaps != 1"
+    );
+    anyhow::ensure!(
+        beta_stats.get("last_used_s").is_some(),
+        "beta last_used_s missing"
+    );
+    println!("stats OK: {}", stats.to_string());
+
+    // 8. Unload beta; the pinned default is refused.
+    client.unload("beta")?;
+    let err = client.infer_model("beta", &probes_b[0]).unwrap_err();
+    anyhow::ensure!(format!("{err}").contains("unknown model"), "unloaded beta still routable");
+    let err = client.unload("alpha").unwrap_err();
+    anyhow::ensure!(format!("{err}").contains("pinned"), "pinned default must refuse unload: {err}");
+
+    handle.stop();
+    for p in [&gamma_path, &beta2_path] {
+        let _ = std::fs::remove_file(p);
+    }
+    if args.options.get("alpha").is_none() {
+        let _ = std::fs::remove_file(&alpha_path);
+    }
+    if args.options.get("beta").is_none() {
+        let _ = std::fs::remove_file(&beta_path);
+    }
+    println!("multi-model serve E2E passed");
+    Ok(())
+}

@@ -1,8 +1,18 @@
 //! Dynamic batcher: requests queue until the batch fills or a latency
 //! window expires (the vLLM-router-style admission loop, scaled to this
 //! artifact's static batch).
+//!
+//! Multi-model routing: every request carries the slot it was admitted
+//! against, and a formed batch is always **model-homogeneous** — the
+//! oldest queued request picks the slot, and only requests for the same
+//! slot join its batch (models have different input widths; a mixed
+//! batch could not execute). Requests for other models stay queued in
+//! arrival order and form their own batches (per-model FIFO is
+//! preserved; each `next_batch` call serves the current queue head, so
+//! no model can starve another indefinitely).
 
 use super::metrics::Metrics;
+use crate::model_store::ModelSlot;
 use std::collections::VecDeque;
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
@@ -15,6 +25,42 @@ pub struct InferRequest {
     pub enqueued: Instant,
     /// Where the result row goes (error as Err-string).
     pub tx: Sender<(u64, Result<Vec<f32>, String>)>,
+    /// Slot name this request routed to (metrics key; "" in factory
+    /// mode, where there is exactly one anonymous model).
+    pub model: String,
+    /// The slot resolved at admission time. Holding the `Arc` here is
+    /// what makes LRU eviction graceful: a request admitted before an
+    /// eviction executes on its slot even after the registry dropped it.
+    /// None in factory mode (workers own their model instance).
+    pub slot: Option<Arc<ModelSlot>>,
+    /// Per-model batch-size cap (the slot's serving-contract capacity);
+    /// `usize::MAX` defers entirely to the batcher's global cap.
+    pub cap: usize,
+}
+
+impl InferRequest {
+    /// An unrouted request (factory mode, tests): no slot, no per-model
+    /// cap.
+    pub fn new(id: u64, input: Vec<f32>, tx: Sender<(u64, Result<Vec<f32>, String>)>) -> Self {
+        InferRequest {
+            id,
+            input,
+            enqueued: Instant::now(),
+            tx,
+            model: String::new(),
+            slot: None,
+            cap: usize::MAX,
+        }
+    }
+
+    /// Batch-homogeneity key: the slot identity (requests admitted
+    /// against the same slot `Arc` may share a batch). Keying on the
+    /// `Arc` pointer rather than the name means a request admitted
+    /// before a same-named slot was replaced never shares a batch with
+    /// requests for the replacement.
+    fn batch_key(&self) -> usize {
+        self.slot.as_ref().map_or(0, |s| Arc::as_ptr(s) as usize)
+    }
 }
 
 struct QueueState {
@@ -50,7 +96,11 @@ impl Batcher {
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let mut st = self.state.lock().unwrap();
         st.queue.push_back(req);
-        self.nonempty.notify_one();
+        // notify_all, not notify_one: a single wake could be consumed by
+        // a worker window-waiting on a *different* model (it re-counts
+        // its own matches and keeps waiting), leaving an idle worker
+        // asleep while this request sits queued.
+        self.nonempty.notify_all();
     }
 
     /// Stop all workers after the queue drains.
@@ -61,50 +111,88 @@ impl Batcher {
     }
 
     /// Block for the next batch: waits for a first request, then gives
-    /// stragglers up to `window` to join, capped at `max_batch` rows.
-    /// Returns `None` on shutdown with an empty queue.
+    /// stragglers *for the same model* up to `window` to join, capped at
+    /// `max_batch` rows and the model's own batch capacity. Requests for
+    /// other models are left queued, in order, for subsequent calls.
+    /// Never returns an empty batch; returns `None` on shutdown with an
+    /// empty queue.
     pub fn next_batch(&self) -> Option<Vec<InferRequest>> {
         let mut st = self.state.lock().unwrap();
         loop {
+            loop {
+                if !st.queue.is_empty() {
+                    break;
+                }
+                if st.shutdown {
+                    return None;
+                }
+                st = self.nonempty.wait(st).unwrap();
+            }
+            // The queue head picks the model; its cap bounds the batch.
+            let head = st.queue.front().unwrap();
+            let key = head.batch_key();
+            let cap = self.max_batch.min(head.cap).max(1);
+            // A first request exists; give the window a chance to fill
+            // the batch with same-model company (skip the wait if
+            // already full).
+            let deadline = Instant::now() + self.window;
+            loop {
+                let matching = st.queue.iter().filter(|r| r.batch_key() == key).count();
+                if matching >= cap || st.shutdown {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (next, timeout) = self
+                    .nonempty
+                    .wait_timeout(st, deadline - now)
+                    .unwrap();
+                st = next;
+                if timeout.timed_out() {
+                    break;
+                }
+            }
+            // Extract up to `cap` same-model requests in FIFO order;
+            // leave the rest queued in their original order.
+            let mut batch = Vec::new();
+            let mut rest = VecDeque::with_capacity(st.queue.len());
+            while let Some(r) = st.queue.pop_front() {
+                if batch.len() < cap && r.batch_key() == key {
+                    batch.push(r);
+                } else {
+                    rest.push_back(r);
+                }
+            }
+            st.queue = rest;
+            if batch.is_empty() {
+                // The window wait released the lock and another worker
+                // drained this model's requests; go around — the head
+                // (and its model) may have changed.
+                continue;
+            }
             if !st.queue.is_empty() {
-                break;
+                // Other-model requests stay queued; wake every waiter
+                // (as in submit — a single wake could be consumed by a
+                // worker window-waiting on a different model) so an
+                // idle worker picks them up.
+                self.nonempty.notify_all();
             }
-            if st.shutdown {
-                return None;
-            }
-            st = self.nonempty.wait(st).unwrap();
+            self.metrics.record_batch(batch.len());
+            return Some(batch);
         }
-        // A first request exists; give the window a chance to fill the
-        // batch (skip the wait if it is already full).
-        let deadline = Instant::now() + self.window;
-        while st.queue.len() < self.max_batch && !st.shutdown {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            let (next, timeout) = self
-                .nonempty
-                .wait_timeout(st, deadline - now)
-                .unwrap();
-            st = next;
-            if timeout.timed_out() {
-                break;
-            }
-        }
-        let take = st.queue.len().min(self.max_batch);
-        let batch: Vec<InferRequest> = st.queue.drain(..take).collect();
-        self.metrics.record_batch(batch.len());
-        Some(batch)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::testing::model::{build_random_model, ModelSpec};
     use std::sync::mpsc::channel;
 
     fn req(id: u64, tx: &Sender<(u64, Result<Vec<f32>, String>)>) -> InferRequest {
-        InferRequest { id, input: vec![id as f32], enqueued: Instant::now(), tx: tx.clone() }
+        InferRequest::new(id, vec![id as f32], tx.clone())
     }
 
     #[test]
@@ -163,5 +251,86 @@ mod tests {
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.len(), 1);
         assert!(b.next_batch().is_none());
+    }
+
+    fn routed(
+        id: u64,
+        slot: &Arc<ModelSlot>,
+        name: &str,
+        tx: &Sender<(u64, Result<Vec<f32>, String>)>,
+    ) -> InferRequest {
+        InferRequest {
+            model: name.to_string(),
+            slot: Some(Arc::clone(slot)),
+            cap: slot.batch_capacity(),
+            ..InferRequest::new(id, vec![id as f32], tx.clone())
+        }
+    }
+
+    fn test_slot(max_batch: usize, seed: u64) -> Arc<ModelSlot> {
+        let model = build_random_model(&ModelSpec {
+            inputs: 8,
+            hidden: 32,
+            outputs: 8,
+            max_batch,
+            pattern: crate::sparse::pattern::Pattern::Gs { b: 8, k: 8 },
+            sparsity: 0.75,
+            threads: 1,
+            seed,
+            ..ModelSpec::default()
+        })
+        .unwrap()
+        .model;
+        Arc::new(ModelSlot::new(model, "inline", 1))
+    }
+
+    #[test]
+    fn batches_never_mix_models() {
+        let b = Batcher::new(8, Duration::from_millis(1), Arc::new(Metrics::new()));
+        let (tx, _rx) = channel();
+        let (sa, sb) = (test_slot(8, 1), test_slot(8, 2));
+        // Interleaved arrivals: a b a b a.
+        let arrivals = [(&sa, "a"), (&sb, "b"), (&sa, "a"), (&sb, "b"), (&sa, "a")];
+        for (i, (slot, name)) in arrivals.into_iter().enumerate() {
+            b.submit(routed(i as u64, slot, name, &tx));
+        }
+        // Head is "a": its batch takes ids 0, 2, 4 (per-model FIFO).
+        let first = b.next_batch().unwrap();
+        assert!(first.iter().all(|r| r.model == "a"));
+        assert_eq!(first.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2, 4]);
+        // The "b" requests remained queued in order.
+        let second = b.next_batch().unwrap();
+        assert!(second.iter().all(|r| r.model == "b"));
+        assert_eq!(second.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+    }
+
+    #[test]
+    fn per_model_cap_bounds_the_batch() {
+        // Global max_batch 8, but the model's contract capacity is 2.
+        let b = Batcher::new(8, Duration::from_millis(1), Arc::new(Metrics::new()));
+        let (tx, _rx) = channel();
+        let s = test_slot(2, 3);
+        for i in 0..5 {
+            b.submit(routed(i, &s, "m", &tx));
+        }
+        assert_eq!(b.next_batch().unwrap().len(), 2);
+        assert_eq!(b.next_batch().unwrap().len(), 2);
+        assert_eq!(b.next_batch().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn same_name_different_slot_does_not_mix() {
+        // A replaced slot under the same name: older requests hold the
+        // old Arc and must not share a batch with new ones.
+        let b = Batcher::new(8, Duration::from_millis(1), Arc::new(Metrics::new()));
+        let (tx, _rx) = channel();
+        let (old, new) = (test_slot(8, 4), test_slot(8, 5));
+        b.submit(routed(0, &old, "m", &tx));
+        b.submit(routed(1, &new, "m", &tx));
+        let first = b.next_batch().unwrap();
+        assert_eq!(first.len(), 1);
+        assert!(Arc::ptr_eq(first[0].slot.as_ref().unwrap(), &old));
+        let second = b.next_batch().unwrap();
+        assert!(Arc::ptr_eq(second[0].slot.as_ref().unwrap(), &new));
     }
 }

@@ -1,8 +1,83 @@
-//! Serving metrics: counters + latency reservoir.
+//! Serving metrics: global counters + latency reservoir, plus a
+//! per-model breakdown for multi-model serving.
+//!
+//! The global [`Metrics`] fields keep their historical meaning (every
+//! request/response/swap on the server, whichever model it routed to),
+//! so existing dashboards and tests reading the top-level `stats` keys
+//! are unaffected. [`Metrics::model`] lazily creates a [`ModelMetrics`]
+//! per slot name; the server records each routed request into both the
+//! global aggregates and its model's breakdown, and `stats` reports the
+//! per-model view under a `"models"` object.
 
 use crate::util::stats::Summary;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+/// Bounded latency sample store shared by the global and per-model
+/// views: keeps the most recent 100k samples (one policy, two users —
+/// the cap/drain behavior cannot drift between them).
+#[derive(Default)]
+struct Reservoir(Mutex<Vec<f64>>);
+
+impl Reservoir {
+    fn push(&self, secs: f64) {
+        let mut l = self.0.lock().unwrap();
+        if l.len() >= 100_000 {
+            l.drain(..50_000);
+        }
+        l.push(secs);
+    }
+
+    fn summary(&self) -> Option<Summary> {
+        let l = self.0.lock().unwrap();
+        if l.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&l))
+        }
+    }
+}
+
+/// Counters + latency reservoir for one model slot.
+#[derive(Default)]
+pub struct ModelMetrics {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub errors: AtomicU64,
+    /// Successful hot-swaps of this slot.
+    pub swaps: AtomicU64,
+    pub swap_failures: AtomicU64,
+    latencies: Reservoir,
+    /// When this model last admitted an infer request (None = never).
+    last_used: Mutex<Option<Instant>>,
+}
+
+impl ModelMetrics {
+    pub fn record_latency(&self, secs: f64) {
+        self.responses.fetch_add(1, Ordering::Relaxed);
+        self.latencies.push(secs);
+    }
+
+    /// Stamp "an infer request routed here just now".
+    pub fn touch(&self) {
+        *self.last_used.lock().unwrap() = Some(Instant::now());
+    }
+
+    /// Seconds since the last routed infer request (None = never used).
+    pub fn idle_secs(&self) -> Option<f64> {
+        self.last_used
+            .lock()
+            .unwrap()
+            .map(|t| t.elapsed().as_secs_f64())
+    }
+
+    /// Latency summary (None until the first response).
+    pub fn latency_summary(&self) -> Option<Summary> {
+        self.latencies.summary()
+    }
+}
 
 /// Thread-safe serving metrics.
 #[derive(Default)]
@@ -12,14 +87,20 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub batched_rows: AtomicU64,
     pub errors: AtomicU64,
-    /// Successful model hot-swaps (deploys) since startup. Together with
-    /// `model_version`/`precision` in the `stats` response, this lets an
-    /// operator confirm a deploy actually landed.
+    /// Successful model hot-swaps (deploys) since startup, across every
+    /// slot. Together with `model_version`/`precision` in the `stats`
+    /// response, this lets an operator confirm a deploy actually landed.
     pub swaps: AtomicU64,
     /// Rejected/failed swap attempts — kept separate from `errors` so
     /// deploy mistakes never masquerade as inference failures.
     pub swap_failures: AtomicU64,
-    latencies: Mutex<Vec<f64>>,
+    /// Cold models LRU-evicted from the store under capacity pressure.
+    pub evictions: AtomicU64,
+    latencies: Reservoir,
+    /// Per-model breakdowns, keyed by slot name. Entries are created on
+    /// first touch and survive unload/eviction (counters are history,
+    /// not registry state).
+    models: RwLock<BTreeMap<String, Arc<ModelMetrics>>>,
 }
 
 impl Metrics {
@@ -27,14 +108,28 @@ impl Metrics {
         Metrics::default()
     }
 
+    /// The per-model breakdown for `name`, created on first use.
+    pub fn model(&self, name: &str) -> Arc<ModelMetrics> {
+        if let Some(m) = self.models.read().unwrap().get(name) {
+            return Arc::clone(m);
+        }
+        let mut map = self.models.write().unwrap();
+        Arc::clone(map.entry(name.to_string()).or_default())
+    }
+
+    /// Snapshot of every per-model breakdown (sorted by name).
+    pub fn model_snapshot(&self) -> Vec<(String, Arc<ModelMetrics>)> {
+        self.models
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), Arc::clone(v)))
+            .collect()
+    }
+
     pub fn record_latency(&self, secs: f64) {
         self.responses.fetch_add(1, Ordering::Relaxed);
-        let mut l = self.latencies.lock().unwrap();
-        // Bounded reservoir: keep the most recent 100k samples.
-        if l.len() >= 100_000 {
-            l.drain(..50_000);
-        }
-        l.push(secs);
+        self.latencies.push(secs);
     }
 
     pub fn record_batch(&self, rows: usize) {
@@ -44,12 +139,7 @@ impl Metrics {
 
     /// Latency summary (None until the first response).
     pub fn latency_summary(&self) -> Option<Summary> {
-        let l = self.latencies.lock().unwrap();
-        if l.is_empty() {
-            None
-        } else {
-            Some(Summary::of(&l))
-        }
+        self.latencies.summary()
     }
 
     /// Mean rows per executed batch.
@@ -88,5 +178,31 @@ mod tests {
         assert_eq!(m.swaps.load(Ordering::Relaxed), 0);
         m.swaps.fetch_add(1, Ordering::Relaxed);
         assert_eq!(m.swaps.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn per_model_breakdowns_are_independent() {
+        let m = Metrics::new();
+        let a = m.model("a");
+        let b = m.model("b");
+        a.requests.fetch_add(3, Ordering::Relaxed);
+        a.record_latency(0.002);
+        b.requests.fetch_add(1, Ordering::Relaxed);
+        // The same name returns the same breakdown.
+        assert_eq!(m.model("a").requests.load(Ordering::Relaxed), 3);
+        assert_eq!(m.model("b").requests.load(Ordering::Relaxed), 1);
+        assert_eq!(a.latency_summary().unwrap().n, 1);
+        assert!(b.latency_summary().is_none());
+        let names: Vec<String> = m.model_snapshot().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["a".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn idle_secs_tracks_touch() {
+        let mm = ModelMetrics::default();
+        assert!(mm.idle_secs().is_none());
+        mm.touch();
+        let idle = mm.idle_secs().unwrap();
+        assert!(idle >= 0.0 && idle < 1.0, "{idle}");
     }
 }

@@ -20,11 +20,13 @@
 //!   AOT artifact executed through [`crate::runtime`], taking the GS
 //!   weights as uniform `value`/`index` tensors (see [`uniform`]).
 //!
-//! Native serving goes through [`serve_slot`] and an [`Engine`]: workers
-//! share a versioned [`crate::model_store::ModelSlot`] and snapshot it
-//! once per batch, so a `{"op":"swap","path":"model.gsm"}` request
-//! hot-deploys a new pruning with zero downtime (see
-//! [`crate::model_store`]).
+//! Native serving goes through [`serve_store`] and an [`Engine`]
+//! wrapping the whole [`crate::model_store::ModelStore`]: requests route
+//! by an optional `"model"` field to named versioned slots (batches are
+//! model-homogeneous; per-slot metrics; LRU eviction of cold models
+//! under a capacity bound), workers snapshot the routed slot once per
+//! batch, and `{"op":"swap"|"load","path":"model.gsm"}` hot-deploys new
+//! prunings with zero downtime (see [`crate::model_store`]).
 //!
 //! Both backends compute the same forward graph
 //! (`relu(x@W1+b1) → GS spMM → +b2`); each is checked against a dense
@@ -38,8 +40,8 @@ pub mod server;
 pub mod uniform;
 
 pub use batcher::{Batcher, InferRequest};
-pub use metrics::Metrics;
-pub use server::{serve, serve_slot, Client, ServerHandle};
+pub use metrics::{Metrics, ModelMetrics};
+pub use server::{serve, serve_slot, serve_store, Client, ServerHandle};
 pub use uniform::UniformGs;
 
 use crate::kernels::dense::{dense_matmul, dense_matmul_parallel};
@@ -319,27 +321,78 @@ impl SparseModel {
     }
 }
 
-/// Everything the serving loop shares across threads: the versioned
-/// model slot ([`crate::model_store::ModelSlot`]) workers snapshot once
-/// per batch — the handle a live `{"op":"swap"}` deploys through — and
-/// the metrics sink. `Engine::new` with `threads = 0` auto-detects the
-/// machine's parallelism for the kernel pool (see
+/// Everything the serving loop shares across threads: the whole model
+/// registry ([`crate::model_store::ModelStore`]) requests route through
+/// — each slot a versioned [`crate::model_store::ModelSlot`] workers
+/// snapshot once per batch, the handles live `{"op":"swap"}`/`"load"`
+/// requests deploy through — the name unqualified requests default to,
+/// and the metrics sink. `threads = 0` auto-detects the machine's
+/// parallelism for the kernel pool (see
 /// [`crate::util::threadpool::resolve_threads`]).
 pub struct Engine {
-    pub slot: Arc<crate::model_store::ModelSlot>,
+    pub store: Arc<crate::model_store::ModelStore>,
+    /// The slot requests without a `"model"` field route to (pinned —
+    /// LRU eviction never removes it).
+    pub default_model: String,
     pub metrics: Arc<Metrics>,
+    /// Kernel-thread setting models deployed at runtime (`load`)
+    /// instantiate with (0 = auto-detect).
+    pub threads: usize,
 }
 
 impl Engine {
-    /// Wrap `model` (deployment version 1, from `source`) in a fresh
-    /// swappable slot + metrics. `threads` is recorded in the slot as
-    /// the kernel-thread setting future artifact swaps instantiate with
-    /// (0 = auto-detect).
+    /// Wrap `model` (deployment version 1, from `source`) as the pinned
+    /// `"default"` slot of a fresh unbounded store + metrics. `threads`
+    /// is recorded as the kernel-thread setting future artifact deploys
+    /// (`swap`/`load`) instantiate with (0 = auto-detect).
     pub fn new(model: SparseModel, source: &str, threads: usize) -> Engine {
+        let store = Arc::new(crate::model_store::ModelStore::new());
+        store
+            .register(
+                "default",
+                Arc::new(crate::model_store::ModelSlot::new(model, source, threads)),
+            )
+            .expect("fresh unbounded store cannot reject a registration");
         Engine {
-            slot: Arc::new(crate::model_store::ModelSlot::new(model, source, threads)),
+            store,
+            default_model: "default".to_string(),
             metrics: Arc::new(Metrics::new()),
+            threads,
         }
+    }
+
+    /// Wrap an already-populated registry. `default` must name a
+    /// registered slot (unqualified requests route to it) and be the
+    /// store's pinned name — otherwise an unload or LRU eviction could
+    /// remove the slot every unqualified request depends on.
+    pub fn from_store(
+        store: Arc<crate::model_store::ModelStore>,
+        default: &str,
+        threads: usize,
+    ) -> Result<Engine> {
+        ensure!(
+            store.get(default).is_some(),
+            "default model \"{default}\" is not registered in the store"
+        );
+        ensure!(
+            store.pinned_name() == default,
+            "default model \"{default}\" must be the store's pinned name \
+             (the store pins \"{}\")",
+            store.pinned_name()
+        );
+        Ok(Engine {
+            store,
+            default_model: default.to_string(),
+            metrics: Arc::new(Metrics::new()),
+            threads,
+        })
+    }
+
+    /// The slot unqualified requests execute on.
+    pub fn default_slot(&self) -> Arc<crate::model_store::ModelSlot> {
+        self.store
+            .get(&self.default_model)
+            .expect("the default slot is pinned and cannot be evicted or unloaded")
     }
 }
 

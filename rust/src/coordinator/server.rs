@@ -1,35 +1,47 @@
 //! TCP JSON-lines front-end + worker pool.
 //!
-//! Protocol (one JSON object per line):
-//!   → `{"op":"infer","id":1,"input":[...f32 x inputs]}`
+//! Protocol (one JSON object per line; `"model"` is optional everywhere
+//! and defaults to the server's default slot):
+//!   → `{"op":"infer","id":1,"model":"resnet","input":[...f32 x inputs]}`
 //!   ← `{"id":1,"output":[...f32 x outputs]}` or `{"id":1,"error":"..."}`
-//!   → `{"op":"stats"}` ← `{"requests":N,"model_version":V,"p50_ms":...}`
+//!   → `{"op":"stats"}`
+//!   ← `{"requests":N,"model_version":V,"p50_ms":...,"models":{...per-slot...}}`
 //!   → `{"op":"ping"}`  ← `{"ok":true,"version":V}`
-//!   → `{"op":"swap","path":"model.gsm"}`
-//!   ← `{"ok":true,"version":V,"precision":"f32"}` or `{"error":"..."}`
+//!   → `{"op":"swap","model":"resnet","path":"model.gsm"}`
+//!   ← `{"ok":true,"model":"resnet","version":V,"precision":"f32"}`
+//!   → `{"op":"load","model":"jasper","path":"j.gsm"}`
+//!   ← `{"ok":true,"model":"jasper","version":1,"evicted":[...]}`
+//!   → `{"op":"unload","model":"jasper"}` ← `{"ok":true,"model":"jasper"}`
+//!   → `{"op":"models"}`
+//!   ← `{"default":"...","max_models":N,"models":{name:{version,geometry,...}}}`
 //!
 //! Two serving modes share the batcher/worker machinery:
 //!
-//! * [`serve_slot`] — workers execute through a versioned
-//!   [`ModelSlot`] snapshot taken once per batch, so `swap` deploys a
-//!   new model under live traffic with zero downtime: in-flight batches
-//!   finish on the version they started with (a batch never mixes
-//!   versions), queued requests ride the next snapshot, connections
-//!   never drop. This is the native-engine path.
+//! * [`serve_store`] — the multi-model routed engine. Workers execute
+//!   whatever slot each (model-homogeneous) batch was admitted against,
+//!   through a versioned [`ModelSlot`] snapshot taken once per batch, so
+//!   `swap`/`load` deploy under live traffic with zero downtime:
+//!   in-flight batches finish on the version they started with (a batch
+//!   never mixes versions or models), queued requests ride the next
+//!   snapshot, connections never drop, and LRU eviction of a cold model
+//!   never disrupts batches already admitted (they hold the slot `Arc`).
+//!   [`serve_slot`] is the single-model entry to the same path.
 //! * [`serve`] — each worker builds its own model through a factory
 //!   closure (PJRT executables are not `Send`, so the pjrt backend
-//!   cannot share one instance). No hot swap: `swap` returns an error.
+//!   cannot share one instance). No hot swap or routing: `swap`/`load`/
+//!   `unload` return errors and `infer` takes no `"model"`.
 //!
-//! **Trust model:** the protocol is unauthenticated, and `swap` lets any
-//! connected client deploy a server-readable `.gsm` path — an operator
-//! capability, not a public one. The default bind is loopback; exposing
-//! the port beyond a trusted network requires fronting it with an
-//! authenticating proxy (or using factory mode, which has no write op).
+//! **Trust model:** the protocol is unauthenticated, and `swap`/`load`
+//! let any connected client deploy a server-readable `.gsm` path — an
+//! operator capability, not a public one. The default bind is loopback;
+//! exposing the port beyond a trusted network requires fronting it with
+//! an authenticating proxy (or using factory mode, which has no write
+//! op).
 
 use super::batcher::{Batcher, InferRequest};
-use super::metrics::Metrics;
+use super::metrics::{Metrics, ModelMetrics};
 use super::{Engine, SparseModel};
-use crate::model_store::ModelSlot;
+use crate::model_store::{ModelArtifact, ModelSlot, ModelStore};
 use crate::util::json::Json;
 use crate::util::threadpool::resolve_threads;
 use anyhow::{Context, Result};
@@ -47,13 +59,21 @@ pub struct ServerHandle {
     batcher: Arc<Batcher>,
     stop: Arc<AtomicBool>,
     pub metrics: Arc<Metrics>,
-    /// The versioned model slot (None in factory mode — no hot swap).
-    pub slot: Option<Arc<ModelSlot>>,
+    /// The model registry (None in factory mode — no hot swap/routing).
+    pub store: Option<Arc<ModelStore>>,
+    /// The slot name unqualified requests route to (store mode).
+    pub default_model: Option<String>,
     workers: Vec<thread::JoinHandle<()>>,
     acceptor: Option<thread::JoinHandle<()>>,
 }
 
 impl ServerHandle {
+    /// The slot unqualified requests execute on (None in factory mode).
+    pub fn default_slot(&self) -> Option<Arc<ModelSlot>> {
+        let store = self.store.as_ref()?;
+        store.get(self.default_model.as_deref()?)
+    }
+
     /// Stop accepting, drain the queue, join workers.
     pub fn stop(mut self) {
         self.stop.store(true, Ordering::SeqCst);
@@ -69,8 +89,11 @@ impl ServerHandle {
     }
 }
 
-/// Server geometry. `input_width`/`max_batch` must match the model
-/// (`workers: 0` auto-detects the machine's parallelism).
+/// Server geometry. In store mode `input_width` only describes the
+/// default model (admission is checked per-request against the routed
+/// slot); `max_batch` is the global batch cap — each batch is further
+/// bounded by its model's contract capacity. `workers: 0` auto-detects
+/// the machine's parallelism.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     pub bind: String,
@@ -82,20 +105,37 @@ pub struct ServeConfig {
 
 /// How serving workers obtain the model to execute a batch on.
 enum Provider {
-    /// Shared versioned slot, snapshotted once per batch (hot-swappable).
-    Slot(Arc<ModelSlot>),
+    /// Shared routed registry; each request resolves (and pins) its slot
+    /// at admission, batches snapshot once per execution.
+    Store {
+        store: Arc<ModelStore>,
+        default: String,
+        /// Kernel threads for models instantiated by `load`.
+        threads: usize,
+    },
     /// Per-worker factory (PJRT executables are not `Send`).
     Factory(Arc<dyn Fn() -> Result<SparseModel> + Send + Sync>),
 }
 
-/// Start serving `engine`'s model slot on `cfg.bind`. All workers share
-/// the slot; `{"op":"swap","path":...}` hot-deploys a new artifact.
-pub fn serve_slot(engine: &Engine, cfg: ServeConfig) -> Result<ServerHandle> {
+/// Start the multi-model routed server on `engine`'s model store. All
+/// workers share the registry; `{"op":"infer","model":...}` routes,
+/// `{"op":"swap"|"load"|"unload"}` hot-deploy.
+pub fn serve_store(engine: &Engine, cfg: ServeConfig) -> Result<ServerHandle> {
     serve_impl(
-        Provider::Slot(Arc::clone(&engine.slot)),
+        Provider::Store {
+            store: Arc::clone(&engine.store),
+            default: engine.default_model.clone(),
+            threads: engine.threads,
+        },
         Arc::clone(&engine.metrics),
         cfg,
     )
+}
+
+/// Single-model entry to the routed path (the engine's default slot is
+/// the only registered model until a `load` arrives).
+pub fn serve_slot(engine: &Engine, cfg: ServeConfig) -> Result<ServerHandle> {
+    serve_store(engine, cfg)
 }
 
 /// Start serving with `cfg.workers` execution threads, each owning a
@@ -112,17 +152,31 @@ where
 }
 
 /// Execute one formed batch on `model` and deliver each row's result.
-fn run_batch(model: &SparseModel, batch: Vec<InferRequest>, metrics: &Metrics) {
+/// Latency/errors are recorded globally and, when the batch was routed
+/// (`mm`), in the model's own breakdown.
+fn run_batch(
+    model: &SparseModel,
+    batch: Vec<InferRequest>,
+    metrics: &Metrics,
+    mm: Option<&ModelMetrics>,
+) {
     let inputs: Vec<Vec<f32>> = batch.iter().map(|r| r.input.clone()).collect();
     match model.infer_batch(&inputs) {
         Ok(outputs) => {
             for (req, out) in batch.into_iter().zip(outputs) {
-                metrics.record_latency(req.enqueued.elapsed().as_secs_f64());
+                let secs = req.enqueued.elapsed().as_secs_f64();
+                metrics.record_latency(secs);
+                if let Some(mm) = mm {
+                    mm.record_latency(secs);
+                }
                 let _ = req.tx.send((req.id, Ok(out)));
             }
         }
         Err(e) => {
             metrics.errors.fetch_add(1, Ordering::Relaxed);
+            if let Some(mm) = mm {
+                mm.errors.fetch_add(1, Ordering::Relaxed);
+            }
             let msg = format!("{e:#}");
             for req in batch {
                 let _ = req.tx.send((req.id, Err(msg.clone())));
@@ -140,9 +194,9 @@ fn serve_impl(provider: Provider, metrics: Arc<Metrics>, cfg: ServeConfig) -> Re
         Arc::clone(&metrics),
     ));
     let stop = Arc::new(AtomicBool::new(false));
-    let slot = match &provider {
-        Provider::Slot(slot) => Some(Arc::clone(slot)),
-        Provider::Factory(_) => None,
+    let (store, default_model) = match &provider {
+        Provider::Store { store, default, .. } => (Some(Arc::clone(store)), Some(default.clone())),
+        Provider::Factory(_) => (None, None),
     };
 
     let workers: Vec<_> = (0..resolve_threads(cfg.workers))
@@ -150,19 +204,35 @@ fn serve_impl(provider: Provider, metrics: Arc<Metrics>, cfg: ServeConfig) -> Re
             let batcher = Arc::clone(&batcher);
             let metrics = Arc::clone(&metrics);
             let worker_provider = match &provider {
-                Provider::Slot(slot) => Provider::Slot(Arc::clone(slot)),
+                Provider::Store { store, default, threads } => Provider::Store {
+                    store: Arc::clone(store),
+                    default: default.clone(),
+                    threads: *threads,
+                },
                 Provider::Factory(f) => Provider::Factory(Arc::clone(f)),
             };
             thread::Builder::new()
                 .name(format!("gs-serve-worker-{wi}"))
                 .spawn(move || match worker_provider {
-                    Provider::Slot(slot) => {
+                    Provider::Store { .. } => {
                         while let Some(batch) = batcher.next_batch() {
-                            // One snapshot per batch: the whole batch runs
-                            // on a single model generation even if a swap
-                            // lands mid-execution.
+                            // The whole (model-homogeneous) batch runs on
+                            // the slot it was admitted against — pinned
+                            // by the request's Arc, so neither a swap nor
+                            // an LRU eviction landing mid-flight disturbs
+                            // it — and on a single snapshot, so a batch
+                            // never mixes versions.
+                            let Some(slot) = batch.first().and_then(|r| r.slot.clone()) else {
+                                metrics.errors.fetch_add(1, Ordering::Relaxed);
+                                for req in batch {
+                                    let msg = "request lost its slot".to_string();
+                                    let _ = req.tx.send((req.id, Err(msg)));
+                                }
+                                continue;
+                            };
                             let vm = slot.current();
-                            run_batch(&vm.model, batch, &metrics);
+                            let mm = metrics.model(&batch[0].model);
+                            run_batch(&vm.model, batch, &metrics, Some(mm.as_ref()));
                         }
                     }
                     Provider::Factory(factory) => {
@@ -175,7 +245,7 @@ fn serve_impl(provider: Provider, metrics: Arc<Metrics>, cfg: ServeConfig) -> Re
                             }
                         };
                         while let Some(batch) = batcher.next_batch() {
-                            run_batch(&model, batch, &metrics);
+                            run_batch(&model, batch, &metrics, None);
                         }
                     }
                 })
@@ -187,8 +257,15 @@ fn serve_impl(provider: Provider, metrics: Arc<Metrics>, cfg: ServeConfig) -> Re
         let batcher = Arc::clone(&batcher);
         let metrics = Arc::clone(&metrics);
         let stop2 = Arc::clone(&stop);
-        let slot2 = slot.clone();
-        let inputs_width = cfg.input_width;
+        let ctx = Arc::new(ConnCtx {
+            store: store.clone(),
+            default_model: default_model.clone(),
+            threads: match &provider {
+                Provider::Store { threads, .. } => *threads,
+                Provider::Factory(_) => 0,
+            },
+            input_width: cfg.input_width,
+        });
         thread::Builder::new()
             .name("gs-serve-acceptor".into())
             .spawn(move || {
@@ -200,9 +277,9 @@ fn serve_impl(provider: Provider, metrics: Arc<Metrics>, cfg: ServeConfig) -> Re
                     let _ = conn.set_nodelay(true); // JSON-lines RPC: Nagle hurts
                     let batcher = Arc::clone(&batcher);
                     let metrics = Arc::clone(&metrics);
-                    let slot = slot2.clone();
+                    let ctx = Arc::clone(&ctx);
                     thread::spawn(move || {
-                        let _ = handle_connection(conn, &batcher, &metrics, slot, inputs_width);
+                        let _ = handle_connection(conn, &batcher, &metrics, &ctx);
                     });
                 }
             })
@@ -214,18 +291,51 @@ fn serve_impl(provider: Provider, metrics: Arc<Metrics>, cfg: ServeConfig) -> Re
         batcher,
         stop,
         metrics,
-        slot,
+        store,
+        default_model,
         workers,
         acceptor: Some(acceptor),
     })
+}
+
+/// Everything a connection needs to admit and route requests.
+struct ConnCtx {
+    /// None in factory mode.
+    store: Option<Arc<ModelStore>>,
+    default_model: Option<String>,
+    /// Kernel threads for `load`-instantiated models.
+    threads: usize,
+    /// Factory-mode admission width (store mode checks per slot).
+    input_width: usize,
+}
+
+fn err_json(msg: String) -> Json {
+    Json::obj(vec![("error", Json::Str(msg))])
+}
+
+/// Resolve the request's `"model"` field (or the default) to a slot
+/// name. Only called in store mode (factory mode rejects routed
+/// requests before routing). A present-but-non-string field is an
+/// error, never a silent fallthrough to the default model (that would
+/// execute the request on the wrong model). Errors come back as plain
+/// messages so each caller can shape the reply (infer attaches the
+/// request id).
+fn requested_model<'a>(msg: &'a Json, ctx: &'a ConnCtx) -> Result<&'a str, String> {
+    match msg.get("model") {
+        Some(Json::Str(name)) => Ok(name.as_str()),
+        Some(_) => Err("\"model\" must be a string".into()),
+        None => match &ctx.default_model {
+            Some(default) => Ok(default.as_str()),
+            None => Err("server has no default model".into()),
+        },
+    }
 }
 
 fn handle_connection(
     conn: TcpStream,
     batcher: &Batcher,
     metrics: &Metrics,
-    slot: Option<Arc<ModelSlot>>,
-    inputs_width: usize,
+    ctx: &ConnCtx,
 ) -> Result<()> {
     let mut writer = conn.try_clone()?;
     let reader = BufReader::new(conn);
@@ -235,53 +345,22 @@ fn handle_connection(
             continue;
         }
         let reply = match Json::parse(&line) {
-            Err(e) => Json::obj(vec![("error", Json::Str(format!("bad json: {e}")))]),
+            Err(e) => err_json(format!("bad json: {e}")),
             Ok(msg) => match msg.get("op").and_then(Json::as_str) {
                 Some("ping") => {
                     let mut fields = vec![("ok", Json::Bool(true))];
-                    if let Some(slot) = &slot {
+                    if let Some(slot) = default_slot(ctx) {
                         fields.push(("version", Json::Num(slot.version() as f64)));
                     }
                     Json::obj(fields)
                 }
-                Some("stats") => stats_json(metrics, slot.as_deref()),
-                Some("swap") => handle_swap(&msg, slot.as_deref(), metrics),
-                Some("infer") => {
-                    let id = msg.get("id").and_then(Json::as_f64).unwrap_or(0.0) as u64;
-                    match msg.get("input").and_then(Json::to_f32_vec) {
-                        Some(input) if input.len() == inputs_width => {
-                            let (tx, rx) = channel();
-                            batcher.submit(InferRequest {
-                                id,
-                                input,
-                                enqueued: Instant::now(),
-                                tx,
-                            });
-                            match rx.recv() {
-                                Ok((id, Ok(out))) => Json::obj(vec![
-                                    ("id", Json::Num(id as f64)),
-                                    ("output", Json::nums_f32(&out)),
-                                ]),
-                                Ok((id, Err(e))) => Json::obj(vec![
-                                    ("id", Json::Num(id as f64)),
-                                    ("error", Json::Str(e)),
-                                ]),
-                                Err(_) => Json::obj(vec![(
-                                    "error",
-                                    Json::Str("worker dropped".into()),
-                                )]),
-                            }
-                        }
-                        _ => Json::obj(vec![
-                            ("id", Json::Num(id as f64)),
-                            (
-                                "error",
-                                Json::Str(format!("input must be {inputs_width} floats")),
-                            ),
-                        ]),
-                    }
-                }
-                _ => Json::obj(vec![("error", Json::Str("unknown op".into()))]),
+                Some("stats") => stats_json(metrics, ctx),
+                Some("models") => models_json(ctx),
+                Some("swap") => handle_swap(&msg, ctx, metrics),
+                Some("load") => handle_load(&msg, ctx, metrics),
+                Some("unload") => handle_unload(&msg, ctx),
+                Some("infer") => handle_infer(&msg, batcher, metrics, ctx),
+                _ => err_json("unknown op".into()),
             },
         };
         writer.write_all(reply.to_string().as_bytes())?;
@@ -290,31 +369,154 @@ fn handle_connection(
     Ok(())
 }
 
-/// `{"op":"swap","path":...}`: load + validate the artifact, instantiate
-/// it, and swap it into the slot. Traffic keeps flowing on the old
-/// version until the new one is installed; nothing is interrupted on
-/// failure (the error comes back on this connection, the slot keeps its
-/// current generation, and the failure is counted in `errors`).
-fn handle_swap(msg: &Json, slot: Option<&ModelSlot>, metrics: &Metrics) -> Json {
-    let Some(slot) = slot else {
-        return Json::obj(vec![(
-            "error",
-            Json::Str("hot swap unavailable: server runs factory-backed workers".into()),
-        )]);
+fn default_slot(ctx: &ConnCtx) -> Option<Arc<ModelSlot>> {
+    ctx.store.as_ref()?.get(ctx.default_model.as_deref()?)
+}
+
+fn handle_infer(msg: &Json, batcher: &Batcher, metrics: &Metrics, ctx: &ConnCtx) -> Json {
+    let id = msg.get("id").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+    let with_id = |mut fields: Vec<(&str, Json)>| {
+        fields.insert(0, ("id", Json::Num(id as f64)));
+        Json::obj(fields)
+    };
+    // Resolve the route. Factory mode admits only unrouted requests.
+    // This lookup is a plain `get` — recency is only bumped further
+    // down, once the request has actually been validated and admitted
+    // (a stream of rejected requests must not keep a cold model warm).
+    let (mut slot, model_name) = match &ctx.store {
+        Some(store) => {
+            let name = match requested_model(msg, ctx) {
+                Ok(n) => n,
+                Err(e) => return with_id(vec![("error", Json::Str(e))]),
+            };
+            match store.get(name) {
+                Some(slot) => (Some(slot), name.to_string()),
+                None => {
+                    return with_id(vec![(
+                        "error",
+                        Json::Str(format!("unknown model \"{name}\"")),
+                    )])
+                }
+            }
+        }
+        None => {
+            if msg.get("model").is_some() {
+                return with_id(vec![(
+                    "error",
+                    Json::Str(
+                        "model routing unavailable: server runs factory-backed workers".into(),
+                    ),
+                )]);
+            }
+            (None, String::new())
+        }
+    };
+    let width = slot.as_ref().map_or(ctx.input_width, |s| s.input_width());
+    let input = match msg.get("input").and_then(Json::to_f32_vec) {
+        Some(input) if input.len() == width => input,
+        _ => {
+            let suffix = if model_name.is_empty() {
+                String::new()
+            } else {
+                format!(" (model \"{model_name}\")")
+            };
+            return with_id(vec![(
+                "error",
+                Json::Str(format!("input must be {width} floats{suffix}")),
+            )]);
+        }
+    };
+    if let Some(store) = &ctx.store {
+        // Touch-on-admit: the validated request bumps LRU recency (and
+        // re-resolves the slot in case a concurrent load replaced it —
+        // the freshest generation should serve).
+        match store.acquire(&model_name) {
+            Some(s) => {
+                // The name may have been re-registered with different
+                // geometry between validation and admission; re-check
+                // against the slot that will actually execute, so a
+                // stale-width request can never join (and fail) a batch
+                // of valid requests on the new slot.
+                if s.input_width() != input.len() {
+                    return with_id(vec![(
+                        "error",
+                        Json::Str(format!(
+                            "input must be {} floats (model \"{model_name}\")",
+                            s.input_width()
+                        )),
+                    )]);
+                }
+                slot = Some(s);
+            }
+            None => {
+                return with_id(vec![(
+                    "error",
+                    Json::Str(format!("unknown model \"{model_name}\"")),
+                )])
+            }
+        }
+        let mm = metrics.model(&model_name);
+        mm.requests.fetch_add(1, Ordering::Relaxed);
+        mm.touch();
+    }
+    let (tx, rx) = channel();
+    let cap = slot.as_ref().map_or(usize::MAX, |s| s.batch_capacity());
+    batcher.submit(InferRequest {
+        id,
+        input,
+        enqueued: Instant::now(),
+        tx,
+        model: model_name,
+        slot,
+        cap,
+    });
+    match rx.recv() {
+        Ok((id, Ok(out))) => Json::obj(vec![
+            ("id", Json::Num(id as f64)),
+            ("output", Json::nums_f32(&out)),
+        ]),
+        Ok((id, Err(e))) => Json::obj(vec![
+            ("id", Json::Num(id as f64)),
+            ("error", Json::Str(e)),
+        ]),
+        Err(_) => err_json("worker dropped".into()),
+    }
+}
+
+/// `{"op":"swap","model":...,"path":...}`: load + validate the artifact,
+/// instantiate it, and swap it into the named (or default) slot. Traffic
+/// keeps flowing on the old version until the new one is installed;
+/// nothing is interrupted on failure (the error comes back on this
+/// connection, the slot keeps its current generation, and the failure is
+/// counted in `swap_failures` globally and per model).
+fn handle_swap(msg: &Json, ctx: &ConnCtx, metrics: &Metrics) -> Json {
+    let Some(store) = &ctx.store else {
+        return err_json("hot swap unavailable: server runs factory-backed workers".into());
+    };
+    let name = match requested_model(msg, ctx) {
+        Ok(n) => n,
+        Err(e) => return err_json(e),
     };
     let Some(path) = msg.get("path").and_then(Json::as_str) else {
-        return Json::obj(vec![(
-            "error",
-            Json::Str("swap requires a \"path\" to a .gsm artifact".into()),
-        )]);
+        return err_json("swap requires a \"path\" to a .gsm artifact".into());
     };
+    let Some(slot) = store.get(name) else {
+        // A typo'd deploy is still a failed deploy: surface it on the
+        // global counter (no per-model entry — never-registered names
+        // must not grow the metrics map).
+        metrics.swap_failures.fetch_add(1, Ordering::Relaxed);
+        return err_json(format!("unknown model \"{name}\""));
+    };
+    let mm = metrics.model(name);
     match slot.swap_path(path) {
         Ok(vm) => {
             metrics.swaps.fetch_add(1, Ordering::Relaxed);
+            mm.swaps.fetch_add(1, Ordering::Relaxed);
             // Report the generation *this* request installed, not
             // whatever a concurrent later swap made current.
             let mut fields = vec![
                 ("ok", Json::Bool(true)),
+                ("model", Json::Str(name.into())),
                 ("version", Json::Num(vm.version as f64)),
             ];
             if let Some(p) = vm.precision() {
@@ -324,12 +526,154 @@ fn handle_swap(msg: &Json, slot: Option<&ModelSlot>, metrics: &Metrics) -> Json 
         }
         Err(e) => {
             metrics.swap_failures.fetch_add(1, Ordering::Relaxed);
-            Json::obj(vec![("error", Json::Str(format!("{e:#}")))])
+            mm.swap_failures.fetch_add(1, Ordering::Relaxed);
+            err_json(format!("{e:#}"))
         }
     }
 }
 
-fn stats_json(metrics: &Metrics, slot: Option<&ModelSlot>) -> Json {
+/// `{"op":"load","model":...,"path":...}`: make a named model resident.
+/// An existing name is hot-swapped in place (same zero-downtime path as
+/// `swap`; the slot's serving contract still applies). A new name
+/// registers a fresh slot at version 1, LRU-evicting the coldest
+/// non-pinned model(s) if the store is at capacity — gracefully:
+/// admitted requests hold their slot `Arc` and finish undisturbed.
+fn handle_load(msg: &Json, ctx: &ConnCtx, metrics: &Metrics) -> Json {
+    let Some(store) = &ctx.store else {
+        return err_json("load unavailable: server runs factory-backed workers".into());
+    };
+    let Some(name) = msg.get("model").and_then(Json::as_str) else {
+        return err_json("load requires a \"model\" name".into());
+    };
+    let Some(path) = msg.get("path").and_then(Json::as_str) else {
+        return err_json("load requires a \"path\" to a .gsm artifact".into());
+    };
+    // Load + instantiate exactly once, before any registry decision.
+    let model = match ModelArtifact::load(path).and_then(|a| {
+        a.instantiate(ctx.threads)
+            .with_context(|| format!("instantiate artifact {path}"))
+    }) {
+        Ok(m) => m,
+        Err(e) => {
+            // Global counter only: a failed load of a never-registered
+            // name must not mint a permanent per-model metrics entry
+            // (typo'd names would grow `stats` without bound).
+            metrics.swap_failures.fetch_add(1, Ordering::Relaxed);
+            return err_json(format!("{e:#}"));
+        }
+    };
+    let precision = model.precision();
+    if let Some(existing) = store.get(name) {
+        // Resident name: swap the instantiated model into the captured
+        // slot handle (contract-checked, zero-downtime, no second
+        // artifact read). Operating on the handle rather than looking
+        // the name up again means a concurrent unload cannot turn this
+        // legitimate load into an "unknown model" failure — concurrent
+        // admin ops are last-writer-wins at the registry.
+        let mm = metrics.model(name);
+        return match existing.swap(model, path) {
+            Ok(vm) => {
+                metrics.swaps.fetch_add(1, Ordering::Relaxed);
+                mm.swaps.fetch_add(1, Ordering::Relaxed);
+                let mut fields = vec![
+                    ("ok", Json::Bool(true)),
+                    ("model", Json::Str(name.into())),
+                    ("version", Json::Num(vm.version as f64)),
+                ];
+                if let Some(p) = vm.precision() {
+                    fields.push(("precision", Json::Str(p.name().into())));
+                }
+                Json::obj(fields)
+            }
+            Err(e) => {
+                metrics.swap_failures.fetch_add(1, Ordering::Relaxed);
+                mm.swap_failures.fetch_add(1, Ordering::Relaxed);
+                err_json(format!("{e:#}"))
+            }
+        };
+    }
+    let slot = Arc::new(ModelSlot::new(model, path, ctx.threads));
+    match store.register_new(name, slot) {
+        Ok(Some(evicted)) => {
+            metrics
+                .evictions
+                .fetch_add(evicted.len() as u64, Ordering::Relaxed);
+            let mut fields = vec![
+                ("ok", Json::Bool(true)),
+                ("model", Json::Str(name.into())),
+                ("version", Json::Num(1.0)),
+                (
+                    "evicted",
+                    Json::Arr(evicted.into_iter().map(Json::Str).collect()),
+                ),
+            ];
+            if let Some(p) = precision {
+                fields.push(("precision", Json::Str(p.name().into())));
+            }
+            Json::obj(fields)
+        }
+        // A concurrent load registered this name first: swap into that
+        // slot so the contract check applies and neither deploy is
+        // silently dropped.
+        Ok(None) => handle_swap(msg, ctx, metrics),
+        Err(e) => {
+            metrics.swap_failures.fetch_add(1, Ordering::Relaxed);
+            err_json(format!("{e:#}"))
+        }
+    }
+}
+
+/// `{"op":"unload","model":...}`: drop a model from the registry. The
+/// pinned default cannot be unloaded; in-flight batches on the dropped
+/// slot finish undisturbed (they hold the `Arc`).
+fn handle_unload(msg: &Json, ctx: &ConnCtx) -> Json {
+    let Some(store) = &ctx.store else {
+        return err_json("unload unavailable: server runs factory-backed workers".into());
+    };
+    let Some(name) = msg.get("model").and_then(Json::as_str) else {
+        return err_json("unload requires a \"model\" name".into());
+    };
+    match store.unload(name) {
+        Ok(()) => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("model", Json::Str(name.into())),
+        ]),
+        Err(e) => err_json(format!("{e:#}")),
+    }
+}
+
+/// `{"op":"models"}`: every resident slot with version/precision/geometry.
+fn models_json(ctx: &ConnCtx) -> Json {
+    let Some(store) = &ctx.store else {
+        return err_json("model registry unavailable: server runs factory-backed workers".into());
+    };
+    let default = ctx.default_model.clone().unwrap_or_default();
+    let mut models = Vec::new();
+    for name in store.names() {
+        let Some(slot) = store.get(&name) else { continue };
+        let vm = slot.current();
+        let mut fields = vec![
+            ("version", Json::Num(vm.version as f64)),
+            ("source", Json::Str(vm.source.clone())),
+            ("inputs", Json::Num(vm.model.inputs as f64)),
+            ("hidden", Json::Num(vm.model.hidden as f64)),
+            ("outputs", Json::Num(vm.model.outputs as f64)),
+            ("max_batch", Json::Num(vm.model.max_batch as f64)),
+            ("default", Json::Bool(name == default)),
+        ];
+        if let Some(p) = vm.precision() {
+            fields.push(("precision", Json::Str(p.name().into())));
+        }
+        models.push((name, Json::obj(fields)));
+    }
+    Json::obj(vec![
+        ("default", Json::Str(default)),
+        ("max_models", Json::Num(store.max_models() as f64)),
+        ("models", Json::Obj(models.into_iter().collect())),
+    ])
+}
+
+fn stats_json(metrics: &Metrics, ctx: &ConnCtx) -> Json {
     let mut fields = vec![
         (
             "requests",
@@ -356,8 +700,12 @@ fn stats_json(metrics: &Metrics, slot: Option<&ModelSlot>) -> Json {
             "swap_failures",
             Json::Num(metrics.swap_failures.load(Ordering::Relaxed) as f64),
         ),
+        (
+            "evictions",
+            Json::Num(metrics.evictions.load(Ordering::Relaxed) as f64),
+        ),
     ];
-    if let Some(slot) = slot {
+    if let Some(slot) = default_slot(ctx) {
         let vm = slot.current();
         fields.push(("model_version", Json::Num(vm.version as f64)));
         if let Some(p) = vm.precision() {
@@ -368,6 +716,60 @@ fn stats_json(metrics: &Metrics, slot: Option<&ModelSlot>) -> Json {
         fields.push(("p50_ms", Json::Num(s.p50 * 1e3)));
         fields.push(("p95_ms", Json::Num(s.p95 * 1e3)));
         fields.push(("mean_ms", Json::Num(s.mean * 1e3)));
+    }
+    // Per-slot breakdown: every resident model plus every model that
+    // ever took traffic (counters are history — an eviction or unload
+    // must not erase a model's request/latency record from `stats`).
+    // Reads go through the snapshot, never `metrics.model()` — a stats
+    // poll must not mint permanent entries for untouched models. The
+    // top-level keys above keep their historical global meaning.
+    if let Some(store) = &ctx.store {
+        let history: std::collections::BTreeMap<String, Arc<ModelMetrics>> =
+            metrics.model_snapshot().into_iter().collect();
+        let mut names = store.names();
+        for name in history.keys() {
+            if !names.contains(name) {
+                names.push(name.clone());
+            }
+        }
+        names.sort();
+        let mut models = Vec::new();
+        for name in names {
+            let mm = history.get(&name);
+            let counter = |f: fn(&ModelMetrics) -> &std::sync::atomic::AtomicU64| {
+                mm.map_or(0.0, |m| f(m).load(Ordering::Relaxed) as f64)
+            };
+            let mut mf = vec![
+                ("requests", Json::Num(counter(|m| &m.requests))),
+                ("responses", Json::Num(counter(|m| &m.responses))),
+                ("errors", Json::Num(counter(|m| &m.errors))),
+                ("swaps", Json::Num(counter(|m| &m.swaps))),
+                ("swap_failures", Json::Num(counter(|m| &m.swap_failures))),
+            ];
+            match store.get(&name) {
+                Some(slot) => {
+                    let vm = slot.current();
+                    mf.push(("resident", Json::Bool(true)));
+                    mf.push(("version", Json::Num(vm.version as f64)));
+                    if let Some(p) = vm.precision() {
+                        mf.push(("precision", Json::Str(p.name().into())));
+                    }
+                }
+                None => mf.push(("resident", Json::Bool(false))),
+            }
+            if let Some(m) = mm {
+                if let Some(idle) = m.idle_secs() {
+                    mf.push(("last_used_s", Json::Num(idle)));
+                }
+                if let Some(s) = m.latency_summary() {
+                    mf.push(("p50_ms", Json::Num(s.p50 * 1e3)));
+                    mf.push(("p95_ms", Json::Num(s.p95 * 1e3)));
+                    mf.push(("mean_ms", Json::Num(s.mean * 1e3)));
+                }
+            }
+            models.push((name, Json::obj(mf)));
+        }
+        fields.push(("models", Json::Obj(models.into_iter().collect())));
     }
     Json::obj(fields)
 }
@@ -403,14 +805,18 @@ impl Client {
         Ok(r.get("ok").and_then(Json::as_bool).unwrap_or(false))
     }
 
-    pub fn infer(&mut self, input: &[f32]) -> Result<Vec<f32>> {
+    fn infer_inner(&mut self, model: Option<&str>, input: &[f32]) -> Result<Vec<f32>> {
         let id = self.next_id;
         self.next_id += 1;
-        let r = self.roundtrip(Json::obj(vec![
+        let mut fields = vec![
             ("op", "infer".into()),
             ("id", Json::Num(id as f64)),
             ("input", Json::nums_f32(input)),
-        ]))?;
+        ];
+        if let Some(model) = model {
+            fields.push(("model", Json::Str(model.into())));
+        }
+        let r = self.roundtrip(Json::obj(fields))?;
         if let Some(err) = r.get("error").and_then(Json::as_str) {
             anyhow::bail!("server error: {err}");
         }
@@ -419,23 +825,86 @@ impl Client {
             .ok_or_else(|| anyhow::anyhow!("malformed response"))
     }
 
+    /// Infer on the server's default model.
+    pub fn infer(&mut self, input: &[f32]) -> Result<Vec<f32>> {
+        self.infer_inner(None, input)
+    }
+
+    /// Infer on a named model.
+    pub fn infer_model(&mut self, model: &str, input: &[f32]) -> Result<Vec<f32>> {
+        self.infer_inner(Some(model), input)
+    }
+
     pub fn stats(&mut self) -> Result<Json> {
         self.roundtrip(Json::obj(vec![("op", "stats".into())]))
     }
 
-    /// Hot-swap the served model to the artifact at `path`; returns the
-    /// new deployment version.
-    pub fn swap(&mut self, path: &str) -> Result<u64> {
-        let r = self.roundtrip(Json::obj(vec![
-            ("op", "swap".into()),
-            ("path", Json::Str(path.into())),
-        ]))?;
+    /// The model registry listing (`{"op":"models"}`).
+    pub fn models(&mut self) -> Result<Json> {
+        let r = self.roundtrip(Json::obj(vec![("op", "models".into())]))?;
         if let Some(err) = r.get("error").and_then(Json::as_str) {
-            anyhow::bail!("swap failed: {err}");
+            anyhow::bail!("models failed: {err}");
         }
+        Ok(r)
+    }
+
+    fn deploy(&mut self, op: &str, model: Option<&str>, path: &str) -> Result<Json> {
+        let mut fields = vec![("op", Json::Str(op.into())), ("path", Json::Str(path.into()))];
+        if let Some(model) = model {
+            fields.push(("model", Json::Str(model.into())));
+        }
+        let r = self.roundtrip(Json::obj(fields))?;
+        if let Some(err) = r.get("error").and_then(Json::as_str) {
+            anyhow::bail!("{op} failed: {err}");
+        }
+        Ok(r)
+    }
+
+    fn version_of(r: &Json, op: &str) -> Result<u64> {
         r.get("version")
             .and_then(Json::as_f64)
             .map(|v| v as u64)
-            .ok_or_else(|| anyhow::anyhow!("malformed swap response"))
+            .ok_or_else(|| anyhow::anyhow!("malformed {op} response"))
+    }
+
+    /// Hot-swap the default model to the artifact at `path`; returns the
+    /// new deployment version.
+    pub fn swap(&mut self, path: &str) -> Result<u64> {
+        let r = self.deploy("swap", None, path)?;
+        Self::version_of(&r, "swap")
+    }
+
+    /// Hot-swap a named model's slot; returns the new version.
+    pub fn swap_model(&mut self, model: &str, path: &str) -> Result<u64> {
+        let r = self.deploy("swap", Some(model), path)?;
+        Self::version_of(&r, "swap")
+    }
+
+    /// Make `model` resident from the artifact at `path`; returns the
+    /// deployed version (1 for a fresh slot) and any evicted model names.
+    pub fn load(&mut self, model: &str, path: &str) -> Result<(u64, Vec<String>)> {
+        let r = self.deploy("load", Some(model), path)?;
+        let evicted = r
+            .get("evicted")
+            .and_then(Json::as_arr)
+            .map(|xs| {
+                xs.iter()
+                    .filter_map(|j| j.as_str().map(String::from))
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok((Self::version_of(&r, "load")?, evicted))
+    }
+
+    /// Drop `model` from the registry (the pinned default is refused).
+    pub fn unload(&mut self, model: &str) -> Result<()> {
+        let r = self.roundtrip(Json::obj(vec![
+            ("op", "unload".into()),
+            ("model", Json::Str(model.into())),
+        ]))?;
+        if let Some(err) = r.get("error").and_then(Json::as_str) {
+            anyhow::bail!("unload failed: {err}");
+        }
+        Ok(())
     }
 }

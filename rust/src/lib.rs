@@ -37,10 +37,13 @@
 //! * [`train`] — the prune→retrain orchestrator reproducing the accuracy
 //!   experiments (Figs. 1/5, Table I) on micro models.
 //! * [`coordinator`] — a serving layer (router, dynamic batcher, worker
-//!   pool, metrics) exposing sparse-model inference over TCP.
+//!   pool, per-model metrics) exposing multi-model routed sparse-model
+//!   inference over TCP.
 //! * [`model_store`] — the `.gsm` versioned model artifact format
-//!   (checksummed writer + validating reader) and the `Arc`-swappable
-//!   [`model_store::ModelSlot`] behind zero-downtime weight hot-swap.
+//!   (checksummed writer + validating reader), the `Arc`-swappable
+//!   [`model_store::ModelSlot`] behind zero-downtime weight hot-swap, and
+//!   the capacity-bounded LRU [`model_store::ModelStore`] registry behind
+//!   multi-model serving.
 //! * [`util`] / [`testing`] / [`bench`] — in-tree substrates (PRNG, JSON,
 //!   CLI, thread pool, stats, property testing, bench harness). The build
 //!   environment is offline, so these are implemented from scratch rather

@@ -2,7 +2,9 @@
 //!
 //! ```text
 //! gs-sparse serve    [--backend native|pjrt] [--bind 127.0.0.1:7070] [--workers 1]
-//!                    native: [--model model.gsm]  (serve a .gsm artifact)
+//!                    native: [--models a=a.gsm,b=b.gsm] [--max-models N]
+//!                            [--default-model a]   (multi-model routed serving)
+//!                            or [--model model.gsm]  (serve one .gsm artifact)
 //!                            or a random model from:
 //!                            [--inputs 64] [--hidden 256] [--outputs 64] [--batch 16]
 //!                            [--b 16] [--k 16] [--sparsity 0.9] [--seed 42]
@@ -19,16 +21,18 @@
 //!
 //! The default `serve` backend is the native execution engine
 //! (`kernels::exec`): it needs no XLA runtime. It serves through a
-//! versioned model slot, so `{"op":"swap","path":"new.gsm"}` over the
-//! TCP protocol hot-deploys a new `.gsm` artifact with zero downtime.
+//! registry of versioned model slots: requests route by an optional
+//! `"model"` field, `{"op":"swap"|"load","path":"new.gsm"}` hot-deploys
+//! `.gsm` artifacts with zero downtime, and `--max-models` bounds
+//! residency with LRU eviction of cold models (the default is pinned).
 //! `export` writes such artifacts (deterministic random pruned models —
 //! the same pipeline `serve` uses in-process). Build with
 //! `--features pjrt` (and the real `xla` crate) to serve through the
 //! Pallas AOT artifact instead.
 
-use anyhow::{anyhow, Result};
-use gs_sparse::coordinator::{serve, serve_slot, server::ServeConfig, Engine, SparseModel};
-use gs_sparse::model_store::ModelArtifact;
+use anyhow::{anyhow, ensure, Result};
+use gs_sparse::coordinator::{serve, serve_store, server::ServeConfig, Engine, SparseModel};
+use gs_sparse::model_store::{ModelArtifact, ModelSlot, ModelStore};
 use gs_sparse::pruning::prune;
 use gs_sparse::sparse::{Dense, GsFormat, Pattern};
 use gs_sparse::testing::{build_random_artifact, build_random_model, spec_from_args, ModelSpec};
@@ -85,30 +89,50 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let window_ms = args.usize("window-ms", 2) as u64;
 
     if backend == "native" {
-        // Slot-backed serving: one shared model, hot-swappable via
-        // {"op":"swap","path":"model.gsm"} with zero downtime.
+        // Store-backed routed serving: named hot-swappable model slots,
+        // {"op":"infer","model":...} routes, {"op":"swap"|"load"|"unload"}
+        // deploy with zero downtime, --max-models LRU-evicts cold slots.
         let threads = args.usize("threads", 0);
-        let (model, source, banner) = match args.options.get("model") {
-            Some(path) => {
-                let artifact = ModelArtifact::load(path)?;
-                let banner = format!("artifact {path}: {}", artifact.describe());
-                (artifact.instantiate(threads)?, path.clone(), banner)
-            }
+        let engine = match args.options.get("models") {
+            Some(spec) => multi_model_engine(args, spec, threads)?,
             None => {
-                let spec = native_spec(args)?;
-                let banner = format!(
-                    "native {} engine @ {:.0}% sparse output layer, {} plan",
-                    spec.pattern.name(),
-                    spec.sparsity * 100.0,
-                    spec.precision.name(),
-                );
-                let model = build_random_model(&spec)?.model;
-                (model, "inline-random".to_string(), banner)
+                let (model, source, banner) = match args.options.get("model") {
+                    Some(path) => {
+                        let artifact = ModelArtifact::load(path)?;
+                        let banner = format!("artifact {path}: {}", artifact.describe());
+                        (artifact.instantiate(threads)?, path.clone(), banner)
+                    }
+                    None => {
+                        let spec = native_spec(args)?;
+                        let banner = format!(
+                            "native {} engine @ {:.0}% sparse output layer, {} plan",
+                            spec.pattern.name(),
+                            spec.sparsity * 100.0,
+                            spec.precision.name(),
+                        );
+                        let model = build_random_model(&spec)?.model;
+                        (model, "inline-random".to_string(), banner)
+                    }
+                };
+                println!("model \"default\": {banner}");
+                Engine::new(model, &source, threads)
             }
         };
-        let (inputs, max_batch) = (model.inputs, model.max_batch);
-        let engine = Engine::new(model, &source, threads);
-        let handle = serve_slot(
+        // Admission is per-routed-slot; the config records the default
+        // model's width and the widest batch capacity as the global cap.
+        let default_slot = engine.default_slot();
+        let inputs = default_slot.input_width();
+        let max_batch = engine
+            .store
+            .names()
+            .iter()
+            .filter_map(|n| engine.store.get(n))
+            .map(|s| s.batch_capacity())
+            .max()
+            .unwrap_or(default_slot.batch_capacity());
+        let n_models = engine.store.len();
+        let default_name = engine.default_model.clone();
+        let handle = serve_store(
             &engine,
             ServeConfig {
                 bind,
@@ -119,12 +143,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
             },
         )?;
         println!(
-            "serving GS-sparse MLP on {} ({shown_workers} workers, batch {max_batch}, {banner}, version 1)",
+            "serving GS-sparse MLP on {} ({shown_workers} workers, batch cap {max_batch}, \
+             {n_models} model(s), default \"{default_name}\")",
             handle.addr
         );
         println!(
-            "protocol: JSON lines — {{\"op\":\"infer\",\"id\":1,\"input\":[...{inputs} floats]}}, \
-             {{\"op\":\"swap\",\"path\":\"model.gsm\"}}, {{\"op\":\"stats\"}}"
+            "protocol: JSON lines — {{\"op\":\"infer\",\"id\":1,\"model\":\"name\",\
+             \"input\":[...]}}, {{\"op\":\"swap\"|\"load\",\"model\":\"name\",\
+             \"path\":\"model.gsm\"}}, {{\"op\":\"unload\",\"model\":\"name\"}}, \
+             {{\"op\":\"models\"}}, {{\"op\":\"stats\"}}"
         );
         loop {
             std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -154,6 +181,46 @@ fn cmd_serve(args: &Args) -> Result<()> {
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+/// `serve --models name=path.gsm,...`: load every named artifact into a
+/// capacity-bounded [`ModelStore`] (`--max-models`, 0 = unbounded) and
+/// pin the default (`--default-model`, else the first listed).
+fn multi_model_engine(args: &Args, spec: &str, threads: usize) -> Result<Engine> {
+    let mut entries: Vec<(String, String)> = Vec::new();
+    for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+        let (name, path) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow!("--models expects name=path.gsm entries, got \"{part}\""))?;
+        ensure!(!name.trim().is_empty(), "--models entry \"{part}\" has an empty name");
+        let name = name.trim().to_string();
+        ensure!(
+            !entries.iter().any(|(n, _)| *n == name),
+            "--models names model \"{name}\" twice (a later entry would silently replace the \
+             earlier one)"
+        );
+        entries.push((name, path.trim().to_string()));
+    }
+    ensure!(!entries.is_empty(), "--models is empty");
+    let default_name = args.get("default-model", &entries[0].0).to_string();
+    ensure!(
+        entries.iter().any(|(n, _)| *n == default_name),
+        "--default-model \"{default_name}\" is not among the --models entries"
+    );
+    let max_models = args.usize("max-models", 0);
+    ensure!(
+        max_models == 0 || entries.len() <= max_models,
+        "--max-models {max_models} < {} initial models (refusing to evict at startup)",
+        entries.len()
+    );
+    let store = std::sync::Arc::new(ModelStore::with_capacity(max_models, &default_name));
+    for (name, path) in &entries {
+        let artifact = ModelArtifact::load(path)?;
+        println!("model \"{name}\": artifact {path}: {}", artifact.describe());
+        let model = artifact.instantiate(threads)?;
+        store.register(name, std::sync::Arc::new(ModelSlot::new(model, path, threads)))?;
+    }
+    Engine::from_store(store, &default_name, threads)
 }
 
 /// Build the deterministic random pruned model for the given spec and

@@ -15,7 +15,9 @@
 //! * [`store`] — [`ModelSlot`], the versioned `Arc`-swappable slot the
 //!   TCP server executes through (`{"op":"swap","path":...}` deploys a
 //!   new pruning with zero downtime), and [`ModelStore`], the named
-//!   registry of slots.
+//!   registry behind multi-model routed serving: touch-on-infer LRU
+//!   recency, a capacity bound with graceful eviction of cold models,
+//!   and a pinned default slot eviction never removes.
 
 pub mod artifact;
 pub mod store;

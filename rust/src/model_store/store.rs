@@ -9,14 +9,19 @@
 //! inside one batch. The displaced model is freed when its last in-flight
 //! batch drops its `Arc`.
 //!
-//! [`ModelStore`] is a named registry of slots — one slot per deployed
-//! model today (`"default"` for the TCP server), the substrate for
-//! multi-model and sharded serving later.
+//! [`ModelStore`] is the named registry of slots behind multi-model
+//! serving: requests route by slot name, [`ModelStore::acquire`] bumps a
+//! slot's recency on every routed infer, and a capacity bound
+//! (`max_models`) triggers **LRU eviction of cold models** when a new one
+//! is registered. The pinned default slot is never evicted, and eviction
+//! is graceful: it only drops the registry's `Arc` — requests and batches
+//! already holding the slot (or a `VersionedModel` snapshot) finish
+//! undisturbed.
 
 use super::artifact::ModelArtifact;
 use crate::coordinator::SparseModel;
 use crate::kernels::exec::PlanPrecision;
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
@@ -87,6 +92,12 @@ impl ModelSlot {
         self.input_width
     }
 
+    /// The batch capacity every generation of this slot guarantees (the
+    /// serving contract floor — a later generation may accept more).
+    pub fn batch_capacity(&self) -> usize {
+        self.min_batch
+    }
+
     /// Install `model` as the next generation and return exactly the
     /// generation that was installed (its version/precision — not
     /// whatever a concurrent later swap may have made current).
@@ -132,30 +143,174 @@ impl ModelSlot {
     }
 }
 
-/// Named registry of model slots.
-#[derive(Default)]
+/// A registered slot plus its LRU recency stamp.
+struct StoreEntry {
+    slot: Arc<ModelSlot>,
+    /// Logical-clock tick of the last [`ModelStore::acquire`] (or the
+    /// registration itself). Larger = more recently used.
+    last_used: AtomicU64,
+}
+
+/// Named registry of model slots with optional LRU capacity bounding.
 pub struct ModelStore {
-    slots: RwLock<BTreeMap<String, Arc<ModelSlot>>>,
+    slots: RwLock<BTreeMap<String, StoreEntry>>,
+    /// Monotonic logical clock backing LRU recency (ticks on every
+    /// acquire/registration; an atomic under the map's read lock, so the
+    /// infer hot path never takes the write lock).
+    clock: AtomicU64,
+    /// Maximum resident models (0 = unbounded).
+    max_models: usize,
+    /// The slot name LRU eviction must never remove.
+    pinned: String,
+}
+
+impl Default for ModelStore {
+    fn default() -> ModelStore {
+        ModelStore::new()
+    }
 }
 
 impl ModelStore {
+    /// Unbounded store with `"default"` pinned.
     pub fn new() -> ModelStore {
-        ModelStore::default()
+        ModelStore::with_capacity(0, "default")
     }
 
-    /// Register (or replace) a named slot.
-    pub fn register(&self, name: &str, slot: Arc<ModelSlot>) {
-        self.slots.write().unwrap().insert(name.to_string(), slot);
+    /// A store holding at most `max_models` resident slots (0 =
+    /// unbounded); `pinned` names the slot eviction must never remove.
+    pub fn with_capacity(max_models: usize, pinned: &str) -> ModelStore {
+        ModelStore {
+            slots: RwLock::new(BTreeMap::new()),
+            clock: AtomicU64::new(1),
+            max_models,
+            pinned: pinned.to_string(),
+        }
     }
 
-    /// Look up a slot by name.
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Register (or replace) a named slot, evicting least-recently-used
+    /// cold models if the capacity bound is exceeded. Returns the names
+    /// evicted to make room (empty when under capacity). Fails — and
+    /// leaves the store unchanged — if capacity cannot be honored
+    /// without evicting the pinned slot or `name` itself.
+    pub fn register(&self, name: &str, slot: Arc<ModelSlot>) -> Result<Vec<String>> {
+        let mut map = self.slots.write().unwrap();
+        self.insert_locked(&mut map, name, slot)
+    }
+
+    /// Register `name` only if it is not already resident — one atomic
+    /// check+insert under the write lock, so two concurrent loads of the
+    /// same fresh name cannot both "win". `Ok(None)` means the name is
+    /// already resident (the caller should swap into the existing slot,
+    /// which applies the serving-contract check); `Ok(Some(evicted))` is
+    /// a successful fresh registration.
+    pub fn register_new(&self, name: &str, slot: Arc<ModelSlot>) -> Result<Option<Vec<String>>> {
+        let mut map = self.slots.write().unwrap();
+        if map.contains_key(name) {
+            return Ok(None);
+        }
+        self.insert_locked(&mut map, name, slot).map(Some)
+    }
+
+    /// The single insert point behind [`ModelStore::register`] and
+    /// [`ModelStore::register_new`]: evict-then-insert under the
+    /// caller's write lock.
+    fn insert_locked(
+        &self,
+        map: &mut BTreeMap<String, StoreEntry>,
+        name: &str,
+        slot: Arc<ModelSlot>,
+    ) -> Result<Vec<String>> {
+        let replacing = map.contains_key(name);
+        let mut evicted = Vec::new();
+        if self.max_models > 0 && !replacing {
+            // Evict coldest non-pinned entries until one seat is free.
+            while map.len() + 1 > self.max_models {
+                let coldest = map
+                    .iter()
+                    .filter(|(n, _)| **n != self.pinned)
+                    .min_by_key(|(_, e)| e.last_used.load(Ordering::Relaxed))
+                    .map(|(n, _)| n.clone());
+                match coldest {
+                    Some(n) => {
+                        map.remove(&n);
+                        evicted.push(n);
+                    }
+                    None => bail!(
+                        "cannot load \"{name}\": store capacity {} is exhausted by the pinned \
+                         default model",
+                        self.max_models
+                    ),
+                }
+            }
+        }
+        map.insert(
+            name.to_string(),
+            StoreEntry {
+                slot,
+                last_used: AtomicU64::new(self.tick()),
+            },
+        );
+        Ok(evicted)
+    }
+
+    /// Look up a slot by name without touching its recency (admin reads:
+    /// `models`, `stats`, swap routing).
     pub fn get(&self, name: &str) -> Option<Arc<ModelSlot>> {
-        self.slots.read().unwrap().get(name).cloned()
+        self.slots
+            .read()
+            .unwrap()
+            .get(name)
+            .map(|e| Arc::clone(&e.slot))
+    }
+
+    /// Look up a slot for an infer request: returns it *and* bumps its
+    /// LRU recency (touch-on-infer). Read lock + one atomic store — the
+    /// hot path never contends with registration.
+    pub fn acquire(&self, name: &str) -> Option<Arc<ModelSlot>> {
+        let map = self.slots.read().unwrap();
+        let entry = map.get(name)?;
+        entry.last_used.store(self.tick(), Ordering::Relaxed);
+        Some(Arc::clone(&entry.slot))
+    }
+
+    /// Remove a slot. Fails on the pinned default or an unknown name.
+    /// Graceful: in-flight holders of the slot `Arc` keep serving.
+    pub fn unload(&self, name: &str) -> Result<()> {
+        ensure!(
+            name != self.pinned,
+            "cannot unload \"{name}\": it is the pinned default model"
+        );
+        let removed = self.slots.write().unwrap().remove(name);
+        ensure!(removed.is_some(), "unknown model \"{name}\"");
+        Ok(())
     }
 
     /// Registered slot names, sorted.
     pub fn names(&self) -> Vec<String> {
         self.slots.read().unwrap().keys().cloned().collect()
+    }
+
+    /// Number of resident models.
+    pub fn len(&self) -> usize {
+        self.slots.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.read().unwrap().is_empty()
+    }
+
+    /// The capacity bound (0 = unbounded).
+    pub fn max_models(&self) -> usize {
+        self.max_models
+    }
+
+    /// The slot name eviction never removes.
+    pub fn pinned_name(&self) -> &str {
+        &self.pinned
     }
 }
 
@@ -177,6 +332,14 @@ mod tests {
             seed,
             ..ModelSpec::default()
         }
+    }
+
+    fn slot(seed: u64) -> Arc<ModelSlot> {
+        Arc::new(ModelSlot::new(
+            build_random_model(&spec(seed)).unwrap().model,
+            &format!("inline-{seed}"),
+            1,
+        ))
     }
 
     #[test]
@@ -221,9 +384,133 @@ mod tests {
     fn store_registers_and_lists() {
         let store = ModelStore::new();
         assert!(store.get("default").is_none());
-        let m = build_random_model(&spec(1)).unwrap().model;
-        store.register("default", Arc::new(ModelSlot::new(m, "inline", 1)));
+        store.register("default", slot(1)).unwrap();
         assert!(store.get("default").is_some());
         assert_eq!(store.names(), vec!["default".to_string()]);
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.max_models(), 0, "ModelStore::new is unbounded");
+    }
+
+    #[test]
+    fn lru_recency_updated_on_acquire() {
+        let store = ModelStore::with_capacity(3, "default");
+        store.register("default", slot(1)).unwrap();
+        store.register("a", slot(2)).unwrap();
+        store.register("b", slot(3)).unwrap();
+        // "a" is older than "b" by registration; an infer-path acquire
+        // of "a" must make "b" the eviction candidate.
+        assert!(store.acquire("a").is_some());
+        let evicted = store.register("c", slot(4)).unwrap();
+        assert_eq!(evicted, vec!["b".to_string()]);
+        assert_eq!(
+            store.names(),
+            vec!["a".to_string(), "c".to_string(), "default".to_string()]
+        );
+        // get() must NOT touch recency: read "c" via get, then acquire
+        // "a"; the next eviction takes "c" (get left it cold)… but "c"
+        // was registered after the acquire of "a", so acquire "a" again
+        // to make the ordering unambiguous.
+        assert!(store.get("c").is_some());
+        assert!(store.acquire("a").is_some());
+        let evicted = store.register("d", slot(5)).unwrap();
+        assert_eq!(evicted, vec!["c".to_string()], "get() must not bump recency");
+    }
+
+    #[test]
+    fn pinned_default_survives_pressure() {
+        let store = ModelStore::with_capacity(2, "default");
+        store.register("default", slot(1)).unwrap();
+        store.register("a", slot(2)).unwrap();
+        // Even though "default" is the coldest entry (never acquired,
+        // registered first), pressure evicts "a", not the pinned slot.
+        for (i, name) in ["b", "c", "d"].iter().enumerate() {
+            let evicted = store.register(name, slot(10 + i as u64)).unwrap();
+            assert_eq!(evicted.len(), 1);
+            assert_ne!(evicted[0], "default", "pinned slot must never be evicted");
+            assert!(store.get("default").is_some());
+        }
+        assert_eq!(store.len(), 2);
+    }
+
+    #[test]
+    fn evicted_slot_stays_alive_for_holders() {
+        let store = ModelStore::with_capacity(2, "default");
+        store.register("default", slot(1)).unwrap();
+        store.register("a", slot(2)).unwrap();
+        // An in-flight request holds the slot (and a batch snapshot).
+        let held = store.acquire("a").unwrap();
+        let snapshot = held.current();
+        let evicted = store.register("b", slot(3)).unwrap();
+        assert_eq!(evicted, vec!["a".to_string()]);
+        assert!(store.get("a").is_none(), "registry no longer serves a");
+        // …but the holder's Arc still executes fine.
+        assert_eq!(snapshot.version, 1);
+        let out = snapshot.model.infer_batch(&[vec![0.5; 8]]).unwrap();
+        assert_eq!(out[0].len(), 16);
+    }
+
+    #[test]
+    fn capacity_one_pins_the_default() {
+        let store = ModelStore::with_capacity(1, "default");
+        store.register("default", slot(1)).unwrap();
+        // No evictable seat: the only resident is pinned.
+        let err = store.register("a", slot(2)).unwrap_err();
+        assert!(format!("{err:#}").contains("capacity 1"), "{err:#}");
+        assert_eq!(store.names(), vec!["default".to_string()]);
+        // Replacing the pinned slot in place is still allowed (it is a
+        // replace, not a second resident).
+        store.register("default", slot(3)).unwrap();
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.get("default").unwrap().current().source, "inline-3");
+    }
+
+    #[test]
+    fn capacity_one_unpinned_rotates() {
+        // Capacity 1 with the pinned name never registered: each load
+        // evicts the previous resident.
+        let store = ModelStore::with_capacity(1, "default");
+        store.register("a", slot(1)).unwrap();
+        let evicted = store.register("b", slot(2)).unwrap();
+        assert_eq!(evicted, vec!["a".to_string()]);
+        assert_eq!(store.names(), vec!["b".to_string()]);
+    }
+
+    #[test]
+    fn unload_refuses_pinned_and_unknown() {
+        let store = ModelStore::with_capacity(0, "default");
+        store.register("default", slot(1)).unwrap();
+        store.register("a", slot(2)).unwrap();
+        assert!(store.unload("default").is_err());
+        assert!(store.unload("nope").is_err());
+        store.unload("a").unwrap();
+        assert_eq!(store.names(), vec!["default".to_string()]);
+    }
+
+    #[test]
+    fn evict_then_reload_restores_serving() {
+        let store = ModelStore::with_capacity(2, "default");
+        store.register("default", slot(1)).unwrap();
+        store.register("a", slot(7)).unwrap();
+        let want = store
+            .acquire("a")
+            .unwrap()
+            .current()
+            .model
+            .infer_batch(&[vec![0.25; 8]])
+            .unwrap();
+        // Pressure "a" out, then reload the same model under the same
+        // name: serving must be bit-identical to before the eviction.
+        store.register("b", slot(8)).unwrap();
+        assert!(store.get("a").is_none());
+        let evicted = store.register("a", slot(7)).unwrap();
+        assert_eq!(evicted, vec!["b".to_string()]);
+        let got = store
+            .acquire("a")
+            .unwrap()
+            .current()
+            .model
+            .infer_batch(&[vec![0.25; 8]])
+            .unwrap();
+        assert_eq!(got, want, "evict → reload must restore bit-identical serving");
     }
 }

@@ -163,7 +163,7 @@ fn serving_roundtrip_and_batching() {
         },
     )
     .unwrap();
-    assert_eq!(handle.slot.as_ref().unwrap().version(), 1);
+    assert_eq!(handle.default_slot().unwrap().version(), 1);
 
     let mut client = Client::connect(handle.addr).unwrap();
     assert!(client.ping().unwrap());

@@ -1,0 +1,363 @@
+//! Multi-model routed serving acceptance tests: routing isolation under
+//! concurrency, unknown-model errors, hot swap of a non-default slot
+//! under traffic, runtime load/unload, and graceful LRU eviction.
+
+use gs_sparse::coordinator::{serve_store, server::ServeConfig, Client, Engine, ServerHandle};
+use gs_sparse::model_store::{ModelSlot, ModelStore};
+use gs_sparse::sparse::Pattern;
+use gs_sparse::testing::{build_random_artifact, BuiltModel, ModelSpec};
+use gs_sparse::util::{Json, Prng};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Alpha: 12-wide inputs. Beta (below) differs in every geometry field,
+/// so a crossed route cannot produce a well-formed response.
+fn spec_a(seed: u64) -> ModelSpec {
+    ModelSpec {
+        inputs: 12,
+        hidden: 64,
+        outputs: 32,
+        max_batch: 8,
+        pattern: Pattern::Gs { b: 8, k: 8 },
+        sparsity: 0.75,
+        threads: 1,
+        seed,
+        ..ModelSpec::default()
+    }
+}
+
+fn spec_b(seed: u64) -> ModelSpec {
+    ModelSpec {
+        inputs: 20,
+        hidden: 48,
+        outputs: 16,
+        max_batch: 4,
+        pattern: Pattern::Gs { b: 8, k: 4 },
+        sparsity: 0.75,
+        threads: 1,
+        seed,
+        ..ModelSpec::default()
+    }
+}
+
+fn temp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("gsm-mm-test-{tag}-{}.gsm", std::process::id()))
+}
+
+/// Serve `models` from a store with the given capacity; the first name
+/// is the pinned default.
+fn serve_models(
+    models: Vec<(&str, BuiltModel)>,
+    max_models: usize,
+) -> (ServerHandle, Vec<BuiltModel>) {
+    let default = models[0].0.to_string();
+    let store = Arc::new(ModelStore::with_capacity(max_models, &default));
+    let mut built = Vec::new();
+    let mut widest_batch = 1;
+    for (name, bm) in models {
+        widest_batch = widest_batch.max(bm.model.max_batch);
+        let slot = ModelSlot::new(build_from(&bm), &format!("inline-{name}"), 1);
+        store.register(name, Arc::new(slot)).unwrap();
+        built.push(bm);
+    }
+    let input_width = built[0].model.inputs;
+    let engine = Engine::from_store(store, &default, 1).unwrap();
+    let handle = serve_store(
+        &engine,
+        ServeConfig {
+            bind: "127.0.0.1:0".into(),
+            workers: 2,
+            input_width,
+            max_batch: widest_batch,
+            window_ms: 1,
+        },
+    )
+    .unwrap();
+    (handle, built)
+}
+
+/// Rebuild the exact same serving model from a BuiltModel's raw parts
+/// (so the registry's model and the reference are independent objects
+/// with bit-identical weights).
+fn build_from(bm: &BuiltModel) -> gs_sparse::coordinator::SparseModel {
+    gs_sparse::coordinator::SparseModel::native(
+        bm.w1.clone(),
+        bm.b1.clone(),
+        &bm.gs,
+        bm.b2.clone(),
+        bm.model.inputs,
+        bm.model.max_batch,
+        1,
+        bm.model.precision().unwrap(),
+    )
+    .unwrap()
+}
+
+fn build(spec: &ModelSpec) -> BuiltModel {
+    gs_sparse::testing::build_random_model(spec).unwrap()
+}
+
+/// Acceptance: two models with different geometries served concurrently
+/// from one server; every routed response is bit-identical to its own
+/// in-memory model, and the unqualified route hits the default.
+#[test]
+fn routed_serving_isolates_models() {
+    let (handle, built) = serve_models(vec![("a", build(&spec_a(1))), ("b", build(&spec_b(2)))], 0);
+    let addr = handle.addr;
+
+    let mut rng = Prng::new(9);
+    let probes_a: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(12, 1.0)).collect();
+    let probes_b: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(20, 1.0)).collect();
+    let want_a = built[0].model.infer_batch(&probes_a).unwrap();
+    let want_b = built[1].model.infer_batch(&probes_b).unwrap();
+
+    let hammer = |name: &'static str, probes: Vec<Vec<f32>>, want: Vec<Vec<f32>>| {
+        std::thread::spawn(move || -> anyhow::Result<()> {
+            let mut c = Client::connect(addr)?;
+            for r in 0..40 {
+                let i = r % probes.len();
+                let got = c.infer_model(name, &probes[i])?;
+                anyhow::ensure!(got == want[i], "{name} probe {i}: response crossed models");
+            }
+            Ok(())
+        })
+    };
+    let ha = hammer("a", probes_a.clone(), want_a.clone());
+    let hb = hammer("b", probes_b.clone(), want_b.clone());
+    ha.join().unwrap().unwrap();
+    hb.join().unwrap().unwrap();
+
+    let mut client = Client::connect(addr).unwrap();
+    // Default route is "a"; width checks are per routed model.
+    assert_eq!(client.infer(&probes_a[0]).unwrap(), want_a[0]);
+    let err = client.infer_model("b", &probes_a[0]).unwrap_err();
+    assert!(format!("{err}").contains("20 floats"), "{err}");
+
+    // The registry lists both geometries.
+    let models = client.models().unwrap();
+    assert_eq!(models.get("default").and_then(Json::as_str), Some("a"));
+    let b = models.get("models").unwrap().get("b").unwrap();
+    assert_eq!(b.get("inputs").and_then(Json::as_usize), Some(20));
+    assert_eq!(b.get("outputs").and_then(Json::as_usize), Some(16));
+    assert_eq!(b.get("version").and_then(Json::as_usize), Some(1));
+    assert_eq!(b.get("default").and_then(Json::as_bool), Some(false));
+    handle.stop();
+}
+
+/// Unknown models get clean JSON errors on every op, and the connection
+/// keeps working afterwards.
+#[test]
+fn unknown_model_requests_fail_cleanly() {
+    let (handle, built) = serve_models(vec![("a", build(&spec_a(3)))], 0);
+    let mut client = Client::connect(handle.addr).unwrap();
+    let probe = Prng::new(5).normal_vec(12, 1.0);
+
+    let err = client.infer_model("ghost", &probe).unwrap_err();
+    assert!(format!("{err}").contains("unknown model \"ghost\""), "{err}");
+    let err = client.swap_model("ghost", "/tmp/none.gsm").unwrap_err();
+    assert!(format!("{err}").contains("unknown model"), "{err}");
+    let err = client.unload("ghost").unwrap_err();
+    assert!(format!("{err}").contains("unknown model"), "{err}");
+    // The default (pinned) model refuses unload.
+    let err = client.unload("a").unwrap_err();
+    assert!(format!("{err}").contains("pinned"), "{err}");
+
+    // The same connection still serves.
+    let want = built[0].model.infer_batch(&[probe.clone()]).unwrap();
+    assert_eq!(client.infer(&probe).unwrap(), want[0]);
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.get("errors").and_then(Json::as_f64), Some(0.0));
+    handle.stop();
+}
+
+/// Hot-swap of a non-default slot under live traffic: responses on the
+/// swapped model are always one generation or the other (never torn),
+/// the default model is untouched, and per-model stats record the swap.
+#[test]
+fn non_default_hot_swap_under_traffic() {
+    let (handle, built) = serve_models(vec![("a", build(&spec_a(11))), ("b", build(&spec_b(12)))], 0);
+    let addr = handle.addr;
+    // b's replacement: same geometry, different weights.
+    let (b2_artifact, bm_b2) = build_random_artifact(&spec_b(13)).unwrap();
+    let b2_path = temp_path("b2");
+    b2_artifact.save(&b2_path).unwrap();
+
+    let mut rng = Prng::new(21);
+    let probe_a = rng.normal_vec(12, 1.0);
+    let probe_b = rng.normal_vec(20, 1.0);
+    let want_a = built[0].model.infer_batch(&[probe_a.clone()]).unwrap().remove(0);
+    let want_b1 = built[1].model.infer_batch(&[probe_b.clone()]).unwrap().remove(0);
+    let want_b2 = bm_b2.model.infer_batch(&[probe_b.clone()]).unwrap().remove(0);
+    assert_ne!(want_b1, want_b2);
+
+    const REQS: usize = 50;
+    let clients: Vec<_> = (0..3)
+        .map(|_| {
+            let probe = probe_b.clone();
+            let (w1, w2) = (want_b1.clone(), want_b2.clone());
+            std::thread::spawn(move || -> anyhow::Result<(usize, usize)> {
+                let mut c = Client::connect(addr)?;
+                let (mut n1, mut n2) = (0, 0);
+                for i in 0..REQS {
+                    let out = c.infer_model("b", &probe)?;
+                    if out == w1 {
+                        n1 += 1;
+                    } else if out == w2 {
+                        n2 += 1;
+                    } else {
+                        anyhow::bail!("request {i}: logits match neither b generation");
+                    }
+                }
+                Ok((n1, n2))
+            })
+        })
+        .collect();
+
+    std::thread::sleep(std::time::Duration::from_millis(20));
+    let mut admin = Client::connect(addr).unwrap();
+    let v = admin.swap_model("b", &b2_path.display().to_string()).unwrap();
+    assert_eq!(v, 2);
+
+    for c in clients {
+        let (n1, n2) = c.join().unwrap().unwrap();
+        assert_eq!(n1 + n2, REQS, "requests lost across the swap");
+    }
+    // Post-swap: b serves v2, a is untouched on v1.
+    assert_eq!(admin.infer_model("b", &probe_b).unwrap(), want_b2);
+    assert_eq!(admin.infer_model("a", &probe_a).unwrap(), want_a);
+    let stats = admin.stats().unwrap();
+    assert_eq!(stats.get("model_version").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(stats.get("swaps").and_then(Json::as_f64), Some(1.0));
+    let per = stats.get("models").unwrap();
+    assert_eq!(per.get("b").unwrap().get("version").and_then(Json::as_f64), Some(2.0));
+    assert_eq!(per.get("b").unwrap().get("swaps").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(per.get("a").unwrap().get("swaps").and_then(Json::as_f64), Some(0.0));
+    handle.stop();
+    let _ = std::fs::remove_file(&b2_path);
+}
+
+/// LRU eviction under traffic: every in-flight request admitted before
+/// the eviction completes with correct logits (it holds the slot `Arc`),
+/// later requests get clean unknown-model errors, and a reload restores
+/// bit-identical serving — nothing is ever dropped or wrong.
+#[test]
+fn eviction_is_graceful_and_reload_restores_serving() {
+    let (handle, built) = serve_models(
+        vec![("a", build(&spec_a(31))), ("b", build(&spec_b(32)))],
+        2,
+    );
+    let addr = handle.addr;
+    let (c_artifact, _) = build_random_artifact(&spec_a(33)).unwrap();
+    let c_path = temp_path("evict-c");
+    c_artifact.save(&c_path).unwrap();
+    let (b_artifact, _) = build_random_artifact(&spec_b(32)).unwrap();
+    let b_path = temp_path("evict-b");
+    b_artifact.save(&b_path).unwrap();
+
+    let mut rng = Prng::new(41);
+    let probe_b = rng.normal_vec(20, 1.0);
+    let want_b = built[1].model.infer_batch(&[probe_b.clone()]).unwrap().remove(0);
+
+    const REQS: usize = 60;
+    let hammer = {
+        let probe = probe_b.clone();
+        let want = want_b.clone();
+        std::thread::spawn(move || -> anyhow::Result<(usize, usize)> {
+            let mut c = Client::connect(addr)?;
+            let (mut ok, mut gone) = (0, 0);
+            for i in 0..REQS {
+                match c.infer_model("b", &probe) {
+                    Ok(out) => {
+                        anyhow::ensure!(out == want, "request {i}: wrong logits");
+                        anyhow::ensure!(gone == 0, "request {i}: b came back without a reload");
+                        ok += 1;
+                    }
+                    Err(e) => {
+                        anyhow::ensure!(
+                            format!("{e}").contains("unknown model"),
+                            "request {i}: unexpected error {e}"
+                        );
+                        gone += 1;
+                    }
+                }
+            }
+            Ok((ok, gone))
+        })
+    };
+
+    std::thread::sleep(std::time::Duration::from_millis(15));
+    let mut admin = Client::connect(addr).unwrap();
+    // Warm "a" (pinned anyway), then fill the store: "b" is the only
+    // evictable resident.
+    let (v, evicted) = admin.load("c", &c_path.display().to_string()).unwrap();
+    assert_eq!(v, 1);
+    assert_eq!(evicted, vec!["b".to_string()]);
+
+    let (ok, gone) = hammer.join().unwrap().unwrap();
+    assert_eq!(ok + gone, REQS, "requests were dropped across the eviction");
+
+    // The evicted model's metrics history survives in stats (resident:
+    // false, counters intact) — eviction must not erase the record.
+    let stats = admin.stats().unwrap();
+    let b_entry = stats.get("models").unwrap().get("b").expect("evicted b keeps stats history");
+    assert_eq!(b_entry.get("resident").and_then(Json::as_bool), Some(false));
+    assert!(b_entry.get("version").is_none(), "evicted model has no live version");
+    assert!(b_entry.get("requests").and_then(Json::as_f64).unwrap_or(0.0) >= 1.0);
+
+    // Reload b (evicting cold c — "a" stays pinned): bit-identical again.
+    admin.infer(&Prng::new(42).normal_vec(12, 1.0)).unwrap(); // warm the default
+    let (v, evicted) = admin.load("b", &b_path.display().to_string()).unwrap();
+    assert_eq!(v, 1, "a reloaded slot starts a fresh version line");
+    assert_eq!(evicted, vec!["c".to_string()]);
+    assert_eq!(admin.infer_model("b", &probe_b).unwrap(), want_b);
+
+    let stats = admin.stats().unwrap();
+    assert_eq!(stats.get("evictions").and_then(Json::as_f64), Some(2.0));
+    assert_eq!(stats.get("errors").and_then(Json::as_f64), Some(0.0));
+    handle.stop();
+    let _ = std::fs::remove_file(&c_path);
+    let _ = std::fs::remove_file(&b_path);
+}
+
+/// Runtime `load` onto an existing name is a contract-checked hot swap;
+/// onto a fresh name it registers version 1 and serves immediately.
+#[test]
+fn load_existing_name_swaps_fresh_name_registers() {
+    let (handle, built) = serve_models(vec![("a", build(&spec_a(51)))], 0);
+    let mut client = Client::connect(handle.addr).unwrap();
+
+    // Fresh name.
+    let (d_artifact, bm_d) = build_random_artifact(&spec_b(52)).unwrap();
+    let d_path = temp_path("load-d");
+    d_artifact.save(&d_path).unwrap();
+    let (v, evicted) = client.load("d", &d_path.display().to_string()).unwrap();
+    assert_eq!((v, evicted.len()), (1, 0));
+    let probe_d = Prng::new(53).normal_vec(20, 1.0);
+    let want_d = bm_d.model.infer_batch(&[probe_d.clone()]).unwrap().remove(0);
+    assert_eq!(client.infer_model("d", &probe_d).unwrap(), want_d);
+
+    // Existing name: load routes through the swap path and bumps the
+    // version; a geometry-breaking artifact is rejected and the old
+    // generation keeps serving.
+    let (d2_artifact, bm_d2) = build_random_artifact(&spec_b(54)).unwrap();
+    d2_artifact.save(&d_path).unwrap();
+    let (v, _) = client.load("d", &d_path.display().to_string()).unwrap();
+    assert_eq!(v, 2);
+    let want_d2 = bm_d2.model.infer_batch(&[probe_d.clone()]).unwrap().remove(0);
+    assert_eq!(client.infer_model("d", &probe_d).unwrap(), want_d2);
+
+    let (bad_artifact, _) = build_random_artifact(&spec_a(55)).unwrap();
+    let bad_path = temp_path("load-bad");
+    bad_artifact.save(&bad_path).unwrap();
+    let err = client.load("d", &bad_path.display().to_string()).unwrap_err();
+    assert!(format!("{err}").contains("inputs"), "{err}");
+    assert_eq!(client.infer_model("d", &probe_d).unwrap(), want_d2);
+
+    // The default keeps serving throughout.
+    let probe_a = Prng::new(56).normal_vec(12, 1.0);
+    let want_a = built[0].model.infer_batch(&[probe_a.clone()]).unwrap().remove(0);
+    assert_eq!(client.infer(&probe_a).unwrap(), want_a);
+    handle.stop();
+    let _ = std::fs::remove_file(&d_path);
+    let _ = std::fs::remove_file(&bad_path);
+}

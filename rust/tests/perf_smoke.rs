@@ -1,0 +1,65 @@
+//! CI perf smoke gate (`#[ignore]`d locally; CI runs it with
+//! `cargo test --release -- --ignored perf_smoke`).
+//!
+//! Asserts the prepacked planned spMM actually beats the scalar
+//! `gs_matvec` oracle on a fixed mid-sparsity shape, so a kernel
+//! regression fails the pipeline instead of rotting silently. The
+//! margin is deliberately loose (the planned batched kernel measures
+//! several× the oracle on typical hardware; the gate only demands it
+//! not collapse to parity) and uses best-of-N timing to damp noisy CI
+//! neighbors. Run it in release — a debug build measures nothing real.
+
+use gs_sparse::kernels::exec::{gs_matmul, to_feature_major, GsExecPlan, PlanPrecision};
+use gs_sparse::kernels::native::gs_matvec;
+use gs_sparse::sparse::Pattern;
+use gs_sparse::testing::build_random_gs;
+use gs_sparse::util::Prng;
+use std::time::Instant;
+
+/// Best-of-`reps` wall time of `f` (seconds), after one warmup call.
+fn best_of<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    f();
+    (0..reps)
+        .map(|_| {
+            let t = Instant::now();
+            f();
+            t.elapsed().as_secs_f64()
+        })
+        .fold(f64::INFINITY, f64::min)
+}
+
+#[test]
+#[ignore = "perf gate: run in CI via `cargo test --release -- --ignored perf_smoke`"]
+fn perf_smoke_planned_spmm_beats_scalar_baseline() {
+    // Fixed mid-sparsity shape: 512×512, GS(16,16), 80% sparse, batch 16.
+    let (_, gs) = build_random_gs(512, 512, Pattern::Gs { b: 16, k: 16 }, 0.8, 7).unwrap();
+    let plan = GsExecPlan::with_precision(&gs, 1, PlanPrecision::F32).unwrap();
+    let mut rng = Prng::new(11);
+    let batch = 16usize;
+    let acts: Vec<Vec<f32>> = (0..batch).map(|_| rng.normal_vec(512, 1.0)).collect();
+    let acts_t = to_feature_major(&acts, 512);
+
+    let mut sink = 0.0f32;
+    let scalar = best_of(9, || {
+        for x in &acts {
+            sink += gs_matvec(&gs, x)[0];
+        }
+    });
+    let planned = best_of(9, || {
+        sink += gs_matmul(&plan, &acts_t, batch)[0];
+    });
+    std::hint::black_box(sink);
+
+    let speedup = scalar / planned;
+    println!(
+        "perf_smoke: scalar {:.3}ms planned {:.3}ms speedup {speedup:.2}x",
+        scalar * 1e3,
+        planned * 1e3
+    );
+    assert!(
+        speedup >= 1.2,
+        "planned batched spMM regressed to {speedup:.2}x vs the scalar oracle \
+         (scalar {scalar:.6}s, planned {planned:.6}s); the plan should comfortably \
+         beat per-row gs_matvec on this shape"
+    );
+}

@@ -12,7 +12,7 @@ use gs_sparse::testing::{assert_allclose, default_cases, forall, forall2, Gen, O
 use gs_sparse::util::Prng;
 use std::sync::mpsc::channel;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Pattern choices hosted by a 32×64 matrix.
 fn pattern_gen() -> OneOf<Pattern> {
@@ -166,12 +166,7 @@ fn prop_batcher_no_drop_no_dup_fifo() {
             let batcher = Batcher::new(max_batch, Duration::from_millis(1), metrics);
             let (tx, _rx) = channel();
             for id in 0..n as u64 {
-                batcher.submit(InferRequest {
-                    id,
-                    input: vec![],
-                    enqueued: Instant::now(),
-                    tx: tx.clone(),
-                });
+                batcher.submit(InferRequest::new(id, vec![], tx.clone()));
             }
             batcher.shutdown();
             let mut seen = Vec::new();
