@@ -65,6 +65,7 @@ fn main() -> anyhow::Result<()> {
                         input_width: inputs,
                         max_batch,
                         window_ms: 2,
+                        queue_depth: 0,
                     },
                 )?;
                 // Warm up (first request touches all paths).

@@ -71,6 +71,7 @@ fn main() -> anyhow::Result<()> {
             input_width: inputs,
             max_batch,
             window_ms: 1,
+            queue_depth: 0,
         },
     )?;
 

@@ -94,6 +94,7 @@ fn main() -> anyhow::Result<()> {
             input_width: bm_alpha.model.inputs,
             max_batch: bm_alpha.model.max_batch.max(bm_beta.model.max_batch),
             window_ms: 1,
+            queue_depth: 0,
         },
     )?;
     let addr = handle.addr;

@@ -6,18 +6,23 @@
 //! cargo run --release --example serve_sparse -- \
 //!     [--requests 200] [--clients 4] [--threads 0] [--precision f32|f16] \
 //!     [--inputs 64] [--hidden 256] [--outputs 64] [--batch 16] \
-//!     [--b 16] [--sparsity 0.9]
+//!     [--b 16] [--sparsity 0.9] [--queue-depth 0]
 //! ```
+//!
+//! `--queue-depth N` bounds the request queue: over-limit requests are
+//! shed with an `overloaded` + `retry_after_ms` reply (clients here
+//! honor the hint and retry), and the final stats line reports `shed`.
 
-use gs_sparse::coordinator::{serve_slot, server::ServeConfig, Client, Engine};
+use gs_sparse::coordinator::{serve_slot, server::ServeConfig, Client, Engine, InferOutcome};
 use gs_sparse::testing::{build_random_model, spec_from_args, ModelSpec};
 use gs_sparse::util::{Args, Prng};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse();
     let n_requests = args.usize("requests", 200);
     let n_clients = args.usize("clients", 4);
+    let queue_depth = args.usize("queue-depth", 0);
     // Shared CLI→spec mapping; --threads defaults to 0 (auto-detect).
     let spec = spec_from_args(
         &args,
@@ -43,6 +48,7 @@ fn main() -> anyhow::Result<()> {
             input_width: inputs,
             max_batch,
             window_ms: 2,
+            queue_depth,
         },
     )?;
     println!(
@@ -62,7 +68,19 @@ fn main() -> anyhow::Result<()> {
                 let per_client = n_requests / n_clients;
                 for _ in 0..per_client {
                     let x = rng.normal_vec(inputs, 1.0);
-                    let out = client.infer(&x)?;
+                    // Honor overload back-pressure: sleep out the
+                    // server's retry_after_ms hint and retry instead of
+                    // counting shed requests as failures.
+                    let out = loop {
+                        match client.try_infer(None, &x)? {
+                            InferOutcome::Output(out) => break out,
+                            InferOutcome::Overloaded { retry_after_ms } => {
+                                std::thread::sleep(Duration::from_millis(
+                                    retry_after_ms.clamp(1, 50),
+                                ));
+                            }
+                        }
+                    };
                     anyhow::ensure!(out.len() == outputs, "bad output width");
                 }
                 Ok(per_client)

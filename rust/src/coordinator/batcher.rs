@@ -2,29 +2,92 @@
 //! window expires (the vLLM-router-style admission loop, scaled to this
 //! artifact's static batch).
 //!
-//! Multi-model routing: every request carries the slot it was admitted
-//! against, and a formed batch is always **model-homogeneous** — the
-//! oldest queued request picks the slot, and only requests for the same
-//! slot join its batch (models have different input widths; a mixed
-//! batch could not execute). Requests for other models stay queued in
-//! arrival order and form their own batches (per-model FIFO is
-//! preserved; each `next_batch` call serves the current queue head, so
-//! no model can starve another indefinitely).
+//! The queue is a set of **per-model sub-queues** (keyed by the slot the
+//! request was admitted against) plus a FIFO ready-list of sub-queue
+//! keys. `next_batch` *claims* the oldest ready key exclusively, so two
+//! idle workers drain two different models concurrently instead of both
+//! window-waiting on the same head — the request-level analogue of the
+//! paper's load-balance argument (no lane idles while another drowns).
+//! Claiming also makes per-model counts O(1) (a `VecDeque` length, not
+//! an O(queue) same-key scan) and restores `notify_one` on submit: a
+//! wake can only be consumed by a worker that will actually claim a
+//! ready sub-queue, never by one window-waiting on a different model.
+//!
+//! A formed batch is always **model-homogeneous** — requests for the
+//! same slot `Arc` only (models have different input widths; a mixed
+//! batch could not execute), FIFO within the model, capped by the
+//! model's own serving-contract capacity and the global `max_batch`.
+//! The batching window is anchored at the *head request's enqueue time*,
+//! so worst-case batching delay is bounded by one window no matter how
+//! long the head already sat queued.
+//!
+//! **Bounded admission** (`max_depth > 0`): the total queued-request
+//! count never exceeds `max_depth`. At the bound, admission is
+//! longest-queue-drop fair shedding: an arrival whose model queues less
+//! than the longest unclaimed sub-queue sheds that queue's *newest*
+//! request and takes its place (a flooding model cannot starve a trickle
+//! model); otherwise the arrival itself is shed. Shed requests fail
+//! immediately with an overload [`Reject`] carrying a `retry_after_ms`
+//! backoff hint — they are never silently queued without limit.
 
 use super::metrics::Metrics;
 use crate::model_store::ModelSlot;
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::Ordering;
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// Terminal failure delivered on a request's reply channel instead of an
+/// output row.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Reject {
+    pub error: String,
+    /// Client backoff hint, set when the request was shed under
+    /// overload (serialized as `retry_after_ms` in the protocol).
+    pub retry_after_ms: Option<u64>,
+}
+
+impl Reject {
+    /// A plain execution/infrastructure failure (no backoff hint).
+    pub fn error(msg: impl Into<String>) -> Reject {
+        Reject { error: msg.into(), retry_after_ms: None }
+    }
+
+    fn overloaded(retry_after_ms: u64) -> Reject {
+        Reject {
+            error: "overloaded: request shed to protect tail latency; back off and retry"
+                .to_string(),
+            retry_after_ms: Some(retry_after_ms),
+        }
+    }
+
+    fn shutdown() -> Reject {
+        Reject::error("server shutting down; request not accepted")
+    }
+}
+
+/// Why [`Batcher::submit`] refused a request. The request's `tx` has
+/// already been failed with the matching [`Reject`] when this is
+/// returned — callers waiting on the reply channel need no special
+/// handling; this return value is for callers that want the structured
+/// reason without a channel roundtrip.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Bounded admission shed this request; retry after the hint.
+    Overloaded { retry_after_ms: u64 },
+    /// The batcher is shut down; workers may already be gone, so
+    /// queueing would strand the request forever.
+    ShutDown,
+}
 
 /// One in-flight inference request.
 pub struct InferRequest {
     pub id: u64,
     pub input: Vec<f32>,
     pub enqueued: Instant,
-    /// Where the result row goes (error as Err-string).
-    pub tx: Sender<(u64, Result<Vec<f32>, String>)>,
+    /// Where the result row goes (failure as a [`Reject`]).
+    pub tx: Sender<(u64, Result<Vec<f32>, Reject>)>,
     /// Slot name this request routed to (metrics key; "" in factory
     /// mode, where there is exactly one anonymous model).
     pub model: String,
@@ -41,7 +104,7 @@ pub struct InferRequest {
 impl InferRequest {
     /// An unrouted request (factory mode, tests): no slot, no per-model
     /// cap.
-    pub fn new(id: u64, input: Vec<f32>, tx: Sender<(u64, Result<Vec<f32>, String>)>) -> Self {
+    pub fn new(id: u64, input: Vec<f32>, tx: Sender<(u64, Result<Vec<f32>, Reject>)>) -> Self {
         InferRequest {
             id,
             input,
@@ -57,131 +120,305 @@ impl InferRequest {
     /// against the same slot `Arc` may share a batch). Keying on the
     /// `Arc` pointer rather than the name means a request admitted
     /// before a same-named slot was replaced never shares a batch with
-    /// requests for the replacement.
+    /// requests for the replacement. (Safe against pointer reuse: a
+    /// sub-queue's requests hold the `Arc`, so the address cannot be
+    /// recycled while the sub-queue exists.)
     fn batch_key(&self) -> usize {
         self.slot.as_ref().map_or(0, |s| Arc::as_ptr(s) as usize)
     }
+
+    /// Fail this request's reply channel with `why`.
+    fn fail(self, why: Reject) {
+        let _ = self.tx.send((self.id, Err(why)));
+    }
+}
+
+/// One model's pending requests.
+struct SubQueue {
+    q: VecDeque<InferRequest>,
+    /// A worker holds this sub-queue exclusively (window-waiting or
+    /// extracting); it is not in the ready-list and no other worker may
+    /// drain it, so a claimed queue can never yield an empty batch.
+    claimed: bool,
 }
 
 struct QueueState {
-    queue: VecDeque<InferRequest>,
+    /// Per-model sub-queues, keyed by [`InferRequest::batch_key`].
+    /// Entries exist iff non-empty.
+    queues: BTreeMap<usize, SubQueue>,
+    /// Unclaimed keys with queued requests, oldest-ready first.
+    ready_keys: VecDeque<usize>,
+    /// Total queued requests across every sub-queue (O(1) depth).
+    depth: usize,
     shutdown: bool,
 }
 
 /// MPMC request queue with batch-forming semantics.
 pub struct Batcher {
     state: Mutex<QueueState>,
-    nonempty: Condvar,
+    /// Signaled when a key joins the ready-list (and on shutdown/final
+    /// drain): wakes one worker looking for a sub-queue to claim.
+    ready: Condvar,
+    /// Signaled when a request joins a *claimed* sub-queue (and on
+    /// shutdown): window-waiting workers re-check their O(1) count.
+    stragglers: Condvar,
     pub max_batch: usize,
-    /// How long the first request in a batch may wait for company.
+    /// How long the head request of a batch may wait for company,
+    /// measured from its *enqueue* time.
     pub window: Duration,
+    /// Global bound on queued requests (0 = unbounded, no shedding).
+    pub max_depth: usize,
     pub metrics: Arc<Metrics>,
 }
 
 impl Batcher {
-    pub fn new(max_batch: usize, window: Duration, metrics: Arc<Metrics>) -> Batcher {
+    pub fn new(
+        max_batch: usize,
+        window: Duration,
+        max_depth: usize,
+        metrics: Arc<Metrics>,
+    ) -> Batcher {
         Batcher {
-            state: Mutex::new(QueueState { queue: VecDeque::new(), shutdown: false }),
-            nonempty: Condvar::new(),
+            state: Mutex::new(QueueState {
+                queues: BTreeMap::new(),
+                ready_keys: VecDeque::new(),
+                depth: 0,
+                shutdown: false,
+            }),
+            ready: Condvar::new(),
+            stragglers: Condvar::new(),
             max_batch,
             window,
+            max_depth,
             metrics,
         }
     }
 
-    /// Enqueue a request (from server/router threads).
-    pub fn submit(&self, req: InferRequest) {
-        self.metrics
-            .requests
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let mut st = self.state.lock().unwrap();
-        st.queue.push_back(req);
-        // notify_all, not notify_one: a single wake could be consumed by
-        // a worker window-waiting on a *different* model (it re-counts
-        // its own matches and keeps waiting), leaving an idle worker
-        // asleep while this request sits queued.
-        self.nonempty.notify_all();
+    /// Total queued requests right now (all models).
+    pub fn depth(&self) -> usize {
+        self.state.lock().unwrap().depth
     }
 
-    /// Stop all workers after the queue drains.
+    /// Queued requests right now: the global total and the per-model
+    /// breakdown, read under one lock so the two views are mutually
+    /// consistent (per-name values always sum to the total, minus any
+    /// unnamed factory-mode requests). Sub-queues for the same name —
+    /// e.g. across a hot swap — are summed.
+    pub fn queue_depths(&self) -> (usize, BTreeMap<String, usize>) {
+        let st = self.state.lock().unwrap();
+        let mut per_model = BTreeMap::new();
+        for sq in st.queues.values() {
+            let Some(head) = sq.q.front() else { continue };
+            if !head.model.is_empty() {
+                *per_model.entry(head.model.clone()).or_insert(0) += sq.q.len();
+            }
+        }
+        (st.depth, per_model)
+    }
+
+    /// Backoff hint: roughly how long the queued backlog needs to
+    /// drain — one window per cap-sized batch over the *whole* queue
+    /// (workers round-robin the ready models, so the global depth, not
+    /// just the shed request's own model queue, governs when room
+    /// opens up).
+    fn retry_hint(&self, backlog: usize, cap: usize) -> u64 {
+        let window_ms = self.window.as_millis().max(1) as u64;
+        let per_batch = self.max_batch.min(cap).max(1);
+        window_ms * (backlog / per_batch + 1) as u64
+    }
+
+    /// Count a shed request (global + per-model) and fail its channel.
+    fn shed(&self, req: InferRequest, retry_after_ms: u64) {
+        self.metrics.count_shed(&req.model);
+        req.fail(Reject::overloaded(retry_after_ms));
+    }
+
+    /// Enqueue a request (from server/router threads).
+    ///
+    /// Every attempt counts toward `metrics.requests`, and every
+    /// refused request is failed on its `tx` *before* this returns, so
+    /// `requests == responses + errors + shed` holds and nothing ever
+    /// blocks forever on a reply channel:
+    ///
+    /// * after [`shutdown`](Batcher::shutdown), the request is failed
+    ///   immediately (workers may already be gone — queueing would
+    ///   strand it) and counted as an error;
+    /// * with `max_depth` reached, longest-queue-drop fair shedding
+    ///   runs: if some unclaimed sub-queue is longer than this model's,
+    ///   its newest request is shed to make room (counted against *its*
+    ///   model) and this one is admitted; otherwise this request is
+    ///   shed. Either way exactly one request gets the overload
+    ///   [`Reject`] with a `retry_after_ms` hint.
+    pub fn submit(&self, req: InferRequest) -> Result<(), SubmitError> {
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let key = req.batch_key();
+        let mut st = self.state.lock().unwrap();
+        if st.shutdown {
+            drop(st);
+            self.metrics.count_errors(&req.model, 1);
+            req.fail(Reject::shutdown());
+            return Err(SubmitError::ShutDown);
+        }
+        // Bounded admission with longest-queue-drop fair shedding.
+        let mut victim = None;
+        if self.max_depth > 0 && st.depth >= self.max_depth {
+            let mine = st.queues.get(&key).map_or(0, |sq| sq.q.len());
+            // Claimed sub-queues are already being formed into a batch
+            // (in service); only still-waiting queues are drop targets.
+            let longest = st
+                .queues
+                .iter()
+                .filter(|(_, sq)| !sq.claimed)
+                .max_by_key(|(_, sq)| sq.q.len())
+                .map(|(k, sq)| (*k, sq.q.len()));
+            match longest {
+                Some((vk, vlen)) if vlen > mine => {
+                    let stm = &mut *st;
+                    let vsq = stm.queues.get_mut(&vk).expect("longest key exists");
+                    let v = vsq.q.pop_back().expect("longest sub-queue is non-empty");
+                    if vsq.q.is_empty() {
+                        stm.queues.remove(&vk);
+                        stm.ready_keys.retain(|k| *k != vk);
+                    }
+                    stm.depth -= 1;
+                    victim = Some(v);
+                }
+                _ => {
+                    let retry = self.retry_hint(st.depth, req.cap);
+                    drop(st);
+                    self.shed(req, retry);
+                    return Err(SubmitError::Overloaded { retry_after_ms: retry });
+                }
+            }
+        }
+        // Admit.
+        st.depth += 1;
+        let stm = &mut *st;
+        let wake_stragglers = match stm.queues.entry(key) {
+            std::collections::btree_map::Entry::Occupied(mut e) => {
+                let claimed = e.get().claimed;
+                e.get_mut().q.push_back(req);
+                claimed
+            }
+            std::collections::btree_map::Entry::Vacant(e) => {
+                e.insert(SubQueue { q: VecDeque::from([req]), claimed: false });
+                stm.ready_keys.push_back(key);
+                false
+            }
+        };
+        drop(st);
+        if wake_stragglers {
+            // The claiming worker re-checks its count (it may now be
+            // full); only window-waiters listen here, and each check is
+            // O(1), so this is not the old thundering herd.
+            self.stragglers.notify_all();
+        } else {
+            // Exactly one idle worker is enough: it will claim a ready
+            // sub-queue (maybe this one). A worker window-waiting on a
+            // different model cannot consume this wake.
+            self.ready.notify_one();
+        }
+        if let Some(v) = victim {
+            // The queue is back at the bound after the swap-in.
+            let retry = self.retry_hint(self.max_depth, v.cap);
+            self.shed(v, retry);
+        }
+        Ok(())
+    }
+
+    /// Stop all workers after the queue drains. Subsequent `submit`
+    /// calls fail fast instead of queueing.
     pub fn shutdown(&self) {
         let mut st = self.state.lock().unwrap();
         st.shutdown = true;
-        self.nonempty.notify_all();
+        self.ready.notify_all();
+        self.stragglers.notify_all();
     }
 
-    /// Block for the next batch: waits for a first request, then gives
-    /// stragglers *for the same model* up to `window` to join, capped at
-    /// `max_batch` rows and the model's own batch capacity. Requests for
-    /// other models are left queued, in order, for subsequent calls.
-    /// Never returns an empty batch; returns `None` on shutdown with an
-    /// empty queue.
+    /// Block for the next batch: claims the oldest ready model's
+    /// sub-queue exclusively, gives stragglers *for that model* until
+    /// `head.enqueued + window` to join (skipping the wait if already
+    /// full or the head has waited its window out), then extracts up to
+    /// `min(max_batch, model cap)` requests in FIFO order. Other
+    /// models' sub-queues stay ready for concurrent `next_batch` calls
+    /// on other workers. Never returns an empty batch; returns `None`
+    /// on shutdown with an empty queue.
     pub fn next_batch(&self) -> Option<Vec<InferRequest>> {
         let mut st = self.state.lock().unwrap();
+        // Claim the oldest ready sub-queue.
+        let key = loop {
+            if let Some(k) = st.ready_keys.pop_front() {
+                break k;
+            }
+            if st.shutdown && st.depth == 0 {
+                return None;
+            }
+            // Nothing ready: idle, or (under shutdown with depth > 0)
+            // every pending sub-queue is claimed by another worker —
+            // wait for a submit, a leftover re-queue, or the final
+            // drain notification.
+            st = self.ready.wait(st).unwrap();
+        };
+        let (cap, deadline) = {
+            let sq = st.queues.get_mut(&key).expect("ready key has a sub-queue");
+            sq.claimed = true;
+            let head = sq.q.front().expect("ready sub-queue is non-empty");
+            // Anchor the window at the head's *enqueue* time: however
+            // long it already waited counts against its window, so
+            // worst-case batching delay is one window — not one window
+            // per worker that happens to observe the head.
+            (
+                self.max_batch.min(head.cap).max(1),
+                head.enqueued + self.window,
+            )
+        };
+        // Window-wait for same-model stragglers (O(1) count per wake).
         loop {
-            loop {
-                if !st.queue.is_empty() {
-                    break;
-                }
-                if st.shutdown {
-                    return None;
-                }
-                st = self.nonempty.wait(st).unwrap();
+            let n = st.queues.get(&key).map_or(0, |sq| sq.q.len());
+            if n >= cap || st.shutdown {
+                break;
             }
-            // The queue head picks the model; its cap bounds the batch.
-            let head = st.queue.front().unwrap();
-            let key = head.batch_key();
-            let cap = self.max_batch.min(head.cap).max(1);
-            // A first request exists; give the window a chance to fill
-            // the batch with same-model company (skip the wait if
-            // already full).
-            let deadline = Instant::now() + self.window;
-            loop {
-                let matching = st.queue.iter().filter(|r| r.batch_key() == key).count();
-                if matching >= cap || st.shutdown {
-                    break;
-                }
-                let now = Instant::now();
-                if now >= deadline {
-                    break;
-                }
-                let (next, timeout) = self
-                    .nonempty
-                    .wait_timeout(st, deadline - now)
-                    .unwrap();
-                st = next;
-                if timeout.timed_out() {
-                    break;
-                }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
             }
-            // Extract up to `cap` same-model requests in FIFO order;
-            // leave the rest queued in their original order.
-            let mut batch = Vec::new();
-            let mut rest = VecDeque::with_capacity(st.queue.len());
-            while let Some(r) = st.queue.pop_front() {
-                if batch.len() < cap && r.batch_key() == key {
-                    batch.push(r);
-                } else {
-                    rest.push_back(r);
-                }
+            let (next, timeout) = self.stragglers.wait_timeout(st, deadline - now).unwrap();
+            st = next;
+            if timeout.timed_out() {
+                break;
             }
-            st.queue = rest;
-            if batch.is_empty() {
-                // The window wait released the lock and another worker
-                // drained this model's requests; go around — the head
-                // (and its model) may have changed.
-                continue;
-            }
-            if !st.queue.is_empty() {
-                // Other-model requests stay queued; wake every waiter
-                // (as in submit — a single wake could be consumed by a
-                // worker window-waiting on a different model) so an
-                // idle worker picks them up.
-                self.nonempty.notify_all();
-            }
-            self.metrics.record_batch(batch.len());
-            return Some(batch);
         }
+        // Extract up to `cap` in FIFO order; the claim is exclusive, so
+        // the sub-queue is still non-empty.
+        let stm = &mut *st;
+        let (batch, leftover) = {
+            let sq = stm.queues.get_mut(&key).expect("claimed sub-queue persists");
+            let take = sq.q.len().min(cap);
+            let batch: Vec<InferRequest> = sq.q.drain(..take).collect();
+            if !sq.q.is_empty() {
+                sq.claimed = false;
+                (batch, true)
+            } else {
+                (batch, false)
+            }
+        };
+        stm.depth -= batch.len();
+        if leftover {
+            // More of this model remains: back to the end of the
+            // ready-list so other models get their turn first.
+            stm.ready_keys.push_back(key);
+            self.ready.notify_one();
+        } else {
+            stm.queues.remove(&key);
+        }
+        if stm.shutdown && stm.depth == 0 {
+            // Final drain: release workers parked in the claim loop.
+            self.ready.notify_all();
+        }
+        drop(st);
+        debug_assert!(!batch.is_empty());
+        self.metrics.record_batch(batch.len());
+        Some(batch)
     }
 }
 
@@ -189,18 +426,29 @@ impl Batcher {
 mod tests {
     use super::*;
     use crate::testing::model::{build_random_model, ModelSpec};
-    use std::sync::mpsc::channel;
+    use std::sync::mpsc::{channel, Receiver};
 
-    fn req(id: u64, tx: &Sender<(u64, Result<Vec<f32>, String>)>) -> InferRequest {
+    type Rx = Receiver<(u64, Result<Vec<f32>, Reject>)>;
+
+    fn req(id: u64, tx: &Sender<(u64, Result<Vec<f32>, Reject>)>) -> InferRequest {
         InferRequest::new(id, vec![id as f32], tx.clone())
+    }
+
+    fn batcher(max_batch: usize, window_ms: u64, max_depth: usize) -> Batcher {
+        Batcher::new(
+            max_batch,
+            Duration::from_millis(window_ms),
+            max_depth,
+            Arc::new(Metrics::new()),
+        )
     }
 
     #[test]
     fn forms_full_batches_without_waiting() {
-        let b = Batcher::new(4, Duration::from_millis(50), Arc::new(Metrics::new()));
+        let b = batcher(4, 50, 0);
         let (tx, _rx) = channel();
         for i in 0..4 {
-            b.submit(req(i, &tx));
+            b.submit(req(i, &tx)).unwrap();
         }
         let t = Instant::now();
         let batch = b.next_batch().unwrap();
@@ -210,21 +458,41 @@ mod tests {
 
     #[test]
     fn window_expiry_releases_partial_batch() {
-        let b = Batcher::new(8, Duration::from_millis(20), Arc::new(Metrics::new()));
+        let b = batcher(8, 20, 0);
         let (tx, _rx) = channel();
-        b.submit(req(1, &tx));
+        b.submit(req(1, &tx)).unwrap();
         let t = Instant::now();
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.len(), 1);
-        assert!(t.elapsed() >= Duration::from_millis(18));
+        assert!(t.elapsed() >= Duration::from_millis(15));
+    }
+
+    /// Regression (window anchor): the window runs from the head's
+    /// *enqueue* time. A head that already waited its window out is
+    /// released immediately instead of paying a fresh full window when
+    /// a worker first observes it.
+    #[test]
+    fn window_is_anchored_at_enqueue_not_observation() {
+        let b = batcher(8, 60, 0);
+        let (tx, _rx) = channel();
+        b.submit(req(1, &tx)).unwrap();
+        std::thread::sleep(Duration::from_millis(80));
+        let t = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(
+            t.elapsed() < Duration::from_millis(30),
+            "expired window must release immediately, waited {:?}",
+            t.elapsed()
+        );
     }
 
     #[test]
     fn preserves_fifo_order() {
-        let b = Batcher::new(3, Duration::from_millis(5), Arc::new(Metrics::new()));
+        let b = batcher(3, 5, 0);
         let (tx, _rx) = channel();
         for i in 0..5 {
-            b.submit(req(i, &tx));
+            b.submit(req(i, &tx)).unwrap();
         }
         let first = b.next_batch().unwrap();
         let second = b.next_batch().unwrap();
@@ -234,7 +502,7 @@ mod tests {
 
     #[test]
     fn shutdown_unblocks_workers() {
-        let b = Arc::new(Batcher::new(4, Duration::from_millis(5), Arc::new(Metrics::new())));
+        let b = Arc::new(batcher(4, 5, 0));
         let b2 = Arc::clone(&b);
         let h = std::thread::spawn(move || b2.next_batch());
         std::thread::sleep(Duration::from_millis(10));
@@ -244,20 +512,72 @@ mod tests {
 
     #[test]
     fn drains_queue_before_shutdown_none() {
-        let b = Batcher::new(4, Duration::from_millis(1), Arc::new(Metrics::new()));
+        let b = batcher(4, 1, 0);
         let (tx, _rx) = channel();
-        b.submit(req(7, &tx));
+        b.submit(req(7, &tx)).unwrap();
         b.shutdown();
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.len(), 1);
         assert!(b.next_batch().is_none());
     }
 
+    /// Regression (post-shutdown submit hang): submitting after
+    /// `shutdown()` fails the request's reply channel immediately with
+    /// a clear error — it must never sit in the queue forever after the
+    /// workers have drained and exited.
+    #[test]
+    fn submit_after_shutdown_fails_fast() {
+        let b = batcher(4, 5, 0);
+        b.shutdown();
+        assert!(b.next_batch().is_none());
+        let (tx, rx): (_, Rx) = channel();
+        let err = b.submit(req(1, &tx)).unwrap_err();
+        assert_eq!(err, SubmitError::ShutDown);
+        // The reply channel already carries the failure — a connection
+        // thread blocked on it returns instead of hanging.
+        let (id, result) = rx.try_recv().expect("tx failed immediately");
+        assert_eq!(id, 1);
+        let why = result.unwrap_err();
+        assert!(why.error.contains("shutting down"), "{}", why.error);
+        assert_eq!(b.depth(), 0, "rejected request must not be queued");
+        // Accounting: the attempt counts as a request and an error.
+        assert_eq!(b.metrics.requests.load(Ordering::Relaxed), 1);
+        assert_eq!(b.metrics.errors.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn bounded_admission_sheds_with_retry_hint() {
+        let b = batcher(2, 10, 3);
+        let (tx, rx): (_, Rx) = channel();
+        for i in 0..3 {
+            b.submit(req(i, &tx)).unwrap();
+        }
+        assert_eq!(b.depth(), 3);
+        // Single model at the bound: its own queue is the longest, so
+        // the arrival itself is shed.
+        let err = b.submit(req(3, &tx)).unwrap_err();
+        let SubmitError::Overloaded { retry_after_ms } = err else {
+            panic!("expected overload, got {err:?}");
+        };
+        assert!(retry_after_ms >= 10, "hint covers at least one window");
+        let (id, result) = rx.try_recv().expect("shed fails the channel immediately");
+        assert_eq!(id, 3);
+        let why = result.unwrap_err();
+        assert!(why.error.contains("overloaded"), "{}", why.error);
+        assert_eq!(why.retry_after_ms, Some(retry_after_ms));
+        assert_eq!(b.depth(), 3, "queue bound holds exactly");
+        assert_eq!(b.metrics.shed.load(Ordering::Relaxed), 1);
+        // Draining makes room again.
+        assert_eq!(b.next_batch().unwrap().len(), 2);
+        b.submit(req(4, &tx)).unwrap();
+        assert_eq!(b.depth(), 2);
+    }
+
     fn routed(
         id: u64,
         slot: &Arc<ModelSlot>,
         name: &str,
-        tx: &Sender<(u64, Result<Vec<f32>, String>)>,
+        tx: &Sender<(u64, Result<Vec<f32>, Reject>)>,
     ) -> InferRequest {
         InferRequest {
             model: name.to_string(),
@@ -286,15 +606,15 @@ mod tests {
 
     #[test]
     fn batches_never_mix_models() {
-        let b = Batcher::new(8, Duration::from_millis(1), Arc::new(Metrics::new()));
+        let b = batcher(8, 1, 0);
         let (tx, _rx) = channel();
         let (sa, sb) = (test_slot(8, 1), test_slot(8, 2));
         // Interleaved arrivals: a b a b a.
         let arrivals = [(&sa, "a"), (&sb, "b"), (&sa, "a"), (&sb, "b"), (&sa, "a")];
         for (i, (slot, name)) in arrivals.into_iter().enumerate() {
-            b.submit(routed(i as u64, slot, name, &tx));
+            b.submit(routed(i as u64, slot, name, &tx)).unwrap();
         }
-        // Head is "a": its batch takes ids 0, 2, 4 (per-model FIFO).
+        // "a" became ready first: its batch takes ids 0, 2, 4.
         let first = b.next_batch().unwrap();
         assert!(first.iter().all(|r| r.model == "a"));
         assert_eq!(first.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2, 4]);
@@ -307,11 +627,11 @@ mod tests {
     #[test]
     fn per_model_cap_bounds_the_batch() {
         // Global max_batch 8, but the model's contract capacity is 2.
-        let b = Batcher::new(8, Duration::from_millis(1), Arc::new(Metrics::new()));
+        let b = batcher(8, 1, 0);
         let (tx, _rx) = channel();
         let s = test_slot(2, 3);
         for i in 0..5 {
-            b.submit(routed(i, &s, "m", &tx));
+            b.submit(routed(i, &s, "m", &tx)).unwrap();
         }
         assert_eq!(b.next_batch().unwrap().len(), 2);
         assert_eq!(b.next_batch().unwrap().len(), 2);
@@ -322,15 +642,62 @@ mod tests {
     fn same_name_different_slot_does_not_mix() {
         // A replaced slot under the same name: older requests hold the
         // old Arc and must not share a batch with new ones.
-        let b = Batcher::new(8, Duration::from_millis(1), Arc::new(Metrics::new()));
+        let b = batcher(8, 1, 0);
         let (tx, _rx) = channel();
         let (old, new) = (test_slot(8, 4), test_slot(8, 5));
-        b.submit(routed(0, &old, "m", &tx));
-        b.submit(routed(1, &new, "m", &tx));
+        b.submit(routed(0, &old, "m", &tx)).unwrap();
+        b.submit(routed(1, &new, "m", &tx)).unwrap();
         let first = b.next_batch().unwrap();
         assert_eq!(first.len(), 1);
         assert!(Arc::ptr_eq(first[0].slot.as_ref().unwrap(), &old));
         let second = b.next_batch().unwrap();
         assert!(Arc::ptr_eq(second[0].slot.as_ref().unwrap(), &new));
+        // Both sub-queues fold into one name in the depth breakdown,
+        // and the total/per-model views agree (one lock hold).
+        b.submit(routed(2, &old, "m", &tx)).unwrap();
+        b.submit(routed(3, &new, "m", &tx)).unwrap();
+        let (total, per_model) = b.queue_depths();
+        assert_eq!(per_model.get("m"), Some(&2));
+        assert_eq!(total, 2);
+    }
+
+    /// Fair shedding at the bound: an arrival for a model queuing less
+    /// than the flooder sheds the flooder's newest request — the
+    /// trickle model is admitted, the bound holds exactly, and the shed
+    /// is charged to the flooder.
+    #[test]
+    fn fair_shedding_drops_the_longest_queue() {
+        let b = batcher(8, 10, 4);
+        let (flood_tx, flood_rx): (_, Rx) = channel();
+        let (trickle_tx, trickle_rx): (_, Rx) = channel();
+        let (flood, trickle) = (test_slot(8, 6), test_slot(8, 7));
+        for i in 0..4 {
+            b.submit(routed(i, &flood, "flood", &flood_tx)).unwrap();
+        }
+        // Trickle arrival at the bound: admitted by shedding flood's
+        // newest request (id 3).
+        b.submit(routed(10, &trickle, "trickle", &trickle_tx)).unwrap();
+        assert_eq!(b.depth(), 4);
+        let (id, result) = flood_rx.try_recv().expect("flood tail shed");
+        assert_eq!(id, 3);
+        assert!(result.unwrap_err().retry_after_ms.is_some());
+        assert!(trickle_rx.try_recv().is_err(), "trickle request stays queued");
+        // A further flood arrival cannot displace the trickle request
+        // (flood's own queue is the longest → the arrival is shed).
+        let err = b.submit(routed(4, &flood, "flood", &flood_tx)).unwrap_err();
+        assert!(matches!(err, SubmitError::Overloaded { .. }));
+        assert_eq!(b.queue_depths().1.get("trickle"), Some(&1));
+        assert_eq!(b.metrics.shed.load(Ordering::Relaxed), 2);
+        assert_eq!(
+            b.metrics.model("flood").shed.load(Ordering::Relaxed),
+            2,
+            "both sheds are charged to the flooding model"
+        );
+        assert_eq!(b.metrics.model("trickle").shed.load(Ordering::Relaxed), 0);
+        // FIFO across models still holds: flood (older) drains first.
+        let ids: Vec<u64> = b.next_batch().unwrap().iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+        let ids: Vec<u64> = b.next_batch().unwrap().iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![10]);
     }
 }

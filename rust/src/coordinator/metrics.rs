@@ -46,6 +46,11 @@ pub struct ModelMetrics {
     pub requests: AtomicU64,
     pub responses: AtomicU64,
     pub errors: AtomicU64,
+    /// Requests rejected by bounded admission (overload shedding) —
+    /// kept separate from `errors` so overload never masquerades as
+    /// inference failure. Together: `requests == responses + errors +
+    /// shed` once the model's traffic has quiesced.
+    pub shed: AtomicU64,
     /// Successful hot-swaps of this slot.
     pub swaps: AtomicU64,
     pub swap_failures: AtomicU64,
@@ -87,6 +92,11 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub batched_rows: AtomicU64,
     pub errors: AtomicU64,
+    /// Requests rejected by bounded admission (overload shedding).
+    /// Every submitted request ends as exactly one of
+    /// response/error/shed, so `requests == responses + errors + shed`
+    /// holds exactly once traffic has quiesced.
+    pub shed: AtomicU64,
     /// Successful model hot-swaps (deploys) since startup, across every
     /// slot. Together with `model_version`/`precision` in the `stats`
     /// response, this lets an operator confirm a deploy actually landed.
@@ -130,6 +140,26 @@ impl Metrics {
     pub fn record_latency(&self, secs: f64) {
         self.responses.fetch_add(1, Ordering::Relaxed);
         self.latencies.push(secs);
+    }
+
+    /// Count `n` request errors globally and, for routed requests
+    /// (non-empty model name), in the model's breakdown. Every
+    /// conservation-relevant error bump goes through this one shape so
+    /// a per-model count cannot be missed at any call site.
+    pub fn count_errors(&self, model: &str, n: u64) {
+        self.errors.fetch_add(n, Ordering::Relaxed);
+        if !model.is_empty() {
+            self.model(model).errors.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Count one shed request globally and per model (same shape as
+    /// [`Metrics::count_errors`]).
+    pub fn count_shed(&self, model: &str) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+        if !model.is_empty() {
+            self.model(model).shed.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     pub fn record_batch(&self, rows: usize) {

@@ -1,10 +1,15 @@
 //! Serving coordinator (Layer 3): router, dynamic batcher, worker pool.
 //!
 //! The request path is pure Rust: TCP connections speak a JSON-lines
-//! protocol ([`server`]), requests flow into a [`batcher::Batcher`] that
-//! forms batches up to the model's batch capacity within a small latency
-//! window, and worker threads execute the forward pass through a
-//! selectable [`SparseModel`] backend:
+//! protocol ([`server`]), requests flow into a [`batcher::Batcher`]
+//! holding per-model sub-queues behind a FIFO ready-list (idle workers
+//! claim and drain *different* models concurrently; batches form up to
+//! the model's batch capacity within a latency window anchored at the
+//! head request's enqueue time; with a configured queue depth, overload
+//! is shed — longest-queue-drop fair across models — with a
+//! `retry_after_ms` hint instead of queueing without bound), and worker
+//! threads execute the forward pass through a selectable
+//! [`SparseModel`] backend:
 //!
 //! * **native** (default, always available) — the prepacked
 //!   [`GsExecPlan`] engine from [`crate::kernels::exec`]: a cache-blocked
@@ -39,9 +44,9 @@ pub mod metrics;
 pub mod server;
 pub mod uniform;
 
-pub use batcher::{Batcher, InferRequest};
+pub use batcher::{Batcher, InferRequest, Reject, SubmitError};
 pub use metrics::{Metrics, ModelMetrics};
-pub use server::{serve, serve_slot, serve_store, Client, ServerHandle};
+pub use server::{serve, serve_slot, serve_store, Client, InferOutcome, ServerHandle};
 pub use uniform::UniformGs;
 
 use crate::kernels::dense::{dense_matmul, dense_matmul_parallel};

@@ -4,8 +4,10 @@
 //! and defaults to the server's default slot):
 //!   → `{"op":"infer","id":1,"model":"resnet","input":[...f32 x inputs]}`
 //!   ← `{"id":1,"output":[...f32 x outputs]}` or `{"id":1,"error":"..."}`
+//!     (overload shed: `{"id":1,"error":"overloaded...","retry_after_ms":N}`)
 //!   → `{"op":"stats"}`
-//!   ← `{"requests":N,"model_version":V,"p50_ms":...,"models":{...per-slot...}}`
+//!   ← `{"requests":N,"shed":S,"queue_depth":D,"model_version":V,
+//!      "p50_ms":...,"models":{...per-slot...}}`
 //!   → `{"op":"ping"}`  ← `{"ok":true,"version":V}`
 //!   → `{"op":"swap","model":"resnet","path":"model.gsm"}`
 //!   ← `{"ok":true,"model":"resnet","version":V,"precision":"f32"}`
@@ -38,7 +40,7 @@
 //! an authenticating proxy (or using factory mode, which has no write
 //! op).
 
-use super::batcher::{Batcher, InferRequest};
+use super::batcher::{Batcher, InferRequest, Reject};
 use super::metrics::{Metrics, ModelMetrics};
 use super::{Engine, SparseModel};
 use crate::model_store::{ModelArtifact, ModelSlot, ModelStore};
@@ -101,6 +103,12 @@ pub struct ServeConfig {
     pub input_width: usize,
     pub max_batch: usize,
     pub window_ms: u64,
+    /// Global bound on queued requests (0 = unbounded). At the bound,
+    /// requests are shed with an `{"error":"overloaded...",
+    /// "retry_after_ms":N}` reply — longest-queue-drop fair across
+    /// models — instead of queueing without limit (protects tail
+    /// latency under overload; see [`Batcher`]).
+    pub queue_depth: usize,
 }
 
 /// How serving workers obtain the model to execute a batch on.
@@ -153,7 +161,10 @@ where
 
 /// Execute one formed batch on `model` and deliver each row's result.
 /// Latency/errors are recorded globally and, when the batch was routed
-/// (`mm`), in the model's own breakdown.
+/// (`mm`), in the model's own breakdown. Errors are counted **per
+/// request**, not per batch — one error row is sent per request, so the
+/// counters must match or `requests == responses + errors + shed`
+/// conservation breaks at batch size > 1.
 fn run_batch(
     model: &SparseModel,
     batch: Vec<InferRequest>,
@@ -173,13 +184,12 @@ fn run_batch(
             }
         }
         Err(e) => {
-            metrics.errors.fetch_add(1, Ordering::Relaxed);
-            if let Some(mm) = mm {
-                mm.errors.fetch_add(1, Ordering::Relaxed);
-            }
+            // Routed batches carry their model name; factory-mode
+            // batches have "" and only count globally.
+            metrics.count_errors(&batch[0].model, batch.len() as u64);
             let msg = format!("{e:#}");
             for req in batch {
-                let _ = req.tx.send((req.id, Err(msg.clone())));
+                let _ = req.tx.send((req.id, Err(Reject::error(msg.clone()))));
             }
         }
     }
@@ -191,6 +201,7 @@ fn serve_impl(provider: Provider, metrics: Arc<Metrics>, cfg: ServeConfig) -> Re
     let batcher = Arc::new(Batcher::new(
         cfg.max_batch,
         Duration::from_millis(cfg.window_ms),
+        cfg.queue_depth,
         Arc::clone(&metrics),
     ));
     let stop = Arc::new(AtomicBool::new(false));
@@ -223,10 +234,13 @@ fn serve_impl(provider: Provider, metrics: Arc<Metrics>, cfg: ServeConfig) -> Re
                             // it — and on a single snapshot, so a batch
                             // never mixes versions.
                             let Some(slot) = batch.first().and_then(|r| r.slot.clone()) else {
-                                metrics.errors.fetch_add(1, Ordering::Relaxed);
+                                // Per-request accounting (conservation),
+                                // as in run_batch's error path.
+                                let n = batch.len() as u64;
+                                metrics.count_errors(&batch[0].model, n);
                                 for req in batch {
-                                    let msg = "request lost its slot".to_string();
-                                    let _ = req.tx.send((req.id, Err(msg)));
+                                    let why = Reject::error("request lost its slot");
+                                    let _ = req.tx.send((req.id, Err(why)));
                                 }
                                 continue;
                             };
@@ -354,7 +368,7 @@ fn handle_connection(
                     }
                     Json::obj(fields)
                 }
-                Some("stats") => stats_json(metrics, ctx),
+                Some("stats") => stats_json(metrics, batcher, ctx),
                 Some("models") => models_json(ctx),
                 Some("swap") => handle_swap(&msg, ctx, metrics),
                 Some("load") => handle_load(&msg, ctx, metrics),
@@ -461,7 +475,10 @@ fn handle_infer(msg: &Json, batcher: &Batcher, metrics: &Metrics, ctx: &ConnCtx)
     }
     let (tx, rx) = channel();
     let cap = slot.as_ref().map_or(usize::MAX, |s| s.batch_capacity());
-    batcher.submit(InferRequest {
+    // A refused submit (overload shed, shutdown) has already failed the
+    // request's tx with a structured Reject, so the reply path below is
+    // uniform — the Result here is deliberately not consulted.
+    let _ = batcher.submit(InferRequest {
         id,
         input,
         enqueued: Instant::now(),
@@ -475,10 +492,16 @@ fn handle_infer(msg: &Json, batcher: &Batcher, metrics: &Metrics, ctx: &ConnCtx)
             ("id", Json::Num(id as f64)),
             ("output", Json::nums_f32(&out)),
         ]),
-        Ok((id, Err(e))) => Json::obj(vec![
-            ("id", Json::Num(id as f64)),
-            ("error", Json::Str(e)),
-        ]),
+        Ok((id, Err(why))) => {
+            let mut fields = vec![
+                ("id", Json::Num(id as f64)),
+                ("error", Json::Str(why.error)),
+            ];
+            if let Some(ms) = why.retry_after_ms {
+                fields.push(("retry_after_ms", Json::Num(ms as f64)));
+            }
+            Json::obj(fields)
+        }
         Err(_) => err_json("worker dropped".into()),
     }
 }
@@ -673,7 +696,10 @@ fn models_json(ctx: &ConnCtx) -> Json {
     ])
 }
 
-fn stats_json(metrics: &Metrics, ctx: &ConnCtx) -> Json {
+fn stats_json(metrics: &Metrics, batcher: &Batcher, ctx: &ConnCtx) -> Json {
+    // One lock hold: the global and per-model queue depths in a single
+    // stats reply are mutually consistent.
+    let (queue_depth, queue_depths) = batcher.queue_depths();
     let mut fields = vec![
         (
             "requests",
@@ -692,6 +718,11 @@ fn stats_json(metrics: &Metrics, ctx: &ConnCtx) -> Json {
             "errors",
             Json::Num(metrics.errors.load(Ordering::Relaxed) as f64),
         ),
+        (
+            "shed",
+            Json::Num(metrics.shed.load(Ordering::Relaxed) as f64),
+        ),
+        ("queue_depth", Json::Num(queue_depth as f64)),
         (
             "swaps",
             Json::Num(metrics.swaps.load(Ordering::Relaxed) as f64),
@@ -743,6 +774,11 @@ fn stats_json(metrics: &Metrics, ctx: &ConnCtx) -> Json {
                 ("requests", Json::Num(counter(|m| &m.requests))),
                 ("responses", Json::Num(counter(|m| &m.responses))),
                 ("errors", Json::Num(counter(|m| &m.errors))),
+                ("shed", Json::Num(counter(|m| &m.shed))),
+                (
+                    "queue_depth",
+                    Json::Num(queue_depths.get(&name).copied().unwrap_or(0) as f64),
+                ),
                 ("swaps", Json::Num(counter(|m| &m.swaps))),
                 ("swap_failures", Json::Num(counter(|m| &m.swap_failures))),
             ];
@@ -774,6 +810,17 @@ fn stats_json(metrics: &Metrics, ctx: &ConnCtx) -> Json {
     Json::obj(fields)
 }
 
+/// Outcome of a single infer attempt where an overload shed is an
+/// expected, retryable state rather than a hard failure (see
+/// [`Client::try_infer`]).
+#[derive(Clone, Debug, PartialEq)]
+pub enum InferOutcome {
+    Output(Vec<f32>),
+    /// The server shed this request under overload; back off for the
+    /// hinted milliseconds and retry.
+    Overloaded { retry_after_ms: u64 },
+}
+
 /// Blocking JSON-lines client (tests, examples, bench harness).
 pub struct Client {
     reader: BufReader<TcpStream>,
@@ -796,7 +843,12 @@ impl Client {
         self.writer.write_all(msg.to_string().as_bytes())?;
         self.writer.write_all(b"\n")?;
         let mut line = String::new();
-        self.reader.read_line(&mut line)?;
+        // 0 bytes = orderly EOF: surface it as what it is instead of
+        // feeding the empty string to the JSON parser (which used to
+        // produce a baffling "bad json" error).
+        if self.reader.read_line(&mut line)? == 0 {
+            anyhow::bail!("connection closed by server");
+        }
         Ok(Json::parse(&line)?)
     }
 
@@ -805,7 +857,12 @@ impl Client {
         Ok(r.get("ok").and_then(Json::as_bool).unwrap_or(false))
     }
 
-    fn infer_inner(&mut self, model: Option<&str>, input: &[f32]) -> Result<Vec<f32>> {
+    /// One infer attempt with overload surfaced structurally: a shed
+    /// reply (`retry_after_ms` present) returns
+    /// [`InferOutcome::Overloaded`] instead of an error, so callers
+    /// implementing back-pressure need not parse error strings. Hard
+    /// failures (bad input, unknown model, transport) still `Err`.
+    pub fn try_infer(&mut self, model: Option<&str>, input: &[f32]) -> Result<InferOutcome> {
         let id = self.next_id;
         self.next_id += 1;
         let mut fields = vec![
@@ -818,11 +875,27 @@ impl Client {
         }
         let r = self.roundtrip(Json::obj(fields))?;
         if let Some(err) = r.get("error").and_then(Json::as_str) {
+            if let Some(ms) = r.get("retry_after_ms").and_then(Json::as_f64) {
+                return Ok(InferOutcome::Overloaded { retry_after_ms: ms as u64 });
+            }
             anyhow::bail!("server error: {err}");
         }
         r.get("output")
             .and_then(Json::to_f32_vec)
+            .map(InferOutcome::Output)
             .ok_or_else(|| anyhow::anyhow!("malformed response"))
+    }
+
+    fn infer_inner(&mut self, model: Option<&str>, input: &[f32]) -> Result<Vec<f32>> {
+        match self.try_infer(model, input)? {
+            InferOutcome::Output(out) => Ok(out),
+            // For the plain-infer API an overload shed is still an
+            // error, with the hint in the message.
+            InferOutcome::Overloaded { retry_after_ms } => anyhow::bail!(
+                "server overloaded (retry after {retry_after_ms} ms): request shed, \
+                 back off and retry"
+            ),
+        }
     }
 
     /// Infer on the server's default model.

@@ -2,6 +2,8 @@
 //!
 //! ```text
 //! gs-sparse serve    [--backend native|pjrt] [--bind 127.0.0.1:7070] [--workers 1]
+//!                    [--window-ms 2] [--queue-depth 0 (unbounded; N = shed
+//!                     over-limit requests with retry_after_ms)]
 //!                    native: [--models a=a.gsm,b=b.gsm] [--max-models N]
 //!                            [--default-model a]   (multi-model routed serving)
 //!                            or [--model model.gsm]  (serve one .gsm artifact)
@@ -87,6 +89,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let shown_workers = gs_sparse::util::threadpool::resolve_threads(workers);
     let bind = args.get("bind", "127.0.0.1:7070").to_string();
     let window_ms = args.usize("window-ms", 2) as u64;
+    // 0 = unbounded (no shedding). With a bound, over-limit requests are
+    // rejected immediately with retry_after_ms instead of queueing.
+    let queue_depth = args.usize("queue-depth", 0);
 
     if backend == "native" {
         // Store-backed routed serving: named hot-swappable model slots,
@@ -140,11 +145,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 input_width: inputs,
                 max_batch,
                 window_ms,
+                queue_depth,
             },
         )?;
+        let admission = if queue_depth == 0 {
+            "unbounded queue".to_string()
+        } else {
+            format!("queue depth {queue_depth}, over-limit requests shed")
+        };
         println!(
             "serving GS-sparse MLP on {} ({shown_workers} workers, batch cap {max_batch}, \
-             {n_models} model(s), default \"{default_name}\")",
+             {admission}, {n_models} model(s), default \"{default_name}\")",
             handle.addr
         );
         println!(
@@ -170,6 +181,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             input_width: inputs,
             max_batch,
             window_ms,
+            queue_depth,
         },
     )?;
     println!(

@@ -160,6 +160,7 @@ fn serving_roundtrip_and_batching() {
             input_width: 24,
             max_batch: 8,
             window_ms: 2,
+            queue_depth: 0,
         },
     )
     .unwrap();
@@ -197,6 +198,7 @@ fn serving_rejects_bad_input() {
             input_width: 24,
             max_batch: 8,
             window_ms: 1,
+            queue_depth: 0,
         },
     )
     .unwrap();

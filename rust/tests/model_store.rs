@@ -176,6 +176,7 @@ fn hot_swap_under_concurrent_traffic() {
             input_width: 12,
             max_batch: 8,
             window_ms: 1,
+            queue_depth: 0,
         },
     )
     .unwrap();
@@ -263,6 +264,7 @@ fn failed_swap_keeps_serving() {
             input_width: 12,
             max_batch: 8,
             window_ms: 1,
+            queue_depth: 0,
         },
     )
     .unwrap();

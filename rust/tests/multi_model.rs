@@ -70,6 +70,7 @@ fn serve_models(
             input_width,
             max_batch: widest_batch,
             window_ms: 1,
+            queue_depth: 0,
         },
     )
     .unwrap();

@@ -163,10 +163,12 @@ fn prop_batcher_no_drop_no_dup_fifo() {
         default_cases().min(40),
         |&max_batch, &n| {
             let metrics = Arc::new(Metrics::new());
-            let batcher = Batcher::new(max_batch, Duration::from_millis(1), metrics);
+            let batcher = Batcher::new(max_batch, Duration::from_millis(1), 0, metrics);
             let (tx, _rx) = channel();
             for id in 0..n as u64 {
-                batcher.submit(InferRequest::new(id, vec![], tx.clone()));
+                batcher
+                    .submit(InferRequest::new(id, vec![], tx.clone()))
+                    .map_err(|e| format!("unbounded submit refused: {e:?}"))?;
             }
             batcher.shutdown();
             let mut seen = Vec::new();
@@ -179,6 +181,58 @@ fn prop_batcher_no_drop_no_dup_fifo() {
             let want: Vec<u64> = (0..n as u64).collect();
             if seen != want {
                 return Err(format!("ids {seen:?} != fifo {want:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Bounded admission: for any (queue depth, request count), the queue
+/// never exceeds the bound, every over-limit submit is shed with a
+/// retry hint, and `submitted == drained + shed` holds exactly — no
+/// request is ever both queued and shed, or neither.
+#[test]
+fn prop_bounded_batcher_conserves_requests() {
+    forall2(
+        "batcher-bounded-admission",
+        &UsizeIn { lo: 1, hi: 12 },
+        &UsizeIn { lo: 1, hi: 64 },
+        default_cases().min(40),
+        |&max_depth, &n| {
+            let metrics = Arc::new(Metrics::new());
+            let batcher = Batcher::new(4, Duration::from_millis(1), max_depth, metrics);
+            let (tx, rx) = channel();
+            let mut shed = 0usize;
+            for id in 0..n as u64 {
+                match batcher.submit(InferRequest::new(id, vec![], tx.clone())) {
+                    Ok(()) => {}
+                    Err(gs_sparse::coordinator::SubmitError::Overloaded { retry_after_ms }) => {
+                        if retry_after_ms == 0 {
+                            return Err("shed without a retry hint".into());
+                        }
+                        shed += 1;
+                    }
+                    Err(e) => return Err(format!("unexpected submit error: {e:?}")),
+                }
+                if batcher.depth() > max_depth {
+                    return Err(format!("depth {} exceeds bound {max_depth}", batcher.depth()));
+                }
+            }
+            batcher.shutdown();
+            let mut drained = 0usize;
+            while let Some(batch) = batcher.next_batch() {
+                drained += batch.len();
+            }
+            if drained + shed != n {
+                return Err(format!("{drained} drained + {shed} shed != {n} submitted"));
+            }
+            // Every shed request failed its reply channel with the
+            // overload reject; drained ones are still pending there.
+            drop(batcher);
+            drop(tx);
+            let rejects = rx.iter().filter(|(_, r)| r.is_err()).count();
+            if rejects != shed {
+                return Err(format!("{rejects} channel rejects != {shed} sheds"));
             }
             Ok(())
         },
