@@ -57,7 +57,7 @@ fn main() -> anyhow::Result<()> {
                     "inline-random",
                     kernel_threads,
                 );
-                let handle = serve_slot(
+                let mut handle = serve_slot(
                     &engine,
                     ServeConfig {
                         bind: "127.0.0.1:0".into(),
@@ -66,6 +66,7 @@ fn main() -> anyhow::Result<()> {
                         max_batch,
                         window_ms: 2,
                         queue_depth: 0,
+                        ..ServeConfig::default()
                     },
                 )?;
                 // Warm up (first request touches all paths).

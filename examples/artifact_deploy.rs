@@ -63,7 +63,7 @@ fn main() -> anyhow::Result<()> {
     let inputs = loaded.inputs;
     let max_batch = loaded.max_batch;
     let engine = Engine::new(loaded.instantiate(threads)?, &v1_file, threads);
-    let handle = serve_slot(
+    let mut handle = serve_slot(
         &engine,
         ServeConfig {
             bind: "127.0.0.1:0".into(),
@@ -72,6 +72,7 @@ fn main() -> anyhow::Result<()> {
             max_batch,
             window_ms: 1,
             queue_depth: 0,
+            ..ServeConfig::default()
         },
     )?;
 

@@ -86,7 +86,7 @@ fn main() -> anyhow::Result<()> {
     store.register("alpha", Arc::new(ModelSlot::new(a1.instantiate(threads)?, &alpha_path, threads)))?;
     store.register("beta", Arc::new(ModelSlot::new(b1.instantiate(threads)?, &beta_path, threads)))?;
     let engine = Engine::from_store(store, "alpha", threads)?;
-    let handle = serve_store(
+    let mut handle = serve_store(
         &engine,
         ServeConfig {
             bind: "127.0.0.1:0".into(),
@@ -95,6 +95,7 @@ fn main() -> anyhow::Result<()> {
             max_batch: bm_alpha.model.max_batch.max(bm_beta.model.max_batch),
             window_ms: 1,
             queue_depth: 0,
+            ..ServeConfig::default()
         },
     )?;
     let addr = handle.addr;

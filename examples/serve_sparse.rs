@@ -40,7 +40,7 @@ fn main() -> anyhow::Result<()> {
     let (sparsity, precision, threads) = (spec.sparsity, spec.precision, spec.threads);
 
     let engine = Engine::new(build_random_model(&spec)?.model, "inline-random", threads);
-    let handle = serve_slot(
+    let mut handle = serve_slot(
         &engine,
         ServeConfig {
             bind: "127.0.0.1:0".into(),
@@ -49,6 +49,7 @@ fn main() -> anyhow::Result<()> {
             max_batch,
             window_ms: 2,
             queue_depth,
+            ..ServeConfig::default()
         },
     )?;
     println!(
@@ -79,6 +80,9 @@ fn main() -> anyhow::Result<()> {
                                     retry_after_ms.clamp(1, 50),
                                 ));
                             }
+                            // This example sends no deadline, so expiry
+                            // can't happen; retry anyway rather than die.
+                            InferOutcome::Expired { .. } => {}
                         }
                     };
                     anyhow::ensure!(out.len() == outputs, "bad output width");

@@ -28,7 +28,19 @@
 //! request and takes its place (a flooding model cannot starve a trickle
 //! model); otherwise the arrival itself is shed. Shed requests fail
 //! immediately with an overload [`Reject`] carrying a `retry_after_ms`
-//! backoff hint — they are never silently queued without limit.
+//! backoff hint — adaptive: the model's measured p50 service time once
+//! latency samples exist, the static window estimate before — so they
+//! are never silently queued without limit.
+//!
+//! **Deadlines** (`InferRequest::deadline_ms`): a request may carry a
+//! queue-wait budget. Enforcement happens at *batch-formation* time —
+//! the one choke point every request passes through — so an expired
+//! request is never executed: it is failed with a structured
+//! `"deadline exceeded"` [`Reject`] carrying `waited_ms`, counted in
+//! the `expired` metrics, and the conservation invariant becomes
+//! `requests == responses + errors + shed + expired`. The batching
+//! window wait is capped by the head's deadline, so a deadline shorter
+//! than the window is honored rather than blown by the batcher itself.
 
 use super::metrics::Metrics;
 use crate::model_store::ModelSlot;
@@ -46,19 +58,28 @@ pub struct Reject {
     /// Client backoff hint, set when the request was shed under
     /// overload (serialized as `retry_after_ms` in the protocol).
     pub retry_after_ms: Option<u64>,
+    /// How long the request sat queued, set when it expired past its
+    /// deadline (serialized as `waited_ms` in the protocol).
+    pub waited_ms: Option<u64>,
 }
 
 impl Reject {
     /// A plain execution/infrastructure failure (no backoff hint).
     pub fn error(msg: impl Into<String>) -> Reject {
-        Reject { error: msg.into(), retry_after_ms: None }
+        Reject { error: msg.into(), retry_after_ms: None, waited_ms: None }
     }
 
     fn overloaded(retry_after_ms: u64) -> Reject {
         Reject {
-            error: "overloaded: request shed to protect tail latency; back off and retry"
-                .to_string(),
             retry_after_ms: Some(retry_after_ms),
+            ..Reject::error("overloaded: request shed to protect tail latency; back off and retry")
+        }
+    }
+
+    fn expired(waited_ms: u64) -> Reject {
+        Reject {
+            waited_ms: Some(waited_ms),
+            ..Reject::error("deadline exceeded")
         }
     }
 
@@ -99,6 +120,12 @@ pub struct InferRequest {
     /// Per-model batch-size cap (the slot's serving-contract capacity);
     /// `usize::MAX` defers entirely to the batcher's global cap.
     pub cap: usize,
+    /// Queue-wait budget in whole milliseconds (None = no deadline). A
+    /// request still queued when the budget lapses is failed at
+    /// batch-formation time with a structured "deadline exceeded"
+    /// [`Reject`] and counted in the `expired` metrics — it never
+    /// executes.
+    pub deadline_ms: Option<u64>,
 }
 
 impl InferRequest {
@@ -113,7 +140,29 @@ impl InferRequest {
             model: String::new(),
             slot: None,
             cap: usize::MAX,
+            deadline_ms: None,
         }
+    }
+
+    /// Whole milliseconds this request has waited in queue so far.
+    fn waited_ms(&self) -> u64 {
+        self.enqueued.elapsed().as_millis() as u64
+    }
+
+    /// True once the queue-wait budget has lapsed. The comparison is a
+    /// strict `>` on whole milliseconds: a batch formed *exactly* at the
+    /// deadline still executes (`waited == deadline`), so a lone request
+    /// whose deadline is shorter than the batching window is released by
+    /// the deadline-capped window wait and served, not spuriously
+    /// expired; sub-millisecond scheduling jitter is absorbed by the
+    /// truncation.
+    fn is_expired(&self) -> bool {
+        self.deadline_ms.map_or(false, |d| self.waited_ms() > d)
+    }
+
+    /// The instant the budget lapses (None = no deadline).
+    fn deadline_instant(&self) -> Option<Instant> {
+        self.deadline_ms.map(|d| self.enqueued + Duration::from_millis(d))
     }
 
     /// Batch-homogeneity key: the slot identity (requests admitted
@@ -217,14 +266,30 @@ impl Batcher {
     }
 
     /// Backoff hint: roughly how long the queued backlog needs to
-    /// drain — one window per cap-sized batch over the *whole* queue
-    /// (workers round-robin the ready models, so the global depth, not
-    /// just the shed request's own model queue, governs when room
-    /// opens up).
-    fn retry_hint(&self, backlog: usize, cap: usize) -> u64 {
-        let window_ms = self.window.as_millis().max(1) as u64;
+    /// drain — one batch service time per cap-sized batch over the
+    /// *whole* queue (workers round-robin the ready models, so the
+    /// global depth, not just the shed request's own model queue,
+    /// governs when room opens up).
+    ///
+    /// The per-batch service time is **adaptive**: the measured p50
+    /// request latency for `model` (the global reservoir for unrouted
+    /// factory-mode requests) once samples exist — a model serving 50 ms
+    /// batches tells its clients to back off 25× longer than one serving
+    /// 2 ms batches — falling back to the static batching-window
+    /// estimate before the first response.
+    fn retry_hint(&self, model: &str, backlog: usize, cap: usize) -> u64 {
         let per_batch = self.max_batch.min(cap).max(1);
-        window_ms * (backlog / per_batch + 1) as u64
+        let batches = (backlog / per_batch + 1) as u64;
+        let p50 = if model.is_empty() {
+            self.metrics.latency_summary()
+        } else {
+            self.metrics.model(model).latency_summary()
+        };
+        let per_batch_ms = match p50 {
+            Some(s) => ((s.p50 * 1e3).ceil() as u64).max(1),
+            None => self.window.as_millis().max(1) as u64,
+        };
+        per_batch_ms * batches
     }
 
     /// Count a shed request (global + per-model) and fail its channel.
@@ -233,12 +298,20 @@ impl Batcher {
         req.fail(Reject::overloaded(retry_after_ms));
     }
 
+    /// Count an expired request (global + per-model) and fail its
+    /// channel with the structured deadline reject.
+    fn expire(&self, req: InferRequest) {
+        self.metrics.count_expired(&req.model);
+        let waited = req.waited_ms();
+        req.fail(Reject::expired(waited));
+    }
+
     /// Enqueue a request (from server/router threads).
     ///
     /// Every attempt counts toward `metrics.requests`, and every
     /// refused request is failed on its `tx` *before* this returns, so
-    /// `requests == responses + errors + shed` holds and nothing ever
-    /// blocks forever on a reply channel:
+    /// `requests == responses + errors + shed + expired` holds and
+    /// nothing ever blocks forever on a reply channel:
     ///
     /// * after [`shutdown`](Batcher::shutdown), the request is failed
     ///   immediately (workers may already be gone — queueing would
@@ -284,8 +357,9 @@ impl Batcher {
                     victim = Some(v);
                 }
                 _ => {
-                    let retry = self.retry_hint(st.depth, req.cap);
+                    let backlog = st.depth;
                     drop(st);
+                    let retry = self.retry_hint(&req.model, backlog, req.cap);
                     self.shed(req, retry);
                     return Err(SubmitError::Overloaded { retry_after_ms: retry });
                 }
@@ -320,7 +394,7 @@ impl Batcher {
         }
         if let Some(v) = victim {
             // The queue is back at the bound after the swap-in.
-            let retry = self.retry_hint(self.max_depth, v.cap);
+            let retry = self.retry_hint(&v.model, self.max_depth, v.cap);
             self.shed(v, retry);
         }
         Ok(())
@@ -337,88 +411,118 @@ impl Batcher {
 
     /// Block for the next batch: claims the oldest ready model's
     /// sub-queue exclusively, gives stragglers *for that model* until
-    /// `head.enqueued + window` to join (skipping the wait if already
-    /// full or the head has waited its window out), then extracts up to
-    /// `min(max_batch, model cap)` requests in FIFO order. Other
-    /// models' sub-queues stay ready for concurrent `next_batch` calls
-    /// on other workers. Never returns an empty batch; returns `None`
-    /// on shutdown with an empty queue.
+    /// `head.enqueued + window` — capped by the head's own deadline —
+    /// to join (skipping the wait if already full or the head has
+    /// waited its window out), then extracts up to `min(max_batch,
+    /// model cap)` requests in FIFO order. Requests that outwaited
+    /// their `deadline_ms` are failed at extraction with a structured
+    /// "deadline exceeded" [`Reject`] instead of joining the batch
+    /// (enforcement at batch-formation time: an expired request is
+    /// *never* executed). Other models' sub-queues stay ready for
+    /// concurrent `next_batch` calls on other workers. Never returns an
+    /// empty batch (if everything claimed had expired, the worker fails
+    /// them and claims the next ready sub-queue); returns `None` on
+    /// shutdown with an empty queue.
     pub fn next_batch(&self) -> Option<Vec<InferRequest>> {
-        let mut st = self.state.lock().unwrap();
-        // Claim the oldest ready sub-queue.
-        let key = loop {
-            if let Some(k) = st.ready_keys.pop_front() {
-                break k;
-            }
-            if st.shutdown && st.depth == 0 {
-                return None;
-            }
-            // Nothing ready: idle, or (under shutdown with depth > 0)
-            // every pending sub-queue is claimed by another worker —
-            // wait for a submit, a leftover re-queue, or the final
-            // drain notification.
-            st = self.ready.wait(st).unwrap();
-        };
-        let (cap, deadline) = {
-            let sq = st.queues.get_mut(&key).expect("ready key has a sub-queue");
-            sq.claimed = true;
-            let head = sq.q.front().expect("ready sub-queue is non-empty");
-            // Anchor the window at the head's *enqueue* time: however
-            // long it already waited counts against its window, so
-            // worst-case batching delay is one window — not one window
-            // per worker that happens to observe the head.
-            (
-                self.max_batch.min(head.cap).max(1),
-                head.enqueued + self.window,
-            )
-        };
-        // Window-wait for same-model stragglers (O(1) count per wake).
         loop {
-            let n = st.queues.get(&key).map_or(0, |sq| sq.q.len());
-            if n >= cap || st.shutdown {
-                break;
+            let mut st = self.state.lock().unwrap();
+            // Claim the oldest ready sub-queue.
+            let key = loop {
+                if let Some(k) = st.ready_keys.pop_front() {
+                    break k;
+                }
+                if st.shutdown && st.depth == 0 {
+                    return None;
+                }
+                // Nothing ready: idle, or (under shutdown with depth >
+                // 0) every pending sub-queue is claimed by another
+                // worker — wait for a submit, a leftover re-queue, or
+                // the final drain notification.
+                st = self.ready.wait(st).unwrap();
+            };
+            let (cap, deadline) = {
+                let sq = st.queues.get_mut(&key).expect("ready key has a sub-queue");
+                sq.claimed = true;
+                let head = sq.q.front().expect("ready sub-queue is non-empty");
+                // Anchor the window at the head's *enqueue* time:
+                // however long it already waited counts against its
+                // window, so worst-case batching delay is one window —
+                // not one window per worker that happens to observe the
+                // head. The head's own deadline caps the wait: never
+                // hold a request for stragglers past the point where it
+                // would expire.
+                let window_end = head.enqueued + self.window;
+                let end = match head.deadline_instant() {
+                    Some(d) if d < window_end => d,
+                    _ => window_end,
+                };
+                (self.max_batch.min(head.cap).max(1), end)
+            };
+            // Window-wait for same-model stragglers (O(1) count per
+            // wake).
+            loop {
+                let n = st.queues.get(&key).map_or(0, |sq| sq.q.len());
+                if n >= cap || st.shutdown {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (next, timeout) = self.stragglers.wait_timeout(st, deadline - now).unwrap();
+                st = next;
+                if timeout.timed_out() {
+                    break;
+                }
             }
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            let (next, timeout) = self.stragglers.wait_timeout(st, deadline - now).unwrap();
-            st = next;
-            if timeout.timed_out() {
-                break;
-            }
-        }
-        // Extract up to `cap` in FIFO order; the claim is exclusive, so
-        // the sub-queue is still non-empty.
-        let stm = &mut *st;
-        let (batch, leftover) = {
-            let sq = stm.queues.get_mut(&key).expect("claimed sub-queue persists");
-            let take = sq.q.len().min(cap);
-            let batch: Vec<InferRequest> = sq.q.drain(..take).collect();
-            if !sq.q.is_empty() {
+            // Extract up to `cap` live requests in FIFO order, setting
+            // expired ones aside; the claim is exclusive, so the
+            // sub-queue is still non-empty.
+            let stm = &mut *st;
+            let mut batch: Vec<InferRequest> = Vec::new();
+            let mut expired: Vec<InferRequest> = Vec::new();
+            let leftover = {
+                let sq = stm.queues.get_mut(&key).expect("claimed sub-queue persists");
+                while batch.len() < cap {
+                    let Some(req) = sq.q.pop_front() else { break };
+                    if req.is_expired() {
+                        expired.push(req);
+                    } else {
+                        batch.push(req);
+                    }
+                }
+                !sq.q.is_empty()
+            };
+            stm.depth -= batch.len() + expired.len();
+            if leftover {
+                // More of this model remains: back to the end of the
+                // ready-list so other models get their turn first.
+                let sq = stm.queues.get_mut(&key).expect("claimed sub-queue persists");
                 sq.claimed = false;
-                (batch, true)
+                stm.ready_keys.push_back(key);
+                self.ready.notify_one();
             } else {
-                (batch, false)
+                stm.queues.remove(&key);
             }
-        };
-        stm.depth -= batch.len();
-        if leftover {
-            // More of this model remains: back to the end of the
-            // ready-list so other models get their turn first.
-            stm.ready_keys.push_back(key);
-            self.ready.notify_one();
-        } else {
-            stm.queues.remove(&key);
+            if stm.shutdown && stm.depth == 0 {
+                // Final drain: release workers parked in the claim loop.
+                self.ready.notify_all();
+            }
+            drop(st);
+            // Fail expired requests outside the lock (each send + metric
+            // bump is per-request work no other worker needs to wait on).
+            for req in expired {
+                self.expire(req);
+            }
+            if batch.is_empty() {
+                // Everything claimed had outwaited its budget: go claim
+                // the next ready sub-queue instead of returning an empty
+                // batch.
+                continue;
+            }
+            self.metrics.record_batch(batch.len());
+            return Some(batch);
         }
-        if stm.shutdown && stm.depth == 0 {
-            // Final drain: release workers parked in the claim loop.
-            self.ready.notify_all();
-        }
-        drop(st);
-        debug_assert!(!batch.is_empty());
-        self.metrics.record_batch(batch.len());
-        Some(batch)
     }
 }
 
@@ -699,5 +803,93 @@ mod tests {
         assert_eq!(ids, vec![0, 1, 2]);
         let ids: Vec<u64> = b.next_batch().unwrap().iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![10]);
+    }
+
+    /// Deadline enforcement at batch formation: a request that outwaited
+    /// its budget is failed with the structured reject (never executed),
+    /// while a live request in the same sub-queue still forms a batch.
+    #[test]
+    fn expired_request_fails_at_formation_and_never_executes() {
+        let b = batcher(8, 5, 0);
+        let (tx, rx): (_, Rx) = channel();
+        let mut stale = req(1, &tx);
+        stale.deadline_ms = Some(10);
+        b.submit(stale).unwrap();
+        std::thread::sleep(Duration::from_millis(25));
+        b.submit(req(2, &tx)).unwrap();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2]);
+        let (id, result) = rx.try_recv().expect("expired request failed during formation");
+        assert_eq!(id, 1);
+        let why = result.unwrap_err();
+        assert_eq!(why.error, "deadline exceeded");
+        assert!(why.waited_ms.unwrap() >= 10, "{:?}", why.waited_ms);
+        assert!(why.retry_after_ms.is_none());
+        assert_eq!(b.metrics.expired.load(Ordering::Relaxed), 1);
+        assert_eq!(b.depth(), 0, "expired request left the queue");
+        // Conservation: 2 requests = 1 batched (pending response) + 1
+        // expired; nothing lost.
+        assert_eq!(b.metrics.requests.load(Ordering::Relaxed), 2);
+        assert_eq!(b.metrics.shed.load(Ordering::Relaxed), 0);
+        assert_eq!(b.metrics.errors.load(Ordering::Relaxed), 0);
+    }
+
+    /// A sub-queue that expired in its entirety never yields an empty
+    /// batch: the worker fails the stale requests and moves on (here to
+    /// the shutdown drain → `None`).
+    #[test]
+    fn fully_expired_queue_drains_to_none_not_empty_batch() {
+        let b = batcher(4, 1, 0);
+        let (tx, rx): (_, Rx) = channel();
+        let mut stale = req(7, &tx);
+        stale.deadline_ms = Some(5);
+        b.submit(stale).unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        b.shutdown();
+        assert!(b.next_batch().is_none());
+        let (id, result) = rx.try_recv().expect("stale request was failed");
+        assert_eq!(id, 7);
+        assert_eq!(result.unwrap_err().error, "deadline exceeded");
+        assert_eq!(b.metrics.expired.load(Ordering::Relaxed), 1);
+        assert_eq!(b.depth(), 0);
+    }
+
+    /// Adaptive shedding, static path: before any latency sample exists
+    /// the retry hint is the window × backlog estimate.
+    #[test]
+    fn retry_hint_is_static_before_latency_samples() {
+        let b = batcher(2, 10, 3);
+        let (tx, _rx) = channel();
+        for i in 0..3 {
+            b.submit(req(i, &tx)).unwrap();
+        }
+        let err = b.submit(req(3, &tx)).unwrap_err();
+        let SubmitError::Overloaded { retry_after_ms } = err else {
+            panic!("expected overload, got {err:?}");
+        };
+        // backlog 3, per-batch 2 → 2 batches × the 10 ms window.
+        assert_eq!(retry_after_ms, 20);
+    }
+
+    /// Adaptive shedding, measured path: once the shed request's model
+    /// has latency samples, the hint scales with the measured p50
+    /// instead of the static window.
+    #[test]
+    fn retry_hint_adapts_to_measured_p50() {
+        let b = batcher(2, 10, 3);
+        let (tx, _rx) = channel();
+        let s = test_slot(8, 9);
+        // The model's responses so far took ~50 ms each.
+        b.metrics.model("m").record_latency(0.05);
+        b.metrics.model("m").record_latency(0.05);
+        for i in 0..3 {
+            b.submit(routed(i, &s, "m", &tx)).unwrap();
+        }
+        let err = b.submit(routed(3, &s, "m", &tx)).unwrap_err();
+        let SubmitError::Overloaded { retry_after_ms } = err else {
+            panic!("expected overload, got {err:?}");
+        };
+        // backlog 3, per-batch 2 → 2 batches × the measured 50 ms p50.
+        assert_eq!(retry_after_ms, 100);
     }
 }

@@ -1,0 +1,148 @@
+//! Deterministic fault injection for the resilience test suite
+//! (`rust/tests/chaos.rs`).
+//!
+//! The serving path calls two hooks — [`on_batch_execute`] just before a
+//! batch runs and [`corrupt_artifact_bytes`] on every artifact read.
+//! Without the `fault-inject` cargo feature both compile to empty
+//! `#[inline]` functions, so production builds pay nothing. With the
+//! feature, each hook consults process-global arm state that tests set
+//! programmatically (`arm_*`) or through environment variables read once
+//! at first use:
+//!
+//! * `GS_FAULT_PANIC_BATCH=N`  — panic when the N-th batch executes
+//! * `GS_FAULT_LATENCY_MS=MS`  — sleep `MS` before every batch
+//! * `GS_FAULT_CORRUPT_ARTIFACT=1` — flip a byte in every artifact read
+//!
+//! Injection is deterministic — batches are counted, not sampled — so a
+//! chaos test can say "the 3rd batch panics" and assert the exact
+//! recovery accounting. The state is process-global; tests that arm
+//! faults must run single-threaded (`--test-threads=1`) and call
+//! [`reset`] around themselves.
+
+#[cfg(feature = "fault-inject")]
+mod imp {
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::sync::OnceLock;
+    use std::time::Duration;
+
+    /// Batch index (1-based) that panics; 0 = disarmed.
+    static PANIC_ON_BATCH: AtomicU64 = AtomicU64::new(0);
+    /// Batches that have entered execution since startup/[`reset`].
+    static BATCHES: AtomicU64 = AtomicU64::new(0);
+    /// Sleep injected before each batch executes; 0 = disarmed.
+    static LATENCY_MS: AtomicU64 = AtomicU64::new(0);
+    /// Flip a byte in every artifact read.
+    static CORRUPT_ARTIFACT: AtomicBool = AtomicBool::new(false);
+
+    fn env_init() {
+        static INIT: OnceLock<()> = OnceLock::new();
+        INIT.get_or_init(|| {
+            let num = |key: &str| {
+                std::env::var(key)
+                    .ok()
+                    .and_then(|v| v.parse::<u64>().ok())
+                    .unwrap_or(0)
+            };
+            PANIC_ON_BATCH.store(num("GS_FAULT_PANIC_BATCH"), Ordering::SeqCst);
+            LATENCY_MS.store(num("GS_FAULT_LATENCY_MS"), Ordering::SeqCst);
+            CORRUPT_ARTIFACT.store(num("GS_FAULT_CORRUPT_ARTIFACT") != 0, Ordering::SeqCst);
+        });
+    }
+
+    pub fn on_batch_execute() {
+        env_init();
+        let n = BATCHES.fetch_add(1, Ordering::SeqCst) + 1;
+        let ms = LATENCY_MS.load(Ordering::SeqCst);
+        if ms > 0 {
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+        if PANIC_ON_BATCH.load(Ordering::SeqCst) == n {
+            panic!("injected fault: panic on batch {n}");
+        }
+    }
+
+    pub fn corrupt_artifact_bytes(bytes: &mut [u8]) {
+        env_init();
+        if CORRUPT_ARTIFACT.load(Ordering::SeqCst) {
+            if let Some(last) = bytes.last_mut() {
+                // The artifact trailer is its CRC-32: flipping bits in
+                // the final byte guarantees a checksum mismatch.
+                *last ^= 0x5A;
+            }
+        }
+    }
+
+    pub fn arm_panic_on_batch(n: u64) {
+        env_init();
+        PANIC_ON_BATCH.store(n, Ordering::SeqCst);
+    }
+
+    pub fn arm_latency_ms(ms: u64) {
+        env_init();
+        LATENCY_MS.store(ms, Ordering::SeqCst);
+    }
+
+    pub fn arm_corrupt_artifact(on: bool) {
+        env_init();
+        CORRUPT_ARTIFACT.store(on, Ordering::SeqCst);
+    }
+
+    pub fn batches_executed() -> u64 {
+        env_init();
+        BATCHES.load(Ordering::SeqCst)
+    }
+
+    pub fn reset() {
+        env_init();
+        PANIC_ON_BATCH.store(0, Ordering::SeqCst);
+        LATENCY_MS.store(0, Ordering::SeqCst);
+        CORRUPT_ARTIFACT.store(false, Ordering::SeqCst);
+        BATCHES.store(0, Ordering::SeqCst);
+    }
+}
+
+#[cfg(not(feature = "fault-inject"))]
+mod imp {
+    #[inline(always)]
+    pub fn on_batch_execute() {}
+
+    #[inline(always)]
+    pub fn corrupt_artifact_bytes(_bytes: &mut [u8]) {}
+
+    pub fn arm_panic_on_batch(_n: u64) {}
+
+    pub fn arm_latency_ms(_ms: u64) {}
+
+    pub fn arm_corrupt_artifact(_on: bool) {}
+
+    pub fn batches_executed() -> u64 {
+        0
+    }
+
+    pub fn reset() {}
+}
+
+/// Hook: a batch is about to execute. May sleep (injected latency) or
+/// panic (injected crash). No-op without the `fault-inject` feature.
+pub use imp::on_batch_execute;
+
+/// Hook: an artifact was just read from disk. May flip a byte so the
+/// CRC check fails. No-op without the `fault-inject` feature.
+pub use imp::corrupt_artifact_bytes;
+
+/// Arm: panic when the `n`-th batch (1-based, counted from startup or
+/// [`reset`]) enters execution. `0` disarms.
+pub use imp::arm_panic_on_batch;
+
+/// Arm: sleep `ms` before every batch executes. `0` disarms.
+pub use imp::arm_latency_ms;
+
+/// Arm: corrupt every artifact read until disarmed.
+pub use imp::arm_corrupt_artifact;
+
+/// Batches that have entered execution since startup or [`reset`]
+/// (always 0 without the feature).
+pub use imp::batches_executed;
+
+/// Disarm every fault and zero the batch counter.
+pub use imp::reset;

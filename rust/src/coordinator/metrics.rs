@@ -49,8 +49,13 @@ pub struct ModelMetrics {
     /// Requests rejected by bounded admission (overload shedding) —
     /// kept separate from `errors` so overload never masquerades as
     /// inference failure. Together: `requests == responses + errors +
-    /// shed` once the model's traffic has quiesced.
+    /// shed + expired` once the model's traffic has quiesced.
     pub shed: AtomicU64,
+    /// Requests that outwaited their `deadline_ms` budget in queue and
+    /// were failed at batch-formation time instead of executing — kept
+    /// separate from `errors` (the request was fine; the queue was
+    /// slow) and from `shed` (admission accepted it).
+    pub expired: AtomicU64,
     /// Successful hot-swaps of this slot.
     pub swaps: AtomicU64,
     pub swap_failures: AtomicU64,
@@ -94,9 +99,16 @@ pub struct Metrics {
     pub errors: AtomicU64,
     /// Requests rejected by bounded admission (overload shedding).
     /// Every submitted request ends as exactly one of
-    /// response/error/shed, so `requests == responses + errors + shed`
-    /// holds exactly once traffic has quiesced.
+    /// response/error/shed/expired, so `requests == responses + errors
+    /// + shed + expired` holds exactly once traffic has quiesced.
     pub shed: AtomicU64,
+    /// Requests failed at batch-formation time because they outwaited
+    /// their deadline in queue (never executed).
+    pub expired: AtomicU64,
+    /// Worker batch executions that panicked. The panic is caught, the
+    /// batch's requests are failed per-request (counted in `errors`),
+    /// and the worker survives — this counter is the crash audit trail.
+    pub panics: AtomicU64,
     /// Successful model hot-swaps (deploys) since startup, across every
     /// slot. Together with `model_version`/`precision` in the `stats`
     /// response, this lets an operator confirm a deploy actually landed.
@@ -159,6 +171,15 @@ impl Metrics {
         self.shed.fetch_add(1, Ordering::Relaxed);
         if !model.is_empty() {
             self.model(model).shed.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Count one deadline-expired request globally and per model (same
+    /// shape as [`Metrics::count_errors`]).
+    pub fn count_expired(&self, model: &str) {
+        self.expired.fetch_add(1, Ordering::Relaxed);
+        if !model.is_empty() {
+            self.model(model).expired.fetch_add(1, Ordering::Relaxed);
         }
     }
 

@@ -33,6 +33,16 @@
 //! batch, and `{"op":"swap"|"load","path":"model.gsm"}` hot-deploys new
 //! prunings with zero downtime (see [`crate::model_store`]).
 //!
+//! The serving tier carries a **resilience layer**: per-request queue
+//! deadlines enforced at batch formation (expired requests fail with a
+//! structured reject and an `expired` metric — `requests == responses +
+//! errors + shed + expired` holds exactly), connection hardening
+//! (connection cap, idle timeouts, bounded frame reader), supervised
+//! batch execution (a panicking kernel fails one batch, not a worker),
+//! and a deterministic fault-injection harness ([`faults`], gated
+//! behind the `fault-inject` cargo feature) that the chaos test suite
+//! drives.
+//!
 //! Both backends compute the same forward graph
 //! (`relu(x@W1+b1) → GS spMM → +b2`); each is checked against a dense
 //! oracle of its own weights by integration tests. (A direct
@@ -40,6 +50,7 @@
 //! crate — see ROADMAP.)
 
 pub mod batcher;
+pub mod faults;
 pub mod metrics;
 pub mod server;
 pub mod uniform;

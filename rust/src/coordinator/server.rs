@@ -2,9 +2,12 @@
 //!
 //! Protocol (one JSON object per line; `"model"` is optional everywhere
 //! and defaults to the server's default slot):
-//!   → `{"op":"infer","id":1,"model":"resnet","input":[...f32 x inputs]}`
+//!   → `{"op":"infer","id":1,"model":"resnet","input":[...f32 x inputs],
+//!      "deadline_ms":N}` (optional queue-wait budget; 0 opts out of the
+//!      server default)
 //!   ← `{"id":1,"output":[...f32 x outputs]}` or `{"id":1,"error":"..."}`
-//!     (overload shed: `{"id":1,"error":"overloaded...","retry_after_ms":N}`)
+//!     (overload shed: `{"id":1,"error":"overloaded...","retry_after_ms":N}`;
+//!      deadline expiry: `{"id":1,"error":"deadline exceeded","waited_ms":N}`)
 //!   → `{"op":"stats"}`
 //!   ← `{"requests":N,"shed":S,"queue_depth":D,"model_version":V,
 //!      "p50_ms":...,"models":{...per-slot...}}`
@@ -39,21 +42,106 @@
 //! exposing the port beyond a trusted network requires fronting it with
 //! an authenticating proxy (or using factory mode, which has no write
 //! op).
+//!
+//! **Resilience:** the connection tier is hardened against misbehaving
+//! clients — `max_conns` caps simultaneous connections (a structured
+//! at-capacity reply, then close), `idle_timeout_ms` releases the
+//! thread a slowloris client would pin, and `max_frame_bytes` bounds
+//! the line reader so an unterminated frame cannot grow a buffer
+//! without limit. Batch execution runs under `catch_unwind`: a
+//! panicking kernel fails that batch's requests per-request (counted in
+//! `panics` + `errors`) and the worker survives. [`ServerHandle::stop`]
+//! drains connections: every connection thread is tracked and joined,
+//! so no thread outlives the handle.
 
 use super::batcher::{Batcher, InferRequest, Reject};
+use super::faults;
 use super::metrics::{Metrics, ModelMetrics};
 use super::{Engine, SparseModel};
 use crate::model_store::{ModelArtifact, ModelSlot, ModelStore};
 use crate::util::json::Json;
 use crate::util::threadpool::resolve_threads;
 use anyhow::{Context, Result};
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::channel;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
+
+/// Live-connection registry: backs the `connections` gauge and the
+/// `max_conns` admission check, and holds the socket clones + thread
+/// handles [`ServerHandle::stop`] drains.
+struct ConnTracker {
+    live: AtomicUsize,
+    /// Connection id → socket clone. Shutting the read half on stop
+    /// unblocks a parked reader while its final reply still flushes.
+    socks: Mutex<HashMap<u64, TcpStream>>,
+    handles: Mutex<Vec<thread::JoinHandle<()>>>,
+    next_id: AtomicU64,
+}
+
+impl ConnTracker {
+    fn new() -> ConnTracker {
+        ConnTracker {
+            live: AtomicUsize::new(0),
+            socks: Mutex::new(HashMap::new()),
+            handles: Mutex::new(Vec::new()),
+            next_id: AtomicU64::new(0),
+        }
+    }
+
+    /// Register an accepted connection; returns its id for `release`.
+    fn register(&self, conn: &TcpStream) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        if let Ok(clone) = conn.try_clone() {
+            self.socks.lock().unwrap().insert(id, clone);
+        }
+        self.live.fetch_add(1, Ordering::SeqCst);
+        id
+    }
+
+    fn release(&self, id: u64) {
+        self.socks.lock().unwrap().remove(&id);
+        self.live.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Track a connection thread, reaping already-finished handles so
+    /// the vector stays bounded by the number of *live* connections on
+    /// a long-running server.
+    fn track(&self, handle: thread::JoinHandle<()>) {
+        let mut handles = self.handles.lock().unwrap();
+        handles.retain(|h| !h.is_finished());
+        handles.push(handle);
+    }
+
+    /// Unblock every connection reader and join every connection
+    /// thread. After this returns, no connection thread is running.
+    fn drain(&self) {
+        for sock in self.socks.lock().unwrap().values() {
+            let _ = sock.shutdown(Shutdown::Read);
+        }
+        let handles: Vec<_> = self.handles.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Drops the connection's tracker entry even if the handler panics or
+/// errors out — the live gauge can never leak upward.
+struct ConnGuard {
+    tracker: Arc<ConnTracker>,
+    id: u64,
+}
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.tracker.release(self.id);
+    }
+}
 
 /// Running server state; dropping does not stop it — call `stop()`.
 pub struct ServerHandle {
@@ -67,6 +155,7 @@ pub struct ServerHandle {
     pub default_model: Option<String>,
     workers: Vec<thread::JoinHandle<()>>,
     acceptor: Option<thread::JoinHandle<()>>,
+    conns: Arc<ConnTracker>,
 }
 
 impl ServerHandle {
@@ -76,18 +165,29 @@ impl ServerHandle {
         store.get(self.default_model.as_deref()?)
     }
 
-    /// Stop accepting, drain the queue, join workers.
-    pub fn stop(mut self) {
+    /// Stop accepting, drain the queue, join workers, then unblock and
+    /// join every connection thread. In-flight requests complete (or
+    /// fail structurally) and their replies flush before the sockets
+    /// are torn down; after this returns no server thread is running.
+    /// Idempotent — a second call is a no-op.
+    pub fn stop(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
         // Poke the acceptor loop out of `accept()`.
         let _ = TcpStream::connect(self.addr);
         if let Some(a) = self.acceptor.take() {
             let _ = a.join();
         }
+        // Drain queued work first: requests already admitted execute or
+        // fail structurally, and connection threads blocked on reply
+        // channels get their answers delivered...
         self.batcher.shutdown();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+        // ...then release the connection tier: shutting the read half
+        // wakes parked readers with EOF while final writes still flush,
+        // and every connection thread is joined — none outlives stop().
+        self.conns.drain();
     }
 }
 
@@ -95,7 +195,9 @@ impl ServerHandle {
 /// default model (admission is checked per-request against the routed
 /// slot); `max_batch` is the global batch cap — each batch is further
 /// bounded by its model's contract capacity. `workers: 0` auto-detects
-/// the machine's parallelism.
+/// the machine's parallelism. Construct with struct-update syntax over
+/// [`ServeConfig::default`] so new resilience knobs keep their
+/// defaults: `ServeConfig { bind, ..ServeConfig::default() }`.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     pub bind: String,
@@ -109,6 +211,45 @@ pub struct ServeConfig {
     /// models — instead of queueing without limit (protects tail
     /// latency under overload; see [`Batcher`]).
     pub queue_depth: usize,
+    /// Default queue-wait budget in ms for requests that don't carry
+    /// their own `"deadline_ms"` (0 = none). An expired request is
+    /// failed with `{"error":"deadline exceeded","waited_ms":N}` at
+    /// batch-formation time instead of executing; a request may send
+    /// `"deadline_ms":0` to opt out of the server default.
+    pub deadline_ms: u64,
+    /// Cap on simultaneously open client connections (0 = unbounded).
+    /// At capacity a new connection gets one structured
+    /// `{"error":"...at connection capacity...","max_conns":N}` reply
+    /// and is closed — no thread is spawned for it.
+    pub max_conns: usize,
+    /// Per-connection read/idle timeout in ms (0 = none). A connection
+    /// that doesn't deliver a complete frame within the budget gets a
+    /// structured goodbye and is closed — a slowloris client releases
+    /// its thread instead of pinning it forever.
+    pub idle_timeout_ms: u64,
+    /// Largest accepted request frame (one JSON line) in bytes
+    /// (0 = unbounded). An oversized frame gets a structured
+    /// `{"error":"frame too large...","max_frame_bytes":N}` reply and
+    /// the connection closes, instead of the reader buffering an
+    /// unterminated line without limit.
+    pub max_frame_bytes: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            bind: "127.0.0.1:0".into(),
+            workers: 1,
+            input_width: 0,
+            max_batch: 16,
+            window_ms: 2,
+            queue_depth: 0,
+            deadline_ms: 0,
+            max_conns: 0,
+            idle_timeout_ms: 0,
+            max_frame_bytes: 1 << 20,
+        }
+    }
 }
 
 /// How serving workers obtain the model to execute a batch on.
@@ -163,8 +304,8 @@ where
 /// Latency/errors are recorded globally and, when the batch was routed
 /// (`mm`), in the model's own breakdown. Errors are counted **per
 /// request**, not per batch — one error row is sent per request, so the
-/// counters must match or `requests == responses + errors + shed`
-/// conservation breaks at batch size > 1.
+/// counters must match or `requests == responses + errors + shed +
+/// expired` conservation breaks at batch size > 1.
 fn run_batch(
     model: &SparseModel,
     batch: Vec<InferRequest>,
@@ -172,7 +313,33 @@ fn run_batch(
     mm: Option<&ModelMetrics>,
 ) {
     let inputs: Vec<Vec<f32>> = batch.iter().map(|r| r.input.clone()).collect();
-    match model.infer_batch(&inputs) {
+    // Supervised execution: a panicking kernel fails THIS batch's
+    // requests and the worker survives to take the next batch — one bad
+    // input or kernel bug must not permanently shrink the worker pool.
+    // The fault hook sits inside the guard so injected panics exercise
+    // the real recovery path.
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        faults::on_batch_execute();
+        model.infer_batch(&inputs)
+    }));
+    let result = match result {
+        Ok(r) => r,
+        Err(panic) => {
+            metrics.panics.fetch_add(1, Ordering::Relaxed);
+            metrics.count_errors(&batch[0].model, batch.len() as u64);
+            let msg = panic
+                .downcast_ref::<&'static str>()
+                .copied()
+                .or_else(|| panic.downcast_ref::<String>().map(String::as_str))
+                .unwrap_or("<non-string panic payload>");
+            let why = Reject::error(format!("internal error: worker panicked: {msg}"));
+            for req in batch {
+                let _ = req.tx.send((req.id, Err(why.clone())));
+            }
+            return;
+        }
+    };
+    match result {
         Ok(outputs) => {
             for (req, out) in batch.into_iter().zip(outputs) {
                 let secs = req.enqueued.elapsed().as_secs_f64();
@@ -196,6 +363,17 @@ fn run_batch(
 }
 
 fn serve_impl(provider: Provider, metrics: Arc<Metrics>, cfg: ServeConfig) -> Result<ServerHandle> {
+    if let Provider::Factory(factory) = &provider {
+        // Preflight: build (and drop) one model before anything spawns.
+        // A factory that cannot build fails `serve()` fast, instead of
+        // every worker dying at startup and leaving a server that
+        // accepts connections but never answers. Workers still build
+        // their own instance (PJRT executables are not `Send`).
+        drop(factory().context(
+            "model factory preflight failed; refusing to start a server whose workers \
+             cannot build their model",
+        )?);
+    }
     let listener = TcpListener::bind(&cfg.bind).context("bind")?;
     let addr = listener.local_addr()?;
     let batcher = Arc::new(Batcher::new(
@@ -267,10 +445,12 @@ fn serve_impl(provider: Provider, metrics: Arc<Metrics>, cfg: ServeConfig) -> Re
         })
         .collect();
 
+    let conns = Arc::new(ConnTracker::new());
     let acceptor = {
         let batcher = Arc::clone(&batcher);
         let metrics = Arc::clone(&metrics);
         let stop2 = Arc::clone(&stop);
+        let tracker = Arc::clone(&conns);
         let ctx = Arc::new(ConnCtx {
             store: store.clone(),
             default_model: default_model.clone(),
@@ -279,7 +459,12 @@ fn serve_impl(provider: Provider, metrics: Arc<Metrics>, cfg: ServeConfig) -> Re
                 Provider::Factory(_) => 0,
             },
             input_width: cfg.input_width,
+            deadline_ms: cfg.deadline_ms,
+            idle_timeout_ms: cfg.idle_timeout_ms,
+            max_frame_bytes: cfg.max_frame_bytes,
+            conns: Arc::clone(&conns),
         });
+        let max_conns = cfg.max_conns;
         thread::Builder::new()
             .name("gs-serve-acceptor".into())
             .spawn(move || {
@@ -287,14 +472,36 @@ fn serve_impl(provider: Provider, metrics: Arc<Metrics>, cfg: ServeConfig) -> Re
                     if stop2.load(Ordering::SeqCst) {
                         break;
                     }
-                    let Ok(conn) = conn else { continue };
+                    let Ok(mut conn) = conn else { continue };
                     let _ = conn.set_nodelay(true); // JSON-lines RPC: Nagle hurts
+                    if max_conns > 0 && tracker.live.load(Ordering::SeqCst) >= max_conns {
+                        // At capacity: one structured reply, no thread.
+                        let reply = Json::obj(vec![
+                            (
+                                "error",
+                                Json::Str("server at connection capacity; retry later".into()),
+                            ),
+                            ("max_conns", Json::Num(max_conns as f64)),
+                        ]);
+                        let _ = conn.write_all(reply.to_string().as_bytes());
+                        let _ = conn.write_all(b"\n");
+                        continue; // drop = close
+                    }
+                    if ctx.idle_timeout_ms > 0 {
+                        let t = Duration::from_millis(ctx.idle_timeout_ms);
+                        let _ = conn.set_read_timeout(Some(t));
+                        let _ = conn.set_write_timeout(Some(t));
+                    }
+                    let id = tracker.register(&conn);
                     let batcher = Arc::clone(&batcher);
                     let metrics = Arc::clone(&metrics);
                     let ctx = Arc::clone(&ctx);
-                    thread::spawn(move || {
+                    let guard = ConnGuard { tracker: Arc::clone(&tracker), id };
+                    let handle = thread::spawn(move || {
+                        let _guard = guard;
                         let _ = handle_connection(conn, &batcher, &metrics, &ctx);
                     });
+                    tracker.track(handle);
                 }
             })
             .expect("spawn acceptor")
@@ -309,6 +516,7 @@ fn serve_impl(provider: Provider, metrics: Arc<Metrics>, cfg: ServeConfig) -> Re
         default_model,
         workers,
         acceptor: Some(acceptor),
+        conns,
     })
 }
 
@@ -321,6 +529,15 @@ struct ConnCtx {
     threads: usize,
     /// Factory-mode admission width (store mode checks per slot).
     input_width: usize,
+    /// Server-default queue-wait budget (0 = none).
+    deadline_ms: u64,
+    /// Per-connection read/idle timeout (0 = none); used for the
+    /// structured goodbye message.
+    idle_timeout_ms: u64,
+    /// Frame-size bound for the line reader (0 = unbounded).
+    max_frame_bytes: usize,
+    /// Live-connection registry (the `connections` stats gauge).
+    conns: Arc<ConnTracker>,
 }
 
 fn err_json(msg: String) -> Json {
@@ -345,6 +562,57 @@ fn requested_model<'a>(msg: &'a Json, ctx: &'a ConnCtx) -> Result<&'a str, Strin
     }
 }
 
+/// Outcome of reading one protocol frame through the bounded reader.
+enum Frame {
+    Line(String),
+    /// Orderly end of stream.
+    Eof,
+    /// The frame outgrew `max_frame_bytes` before its newline arrived.
+    TooLarge,
+    /// The connection's read timeout elapsed mid-frame (slowloris or
+    /// idle client).
+    TimedOut,
+}
+
+/// Read one newline-terminated frame with a hard byte bound. Unlike
+/// `BufReader::lines`, the buffer can never outgrow `max_bytes`
+/// (0 = unbounded): the cap is checked against the buffered chunk
+/// *before* copying, so an attacker streaming an unterminated line
+/// costs at most one buffer's worth of memory. EOF with a trailing
+/// unterminated frame yields that frame (matching `lines()` semantics).
+fn read_frame(reader: &mut BufReader<TcpStream>, max_bytes: usize) -> std::io::Result<Frame> {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let chunk = match reader.fill_buf() {
+            Ok(c) => c,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                return Ok(Frame::TimedOut)
+            }
+            Err(e) => return Err(e),
+        };
+        if chunk.is_empty() {
+            return Ok(if buf.is_empty() {
+                Frame::Eof
+            } else {
+                Frame::Line(String::from_utf8_lossy(&buf).into_owned())
+            });
+        }
+        let (len, sep) = match chunk.iter().position(|&b| b == b'\n') {
+            Some(pos) => (pos, 1),
+            None => (chunk.len(), 0),
+        };
+        if max_bytes > 0 && buf.len() + len > max_bytes {
+            return Ok(Frame::TooLarge);
+        }
+        buf.extend_from_slice(&chunk[..len]);
+        reader.consume(len + sep);
+        if sep == 1 {
+            return Ok(Frame::Line(String::from_utf8_lossy(&buf).into_owned()));
+        }
+    }
+}
+
 fn handle_connection(
     conn: TcpStream,
     batcher: &Batcher,
@@ -352,9 +620,37 @@ fn handle_connection(
     ctx: &ConnCtx,
 ) -> Result<()> {
     let mut writer = conn.try_clone()?;
-    let reader = BufReader::new(conn);
-    for line in reader.lines() {
-        let line = line?;
+    let mut reader = BufReader::new(conn);
+    loop {
+        let line = match read_frame(&mut reader, ctx.max_frame_bytes)? {
+            Frame::Eof => break,
+            Frame::TimedOut => {
+                // Best-effort goodbye — the thread is released either
+                // way, which is the point of the timeout.
+                let bye = err_json(format!(
+                    "idle timeout: no complete frame within {} ms; closing connection",
+                    ctx.idle_timeout_ms
+                ));
+                let _ = writer.write_all(bye.to_string().as_bytes());
+                let _ = writer.write_all(b"\n");
+                break;
+            }
+            Frame::TooLarge => {
+                // Mid-frame there is no way to resync on the stream, so
+                // reply structurally and close.
+                let bye = Json::obj(vec![
+                    (
+                        "error",
+                        Json::Str("frame too large; closing connection".into()),
+                    ),
+                    ("max_frame_bytes", Json::Num(ctx.max_frame_bytes as f64)),
+                ]);
+                let _ = writer.write_all(bye.to_string().as_bytes());
+                let _ = writer.write_all(b"\n");
+                break;
+            }
+            Frame::Line(line) => line,
+        };
         if line.trim().is_empty() {
             continue;
         }
@@ -473,6 +769,22 @@ fn handle_infer(msg: &Json, batcher: &Batcher, metrics: &Metrics, ctx: &ConnCtx)
         mm.requests.fetch_add(1, Ordering::Relaxed);
         mm.touch();
     }
+    // Queue-wait budget: the request's own "deadline_ms" wins over the
+    // server default; an explicit 0 opts out. A present-but-invalid
+    // value is an error, never a silent fallthrough (the client clearly
+    // wanted a deadline; running without one would violate it).
+    let deadline_ms = match msg.get("deadline_ms") {
+        None => ctx.deadline_ms,
+        Some(j) => match j.as_f64() {
+            Some(v) if v >= 0.0 && v.fract() == 0.0 => v as u64,
+            _ => {
+                return with_id(vec![(
+                    "error",
+                    Json::Str("\"deadline_ms\" must be a non-negative integer".into()),
+                )])
+            }
+        },
+    };
     let (tx, rx) = channel();
     let cap = slot.as_ref().map_or(usize::MAX, |s| s.batch_capacity());
     // A refused submit (overload shed, shutdown) has already failed the
@@ -486,6 +798,7 @@ fn handle_infer(msg: &Json, batcher: &Batcher, metrics: &Metrics, ctx: &ConnCtx)
         model: model_name,
         slot,
         cap,
+        deadline_ms: if deadline_ms == 0 { None } else { Some(deadline_ms) },
     });
     match rx.recv() {
         Ok((id, Ok(out))) => Json::obj(vec![
@@ -499,6 +812,9 @@ fn handle_infer(msg: &Json, batcher: &Batcher, metrics: &Metrics, ctx: &ConnCtx)
             ];
             if let Some(ms) = why.retry_after_ms {
                 fields.push(("retry_after_ms", Json::Num(ms as f64)));
+            }
+            if let Some(ms) = why.waited_ms {
+                fields.push(("waited_ms", Json::Num(ms as f64)));
             }
             Json::obj(fields)
         }
@@ -722,7 +1038,19 @@ fn stats_json(metrics: &Metrics, batcher: &Batcher, ctx: &ConnCtx) -> Json {
             "shed",
             Json::Num(metrics.shed.load(Ordering::Relaxed) as f64),
         ),
+        (
+            "expired",
+            Json::Num(metrics.expired.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "panics",
+            Json::Num(metrics.panics.load(Ordering::Relaxed) as f64),
+        ),
         ("queue_depth", Json::Num(queue_depth as f64)),
+        (
+            "connections",
+            Json::Num(ctx.conns.live.load(Ordering::SeqCst) as f64),
+        ),
         (
             "swaps",
             Json::Num(metrics.swaps.load(Ordering::Relaxed) as f64),
@@ -775,6 +1103,7 @@ fn stats_json(metrics: &Metrics, batcher: &Batcher, ctx: &ConnCtx) -> Json {
                 ("responses", Json::Num(counter(|m| &m.responses))),
                 ("errors", Json::Num(counter(|m| &m.errors))),
                 ("shed", Json::Num(counter(|m| &m.shed))),
+                ("expired", Json::Num(counter(|m| &m.expired))),
                 (
                     "queue_depth",
                     Json::Num(queue_depths.get(&name).copied().unwrap_or(0) as f64),
@@ -819,6 +1148,9 @@ pub enum InferOutcome {
     /// The server shed this request under overload; back off for the
     /// hinted milliseconds and retry.
     Overloaded { retry_after_ms: u64 },
+    /// The request outwaited its deadline in the server queue and was
+    /// failed at batch formation — it never executed.
+    Expired { waited_ms: u64 },
 }
 
 /// Blocking JSON-lines client (tests, examples, bench harness).
@@ -830,7 +1162,17 @@ pub struct Client {
 
 impl Client {
     pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
-        let stream = TcpStream::connect(addr)?;
+        Self::from_stream(TcpStream::connect(addr)?)
+    }
+
+    /// Connect with a bound on how long to wait for the server to
+    /// accept — an unreachable or wedged server fails fast instead of
+    /// hanging the caller on the OS connect timeout.
+    pub fn connect_timeout(addr: std::net::SocketAddr, timeout: Duration) -> Result<Client> {
+        Self::from_stream(TcpStream::connect_timeout(&addr, timeout)?)
+    }
+
+    fn from_stream(stream: TcpStream) -> Result<Client> {
         let _ = stream.set_nodelay(true);
         Ok(Client {
             reader: BufReader::new(stream.try_clone()?),
@@ -839,14 +1181,37 @@ impl Client {
         })
     }
 
+    /// Bound every subsequent read and write on this connection
+    /// (`None` clears the bound). With a timeout set, a wedged server
+    /// surfaces as a clear "server timed out" error instead of hanging
+    /// the calling thread forever.
+    pub fn set_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        self.writer.set_read_timeout(timeout)?;
+        self.writer.set_write_timeout(timeout)?;
+        Ok(())
+    }
+
+    /// Map a timed-out read/write to a clear error (the raw io error
+    /// kind differs by platform: `WouldBlock` on unix, `TimedOut` on
+    /// windows).
+    fn io_ctx<T>(r: std::io::Result<T>) -> Result<T> {
+        r.map_err(|e| match e.kind() {
+            ErrorKind::WouldBlock | ErrorKind::TimedOut => anyhow::anyhow!(
+                "server timed out: no reply within the configured timeout \
+                 (server wedged or overloaded)"
+            ),
+            _ => e.into(),
+        })
+    }
+
     fn roundtrip(&mut self, msg: Json) -> Result<Json> {
-        self.writer.write_all(msg.to_string().as_bytes())?;
-        self.writer.write_all(b"\n")?;
+        Self::io_ctx(self.writer.write_all(msg.to_string().as_bytes()))?;
+        Self::io_ctx(self.writer.write_all(b"\n"))?;
         let mut line = String::new();
         // 0 bytes = orderly EOF: surface it as what it is instead of
         // feeding the empty string to the JSON parser (which used to
         // produce a baffling "bad json" error).
-        if self.reader.read_line(&mut line)? == 0 {
+        if Self::io_ctx(self.reader.read_line(&mut line))? == 0 {
             anyhow::bail!("connection closed by server");
         }
         Ok(Json::parse(&line)?)
@@ -857,12 +1222,27 @@ impl Client {
         Ok(r.get("ok").and_then(Json::as_bool).unwrap_or(false))
     }
 
-    /// One infer attempt with overload surfaced structurally: a shed
-    /// reply (`retry_after_ms` present) returns
-    /// [`InferOutcome::Overloaded`] instead of an error, so callers
-    /// implementing back-pressure need not parse error strings. Hard
-    /// failures (bad input, unknown model, transport) still `Err`.
+    /// One infer attempt with overload and deadline expiry surfaced
+    /// structurally: a shed reply (`retry_after_ms` present) returns
+    /// [`InferOutcome::Overloaded`] and an expired reply (`waited_ms`
+    /// present) returns [`InferOutcome::Expired`] instead of an error,
+    /// so callers implementing back-pressure need not parse error
+    /// strings. Hard failures (bad input, unknown model, transport)
+    /// still `Err`.
     pub fn try_infer(&mut self, model: Option<&str>, input: &[f32]) -> Result<InferOutcome> {
+        self.try_infer_deadline(model, input, None)
+    }
+
+    /// [`Client::try_infer`] with a queue-wait budget: the server fails
+    /// the request with a structured expiry instead of executing it
+    /// once it has queued longer than `deadline_ms`. `Some(0)`
+    /// explicitly opts out of the server's default deadline.
+    pub fn try_infer_deadline(
+        &mut self,
+        model: Option<&str>,
+        input: &[f32],
+        deadline_ms: Option<u64>,
+    ) -> Result<InferOutcome> {
         let id = self.next_id;
         self.next_id += 1;
         let mut fields = vec![
@@ -873,10 +1253,16 @@ impl Client {
         if let Some(model) = model {
             fields.push(("model", Json::Str(model.into())));
         }
+        if let Some(ms) = deadline_ms {
+            fields.push(("deadline_ms", Json::Num(ms as f64)));
+        }
         let r = self.roundtrip(Json::obj(fields))?;
         if let Some(err) = r.get("error").and_then(Json::as_str) {
             if let Some(ms) = r.get("retry_after_ms").and_then(Json::as_f64) {
                 return Ok(InferOutcome::Overloaded { retry_after_ms: ms as u64 });
+            }
+            if let Some(ms) = r.get("waited_ms").and_then(Json::as_f64) {
+                return Ok(InferOutcome::Expired { waited_ms: ms as u64 });
             }
             anyhow::bail!("server error: {err}");
         }
@@ -894,6 +1280,10 @@ impl Client {
             InferOutcome::Overloaded { retry_after_ms } => anyhow::bail!(
                 "server overloaded (retry after {retry_after_ms} ms): request shed, \
                  back off and retry"
+            ),
+            InferOutcome::Expired { waited_ms } => anyhow::bail!(
+                "deadline exceeded: request expired after {waited_ms} ms in the server \
+                 queue without executing"
             ),
         }
     }

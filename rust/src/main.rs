@@ -4,6 +4,11 @@
 //! gs-sparse serve    [--backend native|pjrt] [--bind 127.0.0.1:7070] [--workers 1]
 //!                    [--window-ms 2] [--queue-depth 0 (unbounded; N = shed
 //!                     over-limit requests with retry_after_ms)]
+//!                    [--deadline-ms 0 (default queue-wait budget; expired
+//!                     requests fail with waited_ms instead of executing)]
+//!                    [--max-conns 0 (cap on open connections)]
+//!                    [--idle-timeout-ms 0 (close stalled connections)]
+//!                    [--max-frame-bytes 1048576 (largest request line)]
 //!                    native: [--models a=a.gsm,b=b.gsm] [--max-models N]
 //!                            [--default-model a]   (multi-model routed serving)
 //!                            or [--model model.gsm]  (serve one .gsm artifact)
@@ -92,6 +97,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // 0 = unbounded (no shedding). With a bound, over-limit requests are
     // rejected immediately with retry_after_ms instead of queueing.
     let queue_depth = args.usize("queue-depth", 0);
+    // Resilience knobs (0 = off for the first three; see ServeConfig).
+    let deadline_ms = args.usize("deadline-ms", 0) as u64;
+    let max_conns = args.usize("max-conns", 0);
+    let idle_timeout_ms = args.usize("idle-timeout-ms", 0) as u64;
+    let max_frame_bytes = args.usize("max-frame-bytes", ServeConfig::default().max_frame_bytes);
 
     if backend == "native" {
         // Store-backed routed serving: named hot-swappable model slots,
@@ -146,6 +156,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 max_batch,
                 window_ms,
                 queue_depth,
+                deadline_ms,
+                max_conns,
+                idle_timeout_ms,
+                max_frame_bytes,
             },
         )?;
         let admission = if queue_depth == 0 {
@@ -182,6 +196,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             max_batch,
             window_ms,
             queue_depth,
+            deadline_ms,
+            max_conns,
+            idle_timeout_ms,
+            max_frame_bytes,
         },
     )?;
     println!(

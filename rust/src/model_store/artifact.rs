@@ -365,8 +365,13 @@ impl ModelArtifact {
     /// Read and validate an artifact from `path`.
     pub fn load<P: AsRef<Path>>(path: P) -> Result<ModelArtifact> {
         let path = path.as_ref();
-        let bytes = std::fs::read(path)
+        let mut bytes = std::fs::read(path)
             .with_context(|| format!("read model artifact {}", path.display()))?;
+        // Fault-injection hook (no-op unless the `fault-inject` feature
+        // is on): lets the chaos suite prove that a damaged read fails
+        // the deploy cleanly through the CRC check, without hand-
+        // crafting broken files.
+        crate::coordinator::faults::corrupt_artifact_bytes(&mut bytes);
         ModelArtifact::from_bytes(&bytes)
             .with_context(|| format!("load model artifact {}", path.display()))
     }

@@ -98,6 +98,7 @@ fn serve_models(
             max_batch,
             window_ms,
             queue_depth,
+            ..ServeConfig::default()
         },
     )
     .unwrap()
@@ -167,7 +168,7 @@ fn two_idle_workers_drain_two_models_concurrently() {
 fn server_serves_second_model_without_waiting_out_first_window() {
     const WINDOW_MS: u64 = 150;
     let (bma, bmb) = (build(&spec_a(11)), build(&spec_b(12)));
-    let handle = serve_models(vec![("a", bma), ("b", bmb)], 2, WINDOW_MS, 0, 8);
+    let mut handle = serve_models(vec![("a", bma), ("b", bmb)], 2, WINDOW_MS, 0, 8);
     let addr = handle.addr;
     let barrier = Arc::new(Barrier::new(2));
     let clients: Vec<_> = [("a", 12usize), ("b", 20usize)]
@@ -202,7 +203,7 @@ fn server_serves_second_model_without_waiting_out_first_window() {
 /// for the routed model.
 #[test]
 fn overload_sheds_with_retry_hint_and_conserves_requests() {
-    let handle = serve_models(vec![("a", build(&spec_a(21)))], 1, 40, 3, 8);
+    let mut handle = serve_models(vec![("a", build(&spec_a(21)))], 1, 40, 3, 8);
     let addr = handle.addr;
     let ok = Arc::new(AtomicUsize::new(0));
     let shed = Arc::new(AtomicUsize::new(0));
@@ -268,7 +269,7 @@ fn overload_sheds_with_retry_hint_and_conserves_requests() {
 #[test]
 #[ignore = "CPU-saturating busy-flood: run serialized in the release-mode CI gate"]
 fn flooding_model_cannot_starve_trickle_admission() {
-    let handle = serve_models(
+    let mut handle = serve_models(
         vec![("flood", build(&spec_a(31))), ("trickle", build(&spec_b(32)))],
         1,
         5,
@@ -347,7 +348,7 @@ fn flooding_model_cannot_starve_trickle_admission() {
 fn failed_batch_counts_errors_per_request() {
     // Admission accepts 4-float inputs; the model wants 12 — every
     // batch fails at execution time.
-    let handle = serve(
+    let mut handle = serve(
         || Ok(build(&spec_a(41)).model),
         ServeConfig {
             bind: "127.0.0.1:0".into(),
@@ -356,6 +357,7 @@ fn failed_batch_counts_errors_per_request() {
             max_batch: 8,
             window_ms: 60,
             queue_depth: 0,
+            ..ServeConfig::default()
         },
     )
     .unwrap();
@@ -389,14 +391,17 @@ fn failed_batch_counts_errors_per_request() {
 }
 
 /// Regression (post-shutdown submit): an infer arriving on a live
-/// connection after the server stopped gets an immediate clear error —
+/// connection after the server stopped gets an immediate clear failure —
 /// before the fix it queued forever and the connection thread hung in
-/// `rx.recv()`.
+/// `rx.recv()`. Since `stop()` now also drains connection threads (it
+/// shuts the sockets' read halves down), the failure may surface as a
+/// structured "shutting down" reply *or* as a closed/reset connection —
+/// either is fine; hanging is not.
 #[test]
 fn infer_after_server_stop_fails_instead_of_hanging() {
     let bm = build(&spec_a(51));
     let engine = Engine::new(bm.model, "inline", 1);
-    let handle = serve_slot(
+    let mut handle = serve_slot(
         &engine,
         ServeConfig {
             bind: "127.0.0.1:0".into(),
@@ -405,6 +410,7 @@ fn infer_after_server_stop_fails_instead_of_hanging() {
             max_batch: 8,
             window_ms: 1,
             queue_depth: 0,
+            ..ServeConfig::default()
         },
     )
     .unwrap();
@@ -412,9 +418,278 @@ fn infer_after_server_stop_fails_instead_of_hanging() {
     let x = Prng::new(8).normal_vec(12, 1.0);
     client.infer(&x).unwrap();
     handle.stop();
-    // The workers are gone; the reply must still arrive, as an error.
     let err = client.infer(&x).unwrap_err();
-    assert!(format!("{err}").contains("shutting down"), "{err}");
+    let msg = format!("{err}");
+    assert!(
+        msg.contains("shutting down")
+            || msg.contains("connection closed")
+            || msg.contains("reset")
+            || msg.contains("broken pipe"),
+        "expected a shutdown-shaped failure, got: {msg}"
+    );
+}
+
+/// Connection cap: with `max_conns` live connections, the next accept
+/// gets a structured at-capacity reply and is closed — and the slot
+/// frees once an existing connection drops, so capacity is a gauge,
+/// not a ratchet.
+#[test]
+fn max_conns_cap_replies_structured_and_frees_slot_on_disconnect() {
+    let bm = build(&spec_a(61));
+    let engine = Engine::new(bm.model, "inline", 1);
+    let mut handle = serve_slot(
+        &engine,
+        ServeConfig {
+            bind: "127.0.0.1:0".into(),
+            workers: 1,
+            input_width: 12,
+            max_batch: 8,
+            window_ms: 1,
+            queue_depth: 0,
+            max_conns: 2,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = handle.addr;
+    let mut c1 = Client::connect(addr).unwrap();
+    let mut c2 = Client::connect(addr).unwrap();
+    // Round-trips prove both connections are registered before the
+    // third attempt (accept order alone doesn't guarantee that).
+    assert!(c1.ping().unwrap());
+    assert!(c2.ping().unwrap());
+    let stats = c1.stats().unwrap();
+    assert_eq!(stat(&stats, "connections"), 2.0, "live-connection gauge");
+
+    // Third connection: accepted at the TCP level, then told why it's
+    // being turned away (a silent close would be indistinguishable
+    // from a crash).
+    let over = std::net::TcpStream::connect(addr).unwrap();
+    let mut line = String::new();
+    std::io::BufReader::new(over).read_line(&mut line).unwrap();
+    let reply = Json::parse(&line).unwrap();
+    let msg = reply.get("error").and_then(Json::as_str).unwrap().to_string();
+    assert!(msg.contains("connection capacity"), "{msg}");
+    assert_eq!(reply.get("max_conns").and_then(Json::as_f64), Some(2.0));
+
+    // Dropping c2 frees its slot (asynchronously: the server notices
+    // EOF, the connection thread exits, the gauge decrements).
+    drop(c2);
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        // At capacity `ping` gets the structured error reply (no `ok`
+        // field → `Ok(false)`); once the slot frees it gets a real pong.
+        match Client::connect(addr).and_then(|mut c| c.ping()) {
+            Ok(true) => break,
+            _ if Instant::now() < deadline => thread::sleep(Duration::from_millis(10)),
+            r => panic!("capacity never freed after disconnect: {r:?}"),
+        }
+    }
+    handle.stop();
+}
+
+/// Bounded framing: a frame larger than `max_frame_bytes` draws a
+/// structured "frame too large" reply and a close — the unbounded line
+/// buffer it used to feed is gone — while a well-formed connection on
+/// the same server keeps working.
+#[test]
+fn oversized_frame_is_rejected_with_structured_reply() {
+    let bm = build(&spec_a(62));
+    let engine = Engine::new(bm.model, "inline", 1);
+    let mut handle = serve_slot(
+        &engine,
+        ServeConfig {
+            bind: "127.0.0.1:0".into(),
+            workers: 1,
+            input_width: 12,
+            max_batch: 8,
+            window_ms: 1,
+            queue_depth: 0,
+            max_frame_bytes: 1024,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = handle.addr;
+
+    let mut abuser = std::net::TcpStream::connect(addr).unwrap();
+    use std::io::Write as _;
+    // 2 KiB with no newline: the reader must give up at the cap, not
+    // wait for a line terminator that may never come.
+    abuser.write_all(&[b'a'; 2048]).unwrap();
+    abuser.flush().unwrap();
+    let mut reader = std::io::BufReader::new(abuser);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let reply = Json::parse(&line).unwrap();
+    let msg = reply.get("error").and_then(Json::as_str).unwrap().to_string();
+    assert!(msg.contains("frame too large"), "{msg}");
+    assert_eq!(reply.get("max_frame_bytes").and_then(Json::as_f64), Some(1024.0));
+    // ... and then the connection is closed.
+    line.clear();
+    assert_eq!(reader.read_line(&mut line).unwrap(), 0, "server must close after reject");
+
+    // A normal client on the same server is unaffected.
+    let mut c = Client::connect(addr).unwrap();
+    let x = Prng::new(9).normal_vec(12, 1.0);
+    assert_eq!(c.infer(&x).unwrap().len(), 32);
+    handle.stop();
+}
+
+/// Slowloris: a connection that sends half a request and then stalls is
+/// reaped by the idle timeout with a structured reply, instead of
+/// pinning its connection thread forever.
+#[test]
+fn slowloris_connection_is_reaped_by_idle_timeout() {
+    let bm = build(&spec_a(63));
+    let engine = Engine::new(bm.model, "inline", 1);
+    let mut handle = serve_slot(
+        &engine,
+        ServeConfig {
+            bind: "127.0.0.1:0".into(),
+            workers: 1,
+            input_width: 12,
+            max_batch: 8,
+            window_ms: 1,
+            queue_depth: 0,
+            idle_timeout_ms: 100,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = handle.addr;
+
+    let mut slow = std::net::TcpStream::connect(addr).unwrap();
+    use std::io::Write as _;
+    slow.write_all(b"{\"op\":").unwrap(); // half a frame, then silence
+    slow.flush().unwrap();
+    let t0 = Instant::now();
+    let mut reader = std::io::BufReader::new(slow);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let reply = Json::parse(&line).unwrap();
+    let msg = reply.get("error").and_then(Json::as_str).unwrap().to_string();
+    assert!(msg.contains("idle timeout"), "{msg}");
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "idle reap took {:?} — timeout not enforced",
+        t0.elapsed()
+    );
+    line.clear();
+    assert_eq!(reader.read_line(&mut line).unwrap(), 0, "server must close after reap");
+
+    // The stalled connection never blocked real traffic.
+    let mut c = Client::connect(addr).unwrap();
+    let x = Prng::new(10).normal_vec(12, 1.0);
+    assert_eq!(c.infer(&x).unwrap().len(), 32);
+    handle.stop();
+}
+
+/// `stop()` under live connections: in-flight requests complete or fail
+/// with a structured/closed error (never hang), the books balance on
+/// the server's own metrics afterwards, and a second `stop()` is a
+/// no-op instead of a panic.
+#[test]
+fn stop_under_live_connections_drains_and_is_idempotent() {
+    let bm = build(&spec_a(64));
+    let engine = Engine::new(bm.model, "inline", 1);
+    let mut handle = serve_slot(
+        &engine,
+        ServeConfig {
+            bind: "127.0.0.1:0".into(),
+            workers: 2,
+            input_width: 12,
+            max_batch: 8,
+            window_ms: 1,
+            queue_depth: 0,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = handle.addr;
+    let done = Arc::new(AtomicUsize::new(0));
+    let failed = Arc::new(AtomicUsize::new(0));
+    let clients: Vec<_> = (0..4)
+        .map(|ci| {
+            let (done, failed) = (Arc::clone(&done), Arc::clone(&failed));
+            thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                let x = Prng::new(400 + ci).normal_vec(12, 1.0);
+                loop {
+                    match c.infer(&x) {
+                        Ok(out) => {
+                            assert_eq!(out.len(), 32);
+                            done.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(_) => {
+                            // Any error here is shutdown-shaped; the
+                            // point is that we got *out* of the call.
+                            failed.fetch_add(1, Ordering::Relaxed);
+                            break;
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    // Let the clients get some requests through, then pull the plug
+    // while their connections are live and mid-traffic.
+    while done.load(Ordering::Relaxed) < 8 {
+        thread::sleep(Duration::from_millis(1));
+    }
+    handle.stop();
+    // `stop()` drained the connection threads, so every client loop
+    // must terminate promptly on its own.
+    for c in clients {
+        c.join().unwrap();
+    }
+    assert_eq!(failed.load(Ordering::Relaxed), 4, "each client exited via one error");
+
+    // Fresh connections are refused outright.
+    assert!(Client::connect(addr).and_then(|mut c| c.ping()).is_err());
+
+    // Conservation on the server's own counters: every admitted request
+    // was answered, errored, shed, or expired — none vanished in the
+    // shutdown.
+    let m = &handle.metrics;
+    let requests = m.requests.load(Ordering::SeqCst);
+    let accounted = m.responses.load(Ordering::SeqCst)
+        + m.errors.load(Ordering::SeqCst)
+        + m.shed.load(Ordering::SeqCst)
+        + m.expired.load(Ordering::SeqCst);
+    assert_eq!(requests, accounted, "conservation must survive stop()");
+    assert!(requests >= 8, "the pre-stop traffic is in the books");
+
+    // Double-stop is safe.
+    handle.stop();
+}
+
+/// Client-side timeout: against a server that accepts and then wedges
+/// (never replies), `set_timeout` turns an indefinite hang into a
+/// clear "server timed out" error.
+#[test]
+fn client_timeout_surfaces_server_wedge_as_timed_out() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let (htx, hrx) = channel();
+    let server = thread::spawn(move || {
+        let (conn, _) = listener.accept().unwrap();
+        hrx.recv().ok(); // hold the connection open, never reply
+        drop(conn);
+    });
+    let mut client = Client::connect_timeout(addr, Duration::from_secs(2)).unwrap();
+    client.set_timeout(Some(Duration::from_millis(100))).unwrap();
+    let t0 = Instant::now();
+    let err = client.ping().unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("server timed out"), "{msg}");
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "timeout not enforced: waited {:?}",
+        t0.elapsed()
+    );
+    htx.send(()).unwrap();
+    server.join().unwrap();
 }
 
 /// Regression (client EOF): a server-side close surfaces as

@@ -1,0 +1,308 @@
+//! Chaos suite: deterministic fault injection against a live server.
+//!
+//! Requires the `fault-inject` cargo feature (see `Cargo.toml`'s
+//! `[[test]]` entry); CI runs it in the release gate with
+//! `--test-threads=1`. The injection state is process-global, so every
+//! test additionally serializes itself on [`serial`] and resets the
+//! fault state on entry and exit — a panicking test cannot leak an
+//! armed fault into its successor.
+
+use gs_sparse::coordinator::{
+    faults, serve_slot, serve_store, server::ServeConfig, Client, Engine, InferOutcome,
+};
+use gs_sparse::model_store::{ModelSlot, ModelStore};
+use gs_sparse::sparse::Pattern;
+use gs_sparse::testing::{build_random_artifact, build_random_model, ModelSpec};
+use gs_sparse::util::{Json, Prng};
+use std::io::{BufRead, Write};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread;
+use std::time::{Duration, Instant};
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+/// Serialize chaos tests against each other (the fault state is
+/// process-global) and disarm everything on entry, even if the previous
+/// test died mid-fault.
+fn serial() -> MutexGuard<'static, ()> {
+    let guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    faults::reset();
+    guard
+}
+
+fn spec(seed: u64) -> ModelSpec {
+    ModelSpec {
+        inputs: 12,
+        hidden: 64,
+        outputs: 32,
+        max_batch: 8,
+        pattern: Pattern::Gs { b: 8, k: 8 },
+        sparsity: 0.75,
+        threads: 1,
+        seed,
+        ..ModelSpec::default()
+    }
+}
+
+/// One-model store-backed server ("m" pinned as default).
+fn serve_one(seed: u64, workers: usize) -> gs_sparse::coordinator::ServerHandle {
+    let store = Arc::new(ModelStore::with_capacity(0, "m"));
+    let bm = build_random_model(&spec(seed)).unwrap();
+    store
+        .register("m", Arc::new(ModelSlot::new(bm.model, "inline", 1)))
+        .unwrap();
+    let engine = Engine::from_store(store, "m", 1).unwrap();
+    serve_store(
+        &engine,
+        ServeConfig {
+            bind: "127.0.0.1:0".into(),
+            workers,
+            input_width: 12,
+            max_batch: 8,
+            window_ms: 1,
+            queue_depth: 0,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap()
+}
+
+fn stat(stats: &Json, key: &str) -> f64 {
+    stats
+        .get(key)
+        .and_then(Json::as_f64)
+        .unwrap_or_else(|| panic!("stats missing {key}: {}", stats.to_string()))
+}
+
+fn model_stat(stats: &Json, model: &str, key: &str) -> f64 {
+    stats
+        .get("models")
+        .and_then(|m| m.get(model))
+        .and_then(|e| e.get(key))
+        .and_then(Json::as_f64)
+        .unwrap_or_else(|| panic!("stats missing models.{model}.{key}: {}", stats.to_string()))
+}
+
+/// An injected worker panic fails exactly its own batch — per-request,
+/// with the panic message — and the worker keeps serving afterwards.
+/// The books balance to the request: `panics` counts the batch, `errors`
+/// counts its requests, and conservation holds exactly.
+#[test]
+fn worker_survives_injected_panic_with_exact_accounting() {
+    let _guard = serial();
+    let mut handle = serve_one(71, 1);
+    let mut client = Client::connect(handle.addr).unwrap();
+    let x = Prng::new(12).normal_vec(12, 1.0);
+
+    for _ in 0..2 {
+        assert_eq!(client.infer_model("m", &x).unwrap().len(), 32);
+    }
+
+    // Arm: the very next batch to enter execution panics.
+    faults::arm_panic_on_batch(faults::batches_executed() + 1);
+    let err = client.infer_model("m", &x).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("worker panicked"), "{msg}");
+    assert!(msg.contains("injected fault"), "panic payload must survive: {msg}");
+
+    // The worker caught the panic; the same connection keeps working.
+    for _ in 0..5 {
+        assert_eq!(client.infer_model("m", &x).unwrap().len(), 32);
+    }
+
+    let stats = client.stats().unwrap();
+    assert_eq!(stat(&stats, "requests"), 8.0);
+    assert_eq!(stat(&stats, "responses"), 7.0);
+    assert_eq!(stat(&stats, "errors"), 1.0, "the panicked batch fails per-request");
+    assert_eq!(stat(&stats, "panics"), 1.0);
+    assert_eq!(
+        stat(&stats, "requests"),
+        stat(&stats, "responses")
+            + stat(&stats, "errors")
+            + stat(&stats, "shed")
+            + stat(&stats, "expired"),
+        "conservation across a worker panic"
+    );
+    assert_eq!(model_stat(&stats, "m", "requests"), 8.0);
+    assert_eq!(model_stat(&stats, "m", "errors"), 1.0);
+    handle.stop();
+    faults::reset();
+}
+
+/// A request whose queue wait exceeds its deadline fails with a
+/// structured expiry *before* executing: injected execution latency
+/// wedges the single worker, and the deadlined request behind it is
+/// expired at batch formation — the batch counter proves it never ran.
+#[test]
+fn injected_latency_expires_deadlined_request_before_execution() {
+    let _guard = serial();
+    let mut handle = serve_one(72, 1);
+    let addr = handle.addr;
+    let x = Prng::new(13).normal_vec(12, 1.0);
+
+    faults::arm_latency_ms(150);
+    let blocker = {
+        let x = x.clone();
+        thread::spawn(move || {
+            let mut c = Client::connect(addr).unwrap();
+            c.infer_model("m", &x).unwrap() // slow (injected), but succeeds
+        })
+    };
+    // Let the blocker's batch claim the only worker, then queue behind
+    // it with a 40ms budget the ~150ms wedge must blow through.
+    thread::sleep(Duration::from_millis(40));
+    let batches_before = faults::batches_executed();
+    let mut client = Client::connect(addr).unwrap();
+    match client.try_infer_deadline(Some("m"), &x, Some(40)).unwrap() {
+        InferOutcome::Expired { waited_ms } => {
+            assert!(waited_ms >= 40, "expired before its deadline: {waited_ms}ms");
+        }
+        other => panic!("expected expiry, got {other:?}"),
+    }
+    assert_eq!(
+        faults::batches_executed(),
+        batches_before,
+        "an expired request must never enter execution"
+    );
+    assert_eq!(blocker.join().unwrap().len(), 32);
+
+    let stats = client.stats().unwrap();
+    assert_eq!(stat(&stats, "expired"), 1.0);
+    assert_eq!(model_stat(&stats, "m", "expired"), 1.0);
+    assert_eq!(
+        stat(&stats, "requests"),
+        stat(&stats, "responses")
+            + stat(&stats, "errors")
+            + stat(&stats, "shed")
+            + stat(&stats, "expired"),
+    );
+
+    // Disarm: the same deadline is now ample.
+    faults::reset();
+    match client.try_infer_deadline(Some("m"), &x, Some(5_000)).unwrap() {
+        InferOutcome::Output(out) => assert_eq!(out.len(), 32),
+        other => panic!("expected output after disarm, got {other:?}"),
+    }
+    handle.stop();
+    faults::reset();
+}
+
+/// A corrupted artifact read fails the deploy cleanly — counted in
+/// `swap_failures`, existing traffic unaffected — and the same file
+/// deploys fine once the fault is disarmed (the corruption was injected
+/// on read, not present on disk).
+#[test]
+fn corrupted_artifact_load_fails_cleanly_and_serving_continues() {
+    let _guard = serial();
+    let (artifact, _) = build_random_artifact(&spec(73)).unwrap();
+    let path = std::env::temp_dir().join(format!("gsm-chaos-{}.gsm", std::process::id()));
+    artifact.save(&path).unwrap();
+
+    let mut handle = serve_one(74, 1);
+    let mut client = Client::connect(handle.addr).unwrap();
+    let x = Prng::new(14).normal_vec(12, 1.0);
+
+    faults::arm_corrupt_artifact(true);
+    let err = client.load("m2", path.to_str().unwrap()).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("checksum mismatch"), "{msg}");
+    let stats = client.stats().unwrap();
+    assert!(stat(&stats, "swap_failures") >= 1.0, "failed deploy must be counted");
+    // The resident model never stopped serving.
+    assert_eq!(client.infer_model("m", &x).unwrap().len(), 32);
+
+    faults::arm_corrupt_artifact(false);
+    let (version, evicted) = client.load("m2", path.to_str().unwrap()).unwrap();
+    assert_eq!(version, 1);
+    assert!(evicted.is_empty());
+    assert_eq!(client.infer_model("m2", &x).unwrap().len(), 32);
+
+    let _ = std::fs::remove_file(&path);
+    handle.stop();
+    faults::reset();
+}
+
+/// Abusive connections must not cost well-formed clients their
+/// deadlines: with a slowloris (half a frame, then silence) and an
+/// oversized-frame sender both live, a deadlined well-formed request
+/// still executes — and each abuser gets its structured goodbye.
+#[test]
+fn abusive_connections_do_not_delay_deadlined_clients() {
+    let _guard = serial();
+    let bm = build_random_model(&spec(75)).unwrap();
+    let engine = Engine::new(bm.model, "inline", 1);
+    let mut handle = serve_slot(
+        &engine,
+        ServeConfig {
+            bind: "127.0.0.1:0".into(),
+            workers: 2,
+            input_width: 12,
+            max_batch: 8,
+            window_ms: 1,
+            queue_depth: 0,
+            idle_timeout_ms: 400,
+            max_frame_bytes: 1024,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = handle.addr;
+
+    let mut slowloris = std::net::TcpStream::connect(addr).unwrap();
+    slowloris.write_all(b"{\"op\":\"inf").unwrap();
+    slowloris.flush().unwrap();
+
+    let mut oversized = std::net::TcpStream::connect(addr).unwrap();
+    oversized.write_all(&[b'x'; 4096]).unwrap();
+    oversized.flush().unwrap();
+
+    // With both abusers live, a well-formed client's deadlined requests
+    // all execute — the abusers hold connection threads, not workers,
+    // and bounded framing refuses to buffer the flood.
+    let mut client = Client::connect(addr).unwrap();
+    let x = Prng::new(15).normal_vec(12, 1.0);
+    for i in 0..5 {
+        match client.try_infer_deadline(None, &x, Some(1_000)).unwrap() {
+            InferOutcome::Output(out) => assert_eq!(out.len(), 32),
+            other => panic!("request {i} displaced by abusive connections: {other:?}"),
+        }
+    }
+
+    // The oversized sender got a structured refusal, then a close.
+    let mut reader = std::io::BufReader::new(oversized);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let reply = Json::parse(&line).unwrap();
+    assert!(
+        reply.get("error").and_then(Json::as_str).unwrap().contains("frame too large"),
+        "{line}"
+    );
+    line.clear();
+    assert_eq!(reader.read_line(&mut line).unwrap(), 0);
+
+    // The slowloris is reaped by the idle timeout with a goodbye.
+    let t0 = Instant::now();
+    let mut reader = std::io::BufReader::new(slowloris);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let reply = Json::parse(&line).unwrap();
+    assert!(
+        reply.get("error").and_then(Json::as_str).unwrap().contains("idle timeout"),
+        "{line}"
+    );
+    assert!(t0.elapsed() < Duration::from_secs(10), "slowloris reap too slow");
+
+    // The abuse left no trace on the books: every admitted request is
+    // accounted for on the server's own counters.
+    let m = &handle.metrics;
+    assert_eq!(
+        m.requests.load(Ordering::SeqCst),
+        m.responses.load(Ordering::SeqCst)
+            + m.errors.load(Ordering::SeqCst)
+            + m.shed.load(Ordering::SeqCst)
+            + m.expired.load(Ordering::SeqCst),
+    );
+    handle.stop();
+    faults::reset();
+}

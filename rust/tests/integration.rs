@@ -152,7 +152,7 @@ fn native_f16_model_tracks_f32() {
 #[test]
 fn serving_roundtrip_and_batching() {
     let engine = Engine::new(native_model(1, 11).model, "inline", 1);
-    let handle = serve_slot(
+    let mut handle = serve_slot(
         &engine,
         ServeConfig {
             bind: "127.0.0.1:0".into(),
@@ -161,6 +161,7 @@ fn serving_roundtrip_and_batching() {
             max_batch: 8,
             window_ms: 2,
             queue_depth: 0,
+            ..ServeConfig::default()
         },
     )
     .unwrap();
@@ -190,7 +191,7 @@ fn serving_roundtrip_and_batching() {
 #[test]
 fn serving_rejects_bad_input() {
     let factory = || Ok(native_model(1, 21).model);
-    let handle = serve(
+    let mut handle = serve(
         factory,
         ServeConfig {
             bind: "127.0.0.1:0".into(),
@@ -199,6 +200,7 @@ fn serving_rejects_bad_input() {
             max_batch: 8,
             window_ms: 1,
             queue_depth: 0,
+            ..ServeConfig::default()
         },
     )
     .unwrap();

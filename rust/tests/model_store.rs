@@ -168,7 +168,7 @@ fn hot_swap_under_concurrent_traffic() {
         1,
     );
     let metrics = Arc::clone(&engine.metrics);
-    let handle = serve_slot(
+    let mut handle = serve_slot(
         &engine,
         ServeConfig {
             bind: "127.0.0.1:0".into(),
@@ -177,6 +177,7 @@ fn hot_swap_under_concurrent_traffic() {
             max_batch: 8,
             window_ms: 1,
             queue_depth: 0,
+            ..ServeConfig::default()
         },
     )
     .unwrap();
@@ -256,7 +257,7 @@ fn failed_swap_keeps_serving() {
     let want = bm.model.infer_batch(&[probe.clone()]).unwrap();
 
     let engine = Engine::new(bm.model, "inline", 1);
-    let handle = serve_slot(
+    let mut handle = serve_slot(
         &engine,
         ServeConfig {
             bind: "127.0.0.1:0".into(),
@@ -265,6 +266,7 @@ fn failed_swap_keeps_serving() {
             max_batch: 8,
             window_ms: 1,
             queue_depth: 0,
+            ..ServeConfig::default()
         },
     )
     .unwrap();

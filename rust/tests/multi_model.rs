@@ -71,6 +71,7 @@ fn serve_models(
             max_batch: widest_batch,
             window_ms: 1,
             queue_depth: 0,
+            ..ServeConfig::default()
         },
     )
     .unwrap();
@@ -103,7 +104,8 @@ fn build(spec: &ModelSpec) -> BuiltModel {
 /// in-memory model, and the unqualified route hits the default.
 #[test]
 fn routed_serving_isolates_models() {
-    let (handle, built) = serve_models(vec![("a", build(&spec_a(1))), ("b", build(&spec_b(2)))], 0);
+    let (mut handle, built) =
+        serve_models(vec![("a", build(&spec_a(1))), ("b", build(&spec_b(2)))], 0);
     let addr = handle.addr;
 
     let mut rng = Prng::new(9);
@@ -149,7 +151,7 @@ fn routed_serving_isolates_models() {
 /// keeps working afterwards.
 #[test]
 fn unknown_model_requests_fail_cleanly() {
-    let (handle, built) = serve_models(vec![("a", build(&spec_a(3)))], 0);
+    let (mut handle, built) = serve_models(vec![("a", build(&spec_a(3)))], 0);
     let mut client = Client::connect(handle.addr).unwrap();
     let probe = Prng::new(5).normal_vec(12, 1.0);
 
@@ -176,7 +178,8 @@ fn unknown_model_requests_fail_cleanly() {
 /// the default model is untouched, and per-model stats record the swap.
 #[test]
 fn non_default_hot_swap_under_traffic() {
-    let (handle, built) = serve_models(vec![("a", build(&spec_a(11))), ("b", build(&spec_b(12)))], 0);
+    let (mut handle, built) =
+        serve_models(vec![("a", build(&spec_a(11))), ("b", build(&spec_b(12)))], 0);
     let addr = handle.addr;
     // b's replacement: same geometry, different weights.
     let (b2_artifact, bm_b2) = build_random_artifact(&spec_b(13)).unwrap();
@@ -243,7 +246,7 @@ fn non_default_hot_swap_under_traffic() {
 /// bit-identical serving — nothing is ever dropped or wrong.
 #[test]
 fn eviction_is_graceful_and_reload_restores_serving() {
-    let (handle, built) = serve_models(
+    let (mut handle, built) = serve_models(
         vec![("a", build(&spec_a(31))), ("b", build(&spec_b(32)))],
         2,
     );
@@ -324,7 +327,7 @@ fn eviction_is_graceful_and_reload_restores_serving() {
 /// onto a fresh name it registers version 1 and serves immediately.
 #[test]
 fn load_existing_name_swaps_fresh_name_registers() {
-    let (handle, built) = serve_models(vec![("a", build(&spec_a(51)))], 0);
+    let (mut handle, built) = serve_models(vec![("a", build(&spec_a(51)))], 0);
     let mut client = Client::connect(handle.addr).unwrap();
 
     // Fresh name.
