@@ -1,0 +1,76 @@
+#!/usr/bin/env python3
+"""Store-recovery E2E driver for CI.
+
+Phase 1 talks to a `gs-sparse serve --store-dir` server: loads a second
+model, hot-swaps the default to v2, and records both models' logits.
+The workflow then kills the server with SIGKILL and restarts it from the
+same --store-dir with no --model/--models flags. Phase 2 asserts the
+replayed registry resumes every model at its exact pre-crash version and
+that the logits are bit-identical (same reply text, so identical floats).
+"""
+import json
+import socket
+import sys
+import time
+
+EXPECTED = "/tmp/gsm-ci-store/expected.json"
+
+
+def connect(port, timeout=60.0):
+    deadline = time.time() + timeout
+    while True:
+        try:
+            s = socket.create_connection(("127.0.0.1", port), timeout=5)
+            s.settimeout(30)
+            return s.makefile("rw", encoding="utf-8")
+        except OSError:
+            if time.time() > deadline:
+                raise
+            time.sleep(0.2)
+
+
+def rpc(io, **msg):
+    io.write(json.dumps(msg) + "\n")
+    io.flush()
+    reply = json.loads(io.readline())
+    if "error" in reply:
+        raise SystemExit(f"server error for {msg}: {reply}")
+    return reply
+
+
+def infer_input(n):
+    # Deterministic, text-stable floats: exact in JSON both ways.
+    return [(i % 7) * 0.25 - 0.5 for i in range(n)]
+
+
+def phase1(port):
+    io = connect(port)
+    loaded = rpc(io, op="load", model="beta", path="/tmp/gsm-ci-store-b1.gsm")
+    assert loaded.get("version") == 1, loaded
+    swapped = rpc(io, op="swap", path="/tmp/gsm-ci-store-a2.gsm")
+    assert swapped.get("version") == 2, swapped
+    out_a = rpc(io, op="infer", id=1, input=infer_input(64))["output"]
+    out_b = rpc(io, op="infer", id=2, model="beta", input=infer_input(20))["output"]
+    with open(EXPECTED, "w") as f:
+        json.dump({"a": out_a, "b": out_b}, f)
+    print("phase1 ok: loaded beta v1, swapped default to v2, recorded logits")
+
+
+def phase2(port):
+    io = connect(port)
+    models = rpc(io, op="models")
+    assert models.get("default") == "default", models
+    entries = models["models"]
+    assert entries["default"]["version"] == 2, entries
+    assert entries["beta"]["version"] == 1, entries
+    with open(EXPECTED) as f:
+        expected = json.load(f)
+    out_a = rpc(io, op="infer", id=3, input=infer_input(64))["output"]
+    out_b = rpc(io, op="infer", id=4, model="beta", input=infer_input(20))["output"]
+    assert out_a == expected["a"], "default logits changed across restart"
+    assert out_b == expected["b"], "beta logits changed across restart"
+    print("phase2 ok: registry and logits resumed bit-identically after kill -9")
+
+
+if __name__ == "__main__":
+    {"phase1": phase1, "phase2": phase2}[sys.argv[1]](int(sys.argv[2]))

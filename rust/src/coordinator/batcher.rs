@@ -43,7 +43,7 @@
 //! than the window is honored rather than blown by the batcher itself.
 
 use super::metrics::Metrics;
-use crate::model_store::ModelSlot;
+use crate::model_store::{Admission, ModelSlot};
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::Sender;
@@ -61,12 +61,23 @@ pub struct Reject {
     /// How long the request sat queued, set when it expired past its
     /// deadline (serialized as `waited_ms` in the protocol).
     pub waited_ms: Option<u64>,
+    /// Time until the quarantined slot admits its next half-open probe,
+    /// set when the circuit breaker fast-failed this request (serialized
+    /// as `quarantined_for_ms` in the protocol). Deliberately *not*
+    /// `retry_after_ms`: a quarantine fast-fail is a hard error, not an
+    /// overload, and clients must not classify it as retryable backoff.
+    pub quarantined_for_ms: Option<u64>,
 }
 
 impl Reject {
     /// A plain execution/infrastructure failure (no backoff hint).
     pub fn error(msg: impl Into<String>) -> Reject {
-        Reject { error: msg.into(), retry_after_ms: None, waited_ms: None }
+        Reject {
+            error: msg.into(),
+            retry_after_ms: None,
+            waited_ms: None,
+            quarantined_for_ms: None,
+        }
     }
 
     fn overloaded(retry_after_ms: u64) -> Reject {
@@ -86,6 +97,16 @@ impl Reject {
     fn shutdown() -> Reject {
         Reject::error("server shutting down; request not accepted")
     }
+
+    fn quarantined(retry_in_ms: u64) -> Reject {
+        Reject {
+            quarantined_for_ms: Some(retry_in_ms),
+            ..Reject::error(
+                "model quarantined: repeated failures tripped the circuit breaker; failing fast \
+                 until a probe succeeds",
+            )
+        }
+    }
 }
 
 /// Why [`Batcher::submit`] refused a request. The request's `tx` has
@@ -97,6 +118,9 @@ impl Reject {
 pub enum SubmitError {
     /// Bounded admission shed this request; retry after the hint.
     Overloaded { retry_after_ms: u64 },
+    /// The routed slot is quarantined by its circuit breaker; the
+    /// request was fast-failed without occupying queue space.
+    Quarantined { retry_in_ms: u64 },
     /// The batcher is shut down; workers may already be gone, so
     /// queueing would strand the request forever.
     ShutDown,
@@ -126,6 +150,11 @@ pub struct InferRequest {
     /// [`Reject`] and counted in the `expired` metrics — it never
     /// executes.
     pub deadline_ms: Option<u64>,
+    /// Marked by admission when this request is a quarantined slot's
+    /// half-open probe: the outcome of the batch carrying it decides
+    /// whether the circuit closes. Workers pass it through to
+    /// [`ModelSlot::observe_execution`].
+    pub probe: bool,
 }
 
 impl InferRequest {
@@ -141,6 +170,7 @@ impl InferRequest {
             slot: None,
             cap: usize::MAX,
             deadline_ms: None,
+            probe: false,
         }
     }
 
@@ -322,8 +352,21 @@ impl Batcher {
     ///   model) and this one is admitted; otherwise this request is
     ///   shed. Either way exactly one request gets the overload
     ///   [`Reject`] with a `retry_after_ms` hint.
-    pub fn submit(&self, req: InferRequest) -> Result<(), SubmitError> {
+    pub fn submit(&self, mut req: InferRequest) -> Result<(), SubmitError> {
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        // Quarantine circuit breaker: fail fast before the request can
+        // occupy queue space or evict a shedding victim.
+        if let Some(slot) = &req.slot {
+            match slot.admit() {
+                Admission::Admit => {}
+                Admission::AdmitProbe => req.probe = true,
+                Admission::FastFail { retry_in_ms } => {
+                    self.metrics.count_quarantined(&req.model);
+                    req.fail(Reject::quarantined(retry_in_ms));
+                    return Err(SubmitError::Quarantined { retry_in_ms });
+                }
+            }
+        }
         let key = req.batch_key();
         let mut st = self.state.lock().unwrap();
         if st.shutdown {
@@ -763,6 +806,101 @@ mod tests {
         let (total, per_model) = b.queue_depths();
         assert_eq!(per_model.get("m"), Some(&2));
         assert_eq!(total, 2);
+    }
+
+    /// Quarantine fast-fail at admission: a tripped slot's request is
+    /// rejected before it can touch the queue, the reject carries
+    /// `quarantined_for_ms` (not the overload backoff hint), and the
+    /// accounting keeps conservation exact: the fast-fail is an error
+    /// plus the supplementary `quarantined` counter.
+    #[test]
+    fn quarantined_slot_fast_fails_at_admission() {
+        use crate::model_store::SlotConfig;
+        let b = batcher(8, 1, 0);
+        let (tx, rx): (_, Rx) = channel();
+        let model = build_random_model(&ModelSpec {
+            inputs: 8,
+            hidden: 32,
+            outputs: 8,
+            max_batch: 8,
+            pattern: crate::sparse::pattern::Pattern::Gs { b: 8, k: 8 },
+            sparsity: 0.75,
+            threads: 1,
+            seed: 11,
+            ..ModelSpec::default()
+        })
+        .unwrap()
+        .model;
+        let slot = Arc::new(ModelSlot::with_config(
+            model,
+            "inline",
+            1,
+            SlotConfig {
+                quarantine_after: 1,
+                quarantine_cooldown_ms: 60_000,
+                ..SlotConfig::default()
+            },
+        ));
+        // One failed request trips the breaker.
+        slot.observe_execution(slot.version(), 0, 1, false);
+        assert_eq!(slot.state_name(), "quarantined");
+        let err = b.submit(routed(1, &slot, "m", &tx)).unwrap_err();
+        assert!(matches!(err, SubmitError::Quarantined { .. }), "{err:?}");
+        let (id, result) = rx.try_recv().expect("fast-fail delivered on the reply channel");
+        assert_eq!(id, 1);
+        let why = result.unwrap_err();
+        assert!(why.error.starts_with("model quarantined"), "{}", why.error);
+        assert!(why.quarantined_for_ms.is_some());
+        assert!(why.retry_after_ms.is_none(), "quarantine is a hard error, not backoff");
+        assert_eq!(b.depth(), 0, "fast-failed request never queued");
+        assert_eq!(b.metrics.requests.load(Ordering::Relaxed), 1);
+        assert_eq!(b.metrics.errors.load(Ordering::Relaxed), 1);
+        assert_eq!(b.metrics.quarantined.load(Ordering::Relaxed), 1);
+        assert_eq!(b.metrics.model("m").quarantined.load(Ordering::Relaxed), 1);
+    }
+
+    /// Half-open recovery through the batcher: once the cool-down
+    /// elapses the next submission is admitted as the probe (marked on
+    /// the request), and a clean probe outcome closes the circuit.
+    #[test]
+    fn half_open_probe_is_marked_and_admitted() {
+        use crate::model_store::{SlotConfig, SlotEvent};
+        let b = batcher(8, 1, 0);
+        let (tx, _rx) = channel();
+        let model = build_random_model(&ModelSpec {
+            inputs: 8,
+            hidden: 32,
+            outputs: 8,
+            max_batch: 8,
+            pattern: crate::sparse::pattern::Pattern::Gs { b: 8, k: 8 },
+            sparsity: 0.75,
+            threads: 1,
+            seed: 12,
+            ..ModelSpec::default()
+        })
+        .unwrap()
+        .model;
+        let slot = Arc::new(ModelSlot::with_config(
+            model,
+            "inline",
+            1,
+            SlotConfig {
+                quarantine_after: 1,
+                quarantine_cooldown_ms: 1,
+                ..SlotConfig::default()
+            },
+        ));
+        slot.observe_execution(slot.version(), 0, 1, false);
+        std::thread::sleep(Duration::from_millis(10));
+        b.submit(routed(1, &slot, "m", &tx)).unwrap();
+        let batch = b.next_batch().unwrap();
+        assert!(batch[0].probe, "cool-down elapsed: the admitted request is the probe");
+        // The slot stays quarantined until the probe outcome arrives,
+        // and a clean probe closes the circuit.
+        assert_eq!(slot.state_name(), "quarantined");
+        let events = slot.observe_execution(slot.version(), batch.len() as u64, 0, true);
+        assert_eq!(events, vec![SlotEvent::Recovered]);
+        assert_eq!(slot.state_name(), "serving");
     }
 
     /// Fair shedding at the bound: an arrival for a model queuing less

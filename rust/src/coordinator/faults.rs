@@ -12,6 +12,8 @@
 //! * `GS_FAULT_PANIC_BATCH=N`  — panic when the N-th batch executes
 //! * `GS_FAULT_LATENCY_MS=MS`  — sleep `MS` before every batch
 //! * `GS_FAULT_CORRUPT_ARTIFACT=1` — flip a byte in every artifact read
+//! * `GS_FAULT_TORN_WRITE=1` — the next artifact save crashes mid-write,
+//!   leaving a torn temp file and the old artifact intact
 //!
 //! Injection is deterministic — batches are counted, not sampled — so a
 //! chaos test can say "the 3rd batch panics" and assert the exact
@@ -33,6 +35,8 @@ mod imp {
     static LATENCY_MS: AtomicU64 = AtomicU64::new(0);
     /// Flip a byte in every artifact read.
     static CORRUPT_ARTIFACT: AtomicBool = AtomicBool::new(false);
+    /// Tear the next artifact write (one-shot: trips once, then disarms).
+    static TORN_WRITE: AtomicBool = AtomicBool::new(false);
 
     fn env_init() {
         static INIT: OnceLock<()> = OnceLock::new();
@@ -46,6 +50,7 @@ mod imp {
             PANIC_ON_BATCH.store(num("GS_FAULT_PANIC_BATCH"), Ordering::SeqCst);
             LATENCY_MS.store(num("GS_FAULT_LATENCY_MS"), Ordering::SeqCst);
             CORRUPT_ARTIFACT.store(num("GS_FAULT_CORRUPT_ARTIFACT") != 0, Ordering::SeqCst);
+            TORN_WRITE.store(num("GS_FAULT_TORN_WRITE") != 0, Ordering::SeqCst);
         });
     }
 
@@ -72,6 +77,16 @@ mod imp {
         }
     }
 
+    pub fn torn_artifact_write(len: usize) -> Option<usize> {
+        env_init();
+        if TORN_WRITE.swap(false, Ordering::SeqCst) {
+            // Crash "mid-write": half the bytes make it to disk.
+            Some(len / 2)
+        } else {
+            None
+        }
+    }
+
     pub fn arm_panic_on_batch(n: u64) {
         env_init();
         PANIC_ON_BATCH.store(n, Ordering::SeqCst);
@@ -87,6 +102,11 @@ mod imp {
         CORRUPT_ARTIFACT.store(on, Ordering::SeqCst);
     }
 
+    pub fn arm_torn_artifact_write(on: bool) {
+        env_init();
+        TORN_WRITE.store(on, Ordering::SeqCst);
+    }
+
     pub fn batches_executed() -> u64 {
         env_init();
         BATCHES.load(Ordering::SeqCst)
@@ -97,6 +117,7 @@ mod imp {
         PANIC_ON_BATCH.store(0, Ordering::SeqCst);
         LATENCY_MS.store(0, Ordering::SeqCst);
         CORRUPT_ARTIFACT.store(false, Ordering::SeqCst);
+        TORN_WRITE.store(false, Ordering::SeqCst);
         BATCHES.store(0, Ordering::SeqCst);
     }
 }
@@ -109,11 +130,18 @@ mod imp {
     #[inline(always)]
     pub fn corrupt_artifact_bytes(_bytes: &mut [u8]) {}
 
+    #[inline(always)]
+    pub fn torn_artifact_write(_len: usize) -> Option<usize> {
+        None
+    }
+
     pub fn arm_panic_on_batch(_n: u64) {}
 
     pub fn arm_latency_ms(_ms: u64) {}
 
     pub fn arm_corrupt_artifact(_on: bool) {}
+
+    pub fn arm_torn_artifact_write(_on: bool) {}
 
     pub fn batches_executed() -> u64 {
         0
@@ -130,6 +158,12 @@ pub use imp::on_batch_execute;
 /// CRC check fails. No-op without the `fault-inject` feature.
 pub use imp::corrupt_artifact_bytes;
 
+/// Hook: an artifact of `len` bytes is about to be written. When the
+/// torn-write fault is armed, returns `Some(cut)` — the writer must
+/// leave only the first `cut` bytes in its temp file and fail as if the
+/// process died mid-write. One-shot; always `None` without the feature.
+pub use imp::torn_artifact_write;
+
 /// Arm: panic when the `n`-th batch (1-based, counted from startup or
 /// [`reset`]) enters execution. `0` disarms.
 pub use imp::arm_panic_on_batch;
@@ -139,6 +173,10 @@ pub use imp::arm_latency_ms;
 
 /// Arm: corrupt every artifact read until disarmed.
 pub use imp::arm_corrupt_artifact;
+
+/// Arm: tear the next artifact save (one-shot — the save fails leaving a
+/// partial temp file, then the fault disarms itself).
+pub use imp::arm_torn_artifact_write;
 
 /// Batches that have entered execution since startup or [`reset`]
 /// (always 0 without the feature).

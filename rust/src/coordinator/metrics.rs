@@ -59,6 +59,13 @@ pub struct ModelMetrics {
     /// Successful hot-swaps of this slot.
     pub swaps: AtomicU64,
     pub swap_failures: AtomicU64,
+    /// Rollbacks of this slot (manual `rollback` ops + canary
+    /// auto-rollbacks).
+    pub rollbacks: AtomicU64,
+    /// Requests fast-failed at admission because the slot was
+    /// quarantined. A supplementary view: each is also counted in
+    /// `errors`, so the conservation identity is unchanged.
+    pub quarantined: AtomicU64,
     latencies: Reservoir,
     /// When this model last admitted an infer request (None = never).
     last_used: Mutex<Option<Instant>>,
@@ -90,7 +97,6 @@ impl ModelMetrics {
 }
 
 /// Thread-safe serving metrics.
-#[derive(Default)]
 pub struct Metrics {
     pub requests: AtomicU64,
     pub responses: AtomicU64,
@@ -118,16 +124,54 @@ pub struct Metrics {
     pub swap_failures: AtomicU64,
     /// Cold models LRU-evicted from the store under capacity pressure.
     pub evictions: AtomicU64,
+    /// Slot rollbacks (manual `rollback` ops + canary auto-rollbacks)
+    /// across every slot.
+    pub rollbacks: AtomicU64,
+    /// Requests fast-failed at admission because their slot was
+    /// quarantined. Supplementary: each is also counted in `errors`, so
+    /// `requests == responses + errors + shed + expired` still holds
+    /// exactly (same pattern as `panics`).
+    pub quarantined: AtomicU64,
     latencies: Reservoir,
     /// Per-model breakdowns, keyed by slot name. Entries are created on
     /// first touch and survive unload/eviction (counters are history,
     /// not registry state).
     models: RwLock<BTreeMap<String, Arc<ModelMetrics>>>,
+    /// Server start time, backing the `uptime_ms` stats key.
+    started: Instant,
+}
+
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics {
+            requests: AtomicU64::new(0),
+            responses: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_rows: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            expired: AtomicU64::new(0),
+            panics: AtomicU64::new(0),
+            swaps: AtomicU64::new(0),
+            swap_failures: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            rollbacks: AtomicU64::new(0),
+            quarantined: AtomicU64::new(0),
+            latencies: Reservoir::default(),
+            models: RwLock::new(BTreeMap::new()),
+            started: Instant::now(),
+        }
+    }
 }
 
 impl Metrics {
     pub fn new() -> Metrics {
         Metrics::default()
+    }
+
+    /// Milliseconds since this metrics object (the server) was created.
+    pub fn uptime_ms(&self) -> u64 {
+        self.started.elapsed().as_millis() as u64
     }
 
     /// The per-model breakdown for `name`, created on first use.
@@ -180,6 +224,29 @@ impl Metrics {
         self.expired.fetch_add(1, Ordering::Relaxed);
         if !model.is_empty() {
             self.model(model).expired.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Count one rollback globally and per model (same shape as
+    /// [`Metrics::count_errors`]).
+    pub fn count_rollback(&self, model: &str) {
+        self.rollbacks.fetch_add(1, Ordering::Relaxed);
+        if !model.is_empty() {
+            self.model(model).rollbacks.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Count one quarantine fast-fail globally and per model. The
+    /// request is terminal with an error reply, so it bumps `errors`
+    /// (keeping the conservation identity exact) *and* the supplementary
+    /// `quarantined` counter that tells operators why.
+    pub fn count_quarantined(&self, model: &str) {
+        self.quarantined.fetch_add(1, Ordering::Relaxed);
+        self.errors.fetch_add(1, Ordering::Relaxed);
+        if !model.is_empty() {
+            let mm = self.model(model);
+            mm.quarantined.fetch_add(1, Ordering::Relaxed);
+            mm.errors.fetch_add(1, Ordering::Relaxed);
         }
     }
 
@@ -246,6 +313,28 @@ mod tests {
         assert!(b.latency_summary().is_none());
         let names: Vec<String> = m.model_snapshot().into_iter().map(|(n, _)| n).collect();
         assert_eq!(names, vec!["a".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn quarantine_counts_keep_conservation_exact() {
+        let m = Metrics::new();
+        m.count_quarantined("a");
+        m.count_quarantined("a");
+        m.count_rollback("a");
+        assert_eq!(m.quarantined.load(Ordering::Relaxed), 2);
+        assert_eq!(m.errors.load(Ordering::Relaxed), 2, "each fast-fail is also an error");
+        assert_eq!(m.rollbacks.load(Ordering::Relaxed), 1);
+        let a = m.model("a");
+        assert_eq!(a.quarantined.load(Ordering::Relaxed), 2);
+        assert_eq!(a.errors.load(Ordering::Relaxed), 2);
+        assert_eq!(a.rollbacks.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn uptime_advances() {
+        let m = Metrics::new();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(m.uptime_ms() >= 1);
     }
 
     #[test]

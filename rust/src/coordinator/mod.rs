@@ -43,6 +43,16 @@
 //! behind the `fault-inject` cargo feature) that the chaos test suite
 //! drives.
 //!
+//! On top of that sits a **deployment-safety layer** (store mode):
+//! slots retain previous generations for `{"op":"rollback"}` and for
+//! canary swaps (`{"op":"swap",...,"canary":{...}}` watches the new
+//! generation's first N requests and auto-rolls-back past the error
+//! budget), a quarantine circuit breaker fast-fails requests to a
+//! repeatedly failing model until a half-open probe succeeds, and
+//! `--store-dir` persists a crash-recoverable CRC-checked manifest of
+//! the registry, replayed on startup (see
+//! [`crate::model_store::manifest`]).
+//!
 //! Both backends compute the same forward graph
 //! (`relu(x@W1+b1) → GS spMM → +b2`); each is checked against a dense
 //! oracle of its own weights by integration tests. (A direct

@@ -14,11 +14,19 @@
 //!   → `{"op":"ping"}`  ← `{"ok":true,"version":V}`
 //!   → `{"op":"swap","model":"resnet","path":"model.gsm"}`
 //!   ← `{"ok":true,"model":"resnet","version":V,"precision":"f32"}`
+//!     (with `"canary":{"requests":N,"max_error_rate":F}` the new
+//!      generation installs in canary state — watched over its first N
+//!      requests and auto-rolled-back past the error budget — and the
+//!      reply carries `"state":"canary"`)
+//!   → `{"op":"rollback","model":"resnet"}`
+//!   ← `{"ok":true,"model":"resnet","version":V}` (restores the retained
+//!      previous generation under live traffic)
 //!   → `{"op":"load","model":"jasper","path":"j.gsm"}`
 //!   ← `{"ok":true,"model":"jasper","version":1,"evicted":[...]}`
 //!   → `{"op":"unload","model":"jasper"}` ← `{"ok":true,"model":"jasper"}`
 //!   → `{"op":"models"}`
-//!   ← `{"default":"...","max_models":N,"models":{name:{version,geometry,...}}}`
+//!   ← `{"default":"...","max_models":N,"models":{name:{version,state,
+//!      retained_versions,geometry,...}}}`
 //!
 //! Two serving modes share the batcher/worker machinery:
 //!
@@ -53,18 +61,32 @@
 //! `panics` + `errors`) and the worker survives. [`ServerHandle::stop`]
 //! drains connections: every connection thread is tracked and joined,
 //! so no thread outlives the handle.
+//!
+//! **Deployment safety (store mode):** slots retain previous
+//! generations for `{"op":"rollback"}` and canary swaps
+//! ([`SlotConfig::retain`]); batch outcomes feed each slot's canary
+//! watch and quarantine circuit breaker
+//! ([`ModelSlot::observe_execution`]), with auto-rollbacks counted in
+//! `rollbacks` and quarantine fast-fails in `quarantined` (+ `errors`,
+//! keeping conservation exact). With [`ServeConfig::store_dir`] set,
+//! every accepted load/swap/unload/rollback atomically rewrites a
+//! CRC-checked manifest so a restarted server resumes the exact
+//! pre-crash registry.
 
 use super::batcher::{Batcher, InferRequest, Reject};
 use super::faults;
 use super::metrics::{Metrics, ModelMetrics};
 use super::{Engine, SparseModel};
-use crate::model_store::{ModelArtifact, ModelSlot, ModelStore};
+use crate::model_store::{
+    ManifestWriter, ModelArtifact, ModelSlot, ModelStore, SlotConfig, SlotEvent,
+};
 use crate::util::json::Json;
 use crate::util::threadpool::resolve_threads;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::channel;
 use std::sync::{Arc, Mutex};
@@ -233,6 +255,17 @@ pub struct ServeConfig {
     /// the connection closes, instead of the reader buffering an
     /// unterminated line without limit.
     pub max_frame_bytes: usize,
+    /// Deployment-safety contract applied to slots registered by
+    /// `{"op":"load"}` (retention depth, quarantine circuit breaker).
+    /// Slots created before the server started keep their own config.
+    pub slot: SlotConfig,
+    /// Store-mode only: directory for the crash-recoverable registry
+    /// manifest. When set, the manifest is written at startup and
+    /// atomically rewritten after every accepted load/swap/unload/
+    /// rollback; replaying it at the next startup (see
+    /// [`crate::model_store::manifest::restore`]) resumes the exact
+    /// pre-crash registry. Ignored in factory mode (no registry).
+    pub store_dir: Option<PathBuf>,
 }
 
 impl Default for ServeConfig {
@@ -248,6 +281,8 @@ impl Default for ServeConfig {
             max_conns: 0,
             idle_timeout_ms: 0,
             max_frame_bytes: 1 << 20,
+            slot: SlotConfig::default(),
+            store_dir: None,
         }
     }
 }
@@ -306,12 +341,16 @@ where
 /// request**, not per batch — one error row is sent per request, so the
 /// counters must match or `requests == responses + errors + shed +
 /// expired` conservation breaks at batch size > 1.
+///
+/// Returns the per-request outcome counts `(ok, err)` so store-mode
+/// workers can feed the batch's slot ([`ModelSlot::observe_execution`]
+/// drives the canary watch and the quarantine circuit breaker).
 fn run_batch(
     model: &SparseModel,
     batch: Vec<InferRequest>,
     metrics: &Metrics,
     mm: Option<&ModelMetrics>,
-) {
+) -> (u64, u64) {
     let inputs: Vec<Vec<f32>> = batch.iter().map(|r| r.input.clone()).collect();
     // Supervised execution: a panicking kernel fails THIS batch's
     // requests and the worker survives to take the next batch — one bad
@@ -322,11 +361,12 @@ fn run_batch(
         faults::on_batch_execute();
         model.infer_batch(&inputs)
     }));
+    let n = batch.len() as u64;
     let result = match result {
         Ok(r) => r,
         Err(panic) => {
             metrics.panics.fetch_add(1, Ordering::Relaxed);
-            metrics.count_errors(&batch[0].model, batch.len() as u64);
+            metrics.count_errors(&batch[0].model, n);
             let msg = panic
                 .downcast_ref::<&'static str>()
                 .copied()
@@ -336,7 +376,7 @@ fn run_batch(
             for req in batch {
                 let _ = req.tx.send((req.id, Err(why.clone())));
             }
-            return;
+            return (0, n);
         }
     };
     match result {
@@ -349,14 +389,51 @@ fn run_batch(
                 }
                 let _ = req.tx.send((req.id, Ok(out)));
             }
+            (n, 0)
         }
         Err(e) => {
             // Routed batches carry their model name; factory-mode
             // batches have "" and only count globally.
-            metrics.count_errors(&batch[0].model, batch.len() as u64);
+            metrics.count_errors(&batch[0].model, n);
             let msg = format!("{e:#}");
             for req in batch {
                 let _ = req.tx.send((req.id, Err(Reject::error(msg.clone()))));
+            }
+            (0, n)
+        }
+    }
+}
+
+/// React to a slot's post-batch deployment events: count and log
+/// auto-rollbacks (and re-persist the manifest — the live version
+/// changed), log canary promotions, quarantine trips, and recoveries.
+/// Runs on worker threads; everything here is advisory and must not
+/// block batch execution beyond a manifest write.
+fn apply_slot_events(
+    events: &[SlotEvent],
+    name: &str,
+    metrics: &Metrics,
+    manifest: Option<&ManifestWriter>,
+) {
+    for event in events {
+        match event {
+            SlotEvent::CanaryPromoted { version } => {
+                eprintln!("model \"{name}\": canary v{version} promoted to serving");
+            }
+            SlotEvent::CanaryRolledBack { from, to, reason } => {
+                metrics.count_rollback(name);
+                eprintln!("model \"{name}\": canary v{from} auto-rolled back to v{to}: {reason}");
+                if let Some(m) = manifest {
+                    if let Err(e) = m.persist() {
+                        eprintln!("model \"{name}\": manifest persist after auto-rollback: {e:#}");
+                    }
+                }
+            }
+            SlotEvent::Quarantined { reason } => {
+                eprintln!("model \"{name}\": quarantined: {reason}");
+            }
+            SlotEvent::Recovered => {
+                eprintln!("model \"{name}\": probe succeeded; quarantine lifted");
             }
         }
     }
@@ -387,11 +464,24 @@ fn serve_impl(provider: Provider, metrics: Arc<Metrics>, cfg: ServeConfig) -> Re
         Provider::Store { store, default, .. } => (Some(Arc::clone(store)), Some(default.clone())),
         Provider::Factory(_) => (None, None),
     };
+    // Durable registry: write the starting state before taking traffic,
+    // so a crash at any later point recovers to a manifest that exists.
+    // A store dir that cannot be written fails startup fast rather than
+    // silently serving without crash recovery.
+    let manifest = match (&cfg.store_dir, &store, &default_model) {
+        (Some(dir), Some(store), Some(default)) => {
+            let writer = Arc::new(ManifestWriter::new(dir, Arc::clone(store), default));
+            writer.persist()?;
+            Some(writer)
+        }
+        _ => None,
+    };
 
     let workers: Vec<_> = (0..resolve_threads(cfg.workers))
         .map(|wi| {
             let batcher = Arc::clone(&batcher);
             let metrics = Arc::clone(&metrics);
+            let manifest = manifest.clone();
             let worker_provider = match &provider {
                 Provider::Store { store, default, threads } => Provider::Store {
                     store: Arc::clone(store),
@@ -423,8 +513,19 @@ fn serve_impl(provider: Provider, metrics: Arc<Metrics>, cfg: ServeConfig) -> Re
                                 continue;
                             };
                             let vm = slot.current();
-                            let mm = metrics.model(&batch[0].model);
-                            run_batch(&vm.model, batch, &metrics, Some(mm.as_ref()));
+                            let name = batch[0].model.clone();
+                            // Captured before execution: the batch that
+                            // carries a half-open probe reports as one.
+                            let probe = batch.iter().any(|r| r.probe);
+                            let mm = metrics.model(&name);
+                            let (ok, err) =
+                                run_batch(&vm.model, batch, &metrics, Some(mm.as_ref()));
+                            // Outcomes feed the slot's canary watch and
+                            // circuit breaker, keyed by the snapshot
+                            // version so stragglers from an older
+                            // generation cannot judge the new one.
+                            let events = slot.observe_execution(vm.version, ok, err, probe);
+                            apply_slot_events(&events, &name, &metrics, manifest.as_deref());
                         }
                     }
                     Provider::Factory(factory) => {
@@ -462,6 +563,8 @@ fn serve_impl(provider: Provider, metrics: Arc<Metrics>, cfg: ServeConfig) -> Re
             deadline_ms: cfg.deadline_ms,
             idle_timeout_ms: cfg.idle_timeout_ms,
             max_frame_bytes: cfg.max_frame_bytes,
+            slot_cfg: cfg.slot,
+            manifest: manifest.clone(),
             conns: Arc::clone(&conns),
         });
         let max_conns = cfg.max_conns;
@@ -536,8 +639,25 @@ struct ConnCtx {
     idle_timeout_ms: u64,
     /// Frame-size bound for the line reader (0 = unbounded).
     max_frame_bytes: usize,
+    /// Deployment-safety contract for `load`-registered slots.
+    slot_cfg: SlotConfig,
+    /// Durable registry writer (`--store-dir`); None when persistence is
+    /// off or in factory mode.
+    manifest: Option<Arc<ManifestWriter>>,
     /// Live-connection registry (the `connections` stats gauge).
     conns: Arc<ConnTracker>,
+}
+
+/// Re-persist the durable registry after an accepted deploy op. The
+/// in-memory registry already changed, so a failed write is logged
+/// rather than failing the op — the next successful persist (or a
+/// restart from the previous manifest generation) re-converges.
+fn persist_manifest(ctx: &ConnCtx, op: &str) {
+    if let Some(m) = &ctx.manifest {
+        if let Err(e) = m.persist() {
+            eprintln!("manifest persist after {op}: {e:#}");
+        }
+    }
 }
 
 fn err_json(msg: String) -> Json {
@@ -669,6 +789,7 @@ fn handle_connection(
                 Some("swap") => handle_swap(&msg, ctx, metrics),
                 Some("load") => handle_load(&msg, ctx, metrics),
                 Some("unload") => handle_unload(&msg, ctx),
+                Some("rollback") => handle_rollback(&msg, ctx, metrics),
                 Some("infer") => handle_infer(&msg, batcher, metrics, ctx),
                 _ => err_json("unknown op".into()),
             },
@@ -799,6 +920,7 @@ fn handle_infer(msg: &Json, batcher: &Batcher, metrics: &Metrics, ctx: &ConnCtx)
         slot,
         cap,
         deadline_ms: if deadline_ms == 0 { None } else { Some(deadline_ms) },
+        probe: false,
     });
     match rx.recv() {
         Ok((id, Ok(out))) => Json::obj(vec![
@@ -816,9 +938,32 @@ fn handle_infer(msg: &Json, batcher: &Batcher, metrics: &Metrics, ctx: &ConnCtx)
             if let Some(ms) = why.waited_ms {
                 fields.push(("waited_ms", Json::Num(ms as f64)));
             }
+            if let Some(ms) = why.quarantined_for_ms {
+                fields.push(("quarantined_for_ms", Json::Num(ms as f64)));
+            }
             Json::obj(fields)
         }
         Err(_) => err_json("worker dropped".into()),
+    }
+}
+
+/// Parse the optional `"canary":{"requests":N,"max_error_rate":F}`
+/// block of a swap. `Ok(None)` = no canary requested; a present but
+/// malformed block is an error, never a silent plain swap (the operator
+/// clearly wanted a watched deploy).
+fn canary_spec(msg: &Json) -> Result<Option<(u64, f64)>, String> {
+    let Some(canary) = msg.get("canary") else {
+        return Ok(None);
+    };
+    let requests = canary.get("requests").and_then(Json::as_f64);
+    let rate = canary.get("max_error_rate").and_then(Json::as_f64);
+    match (requests, rate) {
+        (Some(n), Some(f)) if n >= 1.0 && n.fract() == 0.0 && (0.0..=1.0).contains(&f) => {
+            Ok(Some((n as u64, f)))
+        }
+        _ => Err("\"canary\" requires an integer \"requests\" >= 1 and a \"max_error_rate\" \
+                  between 0 and 1"
+            .into()),
     }
 }
 
@@ -827,7 +972,10 @@ fn handle_infer(msg: &Json, batcher: &Batcher, metrics: &Metrics, ctx: &ConnCtx)
 /// keeps flowing on the old version until the new one is installed;
 /// nothing is interrupted on failure (the error comes back on this
 /// connection, the slot keeps its current generation, and the failure is
-/// counted in `swap_failures` globally and per model).
+/// counted in `swap_failures` globally and per model). With a
+/// `"canary"` block the new generation installs under a canary watch
+/// (auto-rollback past the error budget) and the reply carries
+/// `"state":"canary"`.
 fn handle_swap(msg: &Json, ctx: &ConnCtx, metrics: &Metrics) -> Json {
     let Some(store) = &ctx.store else {
         return err_json("hot swap unavailable: server runs factory-backed workers".into());
@@ -839,6 +987,10 @@ fn handle_swap(msg: &Json, ctx: &ConnCtx, metrics: &Metrics) -> Json {
     let Some(path) = msg.get("path").and_then(Json::as_str) else {
         return err_json("swap requires a \"path\" to a .gsm artifact".into());
     };
+    let canary = match canary_spec(msg) {
+        Ok(c) => c,
+        Err(e) => return err_json(e),
+    };
     let Some(slot) = store.get(name) else {
         // A typo'd deploy is still a failed deploy: surface it on the
         // global counter (no per-model entry — never-registered names
@@ -847,16 +999,25 @@ fn handle_swap(msg: &Json, ctx: &ConnCtx, metrics: &Metrics) -> Json {
         return err_json(format!("unknown model \"{name}\""));
     };
     let mm = metrics.model(name);
-    match slot.swap_path(path) {
+    let swapped = match canary {
+        None => slot.swap_path(path),
+        Some((requests, max_error_rate)) => slot.swap_path_canary(path, requests, max_error_rate),
+    };
+    match swapped {
         Ok(vm) => {
             metrics.swaps.fetch_add(1, Ordering::Relaxed);
             mm.swaps.fetch_add(1, Ordering::Relaxed);
+            persist_manifest(ctx, "swap");
             // Report the generation *this* request installed, not
             // whatever a concurrent later swap made current.
             let mut fields = vec![
                 ("ok", Json::Bool(true)),
                 ("model", Json::Str(name.into())),
                 ("version", Json::Num(vm.version as f64)),
+                (
+                    "state",
+                    Json::Str(if canary.is_some() { "canary" } else { "serving" }.into()),
+                ),
             ];
             if let Some(p) = vm.precision() {
                 fields.push(("precision", Json::Str(p.name().into())));
@@ -887,6 +1048,13 @@ fn handle_load(msg: &Json, ctx: &ConnCtx, metrics: &Metrics) -> Json {
     let Some(path) = msg.get("path").and_then(Json::as_str) else {
         return err_json("load requires a \"path\" to a .gsm artifact".into());
     };
+    if msg.get("canary").is_some() {
+        return err_json(
+            "canary deploys are only supported on \"swap\": a freshly loaded model has no \
+             previous generation to roll back to"
+                .into(),
+        );
+    }
     // Load + instantiate exactly once, before any registry decision.
     let model = match ModelArtifact::load(path).and_then(|a| {
         a.instantiate(ctx.threads)
@@ -914,6 +1082,7 @@ fn handle_load(msg: &Json, ctx: &ConnCtx, metrics: &Metrics) -> Json {
             Ok(vm) => {
                 metrics.swaps.fetch_add(1, Ordering::Relaxed);
                 mm.swaps.fetch_add(1, Ordering::Relaxed);
+                persist_manifest(ctx, "load");
                 let mut fields = vec![
                     ("ok", Json::Bool(true)),
                     ("model", Json::Str(name.into())),
@@ -931,12 +1100,13 @@ fn handle_load(msg: &Json, ctx: &ConnCtx, metrics: &Metrics) -> Json {
             }
         };
     }
-    let slot = Arc::new(ModelSlot::new(model, path, ctx.threads));
+    let slot = Arc::new(ModelSlot::with_config(model, path, ctx.threads, ctx.slot_cfg));
     match store.register_new(name, slot) {
         Ok(Some(evicted)) => {
             metrics
                 .evictions
                 .fetch_add(evicted.len() as u64, Ordering::Relaxed);
+            persist_manifest(ctx, "load");
             let mut fields = vec![
                 ("ok", Json::Bool(true)),
                 ("model", Json::Str(name.into())),
@@ -973,10 +1143,47 @@ fn handle_unload(msg: &Json, ctx: &ConnCtx) -> Json {
         return err_json("unload requires a \"model\" name".into());
     };
     match store.unload(name) {
-        Ok(()) => Json::obj(vec![
-            ("ok", Json::Bool(true)),
-            ("model", Json::Str(name.into())),
-        ]),
+        Ok(()) => {
+            persist_manifest(ctx, "unload");
+            Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("model", Json::Str(name.into())),
+            ])
+        }
+        Err(e) => err_json(format!("{e:#}")),
+    }
+}
+
+/// `{"op":"rollback","model":...}`: restore the named (or default)
+/// slot's previous retained generation under live traffic — the same
+/// zero-downtime path as swap, in reverse. In-flight batches finish on
+/// the generation they snapshotted; queued requests ride the restored
+/// one. Fails (without touching the slot) when nothing is retained.
+fn handle_rollback(msg: &Json, ctx: &ConnCtx, metrics: &Metrics) -> Json {
+    let Some(store) = &ctx.store else {
+        return err_json("rollback unavailable: server runs factory-backed workers".into());
+    };
+    let name = match requested_model(msg, ctx) {
+        Ok(n) => n,
+        Err(e) => return err_json(e),
+    };
+    let Some(slot) = store.get(name) else {
+        return err_json(format!("unknown model \"{name}\""));
+    };
+    match slot.rollback("operator rollback") {
+        Ok(vm) => {
+            metrics.count_rollback(name);
+            persist_manifest(ctx, "rollback");
+            let mut fields = vec![
+                ("ok", Json::Bool(true)),
+                ("model", Json::Str(name.into())),
+                ("version", Json::Num(vm.version as f64)),
+            ];
+            if let Some(p) = vm.precision() {
+                fields.push(("precision", Json::Str(p.name().into())));
+            }
+            Json::obj(fields)
+        }
         Err(e) => err_json(format!("{e:#}")),
     }
 }
@@ -999,9 +1206,14 @@ fn models_json(ctx: &ConnCtx) -> Json {
             ("outputs", Json::Num(vm.model.outputs as f64)),
             ("max_batch", Json::Num(vm.model.max_batch as f64)),
             ("default", Json::Bool(name == default)),
+            ("state", Json::Str(slot.state_name().into())),
+            ("retained_versions", Json::Num(slot.retained() as f64)),
         ];
         if let Some(p) = vm.precision() {
             fields.push(("precision", Json::Str(p.name().into())));
+        }
+        if let Some(r) = slot.last_rollback() {
+            fields.push(("last_rollback", Json::Str(r)));
         }
         models.push((name, Json::obj(fields)));
     }
@@ -1063,6 +1275,15 @@ fn stats_json(metrics: &Metrics, batcher: &Batcher, ctx: &ConnCtx) -> Json {
             "evictions",
             Json::Num(metrics.evictions.load(Ordering::Relaxed) as f64),
         ),
+        (
+            "rollbacks",
+            Json::Num(metrics.rollbacks.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "quarantined",
+            Json::Num(metrics.quarantined.load(Ordering::Relaxed) as f64),
+        ),
+        ("uptime_ms", Json::Num(metrics.uptime_ms() as f64)),
     ];
     if let Some(slot) = default_slot(ctx) {
         let vm = slot.current();
@@ -1110,12 +1331,16 @@ fn stats_json(metrics: &Metrics, batcher: &Batcher, ctx: &ConnCtx) -> Json {
                 ),
                 ("swaps", Json::Num(counter(|m| &m.swaps))),
                 ("swap_failures", Json::Num(counter(|m| &m.swap_failures))),
+                ("rollbacks", Json::Num(counter(|m| &m.rollbacks))),
+                ("quarantined", Json::Num(counter(|m| &m.quarantined))),
             ];
             match store.get(&name) {
                 Some(slot) => {
                     let vm = slot.current();
                     mf.push(("resident", Json::Bool(true)));
                     mf.push(("version", Json::Num(vm.version as f64)));
+                    mf.push(("state", Json::Str(slot.state_name().into())));
+                    mf.push(("retained_versions", Json::Num(slot.retained() as f64)));
                     if let Some(p) = vm.precision() {
                         mf.push(("precision", Json::Str(p.name().into())));
                     }
@@ -1341,6 +1566,49 @@ impl Client {
     pub fn swap_model(&mut self, model: &str, path: &str) -> Result<u64> {
         let r = self.deploy("swap", Some(model), path)?;
         Self::version_of(&r, "swap")
+    }
+
+    /// Canary-swap a named model: install the artifact at `path` under a
+    /// watch over its first `requests` requests, auto-rolling back if
+    /// more than `max_error_rate` of them fail. Returns the canary's
+    /// version (the server reply also carries `"state":"canary"`).
+    pub fn swap_canary(
+        &mut self,
+        model: &str,
+        path: &str,
+        requests: u64,
+        max_error_rate: f64,
+    ) -> Result<u64> {
+        let r = self.roundtrip(Json::obj(vec![
+            ("op", "swap".into()),
+            ("model", Json::Str(model.into())),
+            ("path", Json::Str(path.into())),
+            (
+                "canary",
+                Json::obj(vec![
+                    ("requests", Json::Num(requests as f64)),
+                    ("max_error_rate", Json::Num(max_error_rate)),
+                ]),
+            ),
+        ]))?;
+        if let Some(err) = r.get("error").and_then(Json::as_str) {
+            anyhow::bail!("swap failed: {err}");
+        }
+        Self::version_of(&r, "swap")
+    }
+
+    /// Roll the named (or default) model back to its retained previous
+    /// generation; returns the restored version.
+    pub fn rollback(&mut self, model: Option<&str>) -> Result<u64> {
+        let mut fields = vec![("op", Json::Str("rollback".into()))];
+        if let Some(model) = model {
+            fields.push(("model", Json::Str(model.into())));
+        }
+        let r = self.roundtrip(Json::obj(fields))?;
+        if let Some(err) = r.get("error").and_then(Json::as_str) {
+            anyhow::bail!("rollback failed: {err}");
+        }
+        Self::version_of(&r, "rollback")
     }
 
     /// Make `model` resident from the artifact at `path`; returns the

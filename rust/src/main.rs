@@ -9,6 +9,13 @@
 //!                    [--max-conns 0 (cap on open connections)]
 //!                    [--idle-timeout-ms 0 (close stalled connections)]
 //!                    [--max-frame-bytes 1048576 (largest request line)]
+//!                    [--retain-versions 2 (previous generations kept for
+//!                     rollback/canary; 0 disables both)]
+//!                    [--quarantine-after 0 (failed requests within the
+//!                     window that quarantine a model; 0 = off)]
+//!                    [--quarantine-window-ms 10000] [--quarantine-cooldown-ms 2000]
+//!                    [--store-dir DIR (crash-recoverable registry manifest,
+//!                     rewritten on every deploy op and replayed on startup)]
 //!                    native: [--models a=a.gsm,b=b.gsm] [--max-models N]
 //!                            [--default-model a]   (multi-model routed serving)
 //!                            or [--model model.gsm]  (serve one .gsm artifact)
@@ -39,7 +46,7 @@
 
 use anyhow::{anyhow, ensure, Result};
 use gs_sparse::coordinator::{serve, serve_store, server::ServeConfig, Engine, SparseModel};
-use gs_sparse::model_store::{ModelArtifact, ModelSlot, ModelStore};
+use gs_sparse::model_store::{ModelArtifact, ModelSlot, ModelStore, SlotConfig};
 use gs_sparse::pruning::prune;
 use gs_sparse::sparse::{Dense, GsFormat, Pattern};
 use gs_sparse::testing::{build_random_artifact, build_random_model, spec_from_args, ModelSpec};
@@ -108,30 +115,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // {"op":"infer","model":...} routes, {"op":"swap"|"load"|"unload"}
         // deploy with zero downtime, --max-models LRU-evicts cold slots.
         let threads = args.usize("threads", 0);
-        let engine = match args.options.get("models") {
-            Some(spec) => multi_model_engine(args, spec, threads)?,
-            None => {
-                let (model, source, banner) = match args.options.get("model") {
-                    Some(path) => {
-                        let artifact = ModelArtifact::load(path)?;
-                        let banner = format!("artifact {path}: {}", artifact.describe());
-                        (artifact.instantiate(threads)?, path.clone(), banner)
-                    }
-                    None => {
-                        let spec = native_spec(args)?;
-                        let banner = format!(
-                            "native {} engine @ {:.0}% sparse output layer, {} plan",
-                            spec.pattern.name(),
-                            spec.sparsity * 100.0,
-                            spec.precision.name(),
+        let slot_cfg = slot_config(args);
+        let store_dir = args.options.get("store-dir").map(std::path::PathBuf::from);
+        // Replay policy: a usable manifest IS the registry (the durable
+        // record of every deploy accepted before the crash/restart); the
+        // CLI model flags only seed a fresh store.
+        let engine = match &store_dir {
+            Some(dir) => match engine_from_manifest(dir, threads, slot_cfg)? {
+                Some(engine) => {
+                    let flagged = ["models", "model"].iter().any(|k| args.options.contains_key(*k));
+                    if flagged {
+                        println!(
+                            "store manifest: ignoring --model/--models (the persisted registry \
+                             wins)"
                         );
-                        let model = build_random_model(&spec)?.model;
-                        (model, "inline-random".to_string(), banner)
                     }
-                };
-                println!("model \"default\": {banner}");
-                Engine::new(model, &source, threads)
-            }
+                    engine
+                }
+                None => cli_engine(args, threads, slot_cfg)?,
+            },
+            None => cli_engine(args, threads, slot_cfg)?,
         };
         // Admission is per-routed-slot; the config records the default
         // model's width and the widest batch capacity as the global cap.
@@ -160,6 +163,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 max_conns,
                 idle_timeout_ms,
                 max_frame_bytes,
+                slot: slot_cfg,
+                store_dir,
             },
         )?;
         let admission = if queue_depth == 0 {
@@ -175,7 +180,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!(
             "protocol: JSON lines — {{\"op\":\"infer\",\"id\":1,\"model\":\"name\",\
              \"input\":[...]}}, {{\"op\":\"swap\"|\"load\",\"model\":\"name\",\
-             \"path\":\"model.gsm\"}}, {{\"op\":\"unload\",\"model\":\"name\"}}, \
+             \"path\":\"model.gsm\"}} (swap takes an optional \
+             {{\"canary\":{{\"requests\":N,\"max_error_rate\":F}}}}), \
+             {{\"op\":\"rollback\",\"model\":\"name\"}}, \
+             {{\"op\":\"unload\",\"model\":\"name\"}}, \
              {{\"op\":\"models\"}}, {{\"op\":\"stats\"}}"
         );
         loop {
@@ -200,6 +208,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             max_conns,
             idle_timeout_ms,
             max_frame_bytes,
+            ..ServeConfig::default()
         },
     )?;
     println!(
@@ -213,10 +222,112 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
 }
 
+/// The deployment-safety contract from the serve flags, applied to every
+/// slot the server creates: CLI-registered, `load`-registered at
+/// runtime, and manifest-restored.
+fn slot_config(args: &Args) -> SlotConfig {
+    let base = SlotConfig::default();
+    SlotConfig {
+        retain: args.usize("retain-versions", base.retain),
+        quarantine_after: args.usize("quarantine-after", base.quarantine_after),
+        quarantine_window_ms: args.usize("quarantine-window-ms", base.quarantine_window_ms as usize)
+            as u64,
+        quarantine_cooldown_ms: args
+            .usize("quarantine-cooldown-ms", base.quarantine_cooldown_ms as usize)
+            as u64,
+        ..base
+    }
+}
+
+/// The CLI-flag registry: `--models name=path,...`, a single `--model`,
+/// or an inline random model.
+fn cli_engine(args: &Args, threads: usize, slot_cfg: SlotConfig) -> Result<Engine> {
+    if let Some(spec) = args.options.get("models") {
+        return multi_model_engine(args, spec, threads, slot_cfg);
+    }
+    let (model, source, banner) = match args.options.get("model") {
+        Some(path) => {
+            let artifact = ModelArtifact::load(path)?;
+            let banner = format!("artifact {path}: {}", artifact.describe());
+            (artifact.instantiate(threads)?, path.clone(), banner)
+        }
+        None => {
+            let spec = native_spec(args)?;
+            let banner = format!(
+                "native {} engine @ {:.0}% sparse output layer, {} plan",
+                spec.pattern.name(),
+                spec.sparsity * 100.0,
+                spec.precision.name(),
+            );
+            let model = build_random_model(&spec)?.model;
+            (model, "inline-random".to_string(), banner)
+        }
+    };
+    println!("model \"default\": {banner}");
+    let store = std::sync::Arc::new(ModelStore::new());
+    store.register(
+        "default",
+        std::sync::Arc::new(ModelSlot::with_config(model, &source, threads, slot_cfg)),
+    )?;
+    Engine::from_store(store, "default", threads)
+}
+
+/// Replay a persisted registry from `--store-dir`. `Ok(None)` means no
+/// usable manifest — missing, unreadable, or its default model failed to
+/// restore — and the caller falls back to the CLI registry (the reason
+/// is logged). Non-default entries that fail to restore are skipped with
+/// a logged reason, never fatal: serving degrades to the slots that
+/// restored.
+fn engine_from_manifest(
+    dir: &std::path::Path,
+    threads: usize,
+    slot_cfg: SlotConfig,
+) -> Result<Option<Engine>> {
+    use gs_sparse::model_store::manifest;
+    let loaded = match manifest::Manifest::load_dir(dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!(
+                "store manifest in {}: unreadable ({e:#}); starting from the CLI model flags",
+                dir.display()
+            );
+            return Ok(None);
+        }
+    };
+    let Some(m) = loaded else { return Ok(None) };
+    let report = manifest::restore(&m, threads, slot_cfg);
+    for (name, why) in &report.skipped {
+        eprintln!("store manifest: skipping model \"{name}\": {why}");
+    }
+    if !report.restored.iter().any(|(n, _)| *n == m.default) {
+        eprintln!(
+            "store manifest: default model \"{}\" did not restore; starting from the CLI \
+             model flags",
+            m.default
+        );
+        return Ok(None);
+    }
+    let store = std::sync::Arc::new(ModelStore::with_capacity(m.max_models, &m.default));
+    for (name, slot) in report.restored {
+        println!(
+            "model \"{name}\": restored v{} from {} (manifest)",
+            slot.version(),
+            slot.current().source
+        );
+        store.register(&name, slot)?;
+    }
+    Ok(Some(Engine::from_store(store, &m.default, threads)?))
+}
+
 /// `serve --models name=path.gsm,...`: load every named artifact into a
 /// capacity-bounded [`ModelStore`] (`--max-models`, 0 = unbounded) and
 /// pin the default (`--default-model`, else the first listed).
-fn multi_model_engine(args: &Args, spec: &str, threads: usize) -> Result<Engine> {
+fn multi_model_engine(
+    args: &Args,
+    spec: &str,
+    threads: usize,
+    slot_cfg: SlotConfig,
+) -> Result<Engine> {
     let mut entries: Vec<(String, String)> = Vec::new();
     for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
         let (name, path) = part
@@ -248,7 +359,10 @@ fn multi_model_engine(args: &Args, spec: &str, threads: usize) -> Result<Engine>
         let artifact = ModelArtifact::load(path)?;
         println!("model \"{name}\": artifact {path}: {}", artifact.describe());
         let model = artifact.instantiate(threads)?;
-        store.register(name, std::sync::Arc::new(ModelSlot::new(model, path, threads)))?;
+        store.register(
+            name,
+            std::sync::Arc::new(ModelSlot::with_config(model, path, threads, slot_cfg)),
+        )?;
     }
     Engine::from_store(store, &default_name, threads)
 }

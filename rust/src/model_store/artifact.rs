@@ -38,14 +38,18 @@
 use crate::coordinator::SparseModel;
 use crate::kernels::exec::PlanPrecision;
 use crate::sparse::format::GsFormat;
-use crate::util::crc32::crc32;
+use crate::util::crc32::{crc32, Crc32};
 use crate::util::json::Json;
 use anyhow::{bail, ensure, Context, Result};
+use std::io::Read;
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"GSM1";
 const FORMAT_VERSION: u32 = 1;
 const HEADER_LEN: usize = 48;
+/// Fixed read granularity of the streaming loader: payloads are pulled
+/// through one bounded scratch buffer instead of buffering the file.
+const READ_CHUNK: usize = 64 * 1024;
 
 const TAG_W1: u32 = 1;
 const TAG_B1: u32 = 2;
@@ -349,32 +353,394 @@ impl ModelArtifact {
 
     // -- file I/O -----------------------------------------------------------
 
-    /// Write the artifact to `path` (atomically: temp file + rename, so a
-    /// concurrent `swap` never observes a half-written artifact).
+    /// Write the artifact to `path` — atomically *and durably*: the temp
+    /// file is fsynced before the rename and the parent directory after
+    /// it (a crash at any point leaves either the old complete artifact
+    /// or the new one, and the rename is never more durable than the
+    /// bytes it publishes), and a stale `.tmp` from a previously crashed
+    /// writer is removed first.
     pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
         let path = path.as_ref();
         let bytes = self.to_bytes();
-        let tmp = path.with_extension("gsm.tmp");
-        std::fs::write(&tmp, &bytes)
-            .with_context(|| format!("write artifact temp file {}", tmp.display()))?;
-        std::fs::rename(&tmp, path)
-            .with_context(|| format!("rename artifact into place at {}", path.display()))?;
-        Ok(())
+        // Fault-injection hook (no-op unless the `fault-inject` feature
+        // is on): simulate the writer process dying mid-write — a prefix
+        // of the bytes lands in the temp file, the rename never happens,
+        // and the previous artifact (if any) must stay intact.
+        if let Some(cut) = crate::coordinator::faults::torn_artifact_write(bytes.len()) {
+            let tmp = crate::util::fsio::tmp_path(path);
+            let _ = std::fs::write(&tmp, &bytes[..cut]);
+            bail!(
+                "injected fault: artifact writer crashed after {cut} of {} bytes",
+                bytes.len()
+            );
+        }
+        crate::util::fsio::write_atomic(path, &bytes)
+            .with_context(|| format!("write artifact {}", path.display()))
     }
 
     /// Read and validate an artifact from `path`.
+    ///
+    /// Streaming: the 48-byte header (and the length it declares) is
+    /// validated against the file's actual size *before* any
+    /// payload-sized allocation, then sections are read and CRC-checked
+    /// through a fixed 64 KiB scratch buffer — peak memory is the decoded
+    /// tensors plus one chunk, never a second whole-file copy. Bit-
+    /// identical to [`ModelArtifact::from_bytes`] on the same bytes, with
+    /// the same error messages (a checksum mismatch always wins over a
+    /// later parse error, exactly as the buffered decoder orders its
+    /// checks).
     pub fn load<P: AsRef<Path>>(path: P) -> Result<ModelArtifact> {
-        let path = path.as_ref();
-        let mut bytes = std::fs::read(path)
-            .with_context(|| format!("read model artifact {}", path.display()))?;
+        ModelArtifact::load_chunked(path.as_ref(), READ_CHUNK)
+    }
+
+    /// [`ModelArtifact::load`] with an explicit chunk size (tests shrink
+    /// it below the section sizes to exercise multi-chunk reads).
+    fn load_chunked(path: &Path, chunk: usize) -> Result<ModelArtifact> {
+        let io_ctx = || format!("read model artifact {}", path.display());
+        let parse_ctx = || format!("load model artifact {}", path.display());
+        // Keep chunked payload reads 4-byte aligned so f32/u32 decoding
+        // never straddles a chunk boundary.
+        let chunk = (chunk.max(4) / 4) * 4;
+
+        let mut file = std::fs::File::open(path).with_context(io_ctx)?;
+        let actual = file.metadata().with_context(io_ctx)?.len() as usize;
+
+        // Header first: every structural check that gates allocation runs
+        // before a single payload byte is read.
+        let header = read_validated_header(&mut file, actual, path).with_context(parse_ctx)?;
+
+        let mut crc = Crc32::new();
+        crc.update(&header);
+        let mut body = BodyReader {
+            file: &mut file,
+            crc,
+            left: actual - HEADER_LEN - 4,
+            chunk,
+        };
+
+        // Parse the body, but *defer* any parse error until the CRC
+        // trailer has been verified: a corrupt file must always report a
+        // checksum mismatch (as the buffered decoder does, where the CRC
+        // check runs before section parsing), not whatever structural
+        // damage the corruption happened to cause.
+        let parsed = decode_body(&header, &mut body);
+        body.drain()?;
+        let computed_crc = body.crc.value();
+        let mut trailer = [0u8; 4];
+        file.read_exact(&mut trailer).with_context(io_ctx)?;
         // Fault-injection hook (no-op unless the `fault-inject` feature
         // is on): lets the chaos suite prove that a damaged read fails
         // the deploy cleanly through the CRC check, without hand-
-        // crafting broken files.
-        crate::coordinator::faults::corrupt_artifact_bytes(&mut bytes);
-        ModelArtifact::from_bytes(&bytes)
-            .with_context(|| format!("load model artifact {}", path.display()))
+        // crafting broken files. Flipping trailer bits is equivalent to
+        // the old whole-buffer hook, which flipped the final byte.
+        crate::coordinator::faults::corrupt_artifact_bytes(&mut trailer);
+        let stored_crc = u32::from_le_bytes(trailer);
+        if stored_crc != computed_crc {
+            return Err(anyhow::anyhow!(
+                "artifact checksum mismatch (stored {stored_crc:08x}, computed {computed_crc:08x}) — corrupt file"
+            ))
+            .with_context(parse_ctx);
+        }
+        parsed.with_context(parse_ctx)
     }
+}
+
+// -- streaming decode -------------------------------------------------------
+
+/// Read and validate the fixed 48-byte header: magic, format version,
+/// and the declared total length against the file's actual size — every
+/// structural check that gates allocation, before any payload byte.
+fn read_validated_header(
+    file: &mut std::fs::File,
+    actual: usize,
+    path: &Path,
+) -> Result<[u8; HEADER_LEN]> {
+    ensure!(
+        actual >= HEADER_LEN + 4,
+        "truncated artifact: {actual} bytes is smaller than the {}-byte header",
+        HEADER_LEN + 4
+    );
+    let mut header = [0u8; HEADER_LEN];
+    file.read_exact(&mut header)
+        .with_context(|| format!("read model artifact {}", path.display()))?;
+    ensure!(
+        &header[0..4] == MAGIC,
+        "not a .gsm model artifact (bad magic {:02x?})",
+        &header[0..4]
+    );
+    let version = read_u32(&header, 4);
+    ensure!(
+        version == FORMAT_VERSION,
+        "unsupported .gsm format version {version} (this build reads version {FORMAT_VERSION})"
+    );
+    let declared = read_u64(&header, 8) as usize;
+    ensure!(
+        declared == actual,
+        "truncated or padded artifact: header declares {declared} bytes, file has {actual}"
+    );
+    Ok(header)
+}
+
+/// One streamed section: its tag, declared byte length, and the payload
+/// decoded straight into its final typed form (the byte buffer is never
+/// retained).
+struct Section {
+    tag: u32,
+    len: usize,
+    data: Payload,
+}
+
+enum Payload {
+    F32(Vec<f32>),
+    U32(Vec<u32>),
+    Bytes(Vec<u8>),
+    /// Unknown tag (forward compatibility) or a misaligned known payload
+    /// whose count-mismatch error fires from the recorded length alone —
+    /// the bytes were drained through the CRC and dropped.
+    Skipped,
+}
+
+/// Incremental body reader: every byte read is folded into the running
+/// CRC, `left` tracks the unread remainder of the section region (the
+/// trailer is read separately by the caller).
+struct BodyReader<'a> {
+    file: &'a mut std::fs::File,
+    crc: Crc32,
+    left: usize,
+    chunk: usize,
+}
+
+impl BodyReader<'_> {
+    fn read_arr<const N: usize>(&mut self) -> Result<[u8; N]> {
+        debug_assert!(N <= self.left);
+        let mut buf = [0u8; N];
+        self.file.read_exact(&mut buf)?;
+        self.crc.update(&buf);
+        self.left -= N;
+        Ok(buf)
+    }
+
+    /// Pull `len` payload bytes through the fixed-size scratch buffer,
+    /// feeding each chunk to `sink` after the CRC.
+    fn read_chunked(&mut self, len: usize, mut sink: impl FnMut(&[u8])) -> Result<()> {
+        debug_assert!(len <= self.left);
+        if len == 0 {
+            return Ok(());
+        }
+        let mut buf = vec![0u8; self.chunk.min(len)];
+        let mut remaining = len;
+        while remaining > 0 {
+            let n = self.chunk.min(remaining);
+            self.file.read_exact(&mut buf[..n])?;
+            self.crc.update(&buf[..n]);
+            sink(&buf[..n]);
+            remaining -= n;
+            self.left -= n;
+        }
+        Ok(())
+    }
+
+    fn read_f32s(&mut self, len: usize) -> Result<Vec<f32>> {
+        debug_assert_eq!(len % 4, 0);
+        let mut out = Vec::with_capacity(len / 4);
+        self.read_chunked(len, |chunk| {
+            out.extend(
+                chunk
+                    .chunks_exact(4)
+                    .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap()))),
+            )
+        })?;
+        Ok(out)
+    }
+
+    fn read_u32s(&mut self, len: usize) -> Result<Vec<u32>> {
+        debug_assert_eq!(len % 4, 0);
+        let mut out = Vec::with_capacity(len / 4);
+        self.read_chunked(len, |chunk| {
+            out.extend(
+                chunk
+                    .chunks_exact(4)
+                    .map(|c| u32::from_le_bytes(c.try_into().unwrap())),
+            )
+        })?;
+        Ok(out)
+    }
+
+    fn read_bytes(&mut self, len: usize) -> Result<Vec<u8>> {
+        let mut out = Vec::with_capacity(len);
+        self.read_chunked(len, |chunk| out.extend_from_slice(chunk))?;
+        Ok(out)
+    }
+
+    fn skip(&mut self, len: usize) -> Result<()> {
+        self.read_chunked(len, |_| ())
+    }
+
+    /// Consume whatever the parser left unread (it may have bailed
+    /// early) so the CRC covers the whole body.
+    fn drain(&mut self) -> Result<()> {
+        let left = self.left;
+        self.skip(left)
+    }
+}
+
+/// Decode the section region from a [`BodyReader`], mirroring
+/// [`ModelArtifact::from_bytes`] check-for-check (same error messages,
+/// same check order among parse errors; the caller enforces that a CRC
+/// failure outranks anything returned here).
+fn decode_body(header: &[u8; HEADER_LEN], body: &mut BodyReader) -> Result<ModelArtifact> {
+    let precision = match read_u32(header, 16) {
+        0 => PlanPrecision::F32,
+        1 => PlanPrecision::F16,
+        other => bail!("unknown plan precision code {other} (0 = f32, 1 = f16)"),
+    };
+    let inputs = read_u32(header, 20) as usize;
+    let max_batch = read_u32(header, 24) as usize;
+    let b = read_u32(header, 28) as usize;
+    let k = read_u32(header, 32) as usize;
+    let rows = read_u32(header, 36) as usize;
+    let cols = read_u32(header, 40) as usize;
+    let section_count = read_u32(header, 44) as usize;
+    ensure!(b > 0 && k > 0 && b % k == 0, "bad GS geometry B={b} k={k}");
+
+    let body_len = body.left;
+    ensure!(
+        section_count <= body_len / 12,
+        "section count {section_count} cannot fit in a {body_len}-byte body"
+    );
+    ensure!(
+        section_count <= 64,
+        "implausible section count {section_count} (max 64)"
+    );
+
+    let mut secs: Vec<Section> = Vec::with_capacity(section_count);
+    for s in 0..section_count {
+        ensure!(
+            body.left >= 12,
+            "section {s} header runs past the end of the artifact"
+        );
+        let head: [u8; 12] = body.read_arr()?;
+        let tag = read_u32(&head, 0);
+        let len = read_u64(&head, 4) as usize;
+        ensure!(
+            len <= body.left,
+            "section {s} (tag {tag}) payload of {len} bytes runs past the end of the artifact"
+        );
+        ensure!(
+            !secs.iter().any(|e| e.tag == tag),
+            "duplicate section tag {tag}"
+        );
+        let data = match tag {
+            TAG_W1 | TAG_B1 | TAG_GS_VALUE | TAG_B2 if len % 4 == 0 => {
+                Payload::F32(body.read_f32s(len)?)
+            }
+            TAG_GS_INDEX | TAG_GS_INDPTR | TAG_GS_ROWMAP if len % 4 == 0 => {
+                Payload::U32(body.read_u32s(len)?)
+            }
+            TAG_META => Payload::Bytes(body.read_bytes(len)?),
+            _ => {
+                body.skip(len)?;
+                Payload::Skipped
+            }
+        };
+        secs.push(Section { tag, len, data });
+    }
+    ensure!(
+        body.left == 0,
+        "{} trailing bytes after the last section",
+        body.left
+    );
+
+    let w1 = take_f32(&mut secs, TAG_W1, "W1", inputs * cols)?;
+    let b1 = take_f32(&mut secs, TAG_B1, "B1", cols)?;
+    let value_len = sec_len(&secs, TAG_GS_VALUE, "GS value")?;
+    ensure!(
+        value_len % (4 * b) == 0,
+        "GS value section ({value_len} bytes) is not a whole number of {b}-wide groups"
+    );
+    let ngroups = value_len / (4 * b);
+    let value = take_f32(&mut secs, TAG_GS_VALUE, "GS value", ngroups * b)?;
+    let index = take_u32(&mut secs, TAG_GS_INDEX, "GS index", ngroups * b)?;
+    let indptr_len = sec_len(&secs, TAG_GS_INDPTR, "GS indptr")?;
+    ensure!(
+        indptr_len >= 4 && indptr_len % 4 == 0,
+        "GS indptr section has invalid length {indptr_len}"
+    );
+    let indptr = take_u32(&mut secs, TAG_GS_INDPTR, "GS indptr", indptr_len / 4)?;
+    let nbands = indptr.len() - 1;
+    let rowmap = if secs.iter().any(|e| e.tag == TAG_GS_ROWMAP) {
+        Some(take_u32(&mut secs, TAG_GS_ROWMAP, "GS rowmap", nbands * (b / k))?)
+    } else {
+        None
+    };
+    let b2 = take_f32(&mut secs, TAG_B2, "B2", rows)?;
+    let meta = match secs.iter().find(|e| e.tag == TAG_META) {
+        Some(e) => match &e.data {
+            Payload::Bytes(p) => {
+                let s = std::str::from_utf8(p).context("metadata section is not UTF-8")?;
+                Json::parse(s).context("metadata section is not valid JSON")?
+            }
+            _ => unreachable!("META is always decoded as bytes"),
+        },
+        None => Json::Null,
+    };
+
+    let gs = GsFormat {
+        b,
+        k,
+        rows,
+        cols,
+        value,
+        index,
+        indptr,
+        rowmap,
+    };
+    ModelArtifact::from_parts(w1, b1, gs, b2, inputs, max_batch, precision, meta)
+        .context("decoded artifact failed validation")
+}
+
+/// Take a mandatory f32 section out of the streamed set, enforcing the
+/// same count-mismatch message as [`f32_vec`].
+fn take_f32(secs: &mut [Section], tag: u32, name: &str, expect: usize) -> Result<Vec<f32>> {
+    let sec = secs
+        .iter_mut()
+        .find(|e| e.tag == tag)
+        .with_context(|| format!("artifact is missing the {name} section"))?;
+    ensure!(
+        sec.len % 4 == 0 && sec.len / 4 == expect,
+        "{name} section has {} bytes, expected {expect} f32 values",
+        sec.len,
+    );
+    match &mut sec.data {
+        Payload::F32(v) => Ok(std::mem::take(v)),
+        _ => unreachable!("{name} is always decoded as f32"),
+    }
+}
+
+/// Take a mandatory u32 section out of the streamed set, enforcing the
+/// same count-mismatch message as [`u32_vec`].
+fn take_u32(secs: &mut [Section], tag: u32, name: &str, expect: usize) -> Result<Vec<u32>> {
+    let sec = secs
+        .iter_mut()
+        .find(|e| e.tag == tag)
+        .with_context(|| format!("artifact is missing the {name} section"))?;
+    ensure!(
+        sec.len % 4 == 0 && sec.len / 4 == expect,
+        "{name} section has {} bytes, expected {expect} u32 values",
+        sec.len,
+    );
+    match &mut sec.data {
+        Payload::U32(v) => Ok(std::mem::take(v)),
+        _ => unreachable!("{name} is always decoded as u32"),
+    }
+}
+
+/// Byte length of a mandatory section in the streamed set.
+fn sec_len(secs: &[Section], tag: u32, name: &str) -> Result<usize> {
+    secs.iter()
+        .find(|e| e.tag == tag)
+        .map(|e| e.len)
+        .with_context(|| format!("artifact is missing the {name} section"))
 }
 
 /// Find a mandatory section by tag.
@@ -545,5 +911,91 @@ mod tests {
     fn missing_file_is_a_clear_error() {
         let err = ModelArtifact::load("/nonexistent/nowhere.gsm").unwrap_err();
         assert!(format!("{err:#}").contains("nowhere.gsm"), "{err:#}");
+    }
+
+    fn scratch(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("gsm-stream-test-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn streaming_load_is_bit_identical_across_chunk_sizes() {
+        // The sample's W1 section alone is 8*32*4 = 1024 bytes, so a
+        // 64-byte chunk forces multi-chunk reads inside every large
+        // section; a huge chunk degenerates to one read per section.
+        let a = sample(PlanPrecision::F16, Pattern::GsScatter { b: 8, k: 1 }, 9);
+        let bytes = a.to_bytes();
+        let path = scratch("chunks.gsm");
+        a.save(&path).unwrap();
+        for chunk in [4usize, 64, 1000, 1 << 22] {
+            let b = ModelArtifact::load_chunked(&path, chunk).unwrap();
+            assert_eq!(
+                b.to_bytes(),
+                bytes,
+                "chunk size {chunk} must decode bit-identically"
+            );
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn streaming_load_rejects_corrupt_final_chunk() {
+        let a = sample(PlanPrecision::F32, Pattern::Gs { b: 8, k: 2 }, 10);
+        let path = scratch("tail.gsm");
+        a.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Damage a payload byte inside the last chunk-sized span before
+        // the trailer: only the final incremental CRC update can see it.
+        let n = bytes.len();
+        bytes[n - 9] ^= 0x04;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = ModelArtifact::load_chunked(&path, 64).unwrap_err();
+        assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn streaming_load_reports_checksum_over_structural_damage() {
+        // Corrupting the section count breaks both structure and CRC;
+        // the buffered decoder checks the CRC first, so the streaming
+        // decoder must defer its parse error and report the checksum.
+        let a = sample(PlanPrecision::F32, Pattern::Gs { b: 8, k: 8 }, 11);
+        let path = scratch("defer.gsm");
+        let mut bytes = a.to_bytes();
+        bytes[44] = 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let from_bytes_err = ModelArtifact::from_bytes(&bytes).unwrap_err();
+        let streamed_err = ModelArtifact::load_chunked(&path, 64).unwrap_err();
+        assert!(format!("{from_bytes_err:#}").contains("checksum"), "{from_bytes_err:#}");
+        assert!(format!("{streamed_err:#}").contains("checksum"), "{streamed_err:#}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn streaming_load_validates_length_before_payloads() {
+        let a = sample(PlanPrecision::F32, Pattern::Gs { b: 8, k: 8 }, 12);
+        let path = scratch("short.gsm");
+        let bytes = a.to_bytes();
+        // File shorter than the header declares: caught from metadata
+        // alone, with the same message as the buffered decoder.
+        std::fs::write(&path, &bytes[..bytes.len() - 10]).unwrap();
+        let err = ModelArtifact::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated or padded"), "{err:#}");
+        // File smaller than the fixed header.
+        std::fs::write(&path, &bytes[..20]).unwrap();
+        let err = ModelArtifact::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated artifact"), "{err:#}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn save_cleans_stale_tmp_from_crashed_writer() {
+        let a = sample(PlanPrecision::F32, Pattern::Gs { b: 8, k: 8 }, 13);
+        let path = scratch("stale.gsm");
+        let tmp = crate::util::fsio::tmp_path(&path);
+        std::fs::write(&tmp, b"half-written junk from a dead process").unwrap();
+        a.save(&path).unwrap();
+        assert!(!tmp.exists(), "save must clear the stale temp file");
+        assert_eq!(ModelArtifact::load(&path).unwrap().gs, a.gs);
+        let _ = std::fs::remove_file(&path);
     }
 }

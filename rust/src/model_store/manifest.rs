@@ -1,0 +1,453 @@
+//! Crash-recoverable store manifest: the on-disk record of *what is
+//! deployed* (`serve --store-dir DIR`).
+//!
+//! Every load/swap/unload/rollback rewrites
+//! `<store-dir>/store-manifest.json` atomically and durably (via
+//! [`crate::util::fsio::write_atomic`]), so a crashed or restarted server
+//! can replay it and resume with the same registry: the same model names,
+//! the same artifact paths, the same deployment versions — and therefore
+//! bit-identical logits, since artifacts are themselves CRC-checked and
+//! canonical.
+//!
+//! The file is one integrity-prefixed line followed by a JSON payload:
+//!
+//! ```text
+//! gsm-manifest-v1 crc32=0a1b2c3d
+//! {"default":"default","max_models":4,"models":{...}}
+//! ```
+//!
+//! The CRC-32 covers the JSON bytes, so a torn or bit-rotted manifest is
+//! rejected as corrupt rather than silently replayed into a wrong
+//! registry. Recovery is deliberately *graceful*: a model whose artifact
+//! is missing or corrupt is skipped with a recorded reason (the server
+//! still starts and serves the slots that did restore), and only the
+//! live generation of each slot is persisted — rollback history does not
+//! survive a restart.
+
+use super::artifact::ModelArtifact;
+use super::store::{ModelSlot, ModelStore, SlotConfig};
+use crate::util::crc32::crc32;
+use crate::util::fsio;
+use crate::util::json::Json;
+use anyhow::{ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+const PREFIX: &str = "gsm-manifest-v1 crc32=";
+
+/// File name of the manifest inside a `--store-dir`.
+pub const MANIFEST_FILE: &str = "store-manifest.json";
+
+/// One persisted slot: where its live generation came from and how it
+/// was deployed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ManifestEntry {
+    /// Artifact path (or an `inline-…` pseudo-source that cannot be
+    /// restored and is skipped on replay).
+    pub path: String,
+    /// Deployment version the slot resumes at.
+    pub version: u64,
+    /// Plan precision name (`"f32"`/`"f16"`) — informational; the
+    /// artifact itself is authoritative on restore.
+    pub precision: Option<String>,
+    pub pinned: bool,
+}
+
+/// The full persisted registry state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    /// The default (pinned) slot name.
+    pub default: String,
+    /// Store capacity bound at persist time (0 = unbounded).
+    pub max_models: usize,
+    pub models: BTreeMap<String, ManifestEntry>,
+}
+
+impl Manifest {
+    /// Snapshot the live registry of `store`.
+    pub fn snapshot(store: &ModelStore, default: &str) -> Manifest {
+        let mut models = BTreeMap::new();
+        for name in store.names() {
+            let Some(slot) = store.get(&name) else {
+                continue; // concurrently unloaded between names() and get()
+            };
+            let vm = slot.current();
+            models.insert(
+                name.clone(),
+                ManifestEntry {
+                    path: vm.source.clone(),
+                    version: vm.version,
+                    precision: vm.precision().map(|p| p.name().to_string()),
+                    pinned: name == store.pinned_name(),
+                },
+            );
+        }
+        Manifest {
+            default: default.to_string(),
+            max_models: store.max_models(),
+            models,
+        }
+    }
+
+    /// Serialize: integrity line + JSON payload.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let models = Json::Obj(
+            self.models
+                .iter()
+                .map(|(name, e)| {
+                    let mut pairs = vec![
+                        ("path", Json::from(e.path.as_str())),
+                        ("version", Json::Num(e.version as f64)),
+                        ("pinned", Json::Bool(e.pinned)),
+                    ];
+                    if let Some(p) = &e.precision {
+                        pairs.push(("precision", Json::from(p.as_str())));
+                    }
+                    (name.clone(), Json::obj(pairs))
+                })
+                .collect(),
+        );
+        let payload = Json::obj(vec![
+            ("default", Json::from(self.default.as_str())),
+            ("max_models", Json::Num(self.max_models as f64)),
+            ("models", models),
+        ])
+        .to_string();
+        let mut out = format!("{PREFIX}{:08x}\n", crc32(payload.as_bytes())).into_bytes();
+        out.extend_from_slice(payload.as_bytes());
+        out
+    }
+
+    /// Decode and integrity-check manifest bytes.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Manifest> {
+        let text = std::str::from_utf8(bytes).context("manifest is not UTF-8")?;
+        let (first, payload) = text
+            .split_once('\n')
+            .context("manifest is missing its integrity line")?;
+        let stored = first
+            .strip_prefix(PREFIX)
+            .with_context(|| format!("manifest has an unrecognized header line {first:?}"))?;
+        let stored = u32::from_str_radix(stored.trim(), 16)
+            .context("manifest integrity line has a malformed crc32")?;
+        let computed = crc32(payload.as_bytes());
+        ensure!(
+            stored == computed,
+            "manifest checksum mismatch (stored {stored:08x}, computed {computed:08x}) — corrupt \
+             or torn manifest"
+        );
+        let json = Json::parse(payload).context("manifest payload is not valid JSON")?;
+        let default = json
+            .get("default")
+            .and_then(Json::as_str)
+            .context("manifest payload is missing \"default\"")?
+            .to_string();
+        let max_models = json
+            .get("max_models")
+            .and_then(Json::as_usize)
+            .context("manifest payload is missing \"max_models\"")?;
+        let models_json = json
+            .get("models")
+            .context("manifest payload is missing \"models\"")?;
+        let Json::Obj(map) = models_json else {
+            anyhow::bail!("manifest \"models\" must be an object");
+        };
+        let mut models = BTreeMap::new();
+        for (name, entry) in map {
+            let path = entry
+                .get("path")
+                .and_then(Json::as_str)
+                .with_context(|| format!("manifest model {name:?} is missing \"path\""))?
+                .to_string();
+            let version = entry
+                .get("version")
+                .and_then(Json::as_f64)
+                .with_context(|| format!("manifest model {name:?} is missing \"version\""))?
+                as u64;
+            ensure!(
+                version >= 1,
+                "manifest model {name:?} has invalid version {version}"
+            );
+            let precision = entry
+                .get("precision")
+                .and_then(Json::as_str)
+                .map(|s| s.to_string());
+            let pinned = entry.get("pinned").and_then(Json::as_bool).unwrap_or(false);
+            models.insert(
+                name.clone(),
+                ManifestEntry {
+                    path,
+                    version,
+                    precision,
+                    pinned,
+                },
+            );
+        }
+        Ok(Manifest {
+            default,
+            max_models,
+            models,
+        })
+    }
+
+    /// Read the manifest from a store directory. `Ok(None)` means no
+    /// manifest exists yet (a fresh directory); corruption is an error.
+    pub fn load_dir(dir: &Path) -> Result<Option<Manifest>> {
+        let path = dir.join(MANIFEST_FILE);
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => {
+                return Err(e).with_context(|| format!("read store manifest {}", path.display()))
+            }
+        };
+        Manifest::from_bytes(&bytes)
+            .with_context(|| format!("load store manifest {}", path.display()))
+    }
+}
+
+/// Outcome of replaying a manifest: the slots that restored, and the
+/// ones that were skipped (missing/corrupt/non-file artifacts) with the
+/// reason the operator will see in the startup log.
+pub struct RestoreReport {
+    pub restored: Vec<(String, Arc<ModelSlot>)>,
+    pub skipped: Vec<(String, String)>,
+}
+
+/// Rebuild slots from a manifest. Each entry's artifact is re-loaded
+/// (CRC-validated) and instantiated; the slot resumes at its persisted
+/// deployment version via [`SlotConfig::start_version`]. Failures are
+/// collected, never fatal — serving degrades to the slots that restored.
+pub fn restore(manifest: &Manifest, threads: usize, base: SlotConfig) -> RestoreReport {
+    let mut report = RestoreReport {
+        restored: Vec::new(),
+        skipped: Vec::new(),
+    };
+    for (name, entry) in &manifest.models {
+        let slot = ModelArtifact::load(&entry.path).and_then(|artifact| {
+            let model = artifact
+                .instantiate(threads)
+                .with_context(|| format!("instantiate artifact {}", entry.path))?;
+            let cfg = SlotConfig {
+                start_version: entry.version,
+                ..base
+            };
+            Ok(Arc::new(ModelSlot::with_config(
+                model,
+                &entry.path,
+                threads,
+                cfg,
+            )))
+        });
+        match slot {
+            Ok(slot) => report.restored.push((name.clone(), slot)),
+            Err(e) => report.skipped.push((name.clone(), format!("{e:#}"))),
+        }
+    }
+    report
+}
+
+/// Serialized persist handle the serving path holds: every deploy
+/// operation calls [`ManifestWriter::persist`], which snapshots the
+/// registry under a write mutex and atomically/durably replaces the
+/// manifest file.
+pub struct ManifestWriter {
+    path: PathBuf,
+    store: Arc<ModelStore>,
+    default: String,
+    write: Mutex<()>,
+}
+
+impl ManifestWriter {
+    pub fn new(dir: &Path, store: Arc<ModelStore>, default: &str) -> ManifestWriter {
+        ManifestWriter {
+            path: dir.join(MANIFEST_FILE),
+            store,
+            default: default.to_string(),
+            write: Mutex::new(()),
+        }
+    }
+
+    /// Snapshot the registry and rewrite the manifest. Serialized: two
+    /// concurrent deploys cannot interleave their snapshot/write pairs
+    /// into an out-of-order manifest.
+    pub fn persist(&self) -> Result<()> {
+        let _guard = self.write.lock().unwrap();
+        let manifest = Manifest::snapshot(&self.store, &self.default);
+        fsio::write_atomic(&self.path, &manifest.to_bytes())
+            .with_context(|| format!("persist store manifest {}", self.path.display()))
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::pattern::Pattern;
+    use crate::testing::model::{build_random_artifact, build_random_model, ModelSpec};
+
+    fn spec(seed: u64) -> ModelSpec {
+        ModelSpec {
+            inputs: 8,
+            hidden: 32,
+            outputs: 16,
+            max_batch: 4,
+            pattern: Pattern::Gs { b: 8, k: 8 },
+            sparsity: 0.75,
+            threads: 1,
+            seed,
+            ..ModelSpec::default()
+        }
+    }
+
+    fn scratch_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("gs-manifest-{}-{name}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sample_manifest() -> Manifest {
+        let mut models = BTreeMap::new();
+        models.insert(
+            "default".to_string(),
+            ManifestEntry {
+                path: "/tmp/a.gsm".to_string(),
+                version: 3,
+                precision: Some("f32".to_string()),
+                pinned: true,
+            },
+        );
+        models.insert(
+            "beta".to_string(),
+            ManifestEntry {
+                path: "/tmp/b.gsm".to_string(),
+                version: 1,
+                precision: Some("f16".to_string()),
+                pinned: false,
+            },
+        );
+        Manifest {
+            default: "default".to_string(),
+            max_models: 4,
+            models,
+        }
+    }
+
+    #[test]
+    fn bytes_roundtrip_exactly() {
+        let m = sample_manifest();
+        let bytes = m.to_bytes();
+        let back = Manifest::from_bytes(&bytes).unwrap();
+        assert_eq!(back, m);
+        // Canonical: re-encoding is byte-identical.
+        assert_eq!(back.to_bytes(), bytes);
+    }
+
+    #[test]
+    fn rejects_corruption_via_checksum() {
+        let mut bytes = sample_manifest().to_bytes();
+        let n = bytes.len();
+        bytes[n - 3] ^= 0x20; // flip a payload character
+        let err = Manifest::from_bytes(&bytes).unwrap_err();
+        assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+    }
+
+    #[test]
+    fn rejects_garbage_headers() {
+        assert!(Manifest::from_bytes(b"").is_err());
+        assert!(Manifest::from_bytes(b"not a manifest\n{}").is_err());
+        assert!(Manifest::from_bytes(b"gsm-manifest-v1 crc32=zzzz\n{}").is_err());
+    }
+
+    #[test]
+    fn missing_file_is_none_but_corrupt_is_an_error() {
+        let dir = scratch_dir("load");
+        assert!(Manifest::load_dir(&dir).unwrap().is_none());
+        std::fs::write(dir.join(MANIFEST_FILE), b"gsm-manifest-v1 crc32=00000000\n{}").unwrap();
+        assert!(Manifest::load_dir(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn snapshot_persist_load_roundtrip() {
+        let dir = scratch_dir("persist");
+        let store = Arc::new(ModelStore::with_capacity(4, "default"));
+        let m = build_random_model(&spec(1)).unwrap().model;
+        store
+            .register("default", Arc::new(ModelSlot::new(m, "/tmp/d.gsm", 1)))
+            .unwrap();
+        let writer = ManifestWriter::new(&dir, Arc::clone(&store), "default");
+        writer.persist().unwrap();
+        let loaded = Manifest::load_dir(&dir).unwrap().unwrap();
+        assert_eq!(loaded.default, "default");
+        assert_eq!(loaded.max_models, 4);
+        let entry = &loaded.models["default"];
+        assert_eq!(entry.path, "/tmp/d.gsm");
+        assert_eq!(entry.version, 1);
+        assert!(entry.pinned);
+        // A swap bumps the persisted version on the next persist.
+        let m2 = build_random_model(&spec(2)).unwrap().model;
+        store.get("default").unwrap().swap(m2, "/tmp/d2.gsm").unwrap();
+        writer.persist().unwrap();
+        let loaded = Manifest::load_dir(&dir).unwrap().unwrap();
+        assert_eq!(loaded.models["default"].version, 2);
+        assert_eq!(loaded.models["default"].path, "/tmp/d2.gsm");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn restore_replays_versions_and_skips_broken_entries() {
+        let dir = scratch_dir("restore");
+        let good = dir.join("good.gsm");
+        build_random_artifact(&spec(5)).unwrap().0.save(&good).unwrap();
+
+        let mut models = BTreeMap::new();
+        models.insert(
+            "good".to_string(),
+            ManifestEntry {
+                path: good.display().to_string(),
+                version: 6,
+                precision: Some("f32".to_string()),
+                pinned: true,
+            },
+        );
+        models.insert(
+            "gone".to_string(),
+            ManifestEntry {
+                path: dir.join("missing.gsm").display().to_string(),
+                version: 2,
+                precision: None,
+                pinned: false,
+            },
+        );
+        models.insert(
+            "inline".to_string(),
+            ManifestEntry {
+                path: "inline-random".to_string(),
+                version: 1,
+                precision: None,
+                pinned: false,
+            },
+        );
+        let manifest = Manifest {
+            default: "good".to_string(),
+            max_models: 0,
+            models,
+        };
+
+        let report = restore(&manifest, 1, SlotConfig::default());
+        assert_eq!(report.restored.len(), 1);
+        let (name, slot) = &report.restored[0];
+        assert_eq!(name, "good");
+        assert_eq!(slot.version(), 6, "slot resumes at its persisted version");
+        assert_eq!(report.skipped.len(), 2);
+        for (name, reason) in &report.skipped {
+            assert!(name == "gone" || name == "inline");
+            assert!(!reason.is_empty());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

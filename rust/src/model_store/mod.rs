@@ -17,10 +17,21 @@
 //!   new pruning with zero downtime), and [`ModelStore`], the named
 //!   registry behind multi-model routed serving: touch-on-infer LRU
 //!   recency, a capacity bound with graceful eviction of cold models,
-//!   and a pinned default slot eviction never removes.
+//!   and a pinned default slot eviction never removes. Slots also carry
+//!   the deployment-safety machinery: bounded version retention with
+//!   rollback, canary swaps with auto-rollback, and a quarantine
+//!   circuit breaker with half-open probing.
+//! * [`manifest`] — the crash-recoverable store manifest behind
+//!   `serve --store-dir`: a CRC-checked JSON record of the deployed
+//!   registry, rewritten atomically and durably on every
+//!   load/swap/unload/rollback and replayed on startup so a restarted
+//!   server resumes the exact pre-crash registry (missing or corrupt
+//!   artifacts degrade gracefully to skipped slots).
 
 pub mod artifact;
+pub mod manifest;
 pub mod store;
 
 pub use artifact::ModelArtifact;
-pub use store::{ModelSlot, ModelStore, VersionedModel};
+pub use manifest::{Manifest, ManifestWriter};
+pub use store::{Admission, ModelSlot, ModelStore, SlotConfig, SlotEvent, VersionedModel};

@@ -9,6 +9,25 @@
 //! inside one batch. The displaced model is freed when its last in-flight
 //! batch drops its `Arc`.
 //!
+//! Beyond plain swaps the slot carries the deployment-safety machinery:
+//!
+//! * **Retention + rollback** — each swap pushes the displaced generation
+//!   onto a bounded history ([`SlotConfig::retain`]); [`ModelSlot::rollback`]
+//!   restores the newest retained generation under live traffic with the
+//!   same snapshot guarantees as swap (the exact prior `Arc` comes back,
+//!   so logits are bit-identical to before the bad deploy).
+//! * **Canary swaps** — [`ModelSlot::swap_canary`] installs a generation
+//!   that serves normally but is *watched* for its first N requests; if
+//!   the error rate exceeds the configured threshold the slot
+//!   auto-rolls-back and records the reason, otherwise it promotes to
+//!   plain serving. Decisions come out of [`ModelSlot::observe_execution`]
+//!   as [`SlotEvent`]s the serving workers act on.
+//! * **Quarantine circuit breaker** — repeated failures within a sliding
+//!   window ([`SlotConfig::quarantine_after`]) flip the slot to
+//!   `quarantined`: [`ModelSlot::admit`] fast-fails new requests instead
+//!   of burning batch slots, then lets one probe request through per
+//!   cool-down interval; a clean probe closes the circuit.
+//!
 //! [`ModelStore`] is the named registry of slots behind multi-model
 //! serving: requests route by slot name, [`ModelStore::acquire`] bumps a
 //! slot's recency on every routed infer, and a capacity bound
@@ -22,9 +41,10 @@ use super::artifact::ModelArtifact;
 use crate::coordinator::SparseModel;
 use crate::kernels::exec::PlanPrecision;
 use anyhow::{bail, ensure, Context, Result};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
 
 /// One deployed model generation.
 pub struct VersionedModel {
@@ -42,10 +62,127 @@ impl VersionedModel {
     }
 }
 
-/// An atomically swappable slot holding the live model generation.
+/// Per-slot deployment-safety knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct SlotConfig {
+    /// Previous generations kept for rollback (0 disables rollback and
+    /// canary swaps).
+    pub retain: usize,
+    /// Quarantine the slot after this many failed requests inside the
+    /// sliding window (0 disables the circuit breaker).
+    pub quarantine_after: usize,
+    /// Sliding-window width for counting failures, milliseconds.
+    pub quarantine_window_ms: u64,
+    /// Cool-down before a quarantined slot admits a half-open probe
+    /// request (and between successive probes), milliseconds.
+    pub quarantine_cooldown_ms: u64,
+    /// Version number of the initial generation (manifest replay restores
+    /// a slot at its pre-crash version instead of 1).
+    pub start_version: u64,
+}
+
+impl Default for SlotConfig {
+    fn default() -> SlotConfig {
+        SlotConfig {
+            retain: 2,
+            quarantine_after: 0,
+            quarantine_window_ms: 10_000,
+            quarantine_cooldown_ms: 2_000,
+            start_version: 1,
+        }
+    }
+}
+
+/// Admission verdict for one infer request against a slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Slot is healthy: enqueue normally.
+    Admit,
+    /// Slot is quarantined but due for a half-open probe: enqueue this
+    /// one request marked as the probe whose outcome decides recovery.
+    AdmitProbe,
+    /// Slot is quarantined: fail fast without burning a batch slot.
+    /// `retry_in_ms` is the time until the next probe opportunity.
+    FastFail {
+        /// Milliseconds until the breaker will admit a probe.
+        retry_in_ms: u64,
+    },
+}
+
+/// A state transition produced by [`ModelSlot::observe_execution`]. The
+/// serving worker that observes the batch outcome surfaces these into
+/// metrics/logs/manifest persistence.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SlotEvent {
+    /// A canary generation survived its request budget.
+    CanaryPromoted { version: u64 },
+    /// A canary generation exceeded its error budget and the slot rolled
+    /// back to the retained previous generation.
+    CanaryRolledBack { from: u64, to: u64, reason: String },
+    /// The circuit breaker tripped: the slot now fast-fails admission.
+    Quarantined { reason: String },
+    /// A half-open probe succeeded: the slot serves normally again.
+    Recovered,
+}
+
+/// The live generation plus the bounded rollback history, guarded by one
+/// lock so swap/rollback are atomic against snapshot readers.
+struct Generations {
+    live: Arc<VersionedModel>,
+    /// Displaced generations, oldest at the front, at most
+    /// [`SlotConfig::retain`] entries. `rollback` pops the back.
+    history: VecDeque<Arc<VersionedModel>>,
+}
+
+/// Canary watch state for a freshly swapped generation.
+struct CanaryState {
+    version: u64,
+    budget: u64,
+    max_error_rate: f64,
+    seen: u64,
+    failed: u64,
+}
+
+/// Quarantine circuit breaker.
+enum Circuit {
+    /// Serving normally; `failures` holds the timestamps of recent failed
+    /// requests (bounded at `quarantine_after` entries).
+    Closed { failures: VecDeque<Instant> },
+    /// Quarantined. `last_probe` rate-limits half-open probes to one per
+    /// cool-down interval — a probe that is shed or expires can never
+    /// wedge the breaker, the next interval simply admits another.
+    Open {
+        since: Instant,
+        last_probe: Option<Instant>,
+    },
+}
+
+impl Circuit {
+    fn closed() -> Circuit {
+        Circuit::Closed {
+            failures: VecDeque::new(),
+        }
+    }
+}
+
+/// Health state that changes on batch outcomes, kept apart from the
+/// generation lock. Lock order is `gens` → `health` (rollback takes
+/// both); `observe_execution` decides under `health` alone, releases it,
+/// then calls rollback — never `health` → `gens`.
+struct Health {
+    canary: Option<CanaryState>,
+    circuit: Circuit,
+    /// Human-readable record of the most recent rollback on this slot.
+    last_rollback: Option<String>,
+}
+
+/// An atomically swappable slot holding the live model generation plus
+/// its bounded rollback history and health state.
 pub struct ModelSlot {
-    current: RwLock<Arc<VersionedModel>>,
+    gens: RwLock<Generations>,
+    health: Mutex<Health>,
     next_version: AtomicU64,
+    cfg: SlotConfig,
     /// Kernel threads for models instantiated by [`ModelSlot::swap_path`]
     /// (0 = auto-detect, per [`SparseModel::native`]).
     threads: usize,
@@ -57,19 +194,40 @@ pub struct ModelSlot {
 }
 
 impl ModelSlot {
-    /// Create a slot serving `model` as version 1. `threads` is the
+    /// Create a slot serving `model` as version 1 with default safety
+    /// config (retain 2, circuit breaker off). `threads` is the
     /// kernel-thread setting future [`ModelSlot::swap_path`] loads
     /// instantiate with.
     pub fn new(model: SparseModel, source: &str, threads: usize) -> ModelSlot {
+        ModelSlot::with_config(model, source, threads, SlotConfig::default())
+    }
+
+    /// Create a slot with explicit deployment-safety configuration.
+    pub fn with_config(
+        model: SparseModel,
+        source: &str,
+        threads: usize,
+        cfg: SlotConfig,
+    ) -> ModelSlot {
         let input_width = model.inputs;
         let min_batch = model.max_batch;
+        let start = cfg.start_version.max(1);
         ModelSlot {
-            current: RwLock::new(Arc::new(VersionedModel {
-                version: 1,
-                model,
-                source: source.to_string(),
-            })),
-            next_version: AtomicU64::new(2),
+            gens: RwLock::new(Generations {
+                live: Arc::new(VersionedModel {
+                    version: start,
+                    model,
+                    source: source.to_string(),
+                }),
+                history: VecDeque::new(),
+            }),
+            health: Mutex::new(Health {
+                canary: None,
+                circuit: Circuit::closed(),
+                last_rollback: None,
+            }),
+            next_version: AtomicU64::new(start + 1),
+            cfg,
             threads,
             input_width,
             min_batch,
@@ -79,12 +237,12 @@ impl ModelSlot {
     /// Snapshot the live generation. Cheap (one `Arc` clone under a read
     /// lock); callers execute whole batches against the snapshot.
     pub fn current(&self) -> Arc<VersionedModel> {
-        Arc::clone(&self.current.read().unwrap())
+        Arc::clone(&self.gens.read().unwrap().live)
     }
 
     /// The live deployment version.
     pub fn version(&self) -> u64 {
-        self.current.read().unwrap().version
+        self.gens.read().unwrap().live.version
     }
 
     /// The input width every generation of this slot accepts.
@@ -98,11 +256,77 @@ impl ModelSlot {
         self.min_batch
     }
 
+    /// This slot's deployment-safety configuration.
+    pub fn config(&self) -> &SlotConfig {
+        &self.cfg
+    }
+
+    /// Number of previous generations currently retained for rollback.
+    pub fn retained(&self) -> usize {
+        self.gens.read().unwrap().history.len()
+    }
+
+    /// Human-readable record of the most recent rollback, if any.
+    pub fn last_rollback(&self) -> Option<String> {
+        self.health.lock().unwrap().last_rollback.clone()
+    }
+
+    /// Deploy state for operators: `"quarantined"` while the circuit is
+    /// open, `"canary"` while a canary watch is active, else `"serving"`.
+    pub fn state_name(&self) -> &'static str {
+        let health = self.health.lock().unwrap();
+        match health.circuit {
+            Circuit::Open { .. } => "quarantined",
+            Circuit::Closed { .. } => {
+                if health.canary.is_some() {
+                    "canary"
+                } else {
+                    "serving"
+                }
+            }
+        }
+    }
+
     /// Install `model` as the next generation and return exactly the
     /// generation that was installed (its version/precision — not
     /// whatever a concurrent later swap may have made current).
     /// Rejects models that would break the slot's serving contract.
+    /// The displaced generation is retained for rollback; a swap also
+    /// clears any active canary watch and closes the circuit breaker
+    /// (the new generation earns its own health record).
     pub fn swap(&self, model: SparseModel, source: &str) -> Result<Arc<VersionedModel>> {
+        self.install(model, source, None)
+    }
+
+    /// Install `model` as a **canary**: it serves traffic normally, but
+    /// the slot watches its first `requests` requests and auto-rolls-back
+    /// if more than `max_error_rate * requests` of them fail. Requires at
+    /// least one retained generation to roll back to.
+    pub fn swap_canary(
+        &self,
+        model: SparseModel,
+        source: &str,
+        requests: u64,
+        max_error_rate: f64,
+    ) -> Result<Arc<VersionedModel>> {
+        ensure!(
+            self.cfg.retain >= 1,
+            "canary swap requires --retain-versions >= 1 (slot retains 0)"
+        );
+        ensure!(requests >= 1, "canary requests must be >= 1");
+        ensure!(
+            (0.0..=1.0).contains(&max_error_rate),
+            "canary max_error_rate must be within 0..=1, got {max_error_rate}"
+        );
+        self.install(model, source, Some((requests, max_error_rate)))
+    }
+
+    fn install(
+        &self,
+        model: SparseModel,
+        source: &str,
+        canary: Option<(u64, f64)>,
+    ) -> Result<Arc<VersionedModel>> {
         ensure!(
             model.inputs == self.input_width,
             "swap rejected: new model takes {} inputs, slot serves {}",
@@ -118,15 +342,30 @@ impl ModelSlot {
         // Version assignment and installation happen under one write
         // lock, so concurrent swaps install in strictly increasing
         // version order (a later version is never overwritten by an
-        // earlier one).
-        let mut cur = self.current.write().unwrap();
+        // earlier one). The health lock is taken inside the generation
+        // lock (the one sanctioned order) so the canary watch starts
+        // atomically with the install.
+        let mut gens = self.gens.write().unwrap();
         let version = self.next_version.fetch_add(1, Ordering::SeqCst);
         let vm = Arc::new(VersionedModel {
             version,
             model,
             source: source.to_string(),
         });
-        *cur = Arc::clone(&vm);
+        let displaced = std::mem::replace(&mut gens.live, Arc::clone(&vm));
+        gens.history.push_back(displaced);
+        while gens.history.len() > self.cfg.retain {
+            gens.history.pop_front();
+        }
+        let mut health = self.health.lock().unwrap();
+        health.canary = canary.map(|(budget, max_error_rate)| CanaryState {
+            version,
+            budget,
+            max_error_rate,
+            seen: 0,
+            failed: 0,
+        });
+        health.circuit = Circuit::closed();
         Ok(vm)
     }
 
@@ -135,11 +374,225 @@ impl ModelSlot {
     /// load and plan pack happen *before* the write lock is taken, so
     /// traffic never stalls on disk I/O.
     pub fn swap_path(&self, path: &str) -> Result<Arc<VersionedModel>> {
-        let artifact = ModelArtifact::load(path)?;
-        let model = artifact
-            .instantiate(self.threads)
-            .with_context(|| format!("instantiate artifact {path}"))?;
+        let model = self.load_for_swap(path)?;
         self.swap(model, path)
+    }
+
+    /// [`ModelSlot::swap_path`] in canary mode.
+    pub fn swap_path_canary(
+        &self,
+        path: &str,
+        requests: u64,
+        max_error_rate: f64,
+    ) -> Result<Arc<VersionedModel>> {
+        let model = self.load_for_swap(path)?;
+        self.swap_canary(model, path, requests, max_error_rate)
+    }
+
+    fn load_for_swap(&self, path: &str) -> Result<SparseModel> {
+        let artifact = ModelArtifact::load(path)?;
+        artifact
+            .instantiate(self.threads)
+            .with_context(|| format!("instantiate artifact {path}"))
+    }
+
+    /// Restore the newest retained generation as live (the exact
+    /// `Arc<VersionedModel>` that was displaced comes back: same version
+    /// number, bit-identical logits). The displaced generation is
+    /// discarded — **not** retained — so a bad deploy cannot oscillate
+    /// back in through repeated rollbacks. Clears any canary watch and
+    /// closes the circuit breaker.
+    pub fn rollback(&self, reason: &str) -> Result<Arc<VersionedModel>> {
+        match self.rollback_inner(None, reason)? {
+            Some(vm) => Ok(vm),
+            None => unreachable!("unconditional rollback never version-mismatches"),
+        }
+    }
+
+    /// [`ModelSlot::rollback`] guarded on the live version: rolls back
+    /// only if the live generation is still `expected_version`, returning
+    /// `Ok(None)` if a concurrent swap already replaced it (the
+    /// auto-rollback path must never clobber a newer deploy).
+    pub fn rollback_if(
+        &self,
+        expected_version: u64,
+        reason: &str,
+    ) -> Result<Option<Arc<VersionedModel>>> {
+        self.rollback_inner(Some(expected_version), reason)
+    }
+
+    fn rollback_inner(
+        &self,
+        expected_version: Option<u64>,
+        reason: &str,
+    ) -> Result<Option<Arc<VersionedModel>>> {
+        let mut gens = self.gens.write().unwrap();
+        if let Some(expected) = expected_version {
+            if gens.live.version != expected {
+                return Ok(None);
+            }
+        }
+        let Some(prev) = gens.history.pop_back() else {
+            bail!("nothing to roll back to: no retained previous version");
+        };
+        let from = gens.live.version;
+        gens.live = Arc::clone(&prev);
+        let mut health = self.health.lock().unwrap();
+        health.canary = None;
+        health.circuit = Circuit::closed();
+        health.last_rollback = Some(format!("v{from} -> v{}: {reason}", prev.version));
+        Ok(Some(prev))
+    }
+
+    /// Admission check for one infer request. Healthy slots admit;
+    /// quarantined slots fast-fail, except that once per cool-down
+    /// interval a single request is admitted as the half-open probe.
+    pub fn admit(&self) -> Admission {
+        let mut health = self.health.lock().unwrap();
+        let cooldown = Duration::from_millis(self.cfg.quarantine_cooldown_ms.max(1));
+        match &mut health.circuit {
+            Circuit::Closed { .. } => Admission::Admit,
+            Circuit::Open { since, last_probe } => {
+                let now = Instant::now();
+                let anchor = last_probe.unwrap_or(*since);
+                let elapsed = now.saturating_duration_since(anchor);
+                if elapsed >= cooldown {
+                    *last_probe = Some(now);
+                    Admission::AdmitProbe
+                } else {
+                    let remaining = (cooldown - elapsed).as_millis() as u64;
+                    Admission::FastFail {
+                        retry_in_ms: remaining.max(1),
+                    }
+                }
+            }
+        }
+    }
+
+    /// Record a batch outcome against the generation it executed on:
+    /// `ok`/`err` request counts, and whether the batch carried the
+    /// half-open probe. Returns the state transitions the outcome caused
+    /// (canary promotion/rollback, quarantine trip, recovery) for the
+    /// worker to surface.
+    pub fn observe_execution(
+        &self,
+        version: u64,
+        ok: u64,
+        err: u64,
+        probe: bool,
+    ) -> Vec<SlotEvent> {
+        enum CircuitNext {
+            Close,
+            Reopen,
+            Trip(String),
+        }
+        let mut events = Vec::new();
+        let mut rollback_req: Option<(u64, String)> = None;
+        {
+            let mut health = self.health.lock().unwrap();
+            let next = match &mut health.circuit {
+                Circuit::Open { .. } => {
+                    // Only the probe's outcome moves an open circuit:
+                    // pre-trip straggler batches finishing late must
+                    // neither close nor re-trip it.
+                    if probe && err == 0 && ok > 0 {
+                        Some(CircuitNext::Close)
+                    } else if probe && err > 0 {
+                        Some(CircuitNext::Reopen)
+                    } else {
+                        None
+                    }
+                }
+                Circuit::Closed { failures } => {
+                    if self.cfg.quarantine_after > 0 && err > 0 {
+                        let now = Instant::now();
+                        let window = Duration::from_millis(self.cfg.quarantine_window_ms);
+                        for _ in 0..err {
+                            failures.push_back(now);
+                            // The trip check only needs the most recent
+                            // `quarantine_after` failures; cap the deque
+                            // so a flood cannot grow it unboundedly.
+                            if failures.len() > self.cfg.quarantine_after {
+                                failures.pop_front();
+                            }
+                        }
+                        while failures
+                            .front()
+                            .is_some_and(|t| now.saturating_duration_since(*t) > window)
+                        {
+                            failures.pop_front();
+                        }
+                        if failures.len() >= self.cfg.quarantine_after {
+                            Some(CircuitNext::Trip(format!(
+                                "{} failed requests within {}ms",
+                                failures.len(),
+                                self.cfg.quarantine_window_ms
+                            )))
+                        } else {
+                            None
+                        }
+                    } else {
+                        None
+                    }
+                }
+            };
+            match next {
+                Some(CircuitNext::Close) => {
+                    health.circuit = Circuit::closed();
+                    events.push(SlotEvent::Recovered);
+                }
+                Some(CircuitNext::Reopen) => {
+                    // Failed probe: restart the cool-down clock.
+                    health.circuit = Circuit::Open {
+                        since: Instant::now(),
+                        last_probe: None,
+                    };
+                }
+                Some(CircuitNext::Trip(reason)) => {
+                    health.circuit = Circuit::Open {
+                        since: Instant::now(),
+                        last_probe: None,
+                    };
+                    events.push(SlotEvent::Quarantined { reason });
+                }
+                None => {}
+            }
+            if let Some(c) = health.canary.as_mut() {
+                if c.version == version {
+                    c.seen += ok + err;
+                    c.failed += err;
+                    if c.failed as f64 > c.max_error_rate * c.budget as f64 {
+                        // Even if every remaining budgeted request were
+                        // to succeed, the final error rate would exceed
+                        // the threshold — trip early.
+                        let reason = format!(
+                            "canary failed: {}/{} requests errored (budget {}, max_error_rate {})",
+                            c.failed, c.seen, c.budget, c.max_error_rate
+                        );
+                        rollback_req = Some((c.version, reason));
+                        health.canary = None;
+                    } else if c.seen >= c.budget {
+                        events.push(SlotEvent::CanaryPromoted { version: c.version });
+                        health.canary = None;
+                    }
+                }
+            }
+        }
+        // Health lock released: rollback takes gens → health.
+        if let Some((from, reason)) = rollback_req {
+            // Ok(None) means a concurrent swap already replaced the
+            // canary — nothing to do. Err cannot happen here: the canary
+            // install retained its predecessor and any interleaved
+            // rollback would have changed the live version first.
+            if let Ok(Some(restored)) = self.rollback_if(from, &reason) {
+                events.push(SlotEvent::CanaryRolledBack {
+                    from,
+                    to: restored.version,
+                    reason,
+                });
+            }
+        }
+        events
     }
 }
 
@@ -334,23 +787,21 @@ mod tests {
         }
     }
 
+    fn model(seed: u64) -> SparseModel {
+        build_random_model(&spec(seed)).unwrap().model
+    }
+
     fn slot(seed: u64) -> Arc<ModelSlot> {
-        Arc::new(ModelSlot::new(
-            build_random_model(&spec(seed)).unwrap().model,
-            &format!("inline-{seed}"),
-            1,
-        ))
+        Arc::new(ModelSlot::new(model(seed), &format!("inline-{seed}"), 1))
     }
 
     #[test]
     fn slot_versions_advance_and_snapshots_pin() {
-        let m1 = build_random_model(&spec(1)).unwrap().model;
-        let slot = ModelSlot::new(m1, "inline", 1);
+        let slot = ModelSlot::new(model(1), "inline", 1);
         assert_eq!(slot.version(), 1);
         let pinned = slot.current();
 
-        let m2 = build_random_model(&spec(2)).unwrap().model;
-        let vm = slot.swap(m2, "inline-2").unwrap();
+        let vm = slot.swap(model(2), "inline-2").unwrap();
         assert_eq!(vm.version, 2);
         assert_eq!(slot.version(), 2);
         // The old snapshot still serves version 1.
@@ -360,8 +811,7 @@ mod tests {
 
     #[test]
     fn slot_rejects_contract_breaking_models() {
-        let m1 = build_random_model(&spec(1)).unwrap().model;
-        let slot = ModelSlot::new(m1, "inline", 1);
+        let slot = ModelSlot::new(model(1), "inline", 1);
         // Different input width.
         let narrow = build_random_model(&ModelSpec { inputs: 6, ..spec(3) }).unwrap().model;
         assert!(slot.swap(narrow, "bad").is_err());
@@ -369,15 +819,187 @@ mod tests {
         let small = build_random_model(&ModelSpec { max_batch: 2, ..spec(4) }).unwrap().model;
         assert!(slot.swap(small, "bad").is_err());
         assert_eq!(slot.version(), 1, "failed swaps must not bump the version");
+        assert_eq!(slot.retained(), 0, "failed swaps must not grow history");
     }
 
     #[test]
     fn swap_path_surfaces_load_errors() {
-        let m1 = build_random_model(&spec(1)).unwrap().model;
-        let slot = ModelSlot::new(m1, "inline", 1);
+        let slot = ModelSlot::new(model(1), "inline", 1);
         let err = slot.swap_path("/nonexistent/model.gsm").unwrap_err();
         assert!(format!("{err:#}").contains("model.gsm"), "{err:#}");
         assert_eq!(slot.version(), 1);
+    }
+
+    #[test]
+    fn retention_is_bounded() {
+        let slot = ModelSlot::new(model(1), "inline-1", 1); // retain = 2
+        for seed in 2..=5 {
+            slot.swap(model(seed), &format!("inline-{seed}")).unwrap();
+        }
+        assert_eq!(slot.version(), 5);
+        assert_eq!(slot.retained(), 2, "history must be capped at retain");
+        // Rollback walks back through exactly the retained generations.
+        assert_eq!(slot.rollback("op request").unwrap().version, 4);
+        assert_eq!(slot.rollback("op request").unwrap().version, 3);
+        let err = slot.rollback("op request").unwrap_err();
+        assert!(format!("{err:#}").contains("nothing to roll back"), "{err:#}");
+    }
+
+    #[test]
+    fn rollback_restores_bit_identical_generation() {
+        let input = vec![0.25_f32; 8];
+        let slot = ModelSlot::new(model(1), "inline-1", 1);
+        let want = slot.current().model.infer_batch(&[input.clone()]).unwrap();
+        slot.swap(model(2), "inline-2").unwrap();
+        let swapped = slot.current().model.infer_batch(&[input.clone()]).unwrap();
+        assert_ne!(want, swapped, "distinct seeds must produce distinct logits");
+
+        let restored = slot.rollback("bad deploy").unwrap();
+        assert_eq!(restored.version, 1, "the exact prior generation returns");
+        assert_eq!(slot.version(), 1);
+        let got = slot.current().model.infer_batch(&[input]).unwrap();
+        assert_eq!(got, want, "rollback must restore bit-identical serving");
+        let note = slot.last_rollback().expect("rollback recorded");
+        assert!(note.contains("v2 -> v1"), "{note}");
+        assert!(note.contains("bad deploy"), "{note}");
+        // The rolled-back (bad) generation is discarded, not retained.
+        assert_eq!(slot.retained(), 0);
+        // Future swaps keep strictly increasing versions.
+        assert_eq!(slot.swap(model(3), "inline-3").unwrap().version, 3);
+    }
+
+    #[test]
+    fn rollback_if_guards_concurrent_swaps() {
+        let slot = ModelSlot::new(model(1), "inline-1", 1);
+        slot.swap(model(2), "inline-2").unwrap();
+        // A stale auto-rollback aimed at v2 after v3 deployed is a no-op.
+        slot.swap(model(3), "inline-3").unwrap();
+        assert!(slot.rollback_if(2, "stale").unwrap().is_none());
+        assert_eq!(slot.version(), 3);
+        // Aimed at the live version, it fires.
+        let restored = slot.rollback_if(3, "fresh").unwrap().unwrap();
+        assert_eq!(restored.version, 2);
+    }
+
+    #[test]
+    fn canary_requires_retention() {
+        let cfg = SlotConfig { retain: 0, ..SlotConfig::default() };
+        let slot = ModelSlot::with_config(model(1), "inline-1", 1, cfg);
+        let err = slot.swap_canary(model(2), "inline-2", 8, 0.5).unwrap_err();
+        assert!(format!("{err:#}").contains("retain"), "{err:#}");
+        assert_eq!(slot.version(), 1);
+    }
+
+    #[test]
+    fn canary_promotes_after_clean_budget() {
+        let slot = ModelSlot::new(model(1), "inline-1", 1);
+        let vm = slot.swap_canary(model(2), "inline-2", 4, 0.25).unwrap();
+        assert_eq!(vm.version, 2);
+        assert_eq!(slot.state_name(), "canary");
+        assert!(slot.observe_execution(2, 2, 0, false).is_empty());
+        let events = slot.observe_execution(2, 2, 0, false);
+        assert_eq!(events, vec![SlotEvent::CanaryPromoted { version: 2 }]);
+        assert_eq!(slot.state_name(), "serving");
+        assert_eq!(slot.version(), 2, "promotion keeps the canary serving");
+        // Further outcomes are no longer watched.
+        assert!(slot.observe_execution(2, 0, 4, false).is_empty());
+    }
+
+    #[test]
+    fn canary_trips_and_rolls_back() {
+        let slot = ModelSlot::new(model(1), "inline-1", 1);
+        slot.swap_canary(model(2), "inline-2", 8, 0.25).unwrap();
+        // 2 failures: 2 > 0.25 * 8 — even 6 straight successes could not
+        // bring the final rate under the threshold, so trip now.
+        assert!(slot.observe_execution(2, 1, 1, false).is_empty());
+        let events = slot.observe_execution(2, 0, 1, false);
+        assert_eq!(events.len(), 1, "{events:?}");
+        match &events[0] {
+            SlotEvent::CanaryRolledBack { from, to, reason } => {
+                assert_eq!((*from, *to), (2, 1));
+                assert!(reason.contains("canary failed"), "{reason}");
+            }
+            other => panic!("expected rollback, got {other:?}"),
+        }
+        assert_eq!(slot.version(), 1);
+        assert_eq!(slot.state_name(), "serving");
+        assert!(slot.last_rollback().unwrap().contains("canary failed"));
+    }
+
+    #[test]
+    fn canary_ignores_other_generations() {
+        let slot = ModelSlot::new(model(1), "inline-1", 1);
+        slot.swap_canary(model(2), "inline-2", 2, 0.0).unwrap();
+        // Straggler batches from v1 finishing with errors must not count
+        // against v2's canary watch.
+        assert!(slot.observe_execution(1, 0, 5, false).is_empty());
+        assert_eq!(slot.state_name(), "canary");
+        let events = slot.observe_execution(2, 2, 0, false);
+        assert_eq!(events, vec![SlotEvent::CanaryPromoted { version: 2 }]);
+    }
+
+    #[test]
+    fn quarantine_trips_probes_and_recovers() {
+        let cfg = SlotConfig {
+            quarantine_after: 3,
+            quarantine_window_ms: 10_000,
+            quarantine_cooldown_ms: 20,
+            ..SlotConfig::default()
+        };
+        let slot = ModelSlot::with_config(model(1), "inline-1", 1, cfg);
+        assert_eq!(slot.admit(), Admission::Admit);
+        assert!(slot.observe_execution(1, 0, 2, false).is_empty());
+        let events = slot.observe_execution(1, 0, 1, false);
+        assert!(
+            matches!(&events[0], SlotEvent::Quarantined { reason } if reason.contains("3")),
+            "{events:?}"
+        );
+        assert_eq!(slot.state_name(), "quarantined");
+        // Inside the cool-down: fast-fail with a retry hint.
+        match slot.admit() {
+            Admission::FastFail { retry_in_ms } => assert!(retry_in_ms <= 20),
+            other => panic!("expected fast-fail, got {other:?}"),
+        }
+        // A straggler success (not the probe) must not close the circuit.
+        assert!(slot.observe_execution(1, 4, 0, false).is_empty());
+        assert_eq!(slot.state_name(), "quarantined");
+        std::thread::sleep(Duration::from_millis(25));
+        // Cool-down elapsed: exactly one probe is admitted per interval.
+        assert_eq!(slot.admit(), Admission::AdmitProbe);
+        assert!(matches!(slot.admit(), Admission::FastFail { .. }));
+        // Failed probe keeps the circuit open and restarts the clock.
+        assert!(slot.observe_execution(1, 0, 1, true).is_empty());
+        assert_eq!(slot.state_name(), "quarantined");
+        std::thread::sleep(Duration::from_millis(25));
+        assert_eq!(slot.admit(), Admission::AdmitProbe);
+        let events = slot.observe_execution(1, 1, 0, true);
+        assert_eq!(events, vec![SlotEvent::Recovered]);
+        assert_eq!(slot.state_name(), "serving");
+        assert_eq!(slot.admit(), Admission::Admit);
+    }
+
+    #[test]
+    fn swap_clears_quarantine() {
+        let cfg = SlotConfig {
+            quarantine_after: 1,
+            quarantine_cooldown_ms: 60_000,
+            ..SlotConfig::default()
+        };
+        let slot = ModelSlot::with_config(model(1), "inline-1", 1, cfg);
+        slot.observe_execution(1, 0, 1, false);
+        assert_eq!(slot.state_name(), "quarantined");
+        // Deploying a replacement gives the slot a fresh health record.
+        slot.swap(model(2), "inline-2").unwrap();
+        assert_eq!(slot.state_name(), "serving");
+        assert_eq!(slot.admit(), Admission::Admit);
+    }
+
+    #[test]
+    fn manifest_replay_restores_start_version() {
+        let cfg = SlotConfig { start_version: 7, ..SlotConfig::default() };
+        let slot = ModelSlot::with_config(model(1), "replayed.gsm", 1, cfg);
+        assert_eq!(slot.version(), 7);
+        assert_eq!(slot.swap(model(2), "next.gsm").unwrap().version, 8);
     }
 
     #[test]

@@ -1,0 +1,111 @@
+//! Durable atomic file replacement.
+//!
+//! The artifact writer and the store manifest both need the same
+//! guarantee: after a crash at *any* point, a reader sees either the old
+//! complete file or the new complete file — never a torn hybrid, and
+//! never a new file whose bytes are still in the page cache when the
+//! rename already survived. [`write_atomic`] provides it:
+//!
+//! 1. remove a stale `<name>.tmp` left by a previously crashed writer,
+//! 2. write the new bytes to `<name>.tmp` and **fsync the file** (the
+//!    rename must never be more durable than the data it points to),
+//! 3. rename over the destination (atomic on POSIX),
+//! 4. fsync the parent directory so the rename itself is durable.
+
+use anyhow::{Context, Result};
+use std::fs::File;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// The sibling temp path a [`write_atomic`] of `path` stages through.
+pub fn tmp_path(path: &Path) -> PathBuf {
+    let mut name = path.file_name().unwrap_or_default().to_os_string();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+/// Durably replace `path` with `bytes` (see module docs for the crash
+/// contract).
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = tmp_path(path);
+    match std::fs::remove_file(&tmp) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+        Err(e) => {
+            return Err(e).with_context(|| format!("remove stale temp file {}", tmp.display()))
+        }
+    }
+    let mut f =
+        File::create(&tmp).with_context(|| format!("create temp file {}", tmp.display()))?;
+    f.write_all(bytes)
+        .with_context(|| format!("write temp file {}", tmp.display()))?;
+    f.sync_all()
+        .with_context(|| format!("sync temp file {}", tmp.display()))?;
+    drop(f);
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("rename {} into place at {}", tmp.display(), path.display()))?;
+    sync_parent_dir(path);
+    Ok(())
+}
+
+/// Fsync the directory containing `path` so a completed rename survives
+/// power loss. Best-effort: some filesystems/platforms refuse directory
+/// handles, and a failure here only weakens durability, never
+/// correctness of what a reader observes.
+fn sync_parent_dir(path: &Path) {
+    #[cfg(unix)]
+    if let Some(dir) = path.parent() {
+        let dir = if dir.as_os_str().is_empty() {
+            Path::new(".")
+        } else {
+            dir
+        };
+        if let Ok(d) = File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    #[cfg(not(unix))]
+    let _ = path;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("gs-fsio-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn writes_and_replaces() {
+        let path = scratch("replace.bin");
+        write_atomic(&path, b"first").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"first");
+        write_atomic(&path, b"second, longer payload").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second, longer payload");
+        assert!(!tmp_path(&path).exists(), "temp file must not linger");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn cleans_stale_tmp_from_crashed_writer() {
+        let path = scratch("stale.bin");
+        std::fs::write(tmp_path(&path), b"torn half-write").unwrap();
+        write_atomic(&path, b"complete").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"complete");
+        assert!(!tmp_path(&path).exists(), "stale temp file must be gone");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn tmp_path_is_a_sibling() {
+        assert_eq!(
+            tmp_path(Path::new("/a/b/model.gsm")),
+            PathBuf::from("/a/b/model.gsm.tmp")
+        );
+        assert_eq!(
+            tmp_path(Path::new("manifest.json")),
+            PathBuf::from("manifest.json.tmp")
+        );
+    }
+}

@@ -9,6 +9,7 @@
 pub mod cli;
 pub mod crc32;
 pub mod f16;
+pub mod fsio;
 pub mod json;
 pub mod prng;
 pub mod stats;

@@ -10,7 +10,7 @@
 use gs_sparse::coordinator::{
     faults, serve_slot, serve_store, server::ServeConfig, Client, Engine, InferOutcome,
 };
-use gs_sparse::model_store::{ModelSlot, ModelStore};
+use gs_sparse::model_store::{ModelArtifact, ModelSlot, ModelStore, SlotConfig};
 use gs_sparse::sparse::Pattern;
 use gs_sparse::testing::{build_random_artifact, build_random_model, ModelSpec};
 use gs_sparse::util::{Json, Prng};
@@ -220,6 +220,258 @@ fn corrupted_artifact_load_fails_cleanly_and_serving_continues() {
 
     let _ = std::fs::remove_file(&path);
     handle.stop();
+    faults::reset();
+}
+
+/// A canary deploy that panics inside its watch is auto-rolled back:
+/// the previous generation serves again bit-identically, the rollback
+/// is counted and surfaced in `models`, and conservation holds exactly
+/// — zero requests lost across the whole deploy/fail/rollback cycle.
+#[test]
+fn canary_auto_rollback_on_injected_panics_with_exact_conservation() {
+    let _guard = serial();
+    let (artifact, _) = build_random_artifact(&spec(81)).unwrap();
+    let path = std::env::temp_dir().join(format!("gsm-canary-{}.gsm", std::process::id()));
+    artifact.save(&path).unwrap();
+
+    let mut handle = serve_one(80, 1);
+    let mut client = Client::connect(handle.addr).unwrap();
+    let x = Prng::new(16).normal_vec(12, 1.0);
+    let baseline = client.infer_model("m", &x).unwrap();
+
+    // Deploy v2 under a canary watch: 4-request budget, zero error
+    // tolerance.
+    let v2 = client.swap_canary("m", path.to_str().unwrap(), 4, 0.0).unwrap();
+    assert_eq!(v2, 2);
+    // The canary is live (different weights ⇒ different logits).
+    let canary_out = client.infer_model("m", &x).unwrap();
+    assert_ne!(canary_out, baseline, "canary must actually serve");
+
+    // The next canary request panics — past the zero error budget, the
+    // slot auto-rolls back to the retained v1.
+    faults::arm_panic_on_batch(faults::batches_executed() + 1);
+    let err = client.infer_model("m", &x).unwrap_err();
+    assert!(format!("{err}").contains("worker panicked"), "{err}");
+    // The error reply flushes before the worker applies the rollback;
+    // give the observation a beat to land.
+    thread::sleep(Duration::from_millis(50));
+
+    // v1 serves again, bit-identical to before the deploy.
+    assert_eq!(client.infer_model("m", &x).unwrap(), baseline);
+    let models = client.models().unwrap();
+    let m = models.get("models").and_then(|ms| ms.get("m")).unwrap();
+    assert_eq!(m.get("version").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(m.get("state").and_then(Json::as_str), Some("serving"));
+    let last = m.get("last_rollback").and_then(Json::as_str).unwrap();
+    assert!(last.contains("v2 -> v1"), "{last}");
+
+    let stats = client.stats().unwrap();
+    assert_eq!(stat(&stats, "rollbacks"), 1.0);
+    assert_eq!(model_stat(&stats, "m", "rollbacks"), 1.0);
+    assert_eq!(
+        stat(&stats, "requests"),
+        stat(&stats, "responses")
+            + stat(&stats, "errors")
+            + stat(&stats, "shed")
+            + stat(&stats, "expired"),
+        "zero lost requests across a canary auto-rollback"
+    );
+    let _ = std::fs::remove_file(&path);
+    handle.stop();
+    faults::reset();
+}
+
+/// Rollback under live traffic: with clients hammering the slot while
+/// it swaps forward and rolls back, every single response is bit-exact
+/// for one of the two generations — never a blend — and the books
+/// balance when the dust settles.
+#[test]
+fn rollback_under_live_traffic_is_bit_identical() {
+    let _guard = serial();
+    let (artifact, _) = build_random_artifact(&spec(83)).unwrap();
+    let path = std::env::temp_dir().join(format!("gsm-rollb-{}.gsm", std::process::id()));
+    artifact.save(&path).unwrap();
+
+    let mut handle = serve_one(82, 2);
+    let addr = handle.addr;
+    let mut client = Client::connect(addr).unwrap();
+    let x = Prng::new(17).normal_vec(12, 1.0);
+    let out_v1 = client.infer_model("m", &x).unwrap();
+    let v2 = client.swap_model("m", path.to_str().unwrap()).unwrap();
+    assert_eq!(v2, 2);
+    let out_v2 = client.infer_model("m", &x).unwrap();
+    assert_ne!(out_v2, out_v1);
+
+    // Hammer from two threads while the main thread rolls back.
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let hammers: Vec<_> = (0..2)
+        .map(|_| {
+            let (stop, x) = (stop.clone(), x.clone());
+            let (out_v1, out_v2) = (out_v1.clone(), out_v2.clone());
+            thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                let mut n = 0u64;
+                while !stop.load(Ordering::SeqCst) {
+                    let out = c.infer_model("m", &x).unwrap();
+                    assert!(
+                        out == out_v1 || out == out_v2,
+                        "a response blended generations mid-rollback"
+                    );
+                    n += 1;
+                }
+                n
+            })
+        })
+        .collect();
+    thread::sleep(Duration::from_millis(30));
+    let restored = client.rollback(Some("m")).unwrap();
+    assert_eq!(restored, 1, "rollback restores the previous generation's version");
+    thread::sleep(Duration::from_millis(30));
+    stop.store(true, Ordering::SeqCst);
+    let served: u64 = hammers.into_iter().map(|h| h.join().unwrap()).sum();
+    assert!(served > 0);
+
+    // After the rollback settles, new requests are v1 bit-exact.
+    assert_eq!(client.infer_model("m", &x).unwrap(), out_v1);
+    let stats = client.stats().unwrap();
+    assert_eq!(stat(&stats, "rollbacks"), 1.0);
+    assert_eq!(
+        stat(&stats, "requests"),
+        stat(&stats, "responses")
+            + stat(&stats, "errors")
+            + stat(&stats, "shed")
+            + stat(&stats, "expired"),
+    );
+    let _ = std::fs::remove_file(&path);
+    handle.stop();
+    faults::reset();
+}
+
+/// Quarantine end-to-end: repeated injected panics trip the slot's
+/// circuit breaker, infer requests fast-fail with the structured
+/// quarantine error (counted in `quarantined` + `errors` — conservation
+/// stays exact), and after the cool-down a half-open probe executes and
+/// recovery follows.
+#[test]
+fn quarantine_trips_fast_fails_then_recovers_via_probe() {
+    let _guard = serial();
+    let cfg = SlotConfig {
+        quarantine_after: 2,
+        quarantine_window_ms: 10_000,
+        quarantine_cooldown_ms: 400,
+        ..SlotConfig::default()
+    };
+    let store = Arc::new(ModelStore::with_capacity(0, "m"));
+    let bm = build_random_model(&spec(84)).unwrap();
+    store
+        .register("m", Arc::new(ModelSlot::with_config(bm.model, "inline", 1, cfg)))
+        .unwrap();
+    let engine = Engine::from_store(store, "m", 1).unwrap();
+    let mut handle = serve_store(
+        &engine,
+        ServeConfig {
+            bind: "127.0.0.1:0".into(),
+            workers: 1,
+            input_width: 12,
+            max_batch: 8,
+            window_ms: 1,
+            slot: cfg,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let mut client = Client::connect(handle.addr).unwrap();
+    let x = Prng::new(18).normal_vec(12, 1.0);
+    assert_eq!(client.infer_model("m", &x).unwrap().len(), 32);
+
+    // Two failed requests inside the window trip the breaker.
+    for _ in 0..2 {
+        faults::arm_panic_on_batch(faults::batches_executed() + 1);
+        let err = client.infer_model("m", &x).unwrap_err();
+        assert!(format!("{err}").contains("worker panicked"), "{err}");
+    }
+    // The error reply flushes before the worker records the outcome;
+    // give the observation a beat to land (well inside the cool-down).
+    thread::sleep(Duration::from_millis(50));
+
+    // Tripped: requests fast-fail with the structured quarantine error,
+    // without touching the queue or a worker.
+    let batches_before = faults::batches_executed();
+    let err = client.infer_model("m", &x).unwrap_err();
+    assert!(format!("{err}").contains("model quarantined"), "{err}");
+    assert_eq!(
+        faults::batches_executed(),
+        batches_before,
+        "a fast-failed request must never execute"
+    );
+    let models = client.models().unwrap();
+    let state = models
+        .get("models")
+        .and_then(|ms| ms.get("m"))
+        .and_then(|m| m.get("state"))
+        .and_then(Json::as_str);
+    assert_eq!(state, Some("quarantined"));
+
+    // After the cool-down, the next request is admitted as the half-open
+    // probe; it succeeds (faults disarmed) and lifts the quarantine.
+    thread::sleep(Duration::from_millis(500));
+    assert_eq!(client.infer_model("m", &x).unwrap().len(), 32);
+    for _ in 0..3 {
+        assert_eq!(client.infer_model("m", &x).unwrap().len(), 32);
+    }
+    let models = client.models().unwrap();
+    let state = models
+        .get("models")
+        .and_then(|ms| ms.get("m"))
+        .and_then(|m| m.get("state"))
+        .and_then(Json::as_str);
+    assert_eq!(state, Some("serving"));
+
+    let stats = client.stats().unwrap();
+    assert_eq!(stat(&stats, "quarantined"), 1.0);
+    assert_eq!(model_stat(&stats, "m", "quarantined"), 1.0);
+    assert_eq!(
+        stat(&stats, "requests"),
+        stat(&stats, "responses")
+            + stat(&stats, "errors")
+            + stat(&stats, "shed")
+            + stat(&stats, "expired"),
+        "quarantine fast-fails keep conservation exact"
+    );
+    handle.stop();
+    faults::reset();
+}
+
+/// Torn-write regression for `ModelArtifact::save`: a writer crash
+/// mid-write (injected) must leave the previously deployed artifact
+/// byte-identical on disk — the partial write lands in the sibling tmp
+/// file, which the validating reader rejects and a clean retry removes.
+#[test]
+fn torn_artifact_write_leaves_previous_artifact_intact() {
+    let _guard = serial();
+    let path = std::env::temp_dir().join(format!("gsm-torn-{}.gsm", std::process::id()));
+    let (v1, _) = build_random_artifact(&spec(85)).unwrap();
+    v1.save(&path).unwrap();
+    let before = std::fs::read(&path).unwrap();
+
+    let (v2, _) = build_random_artifact(&spec(86)).unwrap();
+    faults::arm_torn_artifact_write(true);
+    let err = v2.save(&path).unwrap_err();
+    assert!(format!("{err:#}").contains("injected fault"), "{err:#}");
+
+    // The previous generation is byte-identical and still loads; the
+    // torn bytes are in the tmp sibling, which the reader rejects.
+    assert_eq!(std::fs::read(&path).unwrap(), before);
+    ModelArtifact::load(&path).unwrap();
+    let tmp = path.with_extension("gsm.tmp");
+    assert!(tmp.exists(), "torn write must land in the tmp sibling");
+    assert!(ModelArtifact::load(&tmp).is_err(), "a torn artifact must not validate");
+
+    // A clean retry replaces the artifact and sweeps the stale tmp.
+    v2.save(&path).unwrap();
+    assert!(!tmp.exists(), "a successful save must clean the stale tmp");
+    ModelArtifact::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
     faults::reset();
 }
 

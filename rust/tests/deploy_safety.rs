@@ -1,0 +1,313 @@
+//! Deployment-safety end-to-end suite (no fault injection needed):
+//! operator rollback over the wire, canary guard rails, and the
+//! crash-recoverable store manifest behind `--store-dir` — a restarted
+//! server resumes the exact pre-restart registry, versions and logits
+//! bit-identical.
+
+use gs_sparse::coordinator::{serve_store, server::ServeConfig, Client, Engine, ServerHandle};
+use gs_sparse::model_store::{manifest, ModelArtifact, ModelSlot, ModelStore, SlotConfig};
+use gs_sparse::sparse::Pattern;
+use gs_sparse::testing::{build_random_artifact, ModelSpec};
+use gs_sparse::util::{Json, Prng};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn spec(seed: u64) -> ModelSpec {
+    ModelSpec {
+        inputs: 12,
+        hidden: 64,
+        outputs: 32,
+        max_batch: 8,
+        pattern: Pattern::Gs { b: 8, k: 8 },
+        sparsity: 0.75,
+        threads: 1,
+        seed,
+        ..ModelSpec::default()
+    }
+}
+
+/// A scratch dir unique to this test (process id + name), recreated
+/// empty.
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("gs-deploy-safety-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Export the deterministic random artifact for `seed` into `dir`.
+fn export(dir: &Path, name: &str, seed: u64) -> PathBuf {
+    let path = dir.join(format!("{name}.gsm"));
+    build_random_artifact(&spec(seed)).unwrap().0.save(&path).unwrap();
+    path
+}
+
+/// Store-backed server over artifact-sourced slots (restorable from a
+/// manifest, unlike `inline` sources).
+fn serve_artifacts(
+    entries: &[(&str, &Path)],
+    default: &str,
+    store_dir: Option<PathBuf>,
+    slot_cfg: SlotConfig,
+) -> ServerHandle {
+    let store = Arc::new(ModelStore::with_capacity(0, default));
+    for (name, path) in entries {
+        let model = ModelArtifact::load(path).unwrap().instantiate(1).unwrap();
+        store
+            .register(
+                name,
+                Arc::new(ModelSlot::with_config(model, path.to_str().unwrap(), 1, slot_cfg)),
+            )
+            .unwrap();
+    }
+    let engine = Engine::from_store(store, default, 1).unwrap();
+    serve_store(
+        &engine,
+        ServeConfig {
+            bind: "127.0.0.1:0".into(),
+            workers: 1,
+            input_width: 12,
+            max_batch: 8,
+            window_ms: 1,
+            slot: slot_cfg,
+            store_dir,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap()
+}
+
+fn stat(stats: &Json, key: &str) -> f64 {
+    stats
+        .get(key)
+        .and_then(Json::as_f64)
+        .unwrap_or_else(|| panic!("stats missing {key}: {}", stats.to_string()))
+}
+
+fn model_entry<'a>(models: &'a Json, name: &str) -> &'a Json {
+    models
+        .get("models")
+        .and_then(|ms| ms.get(name))
+        .unwrap_or_else(|| panic!("models missing {name}: {}", models.to_string()))
+}
+
+/// One raw protocol frame over a fresh connection (for requests the
+/// typed [`Client`] deliberately cannot express).
+fn raw_roundtrip(addr: std::net::SocketAddr, frame: &str) -> Json {
+    let mut conn = TcpStream::connect(addr).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    conn.write_all(frame.as_bytes()).unwrap();
+    conn.write_all(b"\n").unwrap();
+    let mut line = String::new();
+    BufReader::new(conn).read_line(&mut line).unwrap();
+    Json::parse(&line).unwrap()
+}
+
+/// `{"op":"rollback"}` restores the previous generation bit-identically
+/// under the default retention, the display surfaces
+/// state/retained/last_rollback, the books count the rollback, and a
+/// second rollback correctly finds nothing retained (the displaced bad
+/// generation is discarded, not re-retained).
+#[test]
+fn operator_rollback_restores_previous_generation_bit_identically() {
+    let dir = scratch("rollback");
+    let a1 = export(&dir, "a1", 94);
+    let a2 = export(&dir, "a2", 95);
+    let mut handle = serve_artifacts(&[("a", &a1)], "a", None, SlotConfig::default());
+    let mut client = Client::connect(handle.addr).unwrap();
+    let x = Prng::new(19).normal_vec(12, 1.0);
+
+    let out_v1 = client.infer_model("a", &x).unwrap();
+    assert_eq!(client.swap_model("a", a2.to_str().unwrap()).unwrap(), 2);
+    let out_v2 = client.infer_model("a", &x).unwrap();
+    assert_ne!(out_v2, out_v1);
+
+    let models = client.models().unwrap();
+    let entry = model_entry(&models, "a");
+    assert_eq!(entry.get("state").and_then(Json::as_str), Some("serving"));
+    assert_eq!(entry.get("retained_versions").and_then(Json::as_f64), Some(1.0));
+
+    // Unqualified rollback routes to the default slot.
+    assert_eq!(client.rollback(None).unwrap(), 1);
+    assert_eq!(client.infer_model("a", &x).unwrap(), out_v1, "rollback must be bit-identical");
+
+    // The bad generation was discarded, not retained: nothing left.
+    let err = client.rollback(Some("a")).unwrap_err();
+    assert!(format!("{err}").contains("nothing to roll back"), "{err}");
+
+    let models = client.models().unwrap();
+    let entry = model_entry(&models, "a");
+    assert_eq!(entry.get("version").and_then(Json::as_f64), Some(1.0));
+    let last = entry.get("last_rollback").and_then(Json::as_str).unwrap();
+    assert!(last.contains("v2 -> v1") && last.contains("operator rollback"), "{last}");
+
+    let stats = client.stats().unwrap();
+    assert_eq!(stat(&stats, "rollbacks"), 1.0);
+    assert!(stat(&stats, "uptime_ms") >= 0.0);
+    assert_eq!(
+        stat(&stats, "requests"),
+        stat(&stats, "responses")
+            + stat(&stats, "errors")
+            + stat(&stats, "shed")
+            + stat(&stats, "expired"),
+    );
+    handle.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Canary guard rails: a slot with no retention refuses a canary swap
+/// (there would be nothing to roll back to) while a plain swap still
+/// deploys; `load` refuses a canary block outright; and a malformed
+/// canary block is an error, never a silent plain swap.
+#[test]
+fn canary_guard_rails() {
+    let dir = scratch("canary-guards");
+    let a1 = export(&dir, "a1", 96);
+    let a2 = export(&dir, "a2", 97);
+    let no_retention = SlotConfig { retain: 0, ..SlotConfig::default() };
+    let mut handle = serve_artifacts(&[("a", &a1)], "a", None, no_retention);
+    let mut client = Client::connect(handle.addr).unwrap();
+
+    let err = client.swap_canary("a", a2.to_str().unwrap(), 10, 0.5).unwrap_err();
+    assert!(format!("{err}").contains("retain"), "{err}");
+
+    // A malformed canary block must not fall through to a plain swap.
+    let reply = raw_roundtrip(
+        handle.addr,
+        &format!(
+            "{{\"op\":\"swap\",\"model\":\"a\",\"path\":\"{}\",\"canary\":{{\"requests\":0}}}}",
+            a2.to_str().unwrap()
+        ),
+    );
+    let msg = reply.get("error").and_then(Json::as_str).unwrap();
+    assert!(msg.contains("canary"), "{msg}");
+
+    // load never takes a canary: a fresh slot has no previous generation.
+    let reply = raw_roundtrip(
+        handle.addr,
+        &format!(
+            "{{\"op\":\"load\",\"model\":\"z\",\"path\":\"{}\",\
+             \"canary\":{{\"requests\":2,\"max_error_rate\":0.5}}}}",
+            a2.to_str().unwrap()
+        ),
+    );
+    let msg = reply.get("error").and_then(Json::as_str).unwrap();
+    assert!(msg.contains("swap"), "{msg}");
+
+    // The guarded slot still deploys plainly.
+    assert_eq!(client.swap_model("a", a2.to_str().unwrap()).unwrap(), 2);
+    handle.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A healthy canary swap over the wire: the reply and registry report
+/// canary state, and after the watch budget of clean requests the slot
+/// promotes to serving on the new version.
+#[test]
+fn canary_promotes_after_clean_watch() {
+    let dir = scratch("canary-promote");
+    let a1 = export(&dir, "a1", 98);
+    let a2 = export(&dir, "a2", 99);
+    let mut handle = serve_artifacts(&[("a", &a1)], "a", None, SlotConfig::default());
+    let mut client = Client::connect(handle.addr).unwrap();
+    let x = Prng::new(20).normal_vec(12, 1.0);
+
+    assert_eq!(client.swap_canary("a", a2.to_str().unwrap(), 3, 0.0).unwrap(), 2);
+    let models = client.models().unwrap();
+    assert_eq!(
+        model_entry(&models, "a").get("state").and_then(Json::as_str),
+        Some("canary")
+    );
+    // Three clean requests exhaust the watch budget...
+    for _ in 0..3 {
+        assert_eq!(client.infer_model("a", &x).unwrap().len(), 32);
+    }
+    // ...and the observation lands just after the last reply flushes.
+    std::thread::sleep(Duration::from_millis(50));
+    let models = client.models().unwrap();
+    let entry = model_entry(&models, "a");
+    assert_eq!(entry.get("state").and_then(Json::as_str), Some("serving"));
+    assert_eq!(entry.get("version").and_then(Json::as_f64), Some(2.0));
+    let stats = client.stats().unwrap();
+    assert_eq!(stat(&stats, "rollbacks"), 0.0, "a clean canary must not roll back");
+    handle.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The `--store-dir` manifest round-trips the registry across a restart:
+/// after load + swap on server one, replaying the manifest (exactly as
+/// the binary does on startup) resumes every model at its exact version
+/// with bit-identical logits.
+#[test]
+fn store_dir_resumes_exact_registry_after_restart() {
+    let dir = scratch("restart");
+    let a1 = export(&dir, "a1", 91);
+    let a2 = export(&dir, "a2", 92);
+    let b1 = export(&dir, "b1", 93);
+    let x = Prng::new(21).normal_vec(12, 1.0);
+
+    let (out_a, out_b) = {
+        let mut h1 =
+            serve_artifacts(&[("a", &a1)], "a", Some(dir.clone()), SlotConfig::default());
+        let mut c1 = Client::connect(h1.addr).unwrap();
+        assert_eq!(c1.load("b", b1.to_str().unwrap()).unwrap().0, 1);
+        assert_eq!(c1.swap_model("a", a2.to_str().unwrap()).unwrap(), 2);
+        let out_a = c1.infer_model("a", &x).unwrap();
+        let out_b = c1.infer_model("b", &x).unwrap();
+        // Every deploy op already rewrote the manifest durably — the
+        // hard-kill variant of this scenario is the CI recovery gate.
+        h1.stop();
+        (out_a, out_b)
+    };
+
+    // "Restart": replay the manifest the way the binary does.
+    let m = manifest::Manifest::load_dir(&dir).unwrap().expect("manifest must exist");
+    assert_eq!(m.default, "a");
+    let report = manifest::restore(&m, 1, SlotConfig::default());
+    assert!(report.skipped.is_empty(), "{:?}", report.skipped);
+    let store = Arc::new(ModelStore::with_capacity(m.max_models, &m.default));
+    for (name, slot) in report.restored {
+        store.register(&name, slot).unwrap();
+    }
+    let engine = Engine::from_store(store, &m.default, 1).unwrap();
+    let mut h2 = serve_store(
+        &engine,
+        ServeConfig {
+            bind: "127.0.0.1:0".into(),
+            workers: 1,
+            input_width: 12,
+            max_batch: 8,
+            window_ms: 1,
+            store_dir: Some(dir.clone()),
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let mut c2 = Client::connect(h2.addr).unwrap();
+
+    let models = c2.models().unwrap();
+    assert_eq!(models.get("default").and_then(Json::as_str), Some("a"));
+    assert_eq!(
+        model_entry(&models, "a").get("version").and_then(Json::as_f64),
+        Some(2.0),
+        "the swapped slot resumes at its pre-restart version"
+    );
+    assert_eq!(
+        model_entry(&models, "b").get("version").and_then(Json::as_f64),
+        Some(1.0)
+    );
+    assert_eq!(c2.infer_model("a", &x).unwrap(), out_a, "restart must be bit-identical");
+    assert_eq!(c2.infer_model("b", &x).unwrap(), out_b);
+
+    // The restarted server keeps the manifest current: an unload is
+    // durable across yet another replay.
+    c2.unload("b").unwrap();
+    let m = manifest::Manifest::load_dir(&dir).unwrap().unwrap();
+    assert!(!m.models.contains_key("b"), "unload must persist");
+    assert!(m.models.contains_key("a"));
+    h2.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
