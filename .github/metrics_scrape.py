@@ -1,0 +1,155 @@
+#!/usr/bin/env python3
+"""Metrics-scrape E2E driver for CI.
+
+Drives mixed traffic against a live `gs-sparse serve` server — successful
+infers, bounded-admission sheds (5 concurrent clients against
+--queue-depth 2 while the batching window holds the worker), and a
+deadline expiry (a 10 ms budget queued behind a ~150 ms window) — then
+scrapes `{"op":"metrics"}` and asserts, from the Prometheus text
+exposition ALONE, that the books balance:
+
+    gs_requests_total == gs_responses_total + gs_errors_total
+                         + gs_shed_total + gs_expired_total
+
+plus presence of the per-model series, latency/stage summaries, and the
+batch-occupancy summary. The JSON envelope is used only to carry the
+text; every asserted number is parsed back out of the exposition.
+"""
+import json
+import socket
+import sys
+import time
+
+
+def connect(port, timeout=60.0):
+    deadline = time.time() + timeout
+    while True:
+        try:
+            s = socket.create_connection(("127.0.0.1", port), timeout=5)
+            s.settimeout(30)
+            return s.makefile("rw", encoding="utf-8")
+        except OSError:
+            if time.time() > deadline:
+                raise
+            time.sleep(0.2)
+
+
+def rpc(io, **msg):
+    io.write(json.dumps(msg) + "\n")
+    io.flush()
+    reply = json.loads(io.readline())
+    if "error" in reply:
+        raise SystemExit(f"server error for {msg}: {reply}")
+    return reply
+
+
+def send(io, **msg):
+    io.write(json.dumps(msg) + "\n")
+    io.flush()
+
+
+def recv(io):
+    return json.loads(io.readline())
+
+
+def infer_input(n):
+    # Deterministic, text-stable floats: exact in JSON both ways.
+    return [(i % 7) * 0.25 - 0.5 for i in range(n)]
+
+
+def parse_metrics(text):
+    """Prometheus text exposition -> {series-with-labels: float}."""
+    series = {}
+    for line in text.splitlines():
+        if not line.strip() or line.startswith("#"):
+            continue
+        name, _, value = line.rpartition(" ")
+        series[name] = float(value)
+    return series
+
+
+def run(port):
+    io = connect(port)
+    assert rpc(io, op="ping").get("ok") is True
+
+    # --- Successful traffic: each sync request rides its own batch.
+    for i in range(1, 5):
+        out = rpc(io, op="infer", id=i, input=infer_input(64))["output"]
+        assert len(out) > 0, out
+    print("traffic ok: 4 successful infers")
+
+    # --- Sheds: 5 concurrent requests against --queue-depth 2 while the
+    # first one anchors the ~150 ms batching window on the only worker.
+    conns = [connect(port) for _ in range(5)]
+    for j, c in enumerate(conns):
+        send(c, op="infer", id=100 + j, input=infer_input(64))
+    shed = ok = 0
+    for c in conns:
+        reply = recv(c)
+        if "retry_after_ms" in reply:
+            shed += 1
+        elif "output" in reply:
+            ok += 1
+        else:
+            raise SystemExit(f"unexpected shed-phase reply: {reply}")
+    assert shed >= 1, f"bounded admission never shed (shed={shed} ok={ok})"
+    assert ok >= 1, "every request shed: queue bound misconfigured"
+    print(f"shed ok: {shed} shed, {ok} served")
+
+    # --- Expiry: a 10 ms deadline queued behind a fresh window anchor
+    # outwaits its budget before the batch forms.
+    head = connect(port)
+    send(head, op="infer", id=200, input=infer_input(64))
+    late = connect(port)
+    time.sleep(0.01)
+    send(late, op="infer", id=201, input=infer_input(64), deadline_ms=10)
+    assert "output" in recv(head), "window-anchor request must succeed"
+    reply = recv(late)
+    assert "waited_ms" in reply, f"expected structured expiry: {reply}"
+    print(f"expiry ok: expired after {reply['waited_ms']}ms in queue")
+
+    # --- Scrape. Every asserted number below comes from the exposition
+    # text, not the JSON envelope.
+    envelope = rpc(io, op="metrics")
+    assert envelope.get("content_type", "").startswith("text/plain"), envelope
+    text = envelope["text"]
+    assert "# TYPE gs_requests_total counter" in text
+    m = parse_metrics(text)
+
+    requests = m["gs_requests_total"]
+    responses = m["gs_responses_total"]
+    errors = m["gs_errors_total"]
+    shed_total = m["gs_shed_total"]
+    expired_total = m["gs_expired_total"]
+    assert requests == responses + errors + shed_total + expired_total, (
+        f"conservation violated in scraped metrics: {requests} != "
+        f"{responses} + {errors} + {shed_total} + {expired_total}"
+    )
+    assert requests >= 11, m  # 4 ok + 5 shed-phase + 2 expiry-phase
+    assert shed_total >= 1 and expired_total >= 1, m
+    assert m['gs_requests_total{model="default"}'] == requests, m
+
+    # Latency and stage summaries made it into the exposition.
+    assert m["gs_request_latency_seconds_count"] == responses, m
+    assert m['gs_request_latency_seconds{quantile="0.5"}'] > 0, m
+    assert m['gs_stage_seconds{stage="execute",quantile="0.99"}'] > 0, m
+    assert m['gs_stage_seconds{stage="queue_wait",quantile="0.5"}'] >= 0, m
+    assert m["gs_batch_occupancy_count"] >= 1, m
+    assert m["gs_connections"] >= 1, m
+    print(
+        f"scrape ok: conservation holds ({requests:.0f} requests = "
+        f"{responses:.0f} responses + {errors:.0f} errors + "
+        f"{shed_total:.0f} shed + {expired_total:.0f} expired)"
+    )
+
+    # The flight recorder saw the same story: shed and expired events
+    # are on the ring, and a traced request's lifecycle is complete.
+    trace = rpc(io, op="trace")
+    kinds = [e["event"] for e in trace["events"]]
+    for needed in ("admit", "enqueue", "batch_formed", "exec_start", "exec_end", "reply", "shed", "expired"):
+        assert needed in kinds, f"missing {needed} in trace: {sorted(set(kinds))}"
+    print("trace ok: full lifecycle + shed + expired events recorded")
+
+
+if __name__ == "__main__":
+    run(int(sys.argv[1]))

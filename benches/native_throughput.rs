@@ -14,6 +14,9 @@
 //! chunk ThreadPool path (direct-write for non-scatter patterns);
 //! `matmul_par_merge` keeps the private-accumulate+merge strategy for
 //! every pattern — the satellite comparison for the direct-write path.
+//! `matmul_par_noprof` re-times the parallel path with the chunk
+//! load-imbalance profiler's runtime switch off, so the profiler's
+//! overhead (one Instant pair per chunk job) has its own row.
 //!
 //! Emits the usual table plus a packed-plan byte table (f32 vs f16), and
 //! writes the machine-readable baseline to `BENCH_native.json` (repo
@@ -27,6 +30,7 @@ use gs_sparse::kernels::exec::{
     simd_enabled, to_feature_major, GsExecPlan, PlanPrecision,
 };
 use gs_sparse::kernels::native::gs_matvec;
+use gs_sparse::kernels::profile;
 use gs_sparse::sparse::Pattern;
 use gs_sparse::testing::build_random_gs;
 use gs_sparse::util::json::Json;
@@ -150,12 +154,20 @@ fn main() -> anyhow::Result<()> {
                     let matmul_par_merge = measure(&mut || {
                         sink += gs_matmul_parallel_merge(plan, &acts_t, batch, &pool)[0];
                     });
+                    // The same parallel path with the chunk profiler's
+                    // runtime switch off: the profiler-overhead row.
+                    profile::set_enabled(false);
+                    let matmul_par_noprof = measure(&mut || {
+                        sink += gs_matmul_parallel(plan, &acts_t, batch, &pool)[0];
+                    });
+                    profile::set_enabled(true);
                     let mut kernels = vec![
                         ("scalar", scalar),
                         ("planned", planned),
                         ("matmul", matmul),
                         ("matmul_par", matmul_par),
                         ("matmul_par_merge", matmul_par_merge),
+                        ("matmul_par_noprof", matmul_par_noprof),
                     ];
                     if simd_enabled() {
                         // Scalar-fallback inner block, for the SIMD delta.

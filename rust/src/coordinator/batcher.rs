@@ -42,7 +42,8 @@
 //! window wait is capped by the head's deadline, so a deadline shorter
 //! than the window is honored rather than blown by the batcher itself.
 
-use super::metrics::Metrics;
+use super::metrics::{Metrics, Stage};
+use super::trace::EventKind;
 use crate::model_store::{Admission, ModelSlot};
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::Ordering;
@@ -155,6 +156,11 @@ pub struct InferRequest {
     /// whether the circuit closes. Workers pass it through to
     /// [`ModelSlot::observe_execution`].
     pub probe: bool,
+    /// The server-minted id of the batch this request was sealed into,
+    /// stamped at batch formation (0 until then). Links the request's
+    /// `reply` trace event to the batch's `batch_formed`/`exec_*`
+    /// events.
+    pub batch_id: u64,
 }
 
 impl InferRequest {
@@ -171,6 +177,7 @@ impl InferRequest {
             cap: usize::MAX,
             deadline_ms: None,
             probe: false,
+            batch_id: 0,
         }
     }
 
@@ -302,7 +309,7 @@ impl Batcher {
     /// governs when room opens up).
     ///
     /// The per-batch service time is **adaptive**: the measured p50
-    /// request latency for `model` (the global reservoir for unrouted
+    /// request latency for `model` (the global histogram for unrouted
     /// factory-mode requests) once samples exist — a model serving 50 ms
     /// batches tells its clients to back off 25× longer than one serving
     /// 2 ms batches — falling back to the static batching-window
@@ -325,6 +332,15 @@ impl Batcher {
     /// Count a shed request (global + per-model) and fail its channel.
     fn shed(&self, req: InferRequest, retry_after_ms: u64) {
         self.metrics.count_shed(&req.model);
+        if self.metrics.recorder.is_enabled() {
+            self.metrics.recorder.record(
+                EventKind::Shed,
+                &req.model,
+                req.id,
+                0,
+                &format!("retry_after_ms={retry_after_ms}"),
+            );
+        }
         req.fail(Reject::overloaded(retry_after_ms));
     }
 
@@ -333,6 +349,15 @@ impl Batcher {
     fn expire(&self, req: InferRequest) {
         self.metrics.count_expired(&req.model);
         let waited = req.waited_ms();
+        if self.metrics.recorder.is_enabled() {
+            self.metrics.recorder.record(
+                EventKind::Expired,
+                &req.model,
+                req.id,
+                0,
+                &format!("waited_ms={waited}"),
+            );
+        }
         req.fail(Reject::expired(waited));
     }
 
@@ -368,6 +393,11 @@ impl Batcher {
             }
         }
         let key = req.batch_key();
+        let trace_id = if self.metrics.recorder.is_enabled() {
+            Some((req.id, req.model.clone()))
+        } else {
+            None
+        };
         let mut st = self.state.lock().unwrap();
         if st.shutdown {
             drop(st);
@@ -434,6 +464,9 @@ impl Batcher {
             // sub-queue (maybe this one). A worker window-waiting on a
             // different model cannot consume this wake.
             self.ready.notify_one();
+        }
+        if let Some((rid, rmodel)) = trace_id {
+            self.metrics.recorder.record(EventKind::Enqueue, &rmodel, rid, 0, "");
         }
         if let Some(v) = victim {
             // The queue is back at the bound after the swap-in.
@@ -563,7 +596,35 @@ impl Batcher {
                 // batch.
                 continue;
             }
-            self.metrics.record_batch(batch.len());
+            // Seal the batch: mint its id, stamp every member, and
+            // attribute queue-wait (per request) and batch-formation
+            // (head enqueue → seal) time to the stage histograms.
+            let batch_id = self.metrics.record_batch(batch.len());
+            let sealed = Instant::now();
+            let model = batch[0].model.clone();
+            let mm = if model.is_empty() { None } else { Some(self.metrics.model(&model)) };
+            for req in &mut batch {
+                req.batch_id = batch_id;
+                let wait = sealed.saturating_duration_since(req.enqueued).as_secs_f64();
+                self.metrics.stages.record(Stage::QueueWait, wait);
+                if let Some(mm) = &mm {
+                    mm.stages.record(Stage::QueueWait, wait);
+                }
+            }
+            let form = sealed.saturating_duration_since(batch[0].enqueued).as_secs_f64();
+            self.metrics.stages.record(Stage::BatchForm, form);
+            if let Some(mm) = &mm {
+                mm.stages.record(Stage::BatchForm, form);
+            }
+            if self.metrics.recorder.is_enabled() {
+                self.metrics.recorder.record(
+                    EventKind::BatchFormed,
+                    &model,
+                    0,
+                    batch_id,
+                    &format!("n={}", batch.len()),
+                );
+            }
             return Some(batch);
         }
     }

@@ -1,5 +1,6 @@
-//! Serving metrics: global counters + latency reservoir, plus a
-//! per-model breakdown for multi-model serving.
+//! Serving metrics: global counters + stage latency histograms, plus a
+//! per-model breakdown for multi-model serving and the embedded flight
+//! recorder.
 //!
 //! The global [`Metrics`] fields keep their historical meaning (every
 //! request/response/swap on the server, whichever model it routed to),
@@ -8,40 +9,86 @@
 //! per slot name; the server records each routed request into both the
 //! global aggregates and its model's breakdown, and `stats` reports the
 //! per-model view under a `"models"` object.
+//!
+//! Latency storage is a log-scale [`Histogram`] (see
+//! `util::histogram`), **cumulative over the process lifetime**: `n`
+//! counts every sample since startup and memory is fixed, unlike the
+//! old reservoir whose bulk drain silently discarded the oldest half.
+//! Per-request time is additionally attributed to pipeline [`Stage`]s
+//! (queue-wait, batch-formation, execute, reply-write) so `stats` and
+//! the Prometheus exposition can say *where* time went, not just how
+//! much.
 
+use crate::coordinator::trace::FlightRecorder;
+use crate::util::histogram::Histogram;
 use crate::util::stats::Summary;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, RwLock};
 use std::time::Instant;
 
-/// Bounded latency sample store shared by the global and per-model
-/// views: keeps the most recent 100k samples (one policy, two users —
-/// the cap/drain behavior cannot drift between them).
-#[derive(Default)]
-struct Reservoir(Mutex<Vec<f64>>);
+/// One stage of a request's pipeline. `name()` is the wire spelling
+/// used by `stats.stages`, the Prometheus `stage` label, and JSON logs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Request enqueue → its batch sealing (per request).
+    QueueWait,
+    /// Batch head enqueue → batch sealed (per batch).
+    BatchForm,
+    /// Worker executing `infer_batch` (per batch).
+    Execute,
+    /// Serialized reply hitting the socket write (per request).
+    ReplyWrite,
+}
 
-impl Reservoir {
-    fn push(&self, secs: f64) {
-        let mut l = self.0.lock().unwrap();
-        if l.len() >= 100_000 {
-            l.drain(..50_000);
-        }
-        l.push(secs);
-    }
+impl Stage {
+    pub const ALL: [Stage; 4] = [
+        Stage::QueueWait,
+        Stage::BatchForm,
+        Stage::Execute,
+        Stage::ReplyWrite,
+    ];
 
-    fn summary(&self) -> Option<Summary> {
-        let l = self.0.lock().unwrap();
-        if l.is_empty() {
-            None
-        } else {
-            Some(Summary::of(&l))
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::QueueWait => "queue_wait",
+            Stage::BatchForm => "batch_form",
+            Stage::Execute => "execute",
+            Stage::ReplyWrite => "reply_write",
         }
     }
 }
 
-/// Counters + latency reservoir for one model slot.
-#[derive(Default)]
+/// One latency histogram per pipeline stage.
+pub struct StageSet {
+    hists: [Histogram; 4],
+}
+
+impl Default for StageSet {
+    fn default() -> StageSet {
+        StageSet {
+            hists: [
+                Histogram::latency(),
+                Histogram::latency(),
+                Histogram::latency(),
+                Histogram::latency(),
+            ],
+        }
+    }
+}
+
+impl StageSet {
+    pub fn record(&self, stage: Stage, secs: f64) {
+        self.hists[stage as usize].record(secs);
+    }
+
+    /// Summary for one stage (None until its first sample).
+    pub fn summary(&self, stage: Stage) -> Option<Summary> {
+        self.hists[stage as usize].summary()
+    }
+}
+
+/// Counters + latency histograms for one model slot.
 pub struct ModelMetrics {
     pub requests: AtomicU64,
     pub responses: AtomicU64,
@@ -66,31 +113,62 @@ pub struct ModelMetrics {
     /// quarantined. A supplementary view: each is also counted in
     /// `errors`, so the conservation identity is unchanged.
     pub quarantined: AtomicU64,
-    latencies: Reservoir,
-    /// When this model last admitted an infer request (None = never).
-    last_used: Mutex<Option<Instant>>,
+    /// Per-stage latency breakdown for requests routed to this model.
+    pub stages: StageSet,
+    latencies: Histogram,
+    /// Construction time anchoring the `last_used` stamp.
+    epoch: Instant,
+    /// Milliseconds since `epoch` of the last routed infer request,
+    /// stored +1 so 0 means "never" — an atomic store on the admit
+    /// path where the old `Mutex<Option<Instant>>` took a lock.
+    last_used: AtomicU64,
+}
+
+impl Default for ModelMetrics {
+    fn default() -> ModelMetrics {
+        ModelMetrics {
+            requests: AtomicU64::new(0),
+            responses: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            expired: AtomicU64::new(0),
+            swaps: AtomicU64::new(0),
+            swap_failures: AtomicU64::new(0),
+            rollbacks: AtomicU64::new(0),
+            quarantined: AtomicU64::new(0),
+            stages: StageSet::default(),
+            latencies: Histogram::latency(),
+            epoch: Instant::now(),
+            last_used: AtomicU64::new(0),
+        }
+    }
 }
 
 impl ModelMetrics {
     pub fn record_latency(&self, secs: f64) {
         self.responses.fetch_add(1, Ordering::Relaxed);
-        self.latencies.push(secs);
+        self.latencies.record(secs);
     }
 
-    /// Stamp "an infer request routed here just now".
+    /// Stamp "an infer request routed here just now" (lock-free).
     pub fn touch(&self) {
-        *self.last_used.lock().unwrap() = Some(Instant::now());
+        let now = self.epoch.elapsed().as_millis() as u64;
+        self.last_used.store(now + 1, Ordering::Relaxed);
     }
 
     /// Seconds since the last routed infer request (None = never used).
     pub fn idle_secs(&self) -> Option<f64> {
-        self.last_used
-            .lock()
-            .unwrap()
-            .map(|t| t.elapsed().as_secs_f64())
+        match self.last_used.load(Ordering::Relaxed) {
+            0 => None,
+            stamp => {
+                let now = self.epoch.elapsed().as_millis() as u64;
+                Some(now.saturating_sub(stamp - 1) as f64 / 1e3)
+            }
+        }
     }
 
-    /// Latency summary (None until the first response).
+    /// Latency summary (None until the first response). Cumulative over
+    /// every response this model has ever served.
     pub fn latency_summary(&self) -> Option<Summary> {
         self.latencies.summary()
     }
@@ -132,7 +210,15 @@ pub struct Metrics {
     /// `requests == responses + errors + shed + expired` still holds
     /// exactly (same pattern as `panics`).
     pub quarantined: AtomicU64,
-    latencies: Reservoir,
+    /// Per-stage latency breakdown across every model.
+    pub stages: StageSet,
+    /// Rows-per-batch distribution (how full formed batches run).
+    pub batch_occupancy: Histogram,
+    /// The flight recorder (ring of lifecycle events). Embedded here so
+    /// every layer already holding the metrics handle can record
+    /// without new plumbing; capacity is reconfigured at serve startup.
+    pub recorder: FlightRecorder,
+    latencies: Histogram,
     /// Per-model breakdowns, keyed by slot name. Entries are created on
     /// first touch and survive unload/eviction (counters are history,
     /// not registry state).
@@ -157,7 +243,10 @@ impl Default for Metrics {
             evictions: AtomicU64::new(0),
             rollbacks: AtomicU64::new(0),
             quarantined: AtomicU64::new(0),
-            latencies: Reservoir::default(),
+            stages: StageSet::default(),
+            batch_occupancy: Histogram::occupancy(),
+            recorder: FlightRecorder::new(4096),
+            latencies: Histogram::latency(),
             models: RwLock::new(BTreeMap::new()),
             started: Instant::now(),
         }
@@ -195,7 +284,7 @@ impl Metrics {
 
     pub fn record_latency(&self, secs: f64) {
         self.responses.fetch_add(1, Ordering::Relaxed);
-        self.latencies.push(secs);
+        self.latencies.record(secs);
     }
 
     /// Count `n` request errors globally and, for routed requests
@@ -250,12 +339,18 @@ impl Metrics {
         }
     }
 
-    pub fn record_batch(&self, rows: usize) {
-        self.batches.fetch_add(1, Ordering::Relaxed);
+    /// Count one formed batch of `rows` requests; returns the minted
+    /// batch id (1-based, unique for the server's lifetime) used to
+    /// link `batch_formed`/`exec_*`/`reply` trace events.
+    pub fn record_batch(&self, rows: usize) -> u64 {
+        let id = self.batches.fetch_add(1, Ordering::Relaxed) + 1;
         self.batched_rows.fetch_add(rows as u64, Ordering::Relaxed);
+        self.batch_occupancy.record(rows as f64);
+        id
     }
 
-    /// Latency summary (None until the first response).
+    /// Latency summary (None until the first response). Cumulative over
+    /// every response since startup.
     pub fn latency_summary(&self) -> Option<Summary> {
         self.latencies.summary()
     }
@@ -344,5 +439,29 @@ mod tests {
         mm.touch();
         let idle = mm.idle_secs().unwrap();
         assert!(idle >= 0.0 && idle < 1.0, "{idle}");
+    }
+
+    #[test]
+    fn batch_ids_are_unique_and_occupancy_recorded() {
+        let m = Metrics::new();
+        assert_eq!(m.record_batch(4), 1);
+        assert_eq!(m.record_batch(8), 2);
+        assert_eq!(m.record_batch(1), 3);
+        let occ = m.batch_occupancy.summary().unwrap();
+        assert_eq!(occ.n, 3);
+        assert_eq!(occ.min, 1.0);
+        assert_eq!(occ.max, 8.0);
+    }
+
+    #[test]
+    fn stages_record_independently() {
+        let m = Metrics::new();
+        m.stages.record(Stage::QueueWait, 0.001);
+        m.stages.record(Stage::QueueWait, 0.002);
+        m.stages.record(Stage::Execute, 0.010);
+        assert_eq!(m.stages.summary(Stage::QueueWait).unwrap().n, 2);
+        assert_eq!(m.stages.summary(Stage::Execute).unwrap().n, 1);
+        assert!(m.stages.summary(Stage::BatchForm).is_none());
+        assert!(m.stages.summary(Stage::ReplyWrite).is_none());
     }
 }

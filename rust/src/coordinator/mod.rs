@@ -53,6 +53,15 @@
 //! the registry, replayed on startup (see
 //! [`crate::model_store::manifest`]).
 //!
+//! An **observability layer** spans the whole pipeline: a [`trace`]
+//! flight recorder captures structured request lifecycle events
+//! (drained via `{"op":"trace"}`), [`metrics`] attributes per-request
+//! time to pipeline stages with fixed-memory log-scale histograms
+//! (surfaced in `stats.stages` and the `{"op":"metrics"}` Prometheus
+//! exposition), and the kernel chunk profiler
+//! ([`crate::kernels::profile`], `{"op":"profile"}`) measures whether
+//! the GS plan's group-count-balanced chunks actually run balanced.
+//!
 //! Both backends compute the same forward graph
 //! (`relu(x@W1+b1) → GS spMM → +b2`); each is checked against a dense
 //! oracle of its own weights by integration tests. (A direct
@@ -63,10 +72,12 @@ pub mod batcher;
 pub mod faults;
 pub mod metrics;
 pub mod server;
+pub mod trace;
 pub mod uniform;
 
 pub use batcher::{Batcher, InferRequest, Reject, SubmitError};
-pub use metrics::{Metrics, ModelMetrics};
+pub use metrics::{Metrics, ModelMetrics, Stage};
+pub use trace::{EventKind, FlightRecorder, TraceEvent};
 pub use server::{serve, serve_slot, serve_store, Client, InferOutcome, ServerHandle};
 pub use uniform::UniformGs;
 

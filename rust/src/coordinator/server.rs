@@ -27,6 +27,17 @@
 //!   → `{"op":"models"}`
 //!   ← `{"default":"...","max_models":N,"models":{name:{version,state,
 //!      retained_versions,geometry,...}}}`
+//!   → `{"op":"trace","model":...,"event":...,"id":N,"limit":N}` (all
+//!      filters optional)
+//!   ← `{"ok":true,"enabled":B,"capacity":N,"dropped":K,"events":[...]}`
+//!     (the flight recorder's retained lifecycle events, oldest first)
+//!   → `{"op":"metrics"}`
+//!   ← `{"ok":true,"content_type":"text/plain; version=0.0.4",
+//!      "text":"..."}` (Prometheus text exposition of every counter,
+//!      gauge, and stage-latency summary)
+//!   → `{"op":"profile","reset":bool}` (reset optional)
+//!   ← `{"ok":true,"profiling":B,"plans":{fingerprint:{...}}}` (kernel
+//!      chunk load-imbalance summaries; see [`crate::kernels::profile`])
 //!
 //! Two serving modes share the batcher/worker machinery:
 //!
@@ -72,15 +83,26 @@
 //! every accepted load/swap/unload/rollback atomically rewrites a
 //! CRC-checked manifest so a restarted server resumes the exact
 //! pre-crash registry.
+//!
+//! **Observability:** every request drops lifecycle events into the
+//! flight recorder ([`ServeConfig::trace_capacity`]; drained via
+//! `{"op":"trace"}`), per-request time is attributed to pipeline stages
+//! (`stats.stages`, `{"op":"metrics"}`), and requests that exceed
+//! [`ServeConfig::slow_request_ms`] log their full retained trace.
+//! [`ServeConfig::log_json`] switches operational logging to one JSON
+//! object per line.
 
 use super::batcher::{Batcher, InferRequest, Reject};
 use super::faults;
-use super::metrics::{Metrics, ModelMetrics};
+use super::metrics::{Metrics, ModelMetrics, Stage, StageSet};
+use super::trace::{EventKind, TraceEvent};
 use super::{Engine, SparseModel};
+use crate::kernels::profile as kernel_profile;
 use crate::model_store::{
     ManifestWriter, ModelArtifact, ModelSlot, ModelStore, SlotConfig, SlotEvent,
 };
 use crate::util::json::Json;
+use crate::util::stats::Summary;
 use crate::util::threadpool::resolve_threads;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
@@ -266,6 +288,16 @@ pub struct ServeConfig {
     /// [`crate::model_store::manifest::restore`]) resumes the exact
     /// pre-crash registry. Ignored in factory mode (no registry).
     pub store_dir: Option<PathBuf>,
+    /// Flight-recorder capacity in events (0 disables tracing). Memory
+    /// is fixed at this many slots with overwrite-oldest semantics; the
+    /// hot path never blocks on a full ring.
+    pub trace_capacity: usize,
+    /// Emit operational log lines (deployment events, slow requests) as
+    /// one JSON object per line instead of prose.
+    pub log_json: bool,
+    /// Log the full retained lifecycle trace of any request whose total
+    /// handle time exceeds this many ms (0 = off).
+    pub slow_request_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -283,6 +315,9 @@ impl Default for ServeConfig {
             max_frame_bytes: 1 << 20,
             slot: SlotConfig::default(),
             store_dir: None,
+            trace_capacity: 4096,
+            log_json: false,
+            slow_request_ms: 0,
         }
     }
 }
@@ -352,21 +387,58 @@ fn run_batch(
     mm: Option<&ModelMetrics>,
 ) -> (u64, u64) {
     let inputs: Vec<Vec<f32>> = batch.iter().map(|r| r.input.clone()).collect();
+    let batch_id = batch[0].batch_id;
+    let model_name = batch[0].model.clone();
+    let trace_on = metrics.recorder.is_enabled();
+    if trace_on {
+        metrics.recorder.record(
+            EventKind::ExecStart,
+            &model_name,
+            0,
+            batch_id,
+            &format!("n={}", batch.len()),
+        );
+    }
+    let exec_end = |ok: u64, err: u64| {
+        if trace_on {
+            metrics.recorder.record(
+                EventKind::ExecEnd,
+                &model_name,
+                0,
+                batch_id,
+                &format!("ok={ok} err={err}"),
+            );
+        }
+    };
+    let reply_event = |req: &InferRequest, detail: &str| {
+        if trace_on {
+            metrics
+                .recorder
+                .record(EventKind::Reply, &req.model, req.id, req.batch_id, detail);
+        }
+    };
     // Supervised execution: a panicking kernel fails THIS batch's
     // requests and the worker survives to take the next batch — one bad
     // input or kernel bug must not permanently shrink the worker pool.
     // The fault hook sits inside the guard so injected panics exercise
     // the real recovery path.
+    let exec_started = Instant::now();
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         faults::on_batch_execute();
         model.infer_batch(&inputs)
     }));
+    let exec_secs = exec_started.elapsed().as_secs_f64();
+    metrics.stages.record(Stage::Execute, exec_secs);
+    if let Some(mm) = mm {
+        mm.stages.record(Stage::Execute, exec_secs);
+    }
     let n = batch.len() as u64;
     let result = match result {
         Ok(r) => r,
         Err(panic) => {
             metrics.panics.fetch_add(1, Ordering::Relaxed);
             metrics.count_errors(&batch[0].model, n);
+            exec_end(0, n);
             let msg = panic
                 .downcast_ref::<&'static str>()
                 .copied()
@@ -374,6 +446,7 @@ fn run_batch(
                 .unwrap_or("<non-string panic payload>");
             let why = Reject::error(format!("internal error: worker panicked: {msg}"));
             for req in batch {
+                reply_event(&req, "error: panic");
                 let _ = req.tx.send((req.id, Err(why.clone())));
             }
             return (0, n);
@@ -381,12 +454,14 @@ fn run_batch(
     };
     match result {
         Ok(outputs) => {
+            exec_end(n, 0);
             for (req, out) in batch.into_iter().zip(outputs) {
                 let secs = req.enqueued.elapsed().as_secs_f64();
                 metrics.record_latency(secs);
                 if let Some(mm) = mm {
                     mm.record_latency(secs);
                 }
+                reply_event(&req, "");
                 let _ = req.tx.send((req.id, Ok(out)));
             }
             (n, 0)
@@ -395,8 +470,10 @@ fn run_batch(
             // Routed batches carry their model name; factory-mode
             // batches have "" and only count globally.
             metrics.count_errors(&batch[0].model, n);
+            exec_end(0, n);
             let msg = format!("{e:#}");
             for req in batch {
+                reply_event(&req, "error");
                 let _ = req.tx.send((req.id, Err(Reject::error(msg.clone()))));
             }
             (0, n)
@@ -414,26 +491,64 @@ fn apply_slot_events(
     name: &str,
     metrics: &Metrics,
     manifest: Option<&ManifestWriter>,
+    log_json: bool,
 ) {
+    let log = |event: &str, detail: &str| {
+        if log_json {
+            eprintln!(
+                "{}",
+                Json::obj(vec![
+                    ("event", Json::Str(event.into())),
+                    ("model", Json::Str(name.into())),
+                    ("detail", Json::Str(detail.into())),
+                ])
+            );
+        } else {
+            eprintln!("model \"{name}\": {detail}");
+        }
+    };
     for event in events {
         match event {
             SlotEvent::CanaryPromoted { version } => {
-                eprintln!("model \"{name}\": canary v{version} promoted to serving");
+                metrics
+                    .recorder
+                    .record(EventKind::CanaryPromoted, name, 0, 0, &format!("v{version}"));
+                log(
+                    "canary_promoted",
+                    &format!("canary v{version} promoted to serving"),
+                );
             }
             SlotEvent::CanaryRolledBack { from, to, reason } => {
                 metrics.count_rollback(name);
-                eprintln!("model \"{name}\": canary v{from} auto-rolled back to v{to}: {reason}");
+                metrics.recorder.record(
+                    EventKind::CanaryRolledBack,
+                    name,
+                    0,
+                    0,
+                    &format!("v{from} -> v{to}: {reason}"),
+                );
+                log(
+                    "canary_rolled_back",
+                    &format!("canary v{from} auto-rolled back to v{to}: {reason}"),
+                );
                 if let Some(m) = manifest {
                     if let Err(e) = m.persist() {
-                        eprintln!("model \"{name}\": manifest persist after auto-rollback: {e:#}");
+                        log(
+                            "manifest_error",
+                            &format!("manifest persist after auto-rollback: {e:#}"),
+                        );
                     }
                 }
             }
             SlotEvent::Quarantined { reason } => {
-                eprintln!("model \"{name}\": quarantined: {reason}");
+                metrics
+                    .recorder
+                    .record(EventKind::Quarantined, name, 0, 0, reason);
+                log("quarantined", &format!("quarantined: {reason}"));
             }
             SlotEvent::Recovered => {
-                eprintln!("model \"{name}\": probe succeeded; quarantine lifted");
+                metrics.recorder.record(EventKind::Recovered, name, 0, 0, "");
+                log("recovered", "probe succeeded; quarantine lifted");
             }
         }
     }
@@ -453,6 +568,9 @@ fn serve_impl(provider: Provider, metrics: Arc<Metrics>, cfg: ServeConfig) -> Re
     }
     let listener = TcpListener::bind(&cfg.bind).context("bind")?;
     let addr = listener.local_addr()?;
+    // Size the flight recorder before any traffic can record into it
+    // (0 disables tracing entirely; see `--no-trace`).
+    metrics.recorder.configure(cfg.trace_capacity);
     let batcher = Arc::new(Batcher::new(
         cfg.max_batch,
         Duration::from_millis(cfg.window_ms),
@@ -482,6 +600,7 @@ fn serve_impl(provider: Provider, metrics: Arc<Metrics>, cfg: ServeConfig) -> Re
             let batcher = Arc::clone(&batcher);
             let metrics = Arc::clone(&metrics);
             let manifest = manifest.clone();
+            let log_json = cfg.log_json;
             let worker_provider = match &provider {
                 Provider::Store { store, default, threads } => Provider::Store {
                     store: Arc::clone(store),
@@ -525,7 +644,13 @@ fn serve_impl(provider: Provider, metrics: Arc<Metrics>, cfg: ServeConfig) -> Re
                             // version so stragglers from an older
                             // generation cannot judge the new one.
                             let events = slot.observe_execution(vm.version, ok, err, probe);
-                            apply_slot_events(&events, &name, &metrics, manifest.as_deref());
+                            apply_slot_events(
+                                &events,
+                                &name,
+                                &metrics,
+                                manifest.as_deref(),
+                                log_json,
+                            );
                         }
                     }
                     Provider::Factory(factory) => {
@@ -566,6 +691,8 @@ fn serve_impl(provider: Provider, metrics: Arc<Metrics>, cfg: ServeConfig) -> Re
             slot_cfg: cfg.slot,
             manifest: manifest.clone(),
             conns: Arc::clone(&conns),
+            log_json: cfg.log_json,
+            slow_request_ms: cfg.slow_request_ms,
         });
         let max_conns = cfg.max_conns;
         thread::Builder::new()
@@ -646,6 +773,10 @@ struct ConnCtx {
     manifest: Option<Arc<ManifestWriter>>,
     /// Live-connection registry (the `connections` stats gauge).
     conns: Arc<ConnTracker>,
+    /// Operational log lines as JSON objects instead of prose.
+    log_json: bool,
+    /// Slow-request trace-logging threshold in ms (0 = off).
+    slow_request_ms: u64,
 }
 
 /// Re-persist the durable registry after an accepted deploy op. The
@@ -774,6 +905,7 @@ fn handle_connection(
         if line.trim().is_empty() {
             continue;
         }
+        let mut infer_meta: Option<ReplyMeta> = None;
         let reply = match Json::parse(&line) {
             Err(e) => err_json(format!("bad json: {e}")),
             Ok(msg) => match msg.get("op").and_then(Json::as_str) {
@@ -790,21 +922,156 @@ fn handle_connection(
                 Some("load") => handle_load(&msg, ctx, metrics),
                 Some("unload") => handle_unload(&msg, ctx),
                 Some("rollback") => handle_rollback(&msg, ctx, metrics),
-                Some("infer") => handle_infer(&msg, batcher, metrics, ctx),
+                Some("infer") => handle_infer(&msg, batcher, metrics, ctx, &mut infer_meta),
+                Some("trace") => handle_trace(&msg, metrics),
+                Some("metrics") => Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    (
+                        "content_type",
+                        Json::Str("text/plain; version=0.0.4".into()),
+                    ),
+                    ("text", Json::Str(prometheus_text(metrics, batcher, ctx))),
+                ]),
+                Some("profile") => profile_json(&msg),
                 _ => err_json("unknown op".into()),
             },
         };
+        let write_started = Instant::now();
         writer.write_all(reply.to_string().as_bytes())?;
         writer.write_all(b"\n")?;
+        // An admitted infer finishes its stage accounting only once its
+        // reply actually hit the socket.
+        if let Some(meta) = infer_meta {
+            let wsecs = write_started.elapsed().as_secs_f64();
+            metrics.stages.record(Stage::ReplyWrite, wsecs);
+            if let Some(mm) = &meta.mm {
+                mm.stages.record(Stage::ReplyWrite, wsecs);
+            }
+            let total_ms = meta.started.elapsed().as_secs_f64() * 1e3;
+            if ctx.slow_request_ms > 0 && total_ms > ctx.slow_request_ms as f64 {
+                log_slow_request(metrics, &meta, total_ms, ctx.log_json);
+            }
+        }
     }
     Ok(())
+}
+
+/// What the reply path needs to finish an admitted infer's accounting
+/// after its reply hits the socket: the reply-write stage sample and
+/// the slow-request check. Requests rejected before admission never
+/// produce one.
+struct ReplyMeta {
+    id: u64,
+    model: String,
+    /// The routed model's breakdown (None in factory mode).
+    mm: Option<Arc<ModelMetrics>>,
+    /// When the connection thread started handling this request.
+    started: Instant,
+}
+
+/// A request outlived `slow_request_ms`: log one line carrying its full
+/// retained lifecycle from the flight recorder — its request-scoped
+/// events plus the batch-scoped events of any batch it rode. Request
+/// ids are client-chosen correlation hints, so a shared id merges the
+/// traces of requests using it (documented in [`super::trace`]).
+fn log_slow_request(metrics: &Metrics, meta: &ReplyMeta, total_ms: f64, log_json: bool) {
+    let events = metrics.recorder.snapshot();
+    let batch_ids: Vec<u64> = events
+        .iter()
+        .filter(|e| e.request_id == meta.id && e.batch_id != 0)
+        .map(|e| e.batch_id)
+        .collect();
+    let mine: Vec<&TraceEvent> = events
+        .iter()
+        .filter(|e| {
+            e.request_id == meta.id || (e.batch_id != 0 && batch_ids.contains(&e.batch_id))
+        })
+        .collect();
+    if log_json {
+        eprintln!(
+            "{}",
+            Json::obj(vec![
+                ("event", Json::Str("slow_request".into())),
+                ("id", Json::Num(meta.id as f64)),
+                ("model", Json::Str(meta.model.clone())),
+                ("total_ms", Json::Num(total_ms)),
+                ("trace", Json::Arr(mine.iter().map(|e| e.to_json()).collect())),
+            ])
+        );
+    } else {
+        eprintln!(
+            "slow request id={} model=\"{}\": {total_ms:.1} ms; {} trace events:",
+            meta.id,
+            meta.model,
+            mine.len()
+        );
+        for e in &mine {
+            eprintln!("  {}", e.to_json());
+        }
+    }
+}
+
+/// `{"op":"trace"}`: the flight recorder's retained events, oldest
+/// first, optionally narrowed by `"model"`, `"event"` (wire spelling,
+/// e.g. `"batch_formed"`), `"id"` (request id), and `"limit"` (keep
+/// only the newest N after filtering).
+fn handle_trace(msg: &Json, metrics: &Metrics) -> Json {
+    let rec = &metrics.recorder;
+    let mut events = rec.snapshot();
+    if let Some(model) = msg.get("model").and_then(Json::as_str) {
+        events.retain(|e| e.model == model);
+    }
+    if let Some(kind) = msg.get("event").and_then(Json::as_str) {
+        events.retain(|e| e.kind.name() == kind);
+    }
+    if let Some(id) = msg.get("id").and_then(Json::as_f64) {
+        events.retain(|e| e.request_id == id as u64);
+    }
+    if let Some(limit) = msg.get("limit").and_then(Json::as_f64) {
+        let keep = limit.max(0.0) as usize;
+        if events.len() > keep {
+            events.drain(..events.len() - keep);
+        }
+    }
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("enabled", Json::Bool(rec.is_enabled())),
+        ("capacity", Json::Num(rec.capacity() as f64)),
+        ("dropped", Json::Num(rec.dropped() as f64)),
+        (
+            "events",
+            Json::Arr(events.iter().map(TraceEvent::to_json).collect()),
+        ),
+    ])
+}
+
+/// `{"op":"profile"}`: kernel chunk load-imbalance summaries keyed by
+/// plan geometry fingerprint (see [`crate::kernels::profile`]). With
+/// `"reset":true` the aggregates are cleared after being reported.
+fn profile_json(msg: &Json) -> Json {
+    let plans = kernel_profile::snapshot_json();
+    if msg.get("reset").and_then(Json::as_bool) == Some(true) {
+        kernel_profile::reset();
+    }
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("profiling", Json::Bool(kernel_profile::enabled())),
+        ("plans", plans),
+    ])
 }
 
 fn default_slot(ctx: &ConnCtx) -> Option<Arc<ModelSlot>> {
     ctx.store.as_ref()?.get(ctx.default_model.as_deref()?)
 }
 
-fn handle_infer(msg: &Json, batcher: &Batcher, metrics: &Metrics, ctx: &ConnCtx) -> Json {
+fn handle_infer(
+    msg: &Json,
+    batcher: &Batcher,
+    metrics: &Metrics,
+    ctx: &ConnCtx,
+    meta: &mut Option<ReplyMeta>,
+) -> Json {
+    let started = Instant::now();
     let id = msg.get("id").and_then(Json::as_f64).unwrap_or(0.0) as u64;
     let with_id = |mut fields: Vec<(&str, Json)>| {
         fields.insert(0, ("id", Json::Num(id as f64)));
@@ -857,6 +1124,7 @@ fn handle_infer(msg: &Json, batcher: &Batcher, metrics: &Metrics, ctx: &ConnCtx)
             )]);
         }
     };
+    let mut route_mm = None;
     if let Some(store) = &ctx.store {
         // Touch-on-admit: the validated request bumps LRU recency (and
         // re-resolves the slot in case a concurrent load replaced it —
@@ -889,6 +1157,7 @@ fn handle_infer(msg: &Json, batcher: &Batcher, metrics: &Metrics, ctx: &ConnCtx)
         let mm = metrics.model(&model_name);
         mm.requests.fetch_add(1, Ordering::Relaxed);
         mm.touch();
+        route_mm = Some(mm);
     }
     // Queue-wait budget: the request's own "deadline_ms" wins over the
     // server default; an explicit 0 opts out. A present-but-invalid
@@ -908,6 +1177,17 @@ fn handle_infer(msg: &Json, batcher: &Batcher, metrics: &Metrics, ctx: &ConnCtx)
     };
     let (tx, rx) = channel();
     let cap = slot.as_ref().map_or(usize::MAX, |s| s.batch_capacity());
+    if metrics.recorder.is_enabled() {
+        metrics
+            .recorder
+            .record(EventKind::Admit, &model_name, id, 0, "");
+    }
+    *meta = Some(ReplyMeta {
+        id,
+        model: model_name.clone(),
+        mm: route_mm,
+        started,
+    });
     // A refused submit (overload shed, shutdown) has already failed the
     // request's tx with a structured Reject, so the reply path below is
     // uniform — the Result here is deliberately not consulted.
@@ -919,6 +1199,7 @@ fn handle_infer(msg: &Json, batcher: &Batcher, metrics: &Metrics, ctx: &ConnCtx)
         model: model_name,
         slot,
         cap,
+        batch_id: 0,
         deadline_ms: if deadline_ms == 0 { None } else { Some(deadline_ms) },
         probe: false,
     });
@@ -1008,6 +1289,17 @@ fn handle_swap(msg: &Json, ctx: &ConnCtx, metrics: &Metrics) -> Json {
             metrics.swaps.fetch_add(1, Ordering::Relaxed);
             mm.swaps.fetch_add(1, Ordering::Relaxed);
             persist_manifest(ctx, "swap");
+            metrics.recorder.record(
+                EventKind::Swap,
+                name,
+                0,
+                0,
+                &format!(
+                    "v{}{}",
+                    vm.version,
+                    if canary.is_some() { " canary" } else { "" }
+                ),
+            );
             // Report the generation *this* request installed, not
             // whatever a concurrent later swap made current.
             let mut fields = vec![
@@ -1174,6 +1466,9 @@ fn handle_rollback(msg: &Json, ctx: &ConnCtx, metrics: &Metrics) -> Json {
         Ok(vm) => {
             metrics.count_rollback(name);
             persist_manifest(ctx, "rollback");
+            metrics
+                .recorder
+                .record(EventKind::Rollback, name, 0, 0, &format!("v{}", vm.version));
             let mut fields = vec![
                 ("ok", Json::Bool(true)),
                 ("model", Json::Str(name.into())),
@@ -1222,6 +1517,233 @@ fn models_json(ctx: &ConnCtx) -> Json {
         ("max_models", Json::Num(store.max_models() as f64)),
         ("models", Json::Obj(models.into_iter().collect())),
     ])
+}
+
+/// The per-stage latency breakdown (`stats.stages`): sample count and
+/// p50/p95/p99/mean (ms) per pipeline stage; stages with no samples
+/// yet are omitted.
+fn stages_json(stages: &StageSet) -> Json {
+    let mut fields = Vec::new();
+    for stage in Stage::ALL {
+        if let Some(s) = stages.summary(stage) {
+            fields.push((
+                stage.name(),
+                Json::obj(vec![
+                    ("n", Json::Num(s.n as f64)),
+                    ("p50_ms", Json::Num(s.p50 * 1e3)),
+                    ("p95_ms", Json::Num(s.p95 * 1e3)),
+                    ("p99_ms", Json::Num(s.p99 * 1e3)),
+                    ("mean_ms", Json::Num(s.mean * 1e3)),
+                ]),
+            ));
+        }
+    }
+    Json::obj(fields)
+}
+
+/// `{"op":"metrics"}`: the whole metrics surface in Prometheus text
+/// exposition format 0.0.4 — counters (global series plus one
+/// `{model="..."}` series per touched model), gauges, and
+/// quantile-labelled summaries for request latency, per-stage latency,
+/// and batch occupancy. Emitted by hand: the format is line-oriented
+/// text and the crate takes no dependencies.
+fn prometheus_text(metrics: &Metrics, batcher: &Batcher, ctx: &ConnCtx) -> String {
+    use std::fmt::Write as _;
+
+    fn esc(v: &str) -> String {
+        v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+    }
+
+    fn labels(pairs: &[(&str, &str)]) -> String {
+        if pairs.is_empty() {
+            return String::new();
+        }
+        let body: Vec<String> = pairs
+            .iter()
+            .map(|(k, v)| format!("{k}=\"{}\"", esc(v)))
+            .collect();
+        format!("{{{}}}", body.join(","))
+    }
+
+    /// One summary-typed series: quantile samples + `_sum`/`_count`.
+    /// The sum is reconstructed as `mean * n` (the histogram keeps the
+    /// exact sum, but only the summary crosses this interface).
+    fn summary_lines(out: &mut String, name: &str, base: &[(&str, &str)], s: &Summary) {
+        for (q, v) in [("0.5", s.p50), ("0.95", s.p95), ("0.99", s.p99)] {
+            let mut pairs = base.to_vec();
+            pairs.push(("quantile", q));
+            let _ = writeln!(out, "{name}{} {v}", labels(&pairs));
+        }
+        let _ = writeln!(out, "{name}_sum{} {}", labels(base), s.mean * s.n as f64);
+        let _ = writeln!(out, "{name}_count{} {}", labels(base), s.n);
+    }
+
+    let (queue_depth, queue_depths) = batcher.queue_depths();
+    let models = metrics.model_snapshot();
+    let mut out = String::new();
+
+    type PerModel = fn(&ModelMetrics) -> &AtomicU64;
+    let counters: [(&str, &str, u64, Option<PerModel>); 13] = [
+        (
+            "gs_requests_total",
+            "Inference requests admitted.",
+            metrics.requests.load(Ordering::Relaxed),
+            Some(|m| &m.requests),
+        ),
+        (
+            "gs_responses_total",
+            "Successful inference replies.",
+            metrics.responses.load(Ordering::Relaxed),
+            Some(|m| &m.responses),
+        ),
+        (
+            "gs_errors_total",
+            "Requests failed with an error reply.",
+            metrics.errors.load(Ordering::Relaxed),
+            Some(|m| &m.errors),
+        ),
+        (
+            "gs_shed_total",
+            "Requests shed by bounded admission.",
+            metrics.shed.load(Ordering::Relaxed),
+            Some(|m| &m.shed),
+        ),
+        (
+            "gs_expired_total",
+            "Requests failed on their queue-wait deadline.",
+            metrics.expired.load(Ordering::Relaxed),
+            Some(|m| &m.expired),
+        ),
+        (
+            "gs_panics_total",
+            "Batch executions that panicked (caught).",
+            metrics.panics.load(Ordering::Relaxed),
+            None,
+        ),
+        (
+            "gs_swaps_total",
+            "Successful model hot swaps.",
+            metrics.swaps.load(Ordering::Relaxed),
+            Some(|m| &m.swaps),
+        ),
+        (
+            "gs_swap_failures_total",
+            "Rejected or failed swap attempts.",
+            metrics.swap_failures.load(Ordering::Relaxed),
+            Some(|m| &m.swap_failures),
+        ),
+        (
+            "gs_evictions_total",
+            "Models LRU-evicted from the store.",
+            metrics.evictions.load(Ordering::Relaxed),
+            None,
+        ),
+        (
+            "gs_rollbacks_total",
+            "Slot rollbacks (manual and canary).",
+            metrics.rollbacks.load(Ordering::Relaxed),
+            Some(|m| &m.rollbacks),
+        ),
+        (
+            "gs_quarantined_total",
+            "Requests fast-failed under quarantine.",
+            metrics.quarantined.load(Ordering::Relaxed),
+            Some(|m| &m.quarantined),
+        ),
+        (
+            "gs_batches_total",
+            "Batches formed.",
+            metrics.batches.load(Ordering::Relaxed),
+            None,
+        ),
+        (
+            "gs_batched_rows_total",
+            "Requests carried by formed batches.",
+            metrics.batched_rows.load(Ordering::Relaxed),
+            None,
+        ),
+    ];
+    for (name, help, global, per) in counters {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} counter");
+        let _ = writeln!(out, "{name} {global}");
+        if let Some(f) = per {
+            for (model, m) in &models {
+                let _ = writeln!(
+                    out,
+                    "{name}{} {}",
+                    labels(&[("model", model)]),
+                    f(m).load(Ordering::Relaxed)
+                );
+            }
+        }
+    }
+
+    let _ = writeln!(out, "# HELP gs_queue_depth Requests waiting in the batcher.");
+    let _ = writeln!(out, "# TYPE gs_queue_depth gauge");
+    let _ = writeln!(out, "gs_queue_depth {queue_depth}");
+    for (model, depth) in &queue_depths {
+        let _ = writeln!(out, "gs_queue_depth{} {depth}", labels(&[("model", model)]));
+    }
+    let _ = writeln!(out, "# HELP gs_connections Open client connections.");
+    let _ = writeln!(out, "# TYPE gs_connections gauge");
+    let _ = writeln!(
+        out,
+        "gs_connections {}",
+        ctx.conns.live.load(Ordering::SeqCst)
+    );
+    let _ = writeln!(out, "# HELP gs_uptime_seconds Seconds since server start.");
+    let _ = writeln!(out, "# TYPE gs_uptime_seconds gauge");
+    let _ = writeln!(out, "gs_uptime_seconds {}", metrics.uptime_ms() as f64 / 1e3);
+
+    let _ = writeln!(
+        out,
+        "# HELP gs_request_latency_seconds End-to-end request latency (enqueue to result)."
+    );
+    let _ = writeln!(out, "# TYPE gs_request_latency_seconds summary");
+    if let Some(s) = metrics.latency_summary() {
+        summary_lines(&mut out, "gs_request_latency_seconds", &[], &s);
+    }
+    for (model, m) in &models {
+        if let Some(s) = m.latency_summary() {
+            summary_lines(
+                &mut out,
+                "gs_request_latency_seconds",
+                &[("model", model)],
+                &s,
+            );
+        }
+    }
+
+    let _ = writeln!(
+        out,
+        "# HELP gs_stage_seconds Request latency attributed to one pipeline stage."
+    );
+    let _ = writeln!(out, "# TYPE gs_stage_seconds summary");
+    for stage in Stage::ALL {
+        if let Some(s) = metrics.stages.summary(stage) {
+            summary_lines(&mut out, "gs_stage_seconds", &[("stage", stage.name())], &s);
+        }
+    }
+    for (model, m) in &models {
+        for stage in Stage::ALL {
+            if let Some(s) = m.stages.summary(stage) {
+                summary_lines(
+                    &mut out,
+                    "gs_stage_seconds",
+                    &[("model", model), ("stage", stage.name())],
+                    &s,
+                );
+            }
+        }
+    }
+
+    let _ = writeln!(out, "# HELP gs_batch_occupancy Rows per formed batch.");
+    let _ = writeln!(out, "# TYPE gs_batch_occupancy summary");
+    if let Some(s) = metrics.batch_occupancy.summary() {
+        summary_lines(&mut out, "gs_batch_occupancy", &[], &s);
+    }
+    out
 }
 
 fn stats_json(metrics: &Metrics, batcher: &Batcher, ctx: &ConnCtx) -> Json {
@@ -1297,6 +1819,20 @@ fn stats_json(metrics: &Metrics, batcher: &Batcher, ctx: &ConnCtx) -> Json {
         fields.push(("p95_ms", Json::Num(s.p95 * 1e3)));
         fields.push(("mean_ms", Json::Num(s.mean * 1e3)));
     }
+    fields.push(("stages", stages_json(&metrics.stages)));
+    if let Some(s) = metrics.batch_occupancy.summary() {
+        fields.push((
+            "batch_occupancy",
+            Json::obj(vec![
+                ("n", Json::Num(s.n as f64)),
+                ("p50", Json::Num(s.p50)),
+                ("p95", Json::Num(s.p95)),
+                ("min", Json::Num(s.min)),
+                ("max", Json::Num(s.max)),
+                ("mean", Json::Num(s.mean)),
+            ]),
+        ));
+    }
     // Per-slot breakdown: every resident model plus every model that
     // ever took traffic (counters are history — an eviction or unload
     // must not erase a model's request/latency record from `stats`).
@@ -1356,6 +1892,7 @@ fn stats_json(metrics: &Metrics, batcher: &Batcher, ctx: &ConnCtx) -> Json {
                     mf.push(("p95_ms", Json::Num(s.p95 * 1e3)));
                     mf.push(("mean_ms", Json::Num(s.mean * 1e3)));
                 }
+                mf.push(("stages", stages_json(&m.stages)));
             }
             models.push((name, Json::obj(mf)));
         }
@@ -1525,6 +2062,39 @@ impl Client {
 
     pub fn stats(&mut self) -> Result<Json> {
         self.roundtrip(Json::obj(vec![("op", "stats".into())]))
+    }
+
+    /// The flight recorder's retained lifecycle events
+    /// (`{"op":"trace"}`). `filter` entries are passed through as
+    /// protocol fields, e.g. `&[("model", Json::Str("m".into())),
+    /// ("limit", Json::Num(50.0))]`; empty = everything retained.
+    pub fn trace(&mut self, filter: &[(&str, Json)]) -> Result<Json> {
+        let mut fields = vec![("op", Json::Str("trace".into()))];
+        fields.extend(filter.iter().map(|(k, v)| (*k, v.clone())));
+        let r = self.roundtrip(Json::obj(fields))?;
+        if let Some(err) = r.get("error").and_then(Json::as_str) {
+            anyhow::bail!("trace failed: {err}");
+        }
+        Ok(r)
+    }
+
+    /// The Prometheus text exposition (`{"op":"metrics"}`), unwrapped
+    /// from its JSON envelope.
+    pub fn metrics_text(&mut self) -> Result<String> {
+        let r = self.roundtrip(Json::obj(vec![("op", "metrics".into())]))?;
+        r.get("text")
+            .and_then(Json::as_str)
+            .map(String::from)
+            .ok_or_else(|| anyhow::anyhow!("malformed metrics response"))
+    }
+
+    /// Kernel chunk load-imbalance profiles (`{"op":"profile"}`).
+    pub fn profile(&mut self) -> Result<Json> {
+        let r = self.roundtrip(Json::obj(vec![("op", "profile".into())]))?;
+        if let Some(err) = r.get("error").and_then(Json::as_str) {
+            anyhow::bail!("profile failed: {err}");
+        }
+        Ok(r)
     }
 
     /// The model registry listing (`{"op":"models"}`).

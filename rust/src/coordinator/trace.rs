@@ -1,0 +1,342 @@
+//! Flight recorder: a bounded ring buffer of structured request
+//! lifecycle events, drained over the protocol via `{"op":"trace"}`.
+//!
+//! Every stage of a request's life — admission, enqueue, batch
+//! formation, execution, reply — plus shedding, expiry, and deployment
+//! transitions (quarantine, canary, swap, rollback) drops one
+//! [`TraceEvent`] stamped with a monotonic microsecond clock and the
+//! request/batch ids involved. The buffer has **overwrite-oldest**
+//! semantics: memory is fixed at `capacity` slots and a writer *never*
+//! blocks on a full buffer — it claims the next sequence number with
+//! one atomic increment and overwrites that slot. The per-slot mutex
+//! only serializes two writers that collide on the same slot (capacity
+//! apart in sequence) or a writer with a concurrent snapshot, both
+//! bounded critical sections of a few copies.
+//!
+//! Request ids are client-chosen (the protocol's `"id"` field), so they
+//! are correlation hints, not unique keys — two in-flight requests that
+//! share an id trace interleaved. Batch ids are server-minted and
+//! unique.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, RwLock};
+use std::time::Instant;
+
+/// What happened. `name()` is the wire spelling used by the
+/// `{"op":"trace"}` event filter and the JSON log stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// Request validated and admitted toward the batcher.
+    Admit,
+    /// Request joined its model's sub-queue.
+    Enqueue,
+    /// Request shed by bounded admission (overload).
+    Shed,
+    /// Request outwaited its deadline and was failed at formation.
+    Expired,
+    /// A model-homogeneous batch was sealed (batch id minted here).
+    BatchFormed,
+    /// Worker began executing a batch.
+    ExecStart,
+    /// Worker finished executing a batch.
+    ExecEnd,
+    /// A request's result (or structured failure) was delivered.
+    Reply,
+    /// Circuit breaker tripped: the slot fast-fails at admission.
+    Quarantined,
+    /// A half-open probe succeeded; the slot serves again.
+    Recovered,
+    /// A canary generation survived its watch and was promoted.
+    CanaryPromoted,
+    /// A canary generation breached its error budget and rolled back.
+    CanaryRolledBack,
+    /// A generation was hot-swapped in (`swap`/`load` on a live name).
+    Swap,
+    /// An operator rollback restored a retained generation.
+    Rollback,
+}
+
+impl EventKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Admit => "admit",
+            EventKind::Enqueue => "enqueue",
+            EventKind::Shed => "shed",
+            EventKind::Expired => "expired",
+            EventKind::BatchFormed => "batch_formed",
+            EventKind::ExecStart => "exec_start",
+            EventKind::ExecEnd => "exec_end",
+            EventKind::Reply => "reply",
+            EventKind::Quarantined => "quarantined",
+            EventKind::Recovered => "recovered",
+            EventKind::CanaryPromoted => "canary_promoted",
+            EventKind::CanaryRolledBack => "canary_rolled_back",
+            EventKind::Swap => "swap",
+            EventKind::Rollback => "rollback",
+        }
+    }
+}
+
+/// One recorded lifecycle event.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// Monotonic sequence number (1-based; gaps mean overwritten).
+    pub seq: u64,
+    /// Microseconds since the recorder was created.
+    pub t_us: u64,
+    pub kind: EventKind,
+    /// Slot name ("" for unrouted factory-mode traffic).
+    pub model: String,
+    /// Client-chosen request id (0 = not request-scoped).
+    pub request_id: u64,
+    /// Server-minted batch id (0 = not batch-scoped).
+    pub batch_id: u64,
+    /// Free-form context (row counts, reasons, versions).
+    pub detail: String,
+}
+
+impl TraceEvent {
+    /// Wire shape for `{"op":"trace"}` replies and `--log-json` lines.
+    /// Zero ids and empty details are omitted.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("seq", Json::Num(self.seq as f64)),
+            ("t_us", Json::Num(self.t_us as f64)),
+            ("event", Json::Str(self.kind.name().into())),
+        ];
+        if !self.model.is_empty() {
+            fields.push(("model", Json::Str(self.model.clone())));
+        }
+        if self.request_id != 0 {
+            fields.push(("request_id", Json::Num(self.request_id as f64)));
+        }
+        if self.batch_id != 0 {
+            fields.push(("batch_id", Json::Num(self.batch_id as f64)));
+        }
+        if !self.detail.is_empty() {
+            fields.push(("detail", Json::Str(self.detail.clone())));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// The bounded ring buffer. Embedded in [`super::metrics::Metrics`] so
+/// every serving layer that already carries the metrics handle can
+/// record without new plumbing.
+pub struct FlightRecorder {
+    epoch: Instant,
+    /// Total events ever recorded; slot = (seq - 1) % capacity.
+    seq: AtomicU64,
+    enabled: AtomicBool,
+    /// The slot vector is only swapped by [`FlightRecorder::configure`]
+    /// (server startup); the record path takes the read lock, which is
+    /// uncontended everywhere else.
+    slots: RwLock<Vec<Mutex<Option<TraceEvent>>>>,
+}
+
+impl FlightRecorder {
+    /// A recorder with `capacity` slots (0 = disabled: recording is a
+    /// cheap no-op until `configure` grows it).
+    pub fn new(capacity: usize) -> FlightRecorder {
+        FlightRecorder {
+            epoch: Instant::now(),
+            seq: AtomicU64::new(0),
+            enabled: AtomicBool::new(capacity > 0),
+            slots: RwLock::new((0..capacity).map(|_| Mutex::new(None)).collect()),
+        }
+    }
+
+    /// Replace the ring with `capacity` fresh slots (0 disables).
+    /// Previously recorded events are discarded; the sequence counter
+    /// keeps running so `dropped` accounting stays monotonic.
+    pub fn configure(&self, capacity: usize) {
+        *self.slots.write().unwrap() = (0..capacity).map(|_| Mutex::new(None)).collect();
+        self.enabled.store(capacity > 0, Ordering::Relaxed);
+    }
+
+    /// Runtime kill switch (capacity stays allocated).
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed) && self.capacity() > 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.read().unwrap().len()
+    }
+
+    /// Total events recorded since startup (including overwritten).
+    pub fn recorded(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    /// Drop one event into the ring (overwrites the oldest at
+    /// capacity; never blocks on a full buffer).
+    pub fn record(
+        &self,
+        kind: EventKind,
+        model: &str,
+        request_id: u64,
+        batch_id: u64,
+        detail: &str,
+    ) {
+        if !self.enabled.load(Ordering::Relaxed) {
+            return;
+        }
+        let slots = self.slots.read().unwrap();
+        if slots.is_empty() {
+            return;
+        }
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed) + 1;
+        let event = TraceEvent {
+            seq,
+            t_us: self.epoch.elapsed().as_micros() as u64,
+            kind,
+            model: model.to_string(),
+            request_id,
+            batch_id,
+            detail: detail.to_string(),
+        };
+        *slots[(seq as usize - 1) % slots.len()].lock().unwrap() = Some(event);
+    }
+
+    /// Non-destructive snapshot of everything currently retained, in
+    /// sequence order (oldest first).
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        let slots = self.slots.read().unwrap();
+        let mut events: Vec<TraceEvent> = slots
+            .iter()
+            .filter_map(|s| s.lock().unwrap().clone())
+            .collect();
+        events.sort_by_key(|e| e.seq);
+        events
+    }
+
+    /// How many recorded events are no longer retained (overwritten or
+    /// discarded by a reconfigure).
+    pub fn dropped(&self) -> u64 {
+        let retained = self.snapshot().len() as u64;
+        self.recorded().saturating_sub(retained)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn records_in_order_with_ids() {
+        let r = FlightRecorder::new(16);
+        r.record(EventKind::Admit, "m", 7, 0, "");
+        r.record(EventKind::Enqueue, "m", 7, 0, "");
+        r.record(EventKind::BatchFormed, "m", 0, 1, "n=1");
+        let events = r.snapshot();
+        assert_eq!(events.len(), 3);
+        assert_eq!(events[0].kind, EventKind::Admit);
+        assert_eq!(events[0].request_id, 7);
+        assert_eq!(events[2].batch_id, 1);
+        assert!(events.windows(2).all(|w| w[0].seq < w[1].seq));
+        assert!(events.windows(2).all(|w| w[0].t_us <= w[1].t_us));
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn overflow_keeps_the_newest_events() {
+        let r = FlightRecorder::new(8);
+        for i in 1..=20u64 {
+            r.record(EventKind::Enqueue, "m", i, 0, "");
+        }
+        let events = r.snapshot();
+        assert_eq!(events.len(), 8);
+        let ids: Vec<u64> = events.iter().map(|e| e.request_id).collect();
+        assert_eq!(ids, (13..=20).collect::<Vec<_>>(), "oldest overwritten");
+        assert_eq!(r.recorded(), 20);
+        assert_eq!(r.dropped(), 12);
+    }
+
+    #[test]
+    fn zero_capacity_and_disable_are_cheap_no_ops() {
+        let r = FlightRecorder::new(0);
+        assert!(!r.is_enabled());
+        r.record(EventKind::Admit, "m", 1, 0, "");
+        assert!(r.snapshot().is_empty());
+        let r = FlightRecorder::new(4);
+        r.set_enabled(false);
+        r.record(EventKind::Admit, "m", 1, 0, "");
+        assert!(r.snapshot().is_empty());
+        r.set_enabled(true);
+        r.record(EventKind::Admit, "m", 2, 0, "");
+        assert_eq!(r.snapshot().len(), 1);
+    }
+
+    #[test]
+    fn configure_resizes_and_disables() {
+        let r = FlightRecorder::new(4);
+        r.record(EventKind::Admit, "m", 1, 0, "");
+        r.configure(2);
+        assert!(r.snapshot().is_empty(), "reconfigure discards history");
+        r.record(EventKind::Admit, "m", 2, 0, "");
+        r.record(EventKind::Admit, "m", 3, 0, "");
+        r.record(EventKind::Admit, "m", 4, 0, "");
+        assert_eq!(r.snapshot().len(), 2);
+        r.configure(0);
+        assert!(!r.is_enabled());
+        r.record(EventKind::Admit, "m", 5, 0, "");
+        assert!(r.snapshot().is_empty());
+    }
+
+    /// The satellite contract: many concurrent writers hammer a tiny
+    /// ring and every write completes promptly (no writer ever blocks
+    /// on a "full" buffer — there is no full state, only overwrite),
+    /// while the newest events survive.
+    #[test]
+    fn concurrent_hammer_never_blocks_writers() {
+        let r = Arc::new(FlightRecorder::new(64));
+        let start = Instant::now();
+        let threads: Vec<_> = (0..8)
+            .map(|t| {
+                let r = Arc::clone(&r);
+                std::thread::spawn(move || {
+                    for i in 0..5_000u64 {
+                        r.record(EventKind::Enqueue, "hammer", t * 10_000 + i, 0, "");
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(r.recorded(), 40_000);
+        assert!(
+            start.elapsed() < std::time::Duration::from_secs(10),
+            "writers must not serialize on a full buffer"
+        );
+        let events = r.snapshot();
+        assert_eq!(events.len(), 64, "ring stays at capacity");
+        // Every retained event is from the newest window of sequence
+        // numbers (overwrite-oldest, not overwrite-random).
+        assert!(events.iter().all(|e| e.seq > 40_000 - 64));
+    }
+
+    #[test]
+    fn event_json_omits_zero_ids() {
+        let e = TraceEvent {
+            seq: 3,
+            t_us: 12,
+            kind: EventKind::Shed,
+            model: "m".into(),
+            request_id: 0,
+            batch_id: 0,
+            detail: String::new(),
+        };
+        let j = e.to_json().to_string();
+        assert!(j.contains("\"event\":\"shed\""), "{j}");
+        assert!(!j.contains("request_id"), "{j}");
+        assert!(!j.contains("batch_id"), "{j}");
+        assert!(!j.contains("detail"), "{j}");
+    }
+}

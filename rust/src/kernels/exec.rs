@@ -54,6 +54,7 @@
 //! so f32 plans match `gs_matvec` bit for bit (per batch column), and f16
 //! plans match the oracle run on the f16-quantized format bit for bit.
 
+use crate::kernels::profile;
 use crate::sparse::format::GsFormat;
 use crate::util::f16::f16_bits_to_f32;
 use crate::util::threadpool::ThreadPool;
@@ -265,6 +266,13 @@ impl GsExecPlan {
     /// The balanced band spans used by the parallel path.
     pub fn chunks(&self) -> &[Chunk] {
         &self.chunks
+    }
+
+    /// Groups in each band (successive differences of the packed band
+    /// pointer) — the raw per-band load the chunk balancer works from,
+    /// surfaced for the load-imbalance profiler.
+    pub fn band_group_counts(&self) -> Vec<usize> {
+        self.band_ptr.windows(2).map(|w| (w[1] - w[0]) as usize).collect()
     }
 
     /// Bytes resident in the packed plan (joined + tables). An f16 plan's
@@ -661,7 +669,8 @@ pub fn gs_matmul_parallel_bias(
     let base = OutPtr(out.as_mut_ptr());
     let plan2 = Arc::clone(plan);
     let acts2 = Arc::clone(acts);
-    pool.map(plan.chunks.clone(), move |chunk| {
+    let times = pool.map(plan.chunks.clone(), move |chunk| {
+        let timer = profile::start();
         let lo = chunk.band_lo * band_rows * batch;
         let len = (chunk.band_hi - chunk.band_lo) * band_rows * batch;
         // SAFETY: chunks partition `0..nbands` contiguously and the
@@ -671,7 +680,9 @@ pub fn gs_matmul_parallel_bias(
         // when a job panics — `join` drains the queue first).
         let span = unsafe { std::slice::from_raw_parts_mut(base.0.add(lo), len) };
         exec_chunk_into(&plan2, &acts2, batch, chunk, span);
+        profile::stop(timer)
     });
+    profile::record_call(plan, &times);
     out
 }
 
@@ -711,17 +722,21 @@ pub fn gs_matmul_parallel_merge_bias(
     let plan2 = Arc::clone(plan);
     let acts2 = Arc::clone(acts);
     let bias2 = bias.map(Arc::clone);
-    let locals = pool.map(chunks.clone(), move |chunk| {
+    let timed = pool.map(chunks.clone(), move |chunk| {
+        let timer = profile::start();
         let rows = (chunk.band_hi - chunk.band_lo) * band_rows;
         let mut local = vec![0.0f32; rows * batch];
         seed_local(&plan2, batch, chunk, bias2.as_ref().map(|b| b.as_slice()), &mut local);
         exec_chunk_into(&plan2, &acts2, batch, chunk, &mut local);
-        local
+        (local, profile::stop(timer))
     });
     let mut out = seeded_out(plan.rows, batch, bias.map(|b| b.as_slice()));
-    for (chunk, local) in chunks.iter().zip(&locals) {
+    let mut times = Vec::with_capacity(timed.len());
+    for (chunk, (local, secs)) in chunks.iter().zip(&timed) {
         merge_chunk(plan, batch, *chunk, local, &mut out);
+        times.push(*secs);
     }
+    profile::record_call(plan, &times);
     out
 }
 

@@ -10,6 +10,11 @@
 //!   bit for bit. The batched inner loops use explicit `std::simd` under
 //!   the `simd` cargo feature. Backs the coordinator's native serving
 //!   backend.
+//! * [`profile`] — the chunk load-imbalance profiler: per-chunk wall
+//!   times sampled inside `exec`'s parallel paths (on by default via the
+//!   `chunk-profile` feature, compile-to-no-op without it), aggregated
+//!   into per-plan time-skew and group-spread summaries for
+//!   `{"op":"profile"}`.
 //! * [`dense`] — the cache-blocked, feature-major batched dense layer
 //!   (`relu(x@W1+b1)`) feeding the GS spMM; serial and pool-parallel,
 //!   bit-identical at any thread count.
@@ -23,6 +28,7 @@ pub mod conv_sim;
 pub mod dense;
 pub mod exec;
 pub mod native;
+pub mod profile;
 pub mod spmv_sim;
 
 pub use conv_sim::{conv_block_sim, conv_dense_sim, conv_gs_sim, ConvOutput};

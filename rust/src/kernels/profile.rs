@@ -1,0 +1,303 @@
+//! Kernel load-imbalance profiler: cheap per-chunk wall-time sampling
+//! in [`gs_matmul_parallel`](super::exec::gs_matmul_parallel).
+//!
+//! The paper's load-balance claim is *static* — chunks carry near-equal
+//! group counts — but whether they *run* balanced depends on cache
+//! behavior, band raggedness, and scheduling. This module times each
+//! chunk job (one `Instant` pair per chunk, amortized over the whole
+//! gather-FMA sweep) and aggregates per plan geometry:
+//!
+//! * **time skew** = max chunk time / mean chunk time per call — 1.0 is
+//!   perfect balance; aggregated as a time-weighted mean
+//!   (`Σ max / Σ mean`) and a worst-case max across calls;
+//! * **static spread**: group counts per chunk and per band, so an
+//!   operator can tell a ragged pruning (bad input) from a scheduling
+//!   problem (bad luck).
+//!
+//! Summaries are keyed by the plan's geometry fingerprint (shape, B/k,
+//! precision, group/chunk counts) — the identity of a deployed `.gsm`
+//! pruning — and drained via `{"op":"profile"}`.
+//!
+//! Compiled in by default (`chunk-profile` cargo feature, in the
+//! default set) with a runtime switch ([`set_enabled`]); building with
+//! `--no-default-features` compiles every hook to an empty inline
+//! no-op, the same escape-hatch pattern as `coordinator::faults`.
+
+#[cfg(feature = "chunk-profile")]
+mod imp {
+    use crate::kernels::exec::GsExecPlan;
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{Mutex, OnceLock};
+    use std::time::Instant;
+
+    static ENABLED: AtomicBool = AtomicBool::new(true);
+
+    /// Runtime switch (feature-on builds start enabled).
+    pub fn set_enabled(on: bool) {
+        ENABLED.store(on, Ordering::Relaxed);
+    }
+
+    pub fn enabled() -> bool {
+        ENABLED.load(Ordering::Relaxed)
+    }
+
+    /// One chunk job's timer (None while disabled at `start`).
+    pub struct ChunkTimer(Option<Instant>);
+
+    pub fn start() -> ChunkTimer {
+        if enabled() {
+            ChunkTimer(Some(Instant::now()))
+        } else {
+            ChunkTimer(None)
+        }
+    }
+
+    /// Elapsed seconds since `start` (0.0 while disabled).
+    pub fn stop(t: ChunkTimer) -> f64 {
+        t.0.map_or(0.0, |i| i.elapsed().as_secs_f64())
+    }
+
+    /// Aggregated timing + static geometry for one plan fingerprint.
+    struct PlanProfile {
+        /// Static group-count spread across the plan's chunks.
+        chunk_groups: (usize, usize, f64),
+        /// Static group-count spread across the plan's bands.
+        band_groups: (usize, usize, f64),
+        nbands: usize,
+        nchunks: usize,
+        calls: u64,
+        /// Σ over calls of that call's mean chunk time.
+        sum_mean: f64,
+        /// Σ over calls of that call's max chunk time.
+        sum_max: f64,
+        /// Worst single-call skew observed.
+        max_skew: f64,
+    }
+
+    impl PlanProfile {
+        fn new(plan: &GsExecPlan) -> PlanProfile {
+            let spread = |counts: &[usize]| -> (usize, usize, f64) {
+                let min = counts.iter().copied().min().unwrap_or(0);
+                let max = counts.iter().copied().max().unwrap_or(0);
+                let mean = if counts.is_empty() {
+                    0.0
+                } else {
+                    counts.iter().sum::<usize>() as f64 / counts.len() as f64
+                };
+                (min, max, mean)
+            };
+            let chunk_counts: Vec<usize> = plan.chunks().iter().map(|c| c.groups).collect();
+            let band_counts = plan.band_group_counts();
+            PlanProfile {
+                chunk_groups: spread(&chunk_counts),
+                band_groups: spread(&band_counts),
+                nbands: band_counts.len(),
+                nchunks: chunk_counts.len(),
+                calls: 0,
+                sum_mean: 0.0,
+                sum_max: 0.0,
+                max_skew: 0.0,
+            }
+        }
+    }
+
+    fn registry() -> &'static Mutex<BTreeMap<String, PlanProfile>> {
+        static REGISTRY: OnceLock<Mutex<BTreeMap<String, PlanProfile>>> = OnceLock::new();
+        REGISTRY.get_or_init(|| Mutex::new(BTreeMap::new()))
+    }
+
+    /// The plan's geometry fingerprint — the identity of a deployed
+    /// pruning, stable across repacks of the same `.gsm`.
+    fn fingerprint(plan: &GsExecPlan) -> String {
+        format!(
+            "{}x{} b{} k{} {} groups{} chunks{}{}",
+            plan.rows,
+            plan.cols,
+            plan.b,
+            plan.k,
+            plan.precision.name(),
+            plan.ngroups(),
+            plan.chunks().len(),
+            if plan.scatter { " scatter" } else { "" },
+        )
+    }
+
+    /// Fold one parallel call's per-chunk times into the plan's
+    /// aggregate. Single-chunk calls and all-zero timings (profiling
+    /// raced off mid-call) carry no balance information and are skipped.
+    pub fn record_call(plan: &GsExecPlan, chunk_secs: &[f64]) {
+        if !enabled() || chunk_secs.len() < 2 {
+            return;
+        }
+        let sum: f64 = chunk_secs.iter().sum();
+        if sum <= 0.0 {
+            return;
+        }
+        let mean = sum / chunk_secs.len() as f64;
+        let max = chunk_secs.iter().copied().fold(0.0, f64::max);
+        let mut reg = registry().lock().unwrap();
+        let p = reg
+            .entry(fingerprint(plan))
+            .or_insert_with(|| PlanProfile::new(plan));
+        p.calls += 1;
+        p.sum_mean += mean;
+        p.sum_max += max;
+        p.max_skew = p.max_skew.max(max / mean);
+    }
+
+    /// Every profiled plan as a JSON object keyed by fingerprint.
+    pub fn snapshot_json() -> Json {
+        let reg = registry().lock().unwrap();
+        let plans = reg
+            .iter()
+            .map(|(key, p)| {
+                let spread = |(min, max, mean): (usize, usize, f64)| {
+                    Json::obj(vec![
+                        ("min", Json::Num(min as f64)),
+                        ("max", Json::Num(max as f64)),
+                        ("mean", Json::Num(mean)),
+                        (
+                            "spread",
+                            Json::Num(if mean > 0.0 { max as f64 / mean } else { 0.0 }),
+                        ),
+                    ])
+                };
+                let profile = Json::obj(vec![
+                    ("bands", Json::Num(p.nbands as f64)),
+                    ("chunks", Json::Num(p.nchunks as f64)),
+                    ("chunk_groups", spread(p.chunk_groups)),
+                    ("band_groups", spread(p.band_groups)),
+                    ("calls", Json::Num(p.calls as f64)),
+                    ("mean_chunk_ms", Json::Num(1e3 * p.sum_mean / p.calls.max(1) as f64)),
+                    ("max_chunk_ms", Json::Num(1e3 * p.sum_max / p.calls.max(1) as f64)),
+                    (
+                        "time_skew",
+                        Json::obj(vec![
+                            (
+                                "mean",
+                                Json::Num(if p.sum_mean > 0.0 { p.sum_max / p.sum_mean } else { 0.0 }),
+                            ),
+                            ("max", Json::Num(p.max_skew)),
+                        ]),
+                    ),
+                ]);
+                (key.clone(), profile)
+            })
+            .collect();
+        Json::Obj(plans)
+    }
+
+    /// Drop every aggregate (tests, `{"op":"profile","reset":true}`).
+    pub fn reset() {
+        registry().lock().unwrap().clear();
+    }
+}
+
+#[cfg(not(feature = "chunk-profile"))]
+mod imp {
+    use crate::kernels::exec::GsExecPlan;
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+
+    /// Zero-sized stand-in; `start`/`stop` compile to nothing.
+    pub struct ChunkTimer;
+
+    #[inline(always)]
+    pub fn set_enabled(_on: bool) {}
+
+    #[inline(always)]
+    pub fn enabled() -> bool {
+        false
+    }
+
+    #[inline(always)]
+    pub fn start() -> ChunkTimer {
+        ChunkTimer
+    }
+
+    #[inline(always)]
+    pub fn stop(_t: ChunkTimer) -> f64 {
+        0.0
+    }
+
+    #[inline(always)]
+    pub fn record_call(_plan: &GsExecPlan, _chunk_secs: &[f64]) {}
+
+    pub fn snapshot_json() -> Json {
+        Json::Obj(BTreeMap::new())
+    }
+
+    #[inline(always)]
+    pub fn reset() {}
+}
+
+pub use imp::{enabled, record_call, reset, set_enabled, snapshot_json, start, stop, ChunkTimer};
+
+#[cfg(all(test, feature = "chunk-profile"))]
+mod tests {
+    use super::*;
+    use crate::sparse::pattern::Pattern;
+    use crate::testing::model::build_random_gs;
+    use crate::util::json::Json;
+    use std::sync::Mutex;
+
+    /// The registry and enable switch are process-global (and the
+    /// instrumented kernels record from any concurrently running test),
+    /// so these tests serialize against each other, use distinctive
+    /// plan shapes, and assert on their own fingerprint only.
+    static SERIAL: Mutex<()> = Mutex::new(());
+
+    fn plan(rows: usize, nchunks: usize) -> crate::kernels::exec::GsExecPlan {
+        let (_, gs) = build_random_gs(rows, 32, Pattern::Gs { b: 8, k: 4 }, 0.75, 7).unwrap();
+        crate::kernels::exec::GsExecPlan::with_chunks(&gs, nchunks).unwrap()
+    }
+
+    fn my_plan<'a>(
+        plans: &'a std::collections::BTreeMap<String, Json>,
+        shape: &str,
+    ) -> Option<&'a Json> {
+        plans.iter().find(|(k, _)| k.starts_with(shape)).map(|(_, v)| v)
+    }
+
+    #[test]
+    fn record_aggregates_skew_per_plan() {
+        let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(true);
+        let p = plan(64, 4);
+        // Two calls: balanced (skew 1.0) then one hot chunk (skew 2.5
+        // = 0.005 / mean 0.002).
+        record_call(&p, &[0.001, 0.001, 0.001, 0.001]);
+        record_call(&p, &[0.001, 0.001, 0.001, 0.005]);
+        let snap = snapshot_json();
+        let Json::Obj(plans) = &snap else { panic!("object") };
+        let prof = my_plan(plans, "64x32").expect("own fingerprint present");
+        assert_eq!(prof.get("calls").unwrap().as_f64().unwrap(), 2.0);
+        let skew = prof.get("time_skew").unwrap();
+        let max_skew = skew.get("max").unwrap().as_f64().unwrap();
+        assert!((max_skew - 2.5).abs() < 1e-9, "{max_skew}");
+        let mean_skew = skew.get("mean").unwrap().as_f64().unwrap();
+        assert!(mean_skew > 1.0 && mean_skew <= 2.5, "{mean_skew}");
+        // Static geometry rides along.
+        let cg = prof.get("chunk_groups").unwrap();
+        assert!(cg.get("max").unwrap().as_f64().unwrap() >= 1.0);
+        reset();
+    }
+
+    #[test]
+    fn disabled_and_degenerate_calls_record_nothing() {
+        let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+        let p = plan(48, 4);
+        set_enabled(false);
+        assert!(!enabled());
+        let t = start();
+        assert_eq!(stop(t), 0.0, "disabled timer reads zero");
+        record_call(&p, &[0.001, 0.002]);
+        set_enabled(true);
+        record_call(&p, &[0.001]); // single chunk: no balance info
+        record_call(&p, &[0.0, 0.0]); // raced-off timers
+        let Json::Obj(plans) = snapshot_json() else { panic!("object") };
+        assert!(my_plan(&plans, "48x32").is_none(), "nothing recorded for this plan");
+    }
+}

@@ -16,6 +16,11 @@
 //!                    [--quarantine-window-ms 10000] [--quarantine-cooldown-ms 2000]
 //!                    [--store-dir DIR (crash-recoverable registry manifest,
 //!                     rewritten on every deploy op and replayed on startup)]
+//!                    [--trace-capacity 4096 (flight-recorder ring slots,
+//!                     drained via {"op":"trace"}) | --no-trace]
+//!                    [--slow-request-ms 0 (log the full lifecycle trace of
+//!                     requests slower than this; 0 = off)]
+//!                    [--log-json (operational logs as JSON lines)]
 //!                    native: [--models a=a.gsm,b=b.gsm] [--max-models N]
 //!                            [--default-model a]   (multi-model routed serving)
 //!                            or [--model model.gsm]  (serve one .gsm artifact)
@@ -109,6 +114,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let max_conns = args.usize("max-conns", 0);
     let idle_timeout_ms = args.usize("idle-timeout-ms", 0) as u64;
     let max_frame_bytes = args.usize("max-frame-bytes", ServeConfig::default().max_frame_bytes);
+    // Observability knobs: the flight recorder behind {"op":"trace"},
+    // structured logging, and the slow-request tracer.
+    let trace_capacity = if args.has("no-trace") {
+        0
+    } else {
+        args.usize("trace-capacity", ServeConfig::default().trace_capacity)
+    };
+    let log_json = args.has("log-json");
+    let slow_request_ms = args.usize("slow-request-ms", 0) as u64;
 
     if backend == "native" {
         // Store-backed routed serving: named hot-swappable model slots,
@@ -165,6 +179,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 max_frame_bytes,
                 slot: slot_cfg,
                 store_dir,
+                trace_capacity,
+                log_json,
+                slow_request_ms,
             },
         )?;
         let admission = if queue_depth == 0 {
@@ -184,7 +201,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
              {{\"canary\":{{\"requests\":N,\"max_error_rate\":F}}}}), \
              {{\"op\":\"rollback\",\"model\":\"name\"}}, \
              {{\"op\":\"unload\",\"model\":\"name\"}}, \
-             {{\"op\":\"models\"}}, {{\"op\":\"stats\"}}"
+             {{\"op\":\"models\"}}, {{\"op\":\"stats\"}}, {{\"op\":\"trace\"}}, \
+             {{\"op\":\"metrics\"}}, {{\"op\":\"profile\"}}"
         );
         loop {
             std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -208,6 +226,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             max_conns,
             idle_timeout_ms,
             max_frame_bytes,
+            trace_capacity,
+            log_json,
+            slow_request_ms,
             ..ServeConfig::default()
         },
     )?;

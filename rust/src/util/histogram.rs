@@ -1,0 +1,289 @@
+//! Fixed log-scale bucket histogram for serving latencies and batch
+//! occupancy.
+//!
+//! Replaces the old drop-half latency `Reservoir`, whose bulk
+//! `drain(..50_000)` discarded the oldest half wholesale — summaries
+//! right after a drain reflected only recent traffic with no indication
+//! of the window. A [`Histogram`] is **cumulative over the process
+//! lifetime**: `n` counts every recorded sample since startup, memory
+//! is a fixed array of atomic counters regardless of traffic, and the
+//! record path is lock-free (one atomic increment per bucket plus
+//! sum/min/max updates — safe on the hottest serving paths).
+//!
+//! Buckets grow geometrically by `2^(1/8)` (~9.05% per bucket), so a
+//! reported percentile is the *upper bound* of the bucket holding the
+//! rank — never below the true order statistic at that rank and at most
+//! one bucket factor above it (see [`Histogram::summary`]). Exactness:
+//! `n`, `sum` (hence `mean`), `min`, and `max` are exact (to the
+//! histogram's fixed-point resolution); percentiles and `std` are
+//! bucket-bounded approximations.
+
+use crate::util::stats::Summary;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Buckets per factor-of-two of the value range.
+const BUCKETS_PER_OCTAVE: usize = 8;
+
+/// The geometric growth factor between adjacent bucket bounds,
+/// `2^(1/8)`: the worst-case relative error of a reported percentile.
+pub const BUCKET_FACTOR: f64 = 1.090_507_732_665_257_7;
+
+/// Lock-free log-scale histogram with exact count/sum/min/max.
+pub struct Histogram {
+    /// Lower edge of the first regular bucket; values below land in the
+    /// underflow bucket (reported as `lo`).
+    lo: f64,
+    /// Fixed-point scale for the exact sum/min/max accumulators
+    /// (e.g. 1e9 = nanosecond resolution for values in seconds).
+    scale: f64,
+    /// Upper bound of regular bucket `i` (exclusive); bucket `i` covers
+    /// `[lo * F^i, lo * F^(i+1))`.
+    bounds: Vec<f64>,
+    /// `[underflow, regular buckets ..., overflow]`.
+    counts: Vec<AtomicU64>,
+    /// Exact sample count (matches the sum of `counts`).
+    count: AtomicU64,
+    /// Exact sum in `scale` fixed-point units.
+    sum: AtomicU64,
+    /// Exact min/max in `scale` units (`u64::MAX` / 0 until a sample).
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Histogram {
+    /// A histogram covering `[lo, lo * 2^octaves)` with 8 buckets per
+    /// octave; `scale` is the fixed-point resolution of the exact
+    /// sum/min/max accumulators.
+    pub fn new(lo: f64, octaves: usize, scale: f64) -> Histogram {
+        assert!(lo > 0.0 && octaves > 0);
+        let n = octaves * BUCKETS_PER_OCTAVE;
+        let bounds: Vec<f64> = (0..n)
+            .map(|i| lo * 2f64.powf((i + 1) as f64 / BUCKETS_PER_OCTAVE as f64))
+            .collect();
+        let counts = (0..n + 2).map(|_| AtomicU64::new(0)).collect();
+        Histogram {
+            lo,
+            scale,
+            bounds,
+            counts,
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Serving-latency configuration: 1 µs to ~67 s at nanosecond
+    /// accumulator resolution. Sub-microsecond samples fold into the
+    /// underflow bucket (reported as 1 µs), >67 s into overflow
+    /// (reported as the exact max).
+    pub fn latency() -> Histogram {
+        Histogram::new(1e-6, 26, 1e9)
+    }
+
+    /// Batch-occupancy configuration: 1 to 16384 rows at unit
+    /// resolution (integer row counts are exact in the accumulators).
+    pub fn occupancy() -> Histogram {
+        Histogram::new(1.0, 14, 1.0)
+    }
+
+    /// Record one sample (non-finite or negative samples are dropped).
+    pub fn record(&self, v: f64) {
+        if !v.is_finite() || v < 0.0 {
+            return;
+        }
+        let fixed = (v * self.scale).round() as u64;
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(fixed, Ordering::Relaxed);
+        self.min.fetch_min(fixed, Ordering::Relaxed);
+        self.max.fetch_max(fixed, Ordering::Relaxed);
+        let idx = if v < self.lo {
+            0
+        } else if v >= self.bounds[self.bounds.len() - 1] {
+            self.counts.len() - 1
+        } else {
+            // First bound strictly above v; +1 skips the underflow slot.
+            1 + self.bounds.partition_point(|&b| b <= v)
+        };
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Exact number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Exact sum of recorded samples (in natural units).
+    pub fn sum(&self) -> f64 {
+        self.sum.load(Ordering::Relaxed) as f64 / self.scale
+    }
+
+    /// Upper percentile-reporting bound of bucket `idx` in the counts
+    /// array; the overflow bucket reports the exact recorded max.
+    fn upper(&self, idx: usize, max: f64) -> f64 {
+        if idx == 0 {
+            self.lo
+        } else if idx == self.counts.len() - 1 {
+            max
+        } else {
+            self.bounds[idx - 1]
+        }
+    }
+
+    /// Summary over everything recorded so far (None while empty).
+    ///
+    /// Guarantees, for samples within `[lo, lo * 2^octaves)`: each
+    /// percentile is ≥ the true order statistic at its rank and ≤ that
+    /// statistic × [`BUCKET_FACTOR`] (the rank is `ceil(q * (n-1))`,
+    /// matching [`Summary::of`]'s index before interpolation), clamped
+    /// to the exact recorded max. `n`, `mean`, `min`, `max` are exact
+    /// at the fixed-point resolution; `std` is approximated from bucket
+    /// representative points.
+    pub fn summary(&self) -> Option<Summary> {
+        let counts: Vec<u64> = self
+            .counts
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect();
+        let n: u64 = counts.iter().sum();
+        if n == 0 {
+            return None;
+        }
+        // Concurrent recorders may have bumped `sum` before/after their
+        // bucket landed; use the bucket total for ranks (internally
+        // consistent) and the exact accumulators for moments.
+        let min = self.min.load(Ordering::Relaxed) as f64 / self.scale;
+        let max = self.max.load(Ordering::Relaxed) as f64 / self.scale;
+        let mean = self.sum.load(Ordering::Relaxed) as f64 / self.scale / n as f64;
+        let pct = |q: f64| -> f64 {
+            let rank = ((q * (n - 1) as f64).ceil() as u64 + 1).clamp(1, n);
+            let mut cum = 0u64;
+            for (idx, c) in counts.iter().enumerate() {
+                cum += c;
+                if cum >= rank {
+                    return self.upper(idx, max).min(max);
+                }
+            }
+            max
+        };
+        // Approximate spread from per-bucket representatives (geometric
+        // bucket midpoint, clamped to the observed range).
+        let mut var = 0.0;
+        for (idx, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let hi = self.upper(idx, max);
+            let lo = if idx <= 1 { self.lo } else { self.bounds[idx - 2] };
+            let rep = (lo * hi).sqrt().clamp(min, max);
+            var += c as f64 * (rep - mean) * (rep - mean);
+        }
+        Some(Summary {
+            n: n as usize,
+            mean,
+            std: (var / n as f64).sqrt(),
+            min,
+            max,
+            p50: pct(0.50),
+            p95: pct(0.95),
+            p99: pct(0.99),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_has_no_summary() {
+        assert!(Histogram::latency().summary().is_none());
+    }
+
+    #[test]
+    fn exact_count_mean_min_max() {
+        let h = Histogram::latency();
+        h.record(0.001);
+        h.record(0.003);
+        let s = h.summary().unwrap();
+        assert_eq!(s.n, 2);
+        assert!((s.mean - 0.002).abs() < 1e-9, "{}", s.mean);
+        assert!((s.min - 0.001).abs() < 1e-9);
+        assert!((s.max - 0.003).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_is_bucket_bounded_and_max_clamped() {
+        let h = Histogram::latency();
+        h.record(0.05);
+        h.record(0.05);
+        // Both samples share the max: the bucket upper bound is clamped
+        // to the exact recorded max, so the p50 is exact.
+        let s = h.summary().unwrap();
+        assert!((s.p50 - 0.05).abs() < 1e-9, "{}", s.p50);
+        assert!((s.p99 - 0.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_brackets_the_order_statistic() {
+        let h = Histogram::latency();
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64 * 1e-3).collect();
+        for &s in &samples {
+            h.record(s);
+        }
+        let s = h.summary().unwrap();
+        // Rank for q over n=100: ceil(q * 99) zero-indexed.
+        let oracle_p95 = samples[(0.95f64 * 99.0).ceil() as usize];
+        assert!(s.p95 >= oracle_p95 - 1e-9, "{} < {}", s.p95, oracle_p95);
+        assert!(s.p95 <= oracle_p95 * BUCKET_FACTOR + 1e-9);
+    }
+
+    #[test]
+    fn underflow_and_overflow_are_absorbed() {
+        let h = Histogram::latency();
+        h.record(1e-9); // below lo: underflow, reported as lo
+        h.record(1e5); // above range: overflow, reported as exact max
+        h.record(f64::NAN); // dropped
+        h.record(-1.0); // dropped
+        let s = h.summary().unwrap();
+        assert_eq!(s.n, 2);
+        assert!((s.p50 - 1e-6).abs() < 1e-12, "{}", s.p50);
+        assert!((s.max - 1e5).abs() < 1e-6);
+        assert!((s.p99 - 1e5).abs() < 1e-6, "overflow reports exact max");
+    }
+
+    #[test]
+    fn occupancy_keeps_small_integers_distinct() {
+        let h = Histogram::occupancy();
+        for v in [1.0, 2.0, 3.0, 7.0, 64.0, 1024.0] {
+            h.record(v);
+        }
+        let s = h.summary().unwrap();
+        assert_eq!(s.n, 6);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 1024.0);
+        // 1024 is inside the 14-octave range, not overflow.
+        assert!(s.p99 <= 1024.0 * BUCKET_FACTOR);
+    }
+
+    #[test]
+    fn concurrent_recording_is_exact_on_counts() {
+        use std::sync::Arc;
+        let h = Arc::new(Histogram::latency());
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..1000 {
+                        h.record(1e-4 * (1 + (t * 1000 + i) % 50) as f64);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 4000);
+        assert_eq!(h.summary().unwrap().n, 4000);
+    }
+}

@@ -10,6 +10,7 @@ pub mod cli;
 pub mod crc32;
 pub mod f16;
 pub mod fsio;
+pub mod histogram;
 pub mod json;
 pub mod prng;
 pub mod stats;
@@ -18,6 +19,7 @@ pub mod threadpool;
 pub use cli::Args;
 pub use crc32::{crc32, Crc32};
 pub use f16::{f16_bits_to_f32, f16_round, f32_to_f16_bits};
+pub use histogram::Histogram;
 pub use json::Json;
 pub use prng::Prng;
 pub use stats::Summary;

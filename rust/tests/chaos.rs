@@ -558,3 +558,104 @@ fn abusive_connections_do_not_delay_deadlined_clients() {
     handle.stop();
     faults::reset();
 }
+
+/// The flight recorder captures a quarantine incident end-to-end and in
+/// order: the panicking batch's failed replies, the breaker trip, and
+/// the half-open probe's recovery — so an operator can reconstruct the
+/// incident from `{"op":"trace"}` alone after the fact.
+#[test]
+fn recorder_captures_panic_quarantine_probe_recovery_sequence() {
+    let _guard = serial();
+    let cfg = SlotConfig {
+        quarantine_after: 2,
+        quarantine_window_ms: 10_000,
+        quarantine_cooldown_ms: 400,
+        ..SlotConfig::default()
+    };
+    let store = Arc::new(ModelStore::with_capacity(0, "m"));
+    let bm = build_random_model(&spec(87)).unwrap();
+    store
+        .register("m", Arc::new(ModelSlot::with_config(bm.model, "inline", 1, cfg)))
+        .unwrap();
+    let engine = Engine::from_store(store, "m", 1).unwrap();
+    let mut handle = serve_store(
+        &engine,
+        ServeConfig {
+            bind: "127.0.0.1:0".into(),
+            workers: 1,
+            input_width: 12,
+            max_batch: 8,
+            window_ms: 1,
+            slot: cfg,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let mut client = Client::connect(handle.addr).unwrap();
+    let x = Prng::new(19).normal_vec(12, 1.0);
+    assert_eq!(client.infer_model("m", &x).unwrap().len(), 32);
+
+    // Two injected panics inside the window trip the breaker; after the
+    // cool-down the next request is the half-open probe and recovers.
+    for _ in 0..2 {
+        faults::arm_panic_on_batch(faults::batches_executed() + 1);
+        let err = client.infer_model("m", &x).unwrap_err();
+        assert!(format!("{err}").contains("worker panicked"), "{err}");
+    }
+    thread::sleep(Duration::from_millis(500));
+    assert_eq!(client.infer_model("m", &x).unwrap().len(), 32);
+    // The probe's reply flushes before the worker records the recovery;
+    // give the observation a beat to land.
+    thread::sleep(Duration::from_millis(50));
+
+    let trace = client.trace(&[]).unwrap();
+    let events = match trace.get("events") {
+        Some(Json::Arr(evs)) => evs.clone(),
+        other => panic!("trace missing events: {other:?}"),
+    };
+    let seq_of = |what: &str, pred: &dyn Fn(&Json) -> bool| -> f64 {
+        events
+            .iter()
+            .find(|e| pred(e))
+            .and_then(|e| e.get("seq"))
+            .and_then(Json::as_f64)
+            .unwrap_or_else(|| {
+                let dump: Vec<String> = events.iter().map(|e| e.to_string()).collect();
+                panic!("no {what} event:\n{}", dump.join("\n"))
+            })
+    };
+    fn kind(e: &Json) -> &str {
+        e.get("event").and_then(Json::as_str).unwrap_or("")
+    }
+    fn detail(e: &Json) -> &str {
+        e.get("detail").and_then(Json::as_str).unwrap_or("")
+    }
+    let panic_reply = seq_of("panic reply", &|e| {
+        kind(e) == "reply" && detail(e) == "error: panic"
+    });
+    let quarantined = seq_of("quarantined", &|e| kind(e) == "quarantined");
+    let recovered = seq_of("recovered", &|e| kind(e) == "recovered");
+    // The probe's successful execution lands between trip and recovery
+    // (recovery is observed on the probe's own batch completion).
+    let probe_exec = seq_of("probe exec_start", &|e| {
+        kind(e) == "exec_start"
+            && e.get("seq").and_then(Json::as_f64).unwrap_or(0.0) > quarantined
+    });
+    assert!(
+        panic_reply < quarantined && quarantined < probe_exec && probe_exec < recovered,
+        "incident out of order: panic_reply={panic_reply} quarantined={quarantined} \
+         probe={probe_exec} recovered={recovered}"
+    );
+    // Post-recovery traffic shows up as ordinary successful replies.
+    assert_eq!(client.infer_model("m", &x).unwrap().len(), 32);
+    let trace = client.trace(&[("event", Json::Str("reply".into()))]).unwrap();
+    let replies = match trace.get("events") {
+        Some(Json::Arr(evs)) => evs.clone(),
+        other => panic!("trace missing events: {other:?}"),
+    };
+    let last = replies.last().expect("a reply after recovery");
+    assert_eq!(last.get("detail").and_then(Json::as_str), None, "clean reply has no detail");
+    assert!(last.get("seq").and_then(Json::as_f64).unwrap() > recovered);
+    handle.stop();
+    faults::reset();
+}

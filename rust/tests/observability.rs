@@ -1,0 +1,448 @@
+//! Observability suite: the flight recorder, per-stage latency
+//! breakdown, Prometheus exposition, and the kernel chunk
+//! load-imbalance profiler — exercised end-to-end against live servers
+//! and in-process against a deliberately imbalanced plan.
+//!
+//! The kernel profiler registry and enable switch are process-global,
+//! so every test serializes on [`serial`] and asserts only on its own
+//! plan fingerprints / its own server's counters.
+
+use gs_sparse::coordinator::{serve_store, server::ServeConfig, Client, Engine};
+#[cfg(feature = "chunk-profile")]
+use gs_sparse::kernels::exec::{gs_matmul_parallel, to_feature_major, GsExecPlan};
+use gs_sparse::kernels::profile;
+use gs_sparse::model_store::{ModelSlot, ModelStore};
+use gs_sparse::sparse::Pattern;
+#[cfg(feature = "chunk-profile")]
+use gs_sparse::sparse::{Dense, GsFormat};
+use gs_sparse::testing::{build_random_model, ModelSpec};
+#[cfg(feature = "chunk-profile")]
+use gs_sparse::util::ThreadPool;
+use gs_sparse::util::{Json, Prng};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn spec(seed: u64, threads: usize) -> ModelSpec {
+    ModelSpec {
+        inputs: 12,
+        hidden: 64,
+        outputs: 32,
+        max_batch: 8,
+        pattern: Pattern::Gs { b: 8, k: 8 },
+        sparsity: 0.75,
+        threads,
+        seed,
+        ..ModelSpec::default()
+    }
+}
+
+/// One-model store-backed server ("m" pinned as default) with the
+/// observability knobs under test.
+fn serve_one(seed: u64, threads: usize, cfg: ServeConfig) -> gs_sparse::coordinator::ServerHandle {
+    let store = Arc::new(ModelStore::with_capacity(0, "m"));
+    let bm = build_random_model(&spec(seed, threads)).unwrap();
+    store
+        .register("m", Arc::new(ModelSlot::new(bm.model, "inline", 1)))
+        .unwrap();
+    let engine = Engine::from_store(store, "m", 1).unwrap();
+    serve_store(
+        &engine,
+        ServeConfig {
+            bind: "127.0.0.1:0".into(),
+            workers: 1,
+            input_width: 12,
+            max_batch: 8,
+            window_ms: 1,
+            ..cfg
+        },
+    )
+    .unwrap()
+}
+
+fn events(trace: &Json) -> Vec<Json> {
+    match trace.get("events") {
+        Some(Json::Arr(evs)) => evs.clone(),
+        other => panic!("trace reply missing events array: {other:?}"),
+    }
+}
+
+fn ev_str<'a>(e: &'a Json, key: &str) -> &'a str {
+    e.get(key).and_then(Json::as_str).unwrap_or("")
+}
+
+fn ev_num(e: &Json, key: &str) -> f64 {
+    e.get(key).and_then(Json::as_f64).unwrap_or(0.0)
+}
+
+/// The seq of the first event matching `pred`, panicking with the full
+/// event dump when absent.
+fn seq_of(evs: &[Json], what: &str, pred: impl Fn(&Json) -> bool) -> f64 {
+    evs.iter()
+        .find(|e| pred(e))
+        .map(|e| ev_num(e, "seq"))
+        .unwrap_or_else(|| {
+            let dump: Vec<String> = evs.iter().map(|e| e.to_string()).collect();
+            panic!("no {what} event in trace:\n{}", dump.join("\n"))
+        })
+}
+
+/// `{"op":"trace"}` returns the full lifecycle of a traced request in
+/// order: admit → enqueue → batch_formed → exec_start → exec_end →
+/// reply, with the request-scoped events carrying the client's id and
+/// the batch-scoped ones the server-minted batch id (joined via the
+/// reply event).
+#[test]
+fn trace_returns_full_request_lifecycle_in_order() {
+    let _guard = serial();
+    let mut handle = serve_one(91, 1, ServeConfig::default());
+    let mut client = Client::connect(handle.addr).unwrap();
+    let x = Prng::new(21).normal_vec(12, 1.0);
+    for _ in 0..3 {
+        assert_eq!(client.infer_model("m", &x).unwrap().len(), 32);
+    }
+
+    // Client ids are 1-based; follow the second request.
+    let rid = 2.0;
+    let trace = client.trace(&[]).unwrap();
+    assert_eq!(trace.get("enabled").and_then(Json::as_bool), Some(true));
+    assert_eq!(
+        trace.get("capacity").and_then(Json::as_f64),
+        Some(ServeConfig::default().trace_capacity as f64)
+    );
+    let evs = events(&trace);
+
+    // The reply event joins the request id to its batch id.
+    let reply = evs
+        .iter()
+        .find(|e| ev_str(e, "event") == "reply" && ev_num(e, "request_id") == rid)
+        .expect("traced request has a reply event");
+    let bid = ev_num(reply, "batch_id");
+    assert!(bid >= 1.0, "reply must carry the minted batch id");
+    assert_eq!(ev_str(reply, "model"), "m");
+
+    let rid_ev = |kind: &'static str| {
+        seq_of(&evs, kind, |e| {
+            ev_str(e, "event") == kind && ev_num(e, "request_id") == rid
+        })
+    };
+    let bid_ev = |kind: &'static str| {
+        seq_of(&evs, kind, |e| {
+            ev_str(e, "event") == kind && ev_num(e, "batch_id") == bid
+        })
+    };
+    let admit = rid_ev("admit");
+    let enqueue = rid_ev("enqueue");
+    let formed = bid_ev("batch_formed");
+    let exec_start = bid_ev("exec_start");
+    let exec_end = bid_ev("exec_end");
+    let replied = ev_num(reply, "seq");
+    assert!(
+        admit < enqueue && enqueue < formed && formed < exec_start,
+        "lifecycle out of order: admit={admit} enqueue={enqueue} formed={formed} start={exec_start}"
+    );
+    assert!(
+        exec_start < exec_end && exec_end < replied,
+        "execution out of order: start={exec_start} end={exec_end} reply={replied}"
+    );
+
+    // Server-side filters narrow to the request's own events.
+    let filtered = client.trace(&[("id", Json::Num(rid))]).unwrap();
+    let fevs = events(&filtered);
+    assert!(!fevs.is_empty());
+    assert!(fevs.iter().all(|e| ev_num(e, "request_id") == rid));
+    let limited = client
+        .trace(&[("event", Json::Str("reply".into())), ("limit", Json::Num(1.0))])
+        .unwrap();
+    let levs = events(&limited);
+    assert_eq!(levs.len(), 1, "limit keeps only the newest event");
+    assert_eq!(ev_str(&levs[0], "event"), "reply");
+    handle.stop();
+}
+
+/// `trace_capacity: 0` disables the recorder: the hot path records
+/// nothing and the trace op reports itself disabled with no events.
+#[test]
+fn zero_trace_capacity_disables_the_recorder() {
+    let _guard = serial();
+    let mut handle = serve_one(
+        92,
+        1,
+        ServeConfig {
+            trace_capacity: 0,
+            ..ServeConfig::default()
+        },
+    );
+    let mut client = Client::connect(handle.addr).unwrap();
+    let x = Prng::new(22).normal_vec(12, 1.0);
+    assert_eq!(client.infer_model("m", &x).unwrap().len(), 32);
+    let trace = client.trace(&[]).unwrap();
+    assert_eq!(trace.get("enabled").and_then(Json::as_bool), Some(false));
+    assert_eq!(trace.get("capacity").and_then(Json::as_f64), Some(0.0));
+    assert!(events(&trace).is_empty(), "disabled recorder retains nothing");
+    handle.stop();
+}
+
+fn stage_n(stages: &Json, stage: &str) -> f64 {
+    stages
+        .get(stage)
+        .and_then(|s| s.get("n"))
+        .and_then(Json::as_f64)
+        .unwrap_or_else(|| panic!("stages missing {stage}.n: {}", stages.to_string()))
+}
+
+/// `stats` breaks request latency down by pipeline stage — queue-wait,
+/// batch-form, execute, reply-write — globally and per model, each with
+/// sample count and p50/p95/p99/mean, plus the batch-occupancy
+/// histogram.
+#[test]
+fn stats_exposes_stage_breakdown_and_batch_occupancy() {
+    let _guard = serial();
+    let mut handle = serve_one(93, 1, ServeConfig::default());
+    let mut client = Client::connect(handle.addr).unwrap();
+    let x = Prng::new(23).normal_vec(12, 1.0);
+    let n = 6;
+    for _ in 0..n {
+        assert_eq!(client.infer_model("m", &x).unwrap().len(), 32);
+    }
+
+    let stats = client.stats().unwrap();
+    let stages = stats.get("stages").expect("stats.stages present");
+    for stage in ["queue_wait", "batch_form", "execute", "reply_write"] {
+        assert!(
+            stage_n(stages, stage) >= n as f64,
+            "{stage} undersampled: {}",
+            stages.to_string()
+        );
+        for key in ["p50_ms", "p95_ms", "p99_ms", "mean_ms"] {
+            let v = stages
+                .get(stage)
+                .and_then(|s| s.get(key))
+                .and_then(Json::as_f64)
+                .unwrap_or_else(|| panic!("stages.{stage}.{key} missing"));
+            assert!(v >= 0.0 && v.is_finite(), "{stage}.{key} = {v}");
+        }
+    }
+
+    let occ = stats.get("batch_occupancy").expect("batch occupancy present");
+    let occ_n = occ.get("n").and_then(Json::as_f64).unwrap();
+    assert!(occ_n >= 1.0, "at least one batch sealed");
+    let occ_max = occ.get("max").and_then(Json::as_f64).unwrap();
+    assert!((1.0..=8.0).contains(&occ_max), "occupancy within max_batch: {occ_max}");
+
+    // The same breakdown per model (reply-write is recorded on the
+    // connection thread against the routed model too).
+    let mstages = stats
+        .get("models")
+        .and_then(|m| m.get("m"))
+        .and_then(|m| m.get("stages"))
+        .expect("models.m.stages present");
+    for stage in ["queue_wait", "batch_form", "execute"] {
+        assert!(stage_n(mstages, stage) >= n as f64, "model {stage} undersampled");
+    }
+    handle.stop();
+}
+
+/// Parse Prometheus text exposition into `series name{labels} -> value`,
+/// keyed by the raw line prefix (name plus label block, verbatim).
+fn parse_prometheus(text: &str) -> HashMap<String, f64> {
+    let mut out = HashMap::new();
+    for line in text.lines() {
+        if line.starts_with('#') || line.trim().is_empty() {
+            continue;
+        }
+        let (series, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("bad line: {line}"));
+        let v: f64 = value.parse().unwrap_or_else(|_| panic!("bad value in: {line}"));
+        out.insert(series.to_string(), v);
+    }
+    out
+}
+
+/// `{"op":"metrics"}` emits parseable Prometheus 0.0.4 text whose
+/// counters obey request conservation, with per-model series, latency
+/// and per-stage summaries, and gauges.
+#[test]
+fn metrics_exposition_parses_and_conserves_requests() {
+    let _guard = serial();
+    let mut handle = serve_one(94, 1, ServeConfig::default());
+    let mut client = Client::connect(handle.addr).unwrap();
+    let x = Prng::new(24).normal_vec(12, 1.0);
+    let n = 5;
+    for _ in 0..n {
+        assert_eq!(client.infer_model("m", &x).unwrap().len(), 32);
+    }
+
+    let text = client.metrics_text().unwrap();
+    assert!(text.contains("# TYPE gs_requests_total counter"), "{text}");
+    assert!(text.contains("# TYPE gs_request_latency_seconds summary"), "{text}");
+    let series = parse_prometheus(&text);
+    let get = |key: &str| {
+        *series
+            .get(key)
+            .unwrap_or_else(|| panic!("series {key} missing from exposition:\n{text}"))
+    };
+
+    assert_eq!(get("gs_requests_total"), n as f64);
+    assert_eq!(
+        get("gs_requests_total"),
+        get("gs_responses_total")
+            + get("gs_errors_total")
+            + get("gs_shed_total")
+            + get("gs_expired_total"),
+        "conservation from scraped values alone"
+    );
+    assert_eq!(get("gs_requests_total{model=\"m\"}"), n as f64);
+    assert!(get("gs_request_latency_seconds{quantile=\"0.5\"}") > 0.0);
+    assert_eq!(get("gs_request_latency_seconds_count"), n as f64);
+    assert!(get("gs_stage_seconds{stage=\"execute\",quantile=\"0.99\"}") > 0.0);
+    let mq50 = "gs_stage_seconds{model=\"m\",stage=\"queue_wait\",quantile=\"0.5\"}";
+    assert!(series.contains_key(mq50), "per-model stage summary missing");
+    assert!(get("gs_batch_occupancy_count") >= 1.0);
+    assert!(get("gs_connections") >= 1.0);
+    assert!(get("gs_uptime_seconds") >= 0.0);
+    assert_eq!(get("gs_queue_depth"), 0.0, "quiescent server has empty queues");
+    handle.stop();
+}
+
+/// Build a GS-valid but deliberately ragged matrix: band 0 carries
+/// `heavy` groups, the next three bands one group each, the rest none.
+/// Each band keeps the Definition 4.1 invariants (row counts equal,
+/// every column residue mod B covered evenly) so `from_dense` accepts
+/// it verbatim — raggedness across bands is exactly what the paper's
+/// per-band load balance permits and the chunk planner must absorb.
+#[cfg(feature = "chunk-profile")]
+fn ragged_gs(heavy: usize) -> GsFormat {
+    let (b, k) = (8usize, 4usize);
+    let (rows, cols) = (16usize, 8 * heavy.max(1));
+    let mut w = Dense::zeros(rows, cols);
+    // band 0 (rows 0–1): `heavy` groups.
+    for g in 0..heavy {
+        for i in 0..4 {
+            w.set(0, 8 * g + i, 0.5 + (g + i) as f32);
+            w.set(1, 8 * g + 4 + i, 1.5 + (g + i) as f32);
+        }
+    }
+    // bands 1–3 (rows 2–7): one group each.
+    for band in 1..4 {
+        for i in 0..4 {
+            w.set(2 * band, i, 2.0 + band as f32);
+            w.set(2 * band + 1, 4 + i, 3.0 + band as f32);
+        }
+    }
+    // bands 4–7 (rows 8–15): empty.
+    GsFormat::from_dense(&w, Pattern::Gs { b, k }).unwrap()
+}
+
+/// The profiler reports chunk-time skew and static group spread for a
+/// deliberately imbalanced plan: one hot chunk carrying 8× the groups
+/// of its peers must surface as `chunk_groups.max > min` and a time
+/// skew at or above 1.
+#[test]
+#[cfg(feature = "chunk-profile")]
+fn profiler_reports_skew_for_deliberately_imbalanced_plan() {
+    let _guard = serial();
+    profile::set_enabled(true);
+    let gs = ragged_gs(8);
+    let plan = Arc::new(GsExecPlan::with_chunks(&gs, 4).unwrap());
+    let counts = plan.band_group_counts();
+    assert_eq!(counts.iter().sum::<usize>(), 11, "8 + 1 + 1 + 1 groups");
+    assert_eq!(*counts.iter().max().unwrap(), 8);
+    assert_eq!(*counts.iter().min().unwrap(), 0, "trailing bands are empty");
+
+    assert!(plan.chunks().len() >= 2, "need multiple chunks for balance info");
+    let pool = ThreadPool::new(4);
+    let batch = 64;
+    let mut rng = Prng::new(25);
+    let acts: Vec<Vec<f32>> = (0..batch).map(|_| rng.normal_vec(gs.cols, 1.0)).collect();
+    let xt = Arc::new(to_feature_major(&acts, gs.cols));
+    for _ in 0..20 {
+        let out = gs_matmul_parallel(&plan, &xt, batch, &pool);
+        assert_eq!(out.len(), gs.rows * batch);
+    }
+
+    let snap = profile::snapshot_json();
+    let Json::Obj(plans) = &snap else { panic!("profile snapshot must be an object") };
+    let key_prefix = format!("{}x{} b8 k4", gs.rows, gs.cols);
+    let prof = plans
+        .iter()
+        .find(|(key, _)| key.starts_with(&key_prefix))
+        .map(|(_, v)| v)
+        .unwrap_or_else(|| panic!("no profile for {key_prefix}: {}", snap.to_string()));
+
+    let num = |path: &[&str]| {
+        let mut cur = prof;
+        for p in path {
+            cur = cur.get(p).unwrap_or_else(|| panic!("profile missing {path:?}"));
+        }
+        cur.as_f64().unwrap()
+    };
+    assert!(num(&["calls"]) >= 1.0, "timed calls recorded");
+    let (cg_min, cg_max) = (num(&["chunk_groups", "min"]), num(&["chunk_groups", "max"]));
+    assert!(
+        cg_max > cg_min,
+        "static imbalance must be visible: chunks carry {cg_min}..{cg_max} groups"
+    );
+    assert!(num(&["band_groups", "max"]) == 8.0 && num(&["band_groups", "min"]) == 0.0);
+    assert!(num(&["band_groups", "spread"]) > 1.5, "ragged bands spread wide");
+    let (skew_mean, skew_max) = (num(&["time_skew", "mean"]), num(&["time_skew", "max"]));
+    assert!(skew_mean >= 1.0 && skew_max >= skew_mean, "skew = max/mean chunk time");
+    assert!(num(&["max_chunk_ms"]) >= num(&["mean_chunk_ms"]));
+    profile::reset();
+}
+
+/// `{"op":"profile"}` over a live server: the engine's own parallel
+/// plan shows up keyed by geometry after traffic, and `"reset":true`
+/// clears the aggregates.
+#[test]
+fn profile_op_reports_engine_plans_over_the_wire() {
+    let _guard = serial();
+    profile::set_enabled(true);
+    profile::reset();
+    // threads: 4 gives the engine's GS plan multiple chunks — single
+    // chunk calls carry no balance information and are skipped.
+    let mut handle = serve_one(95, 4, ServeConfig::default());
+    let mut client = Client::connect(handle.addr).unwrap();
+    let x = Prng::new(26).normal_vec(12, 1.0);
+    for _ in 0..10 {
+        assert_eq!(client.infer_model("m", &x).unwrap().len(), 32);
+    }
+
+    let reply = client.profile().unwrap();
+    assert_eq!(reply.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(
+        reply.get("profiling").and_then(Json::as_bool),
+        Some(cfg!(feature = "chunk-profile")),
+        "profiling flag reflects the compiled feature + runtime switch"
+    );
+    let Some(Json::Obj(plans)) = reply.get("plans") else { panic!("plans object") };
+    if cfg!(feature = "chunk-profile") {
+        // The spec's GS layer is 32 outputs × 64 hidden.
+        assert!(
+            plans.keys().any(|k| k.starts_with("32x64")),
+            "engine plan missing from profile: {:?}",
+            plans.keys().collect::<Vec<_>>()
+        );
+        // `"reset":true` reports, then drains, the aggregates (raw
+        // frame: Client::profile has no reset knob by design).
+        let mut sock = std::net::TcpStream::connect(handle.addr).unwrap();
+        use std::io::{BufRead, BufReader, Write};
+        sock.write_all(b"{\"op\":\"profile\",\"reset\":true}\n").unwrap();
+        let mut line = String::new();
+        BufReader::new(sock).read_line(&mut line).unwrap();
+        let drained = Json::parse(&line).unwrap();
+        assert_eq!(drained.get("ok").and_then(Json::as_bool), Some(true));
+        let after = client.profile().unwrap();
+        let Some(Json::Obj(rest)) = after.get("plans") else { panic!("plans object") };
+        assert!(
+            !rest.keys().any(|k| k.starts_with("32x64")),
+            "reset must drain the engine plan's aggregate"
+        );
+    }
+    handle.stop();
+    profile::reset();
+}

@@ -63,3 +63,85 @@ fn perf_smoke_planned_spmm_beats_scalar_baseline() {
          beat per-row gs_matvec on this shape"
     );
 }
+
+/// Observability overhead gate: a fully instrumented server (flight
+/// recorder + stage histograms + kernel chunk profiler) must serve
+/// within 5% of the same server with `--no-trace` and the profiler
+/// switched off. Loopback roundtrips with best-of timing keep the
+/// comparison honest on noisy CI neighbors.
+#[test]
+#[ignore = "perf gate: run in CI via `cargo test --release -- --ignored perf_smoke`"]
+fn perf_smoke_observability_overhead_under_5pct() {
+    use gs_sparse::coordinator::{serve_store, server::ServeConfig, Client, Engine};
+    use gs_sparse::kernels::profile;
+    use gs_sparse::model_store::{ModelSlot, ModelStore};
+    use gs_sparse::testing::{build_random_model, ModelSpec};
+    use std::sync::Arc;
+
+    let serve = |trace_capacity: usize| {
+        let store = Arc::new(ModelStore::with_capacity(0, "m"));
+        let bm = build_random_model(&ModelSpec {
+            inputs: 64,
+            hidden: 256,
+            outputs: 64,
+            max_batch: 8,
+            pattern: Pattern::Gs { b: 16, k: 16 },
+            sparsity: 0.8,
+            threads: 1,
+            seed: 42,
+            ..ModelSpec::default()
+        })
+        .unwrap();
+        store
+            .register("m", Arc::new(ModelSlot::new(bm.model, "inline", 1)))
+            .unwrap();
+        let engine = Engine::from_store(store, "m", 1).unwrap();
+        serve_store(
+            &engine,
+            ServeConfig {
+                bind: "127.0.0.1:0".into(),
+                workers: 2,
+                input_width: 64,
+                max_batch: 8,
+                window_ms: 0,
+                trace_capacity,
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap()
+    };
+
+    let mut rng = Prng::new(21);
+    let x = rng.normal_vec(64, 1.0);
+    let requests = 1500usize;
+    let measure = |trace_capacity: usize, profiler: bool| {
+        profile::set_enabled(profiler);
+        let mut handle = serve(trace_capacity);
+        let mut client = Client::connect(handle.addr).unwrap();
+        let secs = best_of(5, || {
+            for _ in 0..requests {
+                assert_eq!(client.infer_model("m", &x).unwrap().len(), 64);
+            }
+        });
+        handle.stop();
+        secs
+    };
+
+    // Instrumented first, then bare — identical traffic, fresh servers.
+    let traced = measure(ServeConfig::default().trace_capacity, true);
+    let bare = measure(0, false);
+    profile::set_enabled(true);
+
+    let ratio = traced / bare;
+    println!(
+        "perf_smoke observability: traced {:.1}ms bare {:.1}ms ratio {ratio:.4}",
+        traced * 1e3,
+        bare * 1e3
+    );
+    assert!(
+        ratio < 1.05,
+        "observability overhead {:.1}% exceeds the 5% budget \
+         (traced {traced:.4}s vs bare {bare:.4}s for {requests} roundtrips)",
+        (ratio - 1.0) * 100.0
+    );
+}

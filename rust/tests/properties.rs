@@ -9,6 +9,7 @@ use gs_sparse::pruning::prune;
 use gs_sparse::sim::{Machine, MachineConfig};
 use gs_sparse::sparse::{Dense, GsFormat, Pattern};
 use gs_sparse::testing::{assert_allclose, default_cases, forall, forall2, Gen, OneOf, UsizeIn};
+use gs_sparse::util::histogram::{Histogram, BUCKET_FACTOR};
 use gs_sparse::util::Prng;
 use std::sync::mpsc::channel;
 use std::sync::Arc;
@@ -262,6 +263,62 @@ fn prop_sparsity_monotone() {
                     ));
                 }
                 last_kept = kept;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Histogram percentiles bracket the sorted-vector oracle: for any
+/// sample set inside the latency range, each reported percentile is at
+/// least the true order statistic at its rank and at most one bucket
+/// factor above it, while n / mean / min / max stay exact (at the
+/// fixed-point resolution). This is the bound the old drop-half
+/// `Reservoir` silently violated after a drain.
+#[test]
+fn prop_histogram_percentiles_bracket_sorted_oracle() {
+    forall2(
+        "histogram-vs-oracle",
+        &UsizeIn { lo: 1, hi: 300 },
+        &UsizeIn { lo: 0, hi: 9999 },
+        default_cases(),
+        |&n, &seed| {
+            let mut rng = Prng::new(seed as u64 * 7919 + 11);
+            // Log-uniform across the configured range: 2 µs to 60 s.
+            let (lo, hi) = (2e-6f64, 60.0f64);
+            let samples: Vec<f64> = (0..n)
+                .map(|_| (lo.ln() + rng.f64() * (hi.ln() - lo.ln())).exp())
+                .collect();
+            let h = Histogram::latency();
+            for &s in &samples {
+                h.record(s);
+            }
+            let mut sorted = samples.clone();
+            sorted.sort_by(f64::total_cmp);
+            let summary = h.summary().ok_or("summary missing after records")?;
+            if summary.n != n {
+                return Err(format!("n {} != {n}", summary.n));
+            }
+            let mean = samples.iter().sum::<f64>() / n as f64;
+            if (summary.mean - mean).abs() > 1e-6 {
+                return Err(format!("mean {} != {mean}", summary.mean));
+            }
+            if (summary.min - sorted[0]).abs() > 1e-6
+                || (summary.max - sorted[n - 1]).abs() > 1e-6
+            {
+                return Err(format!("min/max drifted: {:?}", (summary.min, summary.max)));
+            }
+            for (q, got) in [(0.50, summary.p50), (0.95, summary.p95), (0.99, summary.p99)] {
+                let rank = (q * (n - 1) as f64).ceil() as usize;
+                let oracle = sorted[rank];
+                if got < oracle - 1e-9 {
+                    return Err(format!("p{q}: {got} below oracle {oracle} (n={n})"));
+                }
+                if got > oracle * BUCKET_FACTOR + 1e-9 {
+                    return Err(format!(
+                        "p{q}: {got} above oracle {oracle} x bucket factor (n={n})"
+                    ));
+                }
             }
             Ok(())
         },
