@@ -1,11 +1,14 @@
 #!/usr/bin/env python3
-"""Summarize BENCH_native.json in the CI job log.
+"""Summarize BENCH_native.json (or BENCH_e2e.json) in the CI job log.
 
-Prints the two deltas the ROADMAP asks after:
+For the native kernel doc, prints the two deltas the ROADMAP asks after:
   * f16 vs f32 packed-plan throughput (per kernel, geometric mean over
     matching pattern/sparsity/batch cells) and plan bytes;
   * direct-write vs accumulate+merge parallel spMM (matmul_par vs
     matmul_par_merge) per pattern.
+
+For the serving doc (bench=e2e_serving), prints the binary-vs-JSON wire
+framing throughput ratio from the pipelined head-to-head.
 """
 import json
 import math
@@ -20,9 +23,31 @@ def geomean(xs):
     return math.exp(sum(math.log(x) for x in xs) / len(xs))
 
 
+def summarize_framing(doc):
+    cfg = doc.get("config", {})
+    print(
+        f"e2e bench config: {cfg.get('inputs')}->{cfg.get('hidden')}->{cfg.get('outputs')} "
+        f"max_batch={cfg.get('max_batch')} depth={cfg.get('depth')}"
+    )
+    print("\n== wire framing throughput (pipelined, depth "
+          f"{cfg.get('depth')}) ==")
+    rps = {}
+    for row in doc.get("framing", []):
+        rps[row["framing"]] = row["req_per_s"]
+        print(
+            f"  {row['framing']:8s} {row['req_per_s']:>10.0f} req/s "
+            f"({int(row['requests'])} requests)"
+        )
+    if rps.get("json") and rps.get("binary"):
+        print(f"  binary/json = {rps['binary'] / rps['json']:.3f}x")
+
+
 def main(path):
     with open(path) as f:
         doc = json.load(f)
+    if doc.get("bench") == "e2e_serving" or "framing" in doc:
+        summarize_framing(doc)
+        return
     cfg = doc.get("config", {})
     print(
         f"bench config: {cfg.get('rows')}x{cfg.get('cols')} B={cfg.get('b')} "

@@ -1,0 +1,255 @@
+#!/usr/bin/env python3
+"""Wire-conformance E2E driver for CI.
+
+Runs a JSON-framed client and a binary pipelined client against ONE
+live `gs-sparse serve` server (started by the workflow with
+--workers 1 --window-ms 150) and asserts, independently of the Rust
+test suite:
+
+  * the binary HELLO negotiation grants version 1 (and raw frames are
+    decoded by a from-scratch Python implementation of the framing, so
+    the layout is pinned by a second codebase);
+  * logits for the same input are BIT-IDENTICAL across framings —
+    binary OUTPUT frames carry raw little-endian f32, the JSON framing
+    prints shortest-roundtrip decimals, and both widen to the same
+    Python float;
+  * pipelined replies match requests by id under out-of-order
+    completion (a 10 ms deadline submitted behind a ~150 ms window
+    anchor overtakes it as a structured expiry);
+  * control-plane JSON (stats, metrics) interleaves with binary frames
+    on the same connection;
+  * request conservation holds EXACTLY, asserted from the scraped
+    {"op":"metrics"} Prometheus text alone, with both clients' traffic
+    (including concurrent mixed-framing load) on the books.
+"""
+import json
+import socket
+import struct
+import sys
+import threading
+import time
+
+MAGIC = 0xF5
+VERSION = 1
+OP_HELLO, OP_HELLO_ACK, OP_INFER, OP_OUTPUT, OP_ERROR = 1, 2, 3, 4, 5
+HEADER = struct.Struct("<BBBBQI")  # magic, version, opcode, flags, id, len
+
+
+def connect_raw(port, timeout=60.0):
+    deadline = time.time() + timeout
+    while True:
+        try:
+            s = socket.create_connection(("127.0.0.1", port), timeout=5)
+            s.settimeout(30)
+            return s
+        except OSError:
+            if time.time() > deadline:
+                raise
+            time.sleep(0.2)
+
+
+def connect_json(port, timeout=60.0):
+    return connect_raw(port, timeout).makefile("rw", encoding="utf-8")
+
+
+def rpc(io, **msg):
+    io.write(json.dumps(msg) + "\n")
+    io.flush()
+    reply = json.loads(io.readline())
+    if "error" in reply:
+        raise SystemExit(f"server error for {msg}: {reply}")
+    return reply
+
+
+def infer_input(n, salt=0):
+    # Deterministic floats that are exact in f32, in JSON text, and in
+    # Python: k * 0.25 - 0.5 is a dyadic rational well inside f32 range.
+    return [((i + salt) % 7) * 0.25 - 0.5 for i in range(n)]
+
+
+def parse_metrics(text):
+    series = {}
+    for line in text.splitlines():
+        if not line.strip() or line.startswith("#"):
+            continue
+        name, _, value = line.rpartition(" ")
+        series[name] = float(value)
+    return series
+
+
+class BinaryClient:
+    """Pipelined binary-framing client, implemented from the spec (not
+    from the Rust code): HELLO negotiation, raw-f32 INFER/OUTPUT,
+    JSON-line control ops interleaved on the same socket."""
+
+    def __init__(self, port):
+        self.sock = connect_raw(port)
+        self.rfile = self.sock.makefile("rb")
+        self.queued = []  # binary replies read while awaiting a control line
+        self.sock.sendall(HEADER.pack(MAGIC, VERSION, OP_HELLO, 0, 0, 0) + b"\n")
+        magic, version, opcode, _, _, length = self._read_header()
+        assert magic == MAGIC, f"HELLO reply is not a binary frame: {magic:#x}"
+        assert opcode == OP_HELLO_ACK, f"expected HELLO_ACK, got opcode {opcode}"
+        assert version == VERSION, f"server negotiated version {version}"
+        self._read_exact(length)
+
+    def _read_exact(self, n):
+        buf = self.rfile.read(n)
+        if buf is None or len(buf) != n:
+            raise SystemExit(f"connection closed mid-frame ({len(buf or b'')}/{n} bytes)")
+        return buf
+
+    def _read_header(self):
+        return HEADER.unpack(self._read_exact(HEADER.size))
+
+    def submit(self, req_id, x, model=None, deadline_ms=None):
+        name = (model or "").encode()
+        flags = 1 if deadline_ms is not None else 0
+        payload = (
+            struct.pack("<HBBI", len(name), flags, 0, deadline_ms or 0)
+            + name
+            + struct.pack(f"<{len(x)}f", *x)
+        )
+        self.sock.sendall(
+            HEADER.pack(MAGIC, VERSION, OP_INFER, 0, req_id, len(payload)) + payload
+        )
+
+    def recv(self):
+        """-> (id, logits list) or (id, dict) for a structured error."""
+        if self.queued:
+            return self.queued.pop(0)
+        magic, _, opcode, _, req_id, length = self._read_header()
+        assert magic == MAGIC, f"reply is not a binary frame: {magic:#x}"
+        payload = self._read_exact(length)
+        if opcode == OP_OUTPUT:
+            return req_id, list(struct.unpack(f"<{length // 4}f", payload))
+        if opcode == OP_ERROR:
+            return req_id, json.loads(payload.decode())
+        raise SystemExit(f"unexpected reply opcode {opcode}")
+
+    def control(self, **msg):
+        """Run one JSON control op; binary infer replies that land first
+        are queued for recv()."""
+        self.sock.sendall((json.dumps(msg) + "\n").encode())
+        while True:
+            first = self.rfile.peek(1)[:1]
+            if not first:
+                raise SystemExit("connection closed awaiting control reply")
+            if first[0] == MAGIC:
+                self.queued.append(self.recv())
+                continue
+            line = self.rfile.readline()
+            return json.loads(line.decode())
+
+
+def run(port, width):
+    jio = connect_json(port)
+    assert rpc(jio, op="ping").get("ok") is True
+    bc = BinaryClient(port)
+    print("negotiation ok: HELLO granted at version 1")
+
+    # --- Bit-identity across framings, same server, same inputs.
+    for i in range(4):
+        x = infer_input(width, salt=i)
+        via_json = rpc(jio, op="infer", id=10 + i, input=x)["output"]
+        bc.submit(40 + i, x)
+        req_id, via_bin = bc.recv()
+        assert req_id == 40 + i, (req_id, 40 + i)
+        assert isinstance(via_bin, list), f"binary infer failed: {via_bin}"
+        assert via_json == via_bin, (
+            "logits differ across framings:\n"
+            f"  json:   {via_json}\n  binary: {via_bin}"
+        )
+    print(f"bit-identity ok: {len(via_bin)} logits x 4 inputs identical across framings")
+
+    # --- Out-of-order completion: an early-deadline infer submitted
+    # BEHIND a window anchor overtakes it as a structured expiry, and
+    # ids keep the replies straight.
+    bc.submit(500, infer_input(width))  # anchors the ~150 ms window
+    time.sleep(0.01)
+    bc.submit(501, infer_input(width), deadline_ms=10)
+    first_id, first = bc.recv()
+    second_id, second = bc.recv()
+    assert first_id == 501, f"expiry must overtake the anchor: got id {first_id} first"
+    assert isinstance(first, dict) and "waited_ms" in first, first
+    assert second_id == 500 and isinstance(second, list), (second_id, second)
+    print(f"out-of-order ok: id 501 expired ({first['waited_ms']}ms) before id 500's output")
+
+    # --- Control-plane JSON interleaves with binary frames in flight.
+    bc.submit(600, infer_input(width))
+    stats = bc.control(op="stats")
+    assert stats.get("binary_connections", 0) >= 1, stats
+    rid, out = bc.recv()
+    assert rid == 600 and isinstance(out, list), (rid, out)
+    print("interleave ok: stats answered mid-pipeline, infer reply intact")
+
+    # --- Concurrent mixed-framing load: a JSON client and a binary
+    # pipelined client hammer the same server at the same time.
+    N, DEPTH = 30, 8
+    errors = []
+
+    def json_load():
+        io = connect_json(port)
+        for i in range(N):
+            r = rpc(io, op="infer", id=1000 + i, input=infer_input(width, salt=i))
+            if "output" not in r:
+                errors.append(r)
+
+    def binary_load():
+        c = BinaryClient(port)
+        expect = set()
+        for i in range(N):
+            c.submit(2000 + i, infer_input(width, salt=i))
+            expect.add(2000 + i)
+            if len(expect) >= DEPTH:
+                rid, r = c.recv()
+                expect.discard(rid)
+                if not isinstance(r, list):
+                    errors.append((rid, r))
+        while expect:
+            rid, r = c.recv()
+            expect.discard(rid)
+            if not isinstance(r, list):
+                errors.append((rid, r))
+
+    threads = [threading.Thread(target=json_load), threading.Thread(target=binary_load)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, f"mixed-framing load saw failures: {errors[:3]}"
+    print(f"concurrent ok: {N} JSON + {N} binary (depth {DEPTH}) infers, zero failures")
+
+    # --- Conservation, from the scraped exposition text ALONE — and
+    # scraped over the binary connection's control plane for good
+    # measure.
+    envelope = bc.control(op="metrics")
+    assert envelope.get("content_type", "").startswith("text/plain"), envelope
+    m = parse_metrics(envelope["text"])
+    requests = m["gs_requests_total"]
+    accounted = (
+        m["gs_responses_total"]
+        + m["gs_errors_total"]
+        + m["gs_shed_total"]
+        + m["gs_expired_total"]
+    )
+    assert requests == accounted, (
+        f"conservation violated: {requests} requests != {accounted} accounted"
+    )
+    assert requests >= 11 + 2 * N, m  # every phase above is on the books
+    frames_json = m['gs_frames_total{framing="json"}']
+    frames_binary = m['gs_frames_total{framing="binary"}']
+    assert frames_json > 0 and frames_binary > 0, m
+    assert m["gs_binary_negotiations_total"] >= 2, m  # bc + binary_load's client
+    assert m["gs_expired_total"] >= 1, m
+    assert m["gs_panics_total"] == 0, m
+    print(
+        f"conservation ok: {requests:.0f} requests exactly accounted "
+        f"({m['gs_responses_total']:.0f} responses + {m['gs_errors_total']:.0f} errors + "
+        f"{m['gs_shed_total']:.0f} shed + {m['gs_expired_total']:.0f} expired); "
+        f"frames json={frames_json:.0f} binary={frames_binary:.0f}"
+    )
+
+
+if __name__ == "__main__":
+    run(int(sys.argv[1]), int(sys.argv[2]) if len(sys.argv) > 2 else 64)

@@ -1,0 +1,273 @@
+#!/usr/bin/env python3
+"""Pipelined soak driver for CI.
+
+Hammers a release-built `gs-sparse serve` (started by the workflow with
+--workers 2 --window-ms 25 --queue-depth 8 --max-conns 8 and a default
+deadline) with 4 binary pipelined clients at depth 32 across TWO models
+("default" at one input width, "beta" at another), salted with
+deadline_ms=1 spikes (expiries), sustained over-depth pressure (sheds),
+one mid-soak hot swap of the default model, and a connection-capacity
+probe. Every submitted id must come back exactly once, client-side.
+
+The exit gate is the conservation identity, asserted EXACTLY from the
+scraped Prometheus text after the books drain:
+
+    gs_requests_total == gs_responses_total + gs_errors_total
+                         + gs_shed_total + gs_expired_total
+
+plus gs_panics_total == 0, gs_inflight_requests == 0, at least one
+swap, and nonzero shed + expired traffic (the soak actually hurt).
+"""
+import json
+import socket
+import struct
+import sys
+import threading
+import time
+
+MAGIC = 0xF5
+VERSION = 1
+OP_HELLO, OP_HELLO_ACK, OP_INFER, OP_OUTPUT, OP_ERROR = 1, 2, 3, 4, 5
+HEADER = struct.Struct("<BBBBQI")  # magic, version, opcode, flags, id, len
+
+
+def connect_raw(port, timeout=60.0):
+    deadline = time.time() + timeout
+    while True:
+        try:
+            s = socket.create_connection(("127.0.0.1", port), timeout=5)
+            s.settimeout(30)
+            return s
+        except OSError:
+            if time.time() > deadline:
+                raise
+            time.sleep(0.2)
+
+
+def connect_json(port):
+    return connect_raw(port).makefile("rw", encoding="utf-8")
+
+
+def rpc(io, **msg):
+    io.write(json.dumps(msg) + "\n")
+    io.flush()
+    reply = json.loads(io.readline())
+    if "error" in reply:
+        raise SystemExit(f"server error for {msg}: {reply}")
+    return reply
+
+
+def infer_input(n, salt=0):
+    return [((i + salt) % 7) * 0.25 - 0.5 for i in range(n)]
+
+
+def parse_metrics(text):
+    series = {}
+    for line in text.splitlines():
+        if not line.strip() or line.startswith("#"):
+            continue
+        name, _, value = line.rpartition(" ")
+        series[name] = float(value)
+    return series
+
+
+class BinaryClient:
+    def __init__(self, port):
+        self.sock = connect_raw(port)
+        self.rfile = self.sock.makefile("rb")
+        self.sock.sendall(HEADER.pack(MAGIC, VERSION, OP_HELLO, 0, 0, 0) + b"\n")
+        magic, version, opcode, _, _, length = self._read_header()
+        assert (magic, opcode, version) == (MAGIC, OP_HELLO_ACK, VERSION), (
+            magic,
+            opcode,
+            version,
+        )
+        self._read_exact(length)
+
+    def _read_exact(self, n):
+        buf = self.rfile.read(n)
+        if buf is None or len(buf) != n:
+            raise SystemExit(f"connection closed mid-frame ({len(buf or b'')}/{n} bytes)")
+        return buf
+
+    def _read_header(self):
+        return HEADER.unpack(self._read_exact(HEADER.size))
+
+    def submit(self, req_id, x, model=None, deadline_ms=None):
+        name = (model or "").encode()
+        flags = 1 if deadline_ms is not None else 0
+        payload = (
+            struct.pack("<HBBI", len(name), flags, 0, deadline_ms or 0)
+            + name
+            + struct.pack(f"<{len(x)}f", *x)
+        )
+        self.sock.sendall(
+            HEADER.pack(MAGIC, VERSION, OP_INFER, 0, req_id, len(payload)) + payload
+        )
+
+    def recv(self):
+        magic, _, opcode, _, req_id, length = self._read_header()
+        assert magic == MAGIC, f"reply is not a binary frame: {magic:#x}"
+        payload = self._read_exact(length)
+        if opcode == OP_OUTPUT:
+            return req_id, "output", None
+        if opcode == OP_ERROR:
+            r = json.loads(payload.decode())
+            if "retry_after_ms" in r:
+                return req_id, "shed", r
+            if "waited_ms" in r:
+                return req_id, "expired", r
+            return req_id, "error", r
+        raise SystemExit(f"unexpected reply opcode {opcode}")
+
+
+class Soaker(threading.Thread):
+    DEPTH = 32
+
+    def __init__(self, port, base_id, until, width_default, width_beta):
+        super().__init__()
+        self.port = port
+        self.base_id = base_id
+        self.until = until
+        self.width_default = width_default
+        self.width_beta = width_beta
+        self.counts = {"output": 0, "shed": 0, "expired": 0, "error": 0}
+        self.submitted = 0
+        self.failure = None
+
+    def run(self):
+        try:
+            self._run()
+        except BaseException as e:  # surfaced by the main thread
+            self.failure = e
+
+    def _absorb(self, client, expect):
+        req_id, kind, detail = client.recv()
+        if req_id not in expect:
+            raise SystemExit(f"reply for unknown/duplicate id {req_id}: {detail}")
+        expect.discard(req_id)
+        self.counts[kind] += 1
+        if kind == "error":
+            raise SystemExit(f"unexpected hard error for id {req_id}: {detail}")
+
+    def _run(self):
+        client = BinaryClient(self.port)
+        expect = set()
+        i = 0
+        while time.time() < self.until:
+            req_id = self.base_id + i
+            # 1 in 5 requests routes to the second model; 1 in 50 carries
+            # an unmeetable deadline (the ~25 ms batching window alone
+            # outwaits 1 ms) and must come back as a structured expiry.
+            model = "beta" if i % 5 == 4 else None
+            width = self.width_beta if model else self.width_default
+            deadline = 1 if i % 50 == 7 else None
+            client.submit(req_id, infer_input(width, salt=i), model, deadline)
+            expect.add(req_id)
+            self.submitted += 1
+            i += 1
+            if len(expect) >= self.DEPTH:
+                self._absorb(client, expect)
+        while expect:
+            self._absorb(client, expect)
+
+
+def capacity_probe(port, expect_max_conns):
+    """Open connections past --max-conns; the overflow ones must get the
+    structured at-capacity reply (pre-admission: not on the books)."""
+    conns = [connect_json(port) for _ in range(6)]
+    rejected = accepted = 0
+    try:
+        for io in conns:
+            io.write(json.dumps({"op": "ping"}) + "\n")
+            io.flush()
+            reply = json.loads(io.readline())
+            if reply.get("max_conns") == expect_max_conns:
+                rejected += 1
+            elif reply.get("ok") is True:
+                accepted += 1
+            else:
+                raise SystemExit(f"unexpected capacity-probe reply: {reply}")
+    finally:
+        for io in conns:
+            io.close()
+    assert rejected >= 1, f"max-conns never tripped ({accepted} accepted)"
+    return rejected
+
+
+def run(port, duration, width_default, width_beta, beta_path, swap_path):
+    control = connect_json(port)
+    assert rpc(control, op="ping").get("ok") is True
+    loaded = rpc(control, op="load", model="beta", path=beta_path)
+    assert loaded.get("version") == 1, loaded
+    print(f"setup ok: beta loaded, soaking {duration}s at depth {Soaker.DEPTH} x 4 clients")
+
+    until = time.time() + duration
+    soakers = [
+        Soaker(port, 1_000_000 * (i + 1), until, width_default, width_beta)
+        for i in range(4)
+    ]
+    for s in soakers:
+        s.start()
+
+    # Mid-soak: hot swap the default model under full pipelined load,
+    # then poke the connection cap while the soak holds 4 sockets open.
+    time.sleep(duration / 2)
+    swapped = rpc(control, op="swap", path=swap_path)
+    assert swapped.get("version") == 2, swapped
+    print("mid-soak ok: default model hot-swapped to v2 under load")
+    rejected = capacity_probe(port, expect_max_conns=8)
+    print(f"capacity ok: {rejected} over-capacity connection(s) refused structurally")
+
+    for s in soakers:
+        s.join()
+    for s in soakers:
+        if s.failure is not None:
+            raise SystemExit(f"soaker failed: {s.failure}")
+
+    submitted = sum(s.submitted for s in soakers)
+    totals = {k: sum(s.counts[k] for s in soakers) for k in soakers[0].counts}
+    answered = sum(totals.values())
+    assert submitted == answered, f"client books differ: {submitted} != {answered} {totals}"
+    assert totals["shed"] > 0, f"soak never shed: {totals}"
+    assert totals["expired"] > 0, f"soak never expired a deadline: {totals}"
+    print(
+        f"drain ok: {submitted} submitted == {totals['output']} outputs + "
+        f"{totals['shed']} shed + {totals['expired']} expired + {totals['error']} errors"
+    )
+
+    # The gate: exact conservation from the Prometheus text alone.
+    envelope = rpc(control, op="metrics")
+    m = parse_metrics(envelope["text"])
+    requests = m["gs_requests_total"]
+    accounted = (
+        m["gs_responses_total"]
+        + m["gs_errors_total"]
+        + m["gs_shed_total"]
+        + m["gs_expired_total"]
+    )
+    assert requests == accounted, (
+        f"conservation violated after soak: {requests} requests != {accounted} "
+        f"(responses {m['gs_responses_total']} + errors {m['gs_errors_total']} + "
+        f"shed {m['gs_shed_total']} + expired {m['gs_expired_total']})"
+    )
+    assert m["gs_panics_total"] == 0, m["gs_panics_total"]
+    assert m["gs_inflight_requests"] == 0, m["gs_inflight_requests"]
+    assert m["gs_swaps_total"] >= 1, m["gs_swaps_total"]
+    assert m["gs_shed_total"] > 0 and m["gs_expired_total"] > 0, m
+    assert m['gs_frames_total{framing="binary"}'] >= submitted, m
+    print(
+        f"soak gate ok: {requests:.0f} requests exactly accounted, zero panics, "
+        f"books drained, swap survived"
+    )
+
+
+if __name__ == "__main__":
+    run(
+        int(sys.argv[1]),
+        int(sys.argv[2]) if len(sys.argv) > 2 else 45,
+        int(sys.argv[3]) if len(sys.argv) > 3 else 64,
+        int(sys.argv[4]) if len(sys.argv) > 4 else 20,
+        sys.argv[5] if len(sys.argv) > 5 else "/tmp/gsm-soak-beta.gsm",
+        sys.argv[6] if len(sys.argv) > 6 else "/tmp/gsm-soak-a2.gsm",
+    )

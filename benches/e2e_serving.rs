@@ -6,12 +6,21 @@
 //! concurrent clients, for the serial and multi-threaded native kernels —
 //! the L3 perf deliverable. Runs out of the box (no artifacts); knobs:
 //! GS_E2E_REQUESTS (default 100 per client).
+//!
+//! A second table races the two wire framings head to head: one
+//! pipelined client at depth 32 against the same model behind a
+//! JSON-framed server and a binary-framed one, so the only variable is
+//! the encode/parse cost per frame. Both sections land in
+//! `BENCH_e2e.json` for `.github/bench_summary.py`.
 
 use gs_sparse::bench::Table;
-use gs_sparse::coordinator::{serve_slot, server::ServeConfig, Client, Engine};
+use gs_sparse::coordinator::{
+    serve_slot, server::ServeConfig, Client, Engine, InferOutcome, PipelinedClient,
+};
 use gs_sparse::kernels::exec::PlanPrecision;
 use gs_sparse::sparse::Pattern;
 use gs_sparse::testing::{build_random_model, ModelSpec};
+use gs_sparse::util::json::Json;
 use gs_sparse::util::Prng;
 use std::time::Instant;
 
@@ -110,5 +119,95 @@ fn main() -> anyhow::Result<()> {
         }
     }
     table.print();
+
+    // --- Wire framing head-to-head: same model, same engine, same
+    // pipelined client logic at a fixed depth; only the frame encoding
+    // differs. JSON pays decimal formatting + parse per float, binary
+    // moves raw little-endian f32.
+    let framing_requests = requests_per_client * 20;
+    let depth = 32usize;
+    let spec = ModelSpec {
+        inputs,
+        hidden,
+        outputs,
+        max_batch,
+        pattern: Pattern::Gs { b, k: b },
+        sparsity,
+        threads: 1,
+        precision: PlanPrecision::F32,
+        seed: 42,
+    };
+    let engine = Engine::new(build_random_model(&spec)?.model, "inline-random", 1);
+    let mut framing_table = Table::new(
+        "Wire framing (one pipelined client, depth 32, 1 worker)",
+        &["framing", "requests", "req_per_s", "us_per_req"],
+    );
+    let mut framing_rows: Vec<Json> = Vec::new();
+    for (name, binary_wire) in [("json", false), ("binary", true)] {
+        let mut handle = serve_slot(
+            &engine,
+            ServeConfig {
+                bind: "127.0.0.1:0".into(),
+                workers: 1,
+                input_width: inputs,
+                max_batch,
+                window_ms: 1,
+                queue_depth: 0,
+                binary_wire,
+                ..ServeConfig::default()
+            },
+        )?;
+        let mut c = PipelinedClient::connect(handle.addr)?;
+        assert_eq!(c.is_binary(), binary_wire, "framing negotiation mismatch");
+        let input = Prng::new(7).normal_vec(inputs, 1.0);
+        c.submit(None, &input, None)?;
+        c.recv()?.outcome.map_err(anyhow::Error::msg)?;
+        let t0 = Instant::now();
+        let (mut sent, mut done) = (0usize, 0usize);
+        while done < framing_requests {
+            while sent < framing_requests && c.in_flight() < depth {
+                c.submit(None, &input, None)?;
+                sent += 1;
+            }
+            match c.recv()?.outcome {
+                Ok(InferOutcome::Output(_)) => done += 1,
+                other => anyhow::bail!("framing bench reply was not an output: {other:?}"),
+            }
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+        let rps = framing_requests as f64 / elapsed;
+        framing_table.row(&[
+            name.to_string(),
+            framing_requests.to_string(),
+            format!("{rps:.0}"),
+            format!("{:.1}", elapsed / framing_requests as f64 * 1e6),
+        ]);
+        framing_rows.push(Json::obj(vec![
+            ("framing", name.into()),
+            ("depth", Json::Num(depth as f64)),
+            ("requests", Json::Num(framing_requests as f64)),
+            ("req_per_s", Json::Num(rps)),
+        ]));
+        handle.stop();
+    }
+    framing_table.print();
+
+    let doc = Json::obj(vec![
+        ("bench", "e2e_serving".into()),
+        (
+            "config",
+            Json::obj(vec![
+                ("inputs", Json::Num(inputs as f64)),
+                ("hidden", Json::Num(hidden as f64)),
+                ("outputs", Json::Num(outputs as f64)),
+                ("max_batch", Json::Num(max_batch as f64)),
+                ("sparsity", Json::Num(sparsity)),
+                ("depth", Json::Num(depth as f64)),
+            ]),
+        ),
+        ("framing", Json::Arr(framing_rows)),
+    ]);
+    std::fs::write("BENCH_e2e.json", doc.to_string())?;
+    println!("\nwrote BENCH_e2e.json");
     Ok(())
 }

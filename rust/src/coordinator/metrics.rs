@@ -210,6 +210,18 @@ pub struct Metrics {
     /// `requests == responses + errors + shed + expired` still holds
     /// exactly (same pattern as `panics`).
     pub quarantined: AtomicU64,
+    /// JSON-framed frames parsed off client connections (requests and
+    /// control ops; empty keep-alive lines are not counted).
+    pub frames_json: AtomicU64,
+    /// Binary frames parsed off client connections (HELLO + INFER).
+    pub frames_binary: AtomicU64,
+    /// Successful HELLO → HELLO_ACK binary-framing negotiations.
+    pub binary_negotiations: AtomicU64,
+    /// Connections currently speaking binary framing (gauge).
+    pub binary_connections: AtomicU64,
+    /// Admitted infer requests whose reply has not yet been written to
+    /// a socket (gauge) — pipelining depth across all connections.
+    pub inflight: AtomicU64,
     /// Per-stage latency breakdown across every model.
     pub stages: StageSet,
     /// Rows-per-batch distribution (how full formed batches run).
@@ -243,6 +255,11 @@ impl Default for Metrics {
             evictions: AtomicU64::new(0),
             rollbacks: AtomicU64::new(0),
             quarantined: AtomicU64::new(0),
+            frames_json: AtomicU64::new(0),
+            frames_binary: AtomicU64::new(0),
+            binary_negotiations: AtomicU64::new(0),
+            binary_connections: AtomicU64::new(0),
+            inflight: AtomicU64::new(0),
             stages: StageSet::default(),
             batch_occupancy: Histogram::occupancy(),
             recorder: FlightRecorder::new(4096),

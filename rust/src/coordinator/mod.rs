@@ -1,7 +1,10 @@
 //! Serving coordinator (Layer 3): router, dynamic batcher, worker pool.
 //!
 //! The request path is pure Rust: TCP connections speak a JSON-lines
-//! protocol ([`server`]), requests flow into a [`batcher::Batcher`]
+//! protocol with an opt-in negotiated binary framing for the infer
+//! data plane ([`server`], [`wire`]; a readiness event loop multiplexes
+//! every socket onto one thread — see [`crate::util::poll`]), requests
+//! flow into a [`batcher::Batcher`]
 //! holding per-model sub-queues behind a FIFO ready-list (idle workers
 //! claim and drain *different* models concurrently; batches form up to
 //! the model's batch capacity within a latency window anchored at the
@@ -74,11 +77,15 @@ pub mod metrics;
 pub mod server;
 pub mod trace;
 pub mod uniform;
+pub mod wire;
 
 pub use batcher::{Batcher, InferRequest, Reject, SubmitError};
 pub use metrics::{Metrics, ModelMetrics, Stage};
 pub use trace::{EventKind, FlightRecorder, TraceEvent};
-pub use server::{serve, serve_slot, serve_store, Client, InferOutcome, ServerHandle};
+pub use server::{
+    serve, serve_slot, serve_store, Client, InferOutcome, PipelinedClient, PipelinedReply,
+    ServerHandle,
+};
 pub use uniform::UniformGs;
 
 use crate::kernels::dense::{dense_matmul, dense_matmul_parallel};

@@ -1,4 +1,6 @@
-//! TCP JSON-lines front-end + worker pool.
+//! TCP front-end + worker pool: JSON-lines protocol with an opt-in
+//! binary framing for the infer data plane, multiplexed onto one
+//! readiness event loop.
 //!
 //! Protocol (one JSON object per line; `"model"` is optional everywhere
 //! and defaults to the server's default slot):
@@ -39,6 +41,26 @@
 //!   ← `{"ok":true,"profiling":B,"plans":{fingerprint:{...}}}` (kernel
 //!      chunk load-imbalance summaries; see [`crate::kernels::profile`])
 //!
+//! **Binary framing (opt-in):** a client may negotiate the
+//! length-prefixed binary framing of [`super::wire`] for the infer data
+//! plane — raw little-endian f32 input/logit vectors instead of base-10
+//! JSON text. Negotiation is HELLO → HELLO_ACK on connect; the control
+//! plane (every op above except `infer`) stays JSON-lines on the same
+//! stream, interleaved per frame. JSON framing remains the default and
+//! is always accepted, binary or not.
+//!
+//! **Connection tier:** one readiness event loop
+//! ([`crate::util::poll`]) multiplexes every client socket instead of a
+//! thread per connection. Requests are pipelined per connection: a
+//! client may have many infers in flight (distinguished by its request
+//! ids) and replies flush from a dedicated per-connection writer thread
+//! as their batches complete — out of completion order, not arrival
+//! order. Control-plane ops run on a small shared pool so a slow
+//! `metrics` scrape never stalls the event loop; replies to
+//! *concurrently in-flight* control ops on one connection are unordered
+//! (a client that awaits each reply before the next op sees the
+//! historical in-order behavior).
+//!
 //! Two serving modes share the batcher/worker machinery:
 //!
 //! * [`serve_store`] — the multi-model routed engine. Workers execute
@@ -64,14 +86,17 @@
 //!
 //! **Resilience:** the connection tier is hardened against misbehaving
 //! clients — `max_conns` caps simultaneous connections (a structured
-//! at-capacity reply, then close), `idle_timeout_ms` releases the
-//! thread a slowloris client would pin, and `max_frame_bytes` bounds
-//! the line reader so an unterminated frame cannot grow a buffer
-//! without limit. Batch execution runs under `catch_unwind`: a
-//! panicking kernel fails that batch's requests per-request (counted in
-//! `panics` + `errors`) and the worker survives. [`ServerHandle::stop`]
-//! drains connections: every connection thread is tracked and joined,
-//! so no thread outlives the handle.
+//! at-capacity reply, then close), `idle_timeout_ms` reaps a connection
+//! that delivers no bytes within the budget (a slowloris client holds a
+//! poller slot, not a thread), `max_frame_bytes` bounds the frame
+//! decoder in both framings (an oversized binary frame is rejected from
+//! its declared header length before any payload is buffered), and
+//! `max_inflight` caps one connection's pipelined depth. Batch
+//! execution runs under `catch_unwind`: a panicking kernel fails that
+//! batch's requests per-request (counted in `panics` + `errors`) and
+//! the worker survives. [`ServerHandle::stop`] drains connections:
+//! writer threads flush every in-flight reply and are joined, so no
+//! server thread outlives the handle.
 //!
 //! **Deployment safety (store mode):** slots retain previous
 //! generations for `{"op":"rollback"}` and canary swaps
@@ -96,21 +121,23 @@ use super::batcher::{Batcher, InferRequest, Reject};
 use super::faults;
 use super::metrics::{Metrics, ModelMetrics, Stage, StageSet};
 use super::trace::{EventKind, TraceEvent};
+use super::wire::{self, DecodeError, FrameDecoder, InferPayload, Opcode, WireFrame};
 use super::{Engine, SparseModel};
 use crate::kernels::profile as kernel_profile;
 use crate::model_store::{
     ManifestWriter, ModelArtifact, ModelSlot, ModelStore, SlotConfig, SlotEvent,
 };
 use crate::util::json::Json;
+use crate::util::poll::{self, Poller};
 use crate::util::stats::Summary;
 use crate::util::threadpool::resolve_threads;
 use anyhow::{Context, Result};
-use std::collections::HashMap;
-use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::channel;
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
@@ -199,6 +226,8 @@ pub struct ServerHandle {
     pub default_model: Option<String>,
     workers: Vec<thread::JoinHandle<()>>,
     acceptor: Option<thread::JoinHandle<()>>,
+    /// The control-plane op pool (stats/swap/metrics/... handlers).
+    control: Vec<thread::JoinHandle<()>>,
     conns: Arc<ConnTracker>,
 }
 
@@ -228,10 +257,15 @@ impl ServerHandle {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
-        // ...then release the connection tier: shutting the read half
-        // wakes parked readers with EOF while final writes still flush,
-        // and every connection thread is joined — none outlives stop().
+        // ...then release the connection tier: per-connection writer
+        // threads flush the structured failures the batcher just issued
+        // and exit once their reply channels drain; every one is joined
+        // — none outlives stop(). The control pool goes last (its
+        // channel closed when the event loop exited).
         self.conns.drain();
+        for c in self.control.drain(..) {
+            let _ = c.join();
+        }
     }
 }
 
@@ -271,12 +305,24 @@ pub struct ServeConfig {
     /// structured goodbye and is closed — a slowloris client releases
     /// its thread instead of pinning it forever.
     pub idle_timeout_ms: u64,
-    /// Largest accepted request frame (one JSON line) in bytes
-    /// (0 = unbounded). An oversized frame gets a structured
+    /// Largest accepted request frame in bytes (0 = unbounded), in
+    /// either framing: one JSON line, or one binary frame including its
+    /// 16-byte header. An oversized frame gets a structured
     /// `{"error":"frame too large...","max_frame_bytes":N}` reply and
-    /// the connection closes, instead of the reader buffering an
-    /// unterminated line without limit.
+    /// the connection closes. A binary frame is judged by its header's
+    /// *declared* length, before any payload is buffered.
     pub max_frame_bytes: usize,
+    /// Accept the negotiated binary wire framing of [`super::wire`]
+    /// (HELLO → HELLO_ACK). When false, a HELLO gets a JSON error line
+    /// — which binary-capable clients take as the fall-back-to-JSON
+    /// signal — and the connection continues in JSON. JSON framing is
+    /// always accepted either way.
+    pub binary_wire: bool,
+    /// Per-connection cap on admitted infers whose reply has not yet
+    /// been written back (0 = unbounded). At the cap, further infers on
+    /// that connection fail with a structured error instead of growing
+    /// server-side reply state without bound under deep pipelining.
+    pub max_inflight: usize,
     /// Deployment-safety contract applied to slots registered by
     /// `{"op":"load"}` (retention depth, quarantine circuit breaker).
     /// Slots created before the server started keep their own config.
@@ -313,6 +359,8 @@ impl Default for ServeConfig {
             max_conns: 0,
             idle_timeout_ms: 0,
             max_frame_bytes: 1 << 20,
+            binary_wire: true,
+            max_inflight: 0,
             slot: SlotConfig::default(),
             store_dir: None,
             trace_capacity: 4096,
@@ -672,67 +720,67 @@ fn serve_impl(provider: Provider, metrics: Arc<Metrics>, cfg: ServeConfig) -> Re
         .collect();
 
     let conns = Arc::new(ConnTracker::new());
+    let ctx = Arc::new(ConnCtx {
+        store: store.clone(),
+        default_model: default_model.clone(),
+        threads: match &provider {
+            Provider::Store { threads, .. } => *threads,
+            Provider::Factory(_) => 0,
+        },
+        input_width: cfg.input_width,
+        deadline_ms: cfg.deadline_ms,
+        idle_timeout_ms: cfg.idle_timeout_ms,
+        max_frame_bytes: cfg.max_frame_bytes,
+        binary_wire: cfg.binary_wire,
+        max_inflight: cfg.max_inflight,
+        slot_cfg: cfg.slot,
+        manifest: manifest.clone(),
+        conns: Arc::clone(&conns),
+        log_json: cfg.log_json,
+        slow_request_ms: cfg.slow_request_ms,
+    });
+
+    // Control-plane pool: ops other than infer run here, off the event
+    // loop, so a slow metrics scrape or a swap's artifact load never
+    // stalls frame dispatch. The sole Sender lives on the event loop;
+    // when it exits, the pool drains and exits.
+    let (control_tx, control_rx) = channel::<ControlTask>();
+    let control_rx = Arc::new(Mutex::new(control_rx));
+    let control: Vec<_> = (0..CONTROL_THREADS)
+        .map(|i| {
+            let rx = Arc::clone(&control_rx);
+            let batcher = Arc::clone(&batcher);
+            let metrics = Arc::clone(&metrics);
+            let ctx = Arc::clone(&ctx);
+            thread::Builder::new()
+                .name(format!("gs-serve-control-{i}"))
+                .spawn(move || control_loop(&rx, &batcher, &metrics, &ctx))
+                .expect("spawn control worker")
+        })
+        .collect();
+
+    // The event loop: nonblocking listener + every client socket on one
+    // poller. Readiness setup failures abort startup (a server that
+    // cannot watch sockets cannot serve).
+    listener
+        .set_nonblocking(true)
+        .context("listener nonblocking")?;
+    let poller = Poller::new().context("create readiness poller")?;
+    poller
+        .register_read(poll::raw_fd(&listener), LISTENER_TOKEN)
+        .context("register listener")?;
     let acceptor = {
         let batcher = Arc::clone(&batcher);
         let metrics = Arc::clone(&metrics);
         let stop2 = Arc::clone(&stop);
-        let tracker = Arc::clone(&conns);
-        let ctx = Arc::new(ConnCtx {
-            store: store.clone(),
-            default_model: default_model.clone(),
-            threads: match &provider {
-                Provider::Store { threads, .. } => *threads,
-                Provider::Factory(_) => 0,
-            },
-            input_width: cfg.input_width,
-            deadline_ms: cfg.deadline_ms,
-            idle_timeout_ms: cfg.idle_timeout_ms,
-            max_frame_bytes: cfg.max_frame_bytes,
-            slot_cfg: cfg.slot,
-            manifest: manifest.clone(),
-            conns: Arc::clone(&conns),
-            log_json: cfg.log_json,
-            slow_request_ms: cfg.slow_request_ms,
-        });
+        let ctx = Arc::clone(&ctx);
         let max_conns = cfg.max_conns;
         thread::Builder::new()
             .name("gs-serve-acceptor".into())
             .spawn(move || {
-                for conn in listener.incoming() {
-                    if stop2.load(Ordering::SeqCst) {
-                        break;
-                    }
-                    let Ok(mut conn) = conn else { continue };
-                    let _ = conn.set_nodelay(true); // JSON-lines RPC: Nagle hurts
-                    if max_conns > 0 && tracker.live.load(Ordering::SeqCst) >= max_conns {
-                        // At capacity: one structured reply, no thread.
-                        let reply = Json::obj(vec![
-                            (
-                                "error",
-                                Json::Str("server at connection capacity; retry later".into()),
-                            ),
-                            ("max_conns", Json::Num(max_conns as f64)),
-                        ]);
-                        let _ = conn.write_all(reply.to_string().as_bytes());
-                        let _ = conn.write_all(b"\n");
-                        continue; // drop = close
-                    }
-                    if ctx.idle_timeout_ms > 0 {
-                        let t = Duration::from_millis(ctx.idle_timeout_ms);
-                        let _ = conn.set_read_timeout(Some(t));
-                        let _ = conn.set_write_timeout(Some(t));
-                    }
-                    let id = tracker.register(&conn);
-                    let batcher = Arc::clone(&batcher);
-                    let metrics = Arc::clone(&metrics);
-                    let ctx = Arc::clone(&ctx);
-                    let guard = ConnGuard { tracker: Arc::clone(&tracker), id };
-                    let handle = thread::spawn(move || {
-                        let _guard = guard;
-                        let _ = handle_connection(conn, &batcher, &metrics, &ctx);
-                    });
-                    tracker.track(handle);
-                }
+                front_end_loop(
+                    &listener, &poller, &batcher, &metrics, &ctx, &stop2, max_conns, &control_tx,
+                );
             })
             .expect("spawn acceptor")
     };
@@ -746,9 +794,19 @@ fn serve_impl(provider: Provider, metrics: Arc<Metrics>, cfg: ServeConfig) -> Re
         default_model,
         workers,
         acceptor: Some(acceptor),
+        control,
         conns,
     })
 }
+
+/// Poller token reserved for the listening socket (connection ids are
+/// sequential from 0 and can never collide with it).
+const LISTENER_TOKEN: u64 = u64::MAX;
+
+/// Control-plane worker count. Two is enough: control ops are rare
+/// next to infers, and the second thread keeps one slow scrape from
+/// head-of-line-blocking a deploy.
+const CONTROL_THREADS: usize = 2;
 
 /// Everything a connection needs to admit and route requests.
 struct ConnCtx {
@@ -761,11 +819,15 @@ struct ConnCtx {
     input_width: usize,
     /// Server-default queue-wait budget (0 = none).
     deadline_ms: u64,
-    /// Per-connection read/idle timeout (0 = none); used for the
-    /// structured goodbye message.
+    /// Per-connection idle/reply-write budget (0 = none); also names
+    /// itself in the structured idle goodbye.
     idle_timeout_ms: u64,
-    /// Frame-size bound for the line reader (0 = unbounded).
+    /// Frame-size bound for the dual-framing decoder (0 = unbounded).
     max_frame_bytes: usize,
+    /// Whether HELLO negotiation is granted (false = JSON-only server).
+    binary_wire: bool,
+    /// Per-connection pipelined-depth cap (0 = unbounded).
+    max_inflight: usize,
     /// Deployment-safety contract for `load`-registered slots.
     slot_cfg: SlotConfig,
     /// Durable registry writer (`--store-dir`); None when persistence is
@@ -813,135 +875,682 @@ fn requested_model<'a>(msg: &'a Json, ctx: &'a ConnCtx) -> Result<&'a str, Strin
     }
 }
 
-/// Outcome of reading one protocol frame through the bounded reader.
-enum Frame {
-    Line(String),
-    /// Orderly end of stream.
-    Eof,
-    /// The frame outgrew `max_frame_bytes` before its newline arrived.
-    TooLarge,
-    /// The connection's read timeout elapsed mid-frame (slowloris or
-    /// idle client).
-    TimedOut,
+/// Which framing a reply must be serialized in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum FrameMode {
+    Json,
+    Binary,
 }
 
-/// Read one newline-terminated frame with a hard byte bound. Unlike
-/// `BufReader::lines`, the buffer can never outgrow `max_bytes`
-/// (0 = unbounded): the cap is checked against the buffered chunk
-/// *before* copying, so an attacker streaming an unterminated line
-/// costs at most one buffer's worth of memory. EOF with a trailing
-/// unterminated frame yields that frame (matching `lines()` semantics).
-fn read_frame(reader: &mut BufReader<TcpStream>, max_bytes: usize) -> std::io::Result<Frame> {
-    let mut buf: Vec<u8> = Vec::new();
-    loop {
-        let chunk = match reader.fill_buf() {
-            Ok(c) => c,
-            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
-            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
-                return Ok(Frame::TimedOut)
+/// Per-connection state shared between the event loop, the connection's
+/// writer thread, and the control pool.
+struct ConnShared {
+    /// The writer half. Writes from the writer thread and the control
+    /// pool serialize on this lock, so frames never interleave
+    /// mid-frame on the stream.
+    sock: Mutex<TcpStream>,
+    /// Replies owed, keyed by request id. Duplicate ids queue FIFO —
+    /// the batcher replies per submission, so counts always match.
+    pending: Mutex<HashMap<u64, VecDeque<PendingReply>>>,
+    /// Admitted infers not yet written back (the `max_inflight` bound).
+    inflight: AtomicUsize,
+    /// Set when a write failed: the socket is gone, remaining replies
+    /// drain as bookkeeping only, and the event loop reaps the entry.
+    dead: AtomicBool,
+}
+
+/// One owed reply: the framing it was requested in, plus the accounting
+/// baton for admitted infers (None for pre-admission rejects).
+struct PendingReply {
+    mode: FrameMode,
+    meta: Option<ReplyMeta>,
+}
+
+/// Event-loop-side connection state.
+struct Conn {
+    /// The read half (nonblocking).
+    stream: TcpStream,
+    shared: Arc<ConnShared>,
+    /// Reply channel consumed by this connection's writer thread. Every
+    /// admitted request carries a clone; dropping the `Conn` closes the
+    /// loop's copy so the writer exits once in-flight work resolves.
+    tx: Sender<(u64, Result<Vec<f32>, Reject>)>,
+    decoder: FrameDecoder,
+    /// Negotiated (or first-INFER-implied) binary mode.
+    binary: bool,
+    last_activity: Instant,
+    _guard: ConnGuard,
+}
+
+/// Work the event loop hands to the control pool.
+enum ControlTask {
+    /// A parsed control-plane op to execute and reply to (JSON line).
+    Op { conn: Arc<ConnShared>, msg: Json },
+    /// Pre-serialized bytes to write (bad-json replies, HELLO_ACKs).
+    Raw { conn: Arc<ConnShared>, bytes: Vec<u8> },
+}
+
+/// What to do with a connection after servicing it.
+enum ConnAction {
+    Keep,
+    /// Orderly close: stop reading, let the writer flush owed replies,
+    /// and let the socket close when the last clone drops.
+    CloseSoft,
+    /// Protocol violation or reap: shut the socket down both ways now.
+    CloseHard,
+}
+
+/// The connection front end: accepts, reads, decodes, and dispatches
+/// every client socket from one thread via level-triggered readiness.
+/// Infer replies leave through per-connection writer threads; control
+/// replies through the control pool. Runs until `stop` is set (the
+/// stop() poke connects, which wakes the listener token).
+#[allow(clippy::too_many_arguments)]
+fn front_end_loop(
+    listener: &TcpListener,
+    poller: &Poller,
+    batcher: &Arc<Batcher>,
+    metrics: &Arc<Metrics>,
+    ctx: &Arc<ConnCtx>,
+    stop: &AtomicBool,
+    max_conns: usize,
+    control_tx: &Sender<ControlTask>,
+) {
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut events: Vec<poll::Event> = Vec::new();
+    let mut scratch = vec![0u8; 64 * 1024];
+    // With an idle budget, wake at a fraction of it to reap on time;
+    // without one, sleep until readiness (stop() wakes the listener).
+    let tick = if ctx.idle_timeout_ms > 0 {
+        Some(Duration::from_millis((ctx.idle_timeout_ms / 4).clamp(10, 250)))
+    } else {
+        None
+    };
+    while !stop.load(Ordering::SeqCst) {
+        if poller.wait(&mut events, tick).is_err() {
+            break;
+        }
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let tokens: Vec<u64> = events.iter().map(|e| e.token).collect();
+        for token in tokens {
+            if token == LISTENER_TOKEN {
+                accept_ready(listener, poller, &mut conns, metrics, ctx, max_conns);
+            } else if let Some(conn) = conns.get_mut(&token) {
+                match service_conn(conn, batcher, metrics, ctx, control_tx, &mut scratch) {
+                    ConnAction::Keep => {}
+                    ConnAction::CloseSoft => close_conn(&mut conns, poller, token, false, metrics),
+                    ConnAction::CloseHard => close_conn(&mut conns, poller, token, true, metrics),
+                }
             }
-            Err(e) => return Err(e),
-        };
-        if chunk.is_empty() {
-            return Ok(if buf.is_empty() {
-                Frame::Eof
-            } else {
-                Frame::Line(String::from_utf8_lossy(&buf).into_owned())
-            });
         }
-        let (len, sep) = match chunk.iter().position(|&b| b == b'\n') {
-            Some(pos) => (pos, 1),
-            None => (chunk.len(), 0),
-        };
-        if max_bytes > 0 && buf.len() + len > max_bytes {
-            return Ok(Frame::TooLarge);
+        // Reap: idle connections (no bytes within the budget — covers a
+        // slowloris stalled mid-frame) and ones whose writer found the
+        // socket dead.
+        let mut reap: Vec<(u64, bool)> = Vec::new();
+        for (&id, conn) in &conns {
+            if conn.shared.dead.load(Ordering::SeqCst) {
+                reap.push((id, false));
+            } else if ctx.idle_timeout_ms > 0
+                && conn.last_activity.elapsed() >= Duration::from_millis(ctx.idle_timeout_ms)
+            {
+                reap.push((id, true));
+            }
         }
-        buf.extend_from_slice(&chunk[..len]);
-        reader.consume(len + sep);
-        if sep == 1 {
-            return Ok(Frame::Line(String::from_utf8_lossy(&buf).into_owned()));
+        for (id, goodbye) in reap {
+            if goodbye {
+                if let Some(conn) = conns.get(&id) {
+                    send_goodbye(
+                        conn,
+                        &err_json(format!(
+                            "idle timeout: no complete frame within {} ms; closing connection",
+                            ctx.idle_timeout_ms
+                        )),
+                    );
+                }
+            }
+            close_conn(&mut conns, poller, id, true, metrics);
+        }
+    }
+    // Orderly shutdown: drop every connection softly — writer threads
+    // flush the structured failures batcher.shutdown() is about to
+    // issue, then exit and are joined by ConnTracker::drain.
+    let ids: Vec<u64> = conns.keys().copied().collect();
+    for id in ids {
+        close_conn(&mut conns, poller, id, false, metrics);
+    }
+}
+
+/// Accept every connection the listener has ready. At `max_conns`, a
+/// new connection gets one structured at-capacity reply and is closed —
+/// no poller slot, no writer thread.
+fn accept_ready(
+    listener: &TcpListener,
+    poller: &Poller,
+    conns: &mut HashMap<u64, Conn>,
+    metrics: &Arc<Metrics>,
+    ctx: &Arc<ConnCtx>,
+    max_conns: usize,
+) {
+    loop {
+        let (conn, _) = match listener.accept() {
+            Ok(accepted) => accepted,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return,
+        };
+        let _ = conn.set_nodelay(true); // line/frame RPC: Nagle hurts
+        let tracker = &ctx.conns;
+        if max_conns > 0 && tracker.live.load(Ordering::SeqCst) >= max_conns {
+            // Best-effort structured reply on a briefly-blocking socket
+            // (nonblocking state is not portably inherited from the
+            // listener, so set it explicitly).
+            let reply = Json::obj(vec![
+                (
+                    "error",
+                    Json::Str("server at connection capacity; retry later".into()),
+                ),
+                ("max_conns", Json::Num(max_conns as f64)),
+            ]);
+            let _ = conn.set_nonblocking(false);
+            let _ = conn.set_write_timeout(Some(Duration::from_millis(500)));
+            let mut w = &conn;
+            let _ = w.write_all(reply.to_string().as_bytes());
+            let _ = w.write_all(b"\n");
+            continue; // drop = close
+        }
+        if conn.set_nonblocking(true).is_err() {
+            continue;
+        }
+        let Ok(wsock) = conn.try_clone() else { continue };
+        let id = tracker.register(&conn);
+        let guard = ConnGuard { tracker: Arc::clone(tracker), id };
+        let shared = Arc::new(ConnShared {
+            sock: Mutex::new(wsock),
+            pending: Mutex::new(HashMap::new()),
+            inflight: AtomicUsize::new(0),
+            dead: AtomicBool::new(false),
+        });
+        let (tx, rx) = channel();
+        let writer_shared = Arc::clone(&shared);
+        let writer_metrics = Arc::clone(metrics);
+        let writer_ctx = Arc::clone(ctx);
+        let handle = thread::Builder::new()
+            .name(format!("gs-serve-writer-{id}"))
+            .spawn(move || writer_loop(rx, &writer_shared, &writer_metrics, &writer_ctx))
+            .expect("spawn connection writer");
+        tracker.track(handle);
+        if poller.register_read(poll::raw_fd(&conn), id).is_err() {
+            // Cannot watch it — give up on this connection. Dropping tx
+            // (with nothing in flight) ends its writer.
+            shared.dead.store(true, Ordering::SeqCst);
+            continue;
+        }
+        conns.insert(
+            id,
+            Conn {
+                stream: conn,
+                shared,
+                tx,
+                decoder: FrameDecoder::new(ctx.max_frame_bytes),
+                binary: false,
+                last_activity: Instant::now(),
+                _guard: guard,
+            },
+        );
+    }
+}
+
+/// Remove a connection from the loop. `hard` shuts the socket down both
+/// ways immediately; a soft close drops the read half and lets the
+/// writer thread flush owed replies before the stream closes.
+fn close_conn(
+    conns: &mut HashMap<u64, Conn>,
+    poller: &Poller,
+    id: u64,
+    hard: bool,
+    metrics: &Metrics,
+) {
+    let Some(conn) = conns.remove(&id) else { return };
+    // Deregister before the read-half fd drops: the poller keys on the
+    // open file description, which the writer clone keeps alive.
+    let _ = poller.deregister(poll::raw_fd(&conn.stream));
+    if hard {
+        let _ = conn.stream.shutdown(Shutdown::Both);
+    }
+    if conn.binary {
+        metrics.binary_connections.fetch_sub(1, Ordering::Relaxed);
+    }
+    // Dropping `conn` drops the loop's tx; once every in-flight
+    // request's clone resolves, the writer drains and exits.
+}
+
+/// Drain every readable byte from one connection and dispatch the
+/// complete frames. Returns what to do with the connection.
+fn service_conn(
+    conn: &mut Conn,
+    batcher: &Arc<Batcher>,
+    metrics: &Arc<Metrics>,
+    ctx: &Arc<ConnCtx>,
+    control_tx: &Sender<ControlTask>,
+    scratch: &mut [u8],
+) -> ConnAction {
+    loop {
+        let n = match (&conn.stream).read(scratch) {
+            Ok(0) => {
+                // EOF. A final unterminated JSON line is still served
+                // (matching the old reader's lines() semantics); a torn
+                // binary frame is not a request. Soft close either way
+                // — owed replies flush before the stream closes.
+                if let Some(line) = conn.decoder.trailing_line() {
+                    let _ = dispatch_json_line(&line, conn, batcher, metrics, ctx, control_tx);
+                }
+                return ConnAction::CloseSoft;
+            }
+            Ok(n) => n,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return ConnAction::Keep,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return ConnAction::CloseHard,
+        };
+        conn.last_activity = Instant::now();
+        conn.decoder.feed(&scratch[..n]);
+        loop {
+            match conn.decoder.next() {
+                Ok(Some(frame)) => {
+                    match dispatch_frame(frame, conn, batcher, metrics, ctx, control_tx) {
+                        ConnAction::Keep => {}
+                        action => return action,
+                    }
+                }
+                Ok(None) => break,
+                Err(DecodeError::TooLarge { .. }) => {
+                    // Mid-frame there is no way to resync on the
+                    // stream, so reply structurally and close.
+                    send_goodbye(
+                        conn,
+                        &Json::obj(vec![
+                            (
+                                "error",
+                                Json::Str("frame too large; closing connection".into()),
+                            ),
+                            ("max_frame_bytes", Json::Num(ctx.max_frame_bytes as f64)),
+                        ]),
+                    );
+                    return ConnAction::CloseHard;
+                }
+                Err(DecodeError::Header(e)) => {
+                    send_goodbye(conn, &err_json(format!("bad frame: {e}; closing connection")));
+                    return ConnAction::CloseHard;
+                }
+            }
         }
     }
 }
 
-fn handle_connection(
-    conn: TcpStream,
-    batcher: &Batcher,
-    metrics: &Metrics,
-    ctx: &ConnCtx,
-) -> Result<()> {
-    let mut writer = conn.try_clone()?;
-    let mut reader = BufReader::new(conn);
-    loop {
-        let line = match read_frame(&mut reader, ctx.max_frame_bytes)? {
-            Frame::Eof => break,
-            Frame::TimedOut => {
-                // Best-effort goodbye — the thread is released either
-                // way, which is the point of the timeout.
-                let bye = err_json(format!(
-                    "idle timeout: no complete frame within {} ms; closing connection",
-                    ctx.idle_timeout_ms
-                ));
-                let _ = writer.write_all(bye.to_string().as_bytes());
-                let _ = writer.write_all(b"\n");
-                break;
-            }
-            Frame::TooLarge => {
-                // Mid-frame there is no way to resync on the stream, so
-                // reply structurally and close.
-                let bye = Json::obj(vec![
-                    (
-                        "error",
-                        Json::Str("frame too large; closing connection".into()),
-                    ),
-                    ("max_frame_bytes", Json::Num(ctx.max_frame_bytes as f64)),
-                ]);
-                let _ = writer.write_all(bye.to_string().as_bytes());
-                let _ = writer.write_all(b"\n");
-                break;
-            }
-            Frame::Line(line) => line,
-        };
-        if line.trim().is_empty() {
-            continue;
-        }
-        let mut infer_meta: Option<ReplyMeta> = None;
-        let reply = match Json::parse(&line) {
-            Err(e) => err_json(format!("bad json: {e}")),
-            Ok(msg) => match msg.get("op").and_then(Json::as_str) {
-                Some("ping") => {
-                    let mut fields = vec![("ok", Json::Bool(true))];
-                    if let Some(slot) = default_slot(ctx) {
-                        fields.push(("version", Json::Num(slot.version() as f64)));
+/// Dispatch one decoded frame. Binary INFERs and all JSON infers go to
+/// [`admit_infer`]; everything else rides the control pool.
+fn dispatch_frame(
+    frame: WireFrame,
+    conn: &mut Conn,
+    batcher: &Arc<Batcher>,
+    metrics: &Arc<Metrics>,
+    ctx: &Arc<ConnCtx>,
+    control_tx: &Sender<ControlTask>,
+) -> ConnAction {
+    match frame {
+        WireFrame::Json(line) => dispatch_json_line(&line, conn, batcher, metrics, ctx, control_tx),
+        WireFrame::Binary(header, payload) => {
+            metrics.frames_binary.fetch_add(1, Ordering::Relaxed);
+            match header.opcode {
+                Opcode::Hello => {
+                    if !ctx.binary_wire {
+                        // Declined: a JSON error line, which the client
+                        // reads as the fall-back-to-JSON signal. The
+                        // connection continues in JSON framing.
+                        let _ = control_tx.send(ControlTask::Raw {
+                            conn: Arc::clone(&conn.shared),
+                            bytes: reply_line(&err_json(
+                                "binary framing disabled on this server".into(),
+                            )),
+                        });
+                        return ConnAction::Keep;
                     }
-                    Json::obj(fields)
+                    if header.version == 0 {
+                        send_goodbye(
+                            conn,
+                            &err_json("unsupported wire protocol version 0".into()),
+                        );
+                        return ConnAction::CloseHard;
+                    }
+                    // Negotiate up: the ACK carries the version the
+                    // server will speak (ours); a newer client is
+                    // expected to downshift.
+                    if !conn.binary {
+                        enter_binary(conn, metrics, true);
+                    }
+                    let _ = control_tx.send(ControlTask::Raw {
+                        conn: Arc::clone(&conn.shared),
+                        bytes: wire::hello_ack_frame(),
+                    });
+                    ConnAction::Keep
                 }
-                Some("stats") => stats_json(metrics, batcher, ctx),
-                Some("models") => models_json(ctx),
-                Some("swap") => handle_swap(&msg, ctx, metrics),
-                Some("load") => handle_load(&msg, ctx, metrics),
-                Some("unload") => handle_unload(&msg, ctx),
-                Some("rollback") => handle_rollback(&msg, ctx, metrics),
-                Some("infer") => handle_infer(&msg, batcher, metrics, ctx, &mut infer_meta),
-                Some("trace") => handle_trace(&msg, metrics),
-                Some("metrics") => Json::obj(vec![
-                    ("ok", Json::Bool(true)),
-                    (
-                        "content_type",
-                        Json::Str("text/plain; version=0.0.4".into()),
-                    ),
-                    ("text", Json::Str(prometheus_text(metrics, batcher, ctx))),
-                ]),
-                Some("profile") => profile_json(&msg),
-                _ => err_json("unknown op".into()),
+                Opcode::Infer => {
+                    if header.version != wire::VERSION {
+                        send_goodbye(
+                            conn,
+                            &err_json(format!(
+                                "unsupported wire protocol version {}",
+                                header.version
+                            )),
+                        );
+                        return ConnAction::CloseHard;
+                    }
+                    if !conn.binary {
+                        // A client may skip HELLO (it forgoes the
+                        // fallback signal); the first INFER flips the
+                        // connection's reply framing all the same.
+                        enter_binary(conn, metrics, false);
+                    }
+                    match InferPayload::decode(&payload) {
+                        Ok(p) => admit_infer(
+                            InferArgs {
+                                id: header.id,
+                                model: Ok(p.model),
+                                input: Some(p.input),
+                                deadline: Ok(p.deadline_ms),
+                            },
+                            FrameMode::Binary,
+                            conn,
+                            batcher,
+                            metrics,
+                            ctx,
+                        ),
+                        Err(e) => reject_unadmitted(
+                            conn,
+                            FrameMode::Binary,
+                            header.id,
+                            format!("bad infer payload: {e}"),
+                            metrics,
+                        ),
+                    }
+                    ConnAction::Keep
+                }
+                Opcode::HelloAck | Opcode::Output | Opcode::Error => {
+                    send_goodbye(
+                        conn,
+                        &err_json(format!(
+                            "unexpected {:?} frame from a client; closing connection",
+                            header.opcode
+                        )),
+                    );
+                    ConnAction::CloseHard
+                }
+            }
+        }
+    }
+}
+
+/// Flip a connection to binary reply framing (idempotent by caller
+/// check). `negotiated` distinguishes a real HELLO from an implied
+/// first-INFER entry for the negotiation counter.
+fn enter_binary(conn: &mut Conn, metrics: &Metrics, negotiated: bool) {
+    conn.binary = true;
+    metrics.binary_connections.fetch_add(1, Ordering::Relaxed);
+    if negotiated {
+        metrics.binary_negotiations.fetch_add(1, Ordering::Relaxed);
+        if metrics.recorder.is_enabled() {
+            metrics
+                .recorder
+                .record(EventKind::Negotiate, "", 0, 0, "binary framing");
+        }
+    }
+}
+
+/// Dispatch one JSON line: empty lines are keep-alive no-ops, malformed
+/// lines get an error reply and the connection continues, infer is
+/// admitted inline, and every other op rides the control pool.
+fn dispatch_json_line(
+    line: &str,
+    conn: &mut Conn,
+    batcher: &Arc<Batcher>,
+    metrics: &Arc<Metrics>,
+    ctx: &Arc<ConnCtx>,
+    control_tx: &Sender<ControlTask>,
+) -> ConnAction {
+    let line = line.trim();
+    if line.is_empty() {
+        return ConnAction::Keep;
+    }
+    metrics.frames_json.fetch_add(1, Ordering::Relaxed);
+    match Json::parse(line) {
+        Err(e) => {
+            let _ = control_tx.send(ControlTask::Raw {
+                conn: Arc::clone(&conn.shared),
+                bytes: reply_line(&err_json(format!("bad json: {e}"))),
+            });
+        }
+        Ok(msg) => match msg.get("op").and_then(Json::as_str) {
+            Some("infer") => {
+                let id = msg.get("id").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+                let model = match msg.get("model") {
+                    None => Ok(None),
+                    Some(Json::Str(name)) => Ok(Some(name.clone())),
+                    Some(_) => Err("\"model\" must be a string".to_string()),
+                };
+                let input = msg.get("input").and_then(Json::to_f32_vec);
+                // A present-but-invalid deadline is an error, never a
+                // silent fallthrough (the client clearly wanted one).
+                let deadline = match msg.get("deadline_ms") {
+                    None => Ok(None),
+                    Some(j) => match j.as_f64() {
+                        Some(v) if v >= 0.0 && v.fract() == 0.0 => Ok(Some(v as u64)),
+                        _ => Err("\"deadline_ms\" must be a non-negative integer".to_string()),
+                    },
+                };
+                admit_infer(
+                    InferArgs { id, model, input, deadline },
+                    FrameMode::Json,
+                    conn,
+                    batcher,
+                    metrics,
+                    ctx,
+                );
+            }
+            _ => {
+                let _ = control_tx.send(ControlTask::Op {
+                    conn: Arc::clone(&conn.shared),
+                    msg,
+                });
+            }
+        },
+    }
+    ConnAction::Keep
+}
+
+/// Serialize a JSON reply as one protocol line.
+fn reply_line(reply: &Json) -> Vec<u8> {
+    let mut bytes = reply.to_string().into_bytes();
+    bytes.push(b'\n');
+    bytes
+}
+
+/// Best-effort structured goodbye in the connection's framing, bounded
+/// so a non-reading client cannot stall the event loop.
+fn send_goodbye(conn: &Conn, msg: &Json) {
+    let bytes = if conn.binary {
+        wire::frame(Opcode::Error, 0, msg.to_string().as_bytes())
+    } else {
+        reply_line(msg)
+    };
+    let _ = write_shared(&conn.shared, &bytes, GOODBYE_BUDGET_MS);
+}
+
+/// Write budget for goodbyes off the event loop thread (ms).
+const GOODBYE_BUDGET_MS: u64 = 500;
+
+/// The control pool: executes control-plane ops and writes their
+/// replies (plus pre-serialized raw replies) without blocking the event
+/// loop. Exits when the event loop drops the task channel.
+fn control_loop(
+    rx: &Mutex<Receiver<ControlTask>>,
+    batcher: &Arc<Batcher>,
+    metrics: &Arc<Metrics>,
+    ctx: &Arc<ConnCtx>,
+) {
+    loop {
+        // Hold the receiver lock only for the blocking recv, never
+        // while executing an op — the other pool thread must be able to
+        // pick up the next task meanwhile.
+        let task = match rx.lock().unwrap().recv() {
+            Ok(task) => task,
+            Err(_) => return,
+        };
+        let (conn, bytes) = match task {
+            ControlTask::Raw { conn, bytes } => (conn, bytes),
+            ControlTask::Op { conn, msg } => {
+                let reply = dispatch_control(&msg, batcher, metrics, ctx);
+                (conn, reply_line(&reply))
+            }
+        };
+        if write_shared(&conn, &bytes, ctx.idle_timeout_ms).is_err() {
+            mark_dead(&conn);
+        }
+    }
+}
+
+/// Execute one control-plane op (anything but infer). The infer arm is
+/// defensive: the event loop never routes infer here.
+fn dispatch_control(msg: &Json, batcher: &Batcher, metrics: &Metrics, ctx: &ConnCtx) -> Json {
+    match msg.get("op").and_then(Json::as_str) {
+        Some("ping") => {
+            let mut fields = vec![("ok", Json::Bool(true))];
+            if let Some(slot) = default_slot(ctx) {
+                fields.push(("version", Json::Num(slot.version() as f64)));
+            }
+            Json::obj(fields)
+        }
+        Some("stats") => stats_json(metrics, batcher, ctx),
+        Some("models") => models_json(ctx),
+        Some("swap") => handle_swap(msg, ctx, metrics),
+        Some("load") => handle_load(msg, ctx, metrics),
+        Some("unload") => handle_unload(msg, ctx),
+        Some("rollback") => handle_rollback(msg, ctx, metrics),
+        Some("trace") => handle_trace(msg, metrics),
+        Some("metrics") => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            (
+                "content_type",
+                Json::Str("text/plain; version=0.0.4".into()),
+            ),
+            ("text", Json::Str(prometheus_text(metrics, batcher, ctx))),
+        ]),
+        Some("profile") => profile_json(msg),
+        Some("infer") => err_json("internal error: infer routed to the control plane".into()),
+        _ => err_json("unknown op".into()),
+    }
+}
+
+/// Mark a connection's socket failed and tear it down; the event loop
+/// reaps the entry on its next tick.
+fn mark_dead(shared: &ConnShared) {
+    shared.dead.store(true, Ordering::SeqCst);
+    let _ = shared.sock.lock().unwrap().shutdown(Shutdown::Both);
+}
+
+/// Write a full buffer on the (nonblocking) shared writer half, parking
+/// on writability up to `budget_ms` total (0 = no budget — parity with
+/// the historical blocking writes of an idle-timeout-less server).
+fn write_shared(shared: &ConnShared, bytes: &[u8], budget_ms: u64) -> std::io::Result<()> {
+    let sock = shared.sock.lock().unwrap();
+    write_all_nb(&sock, bytes, budget_ms)
+}
+
+fn write_all_nb(sock: &TcpStream, buf: &[u8], budget_ms: u64) -> std::io::Result<()> {
+    let fd = poll::raw_fd(sock);
+    let started = Instant::now();
+    let mut writer: &TcpStream = sock;
+    let mut off = 0;
+    while off < buf.len() {
+        match writer.write(&buf[off..]) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    ErrorKind::WriteZero,
+                    "socket write returned 0",
+                ))
+            }
+            Ok(n) => off += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if budget_ms > 0 && started.elapsed() >= Duration::from_millis(budget_ms) {
+                    return Err(std::io::Error::new(
+                        ErrorKind::TimedOut,
+                        "reply write outwaited the connection's write budget",
+                    ));
+                }
+                poll::wait_writable(fd, 100)?;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+/// The per-connection writer thread: consumes the connection's reply
+/// channel and flushes each reply in its requested framing **as it
+/// completes** — batch completion order, not request arrival order.
+/// Exits when every sender (the event loop's copy + each in-flight
+/// request's clone) is gone, which guarantees the owed-reply books
+/// drain to zero.
+fn writer_loop(
+    rx: Receiver<(u64, Result<Vec<f32>, Reject>)>,
+    shared: &Arc<ConnShared>,
+    metrics: &Arc<Metrics>,
+    ctx: &Arc<ConnCtx>,
+) {
+    for (id, result) in rx {
+        let owed = {
+            let mut pending = shared.pending.lock().unwrap();
+            match pending.get_mut(&id) {
+                Some(queue) => {
+                    let owed = queue.pop_front();
+                    if queue.is_empty() {
+                        pending.remove(&id);
+                    }
+                    owed
+                }
+                None => None,
+            }
+        };
+        let Some(PendingReply { mode, meta }) = owed else {
+            // A reply with no owed entry (cannot happen via admit_infer;
+            // tolerated so a logic slip never wedges the writer).
+            continue;
+        };
+        shared.inflight.fetch_sub(1, Ordering::SeqCst);
+        metrics.inflight.fetch_sub(1, Ordering::Relaxed);
+        if shared.dead.load(Ordering::SeqCst) {
+            continue; // socket already failed: bookkeeping-only drain
+        }
+        let bytes = match mode {
+            FrameMode::Json => reply_line(&infer_reply_json(id, &result)),
+            FrameMode::Binary => match &result {
+                Ok(out) => wire::frame(Opcode::Output, id, &wire::f32s_le(out)),
+                Err(why) => wire::frame(
+                    Opcode::Error,
+                    id,
+                    reject_json(id, why).to_string().as_bytes(),
+                ),
             },
         };
         let write_started = Instant::now();
-        writer.write_all(reply.to_string().as_bytes())?;
-        writer.write_all(b"\n")?;
+        if write_shared(shared, &bytes, ctx.idle_timeout_ms).is_err() {
+            mark_dead(shared);
+            continue;
+        }
         // An admitted infer finishes its stage accounting only once its
         // reply actually hit the socket.
-        if let Some(meta) = infer_meta {
+        if let Some(meta) = meta {
             let wsecs = write_started.elapsed().as_secs_f64();
             metrics.stages.record(Stage::ReplyWrite, wsecs);
             if let Some(mm) = &meta.mm {
@@ -953,7 +1562,37 @@ fn handle_connection(
             }
         }
     }
-    Ok(())
+}
+
+/// Shape one infer reply (success or structured failure) as JSON.
+fn infer_reply_json(id: u64, result: &Result<Vec<f32>, Reject>) -> Json {
+    match result {
+        Ok(out) => Json::obj(vec![
+            ("id", Json::Num(id as f64)),
+            ("output", Json::nums_f32(out)),
+        ]),
+        Err(why) => reject_json(id, why),
+    }
+}
+
+/// Shape a structured failure; also the payload of binary ERROR frames,
+/// so reject semantics (retry/expiry/quarantine hints) are identical
+/// across framings.
+fn reject_json(id: u64, why: &Reject) -> Json {
+    let mut fields = vec![
+        ("id", Json::Num(id as f64)),
+        ("error", Json::Str(why.error.clone())),
+    ];
+    if let Some(ms) = why.retry_after_ms {
+        fields.push(("retry_after_ms", Json::Num(ms as f64)));
+    }
+    if let Some(ms) = why.waited_ms {
+        fields.push(("waited_ms", Json::Num(ms as f64)));
+    }
+    if let Some(ms) = why.quarantined_for_ms {
+        fields.push(("quarantined_for_ms", Json::Num(ms as f64)));
+    }
+    Json::obj(fields)
 }
 
 /// What the reply path needs to finish an admitted infer's accounting
@@ -1064,53 +1703,102 @@ fn default_slot(ctx: &ConnCtx) -> Option<Arc<ModelSlot>> {
     ctx.store.as_ref()?.get(ctx.default_model.as_deref()?)
 }
 
-fn handle_infer(
-    msg: &Json,
-    batcher: &Batcher,
-    metrics: &Metrics,
-    ctx: &ConnCtx,
-    meta: &mut Option<ReplyMeta>,
-) -> Json {
+/// One infer request, parsed out of either framing into a common
+/// shape. The `Err` legs carry the exact validation message the parse
+/// produced, so both framings reject with identical text.
+struct InferArgs {
+    id: u64,
+    model: Result<Option<String>, String>,
+    input: Option<Vec<f32>>,
+    deadline: Result<Option<u64>, String>,
+}
+
+/// Validate, route, and admit one infer into the batcher — or reject it
+/// pre-admission. Either way exactly one reply becomes owed on the
+/// connection and later flushes through its writer thread; this
+/// function never blocks on the result, which is what lets one event
+/// loop carry every connection.
+fn admit_infer(
+    args: InferArgs,
+    mode: FrameMode,
+    conn: &Conn,
+    batcher: &Arc<Batcher>,
+    metrics: &Arc<Metrics>,
+    ctx: &Arc<ConnCtx>,
+) {
     let started = Instant::now();
-    let id = msg.get("id").and_then(Json::as_f64).unwrap_or(0.0) as u64;
-    let with_id = |mut fields: Vec<(&str, Json)>| {
-        fields.insert(0, ("id", Json::Num(id as f64)));
-        Json::obj(fields)
-    };
+    let id = args.id;
+    // Pipelining depth gate, before any routing work: a client flooding
+    // unanswered requests is refused structurally per request.
+    if ctx.max_inflight > 0 && conn.shared.inflight.load(Ordering::SeqCst) >= ctx.max_inflight {
+        reject_unadmitted(
+            conn,
+            mode,
+            id,
+            format!(
+                "too many in-flight requests on this connection (max {})",
+                ctx.max_inflight
+            ),
+            metrics,
+        );
+        return;
+    }
     // Resolve the route. Factory mode admits only unrouted requests.
     // This lookup is a plain `get` — recency is only bumped further
     // down, once the request has actually been validated and admitted
     // (a stream of rejected requests must not keep a cold model warm).
     let (mut slot, model_name) = match &ctx.store {
         Some(store) => {
-            let name = match requested_model(msg, ctx) {
-                Ok(n) => n,
-                Err(e) => return with_id(vec![("error", Json::Str(e))]),
+            let name = match &args.model {
+                Ok(Some(name)) => name.clone(),
+                Ok(None) => match &ctx.default_model {
+                    Some(default) => default.clone(),
+                    None => {
+                        reject_unadmitted(
+                            conn,
+                            mode,
+                            id,
+                            "server has no default model".into(),
+                            metrics,
+                        );
+                        return;
+                    }
+                },
+                Err(e) => {
+                    reject_unadmitted(conn, mode, id, e.clone(), metrics);
+                    return;
+                }
             };
-            match store.get(name) {
-                Some(slot) => (Some(slot), name.to_string()),
+            match store.get(&name) {
+                Some(slot) => (Some(slot), name),
                 None => {
-                    return with_id(vec![(
-                        "error",
-                        Json::Str(format!("unknown model \"{name}\"")),
-                    )])
+                    reject_unadmitted(
+                        conn,
+                        mode,
+                        id,
+                        format!("unknown model \"{name}\""),
+                        metrics,
+                    );
+                    return;
                 }
             }
         }
         None => {
-            if msg.get("model").is_some() {
-                return with_id(vec![(
-                    "error",
-                    Json::Str(
-                        "model routing unavailable: server runs factory-backed workers".into(),
-                    ),
-                )]);
+            if !matches!(args.model, Ok(None)) {
+                reject_unadmitted(
+                    conn,
+                    mode,
+                    id,
+                    "model routing unavailable: server runs factory-backed workers".into(),
+                    metrics,
+                );
+                return;
             }
             (None, String::new())
         }
     };
     let width = slot.as_ref().map_or(ctx.input_width, |s| s.input_width());
-    let input = match msg.get("input").and_then(Json::to_f32_vec) {
+    let input = match args.input {
         Some(input) if input.len() == width => input,
         _ => {
             let suffix = if model_name.is_empty() {
@@ -1118,10 +1806,14 @@ fn handle_infer(
             } else {
                 format!(" (model \"{model_name}\")")
             };
-            return with_id(vec![(
-                "error",
-                Json::Str(format!("input must be {width} floats{suffix}")),
-            )]);
+            reject_unadmitted(
+                conn,
+                mode,
+                id,
+                format!("input must be {width} floats{suffix}"),
+                metrics,
+            );
+            return;
         }
     };
     let mut route_mm = None;
@@ -1137,21 +1829,29 @@ fn handle_infer(
                 // stale-width request can never join (and fail) a batch
                 // of valid requests on the new slot.
                 if s.input_width() != input.len() {
-                    return with_id(vec![(
-                        "error",
-                        Json::Str(format!(
+                    reject_unadmitted(
+                        conn,
+                        mode,
+                        id,
+                        format!(
                             "input must be {} floats (model \"{model_name}\")",
                             s.input_width()
-                        )),
-                    )]);
+                        ),
+                        metrics,
+                    );
+                    return;
                 }
                 slot = Some(s);
             }
             None => {
-                return with_id(vec![(
-                    "error",
-                    Json::Str(format!("unknown model \"{model_name}\"")),
-                )])
+                reject_unadmitted(
+                    conn,
+                    mode,
+                    id,
+                    format!("unknown model \"{model_name}\""),
+                    metrics,
+                );
+                return;
             }
         }
         let mm = metrics.model(&model_name);
@@ -1159,43 +1859,42 @@ fn handle_infer(
         mm.touch();
         route_mm = Some(mm);
     }
-    // Queue-wait budget: the request's own "deadline_ms" wins over the
-    // server default; an explicit 0 opts out. A present-but-invalid
-    // value is an error, never a silent fallthrough (the client clearly
-    // wanted a deadline; running without one would violate it).
-    let deadline_ms = match msg.get("deadline_ms") {
-        None => ctx.deadline_ms,
-        Some(j) => match j.as_f64() {
-            Some(v) if v >= 0.0 && v.fract() == 0.0 => v as u64,
-            _ => {
-                return with_id(vec![(
-                    "error",
-                    Json::Str("\"deadline_ms\" must be a non-negative integer".into()),
-                )])
-            }
-        },
+    // Queue-wait budget: the request's own deadline wins over the
+    // server default; an explicit 0 opts out.
+    let deadline_ms = match args.deadline {
+        Ok(None) => ctx.deadline_ms,
+        Ok(Some(v)) => v,
+        Err(e) => {
+            reject_unadmitted(conn, mode, id, e, metrics);
+            return;
+        }
     };
-    let (tx, rx) = channel();
     let cap = slot.as_ref().map_or(usize::MAX, |s| s.batch_capacity());
     if metrics.recorder.is_enabled() {
         metrics
             .recorder
             .record(EventKind::Admit, &model_name, id, 0, "");
     }
-    *meta = Some(ReplyMeta {
+    push_pending(
+        conn,
+        mode,
         id,
-        model: model_name.clone(),
-        mm: route_mm,
-        started,
-    });
+        Some(ReplyMeta {
+            id,
+            model: model_name.clone(),
+            mm: route_mm,
+            started,
+        }),
+        metrics,
+    );
     // A refused submit (overload shed, shutdown) has already failed the
-    // request's tx with a structured Reject, so the reply path below is
-    // uniform — the Result here is deliberately not consulted.
+    // request's tx with a structured Reject, so the writer-side reply
+    // path is uniform — the Result here is deliberately not consulted.
     let _ = batcher.submit(InferRequest {
         id,
         input,
         enqueued: Instant::now(),
-        tx,
+        tx: conn.tx.clone(),
         model: model_name,
         slot,
         cap,
@@ -1203,29 +1902,30 @@ fn handle_infer(
         deadline_ms: if deadline_ms == 0 { None } else { Some(deadline_ms) },
         probe: false,
     });
-    match rx.recv() {
-        Ok((id, Ok(out))) => Json::obj(vec![
-            ("id", Json::Num(id as f64)),
-            ("output", Json::nums_f32(&out)),
-        ]),
-        Ok((id, Err(why))) => {
-            let mut fields = vec![
-                ("id", Json::Num(id as f64)),
-                ("error", Json::Str(why.error)),
-            ];
-            if let Some(ms) = why.retry_after_ms {
-                fields.push(("retry_after_ms", Json::Num(ms as f64)));
-            }
-            if let Some(ms) = why.waited_ms {
-                fields.push(("waited_ms", Json::Num(ms as f64)));
-            }
-            if let Some(ms) = why.quarantined_for_ms {
-                fields.push(("quarantined_for_ms", Json::Num(ms as f64)));
-            }
-            Json::obj(fields)
-        }
-        Err(_) => err_json("worker dropped".into()),
-    }
+}
+
+/// Refuse an infer before admission: book the owed reply, then fail it
+/// through the connection's own reply channel, so the writer thread is
+/// the single reply path for both framings and rejects serialize in
+/// submission order relative to earlier same-connection requests only
+/// as batches allow — exactly like any other pipelined reply.
+fn reject_unadmitted(conn: &Conn, mode: FrameMode, id: u64, msg: String, metrics: &Metrics) {
+    push_pending(conn, mode, id, None, metrics);
+    let _ = conn.tx.send((id, Err(Reject::error(msg))));
+}
+
+/// Book one owed reply on the connection (bumps both in-flight gauges;
+/// the writer thread decrements them as replies flush).
+fn push_pending(conn: &Conn, mode: FrameMode, id: u64, meta: Option<ReplyMeta>, metrics: &Metrics) {
+    conn.shared
+        .pending
+        .lock()
+        .unwrap()
+        .entry(id)
+        .or_default()
+        .push_back(PendingReply { mode, meta });
+    conn.shared.inflight.fetch_add(1, Ordering::SeqCst);
+    metrics.inflight.fetch_add(1, Ordering::Relaxed);
 }
 
 /// Parse the optional `"canary":{"requests":N,"max_error_rate":F}`
@@ -1692,6 +2392,55 @@ fn prometheus_text(metrics: &Metrics, batcher: &Batcher, ctx: &ConnCtx) -> Strin
         "gs_connections {}",
         ctx.conns.live.load(Ordering::SeqCst)
     );
+    let _ = writeln!(
+        out,
+        "# HELP gs_frames_total Complete request frames decoded, by framing."
+    );
+    let _ = writeln!(out, "# TYPE gs_frames_total counter");
+    let _ = writeln!(
+        out,
+        "gs_frames_total{} {}",
+        labels(&[("framing", "json")]),
+        metrics.frames_json.load(Ordering::Relaxed)
+    );
+    let _ = writeln!(
+        out,
+        "gs_frames_total{} {}",
+        labels(&[("framing", "binary")]),
+        metrics.frames_binary.load(Ordering::Relaxed)
+    );
+    let _ = writeln!(
+        out,
+        "# HELP gs_binary_negotiations_total Connections that negotiated binary framing \
+         (HELLO handshakes granted)."
+    );
+    let _ = writeln!(out, "# TYPE gs_binary_negotiations_total counter");
+    let _ = writeln!(
+        out,
+        "gs_binary_negotiations_total {}",
+        metrics.binary_negotiations.load(Ordering::Relaxed)
+    );
+    let _ = writeln!(
+        out,
+        "# HELP gs_binary_connections Open connections currently speaking binary framing."
+    );
+    let _ = writeln!(out, "# TYPE gs_binary_connections gauge");
+    let _ = writeln!(
+        out,
+        "gs_binary_connections {}",
+        metrics.binary_connections.load(Ordering::Relaxed)
+    );
+    let _ = writeln!(
+        out,
+        "# HELP gs_inflight_requests Requests accepted off a socket whose reply has not \
+         yet been written back."
+    );
+    let _ = writeln!(out, "# TYPE gs_inflight_requests gauge");
+    let _ = writeln!(
+        out,
+        "gs_inflight_requests {}",
+        metrics.inflight.load(Ordering::Relaxed)
+    );
     let _ = writeln!(out, "# HELP gs_uptime_seconds Seconds since server start.");
     let _ = writeln!(out, "# TYPE gs_uptime_seconds gauge");
     let _ = writeln!(out, "gs_uptime_seconds {}", metrics.uptime_ms() as f64 / 1e3);
@@ -1784,6 +2533,22 @@ fn stats_json(metrics: &Metrics, batcher: &Batcher, ctx: &ConnCtx) -> Json {
         (
             "connections",
             Json::Num(ctx.conns.live.load(Ordering::SeqCst) as f64),
+        ),
+        (
+            "inflight",
+            Json::Num(metrics.inflight.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "binary_connections",
+            Json::Num(metrics.binary_connections.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "frames_json",
+            Json::Num(metrics.frames_json.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "frames_binary",
+            Json::Num(metrics.frames_binary.load(Ordering::Relaxed) as f64),
         ),
         (
             "swaps",
@@ -1901,6 +2666,19 @@ fn stats_json(metrics: &Metrics, batcher: &Batcher, ctx: &ConnCtx) -> Json {
     Json::obj(fields)
 }
 
+/// Map a timed-out client read/write to a clear error (the raw io error
+/// kind differs by platform: `WouldBlock` on unix, `TimedOut` on
+/// windows). Shared by [`Client`] and [`PipelinedClient`].
+fn io_ctx<T>(r: std::io::Result<T>) -> Result<T> {
+    r.map_err(|e| match e.kind() {
+        ErrorKind::WouldBlock | ErrorKind::TimedOut => anyhow::anyhow!(
+            "server timed out: no reply within the configured timeout \
+             (server wedged or overloaded)"
+        ),
+        _ => e.into(),
+    })
+}
+
 /// Outcome of a single infer attempt where an overload shed is an
 /// expected, retryable state rather than a hard failure (see
 /// [`Client::try_infer`]).
@@ -1953,27 +2731,14 @@ impl Client {
         Ok(())
     }
 
-    /// Map a timed-out read/write to a clear error (the raw io error
-    /// kind differs by platform: `WouldBlock` on unix, `TimedOut` on
-    /// windows).
-    fn io_ctx<T>(r: std::io::Result<T>) -> Result<T> {
-        r.map_err(|e| match e.kind() {
-            ErrorKind::WouldBlock | ErrorKind::TimedOut => anyhow::anyhow!(
-                "server timed out: no reply within the configured timeout \
-                 (server wedged or overloaded)"
-            ),
-            _ => e.into(),
-        })
-    }
-
     fn roundtrip(&mut self, msg: Json) -> Result<Json> {
-        Self::io_ctx(self.writer.write_all(msg.to_string().as_bytes()))?;
-        Self::io_ctx(self.writer.write_all(b"\n"))?;
+        io_ctx(self.writer.write_all(msg.to_string().as_bytes()))?;
+        io_ctx(self.writer.write_all(b"\n"))?;
         let mut line = String::new();
         // 0 bytes = orderly EOF: surface it as what it is instead of
         // feeding the empty string to the JSON parser (which used to
         // produce a baffling "bad json" error).
-        if Self::io_ctx(self.reader.read_line(&mut line))? == 0 {
+        if io_ctx(self.reader.read_line(&mut line))? == 0 {
             anyhow::bail!("connection closed by server");
         }
         Ok(Json::parse(&line)?)
@@ -2207,5 +2972,363 @@ impl Client {
             anyhow::bail!("unload failed: {err}");
         }
         Ok(())
+    }
+}
+
+/// One reply from a [`PipelinedClient`], tagged with the id of the
+/// request it answers — replies arrive in the server's batch-completion
+/// order, not submission order.
+#[derive(Debug)]
+pub struct PipelinedReply {
+    pub id: u64,
+    /// The infer outcome, or the transport/server failure that ended
+    /// this request (a request stranded in flight by a dead connection
+    /// fails here, structurally — it never hangs).
+    pub outcome: Result<InferOutcome, String>,
+}
+
+/// Why reading one reply stopped.
+enum RecvError {
+    /// The server closed the connection (orderly EOF, or EOF mid-frame).
+    Eof,
+    /// A transport or protocol failure worth surfacing as-is.
+    Other(anyhow::Error),
+}
+
+fn map_recv_io(e: std::io::Error) -> RecvError {
+    match e.kind() {
+        // A reset or aborted connection is a dead server the same as a
+        // clean EOF: fail the in-flight ids structurally, don't bubble
+        // a bare io error that strands them.
+        ErrorKind::UnexpectedEof
+        | ErrorKind::ConnectionReset
+        | ErrorKind::ConnectionAborted
+        | ErrorKind::BrokenPipe => RecvError::Eof,
+        ErrorKind::WouldBlock | ErrorKind::TimedOut => RecvError::Other(anyhow::anyhow!(
+            "server timed out: no reply within the configured timeout \
+             (server wedged or overloaded)"
+        )),
+        _ => RecvError::Other(e.into()),
+    }
+}
+
+/// Shape a JSON error reply into an [`InferOutcome`] (shed and expiry
+/// are expected states) or the server's error text. Exactly the
+/// [`Client::try_infer`] mapping.
+fn json_error_outcome(r: &Json) -> Result<InferOutcome, String> {
+    let err = r
+        .get("error")
+        .and_then(Json::as_str)
+        .unwrap_or("malformed response");
+    if let Some(ms) = r.get("retry_after_ms").and_then(Json::as_f64) {
+        return Ok(InferOutcome::Overloaded { retry_after_ms: ms as u64 });
+    }
+    if let Some(ms) = r.get("waited_ms").and_then(Json::as_f64) {
+        return Ok(InferOutcome::Expired { waited_ms: ms as u64 });
+    }
+    Err(format!("server error: {err}"))
+}
+
+/// Shape one JSON infer reply (success or error) into an outcome.
+fn json_reply_outcome(r: &Json) -> Result<InferOutcome, String> {
+    if r.get("error").and_then(Json::as_str).is_some() {
+        return json_error_outcome(r);
+    }
+    match r.get("output").and_then(Json::to_f32_vec) {
+        Some(out) => Ok(InferOutcome::Output(out)),
+        None => Err("malformed response".into()),
+    }
+}
+
+/// Shape one binary reply frame into an outcome. OUTPUT carries raw
+/// little-endian f32 logits; ERROR carries the same JSON object the
+/// JSON framing would have sent, so reject semantics are identical.
+fn decode_binary_reply(
+    header: &wire::FrameHeader,
+    payload: &[u8],
+) -> Result<Result<InferOutcome, String>> {
+    match header.opcode {
+        Opcode::Output => match wire::le_f32s(payload) {
+            Ok(out) => Ok(Ok(InferOutcome::Output(out))),
+            Err(e) => anyhow::bail!("malformed OUTPUT payload: {e}"),
+        },
+        Opcode::Error => {
+            let text = String::from_utf8_lossy(payload).into_owned();
+            let r = Json::parse(&text)?;
+            Ok(json_error_outcome(&r))
+        }
+        other => anyhow::bail!("unexpected {other:?} reply frame"),
+    }
+}
+
+/// Blocking client with pipelined infers: many requests in flight on
+/// one connection, replies matched to requests by id in whatever order
+/// the server's batches complete. On connect it offers the binary wire
+/// framing of [`super::wire`] (HELLO) and falls back to JSON lines
+/// transparently when the server declines or predates it — the
+/// submit/recv API is identical either way.
+pub struct PipelinedClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    binary: bool,
+    next_id: u64,
+    /// Ids submitted and not yet answered, oldest first.
+    inflight: VecDeque<u64>,
+    /// Infer replies that arrived while waiting for a control reply.
+    queued: VecDeque<PipelinedReply>,
+    /// The server closed the connection; in-flight ids fail one by one
+    /// through [`PipelinedClient::recv`].
+    closed: bool,
+}
+
+impl PipelinedClient {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<PipelinedClient> {
+        Self::from_stream(TcpStream::connect(addr)?)
+    }
+
+    /// Connect with a bound on how long to wait for the server to
+    /// accept (the framing handshake itself then runs unbounded).
+    pub fn connect_timeout(
+        addr: std::net::SocketAddr,
+        timeout: Duration,
+    ) -> Result<PipelinedClient> {
+        Self::from_stream(TcpStream::connect_timeout(&addr, timeout)?)
+    }
+
+    fn from_stream(stream: TcpStream) -> Result<PipelinedClient> {
+        let _ = stream.set_nodelay(true);
+        let mut writer = stream.try_clone()?;
+        let mut reader = BufReader::new(stream);
+        io_ctx(writer.write_all(&wire::hello_frame()))?;
+        // The first reply byte decides the framing. A binary HELLO_ACK
+        // grants it. Any JSON line — an old server's "bad json"
+        // complaint about the HELLO bytes, or a binary-disabled
+        // server's structured error — is the fall-back-to-JSON signal
+        // (the HELLO frame's trailing newline makes it read as exactly
+        // one garbage line to a JSON-only server).
+        let first = {
+            let buf = io_ctx(reader.fill_buf())?;
+            match buf.first() {
+                Some(&b) => b,
+                None => anyhow::bail!("connection closed by server"),
+            }
+        };
+        let binary = if first == wire::MAGIC {
+            let mut header = [0u8; wire::HEADER_LEN];
+            io_ctx(reader.read_exact(&mut header))?;
+            let header = wire::FrameHeader::parse(&header)
+                .map_err(|e| anyhow::anyhow!("handshake failed: {e}"))?;
+            let mut payload = vec![0u8; header.len as usize];
+            io_ctx(reader.read_exact(&mut payload))?;
+            if header.opcode != Opcode::HelloAck {
+                anyhow::bail!(
+                    "handshake failed: expected HELLO_ACK, got {:?}",
+                    header.opcode
+                );
+            }
+            if header.version != wire::VERSION {
+                anyhow::bail!(
+                    "handshake failed: server speaks wire version {}, this client speaks {}",
+                    header.version,
+                    wire::VERSION
+                );
+            }
+            true
+        } else {
+            let mut line = String::new();
+            if io_ctx(reader.read_line(&mut line))? == 0 {
+                anyhow::bail!("connection closed by server");
+            }
+            false
+        };
+        Ok(PipelinedClient {
+            reader,
+            writer,
+            binary,
+            next_id: 1,
+            inflight: VecDeque::new(),
+            queued: VecDeque::new(),
+            closed: false,
+        })
+    }
+
+    /// Whether the connection negotiated binary framing (false = JSON
+    /// fallback, same API).
+    pub fn is_binary(&self) -> bool {
+        self.binary
+    }
+
+    /// Ids submitted and not yet answered.
+    pub fn in_flight(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Bound every subsequent read and write on this connection
+    /// (`None` clears the bound). A timed-out [`PipelinedClient::recv`]
+    /// errors without failing in-flight ids — they stay receivable.
+    pub fn set_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        self.writer.set_read_timeout(timeout)?;
+        self.writer.set_write_timeout(timeout)?;
+        Ok(())
+    }
+
+    /// Submit one infer without waiting for its reply; returns the id
+    /// that [`PipelinedClient::recv`] will eventually answer.
+    pub fn submit(
+        &mut self,
+        model: Option<&str>,
+        input: &[f32],
+        deadline_ms: Option<u64>,
+    ) -> Result<u64> {
+        if self.closed {
+            anyhow::bail!("connection closed by server");
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        if self.binary {
+            let payload = wire::encode_infer(model, deadline_ms, input);
+            io_ctx(self.writer.write_all(&wire::frame(Opcode::Infer, id, &payload)))?;
+        } else {
+            let mut fields = vec![
+                ("op", "infer".into()),
+                ("id", Json::Num(id as f64)),
+                ("input", Json::nums_f32(input)),
+            ];
+            if let Some(model) = model {
+                fields.push(("model", Json::Str(model.into())));
+            }
+            if let Some(ms) = deadline_ms {
+                fields.push(("deadline_ms", Json::Num(ms as f64)));
+            }
+            io_ctx(self.writer.write_all(Json::obj(fields).to_string().as_bytes()))?;
+            io_ctx(self.writer.write_all(b"\n"))?;
+        }
+        self.inflight.push_back(id);
+        Ok(id)
+    }
+
+    /// Receive the next reply, in server completion order. Once the
+    /// server closes the connection, every id still in flight is failed
+    /// with one structured reply each (a dead writer half never hangs
+    /// the reader); only after those drain does `recv` itself error.
+    pub fn recv(&mut self) -> Result<PipelinedReply> {
+        if let Some(r) = self.queued.pop_front() {
+            return Ok(r);
+        }
+        if self.closed {
+            return self.fail_next_inflight();
+        }
+        match self.read_reply() {
+            Ok(reply) => Ok(reply),
+            Err(RecvError::Eof) => {
+                self.closed = true;
+                self.fail_next_inflight()
+            }
+            Err(RecvError::Other(e)) => Err(e),
+        }
+    }
+
+    fn fail_next_inflight(&mut self) -> Result<PipelinedReply> {
+        match self.inflight.pop_front() {
+            Some(id) => Ok(PipelinedReply {
+                id,
+                outcome: Err("connection closed by server with the request in flight".into()),
+            }),
+            None => anyhow::bail!("connection closed by server"),
+        }
+    }
+
+    /// Read one reply off the socket in whichever framing it arrives.
+    fn read_reply(&mut self) -> std::result::Result<PipelinedReply, RecvError> {
+        let first = {
+            let buf = self.reader.fill_buf().map_err(map_recv_io)?;
+            match buf.first() {
+                Some(&b) => b,
+                None => return Err(RecvError::Eof),
+            }
+        };
+        let (id, outcome) = if first == wire::MAGIC {
+            let mut header = [0u8; wire::HEADER_LEN];
+            self.reader.read_exact(&mut header).map_err(map_recv_io)?;
+            let header = wire::FrameHeader::parse(&header)
+                .map_err(|e| RecvError::Other(anyhow::anyhow!("malformed reply frame: {e}")))?;
+            let mut payload = vec![0u8; header.len as usize];
+            self.reader.read_exact(&mut payload).map_err(map_recv_io)?;
+            let outcome = decode_binary_reply(&header, &payload).map_err(RecvError::Other)?;
+            (header.id, outcome)
+        } else {
+            let mut line = String::new();
+            if self.reader.read_line(&mut line).map_err(map_recv_io)? == 0 {
+                return Err(RecvError::Eof);
+            }
+            let r = Json::parse(&line).map_err(|e| RecvError::Other(e.into()))?;
+            let id = r.get("id").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+            (id, json_reply_outcome(&r))
+        };
+        if let Some(pos) = self.inflight.iter().position(|&x| x == id) {
+            self.inflight.remove(pos);
+        }
+        Ok(PipelinedReply { id, outcome })
+    }
+
+    /// Run one control-plane op (always a JSON line, in both framings).
+    /// In binary framing, infer replies landing while the control reply
+    /// is awaited are queued for later [`PipelinedClient::recv`]; in
+    /// JSON framing the two reply kinds share the line framing, so
+    /// control ops require an empty pipeline.
+    fn control(&mut self, msg: Json) -> Result<Json> {
+        if self.closed {
+            anyhow::bail!("connection closed by server");
+        }
+        if !self.binary && !self.inflight.is_empty() {
+            anyhow::bail!(
+                "control ops on a JSON-framed pipelined connection require no infers in \
+                 flight (drain with recv() first)"
+            );
+        }
+        io_ctx(self.writer.write_all(msg.to_string().as_bytes()))?;
+        io_ctx(self.writer.write_all(b"\n"))?;
+        loop {
+            let first = {
+                let buf = io_ctx(self.reader.fill_buf())?;
+                match buf.first() {
+                    Some(&b) => b,
+                    None => {
+                        self.closed = true;
+                        anyhow::bail!("connection closed by server");
+                    }
+                }
+            };
+            if first == wire::MAGIC {
+                match self.read_reply() {
+                    Ok(r) => self.queued.push_back(r),
+                    Err(RecvError::Eof) => {
+                        self.closed = true;
+                        anyhow::bail!("connection closed by server");
+                    }
+                    Err(RecvError::Other(e)) => return Err(e),
+                }
+                continue;
+            }
+            let mut line = String::new();
+            if io_ctx(self.reader.read_line(&mut line))? == 0 {
+                self.closed = true;
+                anyhow::bail!("connection closed by server");
+            }
+            return Ok(Json::parse(&line)?);
+        }
+    }
+
+    pub fn stats(&mut self) -> Result<Json> {
+        self.control(Json::obj(vec![("op", "stats".into())]))
+    }
+
+    /// The Prometheus text exposition, unwrapped from its envelope.
+    pub fn metrics_text(&mut self) -> Result<String> {
+        let r = self.control(Json::obj(vec![("op", "metrics".into())]))?;
+        r.get("text")
+            .and_then(Json::as_str)
+            .map(String::from)
+            .ok_or_else(|| anyhow::anyhow!("malformed metrics response"))
     }
 }

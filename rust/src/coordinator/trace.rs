@@ -55,6 +55,8 @@ pub enum EventKind {
     Swap,
     /// An operator rollback restored a retained generation.
     Rollback,
+    /// A connection negotiated binary wire framing (HELLO → HELLO_ACK).
+    Negotiate,
 }
 
 impl EventKind {
@@ -74,6 +76,7 @@ impl EventKind {
             EventKind::CanaryRolledBack => "canary_rolled_back",
             EventKind::Swap => "swap",
             EventKind::Rollback => "rollback",
+            EventKind::Negotiate => "negotiate",
         }
     }
 }

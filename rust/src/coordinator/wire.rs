@@ -1,0 +1,582 @@
+//! Binary wire framing for the serving protocol.
+//!
+//! The server speaks two framings on the same TCP stream, discriminated
+//! per frame by the first byte:
+//!
+//! * **JSON lines** (the default): one `{...}\n` object per request or
+//!   reply. Always available; the entire control plane (load / swap /
+//!   rollback / stats / trace / metrics / ...) stays JSON-only.
+//! * **Binary frames** (opt-in, negotiated): a fixed 16-byte
+//!   little-endian header followed by `len` payload bytes, used for the
+//!   infer data plane so f32 input and logit vectors cross the wire as
+//!   raw bits instead of base-10 text.
+//!
+//! The discriminator is sound because [`MAGIC`] (`0xF5`) is a UTF-8
+//! continuation byte: it can never begin a JSON line, so a byte stream
+//! position either starts a binary frame or a JSON line, never
+//! ambiguously both.
+//!
+//! ## Frame layout (all integers little-endian)
+//!
+//! | offset | size | field   | meaning                                  |
+//! |--------|------|---------|------------------------------------------|
+//! | 0      | 1    | magic   | always `0xF5`                            |
+//! | 1      | 1    | version | protocol version (currently 1)           |
+//! | 2      | 1    | opcode  | see [`Opcode`]                           |
+//! | 3      | 1    | flags   | reserved, must be 0                      |
+//! | 4      | 8    | id      | client-chosen request id (echoed back)   |
+//! | 12     | 4    | len     | payload byte length                      |
+//! | 16     | len  | payload | opcode-specific                          |
+//!
+//! ## Negotiation
+//!
+//! A client that wants binary framing sends a `HELLO` frame followed by
+//! a bare `\n` immediately after connecting. A binary-capable server
+//! replies `HELLO_ACK` (carrying the version it will speak) and the
+//! trailing newline parses as an empty JSON line, which the server
+//! skips. An old JSON-only server instead reads the HELLO bytes + the
+//! newline as one garbage line and replies with a `bad json: ...`
+//! error object — the client takes any leading non-magic byte in the
+//! reply as the signal to fall back to JSON framing. Either way the
+//! connection stays usable without a reconnect.
+//!
+//! ## Infer payloads
+//!
+//! `INFER` (client → server): `model_len: u16` (0 = the server's
+//! default model), `flags: u8` (bit 0 = deadline present), one reserved
+//! byte, `deadline_ms: u32`, `model_len` bytes of UTF-8 model name,
+//! then the input vector as raw f32 little-endian (payload remainder
+//! must be a multiple of 4).
+//!
+//! `OUTPUT` (server → client): the logit vector as raw f32
+//! little-endian. `ERROR` (server → client): a UTF-8 JSON object with
+//! the same fields a JSON-framed error reply would carry (`error`, and
+//! optionally `retry_after_ms` / `waited_ms` / `quarantined_for_ms`),
+//! so structured reject semantics are identical across framings.
+
+use std::collections::VecDeque;
+
+/// First byte of every binary frame. A UTF-8 continuation byte, so no
+/// JSON line can ever start with it.
+pub const MAGIC: u8 = 0xF5;
+
+/// The protocol version this build speaks.
+pub const VERSION: u8 = 1;
+
+/// Fixed header size in bytes.
+pub const HEADER_LEN: usize = 16;
+
+/// Binary frame opcodes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Opcode {
+    /// Client → server: request binary framing.
+    Hello = 1,
+    /// Server → client: binary framing granted.
+    HelloAck = 2,
+    /// Client → server: infer request (raw f32 input).
+    Infer = 3,
+    /// Server → client: infer success (raw f32 logits).
+    Output = 4,
+    /// Server → client: structured error (UTF-8 JSON payload).
+    Error = 5,
+}
+
+impl Opcode {
+    pub fn from_u8(v: u8) -> Option<Opcode> {
+        match v {
+            1 => Some(Opcode::Hello),
+            2 => Some(Opcode::HelloAck),
+            3 => Some(Opcode::Infer),
+            4 => Some(Opcode::Output),
+            5 => Some(Opcode::Error),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed binary frame header.
+#[derive(Clone, Copy, Debug)]
+pub struct FrameHeader {
+    pub version: u8,
+    pub opcode: Opcode,
+    pub flags: u8,
+    pub id: u64,
+    pub len: u32,
+}
+
+impl FrameHeader {
+    /// Parse a 16-byte header. Rejects a bad magic byte or unknown
+    /// opcode; version is carried through for the caller to judge
+    /// (HELLO negotiates versions, so the parser cannot pre-reject).
+    pub fn parse(bytes: &[u8; HEADER_LEN]) -> Result<FrameHeader, String> {
+        if bytes[0] != MAGIC {
+            return Err(format!("bad frame magic 0x{:02x}", bytes[0]));
+        }
+        let opcode = Opcode::from_u8(bytes[2])
+            .ok_or_else(|| format!("unknown opcode {}", bytes[2]))?;
+        Ok(FrameHeader {
+            version: bytes[1],
+            opcode,
+            flags: bytes[3],
+            id: u64::from_le_bytes(bytes[4..12].try_into().unwrap()),
+            len: u32::from_le_bytes(bytes[12..16].try_into().unwrap()),
+        })
+    }
+
+    pub fn encode(&self) -> [u8; HEADER_LEN] {
+        let mut out = [0u8; HEADER_LEN];
+        out[0] = MAGIC;
+        out[1] = self.version;
+        out[2] = self.opcode as u8;
+        out[3] = self.flags;
+        out[4..12].copy_from_slice(&self.id.to_le_bytes());
+        out[12..16].copy_from_slice(&self.len.to_le_bytes());
+        out
+    }
+}
+
+/// Encode one complete frame (header + payload).
+pub fn frame(opcode: Opcode, id: u64, payload: &[u8]) -> Vec<u8> {
+    let header = FrameHeader {
+        version: VERSION,
+        opcode,
+        flags: 0,
+        id,
+        len: payload.len() as u32,
+    };
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&header.encode());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// The client's opening negotiation bytes: a HELLO frame plus one bare
+/// newline. A binary-capable server skips the newline as an empty JSON
+/// line; an old JSON-only server reads everything as one garbage line
+/// and replies `bad json: ...`, which is the client's fallback signal.
+pub fn hello_frame() -> Vec<u8> {
+    let mut out = frame(Opcode::Hello, 0, &[]);
+    out.push(b'\n');
+    out
+}
+
+/// The server's grant reply to a HELLO.
+pub fn hello_ack_frame() -> Vec<u8> {
+    frame(Opcode::HelloAck, 0, &[])
+}
+
+/// Serialize f32s as raw little-endian bytes.
+pub fn f32s_le(values: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(values.len() * 4);
+    for v in values {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Deserialize raw little-endian bytes to f32s. `bytes.len()` must be a
+/// multiple of 4.
+pub fn le_f32s(bytes: &[u8]) -> Result<Vec<f32>, String> {
+    if bytes.len() % 4 != 0 {
+        return Err(format!(
+            "f32 vector payload length {} is not a multiple of 4",
+            bytes.len()
+        ));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+const INFER_DEADLINE_FLAG: u8 = 0x01;
+const INFER_PREFIX_LEN: usize = 8;
+
+/// Encode an INFER payload (not the frame — see [`frame`]).
+pub fn encode_infer(model: Option<&str>, deadline_ms: Option<u64>, input: &[f32]) -> Vec<u8> {
+    let model = model.unwrap_or("");
+    debug_assert!(model.len() <= u16::MAX as usize);
+    let mut out = Vec::with_capacity(INFER_PREFIX_LEN + model.len() + input.len() * 4);
+    out.extend_from_slice(&(model.len() as u16).to_le_bytes());
+    out.push(if deadline_ms.is_some() { INFER_DEADLINE_FLAG } else { 0 });
+    out.push(0); // reserved
+    let deadline = deadline_ms.unwrap_or(0).min(u32::MAX as u64) as u32;
+    out.extend_from_slice(&deadline.to_le_bytes());
+    out.extend_from_slice(model.as_bytes());
+    out.extend_from_slice(&f32s_le(input));
+    out
+}
+
+/// A decoded INFER payload.
+#[derive(Debug)]
+pub struct InferPayload {
+    /// `None` = route to the server's default model.
+    pub model: Option<String>,
+    /// `None` = use the server's configured deadline.
+    pub deadline_ms: Option<u64>,
+    pub input: Vec<f32>,
+}
+
+impl InferPayload {
+    pub fn decode(payload: &[u8]) -> Result<InferPayload, String> {
+        if payload.len() < INFER_PREFIX_LEN {
+            return Err(format!(
+                "infer payload too short: {} bytes < {INFER_PREFIX_LEN}-byte prefix",
+                payload.len()
+            ));
+        }
+        let model_len = u16::from_le_bytes(payload[0..2].try_into().unwrap()) as usize;
+        let flags = payload[2];
+        let deadline = u32::from_le_bytes(payload[4..8].try_into().unwrap());
+        let rest = &payload[INFER_PREFIX_LEN..];
+        if rest.len() < model_len {
+            return Err(format!(
+                "infer payload truncated: model_len {model_len} > {} remaining bytes",
+                rest.len()
+            ));
+        }
+        let (model_bytes, input_bytes) = rest.split_at(model_len);
+        let model = if model_len == 0 {
+            None
+        } else {
+            Some(
+                std::str::from_utf8(model_bytes)
+                    .map_err(|_| "model name is not valid UTF-8".to_string())?
+                    .to_string(),
+            )
+        };
+        let deadline_ms = if flags & INFER_DEADLINE_FLAG != 0 {
+            Some(deadline as u64)
+        } else {
+            None
+        };
+        Ok(InferPayload {
+            model,
+            deadline_ms,
+            input: le_f32s(input_bytes)?,
+        })
+    }
+}
+
+/// One frame off the wire, in either framing.
+#[derive(Debug)]
+pub enum WireFrame {
+    /// A complete JSON line (newline stripped, may be empty/whitespace).
+    Json(String),
+    /// A complete binary frame.
+    Binary(FrameHeader, Vec<u8>),
+}
+
+/// Why decoding stopped hard (the connection must close).
+#[derive(Debug)]
+pub enum DecodeError {
+    /// A frame (either framing) declared or accumulated more bytes than
+    /// the configured bound. Detected from the header's declared length
+    /// *before* any payload is buffered.
+    TooLarge { declared: usize, limit: usize },
+    /// A malformed binary header (bad magic mid-stream, unknown opcode).
+    Header(String),
+}
+
+/// Incremental dual-framing frame decoder with a hard size bound.
+///
+/// Feed raw bytes in, pull complete frames out. Each frame boundary
+/// re-discriminates on the first byte, so binary frames and JSON lines
+/// interleave freely on one stream (the control plane stays JSON even
+/// after binary negotiation).
+pub struct FrameDecoder {
+    buf: VecDeque<u8>,
+    max_frame_bytes: usize,
+}
+
+impl FrameDecoder {
+    /// `max_frame_bytes = 0` means unbounded.
+    pub fn new(max_frame_bytes: usize) -> FrameDecoder {
+        FrameDecoder { buf: VecDeque::new(), max_frame_bytes }
+    }
+
+    pub fn feed(&mut self, bytes: &[u8]) {
+        self.buf.extend(bytes);
+    }
+
+    fn over_limit(&self, n: usize) -> bool {
+        self.max_frame_bytes > 0 && n > self.max_frame_bytes
+    }
+
+    /// Pull the next complete frame, if one is buffered.
+    ///
+    /// `Ok(None)` = need more bytes. The oversize check fires from the
+    /// binary header's *declared* length (or the accumulated
+    /// newline-less JSON bytes) before any oversized payload is
+    /// buffered into a frame.
+    pub fn next(&mut self) -> Result<Option<WireFrame>, DecodeError> {
+        let first = match self.buf.front() {
+            Some(&b) => b,
+            None => return Ok(None),
+        };
+        if first == MAGIC {
+            if self.buf.len() < HEADER_LEN {
+                return Ok(None);
+            }
+            let mut header_bytes = [0u8; HEADER_LEN];
+            for (i, slot) in header_bytes.iter_mut().enumerate() {
+                *slot = self.buf[i];
+            }
+            let header = FrameHeader::parse(&header_bytes).map_err(DecodeError::Header)?;
+            let len = header.len as usize;
+            if self.over_limit(HEADER_LEN + len) {
+                return Err(DecodeError::TooLarge {
+                    declared: HEADER_LEN + len,
+                    limit: self.max_frame_bytes,
+                });
+            }
+            if self.buf.len() < HEADER_LEN + len {
+                return Ok(None);
+            }
+            self.buf.drain(..HEADER_LEN);
+            let payload: Vec<u8> = self.buf.drain(..len).collect();
+            Ok(Some(WireFrame::Binary(header, payload)))
+        } else {
+            match self.buf.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    if self.over_limit(pos + 1) {
+                        return Err(DecodeError::TooLarge {
+                            declared: pos + 1,
+                            limit: self.max_frame_bytes,
+                        });
+                    }
+                    let line: Vec<u8> = self.buf.drain(..pos + 1).take(pos).collect();
+                    Ok(Some(WireFrame::Json(
+                        String::from_utf8_lossy(&line).into_owned(),
+                    )))
+                }
+                None => {
+                    if self.over_limit(self.buf.len()) {
+                        return Err(DecodeError::TooLarge {
+                            declared: self.buf.len(),
+                            limit: self.max_frame_bytes,
+                        });
+                    }
+                    Ok(None)
+                }
+            }
+        }
+    }
+
+    /// At EOF: the final unterminated JSON line, if the leftover bytes
+    /// are JSON-framed (a torn binary frame yields `None` — raw bytes
+    /// cut mid-frame are not a request).
+    pub fn trailing_line(&mut self) -> Option<String> {
+        if self.buf.is_empty() || self.buf.front() == Some(&MAGIC) {
+            return None;
+        }
+        let line: Vec<u8> = self.buf.drain(..).collect();
+        Some(String::from_utf8_lossy(&line).into_owned())
+    }
+
+    /// Whether a frame is partially buffered (bytes seen, no complete
+    /// frame yet) — the idle reaper uses this to call out slowloris
+    /// drip-feeding in the goodbye it sends.
+    pub fn is_mid_frame(&self) -> bool {
+        !self.buf.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(dec: &mut FrameDecoder) -> Vec<WireFrame> {
+        let mut out = Vec::new();
+        while let Some(f) = dec.next().unwrap() {
+            out.push(f);
+        }
+        out
+    }
+
+    #[test]
+    fn header_roundtrip() {
+        let h = FrameHeader {
+            version: VERSION,
+            opcode: Opcode::Infer,
+            flags: 0,
+            id: 0xDEAD_BEEF_0123,
+            len: 40,
+        };
+        let parsed = FrameHeader::parse(&h.encode()).unwrap();
+        assert_eq!(parsed.version, VERSION);
+        assert_eq!(parsed.opcode, Opcode::Infer);
+        assert_eq!(parsed.id, 0xDEAD_BEEF_0123);
+        assert_eq!(parsed.len, 40);
+    }
+
+    #[test]
+    fn header_rejects_bad_magic_and_opcode() {
+        let mut bytes = frame(Opcode::Infer, 1, &[]);
+        bytes[0] = b'{';
+        let arr: [u8; HEADER_LEN] = bytes[..HEADER_LEN].try_into().unwrap();
+        assert!(FrameHeader::parse(&arr).unwrap_err().contains("magic"));
+        let mut bytes = frame(Opcode::Infer, 1, &[]);
+        bytes[2] = 99;
+        let arr: [u8; HEADER_LEN] = bytes[..HEADER_LEN].try_into().unwrap();
+        assert!(FrameHeader::parse(&arr).unwrap_err().contains("opcode"));
+    }
+
+    #[test]
+    fn f32_bytes_roundtrip_bit_exact() {
+        let values = [0.0f32, -0.0, 1.5, f32::MIN_POSITIVE, 3.0e38, -7.25e-12];
+        let back = le_f32s(&f32s_le(&values)).unwrap();
+        for (a, b) in values.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(le_f32s(&[0, 1, 2]).is_err());
+    }
+
+    #[test]
+    fn infer_payload_roundtrip() {
+        let input = vec![1.0f32, -2.5, 0.125];
+        let enc = encode_infer(Some("beta"), Some(250), &input);
+        let dec = InferPayload::decode(&enc).unwrap();
+        assert_eq!(dec.model.as_deref(), Some("beta"));
+        assert_eq!(dec.deadline_ms, Some(250));
+        assert_eq!(dec.input, input);
+
+        let enc = encode_infer(None, None, &input);
+        let dec = InferPayload::decode(&enc).unwrap();
+        assert_eq!(dec.model, None);
+        assert_eq!(dec.deadline_ms, None);
+        assert_eq!(dec.input, input);
+    }
+
+    #[test]
+    fn infer_payload_zero_deadline_is_explicit() {
+        // deadline_ms=0 (no deadline, overriding the server default)
+        // must survive: the flag bit, not the value, carries presence.
+        let dec = InferPayload::decode(&encode_infer(None, Some(0), &[1.0])).unwrap();
+        assert_eq!(dec.deadline_ms, Some(0));
+    }
+
+    #[test]
+    fn infer_payload_rejects_malformed() {
+        assert!(InferPayload::decode(&[0u8; 4]).unwrap_err().contains("too short"));
+        // model_len claims more bytes than exist.
+        let mut enc = encode_infer(Some("ab"), None, &[]);
+        enc[0] = 200;
+        assert!(InferPayload::decode(&enc).unwrap_err().contains("truncated"));
+        // torn f32 tail
+        let mut enc = encode_infer(None, None, &[1.0]);
+        enc.pop();
+        assert!(InferPayload::decode(&enc).unwrap_err().contains("multiple of 4"));
+        // non-UTF-8 model name
+        let mut enc = encode_infer(Some("ab"), None, &[]);
+        enc[INFER_PREFIX_LEN] = 0xFF;
+        assert!(InferPayload::decode(&enc).unwrap_err().contains("UTF-8"));
+    }
+
+    #[test]
+    fn decoder_interleaves_framings() {
+        let mut dec = FrameDecoder::new(1 << 20);
+        let mut stream = Vec::new();
+        stream.extend_from_slice(b"{\"op\":\"ping\"}\n");
+        stream.extend_from_slice(&frame(Opcode::Infer, 7, &encode_infer(None, None, &[1.0])));
+        stream.extend_from_slice(b"{\"op\":\"stats\"}\n");
+        stream.extend_from_slice(&frame(Opcode::Infer, 8, &encode_infer(None, None, &[2.0])));
+        dec.feed(&stream);
+        let frames = drain(&mut dec);
+        assert_eq!(frames.len(), 4);
+        assert!(matches!(&frames[0], WireFrame::Json(l) if l.contains("ping")));
+        assert!(matches!(&frames[1], WireFrame::Binary(h, _) if h.id == 7));
+        assert!(matches!(&frames[2], WireFrame::Json(l) if l.contains("stats")));
+        assert!(matches!(&frames[3], WireFrame::Binary(h, _) if h.id == 8));
+    }
+
+    #[test]
+    fn decoder_handles_byte_at_a_time_delivery() {
+        let mut stream = hello_frame();
+        stream.extend_from_slice(&frame(Opcode::Infer, 42, &encode_infer(None, None, &[1.0, 2.0])));
+        stream.extend_from_slice(b"{\"op\":\"ping\"}\n");
+        let mut dec = FrameDecoder::new(1 << 20);
+        let mut frames = Vec::new();
+        for b in &stream {
+            dec.feed(std::slice::from_ref(b));
+            frames.extend(drain(&mut dec));
+        }
+        assert_eq!(frames.len(), 4); // HELLO, empty line, INFER, ping
+        assert!(matches!(&frames[0], WireFrame::Binary(h, _) if h.opcode == Opcode::Hello));
+        assert!(matches!(&frames[1], WireFrame::Json(l) if l.is_empty()));
+        assert!(matches!(&frames[2], WireFrame::Binary(h, p)
+            if h.opcode == Opcode::Infer && h.id == 42 && p.len() == 16));
+        assert!(matches!(&frames[3], WireFrame::Json(l) if l.contains("ping")));
+    }
+
+    #[test]
+    fn oversized_binary_frame_rejected_from_header_alone() {
+        let mut dec = FrameDecoder::new(1024);
+        let header = FrameHeader {
+            version: VERSION,
+            opcode: Opcode::Infer,
+            flags: 0,
+            id: 1,
+            len: 1 << 30,
+        };
+        // Header only — no payload bytes ever arrive.
+        dec.feed(&header.encode());
+        match dec.next() {
+            Err(DecodeError::TooLarge { declared, limit }) => {
+                assert_eq!(declared, (1usize << 30) + HEADER_LEN);
+                assert_eq!(limit, 1024);
+            }
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_json_line_rejected_without_newline() {
+        let mut dec = FrameDecoder::new(64);
+        dec.feed(&vec![b'a'; 65]);
+        assert!(matches!(dec.next(), Err(DecodeError::TooLarge { .. })));
+    }
+
+    #[test]
+    fn unbounded_decoder_accepts_large_frames() {
+        let mut dec = FrameDecoder::new(0);
+        let payload = encode_infer(None, None, &vec![1.0f32; 100_000]);
+        dec.feed(&frame(Opcode::Infer, 1, &payload));
+        assert!(matches!(dec.next(), Ok(Some(WireFrame::Binary(..)))));
+    }
+
+    #[test]
+    fn trailing_line_only_for_json_leftovers() {
+        let mut dec = FrameDecoder::new(1 << 20);
+        dec.feed(b"{\"op\":\"ping\"}");
+        assert!(matches!(dec.next(), Ok(None)));
+        assert_eq!(dec.trailing_line().unwrap(), "{\"op\":\"ping\"}");
+        assert!(!dec.is_mid_frame());
+
+        let mut dec = FrameDecoder::new(1 << 20);
+        dec.feed(&frame(Opcode::Infer, 1, &encode_infer(None, None, &[1.0]))[..10]);
+        assert!(matches!(dec.next(), Ok(None)));
+        assert!(dec.is_mid_frame());
+        assert_eq!(dec.trailing_line(), None);
+    }
+
+    #[test]
+    fn crlf_line_keeps_carriage_return_for_caller_trim() {
+        // The decoder strips only the newline; callers trim whitespace
+        // (matching BufRead::read_line + trim in the old reader).
+        let mut dec = FrameDecoder::new(1 << 20);
+        dec.feed(b"{\"op\":\"ping\"}\r\n");
+        match dec.next().unwrap().unwrap() {
+            WireFrame::Json(l) => assert_eq!(l, "{\"op\":\"ping\"}\r"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn hello_frame_ends_with_newline_sentinel() {
+        let bytes = hello_frame();
+        assert_eq!(bytes.len(), HEADER_LEN + 1);
+        assert_eq!(*bytes.last().unwrap(), b'\n');
+        assert_eq!(bytes[0], MAGIC);
+    }
+}

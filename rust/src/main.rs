@@ -8,7 +8,10 @@
 //!                     requests fail with waited_ms instead of executing)]
 //!                    [--max-conns 0 (cap on open connections)]
 //!                    [--idle-timeout-ms 0 (close stalled connections)]
-//!                    [--max-frame-bytes 1048576 (largest request line)]
+//!                    [--max-frame-bytes 1048576 (largest request frame,
+//!                     either framing)]
+//!                    [--no-binary-wire (decline HELLO; JSON framing only)]
+//!                    [--max-inflight 0 (per-connection pipelining depth cap)]
 //!                    [--retain-versions 2 (previous generations kept for
 //!                     rollback/canary; 0 disables both)]
 //!                    [--quarantine-after 0 (failed requests within the
@@ -114,6 +117,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let max_conns = args.usize("max-conns", 0);
     let idle_timeout_ms = args.usize("idle-timeout-ms", 0) as u64;
     let max_frame_bytes = args.usize("max-frame-bytes", ServeConfig::default().max_frame_bytes);
+    // Wire protocol knobs: binary framing is on by default (clients
+    // still opt in per connection via HELLO); --max-inflight bounds
+    // per-connection pipelining depth (0 = unbounded).
+    let binary_wire = !args.has("no-binary-wire");
+    let max_inflight = args.usize("max-inflight", 0);
     // Observability knobs: the flight recorder behind {"op":"trace"},
     // structured logging, and the slow-request tracer.
     let trace_capacity = if args.has("no-trace") {
@@ -177,6 +185,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 max_conns,
                 idle_timeout_ms,
                 max_frame_bytes,
+                binary_wire,
+                max_inflight,
                 slot: slot_cfg,
                 store_dir,
                 trace_capacity,
@@ -204,6 +214,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
              {{\"op\":\"models\"}}, {{\"op\":\"stats\"}}, {{\"op\":\"trace\"}}, \
              {{\"op\":\"metrics\"}}, {{\"op\":\"profile\"}}"
         );
+        if binary_wire {
+            println!(
+                "binary wire framing: enabled (opt-in per connection via HELLO; infer \
+                 payloads as raw little-endian f32; control plane stays JSON)"
+            );
+        }
         loop {
             std::thread::sleep(std::time::Duration::from_secs(3600));
         }
@@ -226,6 +242,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             max_conns,
             idle_timeout_ms,
             max_frame_bytes,
+            binary_wire,
+            max_inflight,
             trace_capacity,
             log_json,
             slow_request_ms,
@@ -237,6 +255,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         handle.addr
     );
     println!("protocol: JSON lines — {{\"op\":\"infer\",\"id\":1,\"input\":[...{inputs} floats]}}");
+    if binary_wire {
+        println!(
+            "binary wire framing: enabled (opt-in per connection via HELLO; infer payloads \
+             as raw little-endian f32; control plane stays JSON)"
+        );
+    }
     let _ = outputs;
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -12,6 +12,7 @@ pub mod f16;
 pub mod fsio;
 pub mod histogram;
 pub mod json;
+pub mod poll;
 pub mod prng;
 pub mod stats;
 pub mod threadpool;

@@ -1,0 +1,581 @@
+//! Minimal readiness-notification shim over the platform poller.
+//!
+//! The serving front end multiplexes every client socket onto one
+//! event-loop thread instead of spawning a thread per connection, which
+//! needs a level-triggered "which fds are readable" primitive. The
+//! crate is deliberately zero-dep, so this module declares the handful
+//! of syscall wrappers it needs (`extern "C"` — std already links
+//! libc) instead of pulling in a polling crate:
+//!
+//! * Linux: `epoll` (`epoll_create1`/`epoll_ctl`/`epoll_wait`).
+//! * macOS/iOS: `kqueue`/`kevent` (the only BSD layout we commit to —
+//!   FreeBSD changed `struct kevent` in 12 and NetBSD differs again).
+//! * Other unix: a `poll(2)` fallback over the registered-fd table.
+//! * Non-unix: [`Poller::new`] fails with `Unsupported` (the serving
+//!   front end is unix-only; everything else in the crate still
+//!   compiles and runs).
+//!
+//! Tokens are caller-chosen `u64`s (the server uses connection ids, so
+//! fd reuse after close can never alias a stale entry). All interest is
+//! read-only and level-triggered: the event loop drains each readable
+//! socket to `WouldBlock`, so a level-triggered wakeup that races a
+//! concurrent drain is harmless. Writers use the single-fd
+//! [`wait_writable`] helper instead of registering write interest —
+//! write stalls are rare and per-connection, not loop-global.
+
+use std::io;
+use std::time::Duration;
+
+/// Raw file descriptor (matches `std::os::unix::io::RawFd` on unix).
+pub type RawFd = i32;
+
+/// The raw fd of a socket (listener or stream). On non-unix targets
+/// this returns -1; [`Poller::new`] fails there first.
+#[cfg(unix)]
+pub fn raw_fd<T: std::os::unix::io::AsRawFd>(sock: &T) -> RawFd {
+    sock.as_raw_fd()
+}
+
+#[cfg(not(unix))]
+pub fn raw_fd<T>(_sock: &T) -> RawFd {
+    -1
+}
+
+/// One readiness event from [`Poller::wait`].
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// The token the fd was registered with.
+    pub token: u64,
+    /// Readable, hung up, or errored — in every case the owner should
+    /// read (a read reports the EOF/error precisely).
+    pub readable: bool,
+}
+
+/// Level-triggered read-readiness poller over the platform facility.
+pub struct Poller {
+    inner: imp::Poller,
+}
+
+impl Poller {
+    pub fn new() -> io::Result<Poller> {
+        Ok(Poller { inner: imp::Poller::new()? })
+    }
+
+    /// Watch `fd` for read readiness, reporting it as `token`.
+    pub fn register_read(&self, fd: RawFd, token: u64) -> io::Result<()> {
+        self.inner.register_read(fd, token)
+    }
+
+    /// Stop watching `fd`. Must be called before the fd is closed when
+    /// other duplicates of it remain open (epoll keys on the open file
+    /// description, not the descriptor).
+    pub fn deregister(&self, fd: RawFd) -> io::Result<()> {
+        self.inner.deregister(fd)
+    }
+
+    /// Block until at least one registered fd is readable or `timeout`
+    /// elapses (`None` = wait forever), filling `out` with the ready
+    /// set. `EINTR` retries internally.
+    pub fn wait(&self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+        self.inner.wait(out, timeout)
+    }
+}
+
+fn timeout_ms(timeout: Option<Duration>) -> i32 {
+    match timeout {
+        None => -1,
+        // Round up so a 0 < t < 1ms budget never busy-spins at 0.
+        Some(t) => t.as_millis().clamp(1, i32::MAX as u128) as i32,
+    }
+}
+
+/// Block until `fd` is writable (or errored — the next write reports
+/// it), up to `timeout_ms` milliseconds. Returns whether the fd became
+/// ready. Used by connection writers to park on a full send buffer
+/// without registering write interest in the main poller.
+#[cfg(unix)]
+pub fn wait_writable(fd: RawFd, timeout_ms: i32) -> io::Result<bool> {
+    use std::os::raw::c_int;
+
+    #[repr(C)]
+    struct PollFd {
+        fd: c_int,
+        events: i16,
+        revents: i16,
+    }
+
+    #[cfg(target_os = "linux")]
+    type NFds = std::os::raw::c_ulong;
+    #[cfg(not(target_os = "linux"))]
+    type NFds = std::os::raw::c_uint;
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: NFds, timeout: c_int) -> c_int;
+    }
+
+    const POLLOUT: i16 = 0x004;
+
+    let mut pfd = PollFd { fd, events: POLLOUT, revents: 0 };
+    loop {
+        let n = unsafe { poll(&mut pfd, 1, timeout_ms) };
+        if n < 0 {
+            let err = io::Error::last_os_error();
+            if err.kind() == io::ErrorKind::Interrupted {
+                continue;
+            }
+            return Err(err);
+        }
+        return Ok(n > 0);
+    }
+}
+
+#[cfg(not(unix))]
+pub fn wait_writable(_fd: RawFd, _timeout_ms: i32) -> io::Result<bool> {
+    Err(io::Error::new(
+        io::ErrorKind::Unsupported,
+        "readiness polling is unix-only",
+    ))
+}
+
+#[cfg(target_os = "linux")]
+mod imp {
+    use super::{timeout_ms, Event};
+    use std::io;
+    use std::os::raw::c_int;
+    use std::time::Duration;
+
+    // Kernel UAPI: packed on x86_64 only.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: c_int) -> c_int;
+        fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        fn close(fd: c_int) -> c_int;
+    }
+
+    const EPOLL_CLOEXEC: c_int = 0o2000000;
+    const EPOLL_CTL_ADD: c_int = 1;
+    const EPOLL_CTL_DEL: c_int = 2;
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    const EPOLLRDHUP: u32 = 0x2000;
+
+    const MAX_EVENTS: usize = 64;
+
+    pub struct Poller {
+        epfd: c_int,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Poller { epfd })
+        }
+
+        pub fn register_read(&self, fd: i32, token: u64) -> io::Result<()> {
+            let mut ev = EpollEvent { events: EPOLLIN | EPOLLRDHUP, data: token };
+            let rc = unsafe { epoll_ctl(self.epfd, EPOLL_CTL_ADD, fd, &mut ev) };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub fn deregister(&self, fd: i32) -> io::Result<()> {
+            let mut ev = EpollEvent { events: 0, data: 0 };
+            let rc = unsafe { epoll_ctl(self.epfd, EPOLL_CTL_DEL, fd, &mut ev) };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub fn wait(&self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+            out.clear();
+            let mut events = [EpollEvent { events: 0, data: 0 }; MAX_EVENTS];
+            loop {
+                let n = unsafe {
+                    epoll_wait(
+                        self.epfd,
+                        events.as_mut_ptr(),
+                        MAX_EVENTS as c_int,
+                        timeout_ms(timeout),
+                    )
+                };
+                if n < 0 {
+                    let err = io::Error::last_os_error();
+                    if err.kind() == io::ErrorKind::Interrupted {
+                        continue;
+                    }
+                    return Err(err);
+                }
+                for ev in events.iter().take(n as usize) {
+                    // Copy out of the (possibly packed) struct before use.
+                    let bits = ev.events;
+                    let token = ev.data;
+                    out.push(Event {
+                        token,
+                        readable: bits & (EPOLLIN | EPOLLERR | EPOLLHUP | EPOLLRDHUP) != 0,
+                    });
+                }
+                return Ok(());
+            }
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.epfd);
+            }
+        }
+    }
+}
+
+#[cfg(any(target_os = "macos", target_os = "ios"))]
+mod imp {
+    use super::Event;
+    use std::io;
+    use std::os::raw::{c_int, c_long, c_void};
+    use std::time::Duration;
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    struct Kevent {
+        ident: usize,
+        filter: i16,
+        flags: u16,
+        fflags: u32,
+        data: isize,
+        udata: *mut c_void,
+    }
+
+    #[repr(C)]
+    struct Timespec {
+        tv_sec: c_long,
+        tv_nsec: c_long,
+    }
+
+    extern "C" {
+        fn kqueue() -> c_int;
+        fn kevent(
+            kq: c_int,
+            changelist: *const Kevent,
+            nchanges: c_int,
+            eventlist: *mut Kevent,
+            nevents: c_int,
+            timeout: *const Timespec,
+        ) -> c_int;
+        fn close(fd: c_int) -> c_int;
+    }
+
+    const EVFILT_READ: i16 = -1;
+    const EV_ADD: u16 = 0x0001;
+    const EV_DELETE: u16 = 0x0002;
+
+    const MAX_EVENTS: usize = 64;
+
+    pub struct Poller {
+        kq: c_int,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            let kq = unsafe { kqueue() };
+            if kq < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Poller { kq })
+        }
+
+        fn change(&self, fd: i32, flags: u16, token: u64) -> io::Result<()> {
+            let change = Kevent {
+                ident: fd as usize,
+                filter: EVFILT_READ,
+                flags,
+                fflags: 0,
+                data: 0,
+                udata: token as usize as *mut c_void,
+            };
+            loop {
+                let rc = unsafe {
+                    kevent(self.kq, &change, 1, std::ptr::null_mut(), 0, std::ptr::null())
+                };
+                if rc < 0 {
+                    let err = io::Error::last_os_error();
+                    if err.kind() == io::ErrorKind::Interrupted {
+                        continue;
+                    }
+                    return Err(err);
+                }
+                return Ok(());
+            }
+        }
+
+        pub fn register_read(&self, fd: i32, token: u64) -> io::Result<()> {
+            self.change(fd, EV_ADD, token)
+        }
+
+        pub fn deregister(&self, fd: i32) -> io::Result<()> {
+            self.change(fd, EV_DELETE, 0)
+        }
+
+        pub fn wait(&self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+            out.clear();
+            let ts = timeout.map(|t| Timespec {
+                tv_sec: t.as_secs() as c_long,
+                tv_nsec: t.subsec_nanos() as c_long,
+            });
+            let ts_ptr = ts.as_ref().map_or(std::ptr::null(), |t| t as *const Timespec);
+            let mut events = [Kevent {
+                ident: 0,
+                filter: 0,
+                flags: 0,
+                fflags: 0,
+                data: 0,
+                udata: std::ptr::null_mut(),
+            }; MAX_EVENTS];
+            loop {
+                let n = unsafe {
+                    kevent(
+                        self.kq,
+                        std::ptr::null(),
+                        0,
+                        events.as_mut_ptr(),
+                        MAX_EVENTS as c_int,
+                        ts_ptr,
+                    )
+                };
+                if n < 0 {
+                    let err = io::Error::last_os_error();
+                    if err.kind() == io::ErrorKind::Interrupted {
+                        continue;
+                    }
+                    return Err(err);
+                }
+                for ev in events.iter().take(n as usize) {
+                    out.push(Event { token: ev.udata as usize as u64, readable: true });
+                }
+                return Ok(());
+            }
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.kq);
+            }
+        }
+    }
+}
+
+#[cfg(all(unix, not(any(target_os = "linux", target_os = "macos", target_os = "ios"))))]
+mod imp {
+    use super::{timeout_ms, Event};
+    use std::io;
+    use std::os::raw::c_int;
+    use std::sync::Mutex;
+    use std::time::Duration;
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    struct PollFd {
+        fd: c_int,
+        events: i16,
+        revents: i16,
+    }
+
+    type NFds = std::os::raw::c_uint;
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: NFds, timeout: c_int) -> c_int;
+    }
+
+    const POLLIN: i16 = 0x001;
+
+    /// `poll(2)` fallback: the registered table is rebuilt into a
+    /// pollfd array every wait. O(n) per call, fine for the connection
+    /// counts this path will ever see on a non-Linux, non-mac unix.
+    pub struct Poller {
+        registered: Mutex<Vec<(c_int, u64)>>,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            Ok(Poller { registered: Mutex::new(Vec::new()) })
+        }
+
+        pub fn register_read(&self, fd: i32, token: u64) -> io::Result<()> {
+            self.registered.lock().unwrap().push((fd, token));
+            Ok(())
+        }
+
+        pub fn deregister(&self, fd: i32) -> io::Result<()> {
+            self.registered.lock().unwrap().retain(|(f, _)| *f != fd);
+            Ok(())
+        }
+
+        pub fn wait(&self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+            out.clear();
+            let table: Vec<(c_int, u64)> = self.registered.lock().unwrap().clone();
+            let mut fds: Vec<PollFd> = table
+                .iter()
+                .map(|(fd, _)| PollFd { fd: *fd, events: POLLIN, revents: 0 })
+                .collect();
+            loop {
+                let n = unsafe { poll(fds.as_mut_ptr(), fds.len() as NFds, timeout_ms(timeout)) };
+                if n < 0 {
+                    let err = io::Error::last_os_error();
+                    if err.kind() == io::ErrorKind::Interrupted {
+                        continue;
+                    }
+                    return Err(err);
+                }
+                for (pfd, (_, token)) in fds.iter().zip(&table) {
+                    if pfd.revents != 0 {
+                        out.push(Event { token: *token, readable: true });
+                    }
+                }
+                return Ok(());
+            }
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod imp {
+    use super::Event;
+    use std::io;
+    use std::time::Duration;
+
+    pub struct Poller;
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            Err(io::Error::new(
+                io::ErrorKind::Unsupported,
+                "readiness polling is unix-only; the serving front end cannot start here",
+            ))
+        }
+
+        pub fn register_read(&self, _fd: i32, _token: u64) -> io::Result<()> {
+            unreachable!("Poller::new never succeeds on non-unix")
+        }
+
+        pub fn deregister(&self, _fd: i32) -> io::Result<()> {
+            unreachable!("Poller::new never succeeds on non-unix")
+        }
+
+        pub fn wait(&self, _out: &mut Vec<Event>, _timeout: Option<Duration>) -> io::Result<()> {
+            unreachable!("Poller::new never succeeds on non-unix")
+        }
+    }
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::time::Duration;
+
+    fn pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let a = TcpStream::connect(addr).unwrap();
+        let (b, _) = listener.accept().unwrap();
+        (a, b)
+    }
+
+    #[test]
+    fn readable_event_carries_token() {
+        let (mut a, b) = pair();
+        let poller = Poller::new().unwrap();
+        poller.register_read(raw_fd(&b), 7).unwrap();
+        let mut events = Vec::new();
+        // Nothing written yet: a short wait times out empty.
+        poller.wait(&mut events, Some(Duration::from_millis(20))).unwrap();
+        assert!(events.is_empty(), "{events:?}");
+        a.write_all(b"x").unwrap();
+        poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].token, 7);
+        assert!(events[0].readable);
+    }
+
+    #[test]
+    fn deregistered_fd_stops_reporting() {
+        let (mut a, b) = pair();
+        let poller = Poller::new().unwrap();
+        poller.register_read(raw_fd(&b), 1).unwrap();
+        a.write_all(b"x").unwrap();
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+        assert_eq!(events.len(), 1);
+        poller.deregister(raw_fd(&b)).unwrap();
+        poller.wait(&mut events, Some(Duration::from_millis(20))).unwrap();
+        assert!(events.is_empty(), "{events:?}");
+    }
+
+    #[test]
+    fn eof_reports_readable() {
+        let (a, b) = pair();
+        let poller = Poller::new().unwrap();
+        poller.register_read(raw_fd(&b), 3).unwrap();
+        drop(a);
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+        assert_eq!(events.len(), 1);
+        assert!(events[0].readable);
+        let mut buf = [0u8; 8];
+        let mut r = &b;
+        assert_eq!(r.read(&mut buf).unwrap(), 0, "read must observe the EOF");
+    }
+
+    #[test]
+    fn fresh_socket_is_writable() {
+        let (a, _b) = pair();
+        assert!(wait_writable(raw_fd(&a), 1000).unwrap());
+    }
+
+    #[test]
+    fn two_fds_distinct_tokens() {
+        let (mut a1, b1) = pair();
+        let (mut a2, b2) = pair();
+        let poller = Poller::new().unwrap();
+        poller.register_read(raw_fd(&b1), 10).unwrap();
+        poller.register_read(raw_fd(&b2), 20).unwrap();
+        a1.write_all(b"x").unwrap();
+        a2.write_all(b"y").unwrap();
+        let mut tokens = Vec::new();
+        let mut events = Vec::new();
+        // Events may arrive across waits; collect until both are seen.
+        for _ in 0..10 {
+            poller.wait(&mut events, Some(Duration::from_millis(200))).unwrap();
+            tokens.extend(events.iter().map(|e| e.token));
+            tokens.sort_unstable();
+            tokens.dedup();
+            if tokens == [10, 20] {
+                return;
+            }
+        }
+        panic!("never saw both tokens: {tokens:?}");
+    }
+}

@@ -1,0 +1,452 @@
+//! Wire-protocol suite: binary framing vs JSON bit-identity, pipelined
+//! out-of-order reply matching, bounded-frame regressions in binary
+//! mode (oversized declared length, torn frame at EOF, slowloris
+//! mid-frame), interleaved control-plane JSON, and the pipelined
+//! client's dead-connection / timeout error mapping.
+
+use gs_sparse::coordinator::{
+    serve_store, server::ServeConfig, wire, Client, Engine, InferOutcome, PipelinedClient,
+    ServerHandle,
+};
+use gs_sparse::model_store::{ModelSlot, ModelStore};
+use gs_sparse::sparse::Pattern;
+use gs_sparse::testing::{build_random_model, ModelSpec};
+use gs_sparse::util::{Json, Prng};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const WIDTH: usize = 12;
+const OUTPUTS: usize = 32;
+
+fn spec(seed: u64) -> ModelSpec {
+    ModelSpec {
+        inputs: WIDTH,
+        hidden: 64,
+        outputs: OUTPUTS,
+        max_batch: 8,
+        pattern: Pattern::Gs { b: 8, k: 8 },
+        sparsity: 0.75,
+        threads: 1,
+        seed,
+        ..ModelSpec::default()
+    }
+}
+
+/// One-model store-backed server ("m" pinned as default).
+fn serve_one(seed: u64, cfg: ServeConfig) -> ServerHandle {
+    let store = Arc::new(ModelStore::with_capacity(0, "m"));
+    let bm = build_random_model(&spec(seed)).unwrap();
+    store
+        .register("m", Arc::new(ModelSlot::new(bm.model, "inline", 1)))
+        .unwrap();
+    let engine = Engine::from_store(store, "m", 1).unwrap();
+    serve_store(
+        &engine,
+        ServeConfig {
+            bind: "127.0.0.1:0".into(),
+            workers: 1,
+            input_width: WIDTH,
+            max_batch: 8,
+            ..cfg
+        },
+    )
+    .unwrap()
+}
+
+fn stat(stats: &Json, key: &str) -> f64 {
+    stats
+        .get(key)
+        .and_then(Json::as_f64)
+        .unwrap_or_else(|| panic!("stats missing {key}: {}", stats.to_string()))
+}
+
+/// The same input through the JSON framing (plain [`Client`]) and the
+/// negotiated binary framing must produce bit-identical logits: the
+/// binary path carries raw little-endian f32, the JSON path f64-exact
+/// shortest-roundtrip decimal — neither may perturb a ULP.
+#[test]
+fn binary_and_json_framings_are_bit_identical() {
+    let mut handle = serve_one(61, ServeConfig::default());
+    let mut json = Client::connect(handle.addr).unwrap();
+    let mut bin = PipelinedClient::connect(handle.addr).unwrap();
+    assert!(bin.is_binary(), "server must grant the HELLO negotiation");
+
+    let mut rng = Prng::new(31);
+    for _ in 0..4 {
+        let x = rng.normal_vec(WIDTH, 1.0);
+        let via_json = json.infer_model("m", &x).unwrap();
+        let id = bin.submit(Some("m"), &x, None).unwrap();
+        let reply = bin.recv().unwrap();
+        assert_eq!(reply.id, id);
+        let via_bin = match reply.outcome {
+            Ok(InferOutcome::Output(out)) => out,
+            other => panic!("binary infer failed: {other:?}"),
+        };
+        assert_eq!(via_json.len(), OUTPUTS);
+        assert_eq!(via_bin.len(), OUTPUTS);
+        for (i, (a, b)) in via_json.iter().zip(&via_bin).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "logit {i} differs across framings: {a} vs {b}"
+            );
+        }
+    }
+    handle.stop();
+}
+
+/// Pipelined replies are matched by id, not arrival order: a request
+/// with a 1 ms deadline submitted *after* a normal one is failed at
+/// batch formation and its reply overtakes the executed one. The
+/// conservation identity must still balance from `stats` alone.
+#[test]
+fn pipelined_replies_match_ids_out_of_order() {
+    let mut handle = serve_one(
+        62,
+        ServeConfig {
+            window_ms: 60,
+            ..ServeConfig::default()
+        },
+    );
+    let mut bin = PipelinedClient::connect(handle.addr).unwrap();
+    assert!(bin.is_binary());
+    let x = Prng::new(32).normal_vec(WIDTH, 1.0);
+
+    let slow = bin.submit(Some("m"), &x, None).unwrap();
+    let doomed = bin.submit(Some("m"), &x, Some(1)).unwrap();
+    assert_eq!(bin.in_flight(), 2);
+
+    let first = bin.recv().unwrap();
+    assert_eq!(
+        first.id, doomed,
+        "the deadline expiry must flush before the executed reply"
+    );
+    assert!(
+        matches!(first.outcome, Ok(InferOutcome::Expired { .. })),
+        "doomed request expires structurally: {:?}",
+        first.outcome
+    );
+    let second = bin.recv().unwrap();
+    assert_eq!(second.id, slow);
+    match second.outcome {
+        Ok(InferOutcome::Output(out)) => assert_eq!(out.len(), OUTPUTS),
+        other => panic!("slow request must execute: {other:?}"),
+    }
+    assert_eq!(bin.in_flight(), 0);
+
+    let stats = bin.stats().unwrap();
+    assert_eq!(
+        stat(&stats, "requests"),
+        stat(&stats, "responses")
+            + stat(&stats, "errors")
+            + stat(&stats, "shed")
+            + stat(&stats, "expired"),
+        "conservation from stats alone: {}",
+        stats.to_string()
+    );
+    assert!(stat(&stats, "expired") >= 1.0);
+    assert!(stat(&stats, "frames_binary") >= 3.0, "HELLO + two INFERs");
+    assert_eq!(stat(&stats, "inflight"), 0.0, "books drained");
+    assert_eq!(stat(&stats, "binary_connections"), 1.0);
+    handle.stop();
+}
+
+/// An oversized binary frame is rejected from its *declared* header
+/// length — before any payload is buffered — with the same structured
+/// goodbye the JSON framing gets, and the connection closes.
+#[test]
+fn oversized_binary_frame_rejected_from_header_alone() {
+    let mut handle = serve_one(
+        63,
+        ServeConfig {
+            max_frame_bytes: 1024,
+            ..ServeConfig::default()
+        },
+    );
+    let mut sock = TcpStream::connect(handle.addr).unwrap();
+    // Header declares a 10 MB payload; not one payload byte is sent.
+    let header = wire::FrameHeader {
+        version: wire::VERSION,
+        opcode: wire::Opcode::Infer,
+        flags: 0,
+        id: 1,
+        len: 10_000_000,
+    };
+    sock.write_all(&header.encode()).unwrap();
+    sock.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut reader = BufReader::new(sock.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let bye = Json::parse(&line).unwrap();
+    assert_eq!(
+        bye.get("error").and_then(Json::as_str),
+        Some("frame too large; closing connection"),
+        "goodbye: {line}"
+    );
+    assert_eq!(bye.get("max_frame_bytes").and_then(Json::as_f64), Some(1024.0));
+    assert_eq!(reader.read_line(&mut line).unwrap(), 0, "connection closed");
+    handle.stop();
+}
+
+/// A binary frame torn by EOF — header promising more payload than ever
+/// arrives — is not a request: no reply, no counter movement, and the
+/// server stays healthy for the next connection. (A torn JSON line, by
+/// contrast, is still served, matching the old reader's semantics.)
+#[test]
+fn torn_binary_frame_at_eof_is_dropped_without_reply() {
+    let mut handle = serve_one(64, ServeConfig::default());
+    let mut sock = TcpStream::connect(handle.addr).unwrap();
+    let header = wire::FrameHeader {
+        version: wire::VERSION,
+        opcode: wire::Opcode::Infer,
+        flags: 0,
+        id: 9,
+        len: 400,
+    };
+    sock.write_all(&header.encode()).unwrap();
+    sock.write_all(&[0u8; 100]).unwrap(); // 300 bytes short
+    sock.shutdown(Shutdown::Write).unwrap();
+    sock.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut buf = Vec::new();
+    sock.read_to_end(&mut buf).unwrap();
+    assert!(buf.is_empty(), "torn frame must not be answered: {buf:?}");
+
+    // The server is unharmed and its books are clean.
+    let mut client = Client::connect(handle.addr).unwrap();
+    let x = Prng::new(33).normal_vec(WIDTH, 1.0);
+    assert_eq!(client.infer_model("m", &x).unwrap().len(), OUTPUTS);
+    let stats = client.stats().unwrap();
+    assert_eq!(stat(&stats, "requests"), 1.0, "torn frame admitted nothing");
+    assert_eq!(stat(&stats, "inflight"), 0.0);
+    handle.stop();
+}
+
+/// Control-plane JSON lines interleave with binary frames on one
+/// connection: stats issued while binary infers are in flight comes
+/// back as JSON, and the binary replies are still delivered.
+#[test]
+fn control_json_interleaves_with_binary_frames() {
+    let mut handle = serve_one(
+        65,
+        ServeConfig {
+            window_ms: 40,
+            ..ServeConfig::default()
+        },
+    );
+    let mut bin = PipelinedClient::connect(handle.addr).unwrap();
+    assert!(bin.is_binary());
+    let x = Prng::new(34).normal_vec(WIDTH, 1.0);
+    let a = bin.submit(Some("m"), &x, None).unwrap();
+    // Control reply arrives from the control pool while the infer still
+    // waits on its batch window.
+    let stats = bin.stats().unwrap();
+    assert!(stat(&stats, "binary_connections") >= 1.0);
+    let b = bin.submit(Some("m"), &x, None).unwrap();
+    let mut seen = vec![bin.recv().unwrap(), bin.recv().unwrap()];
+    seen.sort_by_key(|r| r.id);
+    assert_eq!(seen[0].id, a);
+    assert_eq!(seen[1].id, b);
+    for r in &seen {
+        match &r.outcome {
+            Ok(InferOutcome::Output(out)) => assert_eq!(out.len(), OUTPUTS),
+            other => panic!("infer {} failed: {other:?}", r.id),
+        }
+    }
+    let text = bin.metrics_text().unwrap();
+    assert!(
+        text.contains("gs_frames_total{framing=\"binary\"}"),
+        "frame-mode visibility missing:\n{text}"
+    );
+    assert!(text.contains("gs_inflight_requests"));
+    handle.stop();
+}
+
+/// A slowloris client stalled mid-binary-frame holds a poller slot, not
+/// a thread — and the idle reaper still closes it with the structured
+/// goodbye once no bytes arrive within the budget.
+#[test]
+fn slowloris_mid_binary_frame_is_reaped() {
+    let mut handle = serve_one(
+        66,
+        ServeConfig {
+            idle_timeout_ms: 100,
+            ..ServeConfig::default()
+        },
+    );
+    let mut sock = TcpStream::connect(handle.addr).unwrap();
+    let header = wire::FrameHeader {
+        version: wire::VERSION,
+        opcode: wire::Opcode::Infer,
+        flags: 0,
+        id: 5,
+        len: 4096,
+    };
+    sock.write_all(&header.encode()).unwrap();
+    sock.write_all(&[0u8; 16]).unwrap(); // then stall mid-frame
+    sock.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let started = Instant::now();
+    let mut reader = BufReader::new(sock);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(
+        line.contains("idle timeout: no complete frame within 100 ms"),
+        "goodbye: {line}"
+    );
+    assert!(
+        started.elapsed() < Duration::from_secs(3),
+        "reap must land near the budget, not the read timeout"
+    );
+    assert_eq!(reader.read_line(&mut line).unwrap(), 0, "connection closed");
+    handle.stop();
+}
+
+/// `--no-binary-wire` servers decline the HELLO with a JSON error line;
+/// the pipelined client takes that as the fallback signal and the same
+/// API runs over JSON framing.
+#[test]
+fn binary_disabled_server_falls_back_to_json() {
+    let mut handle = serve_one(
+        67,
+        ServeConfig {
+            binary_wire: false,
+            ..ServeConfig::default()
+        },
+    );
+    let mut bin = PipelinedClient::connect(handle.addr).unwrap();
+    assert!(!bin.is_binary(), "declined HELLO must fall back to JSON");
+    let x = Prng::new(35).normal_vec(WIDTH, 1.0);
+    let id = bin.submit(Some("m"), &x, None).unwrap();
+    let reply = bin.recv().unwrap();
+    assert_eq!(reply.id, id);
+    match reply.outcome {
+        Ok(InferOutcome::Output(out)) => assert_eq!(out.len(), OUTPUTS),
+        other => panic!("JSON-fallback infer failed: {other:?}"),
+    }
+    let stats = bin.stats().unwrap();
+    assert_eq!(stat(&stats, "binary_connections"), 0.0);
+    assert_eq!(stat(&stats, "frames_binary"), 1.0, "just the declined HELLO");
+    handle.stop();
+}
+
+/// The per-connection pipelining cap refuses over-depth infers with a
+/// structured error per request instead of growing reply state without
+/// bound; the admitted ones still execute.
+#[test]
+fn max_inflight_caps_pipelining_depth() {
+    let mut handle = serve_one(
+        68,
+        ServeConfig {
+            window_ms: 200,
+            max_inflight: 2,
+            ..ServeConfig::default()
+        },
+    );
+    let mut bin = PipelinedClient::connect(handle.addr).unwrap();
+    let x = Prng::new(36).normal_vec(WIDTH, 1.0);
+    let ids: Vec<u64> = (0..4)
+        .map(|_| bin.submit(Some("m"), &x, None).unwrap())
+        .collect();
+    let mut outputs = 0;
+    let mut refused = 0;
+    for _ in 0..4 {
+        let r = bin.recv().unwrap();
+        assert!(ids.contains(&r.id));
+        match r.outcome {
+            Ok(InferOutcome::Output(_)) => outputs += 1,
+            Err(e) if e.contains("too many in-flight requests on this connection (max 2)") => {
+                refused += 1
+            }
+            other => panic!("unexpected outcome: {other:?}"),
+        }
+    }
+    assert_eq!(outputs, 2, "the first two admitted requests execute");
+    assert_eq!(refused, 2, "over-depth requests fail structurally");
+    handle.stop();
+}
+
+/// A fake server that grants the HELLO, absorbs `frames` INFER frames,
+/// then hands the socket back for the test to wedge or drop.
+fn fake_binary_server(
+    frames: usize,
+    payload_len: usize,
+) -> (std::net::SocketAddr, std::thread::JoinHandle<TcpStream>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let handle = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        s.write_all(&wire::hello_ack_frame()).unwrap();
+        // Drain the HELLO and every submitted INFER frame so the later
+        // drop closes with nothing unread (clean FIN, not RST).
+        let expected = wire::hello_frame().len() + frames * (wire::HEADER_LEN + payload_len);
+        let mut buf = vec![0u8; expected];
+        s.read_exact(&mut buf).unwrap();
+        s
+    });
+    (addr, handle)
+}
+
+/// INFER payload size for an unrouted request with no deadline: the
+/// fixed prefix plus the raw f32s.
+fn infer_payload_len(floats: usize) -> usize {
+    wire::encode_infer(None, None, &vec![0.0; floats]).len()
+}
+
+/// A dead writer half fails every in-flight id with one structured
+/// reply each — never a hang — and only then does `recv` itself error.
+#[test]
+fn dead_connection_fails_all_inflight_ids_structurally() {
+    let (addr, server) = fake_binary_server(2, infer_payload_len(WIDTH));
+    let mut bin = PipelinedClient::connect(addr).unwrap();
+    assert!(bin.is_binary());
+    let x = vec![0.25f32; WIDTH];
+    let a = bin.submit(None, &x, None).unwrap();
+    let b = bin.submit(None, &x, None).unwrap();
+    drop(server.join().unwrap()); // server read both frames, now dies
+
+    let first = bin.recv().unwrap();
+    assert_eq!(first.id, a);
+    let second = bin.recv().unwrap();
+    assert_eq!(second.id, b);
+    for r in [&first, &second] {
+        let err = r.outcome.as_ref().expect_err("stranded id must fail");
+        assert!(
+            err.contains("connection closed by server with the request in flight"),
+            "structured per-id failure: {err}"
+        );
+    }
+    let end = bin.recv();
+    assert!(
+        end.unwrap_err().to_string().contains("connection closed by server"),
+        "after the books drain, recv errors plainly"
+    );
+    assert_eq!(bin.in_flight(), 0);
+}
+
+/// A recv timeout maps to the same clear "server timed out" error the
+/// blocking client gives — and leaves the in-flight ids receivable (a
+/// slow server is not a dead one).
+#[test]
+fn recv_timeout_maps_to_clear_error_without_failing_ids() {
+    let (addr, server) = fake_binary_server(1, infer_payload_len(WIDTH));
+    let mut bin = PipelinedClient::connect(addr).unwrap();
+    let x = vec![0.5f32; WIDTH];
+    let id = bin.submit(None, &x, None).unwrap();
+    bin.set_timeout(Some(Duration::from_millis(50))).unwrap();
+    let err = bin.recv().unwrap_err().to_string();
+    assert!(
+        err.contains("server timed out: no reply within the configured timeout"),
+        "timeout mapping: {err}"
+    );
+    assert_eq!(bin.in_flight(), 1, "a timeout must not fail in-flight ids");
+
+    // The server then dies; the id fails structurally, not silently.
+    drop(server.join().unwrap());
+    let reply = bin.recv().unwrap();
+    assert_eq!(reply.id, id);
+    assert!(reply
+        .outcome
+        .unwrap_err()
+        .contains("connection closed by server with the request in flight"));
+}
