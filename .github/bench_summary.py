@@ -1,11 +1,13 @@
 #!/usr/bin/env python3
 """Summarize BENCH_native.json (or BENCH_e2e.json) in the CI job log.
 
-For the native kernel doc, prints the two deltas the ROADMAP asks after:
+For the native kernel doc, prints the deltas the ROADMAP asks after:
   * f16 vs f32 packed-plan throughput (per kernel, geometric mean over
     matching pattern/sparsity/batch cells) and plan bytes;
   * direct-write vs accumulate+merge parallel spMM (matmul_par vs
-    matmul_par_merge) per pattern.
+    matmul_par_merge) per pattern;
+  * specialized dispatch vs the generic parallel path (dispatch vs
+    matmul_par) per pattern — the kernel-specialization win.
 
 For the serving doc (bench=e2e_serving), prints the binary-vs-JSON wire
 framing throughput ratio from the pipelined head-to-head.
@@ -93,6 +95,25 @@ def main(path):
             f"  {pattern:14s} direct/merge = {g:.3f}x  "
             f"({len(by_pattern[pattern])} cells)"
         )
+
+    print("\n== specialized dispatch vs generic parallel (dispatch / matmul_par) ==")
+    by_pattern = defaultdict(list)
+    for (pattern, sparsity, batch), kernels in cells.items():
+        for prec in ("f32", "f16"):
+            disp = kernels.get("dispatch", {}).get(prec)
+            par = kernels.get("matmul_par", {}).get(prec)
+            if disp and par and par > 0:
+                by_pattern[pattern].append(disp / par)
+    all_ratios = [r for rs in by_pattern.values() for r in rs]
+    for pattern in sorted(by_pattern):
+        g = geomean(by_pattern[pattern])
+        print(
+            f"  {pattern:14s} dispatch/generic = {g:.3f}x  "
+            f"({len(by_pattern[pattern])} cells)"
+        )
+    if all_ratios:
+        print(f"  {'ALL':14s} dispatch/generic = {geomean(all_ratios):.3f}x  "
+              f"({len(all_ratios)} cells)")
 
     print("\n== best speedup vs scalar, per pattern ==")
     best = defaultdict(float)

@@ -17,12 +17,21 @@
 //! `matmul_par_noprof` re-times the parallel path with the chunk
 //! load-imbalance profiler's runtime switch off, so the profiler's
 //! overhead (one Instant pair per chunk job) has its own row.
+//! `dispatch` is `GsExecPlan::execute` — the production entry point
+//! running whichever specialized variant plan-build classified for the
+//! geometry (unrolled / lane_blocked / scatter_direct / generic); its
+//! delta against `matmul_par` is the specialization win the
+//! `bench_summary` geomean tracks.
 //!
 //! Emits the usual table plus a packed-plan byte table (f32 vs f16), and
 //! writes the machine-readable baseline to `BENCH_native.json` (repo
 //! root) so future PRs have a trajectory to beat. Knobs: GS_BENCH_REPS
 //! (default 5), GS_BENCH_QUICK=1 (256×256 sweep with fewer cells — the
 //! CI smoke configuration).
+
+// The legacy generic-pinned rows stay deliberately: they are the
+// baseline the `dispatch` row is compared against.
+#![allow(deprecated)]
 
 use gs_sparse::bench::Table;
 use gs_sparse::kernels::exec::{
@@ -161,6 +170,11 @@ fn main() -> anyhow::Result<()> {
                         sink += gs_matmul_parallel(plan, &acts_t, batch, &pool)[0];
                     });
                     profile::set_enabled(true);
+                    // The production dispatch path: whichever specialized
+                    // variant plan-build classified for this geometry.
+                    let dispatch = measure(&mut || {
+                        sink += GsExecPlan::execute(plan, &acts_t, batch, Some(&pool))[0];
+                    });
                     let mut kernels = vec![
                         ("scalar", scalar),
                         ("planned", planned),
@@ -168,6 +182,7 @@ fn main() -> anyhow::Result<()> {
                         ("matmul_par", matmul_par),
                         ("matmul_par_merge", matmul_par_merge),
                         ("matmul_par_noprof", matmul_par_noprof),
+                        ("dispatch", dispatch),
                     ];
                     if simd_enabled() {
                         // Scalar-fallback inner block, for the SIMD delta.

@@ -89,7 +89,8 @@ pub use server::{
 pub use uniform::UniformGs;
 
 use crate::kernels::dense::{dense_matmul, dense_matmul_parallel};
-use crate::kernels::exec::{gs_matmul_bias, gs_matmul_parallel_bias, GsExecPlan, PlanPrecision};
+use crate::kernels::dispatch::KernelVariant;
+use crate::kernels::exec::{GsExecPlan, PlanPrecision};
 use crate::sparse::format::GsFormat;
 use crate::util::threadpool::{partition_spans, resolve_threads, ThreadPool};
 use anyhow::{ensure, Result};
@@ -157,6 +158,29 @@ impl SparseModel {
         threads: usize,
         precision: PlanPrecision,
     ) -> Result<SparseModel> {
+        SparseModel::native_pinned(w1, b1, gs, b2, inputs, max_batch, threads, precision, None)
+    }
+
+    /// [`SparseModel::native`] with an optional dispatch-kernel pin —
+    /// the variant an artifact's `.gsm` metadata carries
+    /// ([`crate::model_store::ModelArtifact::kernel_variant`]). A pin
+    /// that fits the packed plan's geometry overrides the pack-time
+    /// classification; one that doesn't (different build, different
+    /// chunking) is ignored and the plan serves on its classification —
+    /// every variant is bit-identical, so the pin is purely a
+    /// performance hint.
+    #[allow(clippy::too_many_arguments)]
+    pub fn native_pinned(
+        w1: Vec<f32>,
+        b1: Vec<f32>,
+        gs: &GsFormat,
+        b2: Vec<f32>,
+        inputs: usize,
+        max_batch: usize,
+        threads: usize,
+        precision: PlanPrecision,
+        variant: Option<KernelVariant>,
+    ) -> Result<SparseModel> {
         let threads = resolve_threads(threads);
         let hidden = gs.cols;
         let outputs = gs.rows;
@@ -169,7 +193,13 @@ impl SparseModel {
         );
         ensure!(b1.len() == hidden, "b1 length {} != hidden {hidden}", b1.len());
         ensure!(b2.len() == outputs, "b2 length {} != outputs {outputs}", b2.len());
-        let plan = Arc::new(GsExecPlan::with_precision(gs, threads.max(1), precision)?);
+        let mut plan = GsExecPlan::with_precision(gs, threads.max(1), precision)?;
+        if let Some(v) = variant {
+            if v.supports(&plan) {
+                plan.set_kernel_variant(v)?;
+            }
+        }
+        let plan = Arc::new(plan);
         let pool = if threads > 1 {
             Some(Arc::new(ThreadPool::new(threads)))
         } else {
@@ -195,6 +225,17 @@ impl SparseModel {
     pub fn precision(&self) -> Option<PlanPrecision> {
         match &self.backend {
             Backend::Native(nb) => Some(nb.plan.precision),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => None,
+        }
+    }
+
+    /// The dispatch-kernel variant the native backend's plan executes
+    /// on (None for pjrt) — surfaced per-slot in `{"op":"models"}`,
+    /// stats, and the Prometheus exposition.
+    pub fn kernel_variant(&self) -> Option<KernelVariant> {
+        match &self.backend {
+            Backend::Native(nb) => Some(nb.plan.kernel_variant()),
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(_) => None,
         }
@@ -303,12 +344,12 @@ impl SparseModel {
             }
             _ => dense_matmul(&nb.w1, &nb.b1, rows, self.inputs, self.hidden, true),
         };
-        let out_t = match &nb.pool {
-            Some(pool) if nb.plan.chunks().len() > 1 => {
-                gs_matmul_parallel_bias(&nb.plan, &Arc::new(h), batch, Some(&nb.b2), pool)
-            }
-            _ => gs_matmul_bias(&nb.plan, &h, batch, Some(&nb.b2)),
-        };
+        // Single dispatch entry point: runs the plan's classified /
+        // tuned / artifact-pinned kernel variant, pooled when the plan
+        // has parallelism to exploit, serial otherwise.
+        let h = Arc::new(h);
+        let out_t =
+            GsExecPlan::execute_bias(&nb.plan, &h, batch, Some(&nb.b2), nb.pool.as_deref());
         // Transpose to request-major (bias already folded into the spMM).
         // Parallel over contiguous batch spans — at most one job per
         // worker, so dispatch overhead never exceeds a handful of

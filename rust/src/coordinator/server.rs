@@ -1989,14 +1989,19 @@ fn handle_swap(msg: &Json, ctx: &ConnCtx, metrics: &Metrics) -> Json {
             metrics.swaps.fetch_add(1, Ordering::Relaxed);
             mm.swaps.fetch_add(1, Ordering::Relaxed);
             persist_manifest(ctx, "swap");
+            let variant = vm
+                .kernel_variant()
+                .map(|v| format!(" {}", v.name()))
+                .unwrap_or_default();
             metrics.recorder.record(
                 EventKind::Swap,
                 name,
                 0,
                 0,
                 &format!(
-                    "v{}{}",
+                    "v{}{}{}",
                     vm.version,
+                    variant,
                     if canary.is_some() { " canary" } else { "" }
                 ),
             );
@@ -2013,6 +2018,9 @@ fn handle_swap(msg: &Json, ctx: &ConnCtx, metrics: &Metrics) -> Json {
             ];
             if let Some(p) = vm.precision() {
                 fields.push(("precision", Json::Str(p.name().into())));
+            }
+            if let Some(v) = vm.kernel_variant() {
+                fields.push(("kernel_variant", Json::Str(v.name().into())));
             }
             Json::obj(fields)
         }
@@ -2062,6 +2070,7 @@ fn handle_load(msg: &Json, ctx: &ConnCtx, metrics: &Metrics) -> Json {
         }
     };
     let precision = model.precision();
+    let variant = model.kernel_variant();
     if let Some(existing) = store.get(name) {
         // Resident name: swap the instantiated model into the captured
         // slot handle (contract-checked, zero-downtime, no second
@@ -2082,6 +2091,9 @@ fn handle_load(msg: &Json, ctx: &ConnCtx, metrics: &Metrics) -> Json {
                 ];
                 if let Some(p) = vm.precision() {
                     fields.push(("precision", Json::Str(p.name().into())));
+                }
+                if let Some(v) = vm.kernel_variant() {
+                    fields.push(("kernel_variant", Json::Str(v.name().into())));
                 }
                 Json::obj(fields)
             }
@@ -2110,6 +2122,9 @@ fn handle_load(msg: &Json, ctx: &ConnCtx, metrics: &Metrics) -> Json {
             ];
             if let Some(p) = precision {
                 fields.push(("precision", Json::Str(p.name().into())));
+            }
+            if let Some(v) = variant {
+                fields.push(("kernel_variant", Json::Str(v.name().into())));
             }
             Json::obj(fields)
         }
@@ -2177,13 +2192,17 @@ fn handle_rollback(msg: &Json, ctx: &ConnCtx, metrics: &Metrics) -> Json {
             if let Some(p) = vm.precision() {
                 fields.push(("precision", Json::Str(p.name().into())));
             }
+            if let Some(v) = vm.kernel_variant() {
+                fields.push(("kernel_variant", Json::Str(v.name().into())));
+            }
             Json::obj(fields)
         }
         Err(e) => err_json(format!("{e:#}")),
     }
 }
 
-/// `{"op":"models"}`: every resident slot with version/precision/geometry.
+/// `{"op":"models"}`: every resident slot with
+/// version/precision/geometry plus the active dispatch kernel variant.
 fn models_json(ctx: &ConnCtx) -> Json {
     let Some(store) = &ctx.store else {
         return err_json("model registry unavailable: server runs factory-backed workers".into());
@@ -2206,6 +2225,9 @@ fn models_json(ctx: &ConnCtx) -> Json {
         ];
         if let Some(p) = vm.precision() {
             fields.push(("precision", Json::Str(p.name().into())));
+        }
+        if let Some(v) = vm.kernel_variant() {
+            fields.push(("kernel_variant", Json::Str(v.name().into())));
         }
         if let Some(r) = slot.last_rollback() {
             fields.push(("last_rollback", Json::Str(r)));
@@ -2445,6 +2467,33 @@ fn prometheus_text(metrics: &Metrics, batcher: &Batcher, ctx: &ConnCtx) -> Strin
     let _ = writeln!(out, "# TYPE gs_uptime_seconds gauge");
     let _ = writeln!(out, "gs_uptime_seconds {}", metrics.uptime_ms() as f64 / 1e3);
 
+    // Info-style series: the dispatch kernel variant each resident model
+    // is serving on. The value is always 1; the payload is the labels.
+    if let Some(store) = &ctx.store {
+        let mut active = Vec::new();
+        for name in store.names() {
+            let Some(slot) = store.get(&name) else { continue };
+            if let Some(v) = slot.current().kernel_variant() {
+                active.push((name, v.name()));
+            }
+        }
+        if !active.is_empty() {
+            let _ = writeln!(
+                out,
+                "# HELP gs_kernel_variant Active dispatch kernel variant per resident model \
+                 (info-style gauge: value is always 1)."
+            );
+            let _ = writeln!(out, "# TYPE gs_kernel_variant gauge");
+            for (name, variant) in &active {
+                let _ = writeln!(
+                    out,
+                    "gs_kernel_variant{} 1",
+                    labels(&[("model", name.as_str()), ("variant", variant)])
+                );
+            }
+        }
+    }
+
     let _ = writeln!(
         out,
         "# HELP gs_request_latency_seconds End-to-end request latency (enqueue to result)."
@@ -2578,6 +2627,9 @@ fn stats_json(metrics: &Metrics, batcher: &Batcher, ctx: &ConnCtx) -> Json {
         if let Some(p) = vm.precision() {
             fields.push(("precision", Json::Str(p.name().into())));
         }
+        if let Some(v) = vm.kernel_variant() {
+            fields.push(("kernel_variant", Json::Str(v.name().into())));
+        }
     }
     if let Some(s) = metrics.latency_summary() {
         fields.push(("p50_ms", Json::Num(s.p50 * 1e3)));
@@ -2644,6 +2696,9 @@ fn stats_json(metrics: &Metrics, batcher: &Batcher, ctx: &ConnCtx) -> Json {
                     mf.push(("retained_versions", Json::Num(slot.retained() as f64)));
                     if let Some(p) = vm.precision() {
                         mf.push(("precision", Json::Str(p.name().into())));
+                    }
+                    if let Some(v) = vm.kernel_variant() {
+                        mf.push(("kernel_variant", Json::Str(v.name().into())));
                     }
                 }
                 None => mf.push(("resident", Json::Bool(false))),

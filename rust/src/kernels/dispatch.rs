@@ -1,0 +1,1062 @@
+//! Pattern-specialized kernel dispatch for [`GsExecPlan`] execution.
+//!
+//! SparseDNN's observation (arXiv 2101.07948) — kernels *specialized to
+//! the sparsity pattern* consistently beat one generic kernel — applies
+//! directly to GS plans: the whole geometry (lane count `b`, lanes per
+//! row `k`, scatter vs. not, density, chunk balance) is known at pack
+//! time. This module turns that knowledge into a dispatch layer so
+//! kernel selection is a property of the *plan* (and, persisted through
+//! `.gsm` metadata, of the deployed artifact) instead of being
+//! hard-coded at every call site:
+//!
+//! * [`KernelVariant`] — the compiled menu of inner loops:
+//!   * `Generic` — the register-blocked loop `exec.rs` always shipped;
+//!     the fallback, valid for every plan.
+//!   * `SmallGroupUnrolled` — `b ∈ {1,2,4,8}`, non-scatter: the lane
+//!     loop is monomorphized over `const B` so it fully unrolls, and
+//!     the lane→slot table becomes a fixed-size array (no bounds
+//!     checks in the hot loop).
+//!   * `LaneBlocked` — lane-heavy single-row groups (`k == b`),
+//!     non-scatter: every lane of every group in a band accumulates
+//!     into the *same* output row, so the output register block is
+//!     hoisted across the band's whole gather-FMA sweep instead of
+//!     being reloaded per lane.
+//!   * `ScatterDirect` — scatter plans: the rowmap is a permutation,
+//!     so chunks own disjoint (if interleaved) row sets; each lane
+//!     writes its global row *directly* through a strided raw-pointer
+//!     view, dropping the `O(rows·batch)` private-accumulate+merge
+//!     pass. The merge path remains in the menu (pin `Generic`) as the
+//!     differential oracle.
+//! * [`KernelVariant::classify`] — deterministic geometry rules run at
+//!   plan build; the result is cached on the plan.
+//! * [`GsExecPlan::execute`] / [`GsExecPlan::execute_bias`] — the single
+//!   entry point serving, benches and examples route through; picks
+//!   serial vs. pooled exactly like the legacy call sites did
+//!   (`pool == None` or a single chunk ⇒ serial).
+//! * [`GsExecPlan::tune`] — optional one-shot microbenchmark: times
+//!   every supported variant on deterministic synthetic activations
+//!   (fixed PRNG seed, menu order, time-boxed) and caches the winner in
+//!   the plan. The choice is persisted in `.gsm` metadata
+//!   (`kernel_variant`) so a served artifact inherits it across
+//!   export → load → swap → rollback.
+//!
+//! **Invariant (not an aspiration): every menu variant is bit-identical
+//! to [`gs_matmul_scalar`](super::exec::gs_matmul_scalar) at any thread
+//! count and precision.** All variants preserve the oracle's
+//! accumulation order per output element — lane order within group,
+//! group order within band, band order — and use the same
+//! [`axpy_block`] arithmetic (mul then add, no FMA contraction), so
+//! specialization changes instruction scheduling, never results. The
+//! property sweep in `tests/native_exec.rs` enforces this across the
+//! full geometry grid.
+
+use super::exec::{
+    axpy_block, axpy_block_scalar, Chunk, GsExecPlan, Joined, JoinedWord, OutPtr, BATCH_BLOCK,
+};
+use crate::kernels::profile;
+use crate::util::prng::Prng;
+use crate::util::threadpool::ThreadPool;
+use anyhow::{ensure, Result};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// The compiled menu of specialized inner loops. Every variant is
+/// bit-identical to the scalar oracle; they differ only in instruction
+/// scheduling (unrolling, register blocking, write strategy).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelVariant {
+    /// The generic register-blocked loop — valid for every geometry, and
+    /// the accumulate+merge strategy on scatter plans (the differential
+    /// oracle for `ScatterDirect`).
+    Generic,
+    /// Fully-unrolled lane loop for small groups (`b ∈ {1,2,4,8}`,
+    /// non-scatter): `const B` monomorphization unrolls the per-group
+    /// sweep and drops its bounds checks.
+    SmallGroupUnrolled,
+    /// Register-blocked over the band's single output row (`k == b`,
+    /// non-scatter): the output block is loaded once per band and
+    /// batch-block, not once per lane.
+    LaneBlocked,
+    /// Strided direct write for scatter plans: rowmap rows are a
+    /// permutation, so each chunk's rows are disjoint and every lane can
+    /// write its global row in place — no private buffer, no
+    /// `O(rows·batch)` merge.
+    ScatterDirect,
+}
+
+/// Coarse density regime of a plan, from groups packed vs. the band
+/// capacity (`cols / k` groups per band).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DensityBand {
+    /// < 5% of band capacity: bands are nearly empty.
+    Low,
+    /// 5–50% of band capacity.
+    Mid,
+    /// ≥ 50% of band capacity: bands are nearly full.
+    High,
+}
+
+/// The classified geometry of a plan — the inputs to
+/// [`KernelVariant::classify`], surfaced so operators and tests can see
+/// *why* a variant was picked.
+#[derive(Clone, Copy, Debug)]
+pub struct PlanGeometry {
+    /// Lanes per group (`b`).
+    pub lanes: usize,
+    /// Lanes per output row within a group (`k`).
+    pub k: usize,
+    /// Output rows per band (`b / k`).
+    pub band_rows: usize,
+    /// Whether the plan carries a scatter rowmap.
+    pub scatter: bool,
+    /// Packed groups as a fraction of band capacity (`cols / k` groups
+    /// per band).
+    pub density: f64,
+    pub density_band: DensityBand,
+    /// Max/mean group count across the plan's balanced chunks — the
+    /// profiler's static skew, ≥ 1.0 (1.0 = perfectly balanced).
+    pub chunk_skew: f64,
+}
+
+impl KernelVariant {
+    /// The full menu, in deterministic classification/tune order.
+    pub const MENU: [KernelVariant; 4] = [
+        KernelVariant::Generic,
+        KernelVariant::SmallGroupUnrolled,
+        KernelVariant::LaneBlocked,
+        KernelVariant::ScatterDirect,
+    ];
+
+    /// Stable label used in `.gsm` metadata, `{"op":"models"}`/stats,
+    /// the Prometheus exposition, and the profiler fingerprint.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelVariant::Generic => "generic",
+            KernelVariant::SmallGroupUnrolled => "unrolled",
+            KernelVariant::LaneBlocked => "lane_blocked",
+            KernelVariant::ScatterDirect => "scatter_direct",
+        }
+    }
+
+    /// Parse a [`name`](KernelVariant::name) label back (metadata
+    /// readers; unknown labels are a clean error so old readers fall
+    /// back to classification).
+    pub fn parse(s: &str) -> Result<KernelVariant> {
+        match s {
+            "generic" => Ok(KernelVariant::Generic),
+            "unrolled" => Ok(KernelVariant::SmallGroupUnrolled),
+            "lane_blocked" => Ok(KernelVariant::LaneBlocked),
+            "scatter_direct" => Ok(KernelVariant::ScatterDirect),
+            other => anyhow::bail!(
+                "unknown kernel variant {other:?} (generic|unrolled|lane_blocked|scatter_direct)"
+            ),
+        }
+    }
+
+    /// Whether this variant can legally execute `plan`'s geometry.
+    /// `Generic` supports everything; the specialized loops have the
+    /// preconditions their code depends on.
+    pub fn supports(self, plan: &GsExecPlan) -> bool {
+        match self {
+            KernelVariant::Generic => true,
+            KernelVariant::SmallGroupUnrolled => {
+                !plan.scatter && plan.b <= 8 && plan.b.is_power_of_two()
+            }
+            KernelVariant::LaneBlocked => !plan.scatter && plan.k == plan.b,
+            KernelVariant::ScatterDirect => plan.scatter,
+        }
+    }
+
+    /// Deterministic geometry classification, run once at plan build
+    /// (and again as the fallback when a pinned/persisted variant does
+    /// not fit the plan):
+    ///
+    /// 1. scatter plans → `ScatterDirect` (always profitable: drops the
+    ///    `O(rows·batch)` merge);
+    /// 2. small groups (`b ≤ 8`, power of two) → `SmallGroupUnrolled`;
+    /// 3. lane-heavy single-row groups (`k == b ≥ 16`) with enough work
+    ///    per band (density ≥ [`DensityBand::Mid`]) and no pathological
+    ///    chunk skew (≤ 4×) → `LaneBlocked`;
+    /// 4. everything else → `Generic`.
+    pub fn classify(plan: &GsExecPlan) -> KernelVariant {
+        let g = plan.geometry();
+        if g.scatter {
+            return KernelVariant::ScatterDirect;
+        }
+        if g.lanes <= 8 && g.lanes.is_power_of_two() {
+            return KernelVariant::SmallGroupUnrolled;
+        }
+        if g.k == g.lanes
+            && g.lanes >= 16
+            && g.density_band != DensityBand::Low
+            && g.chunk_skew <= 4.0
+        {
+            return KernelVariant::LaneBlocked;
+        }
+        KernelVariant::Generic
+    }
+}
+
+impl GsExecPlan {
+    /// The classified geometry this plan dispatches on.
+    pub fn geometry(&self) -> PlanGeometry {
+        let nbands = self.nbands();
+        // A band holds at most `cols / k` groups (each group contributes
+        // `k` of a row's ≤ `cols` nonzeros).
+        let capacity = (self.cols / self.k.max(1)).max(1);
+        let density = if nbands == 0 {
+            0.0
+        } else {
+            self.ngroups() as f64 / (nbands * capacity) as f64
+        };
+        let density_band = if density < 0.05 {
+            DensityBand::Low
+        } else if density < 0.5 {
+            DensityBand::Mid
+        } else {
+            DensityBand::High
+        };
+        let counts: Vec<usize> = self.chunks.iter().map(|c| c.groups).collect();
+        let max = counts.iter().copied().max().unwrap_or(0) as f64;
+        let mean = if counts.is_empty() {
+            0.0
+        } else {
+            counts.iter().sum::<usize>() as f64 / counts.len() as f64
+        };
+        let chunk_skew = if mean > 0.0 { max / mean } else { 1.0 };
+        PlanGeometry {
+            lanes: self.b,
+            k: self.k,
+            band_rows: self.band_rows(),
+            scatter: self.scatter,
+            density,
+            density_band,
+            chunk_skew,
+        }
+    }
+
+    /// The variant [`execute`](GsExecPlan::execute) dispatches to —
+    /// classified at pack time, overridden by
+    /// [`set_kernel_variant`](GsExecPlan::set_kernel_variant) (artifact
+    /// pin) or [`tune`](GsExecPlan::tune).
+    pub fn kernel_variant(&self) -> KernelVariant {
+        self.variant
+    }
+
+    /// Pin the dispatch variant. Fails if the variant's preconditions
+    /// don't hold for this plan's geometry (callers wanting the lenient
+    /// "fall back to classification" behavior — e.g. version-tolerant
+    /// artifact readers — check [`KernelVariant::supports`] first).
+    pub fn set_kernel_variant(&mut self, v: KernelVariant) -> Result<()> {
+        ensure!(
+            v.supports(self),
+            "kernel variant {} does not fit this plan's geometry ({:?})",
+            v.name(),
+            self.geometry()
+        );
+        self.variant = v;
+        Ok(())
+    }
+
+    /// One-shot microbenchmark pick: time every supported menu variant
+    /// on deterministic synthetic activations (fixed PRNG seed) and
+    /// cache the fastest in the plan. Time-boxed to `budget` split
+    /// evenly across candidates (at least one rep each, so a tiny
+    /// budget still yields a decision); candidates run in
+    /// [`KernelVariant::MENU`] order and ties keep the earlier entry,
+    /// so the ordering is deterministic even though the timings are
+    /// not. Serial timings (the per-chunk inner loop is what varies;
+    /// the parallel drivers share it).
+    pub fn tune(&mut self, batch: usize, budget: Duration) -> KernelVariant {
+        let batch = batch.clamp(1, 64);
+        let mut rng = Prng::new(0x675f74756e65); // "g_tune"
+        let acts = rng.normal_vec(self.cols * batch, 1.0);
+        let menu: Vec<KernelVariant> = KernelVariant::MENU
+            .iter()
+            .copied()
+            .filter(|v| v.supports(self))
+            .collect();
+        if menu.len() <= 1 {
+            if let Some(&v) = menu.first() {
+                self.variant = v;
+            }
+            return self.variant;
+        }
+        let share = budget / menu.len() as u32;
+        let mut best: Option<(f64, KernelVariant)> = None;
+        for &v in &menu {
+            // One warmup rep (page in the plan), then best-of until the
+            // share is spent. Reps are capped so a mis-measured clock
+            // can't spin forever.
+            std::hint::black_box(serial_with_variant(self, v, &acts, batch, None));
+            let started = Instant::now();
+            let mut fastest = f64::INFINITY;
+            let mut reps = 0u32;
+            while reps == 0 || (started.elapsed() < share && reps < 64) {
+                let t0 = Instant::now();
+                std::hint::black_box(serial_with_variant(self, v, &acts, batch, None));
+                fastest = fastest.min(t0.elapsed().as_secs_f64());
+                reps += 1;
+            }
+            if best.map_or(true, |(t, _)| fastest < t) {
+                best = Some((fastest, v));
+            }
+        }
+        self.variant = best.expect("menu is non-empty").1;
+        self.variant
+    }
+
+    /// Execute the plan's batched spMM through the dispatch menu:
+    /// `Y = W X`, feature-major in and out (see
+    /// [`gs_matmul`](super::exec::gs_matmul)). Runs on `pool` when one
+    /// is given and the plan has more than one chunk, serially
+    /// otherwise — the same split the legacy call sites hand-coded.
+    /// Bit-identical to [`gs_matmul_scalar`](super::exec::gs_matmul_scalar)
+    /// for every variant at any worker count.
+    pub fn execute(
+        plan: &Arc<GsExecPlan>,
+        acts: &Arc<Vec<f32>>,
+        batch: usize,
+        pool: Option<&ThreadPool>,
+    ) -> Vec<f32> {
+        GsExecPlan::execute_bias(plan, acts, batch, None, pool)
+    }
+
+    /// [`execute`](GsExecPlan::execute) with the output bias fused into
+    /// the accumulation (rows seeded with their bias; uncovered rows
+    /// come out as exactly `bias[row]`) — the serving hot path.
+    pub fn execute_bias(
+        plan: &Arc<GsExecPlan>,
+        acts: &Arc<Vec<f32>>,
+        batch: usize,
+        bias: Option<&Arc<Vec<f32>>>,
+        pool: Option<&ThreadPool>,
+    ) -> Vec<f32> {
+        match pool {
+            Some(pool) if plan.chunks.len() > 1 => {
+                execute_parallel(plan, acts, batch, bias, pool, plan.variant)
+            }
+            _ => serial_with_variant(plan, plan.variant, acts, batch, bias.map(|b| b.as_slice())),
+        }
+    }
+
+    /// Serial [`execute`](GsExecPlan::execute) on plain slices (no
+    /// `Arc`s, no pool) — tests and single-threaded embedders.
+    pub fn execute_serial(&self, acts: &[f32], batch: usize) -> Vec<f32> {
+        serial_with_variant(self, self.variant, acts, batch, None)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Serial execution (moved here from exec.rs; packing stayed behind).
+// ---------------------------------------------------------------------------
+
+/// Planned single-vector spMV body (see
+/// [`gs_matvec_planned`](super::exec::gs_matvec_planned)).
+pub(crate) fn matvec_planned(plan: &GsExecPlan, act: &[f32]) -> Vec<f32> {
+    assert_eq!(act.len(), plan.cols, "activation length mismatch");
+    let mut y = vec![0.0f32; plan.rows];
+    match &plan.joined {
+        Joined::F32(words) => matvec_words(plan, words, act, &mut y),
+        Joined::F16(words) => matvec_words(plan, words, act, &mut y),
+    }
+    y
+}
+
+fn matvec_words<W: JoinedWord>(plan: &GsExecPlan, joined: &[W], act: &[f32], y: &mut [f32]) {
+    let b = plan.b;
+    let band_rows = plan.band_rows();
+    let ls = &plan.lane_slot;
+    for band in 0..plan.nbands() {
+        // Rows of this band's slots (identity span for non-scatter,
+        // rowmap slice for scatter) — both indirections resolved at pack.
+        let srow = &plan.slot_rows[band * band_rows..(band + 1) * band_rows];
+        let lo = plan.band_ptr[band] as usize;
+        let hi = plan.band_ptr[band + 1] as usize;
+        for g in lo..hi {
+            let off = g * 2 * b;
+            let idx = &joined[off..off + b];
+            let val = &joined[off + b..off + 2 * b];
+            let mut j = 0;
+            // Lanes unrolled ×4; adds stay in lane order, so rows shared
+            // between lanes (k > 1) accumulate exactly like the oracle.
+            while j + 4 <= b {
+                y[srow[ls[j] as usize] as usize] += val[j].lane_value() * act[idx[j].lane_index()];
+                y[srow[ls[j + 1] as usize] as usize] +=
+                    val[j + 1].lane_value() * act[idx[j + 1].lane_index()];
+                y[srow[ls[j + 2] as usize] as usize] +=
+                    val[j + 2].lane_value() * act[idx[j + 2].lane_index()];
+                y[srow[ls[j + 3] as usize] as usize] +=
+                    val[j + 3].lane_value() * act[idx[j + 3].lane_index()];
+                j += 4;
+            }
+            while j < b {
+                y[srow[ls[j] as usize] as usize] += val[j].lane_value() * act[idx[j].lane_index()];
+                j += 1;
+            }
+        }
+    }
+}
+
+/// Execute the bands of `chunk`, accumulating into `out` where local row
+/// 0 corresponds to band `chunk.band_lo`'s first slot. `acts` and `out`
+/// are feature-major: `[feature][batch]`, batch contiguous.
+///
+/// `FORCE_SCALAR` pins the inner block to [`axpy_block_scalar`] even when
+/// the `simd` feature is on (the differential baseline).
+fn exec_chunk_words<W: JoinedWord, const FORCE_SCALAR: bool>(
+    plan: &GsExecPlan,
+    joined: &[W],
+    acts: &[f32],
+    batch: usize,
+    chunk: Chunk,
+    out: &mut [f32],
+) {
+    let b = plan.b;
+    let band_rows = plan.band_rows();
+    debug_assert!(out.len() >= (chunk.band_hi - chunk.band_lo) * band_rows * batch);
+    for band in chunk.band_lo..chunk.band_hi {
+        let slot_base = (band - chunk.band_lo) * band_rows;
+        let lo = plan.band_ptr[band] as usize;
+        let hi = plan.band_ptr[band + 1] as usize;
+        for g in lo..hi {
+            let off = g * 2 * b;
+            let idx = &joined[off..off + b];
+            let val = &joined[off + b..off + 2 * b];
+            for j in 0..b {
+                let col = idx[j].lane_index();
+                // Widening convert (f16 plans) happens here, once per
+                // gathered weight — not once per batch column.
+                let w = val[j].lane_value();
+                let row = slot_base + plan.lane_slot[j] as usize;
+                let a0 = col * batch;
+                let o0 = row * batch;
+                // One gathered (index, value) pair feeds a full
+                // BATCH_BLOCK-wide multiply-accumulate on contiguous
+                // activations: explicit SIMD with the `simd` feature,
+                // the register-blocked scalar loop otherwise.
+                let mut r = 0;
+                while r + BATCH_BLOCK <= batch {
+                    let a = &acts[a0 + r..a0 + r + BATCH_BLOCK];
+                    let o = &mut out[o0 + r..o0 + r + BATCH_BLOCK];
+                    if FORCE_SCALAR {
+                        axpy_block_scalar(w, a, o);
+                    } else {
+                        axpy_block(w, a, o);
+                    }
+                    r += BATCH_BLOCK;
+                }
+                while r < batch {
+                    out[o0 + r] += w * acts[a0 + r];
+                    r += 1;
+                }
+            }
+        }
+    }
+}
+
+pub(crate) fn exec_chunk_into(
+    plan: &GsExecPlan,
+    acts: &[f32],
+    batch: usize,
+    chunk: Chunk,
+    out: &mut [f32],
+) {
+    match &plan.joined {
+        Joined::F32(w) => exec_chunk_words::<u32, false>(plan, w, acts, batch, chunk, out),
+        Joined::F16(w) => exec_chunk_words::<u16, false>(plan, w, acts, batch, chunk, out),
+    }
+}
+
+fn exec_chunk_into_scalar(
+    plan: &GsExecPlan,
+    acts: &[f32],
+    batch: usize,
+    chunk: Chunk,
+    out: &mut [f32],
+) {
+    match &plan.joined {
+        Joined::F32(w) => exec_chunk_words::<u32, true>(plan, w, acts, batch, chunk, out),
+        Joined::F16(w) => exec_chunk_words::<u16, true>(plan, w, acts, batch, chunk, out),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Specialized inner loops (the dispatch menu).
+// ---------------------------------------------------------------------------
+
+/// The `SmallGroupUnrolled` chunk executor: monomorphize the lane loop
+/// over `const B` so it fully unrolls.
+fn exec_chunk_unrolled(plan: &GsExecPlan, acts: &[f32], batch: usize, chunk: Chunk, out: &mut [f32]) {
+    match &plan.joined {
+        Joined::F32(w) => unrolled_by_b::<u32>(plan, w, acts, batch, chunk, out),
+        Joined::F16(w) => unrolled_by_b::<u16>(plan, w, acts, batch, chunk, out),
+    }
+}
+
+fn unrolled_by_b<W: JoinedWord>(
+    plan: &GsExecPlan,
+    joined: &[W],
+    acts: &[f32],
+    batch: usize,
+    chunk: Chunk,
+    out: &mut [f32],
+) {
+    match plan.b {
+        1 => unrolled_words::<W, 1>(plan, joined, acts, batch, chunk, out),
+        2 => unrolled_words::<W, 2>(plan, joined, acts, batch, chunk, out),
+        4 => unrolled_words::<W, 4>(plan, joined, acts, batch, chunk, out),
+        8 => unrolled_words::<W, 8>(plan, joined, acts, batch, chunk, out),
+        // Unreachable through classification/supports; safe fallback.
+        _ => exec_chunk_words::<W, false>(plan, joined, acts, batch, chunk, out),
+    }
+}
+
+/// Same sweep as [`exec_chunk_words`], with the lane loop trip count a
+/// compile-time constant: the `for j in 0..B` unrolls completely and the
+/// `[W; B]` group views carry no bounds checks. Accumulation order per
+/// output element is identical (lanes ascending, groups ascending,
+/// bands ascending), so results are bit-identical.
+fn unrolled_words<W: JoinedWord, const B: usize>(
+    plan: &GsExecPlan,
+    joined: &[W],
+    acts: &[f32],
+    batch: usize,
+    chunk: Chunk,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(plan.b, B);
+    let band_rows = plan.band_rows();
+    let mut lane_slot = [0usize; B];
+    for (j, s) in plan.lane_slot.iter().enumerate() {
+        lane_slot[j] = *s as usize;
+    }
+    for band in chunk.band_lo..chunk.band_hi {
+        let slot_base = (band - chunk.band_lo) * band_rows;
+        let lo = plan.band_ptr[band] as usize;
+        let hi = plan.band_ptr[band + 1] as usize;
+        for g in lo..hi {
+            let off = g * 2 * B;
+            let idx: &[W; B] = joined[off..off + B].try_into().expect("group width");
+            let val: &[W; B] = joined[off + B..off + 2 * B].try_into().expect("group width");
+            for j in 0..B {
+                let col = idx[j].lane_index();
+                let w = val[j].lane_value();
+                let row = slot_base + lane_slot[j];
+                let a0 = col * batch;
+                let o0 = row * batch;
+                let mut r = 0;
+                while r + BATCH_BLOCK <= batch {
+                    axpy_block(
+                        w,
+                        &acts[a0 + r..a0 + r + BATCH_BLOCK],
+                        &mut out[o0 + r..o0 + r + BATCH_BLOCK],
+                    );
+                    r += BATCH_BLOCK;
+                }
+                while r < batch {
+                    out[o0 + r] += w * acts[a0 + r];
+                    r += 1;
+                }
+            }
+        }
+    }
+}
+
+/// The `LaneBlocked` chunk executor (`k == b`, so every band owns
+/// exactly one output row).
+fn exec_chunk_lane_blocked(
+    plan: &GsExecPlan,
+    acts: &[f32],
+    batch: usize,
+    chunk: Chunk,
+    out: &mut [f32],
+) {
+    match &plan.joined {
+        Joined::F32(w) => lane_blocked_words(plan, w, acts, batch, chunk, out),
+        Joined::F16(w) => lane_blocked_words(plan, w, acts, batch, chunk, out),
+    }
+}
+
+/// Register-block over the band's single output row: the output block
+/// loads once per (band, batch-block) and stays in registers across
+/// every group and lane of the band, instead of a load+store round trip
+/// per lane. Per output element the accumulation order is still groups
+/// ascending, lanes ascending — bit-identical to the generic loop. The
+/// joined buffer is re-streamed once per batch block; serving batches
+/// are a handful of blocks, and the saved output traffic dominates for
+/// lane-heavy groups.
+fn lane_blocked_words<W: JoinedWord>(
+    plan: &GsExecPlan,
+    joined: &[W],
+    acts: &[f32],
+    batch: usize,
+    chunk: Chunk,
+    out: &mut [f32],
+) {
+    let b = plan.b;
+    debug_assert_eq!(plan.band_rows(), 1, "LaneBlocked requires k == b");
+    for band in chunk.band_lo..chunk.band_hi {
+        let lo = plan.band_ptr[band] as usize;
+        let hi = plan.band_ptr[band + 1] as usize;
+        if lo == hi {
+            continue; // empty band: row keeps its seed bit-exactly
+        }
+        let o0 = (band - chunk.band_lo) * batch;
+        let mut r = 0;
+        while r + BATCH_BLOCK <= batch {
+            let mut acc = [0.0f32; BATCH_BLOCK];
+            acc.copy_from_slice(&out[o0 + r..o0 + r + BATCH_BLOCK]);
+            for g in lo..hi {
+                let off = g * 2 * b;
+                let idx = &joined[off..off + b];
+                let val = &joined[off + b..off + 2 * b];
+                for j in 0..b {
+                    let a0 = idx[j].lane_index() * batch + r;
+                    axpy_block(val[j].lane_value(), &acts[a0..a0 + BATCH_BLOCK], &mut acc);
+                }
+            }
+            out[o0 + r..o0 + r + BATCH_BLOCK].copy_from_slice(&acc);
+            r += BATCH_BLOCK;
+        }
+        while r < batch {
+            let mut acc = out[o0 + r];
+            for g in lo..hi {
+                let off = g * 2 * b;
+                let idx = &joined[off..off + b];
+                let val = &joined[off + b..off + 2 * b];
+                for j in 0..b {
+                    acc += val[j].lane_value() * acts[idx[j].lane_index() * batch + r];
+                }
+            }
+            out[o0 + r] = acc;
+            r += 1;
+        }
+    }
+}
+
+/// The `ScatterDirect` chunk executor: write every lane's global output
+/// row in place through the pack-time-resolved `slot_rows` table.
+///
+/// # Safety contract (upheld by the callers)
+///
+/// `base` points at the full `rows * batch` output buffer. The scatter
+/// rowmap is a permutation (validated at pack), so each global row is
+/// owned by exactly one `(band, slot)`, and chunks partition bands —
+/// two chunks never touch the same row even though their row sets
+/// interleave. The buffer outlives every job because the pool's `map`
+/// joins before the owner resumes.
+fn exec_chunk_scatter_direct(
+    plan: &GsExecPlan,
+    acts: &[f32],
+    batch: usize,
+    chunk: Chunk,
+    base: OutPtr,
+) {
+    match &plan.joined {
+        Joined::F32(w) => scatter_direct_words(plan, w, acts, batch, chunk, base),
+        Joined::F16(w) => scatter_direct_words(plan, w, acts, batch, chunk, base),
+    }
+}
+
+fn scatter_direct_words<W: JoinedWord>(
+    plan: &GsExecPlan,
+    joined: &[W],
+    acts: &[f32],
+    batch: usize,
+    chunk: Chunk,
+    base: OutPtr,
+) {
+    let b = plan.b;
+    let band_rows = plan.band_rows();
+    for band in chunk.band_lo..chunk.band_hi {
+        let srow = &plan.slot_rows[band * band_rows..(band + 1) * band_rows];
+        let lo = plan.band_ptr[band] as usize;
+        let hi = plan.band_ptr[band + 1] as usize;
+        for g in lo..hi {
+            let off = g * 2 * b;
+            let idx = &joined[off..off + b];
+            let val = &joined[off + b..off + 2 * b];
+            for j in 0..b {
+                let col = idx[j].lane_index();
+                let w = val[j].lane_value();
+                let row = srow[plan.lane_slot[j] as usize] as usize;
+                // SAFETY: `row` is owned exclusively by this chunk (the
+                // rowmap is a permutation and every (band, slot) lives in
+                // exactly one chunk), the view is dropped before the next
+                // lane's is made, and the owner joins the pool before the
+                // buffer moves — see the function-level contract.
+                let o = unsafe { std::slice::from_raw_parts_mut(base.0.add(row * batch), batch) };
+                let a0 = col * batch;
+                let mut r = 0;
+                while r + BATCH_BLOCK <= batch {
+                    axpy_block(w, &acts[a0 + r..a0 + r + BATCH_BLOCK], &mut o[r..r + BATCH_BLOCK]);
+                    r += BATCH_BLOCK;
+                }
+                while r < batch {
+                    o[r] += w * acts[a0 + r];
+                    r += 1;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Drivers: serial and pooled, variant-aware.
+// ---------------------------------------------------------------------------
+
+/// The output buffer every spMM path accumulates into: zeros, or — with a
+/// fused bias — each row pre-seeded with its bias value, so `bias + Σ w·a`
+/// accumulates in one pass with no post-sweep over the logits. Rows not
+/// covered by any band (all-zero rows at the matrix tail) come out as
+/// exactly `bias[row]`.
+fn seeded_out(rows: usize, batch: usize, bias: Option<&[f32]>) -> Vec<f32> {
+    match bias {
+        None => vec![0.0f32; rows * batch],
+        Some(bias) => {
+            assert_eq!(bias.len(), rows, "bias length mismatch");
+            let mut out = Vec::with_capacity(rows * batch);
+            for &b in bias {
+                out.extend(std::iter::repeat(b).take(batch));
+            }
+            out
+        }
+    }
+}
+
+/// Seed one chunk's private accumulation buffer with the bias of each
+/// slot's global output row (the merge copy then carries `bias + Σ w·a`
+/// to the output — identical accumulation order to the direct-write and
+/// serial paths, hence bit-identical results).
+fn seed_local(
+    plan: &GsExecPlan,
+    batch: usize,
+    chunk: Chunk,
+    bias: Option<&[f32]>,
+    local: &mut [f32],
+) {
+    let Some(bias) = bias else { return };
+    let band_rows = plan.band_rows();
+    for band in chunk.band_lo..chunk.band_hi {
+        for slot in 0..band_rows {
+            let row = plan.slot_rows[band * band_rows + slot] as usize;
+            let dst = ((band - chunk.band_lo) * band_rows + slot) * batch;
+            local[dst..dst + batch].fill(bias[row]);
+        }
+    }
+}
+
+/// Copy one chunk's private accumulation into the global output through
+/// the plan's slot→row table. Each global row is owned by exactly one
+/// (band, slot), so this is a copy, not a reduction.
+fn merge_chunk(plan: &GsExecPlan, batch: usize, chunk: Chunk, local: &[f32], out: &mut [f32]) {
+    let band_rows = plan.band_rows();
+    for band in chunk.band_lo..chunk.band_hi {
+        for slot in 0..band_rows {
+            let row = plan.slot_rows[band * band_rows + slot] as usize;
+            let src = ((band - chunk.band_lo) * band_rows + slot) * batch;
+            let dst = row * batch;
+            out[dst..dst + batch].copy_from_slice(&local[src..src + batch]);
+        }
+    }
+}
+
+/// Dispatch one chunk through the non-scatter menu (`ScatterDirect` has
+/// its own driver; `Generic` on a scatter plan goes through the merge
+/// strategy, never here).
+fn exec_chunk_variant(
+    plan: &GsExecPlan,
+    variant: KernelVariant,
+    acts: &[f32],
+    batch: usize,
+    chunk: Chunk,
+    out: &mut [f32],
+) {
+    match variant {
+        KernelVariant::SmallGroupUnrolled => exec_chunk_unrolled(plan, acts, batch, chunk, out),
+        KernelVariant::LaneBlocked => exec_chunk_lane_blocked(plan, acts, batch, chunk, out),
+        _ => exec_chunk_into(plan, acts, batch, chunk, out),
+    }
+}
+
+/// The legacy serial spMM (the eight deprecated entry points route
+/// here): generic inner loop, optionally pinned to the scalar block —
+/// [`gs_matmul_scalar`](super::exec::gs_matmul_scalar) is the menu's
+/// differential oracle and must never itself dispatch.
+pub(crate) fn matmul_generic(
+    plan: &GsExecPlan,
+    acts: &[f32],
+    batch: usize,
+    force_scalar: bool,
+    bias: Option<&[f32]>,
+) -> Vec<f32> {
+    assert!(batch > 0, "gs_matmul with empty batch");
+    assert_eq!(acts.len(), plan.cols * batch, "activation shape mismatch");
+    let mut out = seeded_out(plan.rows, batch, bias);
+    let band_rows = plan.band_rows();
+    let all = Chunk {
+        band_lo: 0,
+        band_hi: plan.nbands(),
+        groups: plan.ngroups(),
+    };
+    if plan.scatter {
+        // Accumulate band-local (bias-seeded through the rowmap), then
+        // place rows through the rowmap; uncovered rows keep their seed.
+        let mut local = vec![0.0f32; plan.nbands() * band_rows * batch];
+        seed_local(plan, batch, all, bias, &mut local);
+        if force_scalar {
+            exec_chunk_into_scalar(plan, acts, batch, all, &mut local);
+        } else {
+            exec_chunk_into(plan, acts, batch, all, &mut local);
+        }
+        merge_chunk(plan, batch, all, &local, &mut out);
+    } else {
+        // Identity slot→row mapping: accumulate straight into `out`.
+        if force_scalar {
+            exec_chunk_into_scalar(plan, acts, batch, all, &mut out);
+        } else {
+            exec_chunk_into(plan, acts, batch, all, &mut out);
+        }
+    }
+    out
+}
+
+/// Variant-aware serial spMM — the single-threaded arm of
+/// [`GsExecPlan::execute_bias`] (and the loop body [`GsExecPlan::tune`]
+/// times).
+fn serial_with_variant(
+    plan: &GsExecPlan,
+    variant: KernelVariant,
+    acts: &[f32],
+    batch: usize,
+    bias: Option<&[f32]>,
+) -> Vec<f32> {
+    assert!(batch > 0, "execute with empty batch");
+    assert_eq!(acts.len(), plan.cols * batch, "activation shape mismatch");
+    match variant {
+        KernelVariant::ScatterDirect => {
+            let mut out = seeded_out(plan.rows, batch, bias);
+            let all = Chunk {
+                band_lo: 0,
+                band_hi: plan.nbands(),
+                groups: plan.ngroups(),
+            };
+            let base = OutPtr(out.as_mut_ptr());
+            // SAFETY: single-threaded use of the raw view; `out` is not
+            // touched through any other path until the call returns.
+            exec_chunk_scatter_direct(plan, acts, batch, all, base);
+            out
+        }
+        KernelVariant::Generic => matmul_generic(plan, acts, batch, false, bias),
+        v => {
+            debug_assert!(!plan.scatter, "specialized non-scatter variant on a scatter plan");
+            let mut out = seeded_out(plan.rows, batch, bias);
+            let all = Chunk {
+                band_lo: 0,
+                band_hi: plan.nbands(),
+                groups: plan.ngroups(),
+            };
+            exec_chunk_variant(plan, v, acts, batch, all, &mut out);
+            out
+        }
+    }
+}
+
+/// Pooled spMM with an explicit variant — the parallel arm of
+/// [`GsExecPlan::execute_bias`], and (with `Generic`) the body of the
+/// deprecated `gs_matmul_parallel*` wrappers. Falls back to the serial
+/// driver for single-chunk plans, exactly like the legacy entry points.
+pub(crate) fn execute_parallel(
+    plan: &Arc<GsExecPlan>,
+    acts: &Arc<Vec<f32>>,
+    batch: usize,
+    bias: Option<&Arc<Vec<f32>>>,
+    pool: &ThreadPool,
+    variant: KernelVariant,
+) -> Vec<f32> {
+    assert!(batch > 0, "gs_matmul_parallel with empty batch");
+    assert_eq!(acts.len(), plan.cols * batch, "activation shape mismatch");
+    if plan.chunks.len() <= 1 {
+        return serial_with_variant(plan, variant, acts, batch, bias.map(|b| b.as_slice()));
+    }
+    match variant {
+        KernelVariant::ScatterDirect => parallel_scatter_direct(plan, acts, batch, bias, pool),
+        _ if plan.scatter => parallel_merge(plan, acts, batch, bias, pool),
+        v => parallel_direct(plan, acts, batch, bias, pool, v),
+    }
+}
+
+/// Non-scatter pooled direct-write: chunk `c` owns output rows
+/// `band_lo*band_rows .. band_hi*band_rows` — a contiguous span,
+/// provably disjoint from every other chunk's because chunks partition
+/// the band range — so each job writes its slice of the shared output
+/// buffer with no private accumulator and no merge pass.
+fn parallel_direct(
+    plan: &Arc<GsExecPlan>,
+    acts: &Arc<Vec<f32>>,
+    batch: usize,
+    bias: Option<&Arc<Vec<f32>>>,
+    pool: &ThreadPool,
+    variant: KernelVariant,
+) -> Vec<f32> {
+    let band_rows = plan.band_rows();
+    let mut out = seeded_out(plan.rows, batch, bias.map(|b| b.as_slice()));
+    let base = OutPtr(out.as_mut_ptr());
+    let plan2 = Arc::clone(plan);
+    let acts2 = Arc::clone(acts);
+    let times = pool.map(plan.chunks.clone(), move |chunk| {
+        let timer = profile::start();
+        let lo = chunk.band_lo * band_rows * batch;
+        let len = (chunk.band_hi - chunk.band_lo) * band_rows * batch;
+        // SAFETY: chunks partition `0..nbands` contiguously and the
+        // slot→row mapping is the identity (non-scatter), so the spans
+        // `[lo, lo+len)` of different jobs never overlap; `out` outlives
+        // every job because `pool.map` joins before returning (including
+        // when a job panics — `join` drains the queue first).
+        let span = unsafe { std::slice::from_raw_parts_mut(base.0.add(lo), len) };
+        exec_chunk_variant(&plan2, variant, &acts2, batch, chunk, span);
+        profile::stop(timer)
+    });
+    profile::record_call(plan, variant, &times);
+    out
+}
+
+/// Scatter pooled direct-write (the `ScatterDirect` menu entry): the
+/// shared output is bias-seeded once, then every chunk writes its own
+/// interleaved-but-disjoint rows in place through `slot_rows` — no
+/// private accumulator and no `O(rows·batch)` merge copy. Uncovered
+/// rows keep their seed, exactly like the merge path.
+fn parallel_scatter_direct(
+    plan: &Arc<GsExecPlan>,
+    acts: &Arc<Vec<f32>>,
+    batch: usize,
+    bias: Option<&Arc<Vec<f32>>>,
+    pool: &ThreadPool,
+) -> Vec<f32> {
+    let mut out = seeded_out(plan.rows, batch, bias.map(|b| b.as_slice()));
+    let base = OutPtr(out.as_mut_ptr());
+    let plan2 = Arc::clone(plan);
+    let acts2 = Arc::clone(acts);
+    let times = pool.map(plan.chunks.clone(), move |chunk| {
+        let timer = profile::start();
+        // SAFETY: see `exec_chunk_scatter_direct` — the rowmap is a
+        // permutation, so chunks own disjoint row sets, and `pool.map`
+        // joins before `out` moves.
+        exec_chunk_scatter_direct(&plan2, &acts2, batch, chunk, base);
+        profile::stop(timer)
+    });
+    profile::record_call(plan, KernelVariant::ScatterDirect, &times);
+    out
+}
+
+/// Pooled private-accumulate+merge for every pattern — the benchmark
+/// baseline for both direct-write paths and the differential oracle for
+/// `ScatterDirect` (the merge copy is `O(rows·batch)` and shows up at
+/// low sparsity).
+pub(crate) fn parallel_merge(
+    plan: &Arc<GsExecPlan>,
+    acts: &Arc<Vec<f32>>,
+    batch: usize,
+    bias: Option<&Arc<Vec<f32>>>,
+    pool: &ThreadPool,
+) -> Vec<f32> {
+    assert!(batch > 0, "gs_matmul_parallel_merge with empty batch");
+    assert_eq!(acts.len(), plan.cols * batch, "activation shape mismatch");
+    let chunks: Vec<Chunk> = plan.chunks.clone();
+    if chunks.len() <= 1 {
+        return matmul_generic(plan, acts, batch, false, bias.map(|b| b.as_slice()));
+    }
+    let band_rows = plan.band_rows();
+    let plan2 = Arc::clone(plan);
+    let acts2 = Arc::clone(acts);
+    let bias2 = bias.map(Arc::clone);
+    let timed = pool.map(chunks.clone(), move |chunk| {
+        let timer = profile::start();
+        let rows = (chunk.band_hi - chunk.band_lo) * band_rows;
+        let mut local = vec![0.0f32; rows * batch];
+        seed_local(&plan2, batch, chunk, bias2.as_ref().map(|b| b.as_slice()), &mut local);
+        exec_chunk_into(&plan2, &acts2, batch, chunk, &mut local);
+        (local, profile::stop(timer))
+    });
+    let mut out = seeded_out(plan.rows, batch, bias.map(|b| b.as_slice()));
+    let mut times = Vec::with_capacity(timed.len());
+    for (chunk, (local, secs)) in chunks.iter().zip(&timed) {
+        merge_chunk(plan, batch, *chunk, local, &mut out);
+        times.push(*secs);
+    }
+    profile::record_call(plan, KernelVariant::Generic, &times);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::pattern::Pattern;
+    use crate::testing::model::build_random_gs;
+
+    fn plan_for(pattern: Pattern, sparsity: f64, seed: u64) -> GsExecPlan {
+        let (_, gs) = build_random_gs(64, 128, pattern, sparsity, seed).unwrap();
+        GsExecPlan::with_chunks(&gs, 4).unwrap()
+    }
+
+    #[test]
+    fn classification_follows_geometry_rules() {
+        // Scatter always takes the direct-write variant.
+        let p = plan_for(Pattern::GsScatter { b: 8, k: 2 }, 0.7, 1);
+        assert_eq!(p.kernel_variant(), KernelVariant::ScatterDirect);
+        // Small power-of-two groups unroll.
+        let p = plan_for(Pattern::Gs { b: 8, k: 4 }, 0.7, 2);
+        assert_eq!(p.kernel_variant(), KernelVariant::SmallGroupUnrolled);
+        // Lane-heavy single-row groups register-block.
+        let p = plan_for(Pattern::Gs { b: 16, k: 16 }, 0.7, 3);
+        assert_eq!(p.kernel_variant(), KernelVariant::LaneBlocked);
+        // Multi-row wide groups have no specialization yet.
+        let p = plan_for(Pattern::Gs { b: 16, k: 4 }, 0.7, 4);
+        assert_eq!(p.kernel_variant(), KernelVariant::Generic);
+    }
+
+    #[test]
+    fn set_kernel_variant_validates_geometry() {
+        let mut p = plan_for(Pattern::Gs { b: 8, k: 4 }, 0.7, 5);
+        assert!(p.set_kernel_variant(KernelVariant::Generic).is_ok());
+        assert!(p.set_kernel_variant(KernelVariant::SmallGroupUnrolled).is_ok());
+        // k != b: lane blocking does not apply.
+        assert!(p.set_kernel_variant(KernelVariant::LaneBlocked).is_err());
+        // Not a scatter plan.
+        assert!(p.set_kernel_variant(KernelVariant::ScatterDirect).is_err());
+        assert_eq!(p.kernel_variant(), KernelVariant::SmallGroupUnrolled);
+    }
+
+    #[test]
+    fn geometry_reports_density_and_skew() {
+        let p = plan_for(Pattern::Gs { b: 16, k: 16 }, 0.9, 6);
+        let g = p.geometry();
+        assert_eq!(g.lanes, 16);
+        assert_eq!(g.band_rows, 1);
+        assert!(!g.scatter);
+        assert!(g.density > 0.0 && g.density <= 1.0, "{}", g.density);
+        assert!(g.chunk_skew >= 1.0, "{}", g.chunk_skew);
+    }
+
+    #[test]
+    fn tune_picks_a_supported_variant_and_caches_it() {
+        let mut p = plan_for(Pattern::Gs { b: 8, k: 8 }, 0.8, 7);
+        let v = p.tune(8, Duration::from_millis(10));
+        assert_eq!(v, p.kernel_variant());
+        assert!(v.supports(&p), "tuned variant must fit the plan");
+        // Scatter menu: Generic (merge) vs ScatterDirect only.
+        let (_, gs) = build_random_gs(64, 128, Pattern::GsScatter { b: 8, k: 2 }, 0.7, 8).unwrap();
+        let mut p = GsExecPlan::with_chunks(&gs, 4).unwrap();
+        let v = p.tune(8, Duration::from_millis(10));
+        assert!(matches!(v, KernelVariant::Generic | KernelVariant::ScatterDirect));
+    }
+
+    #[test]
+    fn variant_names_roundtrip() {
+        for v in KernelVariant::MENU {
+            assert_eq!(KernelVariant::parse(v.name()).unwrap(), v);
+        }
+        assert!(KernelVariant::parse("warp_speed").is_err());
+    }
+}

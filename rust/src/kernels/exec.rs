@@ -1,9 +1,10 @@
-//! Native CPU execution engine for GS-compressed matrices.
+//! Plan packing for GS-compressed matrices (and the legacy kernel entry
+//! points, now thin deprecated wrappers).
 //!
 //! [`crate::kernels::native::gs_matvec`] is the 20-line numerics oracle:
 //! it re-reads `indptr`, divides `j / k` per entry, and walks `value` and
-//! `index` as two separate arrays. This module is the fast path built on a
-//! [`GsExecPlan`] prepacked once per weight matrix:
+//! `index` as two separate arrays. This module packs a [`GsExecPlan`]
+//! once per weight matrix:
 //!
 //! * **Joined group layout** (paper §V): each group's `B` column indices
 //!   sit immediately before its `B` values in one buffer, so a group is
@@ -20,41 +21,39 @@
 //!   inner loop is pure loads, FMAs, stores.
 //! * **Balanced chunks**: bands are partitioned into contiguous spans with
 //!   near-equal *group* counts (not band counts — sparsity can be ragged
-//!   across bands), the unit of parallelism for
-//!   [`gs_matmul_parallel`]. Each band's output rows are owned by exactly
-//!   one chunk (non-scatter rows are contiguous; scatter rows are a
-//!   permutation slice), so chunks never race — non-scatter chunks write
-//!   their disjoint contiguous output spans directly, scatter chunks
-//!   accumulate privately and merge with a copy, never a reduction.
-//!   Results are bit-identical to the serial kernel at any thread count.
+//!   across bands), the unit of parallelism for the pooled kernels. Each
+//!   band's output rows are owned by exactly one chunk, so chunks never
+//!   race. Results are bit-identical to the serial kernel at any thread
+//!   count.
+//! * **Kernel classification**: pack time is when the whole geometry is
+//!   known, so the plan also classifies itself onto the specialized
+//!   kernel menu ([`KernelVariant`]) — see [`crate::kernels::dispatch`].
 //!
-//! On top of the plan:
+//! *Execution* lives in [`crate::kernels::dispatch`]: serving, benches
+//! and examples call [`GsExecPlan::execute`] /
+//! [`GsExecPlan::execute_bias`], which dispatch on the plan's classified
+//! (or tuned, or artifact-pinned) [`KernelVariant`]. The historical
+//! `gs_matmul*` entry points below survive as deprecated thin wrappers
+//! pinned to the generic inner loop, so differential tests and benches
+//! keep a stable baseline:
 //!
 //! * [`gs_matvec_planned`] — single activation vector, lanes unrolled ×4.
-//! * [`gs_matmul`] — batched spMM over feature-major activations; each
-//!   index load is amortized across the whole batch and the per-lane
-//!   inner loop feeds one [`BATCH_BLOCK`]-wide multiply-accumulate per
-//!   gathered weight. With the `simd` cargo feature (nightly,
-//!   `portable_simd`) that block is an explicit `std::simd` vector op;
-//!   the scalar register-blocked loop is the always-available fallback
-//!   and the two are bit-identical ([`gs_matmul_scalar`] forces the
-//!   scalar path for differential tests).
-//! * [`gs_matmul_parallel`] — maps plan chunks over a
-//!   [`ThreadPool`]; lock-free by construction (disjoint outputs).
-//!   [`gs_matmul_parallel_merge`] keeps the private-accumulate+merge
-//!   strategy for every pattern, as the benchmark baseline for the
-//!   direct-write path.
-//! * `*_bias` variants ([`gs_matmul_bias`], [`gs_matmul_parallel_bias`],
-//!   [`gs_matmul_parallel_merge_bias`]) fuse the output bias into the
-//!   accumulation: output rows are *seeded* with their bias before the
-//!   gather-FMA sweep, eliminating the separate post-pass over the
-//!   logits. All three forms remain bit-identical to one another.
+//! * [`gs_matmul`] / [`gs_matmul_bias`] — serial batched spMM, generic
+//!   register-blocked inner loop ([`BATCH_BLOCK`]; `std::simd` with the
+//!   `simd` cargo feature, scalar fallback otherwise, bit-identical).
+//! * [`gs_matmul_scalar`] — the scalar-pinned differential oracle every
+//!   dispatch-menu variant must match bit for bit.
+//! * [`gs_matmul_parallel`] / [`gs_matmul_parallel_bias`] — pooled with
+//!   the generic loop (direct-write non-scatter, merge on scatter).
+//! * [`gs_matmul_parallel_merge`] / [`gs_matmul_parallel_merge_bias`] —
+//!   pooled private-accumulate+merge for every pattern, the benchmark
+//!   baseline for both direct-write strategies.
 //!
 //! All kernels preserve the oracle's accumulation order per output row,
 //! so f32 plans match `gs_matvec` bit for bit (per batch column), and f16
 //! plans match the oracle run on the f16-quantized format bit for bit.
 
-use crate::kernels::profile;
+use super::dispatch::{self, KernelVariant};
 use crate::sparse::format::GsFormat;
 use crate::util::f16::f16_bits_to_f32;
 use crate::util::threadpool::ThreadPool;
@@ -103,7 +102,7 @@ pub fn simd_enabled() -> bool {
 
 /// A packed word of the joined buffer: interpreted as a column index in
 /// the first half of a group, as a weight value in the second half.
-trait JoinedWord: Copy + Send + Sync + 'static {
+pub(crate) trait JoinedWord: Copy + Send + Sync + 'static {
     fn lane_index(self) -> usize;
     fn lane_value(self) -> f32;
 }
@@ -133,7 +132,7 @@ impl JoinedWord for u16 {
 /// Precision-tagged joined buffer. Layout per group: `b` index words
 /// followed by `b` value words (`2*b` words total either way).
 #[derive(Clone, Debug)]
-enum Joined {
+pub(crate) enum Joined {
     F32(Vec<u32>),
     F16(Vec<u16>),
 }
@@ -151,6 +150,9 @@ pub struct Chunk {
 ///
 /// Built once per deployed weight matrix (at model load / weight-swap
 /// time), then shared read-only across requests and worker threads.
+/// Execution goes through [`GsExecPlan::execute`] (see
+/// [`crate::kernels::dispatch`]), which dispatches on the plan's
+/// classified/tuned/pinned [`KernelVariant`].
 #[derive(Clone, Debug)]
 pub struct GsExecPlan {
     pub b: usize,
@@ -163,20 +165,24 @@ pub struct GsExecPlan {
     pub precision: PlanPrecision,
     /// Joined group layout: `2*b` words per group — `b` column indices
     /// followed by the `b` weight values (f32 bits or f16 bits).
-    joined: Joined,
+    pub(crate) joined: Joined,
     /// `nbands + 1` cumulative group counts (copy of the format's indptr).
-    band_ptr: Vec<u32>,
+    pub(crate) band_ptr: Vec<u32>,
     /// Global output row per (band, slot): `slot_rows[band*(b/k) + s]` —
     /// the `entry_row` division and scatter rowmap lookup resolved at
     /// pack time. Lane `j` of a band writes row
     /// `slot_rows[band*(b/k) + lane_slot[j]]`; a flat per-(band, lane)
     /// table would be `k`× larger for no extra information, and at high
     /// sparsity it would rival the joined buffer itself.
-    slot_rows: Vec<u32>,
+    pub(crate) slot_rows: Vec<u32>,
     /// Row slot of lane `j` within any band (`j / k`) — band-independent.
-    lane_slot: Vec<u32>,
+    pub(crate) lane_slot: Vec<u32>,
     /// Group-count-balanced contiguous band spans.
-    chunks: Vec<Chunk>,
+    pub(crate) chunks: Vec<Chunk>,
+    /// The dispatch-menu variant [`GsExecPlan::execute`] runs — geometry
+    /// classification at pack time, overridable by `tune()` or an
+    /// artifact pin ([`GsExecPlan::set_kernel_variant`]).
+    pub(crate) variant: KernelVariant,
 }
 
 impl GsExecPlan {
@@ -235,7 +241,7 @@ impl GsExecPlan {
             PlanPrecision::F32 => Joined::F32(gs.to_joined()),
             PlanPrecision::F16 => Joined::F16(gs.to_joined_f16()),
         };
-        let plan = GsExecPlan {
+        let mut plan = GsExecPlan {
             b: gs.b,
             k: gs.k,
             rows: gs.rows,
@@ -247,7 +253,11 @@ impl GsExecPlan {
             slot_rows,
             lane_slot,
             chunks: balance_chunks(&gs.indptr, nchunks),
+            variant: KernelVariant::Generic,
         };
+        // Geometry is now fully known (including chunk balance): classify
+        // onto the specialized kernel menu.
+        plan.variant = KernelVariant::classify(&plan);
         Ok(plan)
     }
 
@@ -363,257 +373,8 @@ pub(crate) fn axpy_block(w: f32, a: &[f32], o: &mut [f32]) {
     axpy_block_scalar(w, a, o);
 }
 
-/// Planned single-vector spMV: `y = W x` on the packed plan. An f32 plan
-/// matches [`crate::kernels::native::gs_matvec`] bit for bit; an f16 plan
-/// matches the oracle on the f16-quantized format bit for bit.
-pub fn gs_matvec_planned(plan: &GsExecPlan, act: &[f32]) -> Vec<f32> {
-    assert_eq!(act.len(), plan.cols, "activation length mismatch");
-    let mut y = vec![0.0f32; plan.rows];
-    match &plan.joined {
-        Joined::F32(words) => matvec_words(plan, words, act, &mut y),
-        Joined::F16(words) => matvec_words(plan, words, act, &mut y),
-    }
-    y
-}
-
-fn matvec_words<W: JoinedWord>(plan: &GsExecPlan, joined: &[W], act: &[f32], y: &mut [f32]) {
-    let b = plan.b;
-    let band_rows = plan.band_rows();
-    let ls = &plan.lane_slot;
-    for band in 0..plan.nbands() {
-        // Rows of this band's slots (identity span for non-scatter,
-        // rowmap slice for scatter) — both indirections resolved at pack.
-        let srow = &plan.slot_rows[band * band_rows..(band + 1) * band_rows];
-        let lo = plan.band_ptr[band] as usize;
-        let hi = plan.band_ptr[band + 1] as usize;
-        for g in lo..hi {
-            let off = g * 2 * b;
-            let idx = &joined[off..off + b];
-            let val = &joined[off + b..off + 2 * b];
-            let mut j = 0;
-            // Lanes unrolled ×4; adds stay in lane order, so rows shared
-            // between lanes (k > 1) accumulate exactly like the oracle.
-            while j + 4 <= b {
-                y[srow[ls[j] as usize] as usize] += val[j].lane_value() * act[idx[j].lane_index()];
-                y[srow[ls[j + 1] as usize] as usize] +=
-                    val[j + 1].lane_value() * act[idx[j + 1].lane_index()];
-                y[srow[ls[j + 2] as usize] as usize] +=
-                    val[j + 2].lane_value() * act[idx[j + 2].lane_index()];
-                y[srow[ls[j + 3] as usize] as usize] +=
-                    val[j + 3].lane_value() * act[idx[j + 3].lane_index()];
-                j += 4;
-            }
-            while j < b {
-                y[srow[ls[j] as usize] as usize] += val[j].lane_value() * act[idx[j].lane_index()];
-                j += 1;
-            }
-        }
-    }
-}
-
-/// Execute the bands of `chunk`, accumulating into `out` where local row
-/// 0 corresponds to band `chunk.band_lo`'s first slot. `acts` and `out`
-/// are feature-major: `[feature][batch]`, batch contiguous.
-///
-/// `FORCE_SCALAR` pins the inner block to [`axpy_block_scalar`] even when
-/// the `simd` feature is on (the differential baseline).
-fn exec_chunk_words<W: JoinedWord, const FORCE_SCALAR: bool>(
-    plan: &GsExecPlan,
-    joined: &[W],
-    acts: &[f32],
-    batch: usize,
-    chunk: Chunk,
-    out: &mut [f32],
-) {
-    let b = plan.b;
-    let band_rows = plan.band_rows();
-    debug_assert!(out.len() >= (chunk.band_hi - chunk.band_lo) * band_rows * batch);
-    for band in chunk.band_lo..chunk.band_hi {
-        let slot_base = (band - chunk.band_lo) * band_rows;
-        let lo = plan.band_ptr[band] as usize;
-        let hi = plan.band_ptr[band + 1] as usize;
-        for g in lo..hi {
-            let off = g * 2 * b;
-            let idx = &joined[off..off + b];
-            let val = &joined[off + b..off + 2 * b];
-            for j in 0..b {
-                let col = idx[j].lane_index();
-                // Widening convert (f16 plans) happens here, once per
-                // gathered weight — not once per batch column.
-                let w = val[j].lane_value();
-                let row = slot_base + plan.lane_slot[j] as usize;
-                let a0 = col * batch;
-                let o0 = row * batch;
-                // One gathered (index, value) pair feeds a full
-                // BATCH_BLOCK-wide multiply-accumulate on contiguous
-                // activations: explicit SIMD with the `simd` feature,
-                // the register-blocked scalar loop otherwise.
-                let mut r = 0;
-                while r + BATCH_BLOCK <= batch {
-                    let a = &acts[a0 + r..a0 + r + BATCH_BLOCK];
-                    let o = &mut out[o0 + r..o0 + r + BATCH_BLOCK];
-                    if FORCE_SCALAR {
-                        axpy_block_scalar(w, a, o);
-                    } else {
-                        axpy_block(w, a, o);
-                    }
-                    r += BATCH_BLOCK;
-                }
-                while r < batch {
-                    out[o0 + r] += w * acts[a0 + r];
-                    r += 1;
-                }
-            }
-        }
-    }
-}
-
-fn exec_chunk_into(plan: &GsExecPlan, acts: &[f32], batch: usize, chunk: Chunk, out: &mut [f32]) {
-    match &plan.joined {
-        Joined::F32(w) => exec_chunk_words::<u32, false>(plan, w, acts, batch, chunk, out),
-        Joined::F16(w) => exec_chunk_words::<u16, false>(plan, w, acts, batch, chunk, out),
-    }
-}
-
-fn exec_chunk_into_scalar(
-    plan: &GsExecPlan,
-    acts: &[f32],
-    batch: usize,
-    chunk: Chunk,
-    out: &mut [f32],
-) {
-    match &plan.joined {
-        Joined::F32(w) => exec_chunk_words::<u32, true>(plan, w, acts, batch, chunk, out),
-        Joined::F16(w) => exec_chunk_words::<u16, true>(plan, w, acts, batch, chunk, out),
-    }
-}
-
-/// The output buffer every spMM path accumulates into: zeros, or — with a
-/// fused bias — each row pre-seeded with its bias value, so `bias + Σ w·a`
-/// accumulates in one pass with no post-sweep over the logits. Rows not
-/// covered by any band (all-zero rows at the matrix tail) come out as
-/// exactly `bias[row]`.
-fn seeded_out(rows: usize, batch: usize, bias: Option<&[f32]>) -> Vec<f32> {
-    match bias {
-        None => vec![0.0f32; rows * batch],
-        Some(bias) => {
-            assert_eq!(bias.len(), rows, "bias length mismatch");
-            let mut out = Vec::with_capacity(rows * batch);
-            for &b in bias {
-                out.extend(std::iter::repeat(b).take(batch));
-            }
-            out
-        }
-    }
-}
-
-/// Seed one chunk's private accumulation buffer with the bias of each
-/// slot's global output row (the merge copy then carries `bias + Σ w·a`
-/// to the output — identical accumulation order to the direct-write and
-/// serial paths, hence bit-identical results).
-fn seed_local(
-    plan: &GsExecPlan,
-    batch: usize,
-    chunk: Chunk,
-    bias: Option<&[f32]>,
-    local: &mut [f32],
-) {
-    let Some(bias) = bias else { return };
-    let band_rows = plan.band_rows();
-    for band in chunk.band_lo..chunk.band_hi {
-        for slot in 0..band_rows {
-            let row = plan.slot_rows[band * band_rows + slot] as usize;
-            let dst = ((band - chunk.band_lo) * band_rows + slot) * batch;
-            local[dst..dst + batch].fill(bias[row]);
-        }
-    }
-}
-
-fn gs_matmul_impl(
-    plan: &GsExecPlan,
-    acts: &[f32],
-    batch: usize,
-    force_scalar: bool,
-    bias: Option<&[f32]>,
-) -> Vec<f32> {
-    assert!(batch > 0, "gs_matmul with empty batch");
-    assert_eq!(acts.len(), plan.cols * batch, "activation shape mismatch");
-    let mut out = seeded_out(plan.rows, batch, bias);
-    let band_rows = plan.band_rows();
-    let all = Chunk {
-        band_lo: 0,
-        band_hi: plan.nbands(),
-        groups: plan.ngroups(),
-    };
-    if plan.scatter {
-        // Accumulate band-local (bias-seeded through the rowmap), then
-        // place rows through the rowmap; uncovered rows keep their seed.
-        let mut local = vec![0.0f32; plan.nbands() * band_rows * batch];
-        seed_local(plan, batch, all, bias, &mut local);
-        if force_scalar {
-            exec_chunk_into_scalar(plan, acts, batch, all, &mut local);
-        } else {
-            exec_chunk_into(plan, acts, batch, all, &mut local);
-        }
-        merge_chunk(plan, batch, all, &local, &mut out);
-    } else {
-        // Identity slot→row mapping: accumulate straight into `out`.
-        if force_scalar {
-            exec_chunk_into_scalar(plan, acts, batch, all, &mut out);
-        } else {
-            exec_chunk_into(plan, acts, batch, all, &mut out);
-        }
-    }
-    out
-}
-
-/// Batched spMM: `Y = W X` with `X` feature-major (`acts[col*batch + r]`
-/// is request `r`'s activation for feature `col`). Returns `Y`
-/// feature-major: `out[row*batch + r]`. For an f32 plan, column `r`
-/// equals `gs_matvec(gs, x_r)` bit for bit.
-pub fn gs_matmul(plan: &GsExecPlan, acts: &[f32], batch: usize) -> Vec<f32> {
-    gs_matmul_impl(plan, acts, batch, false, None)
-}
-
-/// [`gs_matmul`] with the output bias fused into the accumulation: row
-/// `row` of the result is `bias[row] + Σ w·a` computed in a single pass
-/// (the row is *seeded* with its bias, then accumulated in oracle order —
-/// no separate sweep over the logits). Serial, parallel direct-write, and
-/// parallel merge forms are all bit-identical.
-pub fn gs_matmul_bias(
-    plan: &GsExecPlan,
-    acts: &[f32],
-    batch: usize,
-    bias: Option<&[f32]>,
-) -> Vec<f32> {
-    gs_matmul_impl(plan, acts, batch, false, bias)
-}
-
-/// [`gs_matmul`] with the inner block pinned to the scalar loop even when
-/// the `simd` feature is compiled in. Exists so tests can assert the SIMD
-/// path is bit-identical to the scalar fallback; without the feature the
-/// two functions run the same code.
-pub fn gs_matmul_scalar(plan: &GsExecPlan, acts: &[f32], batch: usize) -> Vec<f32> {
-    gs_matmul_impl(plan, acts, batch, true, None)
-}
-
-/// Copy one chunk's private accumulation into the global output through
-/// the plan's slot→row table. Each global row is owned by exactly one
-/// (band, slot), so this is a copy, not a reduction.
-fn merge_chunk(plan: &GsExecPlan, batch: usize, chunk: Chunk, local: &[f32], out: &mut [f32]) {
-    let band_rows = plan.band_rows();
-    for band in chunk.band_lo..chunk.band_hi {
-        for slot in 0..band_rows {
-            let row = plan.slot_rows[band * band_rows + slot] as usize;
-            let src = ((band - chunk.band_lo) * band_rows + slot) * batch;
-            let dst = row * batch;
-            out[dst..dst + batch].copy_from_slice(&local[src..src + batch]);
-        }
-    }
-}
-
 /// `Send + Sync` wrapper for the base pointer of an output buffer shared
-/// by direct-write pool jobs (this module's chunk spans, the dense
+/// by direct-write pool jobs (the dispatch layer's chunk spans, the dense
 /// kernel's feature spans). Safety rests entirely on the use sites: jobs
 /// write disjoint spans and the owner joins before the buffer moves.
 #[derive(Clone, Copy)]
@@ -621,27 +382,69 @@ pub(crate) struct OutPtr(pub(crate) *mut f32);
 unsafe impl Send for OutPtr {}
 unsafe impl Sync for OutPtr {}
 
-/// Parallel batched spMM: plan chunks mapped over `pool`, bit-identical
-/// to [`gs_matmul`] at any worker count.
-///
-/// Non-scatter plans take the **direct-write** path: chunk `c` owns output
-/// rows `band_lo*band_rows .. band_hi*band_rows` — a contiguous span,
-/// provably disjoint from every other chunk's because chunks partition the
-/// band range — so each job writes its slice of the shared output buffer
-/// with no private accumulator and no merge pass. Scatter plans keep the
-/// private-accumulate+merge strategy ([`gs_matmul_parallel_merge`]): their
-/// chunk rows are disjoint too (the rowmap is a permutation) but
-/// interleaved, so the copy-merge through `slot_rows` places them.
+// ---------------------------------------------------------------------------
+// Legacy entry points: thin wrappers over kernels::dispatch, pinned to the
+// generic inner loop so differential tests and benches keep a stable
+// baseline. New call sites route through `GsExecPlan::execute`.
+// ---------------------------------------------------------------------------
+
+/// Planned single-vector spMV: `y = W x` on the packed plan. An f32 plan
+/// matches [`crate::kernels::native::gs_matvec`] bit for bit; an f16 plan
+/// matches the oracle on the f16-quantized format bit for bit.
+#[deprecated(note = "route through `GsExecPlan::execute` with batch 1 (kernels::dispatch)")]
+pub fn gs_matvec_planned(plan: &GsExecPlan, act: &[f32]) -> Vec<f32> {
+    dispatch::matvec_planned(plan, act)
+}
+
+/// Batched spMM: `Y = W X` with `X` feature-major (`acts[col*batch + r]`
+/// is request `r`'s activation for feature `col`). Returns `Y`
+/// feature-major: `out[row*batch + r]`. For an f32 plan, column `r`
+/// equals `gs_matvec(gs, x_r)` bit for bit. Always runs the generic
+/// inner loop regardless of the plan's classified variant.
+#[deprecated(note = "route through `GsExecPlan::execute` (kernels::dispatch)")]
+pub fn gs_matmul(plan: &GsExecPlan, acts: &[f32], batch: usize) -> Vec<f32> {
+    dispatch::matmul_generic(plan, acts, batch, false, None)
+}
+
+/// [`gs_matmul`] with the output bias fused into the accumulation: row
+/// `row` of the result is `bias[row] + Σ w·a` computed in a single pass
+/// (the row is *seeded* with its bias, then accumulated in oracle order —
+/// no separate sweep over the logits). Serial, parallel direct-write, and
+/// parallel merge forms are all bit-identical.
+#[deprecated(note = "route through `GsExecPlan::execute_bias` (kernels::dispatch)")]
+pub fn gs_matmul_bias(
+    plan: &GsExecPlan,
+    acts: &[f32],
+    batch: usize,
+    bias: Option<&[f32]>,
+) -> Vec<f32> {
+    dispatch::matmul_generic(plan, acts, batch, false, bias)
+}
+
+/// [`gs_matmul`] with the inner block pinned to the scalar loop even when
+/// the `simd` feature is compiled in. **The differential oracle**: every
+/// dispatch-menu variant must match it bit for bit, so it never itself
+/// dispatches. Deprecated for production use only; tests keep calling it.
+#[deprecated(note = "differential oracle — production call sites route through `GsExecPlan::execute`")]
+pub fn gs_matmul_scalar(plan: &GsExecPlan, acts: &[f32], batch: usize) -> Vec<f32> {
+    dispatch::matmul_generic(plan, acts, batch, true, None)
+}
+
+/// Parallel batched spMM with the generic inner loop: plan chunks mapped
+/// over `pool`, bit-identical to [`gs_matmul`] at any worker count.
+/// Non-scatter plans direct-write their disjoint contiguous output
+/// spans; scatter plans take the private-accumulate+merge strategy.
 ///
 /// `plan` and `acts` travel to the workers as `Arc` clones (the pool's
 /// jobs are `'static`), so the caller keeps both afterwards.
+#[deprecated(note = "route through `GsExecPlan::execute` (kernels::dispatch)")]
 pub fn gs_matmul_parallel(
     plan: &Arc<GsExecPlan>,
     acts: &Arc<Vec<f32>>,
     batch: usize,
     pool: &ThreadPool,
 ) -> Vec<f32> {
-    gs_matmul_parallel_bias(plan, acts, batch, None, pool)
+    dispatch::execute_parallel(plan, acts, batch, None, pool, KernelVariant::Generic)
 }
 
 /// [`gs_matmul_parallel`] with the output bias fused ([`gs_matmul_bias`]):
@@ -649,6 +452,7 @@ pub fn gs_matmul_parallel(
 /// accumulate into their disjoint spans (merge-path chunks seed their
 /// private buffers instead), so no pass over the logits follows the spMM.
 /// Bit-identical to the serial fused kernel at any worker count.
+#[deprecated(note = "route through `GsExecPlan::execute_bias` (kernels::dispatch)")]
 pub fn gs_matmul_parallel_bias(
     plan: &Arc<GsExecPlan>,
     acts: &Arc<Vec<f32>>,
@@ -656,48 +460,22 @@ pub fn gs_matmul_parallel_bias(
     bias: Option<&Arc<Vec<f32>>>,
     pool: &ThreadPool,
 ) -> Vec<f32> {
-    assert!(batch > 0, "gs_matmul_parallel with empty batch");
-    assert_eq!(acts.len(), plan.cols * batch, "activation shape mismatch");
-    if plan.chunks.len() <= 1 {
-        return gs_matmul_bias(plan, acts, batch, bias.map(|b| b.as_slice()));
-    }
-    if plan.scatter {
-        return gs_matmul_parallel_merge_bias(plan, acts, batch, bias, pool);
-    }
-    let band_rows = plan.band_rows();
-    let mut out = seeded_out(plan.rows, batch, bias.map(|b| b.as_slice()));
-    let base = OutPtr(out.as_mut_ptr());
-    let plan2 = Arc::clone(plan);
-    let acts2 = Arc::clone(acts);
-    let times = pool.map(plan.chunks.clone(), move |chunk| {
-        let timer = profile::start();
-        let lo = chunk.band_lo * band_rows * batch;
-        let len = (chunk.band_hi - chunk.band_lo) * band_rows * batch;
-        // SAFETY: chunks partition `0..nbands` contiguously and the
-        // slot→row mapping is the identity (non-scatter), so the spans
-        // `[lo, lo+len)` of different jobs never overlap; `out` outlives
-        // every job because `pool.map` joins before returning (including
-        // when a job panics — `join` drains the queue first).
-        let span = unsafe { std::slice::from_raw_parts_mut(base.0.add(lo), len) };
-        exec_chunk_into(&plan2, &acts2, batch, chunk, span);
-        profile::stop(timer)
-    });
-    profile::record_call(plan, &times);
-    out
+    dispatch::execute_parallel(plan, acts, batch, bias, pool, KernelVariant::Generic)
 }
 
 /// Parallel batched spMM with the private-accumulate+merge strategy for
-/// every pattern — the baseline the direct-write path is benchmarked
+/// every pattern — the baseline the direct-write paths are benchmarked
 /// against (the merge copy is `O(rows·batch)` and shows up at low
 /// sparsity). Output is bit-identical to [`gs_matmul`] and to
 /// [`gs_matmul_parallel`].
+#[deprecated(note = "merge baseline — production call sites route through `GsExecPlan::execute`")]
 pub fn gs_matmul_parallel_merge(
     plan: &Arc<GsExecPlan>,
     acts: &Arc<Vec<f32>>,
     batch: usize,
     pool: &ThreadPool,
 ) -> Vec<f32> {
-    gs_matmul_parallel_merge_bias(plan, acts, batch, None, pool)
+    dispatch::parallel_merge(plan, acts, batch, None, pool)
 }
 
 /// [`gs_matmul_parallel_merge`] with the output bias fused: each chunk
@@ -705,6 +483,7 @@ pub fn gs_matmul_parallel_merge(
 /// (through `slot_rows`), so the merge copy carries `bias + Σ w·a` and
 /// rows no chunk owns keep their seed in the shared buffer. Bit-identical
 /// to the serial and direct-write fused kernels.
+#[deprecated(note = "merge baseline — production call sites route through `GsExecPlan::execute_bias`")]
 pub fn gs_matmul_parallel_merge_bias(
     plan: &Arc<GsExecPlan>,
     acts: &Arc<Vec<f32>>,
@@ -712,32 +491,7 @@ pub fn gs_matmul_parallel_merge_bias(
     bias: Option<&Arc<Vec<f32>>>,
     pool: &ThreadPool,
 ) -> Vec<f32> {
-    assert!(batch > 0, "gs_matmul_parallel_merge with empty batch");
-    assert_eq!(acts.len(), plan.cols * batch, "activation shape mismatch");
-    let chunks: Vec<Chunk> = plan.chunks.clone();
-    if chunks.len() <= 1 {
-        return gs_matmul_bias(plan, acts, batch, bias.map(|b| b.as_slice()));
-    }
-    let band_rows = plan.band_rows();
-    let plan2 = Arc::clone(plan);
-    let acts2 = Arc::clone(acts);
-    let bias2 = bias.map(Arc::clone);
-    let timed = pool.map(chunks.clone(), move |chunk| {
-        let timer = profile::start();
-        let rows = (chunk.band_hi - chunk.band_lo) * band_rows;
-        let mut local = vec![0.0f32; rows * batch];
-        seed_local(&plan2, batch, chunk, bias2.as_ref().map(|b| b.as_slice()), &mut local);
-        exec_chunk_into(&plan2, &acts2, batch, chunk, &mut local);
-        (local, profile::stop(timer))
-    });
-    let mut out = seeded_out(plan.rows, batch, bias.map(|b| b.as_slice()));
-    let mut times = Vec::with_capacity(timed.len());
-    for (chunk, (local, secs)) in chunks.iter().zip(&timed) {
-        merge_chunk(plan, batch, *chunk, local, &mut out);
-        times.push(*secs);
-    }
-    profile::record_call(plan, &times);
-    out
+    dispatch::parallel_merge(plan, acts, batch, bias, pool)
 }
 
 /// Transpose request-major rows (`rows[r][c]`) into the feature-major
@@ -755,6 +509,7 @@ pub fn to_feature_major(rows: &[Vec<f32>], width: usize) -> Vec<f32> {
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // differential tests exercise the legacy wrappers on purpose
 mod tests {
     use super::*;
     use crate::kernels::native::gs_matvec;

@@ -3,13 +3,21 @@
 //! * [`native`] — plain f32 implementations (Algorithms 1–2 and the
 //!   sparse convolution) used as numerics oracles and by the training
 //!   orchestrator's CPU paths.
-//! * [`exec`] — the production CPU fast path: a prepacked
-//!   [`exec::GsExecPlan`] (joined §V layout at f32 or the paper's f16
-//!   storage resolution, precomputed output slots, balanced chunks) with
-//!   planned, batched, and multi-threaded kernels that match the oracle
-//!   bit for bit. The batched inner loops use explicit `std::simd` under
-//!   the `simd` cargo feature. Backs the coordinator's native serving
-//!   backend.
+//! * [`exec`] — plan packing for the production CPU fast path: a
+//!   prepacked [`exec::GsExecPlan`] (joined §V layout at f32 or the
+//!   paper's f16 storage resolution, precomputed output slots, balanced
+//!   chunks) that classifies its own geometry onto the specialized
+//!   kernel menu at pack time. The legacy `gs_matmul*` entry points
+//!   survive here as deprecated generic-pinned wrappers.
+//! * [`dispatch`] — execution: [`exec::GsExecPlan::execute`] dispatches
+//!   each call onto a [`dispatch::KernelVariant`] (generic,
+//!   small-group-unrolled, lane-register-blocked, scatter-direct-write)
+//!   picked by geometry classification, an optional time-boxed
+//!   microbenchmark (`tune()`), or an artifact pin persisted in `.gsm`
+//!   metadata. Every variant matches the scalar oracle bit for bit at
+//!   any thread count and precision. The batched inner loops use
+//!   explicit `std::simd` under the `simd` cargo feature. Backs the
+//!   coordinator's native serving backend.
 //! * [`profile`] — the chunk load-imbalance profiler: per-chunk wall
 //!   times sampled inside `exec`'s parallel paths (on by default via the
 //!   `chunk-profile` feature, compile-to-no-op without it), aggregated
@@ -26,6 +34,7 @@
 
 pub mod conv_sim;
 pub mod dense;
+pub mod dispatch;
 pub mod exec;
 pub mod native;
 pub mod profile;
@@ -33,6 +42,8 @@ pub mod spmv_sim;
 
 pub use conv_sim::{conv_block_sim, conv_dense_sim, conv_gs_sim, ConvOutput};
 pub use dense::{dense_matmul, dense_matmul_parallel};
+pub use dispatch::{DensityBand, KernelVariant, PlanGeometry};
+#[allow(deprecated)] // legacy re-exports kept for downstream differential tests
 pub use exec::{
     gs_matmul, gs_matmul_parallel, gs_matmul_parallel_merge, gs_matmul_scalar, gs_matvec_planned,
     GsExecPlan, PlanPrecision,

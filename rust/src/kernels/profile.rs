@@ -15,8 +15,13 @@
 //!   problem (bad luck).
 //!
 //! Summaries are keyed by the plan's geometry fingerprint (shape, B/k,
-//! precision, group/chunk counts) — the identity of a deployed `.gsm`
-//! pruning — and drained via `{"op":"profile"}`.
+//! precision, group/chunk counts, active [`KernelVariant`]) — the
+//! identity of a deployed `.gsm` pruning — and drained via
+//! `{"op":"profile"}`. Including the executed variant means skew
+//! attributes *per kernel*: a tuned/pinned variant that runs ragged is
+//! distinguishable from the generic loop on the same geometry.
+//!
+//! [`KernelVariant`]: super::dispatch::KernelVariant
 //!
 //! Compiled in by default (`chunk-profile` cargo feature, in the
 //! default set) with a runtime switch ([`set_enabled`]); building with
@@ -25,6 +30,7 @@
 
 #[cfg(feature = "chunk-profile")]
 mod imp {
+    use crate::kernels::dispatch::KernelVariant;
     use crate::kernels::exec::GsExecPlan;
     use crate::util::json::Json;
     use std::collections::BTreeMap;
@@ -109,10 +115,11 @@ mod imp {
     }
 
     /// The plan's geometry fingerprint — the identity of a deployed
-    /// pruning, stable across repacks of the same `.gsm`.
-    fn fingerprint(plan: &GsExecPlan) -> String {
+    /// pruning, stable across repacks of the same `.gsm` — suffixed with
+    /// the kernel variant that executed, so skew attributes per-variant.
+    fn fingerprint(plan: &GsExecPlan, variant: KernelVariant) -> String {
         format!(
-            "{}x{} b{} k{} {} groups{} chunks{}{}",
+            "{}x{} b{} k{} {} groups{} chunks{}{} kernel={}",
             plan.rows,
             plan.cols,
             plan.b,
@@ -121,13 +128,15 @@ mod imp {
             plan.ngroups(),
             plan.chunks().len(),
             if plan.scatter { " scatter" } else { "" },
+            variant.name(),
         )
     }
 
     /// Fold one parallel call's per-chunk times into the plan's
-    /// aggregate. Single-chunk calls and all-zero timings (profiling
-    /// raced off mid-call) carry no balance information and are skipped.
-    pub fn record_call(plan: &GsExecPlan, chunk_secs: &[f64]) {
+    /// aggregate (keyed per executed `variant`). Single-chunk calls and
+    /// all-zero timings (profiling raced off mid-call) carry no balance
+    /// information and are skipped.
+    pub fn record_call(plan: &GsExecPlan, variant: KernelVariant, chunk_secs: &[f64]) {
         if !enabled() || chunk_secs.len() < 2 {
             return;
         }
@@ -139,7 +148,7 @@ mod imp {
         let max = chunk_secs.iter().copied().fold(0.0, f64::max);
         let mut reg = registry().lock().unwrap();
         let p = reg
-            .entry(fingerprint(plan))
+            .entry(fingerprint(plan, variant))
             .or_insert_with(|| PlanProfile::new(plan));
         p.calls += 1;
         p.sum_mean += mean;
@@ -197,6 +206,7 @@ mod imp {
 
 #[cfg(not(feature = "chunk-profile"))]
 mod imp {
+    use crate::kernels::dispatch::KernelVariant;
     use crate::kernels::exec::GsExecPlan;
     use crate::util::json::Json;
     use std::collections::BTreeMap;
@@ -223,7 +233,7 @@ mod imp {
     }
 
     #[inline(always)]
-    pub fn record_call(_plan: &GsExecPlan, _chunk_secs: &[f64]) {}
+    pub fn record_call(_plan: &GsExecPlan, _variant: KernelVariant, _chunk_secs: &[f64]) {}
 
     pub fn snapshot_json() -> Json {
         Json::Obj(BTreeMap::new())
@@ -268,10 +278,14 @@ mod tests {
         let p = plan(64, 4);
         // Two calls: balanced (skew 1.0) then one hot chunk (skew 2.5
         // = 0.005 / mean 0.002).
-        record_call(&p, &[0.001, 0.001, 0.001, 0.001]);
-        record_call(&p, &[0.001, 0.001, 0.001, 0.005]);
+        record_call(&p, p.kernel_variant(), &[0.001, 0.001, 0.001, 0.001]);
+        record_call(&p, p.kernel_variant(), &[0.001, 0.001, 0.001, 0.005]);
         let snap = snapshot_json();
         let Json::Obj(plans) = &snap else { panic!("object") };
+        assert!(
+            plans.keys().any(|k| k.starts_with("64x32") && k.contains(" kernel=")),
+            "fingerprint carries the executed kernel variant"
+        );
         let prof = my_plan(plans, "64x32").expect("own fingerprint present");
         assert_eq!(prof.get("calls").unwrap().as_f64().unwrap(), 2.0);
         let skew = prof.get("time_skew").unwrap();
@@ -293,10 +307,10 @@ mod tests {
         assert!(!enabled());
         let t = start();
         assert_eq!(stop(t), 0.0, "disabled timer reads zero");
-        record_call(&p, &[0.001, 0.002]);
+        record_call(&p, p.kernel_variant(), &[0.001, 0.002]);
         set_enabled(true);
-        record_call(&p, &[0.001]); // single chunk: no balance info
-        record_call(&p, &[0.0, 0.0]); // raced-off timers
+        record_call(&p, p.kernel_variant(), &[0.001]); // single chunk: no balance info
+        record_call(&p, p.kernel_variant(), &[0.0, 0.0]); // raced-off timers
         let Json::Obj(plans) = snapshot_json() else { panic!("object") };
         assert!(my_plan(&plans, "48x32").is_none(), "nothing recorded for this plan");
     }

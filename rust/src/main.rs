@@ -35,6 +35,9 @@
 //! gs-sparse export   --out model.gsm [--pattern GS|scatter] [--inputs 64]
 //!                    [--hidden 256] [--outputs 64] [--batch 16] [--b 16] [--k 16]
 //!                    [--sparsity 0.9] [--precision f32|f16] [--seed 42]
+//!                    [--tune (one-shot microbenchmark; pins the fastest
+//!                     dispatch kernel variant in the artifact metadata)]
+//!                    [--tune-ms 50 (tune time budget)]
 //! gs-sparse train    --model gnmt|resnet|jasper [--pattern GS|Block|Irregular]
 //!                    [--b 8] [--k 8] [--sparsity 0.8] [--seed 42]   (pjrt only)
 //! gs-sparse simulate [--rows 1024] [--cols 1024] [--banks 16] [--sparsity 0.9]
@@ -423,7 +426,18 @@ fn cmd_export(args: &Args) -> Result<()> {
         threads: 1,
         ..native_spec(args)?
     };
-    let (artifact, _) = build_random_artifact(&spec)?;
+    let (mut artifact, bm) = build_random_artifact(&spec)?;
+    if args.has("tune") {
+        // One-shot microbenchmark over the supported dispatch variants;
+        // the winner is pinned in the artifact metadata so every server
+        // that loads this .gsm inherits it (swap, restore, rollback).
+        use gs_sparse::kernels::exec::GsExecPlan;
+        let budget = std::time::Duration::from_millis(args.usize("tune-ms", 50) as u64);
+        let mut plan = GsExecPlan::with_precision(&bm.gs, 1, spec.precision)?;
+        let picked = plan.tune(spec.max_batch, budget);
+        artifact.set_kernel_variant(picked);
+        println!("tuned kernel variant: {} (budget {budget:?})", picked.name());
+    }
     artifact.save(out)?;
     let bytes = std::fs::metadata(out)?.len();
     println!("exported {out} ({bytes} bytes): {}", artifact.describe());

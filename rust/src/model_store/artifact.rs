@@ -34,8 +34,18 @@
 //! infer_batch` is bit-identical to the originating in-memory model at
 //! both precisions (and at any thread count, since every kernel is
 //! bit-identical serial vs parallel).
+//!
+//! The metadata blob optionally pins the dispatch kernel via a
+//! `"kernel_variant"` key (a [`KernelVariant::name`] label, written by
+//! `export` — see [`ModelArtifact::set_kernel_variant`]). The reader is
+//! version-tolerant in both directions: artifacts without the key (or
+//! with a label this build doesn't know, or one that doesn't fit the
+//! plan's geometry) instantiate cleanly and fall back to geometry
+//! classification, because every kernel variant is bit-identical — the
+//! pin is a performance hint, never a correctness requirement.
 
 use crate::coordinator::SparseModel;
+use crate::kernels::dispatch::KernelVariant;
 use crate::kernels::exec::PlanPrecision;
 use crate::sparse::format::GsFormat;
 use crate::util::crc32::{crc32, Crc32};
@@ -130,9 +140,13 @@ impl ModelArtifact {
     }
 
     /// Build the native serving model this artifact describes. `threads`
-    /// follows [`SparseModel::native`] semantics (0 = auto-detect).
+    /// follows [`SparseModel::native`] semantics (0 = auto-detect). A
+    /// `"kernel_variant"` pin in the metadata is applied when it fits
+    /// the rebuilt plan's geometry; otherwise the plan serves on its
+    /// pack-time classification (version tolerance — see the module
+    /// docs).
     pub fn instantiate(&self, threads: usize) -> Result<SparseModel> {
-        SparseModel::native(
+        SparseModel::native_pinned(
             self.w1.clone(),
             self.b1.clone(),
             &self.gs,
@@ -141,7 +155,35 @@ impl ModelArtifact {
             self.max_batch,
             threads,
             self.precision,
+            self.kernel_variant(),
         )
+    }
+
+    /// The dispatch-kernel pin carried in the metadata blob, if any.
+    /// Lenient by design: a missing key, non-string value, or a label
+    /// from a newer build all read as `None` (classification fallback),
+    /// never an error.
+    pub fn kernel_variant(&self) -> Option<KernelVariant> {
+        self.meta
+            .get("kernel_variant")
+            .and_then(Json::as_str)
+            .and_then(|s| KernelVariant::parse(s).ok())
+    }
+
+    /// Pin the dispatch kernel in the metadata blob (`export --tune`
+    /// writes the tuned winner here so a served artifact inherits it
+    /// across export → load → swap → rollback).
+    pub fn set_kernel_variant(&mut self, v: KernelVariant) {
+        let entry = (
+            "kernel_variant".to_string(),
+            Json::Str(v.name().to_string()),
+        );
+        match &mut self.meta {
+            Json::Obj(map) => {
+                map.insert(entry.0, entry.1);
+            }
+            _ => self.meta = Json::Obj([entry].into_iter().collect()),
+        }
     }
 
     /// One-line human summary (CLI banners, logs).
@@ -851,6 +893,30 @@ mod tests {
             // Re-encoding the decode is byte-identical (canonical format).
             assert_eq!(b.to_bytes(), bytes);
         }
+    }
+
+    #[test]
+    fn kernel_variant_pin_roundtrips_and_reads_leniently() {
+        let mut a = sample(PlanPrecision::F32, Pattern::Gs { b: 8, k: 2 }, 14);
+        assert_eq!(a.kernel_variant(), None, "sample meta carries no pin");
+        a.set_kernel_variant(KernelVariant::SmallGroupUnrolled);
+        assert_eq!(a.kernel_variant(), Some(KernelVariant::SmallGroupUnrolled));
+        let b = ModelArtifact::from_bytes(&a.to_bytes()).unwrap();
+        assert_eq!(b.kernel_variant(), Some(KernelVariant::SmallGroupUnrolled));
+        assert!(b.meta.get("seed").is_some(), "existing meta keys survive the pin");
+        // A label from a newer build reads as None (classification
+        // fallback) and still instantiates cleanly.
+        let mut c = sample(PlanPrecision::F32, Pattern::Gs { b: 8, k: 2 }, 15);
+        if let Json::Obj(m) = &mut c.meta {
+            m.insert("kernel_variant".into(), Json::Str("from_the_future".into()));
+        }
+        assert_eq!(c.kernel_variant(), None);
+        assert!(c.instantiate(1).is_ok());
+        // Pinning onto Null meta creates the metadata object.
+        let mut d = sample(PlanPrecision::F32, Pattern::Gs { b: 8, k: 8 }, 16);
+        d.meta = Json::Null;
+        d.set_kernel_variant(KernelVariant::Generic);
+        assert_eq!(d.kernel_variant(), Some(KernelVariant::Generic));
     }
 
     #[test]

@@ -60,6 +60,12 @@ impl VersionedModel {
     pub fn precision(&self) -> Option<PlanPrecision> {
         self.model.precision()
     }
+
+    /// Dispatch-kernel variant this generation serves on (None for pjrt
+    /// models).
+    pub fn kernel_variant(&self) -> Option<crate::kernels::dispatch::KernelVariant> {
+        self.model.kernel_variant()
+    }
 }
 
 /// Per-slot deployment-safety knobs.

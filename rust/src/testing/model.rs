@@ -159,12 +159,19 @@ pub fn build_random_model(spec: &ModelSpec) -> Result<BuiltModel> {
 /// artifact's `instantiate` reproduces `BuiltModel::model` bit for bit.
 pub fn build_random_artifact(spec: &ModelSpec) -> Result<(ModelArtifact, BuiltModel)> {
     let bm = build_random_model(spec)?;
-    let meta = Json::obj(vec![
+    let mut meta_fields = vec![
         ("generator", Json::Str("testing::build_random_artifact".into())),
         ("seed", Json::Num(spec.seed as f64)),
         ("pattern", Json::Str(spec.pattern.name())),
         ("sparsity", Json::Num(spec.sparsity)),
-    ]);
+    ];
+    // Pin the model's classified kernel variant so an instantiated
+    // artifact serves on the same specialized loop as the in-memory
+    // model it mirrors.
+    if let Some(v) = bm.model.kernel_variant() {
+        meta_fields.push(("kernel_variant", Json::Str(v.name().into())));
+    }
+    let meta = Json::obj(meta_fields);
     let artifact = ModelArtifact::from_parts(
         bm.w1.clone(),
         bm.b1.clone(),

@@ -246,6 +246,84 @@ fn hot_swap_under_concurrent_traffic() {
     let _ = totals;
 }
 
+/// Acceptance: the dispatch kernel variant pinned in `.gsm` metadata
+/// survives export → load → swap → rollback, and a loaded model serves
+/// on the pin rather than on fresh classification.
+#[test]
+fn kernel_variant_pin_survives_export_load_swap_rollback() {
+    use gs_sparse::kernels::dispatch::KernelVariant;
+    // GS(8,8) classifies to `unrolled`; pin `generic` so the persisted
+    // pin is distinguishable from the classification fallback.
+    let base = spec(Pattern::Gs { b: 8, k: 8 }, PlanPrecision::F32, 61);
+    let (mut artifact, bm) = build_random_artifact(&base).unwrap();
+    assert_eq!(
+        artifact.kernel_variant(),
+        Some(KernelVariant::SmallGroupUnrolled),
+        "build_random_artifact records the model's classified variant"
+    );
+    assert_eq!(bm.model.kernel_variant(), Some(KernelVariant::SmallGroupUnrolled));
+    artifact.set_kernel_variant(KernelVariant::Generic);
+    let path = temp_path("variant-roundtrip");
+    artifact.save(&path).unwrap();
+
+    let loaded = ModelArtifact::load(&path).unwrap();
+    assert_eq!(loaded.kernel_variant(), Some(KernelVariant::Generic));
+    let model = loaded.instantiate(2).unwrap();
+    assert_eq!(
+        model.kernel_variant(),
+        Some(KernelVariant::Generic),
+        "the instantiated model serves on the pinned variant, not the classified one"
+    );
+
+    // Swap the pinned artifact into a live slot: the installed
+    // generation carries the pin; rolling back restores the previous
+    // generation's own (classified) variant.
+    let slot = ModelSlot::new(build_random_artifact(&base).unwrap().1.model, "inline", 1);
+    let vm = slot.swap_path(&path.display().to_string()).unwrap();
+    assert_eq!(vm.kernel_variant(), Some(KernelVariant::Generic));
+    let restored = slot.rollback("test rollback").unwrap();
+    assert_eq!(restored.kernel_variant(), Some(KernelVariant::SmallGroupUnrolled));
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Version tolerance: an artifact written before the `kernel_variant`
+/// metadata key existed (stripped here) and one from a hypothetical
+/// future writer (unknown label) both load clean, and the instantiated
+/// model falls back to geometry classification.
+#[test]
+fn artifact_without_variant_metadata_classifies_on_load() {
+    use gs_sparse::kernels::dispatch::KernelVariant;
+    let base = spec(Pattern::Gs { b: 8, k: 8 }, PlanPrecision::F32, 62);
+
+    let (mut artifact, _) = build_random_artifact(&base).unwrap();
+    if let Json::Obj(map) = &mut artifact.meta {
+        map.remove("kernel_variant");
+    }
+    let path = temp_path("variant-absent");
+    artifact.save(&path).unwrap();
+    let loaded = ModelArtifact::load(&path).unwrap();
+    assert_eq!(loaded.kernel_variant(), None, "no key → no pin");
+    let model = loaded.instantiate(1).unwrap();
+    assert_eq!(
+        model.kernel_variant(),
+        Some(KernelVariant::SmallGroupUnrolled),
+        "no pin → geometry classification"
+    );
+    let _ = std::fs::remove_file(&path);
+
+    let (mut artifact, _) = build_random_artifact(&base).unwrap();
+    if let Json::Obj(map) = &mut artifact.meta {
+        map.insert("kernel_variant".into(), Json::Str("from_the_future".into()));
+    }
+    let path = temp_path("variant-unknown");
+    artifact.save(&path).unwrap();
+    let loaded = ModelArtifact::load(&path).unwrap();
+    assert_eq!(loaded.kernel_variant(), None, "unknown label reads as no pin");
+    let model = loaded.instantiate(1).unwrap();
+    assert_eq!(model.kernel_variant(), Some(KernelVariant::SmallGroupUnrolled));
+    let _ = std::fs::remove_file(&path);
+}
+
 /// Swapping through the TCP op with a bad path fails cleanly and leaves
 /// the old version serving.
 #[test]

@@ -9,9 +9,14 @@
 //! to the scalar fallback, and the direct-write parallel path to the
 //! private-accumulate+merge one.
 
+// The deprecated `gs_matmul*` wrappers are exactly what this suite
+// differentials the dispatch menu against — they stay in use on purpose.
+#![allow(deprecated)]
+
+use gs_sparse::kernels::dispatch::KernelVariant;
 use gs_sparse::kernels::exec::{
-    gs_matmul, gs_matmul_parallel, gs_matmul_parallel_merge, gs_matmul_scalar, gs_matvec_planned,
-    to_feature_major, GsExecPlan, PlanPrecision,
+    gs_matmul, gs_matmul_bias, gs_matmul_parallel, gs_matmul_parallel_merge, gs_matmul_scalar,
+    gs_matvec_planned, to_feature_major, GsExecPlan, PlanPrecision,
 };
 use gs_sparse::kernels::native::gs_matvec;
 use gs_sparse::sparse::{Dense, GsFormat, Pattern};
@@ -306,4 +311,137 @@ fn plan_metadata_consistent() {
         plan16.packed_bytes(),
         plan.packed_bytes()
     );
+}
+
+/// The dispatch geometry grid: every lane count the menu specializes on
+/// (1, 2, 4, 8 unroll; 16 lane-blocks), multi-row and single-row groups,
+/// and scatter shapes — each hosted by the 32×64 fixture.
+fn dispatch_pattern_gen() -> OneOf<Pattern> {
+    OneOf(vec![
+        Pattern::Gs { b: 1, k: 1 },
+        Pattern::Gs { b: 2, k: 2 },
+        Pattern::Gs { b: 4, k: 1 },
+        Pattern::Gs { b: 4, k: 4 },
+        Pattern::Gs { b: 8, k: 2 },
+        Pattern::Gs { b: 8, k: 8 },
+        Pattern::Gs { b: 16, k: 1 },
+        Pattern::Gs { b: 16, k: 4 },
+        Pattern::Gs { b: 16, k: 16 },
+        Pattern::GsScatter { b: 8, k: 1 },
+        Pattern::GsScatter { b: 8, k: 4 },
+        Pattern::GsScatter { b: 16, k: 2 },
+    ])
+}
+
+/// The dispatch refactor's invariant, enforced: **every** menu variant
+/// that supports a plan's geometry — including ones classification would
+/// not have picked, forced via `set_kernel_variant` — is bit-identical
+/// to the scalar-pinned oracle `gs_matmul_scalar`, across the geometry
+/// grid × sparsity (dense bands through mostly-empty ones) × {f32, f16}
+/// × thread counts (serial, 2- and 5-worker pools) × batch shapes that
+/// exercise the register-block remainder.
+#[test]
+fn prop_every_menu_variant_matches_scalar_oracle() {
+    let pools = [ThreadPool::new(2), ThreadPool::new(5)];
+    forall2(
+        "dispatch-menu-vs-scalar-oracle",
+        &dispatch_pattern_gen(),
+        &UsizeIn { lo: 35, hi: 95 },
+        default_cases().min(40),
+        |&pattern, &sp| {
+            let gs = packed(pattern, sp as f64 / 100.0, sp as u64 * 19 + 11)?;
+            for precision in [PlanPrecision::F32, PlanPrecision::F16] {
+                for nchunks in [1usize, 4] {
+                    for batch in [1usize, 8, 13] {
+                        let mut rng = Prng::new(sp as u64 * 3 + batch as u64);
+                        let rows: Vec<Vec<f32>> =
+                            (0..batch).map(|_| rng.normal_vec(64, 1.0)).collect();
+                        let acts = Arc::new(to_feature_major(&rows, 64));
+                        let oracle_plan = GsExecPlan::with_precision(&gs, nchunks, precision)
+                            .map_err(|e| format!("plan: {e:#}"))?;
+                        let want = gs_matmul_scalar(&oracle_plan, &acts, batch);
+                        for v in KernelVariant::MENU {
+                            if !v.supports(&oracle_plan) {
+                                continue;
+                            }
+                            let mut plan = GsExecPlan::with_precision(&gs, nchunks, precision)
+                                .map_err(|e| format!("plan: {e:#}"))?;
+                            plan.set_kernel_variant(v).map_err(|e| format!("{e:#}"))?;
+                            let what = format!(
+                                "{} sp{sp} {} chunks={nchunks} batch={batch} {}",
+                                pattern.name(),
+                                precision.name(),
+                                v.name()
+                            );
+                            let plan = Arc::new(plan);
+                            exact(&plan.execute_serial(&acts, batch), &want, &format!("{what} serial"))?;
+                            for (w, pool) in [(2usize, &pools[0]), (5, &pools[1])] {
+                                exact(
+                                    &GsExecPlan::execute(&plan, &acts, batch, Some(pool)),
+                                    &want,
+                                    &format!("{what} pool={w}"),
+                                )?;
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Fused bias through dispatch: every supported variant's
+/// `execute_bias` matches the generic bias path bit for bit (all paths
+/// seed rows with their bias and accumulate in oracle order), and
+/// uncovered rows come out as exactly `bias[row]`.
+#[test]
+fn dispatch_bias_identical_across_variants_and_uncovered_rows_keep_seed() {
+    let pool = ThreadPool::new(3);
+    // Rows 0..8 populated, rows 8..16 entirely uncovered (empty bands).
+    let mut rng = Prng::new(31);
+    let mut ragged = Dense::zeros(16, 32);
+    for r in 0..8 {
+        for j in 0..8 {
+            ragged.set(r, j + (r % 3) * 8, rng.gaussian_f32());
+        }
+    }
+    for pattern in [Pattern::Gs { b: 8, k: 8 }, Pattern::GsScatter { b: 8, k: 8 }] {
+        let gs = GsFormat::from_dense(&ragged, pattern).unwrap();
+        let batch = 6usize;
+        let rows: Vec<Vec<f32>> = (0..batch).map(|_| rng.normal_vec(32, 1.0)).collect();
+        let acts = Arc::new(to_feature_major(&rows, 32));
+        let bias = Arc::new(rng.normal_vec(16, 1.0));
+        let base_plan = GsExecPlan::with_chunks(&gs, 3).unwrap();
+        let want = gs_matmul_bias(&base_plan, &acts, batch, Some(&bias));
+        for v in KernelVariant::MENU {
+            if !v.supports(&base_plan) {
+                continue;
+            }
+            let mut plan = GsExecPlan::with_chunks(&gs, 3).unwrap();
+            plan.set_kernel_variant(v).unwrap();
+            let plan = Arc::new(plan);
+            for pool_opt in [None, Some(&pool)] {
+                let got = GsExecPlan::execute_bias(&plan, &acts, batch, Some(&bias), pool_opt);
+                exact(
+                    &got,
+                    &want,
+                    &format!("{} {} pooled={}", pattern.name(), v.name(), pool_opt.is_some()),
+                )
+                .unwrap();
+                // Uncovered rows: exactly the bias seed, never 0 + bias.
+                for row in 8..16 {
+                    for c in 0..batch {
+                        assert_eq!(
+                            got[row * batch + c].to_bits(),
+                            bias[row].to_bits(),
+                            "{} {} uncovered row {row}",
+                            pattern.name(),
+                            v.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
 }

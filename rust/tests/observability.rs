@@ -9,7 +9,7 @@
 
 use gs_sparse::coordinator::{serve_store, server::ServeConfig, Client, Engine};
 #[cfg(feature = "chunk-profile")]
-use gs_sparse::kernels::exec::{gs_matmul_parallel, to_feature_major, GsExecPlan};
+use gs_sparse::kernels::exec::{to_feature_major, GsExecPlan};
 use gs_sparse::kernels::profile;
 use gs_sparse::model_store::{ModelSlot, ModelStore};
 use gs_sparse::sparse::Pattern;
@@ -361,7 +361,7 @@ fn profiler_reports_skew_for_deliberately_imbalanced_plan() {
     let acts: Vec<Vec<f32>> = (0..batch).map(|_| rng.normal_vec(gs.cols, 1.0)).collect();
     let xt = Arc::new(to_feature_major(&acts, gs.cols));
     for _ in 0..20 {
-        let out = gs_matmul_parallel(&plan, &xt, batch, &pool);
+        let out = GsExecPlan::execute(&plan, &xt, batch, Some(&pool));
         assert_eq!(out.len(), gs.rows * batch);
     }
 

@@ -9,7 +9,13 @@
 //! not collapse to parity) and uses best-of-N timing to damp noisy CI
 //! neighbors. Run it in release — a debug build measures nothing real.
 
-use gs_sparse::kernels::exec::{gs_matmul, to_feature_major, GsExecPlan, PlanPrecision};
+// The deprecated generic-pinned wrappers are the baselines these gates
+// compare the dispatch path against.
+#![allow(deprecated)]
+
+use gs_sparse::kernels::exec::{
+    gs_matmul, gs_matmul_parallel, to_feature_major, GsExecPlan, PlanPrecision,
+};
 use gs_sparse::kernels::native::gs_matvec;
 use gs_sparse::sparse::Pattern;
 use gs_sparse::testing::build_random_gs;
@@ -61,6 +67,59 @@ fn perf_smoke_planned_spmm_beats_scalar_baseline() {
         "planned batched spMM regressed to {speedup:.2}x vs the scalar oracle \
          (scalar {scalar:.6}s, planned {planned:.6}s); the plan should comfortably \
          beat per-row gs_matvec on this shape"
+    );
+}
+
+/// Dispatch non-regression gate: `GsExecPlan::execute` (which runs the
+/// `unrolled` specialization on this small-group GS shape) must be at
+/// least as fast as the old default parallel path pinned to the generic
+/// loop. The specialized menu exists to win; this gate only demands it
+/// never *lose* to what every call site ran before the dispatch
+/// refactor. ≥ 1.0× with best-of timing leaves headroom for CI noise
+/// while still catching a pessimized specialization.
+#[test]
+#[ignore = "perf gate: run in CI via `cargo test --release -- --ignored perf_smoke`"]
+fn perf_smoke_dispatch_not_slower_than_generic_parallel() {
+    use gs_sparse::kernels::dispatch::KernelVariant;
+    use gs_sparse::util::ThreadPool;
+    use std::sync::Arc;
+
+    // Small-group GS: 512×512, GS(8,8), 80% sparse, batch 16 — the shape
+    // the `unrolled` variant targets.
+    let (_, gs) = build_random_gs(512, 512, Pattern::Gs { b: 8, k: 8 }, 0.8, 7).unwrap();
+    let plan = Arc::new(GsExecPlan::with_precision(&gs, 4, PlanPrecision::F32).unwrap());
+    assert_eq!(
+        plan.kernel_variant(),
+        KernelVariant::SmallGroupUnrolled,
+        "classification must pick the unrolled variant for GS(8,8)"
+    );
+    let pool = ThreadPool::new(4);
+    let mut rng = Prng::new(11);
+    let batch = 16usize;
+    let acts: Vec<Vec<f32>> = (0..batch).map(|_| rng.normal_vec(512, 1.0)).collect();
+    let acts_t = Arc::new(to_feature_major(&acts, 512));
+
+    let mut sink = 0.0f32;
+    let generic = best_of(9, || {
+        sink += gs_matmul_parallel(&plan, &acts_t, batch, &pool)[0];
+    });
+    let dispatched = best_of(9, || {
+        sink += GsExecPlan::execute(&plan, &acts_t, batch, Some(&pool))[0];
+    });
+    std::hint::black_box(sink);
+
+    let ratio = generic / dispatched;
+    println!(
+        "perf_smoke dispatch: generic {:.3}ms dispatched {:.3}ms ratio {ratio:.2}x",
+        generic * 1e3,
+        dispatched * 1e3
+    );
+    assert!(
+        ratio >= 1.0,
+        "dispatched execution ({}) is {ratio:.2}x the old generic parallel path \
+         (generic {generic:.6}s, dispatched {dispatched:.6}s); the specialized \
+         variant must never lose to the path it replaced",
+        plan.kernel_variant().name()
     );
 }
 
